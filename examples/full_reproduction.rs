@@ -1,0 +1,243 @@
+//! END-TO-END DRIVER — the full system on a real workload, all layers
+//! composed.
+//!
+//! What it does, in order:
+//!  1. builds the QC324 surrogate (324×324, κ(AᵀA) ≈ 2.4e7 — the paper's
+//!     hardest small instance), writes it to `data/` through the Matrix
+//!     Market writer and reads it back (exercising the I/O path);
+//!  2. partitions it over m=12 worker threads and computes the spectral
+//!     tuning (Theorem 1 parameters for APC, §4 optima for baselines);
+//!  3. runs ALL SIX Table-2 methods through the distributed taskmaster/
+//!     worker coordinator (native backend), recording the Figure-2 decay
+//!     series to `artifacts/e2e_decay_qc324.csv`;
+//!  4. re-runs APC with the **Hlo backend** — per-worker PJRT engines
+//!     executing the JAX/Pallas AOT artifacts — and checks it reproduces
+//!     the native trajectory, proving L1 (Pallas kernel) → L2 (jax step)
+//!     → L3 (rust coordinator) compose;
+//!  5. prints the headline metric: iterations (and wall time) to 1e-6
+//!     relative error, APC vs the best and worst baselines, plus the
+//!     analytic convergence times for comparison with the paper's Table 2;
+//!  6. dumps a JSON report to `artifacts/e2e_report.json` (EXPERIMENTS.md
+//!     records a copy).
+//!
+//! ```bash
+//! make artifacts && cargo run --release --example full_reproduction
+//! ```
+
+use apc::bench::{fmt_duration, sci, Table};
+use apc::config::{Backend, Json};
+use apc::coordinator::Coordinator;
+use apc::gen::problems::Problem;
+use apc::linalg::vector::max_abs_diff;
+use apc::partition::PartitionedSystem;
+use apc::rates::{convergence_time, SpectralInfo};
+use apc::runtime::Manifest;
+use apc::solvers::{suite, Metric, SolverOptions};
+use std::collections::BTreeMap;
+
+const MACHINES: usize = 12;
+const RECORD_ROUNDS: usize = 80_000;
+const HEADLINE_TOL: f64 = 1e-6;
+
+fn main() -> anyhow::Result<()> {
+    // ---- 1. workload through the MM I/O path --------------------------
+    std::fs::create_dir_all("data")?;
+    std::fs::create_dir_all("artifacts")?;
+    let built = Problem::qc324_surrogate(MACHINES).build(42);
+    let mtx_path = "data/qc324_surrogate.mtx";
+    apc::mm::write_dense_path(mtx_path, &built.a, "QC324 surrogate (see DESIGN.md §6)")?;
+    let a = apc::mm::read_path(mtx_path)?.to_dense();
+    assert!(a.sub(&built.a).max_abs() < 1e-12, "MM round trip drift");
+    println!("[1/6] workload: QC324 surrogate via {} ({}x{})", mtx_path, a.rows(), a.cols());
+
+    // ---- 2. partition + tune -------------------------------------------
+    let sys = PartitionedSystem::split_even(&a, &built.b, MACHINES)?;
+    let t_tune = std::time::Instant::now();
+    let spectral = SpectralInfo::compute(&sys)?;
+    println!(
+        "[2/6] m={} workers, p={} rows each; κ(AᵀA)={}, κ(X)={}  (tuned in {})",
+        sys.m(),
+        sys.blocks[0].p(),
+        sci(spectral.kappa_ata()),
+        sci(spectral.kappa_x()),
+        fmt_duration(t_tune.elapsed()),
+    );
+
+    // ---- 3. all six methods through the coordinator --------------------
+    println!("[3/6] running all Table-2 methods through the distributed coordinator...");
+    let opts = SolverOptions {
+        tol: 1e-12,
+        max_iter: RECORD_ROUNDS,
+        metric: Metric::ErrorVsTruth(built.x_star.clone()),
+        record_every: 10,
+    };
+    let mut results: Vec<(String, apc::coordinator::DistributedReport, f64)> = Vec::new();
+    for name in suite::TABLE2_ORDER {
+        let method = suite::tuned_method(name, &sys, &spectral)?;
+        let coord = Coordinator::new(&sys, method, Backend::Native, None, None, 42)?;
+        let dist = coord.run(&sys, &opts)?;
+        let rho = suite::analytic_rho(name, &sys, &spectral)?;
+        println!(
+            "    {:<10} reached {:.2e} in {} rounds ({})",
+            dist.report.solver,
+            dist.report.final_error,
+            dist.report.iterations,
+            fmt_duration(dist.metrics.wall),
+        );
+        results.push((name.to_string(), dist, rho));
+    }
+
+    // decay CSV (Figure-2 series)
+    let csv_path = "artifacts/e2e_decay_qc324.csv";
+    write_decay_csv(csv_path, &results)?;
+    println!("    decay series → {}", csv_path);
+
+    // ---- 4. APC again, Hlo backend --------------------------------------
+    println!("[4/6] APC through the Hlo backend (PJRT, AOT artifacts)...");
+    let manifest = Manifest::load("artifacts").map_err(|e| {
+        anyhow::anyhow!("{e:#}\n  (run `make artifacts` before the e2e driver)")
+    })?;
+    let apc_method = suite::tuned_method("apc", &sys, &spectral)?;
+    // fixed-length parity leg: the Hlo backend must retrace the native
+    // trajectory exactly; full convergence was already measured natively
+    let hlo_opts = SolverOptions {
+        tol: 0.0,
+        max_iter: 4_000,
+        metric: Metric::ErrorVsTruth(built.x_star.clone()),
+        record_every: 0,
+    };
+    let hlo = Coordinator::new(&sys, apc_method, Backend::Hlo, Some(&manifest), None, 42)?
+        .run(&sys, &hlo_opts)?;
+    let native = Coordinator::new(&sys, apc_method, Backend::Native, None, None, 42)?
+        .run(&sys, &hlo_opts)?;
+    let drift = max_abs_diff(&hlo.report.solution, &native.report.solution);
+    println!(
+        "    Hlo: {} rounds in {} (native: {}); trajectory drift {:.1e}",
+        hlo.report.iterations,
+        fmt_duration(hlo.metrics.wall),
+        fmt_duration(native.metrics.wall),
+        drift
+    );
+    assert!(drift < 1e-8, "Hlo and native trajectories must agree");
+    assert_eq!(hlo.report.iterations, native.report.iterations);
+
+    // ---- 5. headline table ----------------------------------------------
+    println!("[5/6] headline: iterations to {:.0e} relative error\n", HEADLINE_TOL);
+    let mut table = Table::new(&[
+        "method",
+        "iters to 1e-6",
+        "wall",
+        "measured T",
+        "analytic T",
+        "paper T (QC324)",
+    ]);
+    // paper's Table-2 QC324 row, same column order as TABLE2_ORDER
+    let paper_t: BTreeMap<&str, f64> = [
+        ("dgd", 1.22e7),
+        ("nag", 4.28e3),
+        ("hbm", 2.47e3),
+        ("admm", 1.07e7),
+        ("cimmino", 3.10e5),
+        ("apc", 3.93e2),
+    ]
+    .into();
+    let mut iters_to_tol: BTreeMap<String, Option<usize>> = BTreeMap::new();
+    for (name, dist, rho) in &results {
+        let reached = dist
+            .report
+            .history
+            .iter()
+            .find(|(_, e)| *e <= HEADLINE_TOL)
+            .map(|(i, _)| *i);
+        iters_to_tol.insert(name.clone(), reached);
+        // fit the mid-decay window [1e-9, 1e-1]: below the floor where
+        // f64 flatlines, above the defective-mode transient (see
+        // EXPERIMENTS.md §Numerics)
+        let measured_t =
+            apc::solvers::fit_decay_rate_between(&dist.report.history, 1e-1, 1e-9)
+                .map(convergence_time)
+                .unwrap_or(f64::INFINITY);
+        table.row(&[
+            dist.report.solver.to_string(),
+            reached.map(|i| i.to_string()).unwrap_or_else(|| format!(">{}", RECORD_ROUNDS)),
+            fmt_duration(dist.metrics.wall),
+            sci(measured_t),
+            sci(convergence_time(*rho)),
+            sci(paper_t[name.as_str()]),
+        ]);
+    }
+    println!("{}", table.render());
+
+    let apc_iters = iters_to_tol["apc"].expect("APC must reach the headline tolerance") as f64;
+    let hbm_iters = iters_to_tol["hbm"].map(|i| i as f64);
+    if let Some(h) = hbm_iters {
+        println!(
+            "APC beats the closest competitor (D-HBM) by {:.1}× and the slowest \
+             baselines by >{:.0}× (paper: 6.3× and ~3e4×)",
+            h / apc_iters,
+            RECORD_ROUNDS as f64 / apc_iters
+        );
+    }
+
+    // ---- 6. JSON report --------------------------------------------------
+    let mut obj = BTreeMap::new();
+    obj.insert("problem".into(), Json::from("qc324-surrogate-324x324"));
+    obj.insert("machines".into(), Json::from(MACHINES));
+    obj.insert("kappa_ata".into(), Json::from(spectral.kappa_ata()));
+    obj.insert("kappa_x".into(), Json::from(spectral.kappa_x()));
+    obj.insert(
+        "headline_iters_to_1e-6".into(),
+        Json::Obj(
+            iters_to_tol
+                .iter()
+                .map(|(k, v)| {
+                    (k.clone(), v.map(|i| Json::from(i)).unwrap_or(Json::Null))
+                })
+                .collect(),
+        ),
+    );
+    obj.insert("hlo_rounds".into(), Json::from(hlo.report.iterations));
+    obj.insert("hlo_wall_us".into(), Json::from(hlo.metrics.wall.as_micros() as usize));
+    obj.insert("native_wall_us".into(), Json::from(native.metrics.wall.as_micros() as usize));
+    obj.insert("hlo_native_drift".into(), Json::from(drift));
+    let report_path = "artifacts/e2e_report.json";
+    std::fs::write(report_path, Json::Obj(obj).to_string_pretty())?;
+    println!("[6/6] report → {}", report_path);
+    Ok(())
+}
+
+fn write_decay_csv(
+    path: &str,
+    results: &[(String, apc::coordinator::DistributedReport, f64)],
+) -> anyhow::Result<()> {
+    let mut csv = String::from("iteration");
+    for (_, dist, _) in results {
+        csv.push(',');
+        csv.push_str(dist.report.solver);
+    }
+    csv.push('\n');
+    let max_t = results
+        .iter()
+        .flat_map(|(_, d, _)| d.report.history.last().map(|(i, _)| *i))
+        .max()
+        .unwrap_or(0);
+    let mut t = 0usize;
+    while t <= max_t {
+        let mut line = format!("{}", t);
+        let mut any = false;
+        for (_, dist, _) in results {
+            line.push(',');
+            if let Some((_, e)) = dist.report.history.iter().find(|(i, _)| *i == t) {
+                line.push_str(&format!("{:.6e}", e));
+                any = true;
+            }
+        }
+        if any {
+            csv.push_str(&line);
+            csv.push('\n');
+        }
+        t += 10;
+    }
+    std::fs::write(path, csv)?;
+    Ok(())
+}

@@ -1,0 +1,60 @@
+//! §6 — distributed preconditioning demo.
+//!
+//! Each machine premultiplies its block by `(A_iA_iᵀ)^{-1/2}` (a purely
+//! local O(p²n) transform), after which the plain distributed heavy-ball
+//! method converges at APC's rate: `κ(CᵀC) = κ(X)` exactly.
+//!
+//! ```bash
+//! cargo run --release --example preconditioning
+//! ```
+
+use apc::gen::problems::Problem;
+use apc::linalg::sym_eigen;
+use apc::partition::PartitionedSystem;
+use apc::rates::SpectralInfo;
+use apc::solvers::{apc::Apc, hbm::Hbm, phbm::Phbm, Metric, Solver, SolverOptions};
+
+fn main() -> anyhow::Result<()> {
+    // nonzero-mean gaussian: the instance family where the paper's gap
+    // between κ(AᵀA) and κ(X) is largest (§5)
+    let problem = Problem::nonzero_mean_gaussian(300, 300, 10).build(5);
+    let sys = PartitionedSystem::split_even(&problem.a, &problem.b, 10)?;
+
+    let spectral = SpectralInfo::compute(&sys)?;
+    println!("original system : κ(AᵀA) = {:.3e}", spectral.kappa_ata());
+    println!("projection matrix: κ(X)   = {:.3e}", spectral.kappa_x());
+
+    // the §6 identity κ(CᵀC) = κ(X), verified numerically
+    let pre = sys.preconditioned()?;
+    let ctc = pre.assemble_a().gram_cols();
+    let kappa_ctc = sym_eigen(&ctc)?.cond();
+    println!(
+        "preconditioned  : κ(CᵀC) = {:.3e}   (identity error {:.1e})",
+        kappa_ctc,
+        (kappa_ctc - spectral.kappa_x()).abs() / spectral.kappa_x()
+    );
+
+    let opts = SolverOptions {
+        tol: 1e-9,
+        max_iter: 2_000_000,
+        metric: Metric::ErrorVsTruth(problem.x_star.clone()),
+        ..Default::default()
+    };
+
+    let hbm = Hbm::auto_with_spectral(&sys, &spectral).solve(&sys, &opts)?;
+    let phbm = Phbm::auto(&sys)?.solve(&sys, &opts)?;
+    let apc = Apc::auto_with_spectral(&sys, &spectral)?.solve(&sys, &opts)?;
+
+    println!("\niterations to 1e-9 (all optimally tuned):");
+    println!("  D-HBM (κ(AᵀA) rate)          : {:>8}", hbm.iterations);
+    println!("  P-HBM (§6, κ(X) rate)        : {:>8}", phbm.iterations);
+    println!("  APC   (Algorithm 1)          : {:>8}", apc.iterations);
+    println!(
+        "\nP-HBM/APC ratio {:.2} (≈1 expected — same theoretical rate); \
+         speedup over plain D-HBM {:.1}×",
+        phbm.iterations as f64 / apc.iterations.max(1) as f64,
+        hbm.iterations as f64 / phbm.iterations.max(1) as f64
+    );
+    assert!(hbm.converged && phbm.converged && apc.converged);
+    Ok(())
+}

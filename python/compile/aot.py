@@ -1,0 +1,176 @@
+"""AOT pipeline: lower every step function at every deployed shape to HLO
+*text* under ``artifacts/``, plus a ``manifest.json`` the rust runtime
+reads to find them.
+
+Run as ``python -m compile.aot --out-dir ../artifacts`` (the Makefile's
+``artifacts`` target). Python's last involvement: after this, the rust
+binary is self-contained.
+
+Why HLO text and not ``lowered.compile()`` / serialized protos: jax ≥ 0.5
+emits HloModuleProto with 64-bit instruction ids which the image's
+xla_extension 0.5.1 (the version the published ``xla`` crate binds)
+rejects; the HLO *text* parser reassigns ids and round-trips cleanly.
+See /opt/xla-example/README.md.
+"""
+
+import argparse
+import hashlib
+import json
+import os
+import sys
+
+import jax
+
+jax.config.update("jax_enable_x64", True)
+
+import jax.numpy as jnp  # noqa: E402
+from jax._src.lib import xla_client as xc  # noqa: E402
+
+from . import model  # noqa: E402
+
+F64 = jnp.float64
+
+
+def spec(*shape):
+    return jax.ShapeDtypeStruct(shape, F64)
+
+
+# ---------------------------------------------------------------------------
+# deployment shapes: every (m, p, n) the examples and benches execute.
+# Names match gen/problems.rs; the rust runtime looks artifacts up by
+# (step, p, n) or (step, m, p, n), not by problem name.
+# ---------------------------------------------------------------------------
+
+SHAPES = [
+    # (tag, m, p, n)
+    ("quickstart", 8, 25, 200),
+    ("qc324", 12, 27, 324),
+    ("orsirr1", 10, 103, 1030),
+    ("ash608", 4, 152, 188),
+    ("gauss500", 10, 50, 500),
+    ("tall1000x500", 10, 100, 500),
+]
+
+
+def entries():
+    """Yield (name, fn, example_args, meta) for every artifact."""
+    seen_worker = set()
+    seen_master = set()
+    for _tag, m, p, n in SHAPES:
+        if (p, n) not in seen_worker:
+            seen_worker.add((p, n))
+            yield (
+                f"apc_worker_p{p}_n{n}",
+                model.apc_worker_step,
+                (spec(p, n), spec(p, p), spec(n), spec(n), spec()),
+                {"step": "apc_worker", "m": 1, "p": p, "n": n},
+            )
+            yield (
+                f"grad_worker_p{p}_n{n}",
+                model.grad_worker_step,
+                (spec(p, n), spec(p), spec(n)),
+                {"step": "grad_worker", "m": 1, "p": p, "n": n},
+            )
+            yield (
+                f"cimmino_worker_p{p}_n{n}",
+                model.cimmino_worker_step,
+                (spec(p, n), spec(p, p), spec(p), spec(n)),
+                {"step": "cimmino_worker", "m": 1, "p": p, "n": n},
+            )
+            yield (
+                f"admm_worker_p{p}_n{n}",
+                model.admm_worker_step,
+                (spec(p, n), spec(p, p), spec(n), spec(n), spec()),
+                {"step": "admm_worker", "m": 1, "p": p, "n": n},
+            )
+        if n not in seen_master:
+            seen_master.add(n)
+            yield (
+                f"master_momentum_n{n}",
+                model.master_momentum_step,
+                (spec(n), spec(n), spec(), spec()),
+                {"step": "master_momentum", "m": 1, "p": 0, "n": n},
+            )
+        yield (
+            f"apc_fused_m{m}_p{p}_n{n}",
+            model.apc_fused_iteration,
+            (spec(m, p, n), spec(m, p, p), spec(m, n), spec(n), spec(), spec()),
+            {"step": "apc_fused", "m": m, "p": p, "n": n},
+        )
+        yield (
+            f"residual_norm_m{m}_p{p}_n{n}",
+            model.residual_norm_step,
+            (spec(m, p, n), spec(m, p), spec(n)),
+            {"step": "residual_norm", "m": m, "p": p, "n": n},
+        )
+
+
+def to_hlo_text(fn, example_args) -> str:
+    """jit → lower → stablehlo → XlaComputation → HLO text."""
+    lowered = jax.jit(fn).lower(*example_args)
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _source_fingerprint() -> str:
+    """Hash of the compile-path sources, for staleness detection."""
+    h = hashlib.sha256()
+    pkg = os.path.dirname(__file__)
+    for root, _dirs, files in sorted(os.walk(pkg)):
+        for f in sorted(files):
+            if f.endswith(".py"):
+                with open(os.path.join(root, f), "rb") as fh:
+                    h.update(fh.read())
+    return h.hexdigest()
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--force", action="store_true", help="rebuild even if fresh")
+    args = ap.parse_args()
+
+    out_dir = os.path.abspath(args.out_dir)
+    os.makedirs(out_dir, exist_ok=True)
+    manifest_path = os.path.join(out_dir, "manifest.json")
+    fingerprint = _source_fingerprint()
+
+    if not args.force and os.path.exists(manifest_path):
+        try:
+            with open(manifest_path) as f:
+                old = json.load(f)
+            if old.get("fingerprint") == fingerprint and all(
+                os.path.exists(os.path.join(out_dir, e["file"])) for e in old["entries"]
+            ):
+                print(f"artifacts up to date ({len(old['entries'])} entries), skipping")
+                return 0
+        except (json.JSONDecodeError, KeyError):
+            pass  # fall through and rebuild
+
+    manifest = {"version": 1, "dtype": "f64", "fingerprint": fingerprint, "entries": []}
+    for name, fn, example_args, meta in entries():
+        fname = f"{name}.hlo.txt"
+        text = to_hlo_text(fn, example_args)
+        with open(os.path.join(out_dir, fname), "w") as f:
+            f.write(text)
+        entry = {
+            "name": name,
+            "file": fname,
+            "inputs": [list(s.shape) for s in example_args],
+            "outputs": len(jax.eval_shape(fn, *example_args)),
+            **meta,
+        }
+        manifest["entries"].append(entry)
+        print(f"  {name}: {len(text)} chars, inputs {entry['inputs']}")
+
+    with open(manifest_path, "w") as f:
+        json.dump(manifest, f, indent=1)
+    print(f"wrote {len(manifest['entries'])} artifacts + manifest to {out_dir}")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

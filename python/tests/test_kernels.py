@@ -1,0 +1,153 @@
+"""Pallas kernels vs pure-jnp oracles — the core L1 correctness signal.
+
+Hypothesis sweeps shapes, dtypes, seeds, and parameter values; fixed-case
+tests pin the paper-relevant invariants (feasibility preservation,
+projector identities)."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+import jax
+
+jax.config.update("jax_enable_x64", True)
+
+from compile.kernels import projection as pk  # noqa: E402
+from compile.kernels import ref  # noqa: E402
+
+DIMS = st.tuples(
+    st.integers(min_value=1, max_value=4),   # m
+    st.integers(min_value=1, max_value=6),   # p
+    st.integers(min_value=6, max_value=24),  # n  (p ≤ n enforced below)
+)
+
+
+def _problem(m, p, n, seed, dtype=np.float64):
+    rng = np.random.default_rng(seed)
+    a = rng.normal(size=(m, p, n)).astype(dtype)
+    # well-conditioned Gram by construction (gaussian rows, p ≪ n)
+    ginv = np.stack([np.linalg.inv(ai @ ai.T) for ai in a]).astype(dtype)
+    xs = rng.normal(size=(m, n)).astype(dtype)
+    xbar = rng.normal(size=n).astype(dtype)
+    b = rng.normal(size=(m, p)).astype(dtype)
+    return a, ginv, xs, xbar, b
+
+
+@settings(max_examples=40, deadline=None)
+@given(dims=DIMS, seed=st.integers(0, 2**31 - 1), gamma=st.floats(0.05, 1.95))
+def test_apc_update_machines_matches_ref(dims, seed, gamma):
+    m, p, n = dims
+    a, ginv, xs, xbar, _ = _problem(m, p, n, seed)
+    got = pk.apc_update_machines(a, ginv, xs, xbar, gamma)
+    want = ref.apc_update_machines(a, ginv, xs, xbar, gamma)
+    np.testing.assert_allclose(got, want, rtol=1e-10, atol=1e-10)
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    dims=DIMS,
+    seed=st.integers(0, 2**31 - 1),
+    gamma=st.floats(0.05, 1.95),
+    block_n=st.sampled_from([3, 4, 8, 16, 128]),
+)
+def test_apc_update_tiled_matches_ref(dims, seed, gamma, block_n):
+    _, p, n = dims
+    a, ginv, xs, xbar, _ = _problem(1, p, n, seed)
+    got = pk.apc_update_tiled(a[0], ginv[0], xs[0], xbar, gamma, block_n=block_n)
+    want = ref.apc_update(a[0], ginv[0], xs[0], xbar, gamma)
+    np.testing.assert_allclose(got, want, rtol=1e-10, atol=1e-10)
+
+
+@settings(max_examples=40, deadline=None)
+@given(dims=DIMS, seed=st.integers(0, 2**31 - 1))
+def test_partial_grad_machines_matches_ref(dims, seed):
+    m, p, n = dims
+    a, _, _, x, b = _problem(m, p, n, seed)
+    got = pk.partial_grad_machines(a, b, x)
+    want = ref.partial_grad_machines(a, b, x)
+    np.testing.assert_allclose(got, want, rtol=1e-10, atol=1e-10)
+
+
+@settings(max_examples=40, deadline=None)
+@given(dims=DIMS, seed=st.integers(0, 2**31 - 1))
+def test_cimmino_residual_machines_matches_ref(dims, seed):
+    m, p, n = dims
+    a, ginv, _, xbar, b = _problem(m, p, n, seed)
+    got = pk.cimmino_residual_machines(a, ginv, b, xbar)
+    want = ref.cimmino_residual_machines(a, ginv, b, xbar)
+    np.testing.assert_allclose(got, want, rtol=1e-10, atol=1e-10)
+
+
+def test_apc_update_float32_path():
+    """dtype sweep: kernels must respect the input dtype (f32 used by the
+    roofline analysis even though deployment is f64)."""
+    a, ginv, xs, xbar, _ = _problem(2, 3, 12, 7, dtype=np.float32)
+    got = pk.apc_update_machines(a, ginv, xs, xbar, np.float32(0.9))
+    want = ref.apc_update_machines(a, ginv, xs, xbar, 0.9)
+    assert got.dtype == np.float32
+    np.testing.assert_allclose(got, want, rtol=2e-4, atol=2e-4)
+
+
+def test_apc_update_preserves_feasibility():
+    """Paper invariant: if A x_i = b_i then A x_i' = b_i (the projection
+    moves within the affine solution set) for any x̄ and γ."""
+    rng = np.random.default_rng(3)
+    p_dim, n = 4, 15
+    a = rng.normal(size=(p_dim, n))
+    ginv = np.linalg.inv(a @ a.T)
+    b = rng.normal(size=p_dim)
+    x_feas = np.linalg.lstsq(a, b, rcond=None)[0]
+    xbar = rng.normal(size=n)
+    for gamma in (0.3, 1.0, 1.7):
+        x_new = np.asarray(
+            pk.apc_update_machines(a[None], ginv[None], x_feas[None], xbar, gamma)
+        )[0]
+        np.testing.assert_allclose(a @ x_new, b, atol=1e-9)
+
+
+def test_apc_gamma_one_forgets_x():
+    """Proposition 2's mechanism: at γ=1 the update is independent of the
+    previous x_i."""
+    rng = np.random.default_rng(11)
+    p_dim, n = 3, 10
+    a = rng.normal(size=(1, p_dim, n))
+    ginv = np.stack([np.linalg.inv(a[0] @ a[0].T)])
+    xbar = rng.normal(size=n)
+    b = rng.normal(size=p_dim)
+    x1 = np.linalg.lstsq(a[0], b, rcond=None)[0]
+    # a second feasible point: add a nullspace vector
+    null = np.eye(n) - a[0].T @ ginv[0] @ a[0]
+    x2 = x1 + null @ rng.normal(size=n)
+    out1 = pk.apc_update_machines(a, ginv, x1[None], xbar, 1.0)
+    out2 = pk.apc_update_machines(a, ginv, x2[None], xbar, 1.0)
+    np.testing.assert_allclose(out1, out2, atol=1e-9)
+
+
+def test_cimmino_zero_residual_at_solution():
+    rng = np.random.default_rng(5)
+    p_dim, n = 4, 12
+    a = rng.normal(size=(2, p_dim, n))
+    ginv = np.stack([np.linalg.inv(ai @ ai.T) for ai in a])
+    xstar = rng.normal(size=n)
+    b = np.einsum("mpn,n->mp", a, xstar)
+    r = pk.cimmino_residual_machines(a, ginv, b, xstar)
+    np.testing.assert_allclose(r, 0.0, atol=1e-10)
+
+
+def test_grad_zero_at_solution():
+    rng = np.random.default_rng(6)
+    a = rng.normal(size=(3, 4, 10))
+    xstar = rng.normal(size=10)
+    b = np.einsum("mpn,n->mp", a, xstar)
+    g = pk.partial_grad_machines(a, b, xstar)
+    np.testing.assert_allclose(g, 0.0, atol=1e-10)
+
+
+@pytest.mark.parametrize("n,block_n", [(10, 3), (10, 10), (7, 128), (16, 4)])
+def test_tiled_padding_edge_cases(n, block_n):
+    """Column counts that don't divide the tile width exercise the pad
+    path."""
+    a, ginv, xs, xbar, _ = _problem(1, 3, n, 13)
+    got = pk.apc_update_tiled(a[0], ginv[0], xs[0], xbar, 0.8, block_n=block_n)
+    want = ref.apc_update(a[0], ginv[0], xs[0], xbar, 0.8)
+    np.testing.assert_allclose(got, want, rtol=1e-10, atol=1e-10)

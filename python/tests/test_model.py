@@ -1,0 +1,127 @@
+"""Layer-2 step functions: numerics vs numpy, plus whole-algorithm
+convergence of the fused iteration (the paper's Algorithm 1 run entirely
+through the artifact-bound code path)."""
+
+import numpy as np
+import jax
+
+jax.config.update("jax_enable_x64", True)
+
+from compile import model  # noqa: E402
+from compile.kernels import ref  # noqa: E402
+
+
+def _system(m, p, n, seed):
+    """Consistent square-ish system with planted solution."""
+    rng = np.random.default_rng(seed)
+    a = rng.normal(size=(m, p, n))
+    xstar = rng.normal(size=n)
+    b = np.einsum("mpn,n->mp", a, xstar)
+    ginv = np.stack([np.linalg.inv(ai @ ai.T) for ai in a])
+    return a, b, ginv, xstar
+
+
+def _apc_optimal(a, ginv):
+    """Theorem-1 optimal (γ*, η*) from the spectrum of X (numpy mirror of
+    rust rates::apc_optimal, used to drive the convergence test)."""
+    m, _, n = a.shape
+    x_mat = sum(ai.T @ gi @ ai for ai, gi in zip(a, ginv)) / m
+    mus = np.linalg.eigvalsh(x_mat)
+    mu_min, mu_max = mus[0], mus[-1]
+    kappa = mu_max / mu_min
+    rho = (np.sqrt(kappa) - 1) / (np.sqrt(kappa) + 1)
+    s = (1 + rho) ** 2 / mu_max
+    tot = s + 1 - rho**2
+    disc = max(tot**2 - 4 * s, 0.0)
+    gamma = (tot - np.sqrt(disc)) / 2
+    eta = (tot + np.sqrt(disc)) / 2
+    return gamma, eta, rho
+
+
+def test_apc_worker_step_matches_ref():
+    a, b, ginv, _ = _system(1, 4, 12, 0)
+    rng = np.random.default_rng(1)
+    x = rng.normal(size=12)
+    xbar = rng.normal(size=12)
+    (got,) = model.apc_worker_step(a[0], ginv[0], x, xbar, 1.2)
+    want = ref.apc_update(a[0], ginv[0], x, xbar, 1.2)
+    np.testing.assert_allclose(got, want, rtol=1e-10, atol=1e-10)
+
+
+def test_master_momentum_step():
+    rng = np.random.default_rng(2)
+    s, xb = rng.normal(size=9), rng.normal(size=9)
+    (got,) = model.master_momentum_step(s, xb, 1.4, 3.0)
+    np.testing.assert_allclose(got, (1.4 / 3.0) * s + (1 - 1.4) * xb, rtol=1e-12)
+
+
+def test_residual_norm_step():
+    a, b, _, xstar = _system(3, 4, 12, 4)
+    num, den = model.residual_norm_step(a, b, xstar)
+    assert float(num) < 1e-18 * float(den)
+    rng = np.random.default_rng(5)
+    x_off = xstar + rng.normal(size=12)
+    num2, _ = model.residual_norm_step(a, b, x_off)
+    assert float(num2) > 0.0
+
+
+def test_admm_worker_step_matches_dense_inverse():
+    a, b, _, _ = _system(1, 4, 10, 6)
+    a0, b0 = a[0], b[0]
+    xi = 0.7
+    sginv = np.linalg.inv(xi * np.eye(4) + a0 @ a0.T)
+    atb = a0.T @ b0
+    rng = np.random.default_rng(7)
+    xbar = rng.normal(size=10)
+    (got,) = model.admm_worker_step(a0, sginv, atb, xbar, xi)
+    want = np.linalg.solve(a0.T @ a0 + xi * np.eye(10), atb + xi * xbar)
+    np.testing.assert_allclose(got, want, rtol=1e-9, atol=1e-9)
+
+
+def test_fused_iteration_one_round_matches_ref():
+    a, b, ginv, _ = _system(3, 4, 12, 8)
+    rng = np.random.default_rng(9)
+    xs = rng.normal(size=(3, 12))
+    xbar = rng.normal(size=12)
+    xs2, xb2 = model.apc_fused_iteration(a, ginv, xs, xbar, 1.1, 1.3)
+    xs_ref, xb_ref = ref.apc_iteration(a, ginv, xs, xbar, 1.1, 1.3)
+    np.testing.assert_allclose(xs2, xs_ref, rtol=1e-10, atol=1e-10)
+    np.testing.assert_allclose(xb2, xb_ref, rtol=1e-10, atol=1e-10)
+
+
+def test_fused_iteration_converges_at_theorem1_rate():
+    """Run Algorithm 1 through the fused L2 step until 1e-9 relative
+    error, and check the empirical decay against ρ*. This is the paper's
+    core claim exercised end-to-end in the artifact code path."""
+    m, p, n = 4, 5, 20
+    a, b, ginv, xstar = _system(m, p, n, 10)
+    gamma, eta, rho = _apc_optimal(a, ginv)
+
+    # feasible starts: min-norm per machine
+    xs = np.stack([ai.T @ gi @ bi for ai, gi, bi in zip(a, ginv, b)])
+    xbar = xs.mean(axis=0)
+
+    step = jax.jit(model.apc_fused_iteration)
+    errs = []
+    for _ in range(2000):
+        xs, xbar = step(a, ginv, xs, xbar, gamma, eta)
+        errs.append(np.linalg.norm(np.asarray(xbar) - xstar) / np.linalg.norm(xstar))
+        if errs[-1] < 1e-9:
+            break
+    assert errs[-1] < 1e-9, f"did not converge: {errs[-1]:.2e} (ρ*={rho:.4f})"
+    # empirical rate from the tail of the decay
+    tail = np.array(errs[len(errs) // 2 : -1])
+    ratios = tail[1:] / tail[:-1]
+    emp = np.median(ratios)
+    assert abs(emp - rho) < 0.08, f"empirical rate {emp:.3f} vs ρ* {rho:.3f}"
+
+
+def test_fused_iteration_gamma_eta_one_is_vanilla_consensus():
+    """γ=η=1 reduces to the consensus method of [11,14]: x̄ update becomes
+    the plain average of projected iterates."""
+    a, b, ginv, _ = _system(2, 3, 10, 11)
+    rng = np.random.default_rng(12)
+    xs = rng.normal(size=(2, 10))
+    xbar = rng.normal(size=10)
+    xs2, xb2 = model.apc_fused_iteration(a, ginv, xs, xbar, 1.0, 1.0)
+    np.testing.assert_allclose(xb2, np.asarray(xs2).mean(axis=0), rtol=1e-12)

@@ -1,0 +1,153 @@
+//! PER-ITERATION COST — the paper's §3.3/§4 claim that every method pays
+//! the same `2pn` per machine per iteration, plus the Native-vs-Hlo
+//! backend comparison for the worker hot path.
+//!
+//! Reports:
+//!  * per-machine kernel times (APC projection, partial gradient,
+//!    Cimmino residual, ADMM lemma solve) — should all be ≈ the same
+//!    2pn-flop cost;
+//!  * one full synchronous round of each method (single-process loop);
+//!  * the APC worker step through the PJRT Hlo artifact (cached device
+//!    buffers) vs native — the overhead of crossing the runtime boundary;
+//!  * achieved flop rate vs a pure-matvec roofline on this host.
+//!
+//! ```bash
+//! cargo bench --bench iteration_hotpath
+//! ```
+
+use apc::bench::{bench, fmt_duration, BenchOptions, Table};
+use apc::gen::problems::Problem;
+use apc::partition::PartitionedSystem;
+use apc::rates::SpectralInfo;
+use apc::runtime::{Engine, Manifest, TensorArg};
+use apc::solvers::local::{AdmmLocal, ApcLocal, CimminoLocal, GradLocal};
+use apc::solvers::suite;
+
+fn main() -> anyhow::Result<()> {
+    let (n, m) = (500, 10);
+    let built = Problem::standard_gaussian(n, n, m).build(7);
+    let sys = PartitionedSystem::split_even(&built.a, &built.b, m)?;
+    let blk = &sys.blocks[0];
+    let p = blk.p();
+    let opts = BenchOptions::default();
+    let flops_per_kernel = 2.0 * p as f64 * n as f64;
+
+    println!("=== per-machine kernels (p={}, n={}; nominal cost 2pn = {:.0} flops) ===\n", p, n, flops_per_kernel);
+    let xbar: Vec<f64> = (0..n).map(|i| (i as f64 * 0.01).sin()).collect();
+    let mut out = vec![0.0; n];
+
+    let mut rows = Vec::new();
+    {
+        let mut local = ApcLocal::new(blk, 1.2)?;
+        let s = bench("apc projection step", &opts, || local.step(blk, &xbar));
+        rows.push(("APC", s));
+    }
+    {
+        let mut local = GradLocal::new(blk);
+        let s = bench("partial gradient", &opts, || local.partial_grad(blk, &xbar, &mut out));
+        rows.push(("DGD/NAG/HBM", s));
+    }
+    {
+        let mut local = CimminoLocal::new(blk);
+        let s = bench("cimmino residual", &opts, || local.step(blk, &xbar, &mut out));
+        rows.push(("B-Cimmino", s));
+    }
+    {
+        let mut local = AdmmLocal::new(blk, 1.0)?;
+        let s = bench("admm lemma solve", &opts, || local.step(blk, &xbar, &mut out));
+        rows.push(("M-ADMM", s));
+    }
+    let mut table = Table::new(&["worker kernel", "time/call", "GFLOP/s", "vs APC"]);
+    let apc_time = rows[0].1.median.as_secs_f64();
+    for (name, s) in &rows {
+        table.row(&[
+            name.to_string(),
+            fmt_duration(s.median),
+            format!("{:.2}", flops_per_kernel / s.median.as_secs_f64() / 1e9),
+            format!("{:.2}x", s.median.as_secs_f64() / apc_time),
+        ]);
+    }
+    println!("{}", table.render());
+
+    println!("=== one full synchronous round, single-process loop (m={}) ===\n", m);
+    let s = SpectralInfo::compute(&sys)?;
+    let mut table = Table::new(&["method", "time/round", "per-machine share"]);
+    for name in suite::TABLE2_ORDER {
+        let mut solver = suite::tuned_solver(name, &sys, &s)?;
+        let stats = bench(name, &opts, || solver.iterate(&sys));
+        table.row(&[
+            name.to_string(),
+            fmt_duration(stats.median),
+            fmt_duration(stats.median / m as u32),
+        ]);
+    }
+    println!("{}", table.render());
+    println!(
+        "paper check: all methods pay the same per-iteration cost (\"identical to that of\n\
+         APC\", §4.1/§4.4) — the rounds above should agree within ~2x.\n"
+    );
+
+    // Hlo backend hot path (skipped gracefully without artifacts)
+    match Manifest::load("artifacts") {
+        Err(e) => println!("(skipping Hlo hot path: {e:#})"),
+        Ok(manifest) => {
+            println!("=== APC worker step: Native vs Hlo (PJRT) ===\n");
+            let entry = manifest.find_worker("apc_worker", p, n)?.clone();
+            let mut engine = Engine::cpu()?;
+            engine.load(&entry)?;
+            let ginv = blk.gram_chol.inverse();
+            engine.cache_buffer("a", blk.a.as_slice(), &[p, n])?;
+            engine.cache_buffer("ginv", ginv.as_slice(), &[p, p])?;
+            let x: Vec<f64> = blk.initial_solution()?;
+            let gamma = [1.2f64];
+
+            let hlo_opts = BenchOptions { samples: 20, ..BenchOptions::default() };
+            let s_hlo = bench("hlo apc worker (cached operands)", &hlo_opts, || {
+                engine
+                    .execute(
+                        &entry,
+                        &[
+                            TensorArg::Cached("a"),
+                            TensorArg::Cached("ginv"),
+                            TensorArg::Host(&x, &[n]),
+                            TensorArg::Host(&xbar, &[n]),
+                            TensorArg::Host(&gamma, &[]),
+                        ],
+                    )
+                    .expect("hlo exec")
+            });
+            let s_hlo_upload = bench("hlo apc worker (upload A every call)", &hlo_opts, || {
+                engine
+                    .execute(
+                        &entry,
+                        &[
+                            TensorArg::Host(blk.a.as_slice(), &[p, n]),
+                            TensorArg::Host(ginv.as_slice(), &[p, p]),
+                            TensorArg::Host(&x, &[n]),
+                            TensorArg::Host(&xbar, &[n]),
+                            TensorArg::Host(&gamma, &[]),
+                        ],
+                    )
+                    .expect("hlo exec")
+            });
+            let mut local = ApcLocal::new(blk, 1.2)?;
+            let s_native = bench("native apc worker", &opts, || local.step(blk, &xbar));
+
+            let mut table = Table::new(&["path", "time/call", "vs native"]);
+            for s in [&s_native, &s_hlo, &s_hlo_upload] {
+                table.row(&[
+                    s.name.clone(),
+                    fmt_duration(s.median),
+                    format!("{:.1}x", s.median.as_secs_f64() / s_native.median.as_secs_f64()),
+                ]);
+            }
+            println!("{}", table.render());
+            println!(
+                "(the cached-operand column is the runtime's deployed configuration; the\n\
+                 upload-every-call row is what EXPERIMENTS.md §Perf measured before the\n\
+                 device-buffer cache existed)"
+            );
+        }
+    }
+    Ok(())
+}

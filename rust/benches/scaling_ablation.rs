@@ -1,0 +1,278 @@
+//! ABLATIONS — the design-choice studies DESIGN.md calls out:
+//!
+//!  A. machine-count sweep: how κ(X) (and hence APC's rate) degrades as
+//!     the same system is split across more machines — the paper fixes m
+//!     per problem; this shows the trade-off surface.
+//!  B. conditioning sweep: measured iterations-to-tol vs κ(AᵀA),
+//!     verifying the √κ scaling separation between APC/HBM (√) and
+//!     DGD/Cimmino (linear).
+//!  C. momentum ablation: γ-only (η=1), η-only (γ=1), both (APC), neither
+//!     (vanilla consensus) — the paper's claim that *both* momenta matter.
+//!  D. parameter sensitivity: ρ as γ, η are perturbed around (γ*, η*).
+//!  E. straggler injection: synchronous-round wall time vs straggler
+//!     probability through the real coordinator.
+//!  F. modified (y≡0) vs full three-variable ADMM, both at their best ξ
+//!     over a small grid — the §4.4 modification justified empirically.
+//!
+//! ```bash
+//! cargo bench --bench scaling_ablation
+//! ```
+
+use apc::bench::{sci, Table};
+use apc::config::Backend;
+use apc::coordinator::{Coordinator, StragglerSpec};
+use apc::gen::problems::Problem;
+use apc::partition::PartitionedSystem;
+use apc::rates::{apc_optimal, apc_rho, convergence_time, SpectralInfo};
+use apc::solvers::admm::{Admm, FullAdmm};
+use apc::solvers::{suite, Metric, Solver, SolverOptions};
+
+fn main() -> anyhow::Result<()> {
+    ablation_machine_sweep()?;
+    ablation_kappa_sweep()?;
+    ablation_momentum()?;
+    ablation_sensitivity()?;
+    ablation_straggler()?;
+    ablation_full_admm()?;
+    Ok(())
+}
+
+/// A: split the same 240×240 system across m ∈ {2,...,40} machines.
+fn ablation_machine_sweep() -> anyhow::Result<()> {
+    println!("=== A. machine-count sweep (240x240, kappa(AtA)=1e6) ===\n");
+    let built = Problem::with_condition("m-sweep", 240, 240, 2, 1.0e6).build(31);
+    let mut table = Table::new(&["m", "p", "kappa(X)", "T_apc", "T_hbm", "apc advantage"]);
+    for m in [2usize, 4, 8, 12, 24, 40] {
+        let sys = PartitionedSystem::split_even(&built.a, &built.b, m)?;
+        let s = SpectralInfo::compute(&sys)?;
+        let t_apc = convergence_time(suite::analytic_rho("apc", &sys, &s)?);
+        let t_hbm = convergence_time(suite::analytic_rho("hbm", &sys, &s)?);
+        table.row(&[
+            m.to_string(),
+            (240 / m).to_string(),
+            sci(s.kappa_x()),
+            sci(t_apc),
+            sci(t_hbm),
+            format!("{:.2}x", t_hbm / t_apc),
+        ]);
+    }
+    println!("{}", table.render());
+    println!(
+        "(T_hbm is m-independent — the gradient methods don't see the partition;\n\
+         APC's kappa(X) grows with m, trading parallelism against rate.)\n"
+    );
+    Ok(())
+}
+
+/// B: iterations-to-1e-8 vs κ for the four rate families.
+fn ablation_kappa_sweep() -> anyhow::Result<()> {
+    println!("=== B. conditioning sweep (iterations to 1e-8, 96x96, m=6) ===\n");
+    let mut table =
+        Table::new(&["kappa(AtA)", "DGD", "B-Cimmino", "D-HBM", "APC", "HBM/APC", "sqrt-scaling check"]);
+    let mut prev: Option<(f64, usize)> = None;
+    for kappa in [1.0e2, 1.0e4, 1.0e6] {
+        let built = Problem::with_condition("k-sweep", 96, 96, 6, kappa).build(77);
+        let sys = PartitionedSystem::split_even(&built.a, &built.b, 6)?;
+        let s = SpectralInfo::compute(&sys)?;
+        let mut iters = std::collections::BTreeMap::new();
+        for name in ["dgd", "cimmino", "hbm", "apc"] {
+            let mut solver = suite::tuned_solver(name, &sys, &s)?;
+            let rep = solver.solve(
+                &sys,
+                &SolverOptions {
+                    tol: 1e-8,
+                    max_iter: 2_000_000,
+                    metric: Metric::ErrorVsTruth(built.x_star.clone()),
+                    ..Default::default()
+                },
+            )?;
+            iters.insert(
+                name,
+                if rep.converged { rep.iterations } else { usize::MAX },
+            );
+        }
+        // √κ scaling: iterations(APC) should grow ~√(κ₂/κ₁) between rows
+        let scaling = match prev {
+            None => "-".to_string(),
+            Some((k_prev, apc_prev)) => {
+                let expected = (kappa / k_prev).sqrt();
+                let actual = iters["apc"] as f64 / apc_prev as f64;
+                format!("x{:.1} (sqrt predicts x{:.0})", actual, expected)
+            }
+        };
+        prev = Some((kappa, iters["apc"]));
+        let show = |v: usize| {
+            if v == usize::MAX {
+                ">2e6".to_string()
+            } else {
+                v.to_string()
+            }
+        };
+        table.row(&[
+            sci(kappa),
+            show(iters["dgd"]),
+            show(iters["cimmino"]),
+            show(iters["hbm"]),
+            show(iters["apc"]),
+            format!("{:.1}x", iters["hbm"] as f64 / iters["apc"] as f64),
+            scaling,
+        ]);
+    }
+    println!("{}\n", table.render());
+    Ok(())
+}
+
+/// C: which momentum does the work? (γ, η) ∈ {1, tuned}².
+fn ablation_momentum() -> anyhow::Result<()> {
+    println!("=== C. momentum ablation (96x96, m=6, kappa(AtA)=1e5) ===\n");
+    let built = Problem::with_condition("momentum", 96, 96, 6, 1.0e5).build(13);
+    let sys = PartitionedSystem::split_even(&built.a, &built.b, 6)?;
+    let s = SpectralInfo::compute(&sys)?;
+    let opt = apc_optimal(s.mu_min, s.mu_max)?;
+    // per-variant optimal: for γ=1 (Cimmino family) η* = 2/(μmax+μmin);
+    // for η=1 tune γ by 1-D sweep of the characteristic polynomial.
+    let eta_cimmino = 2.0 / (s.mu_max + s.mu_min);
+    let mus = [s.mu_min, s.mu_max];
+    let gamma_only = (1..400)
+        .map(|i| i as f64 * 0.005)
+        .min_by(|a, b| {
+            apc_rho(&mus, *a, 1.0).partial_cmp(&apc_rho(&mus, *b, 1.0)).unwrap()
+        })
+        .unwrap();
+    let variants: [(&str, f64, f64); 4] = [
+        ("neither (consensus of [11,14])", 1.0, 1.0),
+        ("projection momentum only (gamma*, eta=1)", gamma_only, 1.0),
+        ("averaging momentum only (gamma=1 = Cimmino)", 1.0, eta_cimmino),
+        ("both (APC, Theorem-1 optimal)", opt.gamma, opt.eta),
+    ];
+    let mut table = Table::new(&["variant", "gamma", "eta", "rho (analytic)", "iters to 1e-8"]);
+    for (label, gamma, eta) in variants {
+        let rho = apc_rho(&mus, gamma, eta);
+        let mut solver = apc::solvers::apc::Apc::with_params(&sys, gamma, eta)?;
+        let rep = solver.solve(
+            &sys,
+            &SolverOptions {
+                tol: 1e-8,
+                max_iter: 3_000_000,
+                metric: Metric::ErrorVsTruth(built.x_star.clone()),
+                ..Default::default()
+            },
+        )?;
+        table.row(&[
+            label.to_string(),
+            format!("{:.4}", gamma),
+            format!("{:.4}", eta),
+            format!("{:.6}", rho),
+            if rep.converged { rep.iterations.to_string() } else { ">3e6".into() },
+        ]);
+    }
+    println!("{}\n", table.render());
+    Ok(())
+}
+
+/// D: sensitivity of ρ to mistuned (γ, η).
+fn ablation_sensitivity() -> anyhow::Result<()> {
+    println!("=== D. parameter sensitivity: rho at (gamma, eta) = s * optimal ===\n");
+    let built = Problem::with_condition("sens", 96, 96, 6, 1.0e5).build(17);
+    let sys = PartitionedSystem::split_even(&built.a, &built.b, 6)?;
+    let s = SpectralInfo::compute(&sys)?;
+    let opt = apc_optimal(s.mu_min, s.mu_max)?;
+    let mus = [s.mu_min, s.mu_max];
+    let scales = [0.8, 0.9, 0.95, 1.0, 1.05, 1.1, 1.2];
+    let mut table = Table::new(&["eta scale \\ gamma scale", "0.8", "0.9", "0.95", "1.0", "1.05", "1.1", "1.2"]);
+    for se in scales {
+        let mut row = vec![format!("{:.2}", se)];
+        for sg in scales {
+            let rho = apc_rho(&mus, opt.gamma * sg, opt.eta * se);
+            row.push(if rho < 1.0 { format!("{:.4}", rho) } else { "div".into() });
+        }
+        table.row(&row);
+    }
+    println!("{}", table.render());
+    println!("(rho* = {:.4}; mistuning degrades gracefully inside S, diverges outside)\n", opt.rho);
+    Ok(())
+}
+
+/// E: straggler injection through the real coordinator.
+fn ablation_straggler() -> anyhow::Result<()> {
+    println!("=== E. stragglers: synchronous-round wall time (200x200, m=8, 300 rounds) ===\n");
+    let built = Problem::standard_gaussian(200, 200, 8).build(19);
+    let sys = PartitionedSystem::split_even(&built.a, &built.b, 8)?;
+    let s = SpectralInfo::compute(&sys)?;
+    let method = suite::tuned_method("apc", &sys, &s)?;
+    let mut table =
+        Table::new(&["P(straggle)", "delay", "wall/round (p50)", "wall/round (p99)", "slowdown"]);
+    let mut base = None;
+    for prob in [0.0, 0.05, 0.2, 0.5] {
+        let straggler =
+            if prob > 0.0 { Some(StragglerSpec { prob, delay_us: 1000 }) } else { None };
+        let coord = Coordinator::new(&sys, method, Backend::Native, None, straggler, 5)?;
+        let dist = coord.run(
+            &sys,
+            &SolverOptions {
+                tol: 0.0,
+                max_iter: 300,
+                metric: Metric::ErrorVsTruth(built.x_star.clone()),
+                ..Default::default()
+            },
+        )?;
+        let p50 = dist.metrics.round_time_percentile(0.5).unwrap();
+        let p99 = dist.metrics.round_time_percentile(0.99).unwrap();
+        let slowdown = match base {
+            None => {
+                base = Some(p50);
+                "1.0x".to_string()
+            }
+            Some(b) => format!("{:.1}x", p50 as f64 / b as f64),
+        };
+        table.row(&[
+            format!("{:.0}%", prob * 100.0),
+            "1 ms".into(),
+            format!("{} us", p50),
+            format!("{} us", p99),
+            slowdown,
+        ]);
+    }
+    println!("{}", table.render());
+    println!(
+        "(with 8 workers, P(any straggles) = 1-(1-p)^8 — at p=20% most rounds pay the\n\
+         full delay: the paper's motivation for the coded-computation line of work [10,20])\n"
+    );
+    Ok(())
+}
+
+/// F: the §4.4 modification, both variants at their grid-best ξ.
+fn ablation_full_admm() -> anyhow::Result<()> {
+    println!("=== F. modified (y=0) vs full consensus ADMM (64x64, m=4) ===\n");
+    let built = Problem::with_condition("admm-abl", 64, 64, 4, 1.0e4).build(23);
+    let sys = PartitionedSystem::split_even(&built.a, &built.b, 4)?;
+    let s = SpectralInfo::compute(&sys)?;
+    let opts = SolverOptions {
+        tol: 1e-8,
+        max_iter: 2_000_000,
+        metric: Metric::ErrorVsTruth(built.x_star.clone()),
+        ..Default::default()
+    };
+    let grid: Vec<f64> = (-6..=2).map(|e| s.lambda_max * 10f64.powi(e)).collect();
+    let mut best_mod: Option<(f64, usize)> = None;
+    let mut best_full: Option<(f64, usize)> = None;
+    for &xi in &grid {
+        let rep_m = Admm::with_params(&sys, xi)?.solve(&sys, &opts)?;
+        if rep_m.converged && best_mod.map_or(true, |(_, it)| rep_m.iterations < it) {
+            best_mod = Some((xi, rep_m.iterations));
+        }
+        let rep_f = FullAdmm::with_params(&sys, xi)?.solve(&sys, &opts)?;
+        if rep_f.converged && best_full.map_or(true, |(_, it)| rep_f.iterations < it) {
+            best_full = Some((xi, rep_f.iterations));
+        }
+    }
+    let mut table = Table::new(&["variant", "best xi", "iters to 1e-8"]);
+    for (label, best) in [("modified (y=0), Table-2 column", best_mod), ("full 3-variable (Eq. 14)", best_full)] {
+        match best {
+            Some((xi, it)) => table.row(&[label.into(), sci(xi), it.to_string()]),
+            None => table.row(&[label.into(), "-".into(), "never".into()]),
+        }
+    }
+    println!("{}", table.render());
+    Ok(())
+}

@@ -1,0 +1,76 @@
+//! TABLE 1 — convergence-rate formulas, evaluated and *verified*.
+//!
+//! The paper's Table 1 is analytical: a formula per method. This bench
+//! (a) prints the formulas evaluated on a reference system, in the
+//! paper's layout, and (b) closes the loop by fitting the measured decay
+//! of every method on that system and reporting measured-vs-formula —
+//! the reproduction evidence that the formulas describe the
+//! implementation.
+//!
+//! ```bash
+//! cargo bench --bench table1_rates
+//! ```
+
+use apc::bench::{sci, Table};
+use apc::gen::problems::Problem;
+use apc::partition::PartitionedSystem;
+use apc::rates::{convergence_time, SpectralInfo};
+use apc::solvers::{fit_decay_rate, suite, Metric, SolverOptions};
+
+fn main() -> anyhow::Result<()> {
+    // reference system: big enough to have a meaningful spectrum, small
+    // enough that even consensus converges while we watch
+    let built = Problem::with_condition("table1-ref", 120, 120, 6, 1.0e4).build(2024);
+    let sys = PartitionedSystem::split_even(&built.a, &built.b, 6)?;
+    let s = SpectralInfo::compute(&sys)?;
+
+    println!("=== Table 1: convergence rates (reference system 120x120, m=6) ===");
+    println!(
+        "κ(AᵀA) = {}   κ(X) = {}   μ_min = {:.4e}   μ_max = {:.4e}\n",
+        sci(s.kappa_ata()),
+        sci(s.kappa_x()),
+        s.mu_min,
+        s.mu_max
+    );
+
+    let formula: &[(&str, &str)] = &[
+        ("dgd", "1 - 2/kappa(AtA)"),
+        ("nag", "1 - 2/sqrt(3 kappa(AtA)+1)"),
+        ("hbm", "1 - 2/sqrt(kappa(AtA))"),
+        ("consensus", "1 - mu_min(X)"),
+        ("cimmino", "1 - 2/kappa(X)"),
+        ("apc", "1 - 2/sqrt(kappa(X))"),
+    ];
+
+    let mut table = Table::new(&["method", "formula", "rho (exact)", "rho (measured)", "delta", "T"]);
+    for (name, fml) in formula {
+        let rho = suite::analytic_rho(name, &sys, &s)?;
+        // measure the decay empirically at optimal tuning
+        let mut solver = suite::tuned_solver(name, &sys, &s)?;
+        let iters = (10.0 * convergence_time(rho)).clamp(400.0, 500_000.0) as usize;
+        let rep = solver.solve(
+            &sys,
+            &SolverOptions {
+                tol: 1e-13,
+                max_iter: iters,
+                metric: Metric::ErrorVsTruth(built.x_star.clone()),
+                record_every: (iters / 2000).max(1),
+            },
+        )?;
+        let measured = fit_decay_rate(&rep.history).unwrap_or(f64::NAN);
+        table.row(&[
+            rep.solver.to_string(),
+            fml.to_string(),
+            format!("{:.6}", rho),
+            format!("{:.6}", measured),
+            format!("{:+.1e}", measured - rho),
+            sci(convergence_time(rho)),
+        ]);
+    }
+    println!("{}", table.render());
+    println!(
+        "paper's ordering (Table 1): DGD >= D-NAG >= D-HBM and Consensus >= B-Cimmino >= APC;\n\
+         the measured column should track the exact column (finite-horizon fit, ~1e-2 slack)."
+    );
+    Ok(())
+}

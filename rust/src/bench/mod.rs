@@ -1,0 +1,247 @@
+//! From-scratch micro-benchmark harness (the image has no criterion).
+//!
+//! Methodology, mirroring criterion's core loop:
+//! * warm-up phase (default 0.5 s) to stabilize caches/branch predictors,
+//! * timed phase collecting `samples` batch measurements, where the batch
+//!   size is auto-calibrated so one batch is ≥ ~1 ms (amortizes timer
+//!   overhead for nanosecond-scale bodies),
+//! * robust statistics: median and MAD (median absolute deviation), not
+//!   mean/stddev, so OS noise spikes don't skew results.
+//!
+//! Used by every target under `rust/benches/`.
+
+use std::time::{Duration, Instant};
+
+/// One benchmark's collected statistics (per single invocation).
+#[derive(Clone, Debug)]
+pub struct Stats {
+    pub name: String,
+    pub samples: usize,
+    pub batch: u64,
+    pub median: Duration,
+    /// Median absolute deviation.
+    pub mad: Duration,
+    pub min: Duration,
+    pub max: Duration,
+}
+
+impl Stats {
+    /// Throughput given an items-per-invocation count.
+    pub fn per_second(&self) -> f64 {
+        if self.median.is_zero() {
+            return f64::INFINITY;
+        }
+        1.0 / self.median.as_secs_f64()
+    }
+
+    /// One-line human rendering.
+    pub fn row(&self) -> String {
+        format!(
+            "{:<44} {:>12} ± {:<10} ({} samples × {} iters)",
+            self.name,
+            fmt_duration(self.median),
+            fmt_duration(self.mad),
+            self.samples,
+            self.batch,
+        )
+    }
+}
+
+/// Harness options.
+#[derive(Clone, Copy, Debug)]
+pub struct BenchOptions {
+    pub warmup: Duration,
+    pub samples: usize,
+    /// Target duration of one measured batch.
+    pub batch_target: Duration,
+    /// Hard cap on total measuring time (degrades samples, never hangs).
+    pub budget: Duration,
+}
+
+impl Default for BenchOptions {
+    fn default() -> Self {
+        BenchOptions {
+            warmup: Duration::from_millis(300),
+            samples: 30,
+            batch_target: Duration::from_millis(2),
+            budget: Duration::from_secs(10),
+        }
+    }
+}
+
+/// Benchmark a closure. The closure's return value is passed through
+/// [`std::hint::black_box`] so the computation cannot be optimized away.
+pub fn bench<T>(name: &str, opts: &BenchOptions, mut f: impl FnMut() -> T) -> Stats {
+    // warm-up + calibration: how many iterations fit in batch_target?
+    let warm_start = Instant::now();
+    let mut calib_iters = 0u64;
+    let mut calib_time = Duration::ZERO;
+    while warm_start.elapsed() < opts.warmup || calib_iters == 0 {
+        let t0 = Instant::now();
+        std::hint::black_box(f());
+        calib_time += t0.elapsed();
+        calib_iters += 1;
+        if calib_iters > 1_000_000 {
+            break;
+        }
+    }
+    let per_iter = calib_time / calib_iters.max(1) as u32;
+    let batch = if per_iter.is_zero() {
+        1000
+    } else {
+        (opts.batch_target.as_nanos() / per_iter.as_nanos().max(1)).clamp(1, 1_000_000) as u64
+    };
+
+    // measurement
+    let mut samples = Vec::with_capacity(opts.samples);
+    let budget_start = Instant::now();
+    for _ in 0..opts.samples {
+        if budget_start.elapsed() > opts.budget && !samples.is_empty() {
+            break;
+        }
+        let t0 = Instant::now();
+        for _ in 0..batch {
+            std::hint::black_box(f());
+        }
+        samples.push(t0.elapsed() / batch as u32);
+    }
+    samples.sort();
+    let median = samples[samples.len() / 2];
+    let mut deviations: Vec<Duration> = samples
+        .iter()
+        .map(|&s| if s > median { s - median } else { median - s })
+        .collect();
+    deviations.sort();
+    let mad = deviations[deviations.len() / 2];
+    Stats {
+        name: name.to_string(),
+        samples: samples.len(),
+        batch,
+        median,
+        mad,
+        min: *samples.first().unwrap(),
+        max: *samples.last().unwrap(),
+    }
+}
+
+/// Render a duration with a sensible unit.
+pub fn fmt_duration(d: Duration) -> String {
+    let ns = d.as_nanos();
+    if ns < 1_000 {
+        format!("{} ns", ns)
+    } else if ns < 1_000_000 {
+        format!("{:.2} µs", ns as f64 / 1e3)
+    } else if ns < 1_000_000_000 {
+        format!("{:.2} ms", ns as f64 / 1e6)
+    } else {
+        format!("{:.3} s", ns as f64 / 1e9)
+    }
+}
+
+/// Simple fixed-width table printer for bench reports (shared by the
+/// paper-table regeneration targets).
+pub struct Table {
+    pub headers: Vec<String>,
+    pub rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(headers: &[&str]) -> Self {
+        Table { headers: headers.iter().map(|s| s.to_string()).collect(), rows: Vec::new() }
+    }
+
+    pub fn row(&mut self, cells: &[String]) {
+        assert_eq!(cells.len(), self.headers.len(), "table row width mismatch");
+        self.rows.push(cells.to_vec());
+    }
+
+    pub fn render(&self) -> String {
+        let mut widths: Vec<usize> = self.headers.iter().map(|h| h.len()).collect();
+        for row in &self.rows {
+            for (i, c) in row.iter().enumerate() {
+                widths[i] = widths[i].max(c.len());
+            }
+        }
+        let mut out = String::new();
+        let fmt_row = |cells: &[String], widths: &[usize]| -> String {
+            cells
+                .iter()
+                .enumerate()
+                .map(|(i, c)| format!("{:>w$}", c, w = widths[i]))
+                .collect::<Vec<_>>()
+                .join("  ")
+        };
+        out.push_str(&fmt_row(&self.headers, &widths));
+        out.push('\n');
+        out.push_str(&"-".repeat(widths.iter().sum::<usize>() + 2 * (widths.len() - 1)));
+        out.push('\n');
+        for row in &self.rows {
+            out.push_str(&fmt_row(row, &widths));
+            out.push('\n');
+        }
+        out
+    }
+}
+
+/// Scientific-notation cell matching the paper's Table-2 style (`1.22e7`).
+pub fn sci(v: f64) -> String {
+    if !v.is_finite() {
+        return "inf".into();
+    }
+    if v == 0.0 {
+        return "0".into();
+    }
+    format!("{:.2e}", v)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_measures_something() {
+        let opts = BenchOptions {
+            warmup: Duration::from_millis(5),
+            samples: 5,
+            batch_target: Duration::from_micros(200),
+            budget: Duration::from_secs(1),
+        };
+        let stats = bench("spin", &opts, || {
+            // black_box the loop variable too: in release LLVM const-folds
+            // the whole sum (even through the outer black_box) and the
+            // per-call time truncates to 0 ns
+            let mut acc = 0u64;
+            for i in 0..1000 {
+                acc = acc.wrapping_add(std::hint::black_box(i));
+            }
+            acc
+        });
+        assert!(stats.median > Duration::ZERO);
+        assert!(stats.samples > 0);
+        assert!(stats.min <= stats.median && stats.median <= stats.max);
+    }
+
+    #[test]
+    fn table_renders_aligned() {
+        let mut t = Table::new(&["method", "T"]);
+        t.row(&["APC".into(), "3.93e2".into()]);
+        t.row(&["DGD".into(), "1.22e7".into()]);
+        let s = t.render();
+        assert!(s.contains("APC"));
+        assert!(s.lines().count() == 4);
+    }
+
+    #[test]
+    fn duration_formatting() {
+        assert_eq!(fmt_duration(Duration::from_nanos(12)), "12 ns");
+        assert!(fmt_duration(Duration::from_micros(1500)).contains("ms"));
+        assert!(fmt_duration(Duration::from_secs(2)).contains("s"));
+    }
+
+    #[test]
+    fn sci_matches_paper_style() {
+        assert_eq!(sci(12_200_000.0), "1.22e7");
+        assert_eq!(sci(393.0), "3.93e2");
+        assert_eq!(sci(f64::INFINITY), "inf");
+    }
+}

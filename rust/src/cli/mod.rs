@@ -1,0 +1,163 @@
+//! From-scratch CLI argument parser (the image has no `clap`).
+//!
+//! Grammar: `apc <subcommand> [--key value | --key=value | --flag]...`.
+//! Subcommands declare their options; unknown keys are hard errors with a
+//! usage dump, matching what users expect from a clap-style CLI.
+
+use anyhow::{bail, Result};
+use std::collections::BTreeMap;
+
+/// A declared option.
+#[derive(Clone, Debug)]
+pub struct OptSpec {
+    pub key: &'static str,
+    pub help: &'static str,
+    /// `None` = boolean flag, `Some(default)` = value option.
+    pub default: Option<&'static str>,
+}
+
+/// Parsed arguments for one subcommand.
+#[derive(Clone, Debug)]
+pub struct Args {
+    values: BTreeMap<String, String>,
+    flags: Vec<String>,
+}
+
+impl Args {
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.values.get(key).map(|s| s.as_str())
+    }
+
+    pub fn get_parse<T: std::str::FromStr>(&self, key: &str) -> Result<T>
+    where
+        T::Err: std::fmt::Display,
+    {
+        let raw = self
+            .values
+            .get(key)
+            .ok_or_else(|| anyhow::anyhow!("missing required option --{}", key))?;
+        raw.parse::<T>().map_err(|e| anyhow::anyhow!("--{} {:?}: {}", key, raw, e))
+    }
+
+    pub fn flag(&self, key: &str) -> bool {
+        self.flags.iter().any(|f| f == key)
+    }
+}
+
+/// A subcommand with its option table.
+pub struct Command {
+    pub name: &'static str,
+    pub about: &'static str,
+    pub opts: Vec<OptSpec>,
+}
+
+impl Command {
+    pub fn usage(&self) -> String {
+        let mut s = format!("apc {} — {}\n\noptions:\n", self.name, self.about);
+        for o in &self.opts {
+            match o.default {
+                Some(d) => {
+                    s.push_str(&format!("  --{:<22} {} (default: {})\n", o.key, o.help, d))
+                }
+                None => s.push_str(&format!("  --{:<22} {} (flag)\n", o.key, o.help)),
+            }
+        }
+        s
+    }
+
+    /// Parse `argv` (everything after the subcommand name).
+    pub fn parse(&self, argv: &[String]) -> Result<Args> {
+        let mut values = BTreeMap::new();
+        let mut flags = Vec::new();
+        // seed defaults
+        for o in &self.opts {
+            if let Some(d) = o.default {
+                values.insert(o.key.to_string(), d.to_string());
+            }
+        }
+        let mut i = 0;
+        while i < argv.len() {
+            let arg = &argv[i];
+            let Some(stripped) = arg.strip_prefix("--") else {
+                bail!("unexpected positional argument {:?}\n\n{}", arg, self.usage());
+            };
+            let (key, inline_val) = match stripped.split_once('=') {
+                Some((k, v)) => (k.to_string(), Some(v.to_string())),
+                None => (stripped.to_string(), None),
+            };
+            let Some(spec) = self.opts.iter().find(|o| o.key == key) else {
+                bail!("unknown option --{}\n\n{}", key, self.usage());
+            };
+            match (spec.default, inline_val) {
+                (None, None) => flags.push(key),
+                (None, Some(v)) => bail!("--{} is a flag, got value {:?}", key, v),
+                (Some(_), Some(v)) => {
+                    values.insert(key, v);
+                }
+                (Some(_), None) => {
+                    i += 1;
+                    let Some(v) = argv.get(i) else {
+                        bail!("option --{} needs a value\n\n{}", key, self.usage());
+                    };
+                    values.insert(key, v.clone());
+                }
+            }
+            i += 1;
+        }
+        Ok(Args { values, flags })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cmd() -> Command {
+        Command {
+            name: "solve",
+            about: "solve a system",
+            opts: vec![
+                OptSpec { key: "machines", help: "worker count", default: Some("10") },
+                OptSpec { key: "tol", help: "tolerance", default: Some("1e-8") },
+                OptSpec { key: "verbose", help: "chatty", default: None },
+            ],
+        }
+    }
+
+    fn args(list: &[&str]) -> Vec<String> {
+        list.iter().map(|s| s.to_string()).collect()
+    }
+
+    #[test]
+    fn defaults_apply() {
+        let a = cmd().parse(&args(&[])).unwrap();
+        assert_eq!(a.get("machines"), Some("10"));
+        assert_eq!(a.get_parse::<f64>("tol").unwrap(), 1e-8);
+        assert!(!a.flag("verbose"));
+    }
+
+    #[test]
+    fn space_and_equals_forms() {
+        let a = cmd().parse(&args(&["--machines", "4", "--tol=1e-6", "--verbose"])).unwrap();
+        assert_eq!(a.get_parse::<usize>("machines").unwrap(), 4);
+        assert_eq!(a.get_parse::<f64>("tol").unwrap(), 1e-6);
+        assert!(a.flag("verbose"));
+    }
+
+    #[test]
+    fn errors_are_actionable() {
+        let e = cmd().parse(&args(&["--bogus", "1"])).unwrap_err().to_string();
+        assert!(e.contains("unknown option"));
+        assert!(e.contains("usage") || e.contains("options:"));
+        assert!(cmd().parse(&args(&["--machines"])).is_err());
+        assert!(cmd().parse(&args(&["positional"])).is_err());
+        assert!(cmd().parse(&args(&["--verbose=yes"])).is_err());
+    }
+
+    #[test]
+    fn parse_type_errors_name_the_key() {
+        let a = cmd().parse(&args(&["--machines", "many"])).unwrap();
+        let e = a.get_parse::<usize>("machines").unwrap_err().to_string();
+        assert!(e.contains("machines"));
+    }
+}

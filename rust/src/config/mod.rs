@@ -1,0 +1,13 @@
+//! Configuration substrate: a minimal JSON parser/writer (no serde in the
+//! image) plus the run-configuration types shared by the CLI, examples,
+//! and benches.
+//!
+//! The JSON subset is full RFC-8259 minus `\u` surrogate pairs (accepted,
+//! replaced with U+FFFD) — enough for `artifacts/manifest.json` and the
+//! metrics dumps we write ourselves.
+
+pub mod json;
+pub mod run;
+
+pub use json::Json;
+pub use run::{Backend, RunConfig};

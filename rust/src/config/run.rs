@@ -1,0 +1,149 @@
+//! Run configuration shared by the CLI, the coordinator, examples, and
+//! benches.
+
+use anyhow::{bail, Result};
+
+/// Which compute backend the workers use for their per-round kernel.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Backend {
+    /// Rust-native kernels (`solvers::local`) — the optimized hot path.
+    Native,
+    /// AOT-compiled HLO artifacts executed through PJRT — proves the
+    /// L1/L2/L3 layers compose; slower on CPU because every round crosses
+    /// the PJRT boundary.
+    Hlo,
+}
+
+impl std::str::FromStr for Backend {
+    type Err = anyhow::Error;
+    fn from_str(s: &str) -> Result<Self> {
+        match s.to_ascii_lowercase().as_str() {
+            "native" => Ok(Backend::Native),
+            "hlo" | "pjrt" => Ok(Backend::Hlo),
+            other => bail!("unknown backend {:?} (expected native|hlo)", other),
+        }
+    }
+}
+
+/// Everything a `solve` run needs.
+#[derive(Clone, Debug)]
+pub struct RunConfig {
+    /// Problem name from the built-in suite, or a path to a `.mtx` file.
+    pub problem: String,
+    /// Number of machines/workers.
+    pub machines: usize,
+    /// Solver name: apc|dgd|nag|hbm|cimmino|admm|consensus|phbm.
+    pub solver: String,
+    pub tol: f64,
+    pub max_iter: usize,
+    pub seed: u64,
+    pub backend: Backend,
+    /// Artifact directory (manifest.json + *.hlo.txt).
+    pub artifacts_dir: String,
+    /// Optional straggler injection: (probability per worker-round, delay µs).
+    pub straggler: Option<(f64, u64)>,
+    /// Use the threaded taskmaster/worker coordinator (true) or the
+    /// single-process reference loop (false).
+    pub distributed: bool,
+}
+
+impl Default for RunConfig {
+    fn default() -> Self {
+        RunConfig {
+            problem: "standard-gaussian-500".into(),
+            machines: 10,
+            solver: "apc".into(),
+            tol: 1e-8,
+            max_iter: 200_000,
+            seed: 42,
+            backend: Backend::Native,
+            artifacts_dir: "artifacts".into(),
+            straggler: None,
+            distributed: true,
+        }
+    }
+}
+
+/// Parse `key=value` overrides (the config-file format: one pair per line,
+/// `#` comments). CLI flags map onto the same keys.
+impl RunConfig {
+    pub fn apply_kv(&mut self, key: &str, value: &str) -> Result<()> {
+        match key {
+            "problem" => self.problem = value.to_string(),
+            "machines" | "m" => self.machines = value.parse()?,
+            "solver" => self.solver = value.to_string(),
+            "tol" => self.tol = value.parse()?,
+            "max_iter" => self.max_iter = value.parse()?,
+            "seed" => self.seed = value.parse()?,
+            "backend" => self.backend = value.parse()?,
+            "artifacts_dir" => self.artifacts_dir = value.to_string(),
+            "distributed" => self.distributed = value.parse()?,
+            "straggler_prob" => {
+                let (_, delay) = self.straggler.unwrap_or((0.0, 1000));
+                self.straggler = Some((value.parse()?, delay));
+            }
+            "straggler_delay_us" => {
+                let (prob, _) = self.straggler.unwrap_or((0.05, 0));
+                self.straggler = Some((prob, value.parse()?));
+            }
+            other => bail!("unknown config key {:?}", other),
+        }
+        Ok(())
+    }
+
+    /// Parse a config file of `key=value` lines.
+    pub fn from_file(path: &str) -> Result<Self> {
+        let mut cfg = RunConfig::default();
+        let text = std::fs::read_to_string(path)?;
+        for (lineno, line) in text.lines().enumerate() {
+            let line = line.trim();
+            if line.is_empty() || line.starts_with('#') {
+                continue;
+            }
+            let Some((k, v)) = line.split_once('=') else {
+                bail!("{}:{}: expected key=value", path, lineno + 1);
+            };
+            cfg.apply_kv(k.trim(), v.trim())?;
+        }
+        Ok(cfg)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn backend_parses() {
+        assert_eq!("native".parse::<Backend>().unwrap(), Backend::Native);
+        assert_eq!("HLO".parse::<Backend>().unwrap(), Backend::Hlo);
+        assert!("gpu".parse::<Backend>().is_err());
+    }
+
+    #[test]
+    fn kv_overrides() {
+        let mut c = RunConfig::default();
+        c.apply_kv("machines", "4").unwrap();
+        c.apply_kv("tol", "1e-6").unwrap();
+        c.apply_kv("backend", "hlo").unwrap();
+        c.apply_kv("straggler_prob", "0.1").unwrap();
+        assert_eq!(c.machines, 4);
+        assert_eq!(c.tol, 1e-6);
+        assert_eq!(c.backend, Backend::Hlo);
+        assert_eq!(c.straggler, Some((0.1, 1000)));
+        assert!(c.apply_kv("bogus", "1").is_err());
+    }
+
+    #[test]
+    fn config_file_roundtrip() {
+        let dir = std::env::temp_dir().join("apc_cfg_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("run.conf");
+        std::fs::write(&path, "# comment\nsolver = hbm\nmachines=7\n\ntol = 1e-9\n").unwrap();
+        let c = RunConfig::from_file(path.to_str().unwrap()).unwrap();
+        assert_eq!(c.solver, "hbm");
+        assert_eq!(c.machines, 7);
+        assert_eq!(c.tol, 1e-9);
+        std::fs::remove_file(&path).ok();
+    }
+}

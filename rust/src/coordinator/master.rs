@@ -1,0 +1,550 @@
+//! The taskmaster: spawns workers, drives synchronous rounds, folds
+//! responses, monitors convergence.
+
+use super::metrics::RunMetrics;
+use super::protocol::{FromWorker, Method, StragglerSpec, ToWorker};
+use super::worker::{self, WorkerSpec};
+use crate::config::Backend;
+use crate::linalg::vector::relative_error;
+use crate::partition::PartitionedSystem;
+use crate::runtime::Manifest;
+use crate::solvers::local::master_momentum_average;
+use crate::solvers::{Metric, SolveReport, SolverOptions};
+use anyhow::{bail, Context, Result};
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::Arc;
+use std::thread::JoinHandle;
+use std::time::Instant;
+
+/// Per-method master-side recursion state. Mirrors the single-process
+/// solver structs exactly (parity is tested bit-for-bit on the Native
+/// backend).
+enum MasterState {
+    /// APC / Consensus: x̄ plus momentum weight η.
+    Apc { eta: f64 },
+    /// DGD: x ← x − α Σ gᵢ.
+    Dgd { alpha: f64 },
+    /// NAG: needs y(t).
+    Nag { alpha: f64, beta: f64, y: Vec<f64> },
+    /// HBM: needs z(t).
+    Hbm { alpha: f64, beta: f64, z: Vec<f64> },
+    /// Cimmino: x̄ ← x̄ + ν Σ rᵢ.
+    Cimmino { nu: f64 },
+    /// ADMM: x̄ ← mean(xᵢ).
+    Admm,
+}
+
+/// Outcome of a distributed run: solver-style report + runtime metrics.
+#[derive(Clone, Debug)]
+pub struct DistributedReport {
+    pub report: SolveReport,
+    pub metrics: RunMetrics,
+}
+
+/// A running taskmaster with its worker pool.
+pub struct Coordinator {
+    method: Method,
+    n: usize,
+    m: usize,
+    to_workers: Vec<Sender<ToWorker>>,
+    from_workers: Receiver<FromWorker>,
+    handles: Vec<JoinHandle<()>>,
+    /// Broadcast state (x̄ or x depending on family).
+    state_vec: Vec<f64>,
+    master: MasterState,
+    seq: u64,
+    /// Responses parked for the current round (worker-indexed).
+    inbox: Vec<Option<Vec<f64>>>,
+}
+
+impl Coordinator {
+    /// Spawn the worker pool for `method` over `sys`.
+    ///
+    /// `manifest` is required for [`Backend::Hlo`] and ignored for
+    /// Native. Artifact lookup errors surface here, before any thread
+    /// starts.
+    pub fn new(
+        sys: &PartitionedSystem,
+        method: Method,
+        backend: Backend,
+        manifest: Option<&Manifest>,
+        straggler: Option<StragglerSpec>,
+        seed: u64,
+    ) -> Result<Self> {
+        let m = sys.m();
+        let n = sys.n;
+        let (tx_up, from_workers) = channel::<FromWorker>();
+        let mut to_workers = Vec::with_capacity(m);
+        let mut handles = Vec::with_capacity(m);
+
+        let step_name = match method {
+            Method::Apc { .. } | Method::Consensus => Some("apc_worker"),
+            Method::Dgd { .. } | Method::Nag { .. } | Method::Hbm { .. } => Some("grad_worker"),
+            Method::Cimmino { .. } => Some("cimmino_worker"),
+            Method::Admm { .. } => Some("admm_worker"),
+        };
+
+        for blk in &sys.blocks {
+            let artifact = match backend {
+                Backend::Native => None,
+                Backend::Hlo => {
+                    let manifest = manifest
+                        .context("Backend::Hlo requires a Manifest (run `make artifacts`)")?;
+                    let step = step_name.expect("every method has a worker step");
+                    Some(manifest.find_worker(step, blk.p(), blk.n())?.clone())
+                }
+            };
+            let (tx_down, rx_down) = channel::<ToWorker>();
+            let spec = WorkerSpec {
+                index: blk.index,
+                blk: blk.clone(),
+                method,
+                backend,
+                straggler,
+                artifact,
+                seed,
+            };
+            let tx_up = tx_up.clone();
+            handles.push(std::thread::spawn(move || worker::run(spec, rx_down, tx_up)));
+            to_workers.push(tx_down);
+        }
+
+        // master-side initial state, matching the single-process solvers
+        let (state_vec, master) = match method {
+            Method::Apc { .. } | Method::Consensus => {
+                let eta = match method {
+                    Method::Apc { eta, .. } => eta,
+                    _ => 1.0,
+                };
+                // x̄(0) = mean of the workers' feasible starts
+                let mut xbar = vec![0.0; n];
+                for blk in &sys.blocks {
+                    let x0 = blk.initial_solution()?;
+                    for (s, v) in xbar.iter_mut().zip(&x0) {
+                        *s += v;
+                    }
+                }
+                for v in xbar.iter_mut() {
+                    *v /= m as f64;
+                }
+                (xbar, MasterState::Apc { eta })
+            }
+            Method::Dgd { alpha } => (vec![0.0; n], MasterState::Dgd { alpha }),
+            Method::Nag { alpha, beta } => {
+                (vec![0.0; n], MasterState::Nag { alpha, beta, y: vec![0.0; n] })
+            }
+            Method::Hbm { alpha, beta } => {
+                (vec![0.0; n], MasterState::Hbm { alpha, beta, z: vec![0.0; n] })
+            }
+            Method::Cimmino { nu } => (vec![0.0; n], MasterState::Cimmino { nu }),
+            Method::Admm { .. } => (vec![0.0; n], MasterState::Admm),
+        };
+
+        Ok(Coordinator {
+            method,
+            n,
+            m,
+            to_workers,
+            from_workers,
+            handles,
+            state_vec,
+            master,
+            seq: 0,
+            inbox: vec![None; m],
+        })
+    }
+
+    /// Current master estimate.
+    pub fn estimate(&self) -> &[f64] {
+        &self.state_vec
+    }
+
+    /// Drive one synchronous round. Returns per-round bookkeeping for the
+    /// metrics aggregator.
+    fn round(&mut self, metrics: &mut RunMetrics) -> Result<()> {
+        self.seq += 1;
+        let input = Arc::new(self.state_vec.clone());
+        for tx in &self.to_workers {
+            tx.send(ToWorker::Round { seq: self.seq, input: Arc::clone(&input) })
+                .map_err(|_| anyhow::anyhow!("worker channel closed (worker died?)"))?;
+        }
+        metrics.bytes_down += (self.m * self.n * 8) as u64;
+
+        // collect all m responses for this seq
+        let mut received = 0usize;
+        while received < self.m {
+            let msg = self
+                .from_workers
+                .recv()
+                .map_err(|_| anyhow::anyhow!("all workers disconnected mid-round"))?;
+            if msg.seq != self.seq {
+                bail!("protocol error: got round {} while in round {}", msg.seq, self.seq);
+            }
+            if msg.output.len() != self.n {
+                bail!(
+                    "worker {} returned {} values, expected {}",
+                    msg.worker,
+                    msg.output.len(),
+                    self.n
+                );
+            }
+            metrics.worker_compute_ns[msg.worker] += msg.compute_ns;
+            metrics.straggler_delay_us += msg.injected_delay_us;
+            metrics.bytes_up += (self.n * 8) as u64;
+            if self.inbox[msg.worker].replace(msg.output).is_some() {
+                bail!("worker {} answered twice in round {}", msg.worker, self.seq);
+            }
+            received += 1;
+        }
+
+        // fold in worker-index order (bit-exact parity with the
+        // single-process loop, independent of arrival order)
+        let t0 = Instant::now();
+        match &mut self.master {
+            MasterState::Apc { eta } => {
+                let mut sum = vec![0.0; self.n];
+                for slot in self.inbox.iter() {
+                    let x = slot.as_ref().expect("all received");
+                    for (s, v) in sum.iter_mut().zip(x) {
+                        *s += v;
+                    }
+                }
+                master_momentum_average(&mut self.state_vec, &sum, self.m, *eta);
+            }
+            MasterState::Dgd { alpha } => {
+                // sum first, step once — Eq. 8's Σ before the α-step, and
+                // the same rounding as the single-process reference loop
+                let mut grad = vec![0.0; self.n];
+                for slot in self.inbox.iter() {
+                    let g = slot.as_ref().expect("all received");
+                    for (s, gi) in grad.iter_mut().zip(g) {
+                        *s += gi;
+                    }
+                }
+                for (x, g) in self.state_vec.iter_mut().zip(&grad) {
+                    *x -= *alpha * g;
+                }
+            }
+            MasterState::Nag { alpha, beta, y } => {
+                let mut grad = vec![0.0; self.n];
+                for slot in self.inbox.iter() {
+                    let g = slot.as_ref().expect("all received");
+                    for (s, gi) in grad.iter_mut().zip(g) {
+                        *s += gi;
+                    }
+                }
+                for k in 0..self.n {
+                    let y_next = self.state_vec[k] - *alpha * grad[k];
+                    self.state_vec[k] = (1.0 + *beta) * y_next - *beta * y[k];
+                    y[k] = y_next;
+                }
+            }
+            MasterState::Hbm { alpha, beta, z } => {
+                let mut grad = vec![0.0; self.n];
+                for slot in self.inbox.iter() {
+                    let g = slot.as_ref().expect("all received");
+                    for (s, gi) in grad.iter_mut().zip(g) {
+                        *s += gi;
+                    }
+                }
+                for k in 0..self.n {
+                    z[k] = *beta * z[k] + grad[k];
+                    self.state_vec[k] -= *alpha * z[k];
+                }
+            }
+            MasterState::Cimmino { nu } => {
+                let mut sum = vec![0.0; self.n];
+                for slot in self.inbox.iter() {
+                    let r = slot.as_ref().expect("all received");
+                    for (s, ri) in sum.iter_mut().zip(r) {
+                        *s += ri;
+                    }
+                }
+                for (x, s) in self.state_vec.iter_mut().zip(&sum) {
+                    *x += *nu * s;
+                }
+            }
+            MasterState::Admm => {
+                let mut sum = vec![0.0; self.n];
+                for slot in self.inbox.iter() {
+                    let x = slot.as_ref().expect("all received");
+                    for (s, v) in sum.iter_mut().zip(x) {
+                        *s += v;
+                    }
+                }
+                for (x, s) in self.state_vec.iter_mut().zip(&sum) {
+                    *x = s / self.m as f64;
+                }
+            }
+        }
+        metrics.master_ns += t0.elapsed().as_nanos() as u64;
+        for slot in self.inbox.iter_mut() {
+            *slot = None;
+        }
+        Ok(())
+    }
+
+    /// Run to convergence (or `max_iter`). Consumes the coordinator: the
+    /// worker pool shuts down on return.
+    pub fn run(mut self, sys: &PartitionedSystem, opts: &SolverOptions) -> Result<DistributedReport> {
+        let eval = |xbar: &[f64]| -> f64 {
+            match &opts.metric {
+                Metric::Residual => sys.relative_residual(xbar),
+                Metric::ErrorVsTruth(xs) => relative_error(xbar, xs),
+            }
+        };
+        let mut metrics =
+            RunMetrics { worker_compute_ns: vec![0; self.m], ..Default::default() };
+        let wall0 = Instant::now();
+        let mut history = Vec::new();
+        let mut err = eval(self.estimate());
+        if opts.record_every > 0 {
+            history.push((0usize, err));
+        }
+        let mut it = 0usize;
+        while it < opts.max_iter && !(err <= opts.tol) && err.is_finite() && err < 1e15 {
+            let t_round = Instant::now();
+            self.round(&mut metrics)?;
+            metrics.round_times_us.push(t_round.elapsed().as_micros() as u64);
+            it += 1;
+            err = eval(self.estimate());
+            if opts.record_every > 0 && it % opts.record_every == 0 {
+                history.push((it, err));
+            }
+        }
+        metrics.rounds = it as u64;
+        metrics.wall = wall0.elapsed();
+
+        let report = SolveReport {
+            solver: self.method.name(),
+            iterations: it,
+            converged: err <= opts.tol,
+            final_error: err,
+            history,
+            solution: self.estimate().to_vec(),
+        };
+        self.shutdown();
+        Ok(DistributedReport { report, metrics })
+    }
+
+    fn shutdown(self) {
+        for tx in &self.to_workers {
+            let _ = tx.send(ToWorker::Stop);
+        }
+        for h in self.handles {
+            let _ = h.join();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gen::problems::Problem;
+    use crate::linalg::vector::max_abs_diff;
+    use crate::rates::{apc_optimal, hbm_optimal, SpectralInfo};
+    use crate::solvers::{apc::Apc, hbm::Hbm, Solver};
+
+    fn build(n: usize, m: usize, seed: u64) -> (PartitionedSystem, Vec<f64>) {
+        let p = Problem::standard_gaussian(n, n, m).build(seed);
+        let sys = PartitionedSystem::split_even(&p.a, &p.b, m).unwrap();
+        (sys, p.x_star)
+    }
+
+    #[test]
+    fn distributed_apc_bit_exact_vs_single_process() {
+        let (sys, xstar) = build(30, 4, 71);
+        let s = SpectralInfo::compute(&sys).unwrap();
+        let params = apc_optimal(s.mu_min, s.mu_max).unwrap();
+
+        let opts = SolverOptions {
+            tol: 0.0,
+            max_iter: 40,
+            metric: Metric::ErrorVsTruth(xstar),
+            ..Default::default()
+        };
+        let coord = Coordinator::new(
+            &sys,
+            Method::Apc { gamma: params.gamma, eta: params.eta },
+            Backend::Native,
+            None,
+            None,
+            1,
+        )
+        .unwrap();
+        let dist = coord.run(&sys, &opts).unwrap();
+
+        let mut reference = Apc::with_params(&sys, params.gamma, params.eta).unwrap();
+        let rep = reference.solve(&sys, &opts).unwrap();
+
+        assert_eq!(dist.report.iterations, rep.iterations);
+        assert_eq!(dist.report.solution, rep.solution, "bit-exact parity violated");
+    }
+
+    #[test]
+    fn distributed_hbm_bit_exact_vs_single_process() {
+        let (sys, xstar) = build(24, 3, 73);
+        let s = SpectralInfo::compute(&sys).unwrap();
+        let (alpha, beta, _) = hbm_optimal(s.lambda_min, s.lambda_max);
+
+        let opts = SolverOptions {
+            tol: 0.0,
+            max_iter: 60,
+            metric: Metric::ErrorVsTruth(xstar),
+            ..Default::default()
+        };
+        let dist = Coordinator::new(
+            &sys,
+            Method::Hbm { alpha, beta },
+            Backend::Native,
+            None,
+            None,
+            1,
+        )
+        .unwrap()
+        .run(&sys, &opts)
+        .unwrap();
+
+        let rep = Hbm::with_params(&sys, alpha, beta).solve(&sys, &opts).unwrap();
+        assert_eq!(dist.report.solution, rep.solution, "bit-exact parity violated");
+    }
+
+    #[test]
+    fn distributed_apc_converges_with_stragglers() {
+        let (sys, xstar) = build(24, 4, 75);
+        let s = SpectralInfo::compute(&sys).unwrap();
+        let params = apc_optimal(s.mu_min, s.mu_max).unwrap();
+        let opts = SolverOptions {
+            tol: 1e-9,
+            max_iter: 5_000,
+            metric: Metric::ErrorVsTruth(xstar),
+            ..Default::default()
+        };
+        let dist = Coordinator::new(
+            &sys,
+            Method::Apc { gamma: params.gamma, eta: params.eta },
+            Backend::Native,
+            None,
+            Some(StragglerSpec { prob: 0.2, delay_us: 200 }),
+            7,
+        )
+        .unwrap()
+        .run(&sys, &opts)
+        .unwrap();
+        assert!(dist.report.converged, "err {:.2e}", dist.report.final_error);
+        assert!(dist.metrics.straggler_delay_us > 0, "no straggler fired");
+    }
+
+    #[test]
+    fn all_methods_converge_distributed_native() {
+        let (sys, xstar) = build(24, 3, 77);
+        let s = SpectralInfo::compute(&sys).unwrap();
+        let apc = apc_optimal(s.mu_min, s.mu_max).unwrap();
+        let (alpha_d, _) = crate::rates::dgd_optimal(s.lambda_min, s.lambda_max);
+        let (alpha_n, beta_n, _) = crate::rates::nag_optimal(s.lambda_min, s.lambda_max);
+        let (alpha_h, beta_h, _) = hbm_optimal(s.lambda_min, s.lambda_max);
+        let (nu, _) = crate::rates::cimmino_optimal(s.mu_min, s.mu_max, sys.m());
+        let methods = vec![
+            Method::Apc { gamma: apc.gamma, eta: apc.eta },
+            Method::Consensus,
+            Method::Dgd { alpha: alpha_d },
+            Method::Nag { alpha: alpha_n, beta: beta_n },
+            Method::Hbm { alpha: alpha_h, beta: beta_h },
+            Method::Cimmino { nu },
+            Method::Admm { xi: 0.5 },
+        ];
+        for method in methods {
+            let opts = SolverOptions {
+                tol: 1e-6,
+                max_iter: 2_000_000,
+                metric: Metric::ErrorVsTruth(xstar.clone()),
+                ..Default::default()
+            };
+            let dist = Coordinator::new(&sys, method, Backend::Native, None, None, 3)
+                .unwrap()
+                .run(&sys, &opts)
+                .unwrap();
+            assert!(
+                dist.report.converged,
+                "{} failed: {:.2e} after {}",
+                method.name(),
+                dist.report.final_error,
+                dist.report.iterations
+            );
+        }
+    }
+
+    #[test]
+    fn metrics_account_for_traffic() {
+        let (sys, xstar) = build(20, 4, 79);
+        let opts = SolverOptions {
+            tol: 0.0,
+            max_iter: 10,
+            metric: Metric::ErrorVsTruth(xstar),
+            ..Default::default()
+        };
+        let dist = Coordinator::new(
+            &sys,
+            Method::Consensus,
+            Backend::Native,
+            None,
+            None,
+            1,
+        )
+        .unwrap()
+        .run(&sys, &opts)
+        .unwrap();
+        assert_eq!(dist.metrics.rounds, 10);
+        // 2 · m · n · 8 bytes per round
+        assert_eq!(dist.metrics.bytes_down, 10 * 4 * 20 * 8);
+        assert_eq!(dist.metrics.bytes_up, 10 * 4 * 20 * 8);
+        assert_eq!(dist.metrics.round_times_us.len(), 10);
+    }
+
+    #[test]
+    fn hlo_backend_requires_manifest() {
+        let (sys, _) = build(20, 4, 81);
+        let err = Coordinator::new(
+            &sys,
+            Method::Consensus,
+            Backend::Hlo,
+            None,
+            None,
+            1,
+        );
+        assert!(err.is_err());
+    }
+
+    /// Parity of the Hlo backend against Native — the end-to-end proof
+    /// that the three layers compose. Uses the quickstart shape so the
+    /// artifacts exist. Skips (with a note) if `make artifacts` hasn't run.
+    #[test]
+    fn distributed_apc_hlo_matches_native() {
+        let dir = concat!(env!("CARGO_MANIFEST_DIR"), "/artifacts");
+        let Ok(manifest) = Manifest::load(dir) else {
+            eprintln!("skipping: run `make artifacts` first");
+            return;
+        };
+        let problem = Problem::standard_gaussian(200, 200, 8).build(83);
+        let sys = PartitionedSystem::split_even(&problem.a, &problem.b, 8).unwrap();
+        let s = SpectralInfo::compute(&sys).unwrap();
+        let params = apc_optimal(s.mu_min, s.mu_max).unwrap();
+        let method = Method::Apc { gamma: params.gamma, eta: params.eta };
+        let opts = SolverOptions {
+            tol: 0.0,
+            max_iter: 15,
+            metric: Metric::ErrorVsTruth(problem.x_star.clone()),
+            ..Default::default()
+        };
+        let hlo = Coordinator::new(&sys, method, Backend::Hlo, Some(&manifest), None, 1)
+            .unwrap()
+            .run(&sys, &opts)
+            .unwrap();
+        let native = Coordinator::new(&sys, method, Backend::Native, None, None, 1)
+            .unwrap()
+            .run(&sys, &opts)
+            .unwrap();
+        let diff = max_abs_diff(&hlo.report.solution, &native.report.solution);
+        assert!(diff < 1e-9, "Hlo vs Native drift {:.2e}", diff);
+    }
+}

@@ -1,0 +1,105 @@
+//! Run metrics: what the coordinator measures about itself.
+
+use std::time::Duration;
+
+/// Aggregated metrics for a distributed run.
+#[derive(Clone, Debug, Default)]
+pub struct RunMetrics {
+    pub rounds: u64,
+    pub wall: Duration,
+    /// Total pure-compute time per worker (ns), summed over rounds.
+    pub worker_compute_ns: Vec<u64>,
+    /// Master-side fold + convergence-check time (ns), summed.
+    pub master_ns: u64,
+    /// Bytes broadcast master→workers, total.
+    pub bytes_down: u64,
+    /// Bytes returned workers→master, total.
+    pub bytes_up: u64,
+    /// Injected straggler delay observed (µs), total across workers.
+    pub straggler_delay_us: u64,
+    /// Per-round wall times (µs), recorded when `record_round_times`.
+    pub round_times_us: Vec<u64>,
+}
+
+impl RunMetrics {
+    /// Mean wall time per round.
+    pub fn mean_round(&self) -> Duration {
+        if self.rounds == 0 {
+            return Duration::ZERO;
+        }
+        self.wall / self.rounds as u32
+    }
+
+    /// Worker compute imbalance: max/mean of per-worker compute time — the
+    /// straggler factor a synchronous round pays.
+    pub fn imbalance(&self) -> f64 {
+        if self.worker_compute_ns.is_empty() {
+            return 1.0;
+        }
+        let max = *self.worker_compute_ns.iter().max().unwrap() as f64;
+        let mean = self.worker_compute_ns.iter().sum::<u64>() as f64
+            / self.worker_compute_ns.len() as f64;
+        if mean == 0.0 {
+            1.0
+        } else {
+            max / mean
+        }
+    }
+
+    /// Percentile of the recorded round times (µs); `q` in `[0, 1]`.
+    pub fn round_time_percentile(&self, q: f64) -> Option<u64> {
+        if self.round_times_us.is_empty() {
+            return None;
+        }
+        let mut v = self.round_times_us.clone();
+        v.sort_unstable();
+        let idx = ((v.len() - 1) as f64 * q.clamp(0.0, 1.0)).round() as usize;
+        Some(v[idx])
+    }
+
+    /// JSON dump for EXPERIMENTS.md tooling.
+    pub fn to_json(&self) -> crate::config::Json {
+        crate::json_obj![
+            ("rounds", self.rounds as usize),
+            ("wall_us", self.wall.as_micros() as usize),
+            ("master_ns", self.master_ns as usize),
+            ("bytes_down", self.bytes_down as usize),
+            ("bytes_up", self.bytes_up as usize),
+            ("straggler_delay_us", self.straggler_delay_us as usize),
+            ("imbalance", self.imbalance()),
+        ]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn imbalance_of_equal_workers_is_one() {
+        let m = RunMetrics { worker_compute_ns: vec![100, 100, 100], ..Default::default() };
+        assert!((m.imbalance() - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn imbalance_detects_straggler() {
+        let m = RunMetrics { worker_compute_ns: vec![100, 100, 400], ..Default::default() };
+        assert!((m.imbalance() - 2.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn percentiles() {
+        let m = RunMetrics { round_times_us: vec![5, 1, 3, 2, 4], ..Default::default() };
+        assert_eq!(m.round_time_percentile(0.0), Some(1));
+        assert_eq!(m.round_time_percentile(0.5), Some(3));
+        assert_eq!(m.round_time_percentile(1.0), Some(5));
+        assert_eq!(RunMetrics::default().round_time_percentile(0.5), None);
+    }
+
+    #[test]
+    fn json_dump_has_fields() {
+        let j = RunMetrics::default().to_json();
+        assert!(j.get("rounds").is_some());
+        assert!(j.get("imbalance").is_some());
+    }
+}

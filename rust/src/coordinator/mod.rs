@@ -1,0 +1,31 @@
+//! L3 — the taskmaster/worker coordinator (the paper's Figure 1).
+//!
+//! The master owns the round loop and the consensus state; each machine is
+//! an OS thread holding its row block `[A_i, b_i]`, its cached
+//! factorizations, and (in the Hlo backend) its own PJRT engine with the
+//! AOT worker artifact compiled and its loop-invariant operands pinned in
+//! device buffers. Communication is `std::sync::mpsc` — one broadcast
+//! channel per worker downstream, one shared upstream channel — matching
+//! the paper's star topology: the master sends `x̄(t)` (n doubles) down,
+//! every worker sends its n-double response up, `2·m·n·8` bytes per round.
+//!
+//! Rounds are synchronous (the algorithms are): the master blocks until
+//! all `m` responses for round `t` arrive, folds them with the
+//! method-specific master rule, checks convergence, and starts round
+//! `t+1`. Parity with the single-process reference loop is bit-exact —
+//! responses are folded in worker-index order regardless of arrival
+//! order — and pinned by integration tests.
+//!
+//! Fault model: [`StragglerSpec`] injects per-(worker, round) delays with
+//! a deterministic per-worker RNG, reproducing the paper's motivating
+//! observation that a synchronous star is bottlenecked by its slowest
+//! machine (the `scaling_ablation` bench measures it).
+
+pub mod master;
+pub mod metrics;
+pub mod protocol;
+pub mod worker;
+
+pub use master::{Coordinator, DistributedReport};
+pub use metrics::RunMetrics;
+pub use protocol::{Method, StragglerSpec};

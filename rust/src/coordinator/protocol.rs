@@ -1,0 +1,96 @@
+//! Message types and method descriptors for the master↔worker protocol.
+
+use std::sync::Arc;
+
+/// The iterative method a coordinator run executes, with its (already
+/// tuned) parameters. Parameter tuning happens *before* the run — see
+/// `rates::` — mirroring the paper's experiments where every method is
+/// compared at its optimal tuning.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum Method {
+    /// Algorithm 1. Workers project; master does momentum averaging.
+    Apc { gamma: f64, eta: f64 },
+    /// [11,14]: APC with `γ = η = 1`.
+    Consensus,
+    /// §4.1. Workers send partial gradients; master steps.
+    Dgd { alpha: f64 },
+    /// §4.2.
+    Nag { alpha: f64, beta: f64 },
+    /// §4.3.
+    Hbm { alpha: f64, beta: f64 },
+    /// §4.5. Workers send pseudoinverse residuals; master accumulates.
+    Cimmino { nu: f64 },
+    /// §4.4 modified (y≡0) consensus ADMM.
+    Admm { xi: f64 },
+}
+
+impl Method {
+    /// Display name matching the solver structs / Table 2 headers.
+    pub fn name(&self) -> &'static str {
+        match self {
+            Method::Apc { .. } => "APC",
+            Method::Consensus => "Consensus",
+            Method::Dgd { .. } => "DGD",
+            Method::Nag { .. } => "D-NAG",
+            Method::Hbm { .. } => "D-HBM",
+            Method::Cimmino { .. } => "B-Cimmino",
+            Method::Admm { .. } => "M-ADMM",
+        }
+    }
+
+    /// What the master broadcasts each round: `x̄` for consensus-family
+    /// methods, the current iterate `x` for gradient-family ones. Uniform
+    /// over the wire either way (n doubles).
+    pub fn is_gradient_family(&self) -> bool {
+        matches!(self, Method::Dgd { .. } | Method::Nag { .. } | Method::Hbm { .. })
+    }
+}
+
+/// Deterministic straggler injection: each (worker, round) independently
+/// delays by `delay_us` with probability `prob`.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct StragglerSpec {
+    pub prob: f64,
+    pub delay_us: u64,
+}
+
+/// Master → worker.
+pub enum ToWorker {
+    /// Start round `seq` with the broadcast vector (x̄ or x).
+    Round { seq: u64, input: Arc<Vec<f64>> },
+    /// Drain and exit.
+    Stop,
+}
+
+/// Worker → master.
+pub struct FromWorker {
+    pub worker: usize,
+    pub seq: u64,
+    /// The method-specific n-vector response (x_i, g_i, or r_i).
+    pub output: Vec<f64>,
+    /// Pure compute time (excludes queue wait and injected delay).
+    pub compute_ns: u64,
+    /// Injected straggler delay, if any (so metrics can separate the two).
+    pub injected_delay_us: u64,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn method_names_match_table2_headers() {
+        assert_eq!(Method::Apc { gamma: 1.0, eta: 1.0 }.name(), "APC");
+        assert_eq!(Method::Dgd { alpha: 0.1 }.name(), "DGD");
+        assert_eq!(Method::Cimmino { nu: 0.1 }.name(), "B-Cimmino");
+        assert_eq!(Method::Admm { xi: 1.0 }.name(), "M-ADMM");
+    }
+
+    #[test]
+    fn family_split() {
+        assert!(Method::Dgd { alpha: 0.1 }.is_gradient_family());
+        assert!(Method::Hbm { alpha: 0.1, beta: 0.5 }.is_gradient_family());
+        assert!(!Method::Apc { gamma: 1.0, eta: 1.0 }.is_gradient_family());
+        assert!(!Method::Cimmino { nu: 0.1 }.is_gradient_family());
+    }
+}

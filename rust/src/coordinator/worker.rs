@@ -1,0 +1,244 @@
+//! Worker thread: one simulated machine.
+
+use super::protocol::{FromWorker, Method, StragglerSpec, ToWorker};
+use crate::config::Backend;
+use crate::gen::rng::Pcg64;
+use crate::partition::MachineBlock;
+use crate::runtime::{ArtifactEntry, Engine, TensorArg};
+use crate::solvers::local::{AdmmLocal, ApcLocal, CimminoLocal, GradLocal};
+use anyhow::{Context, Result};
+use std::sync::mpsc::{Receiver, Sender};
+use std::time::Instant;
+
+/// Per-method worker state (native backend).
+enum LocalState {
+    Apc(ApcLocal),
+    Grad(GradLocal, Vec<f64>),
+    Cimmino(CimminoLocal, Vec<f64>),
+    Admm(AdmmLocal, Vec<f64>),
+}
+
+/// Hlo-backend handles: engine + artifact + which operands are cached.
+struct HloState {
+    engine: Engine,
+    entry: ArtifactEntry,
+    /// Method-specific mutable tensor (APC's x_i), host-side.
+    x: Option<Vec<f64>>,
+    /// Scalar parameter operand (γ or ξ), if the artifact takes one.
+    scalar: Option<f64>,
+}
+
+/// Everything a worker thread needs; constructed on the master, moved into
+/// the thread (PJRT engines are created *inside* the thread because PJRT
+/// handles are not Send).
+pub struct WorkerSpec {
+    pub index: usize,
+    pub blk: MachineBlock,
+    pub method: Method,
+    pub backend: Backend,
+    pub straggler: Option<StragglerSpec>,
+    /// Artifact entry for the Hlo backend (pre-resolved by the master so
+    /// manifest errors surface before threads spawn).
+    pub artifact: Option<ArtifactEntry>,
+    /// Seed for the straggler RNG.
+    pub seed: u64,
+}
+
+/// The worker loop. Runs until `Stop` or channel close; any setup or
+/// execution error is reported by sending a poisoned response (empty
+/// output) after logging — the master treats a short response set as a
+/// fatal error for the round.
+pub fn run(spec: WorkerSpec, rx: Receiver<ToWorker>, tx: Sender<FromWorker>) {
+    match run_inner(spec, rx, tx) {
+        Ok(()) => {}
+        Err(e) => {
+            // The master notices the missing response and aborts the run;
+            // we just record why on stderr.
+            eprintln!("[apc worker] fatal: {:#}", e);
+        }
+    }
+}
+
+fn run_inner(spec: WorkerSpec, rx: Receiver<ToWorker>, tx: Sender<FromWorker>) -> Result<()> {
+    let WorkerSpec { index, blk, method, backend, straggler, artifact, seed } = spec;
+    let mut rng = Pcg64::with_stream(seed, index as u64 + 1);
+
+    // method-local native state (also the init source for the Hlo path:
+    // APC's feasible x_i(0) comes from the same min-norm solve)
+    let mut native = build_native_state(&blk, method)?;
+
+    let mut hlo = match backend {
+        Backend::Native => None,
+        Backend::Hlo => {
+            let entry = artifact.context("hlo backend requires a resolved artifact")?;
+            let mut engine = Engine::cpu()?;
+            engine.load(&entry)?;
+            // pin loop-invariant operands on device
+            let p = blk.p();
+            let n = blk.n();
+            engine.cache_buffer("a", blk.a.as_slice(), &[p, n])?;
+            let (x, scalar) = match method {
+                Method::Apc { .. } | Method::Consensus => {
+                    let gamma = match method {
+                        Method::Apc { gamma, .. } => gamma,
+                        _ => 1.0,
+                    };
+                    let ginv = blk.gram_chol.inverse();
+                    engine.cache_buffer("ginv", ginv.as_slice(), &[p, p])?;
+                    let x0 = match &native {
+                        LocalState::Apc(l) => l.x.clone(),
+                        _ => unreachable!("apc state for apc method"),
+                    };
+                    (Some(x0), Some(gamma))
+                }
+                Method::Dgd { .. } | Method::Nag { .. } | Method::Hbm { .. } => {
+                    engine.cache_buffer("b", &blk.b, &[p])?;
+                    (None, None)
+                }
+                Method::Cimmino { .. } => {
+                    let ginv = blk.gram_chol.inverse();
+                    engine.cache_buffer("ginv", ginv.as_slice(), &[p, p])?;
+                    engine.cache_buffer("b", &blk.b, &[p])?;
+                    (None, None)
+                }
+                Method::Admm { xi } => {
+                    // sginv = (ξI + A Aᵀ)⁻¹ ; atb = Aᵀ b
+                    let mut g = blk.a.gram_rows();
+                    for i in 0..p {
+                        g[(i, i)] += xi;
+                    }
+                    let sginv = crate::linalg::Cholesky::new(&g)
+                        .context("ξI + AAᵀ not SPD")?
+                        .inverse();
+                    engine.cache_buffer("sginv", sginv.as_slice(), &[p, p])?;
+                    let atb = blk.a.tr_matvec(&blk.b);
+                    engine.cache_buffer("atb", &atb, &[n])?;
+                    (None, Some(xi))
+                }
+            };
+            Some(HloState { engine, entry, x, scalar })
+        }
+    };
+
+    while let Ok(msg) = rx.recv() {
+        let (seq, input) = match msg {
+            ToWorker::Stop => break,
+            ToWorker::Round { seq, input } => (seq, input),
+        };
+
+        let injected = match straggler {
+            Some(s) if rng.uniform() < s.prob => {
+                std::thread::sleep(std::time::Duration::from_micros(s.delay_us));
+                s.delay_us
+            }
+            _ => 0,
+        };
+
+        let t0 = Instant::now();
+        let output = match hlo.as_mut() {
+            None => native_round(&blk, &mut native, &input),
+            Some(h) => hlo_round(&blk, h, &input)?,
+        };
+        let compute_ns = t0.elapsed().as_nanos() as u64;
+
+        if tx
+            .send(FromWorker { worker: index, seq, output, compute_ns, injected_delay_us: injected })
+            .is_err()
+        {
+            break; // master gone
+        }
+    }
+    Ok(())
+}
+
+fn build_native_state(blk: &MachineBlock, method: Method) -> Result<LocalState> {
+    Ok(match method {
+        Method::Apc { gamma, .. } => LocalState::Apc(ApcLocal::new(blk, gamma)?),
+        Method::Consensus => LocalState::Apc(ApcLocal::new(blk, 1.0)?),
+        Method::Dgd { .. } | Method::Nag { .. } | Method::Hbm { .. } => {
+            LocalState::Grad(GradLocal::new(blk), vec![0.0; blk.n()])
+        }
+        Method::Cimmino { .. } => LocalState::Cimmino(CimminoLocal::new(blk), vec![0.0; blk.n()]),
+        Method::Admm { xi } => LocalState::Admm(AdmmLocal::new(blk, xi)?, vec![0.0; blk.n()]),
+    })
+}
+
+fn native_round(blk: &MachineBlock, state: &mut LocalState, input: &[f64]) -> Vec<f64> {
+    match state {
+        LocalState::Apc(local) => {
+            local.step(blk, input);
+            local.x.clone()
+        }
+        LocalState::Grad(local, buf) => {
+            local.partial_grad(blk, input, buf);
+            buf.clone()
+        }
+        LocalState::Cimmino(local, buf) => {
+            local.step(blk, input, buf);
+            buf.clone()
+        }
+        LocalState::Admm(local, buf) => {
+            local.step(blk, input, buf);
+            buf.clone()
+        }
+    }
+}
+
+fn hlo_round(blk: &MachineBlock, h: &mut HloState, input: &[f64]) -> Result<Vec<f64>> {
+    let n = blk.n();
+    let out = match h.entry.step.as_str() {
+        "apc_worker" => {
+            let x = h.x.as_ref().expect("apc hlo state has x");
+            let gamma = [h.scalar.expect("gamma")];
+            let outs = h.engine.execute(
+                &h.entry,
+                &[
+                    TensorArg::Cached("a"),
+                    TensorArg::Cached("ginv"),
+                    TensorArg::Host(x, &[n]),
+                    TensorArg::Host(input, &[n]),
+                    TensorArg::Host(&gamma, &[]),
+                ],
+            )?;
+            let x_new = outs.into_iter().next().expect("one output");
+            h.x = Some(x_new.clone());
+            x_new
+        }
+        "grad_worker" => h
+            .engine
+            .execute(
+                &h.entry,
+                &[TensorArg::Cached("a"), TensorArg::Cached("b"), TensorArg::Host(input, &[n])],
+            )?
+            .remove(0),
+        "cimmino_worker" => h
+            .engine
+            .execute(
+                &h.entry,
+                &[
+                    TensorArg::Cached("a"),
+                    TensorArg::Cached("ginv"),
+                    TensorArg::Cached("b"),
+                    TensorArg::Host(input, &[n]),
+                ],
+            )?
+            .remove(0),
+        "admm_worker" => {
+            let xi = [h.scalar.expect("xi")];
+            h.engine
+                .execute(
+                    &h.entry,
+                    &[
+                        TensorArg::Cached("a"),
+                        TensorArg::Cached("sginv"),
+                        TensorArg::Cached("atb"),
+                        TensorArg::Host(input, &[n]),
+                        TensorArg::Host(&xi, &[]),
+                    ],
+                )?
+                .remove(0)
+        }
+        other => anyhow::bail!("worker has no rule for artifact step {:?}", other),
+    };
+    Ok(out)
+}

@@ -1,0 +1,9 @@
+//! Deterministic random generation: RNG, samplers, and the benchmark
+//! problem suite (including the spectrum-matched Matrix-Market surrogates
+//! described in DESIGN.md §6).
+
+pub mod problems;
+pub mod rng;
+
+pub use problems::{BuiltProblem, Problem};
+pub use rng::Pcg64;

@@ -1,0 +1,45 @@
+//! # apc — Accelerated Projection-Based Consensus
+//!
+//! Production-grade reproduction of *"Distributed Solution of Large-Scale
+//! Linear Systems via Accelerated Projection-Based Consensus"*
+//! (Azizan-Ruhi, Lahouti, Avestimehr, Hassibi, 2017).
+//!
+//! The crate solves `Ax = b` with a taskmaster and `m` workers, each
+//! holding a row block `[A_i, b_i]`:
+//!
+//! ```text
+//! worker i :  x_i ← x_i + γ P_i (x̄ − x_i)        P_i = I − A_iᵀ(A_iA_iᵀ)⁻¹A_i
+//! master   :  x̄   ← (η/m) Σ x_i + (1−η) x̄
+//! ```
+//!
+//! and ships every baseline the paper compares against (DGD, D-NAG, D-HBM,
+//! block Cimmino, modified ADMM, vanilla projection consensus, and the §6
+//! distributed preconditioning), an analytical rates module implementing
+//! Theorem 1 and Table 1, a thread-based taskmaster/worker coordinator,
+//! and a PJRT runtime that executes the JAX/Pallas-authored AOT artifacts
+//! on the worker hot path.
+//!
+//! ## Layering
+//!
+//! * substrates: [`linalg`], [`sparse`], [`mm`], [`gen`], [`bench`],
+//!   [`proptest`], [`config`], [`cli`]
+//! * the paper: [`partition`], [`solvers`], [`rates`]
+//! * the system: [`coordinator`] (L3), [`runtime`] (PJRT bridge to the
+//!   L2/L1 artifacts built by `python/compile/`)
+
+pub mod bench;
+pub mod cli;
+pub mod config;
+pub mod coordinator;
+pub mod gen;
+pub mod linalg;
+pub mod mm;
+pub mod partition;
+pub mod proptest;
+pub mod rates;
+pub mod runtime;
+pub mod solvers;
+pub mod sparse;
+
+/// Crate version, re-exported for CLI `--version`.
+pub const VERSION: &str = env!("CARGO_PKG_VERSION");

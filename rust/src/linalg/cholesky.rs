@@ -1,0 +1,176 @@
+//! Cholesky factorization of symmetric positive-definite matrices.
+//!
+//! Used for the per-machine Gram matrices `A_i A_iᵀ` (the cached factor that
+//! makes the APC projection an `O(pn)` per-iteration operation, §3.3 of the
+//! paper) and for the ADMM local solves `(A_iᵀA_i + ξI)⁻¹`.
+
+use super::dense::Mat;
+use anyhow::{bail, Result};
+
+/// Lower-triangular Cholesky factor `L` with `L Lᵀ = A`.
+#[derive(Clone, Debug)]
+pub struct Cholesky {
+    l: Mat,
+}
+
+impl Cholesky {
+    /// Factor an SPD matrix. Fails (does not panic) if a pivot is
+    /// non-positive — callers treat that as "matrix not SPD / rank
+    /// deficient partition" and surface it to the user.
+    pub fn new(a: &Mat) -> Result<Self> {
+        if !a.is_square() {
+            bail!("cholesky: matrix must be square, got {}x{}", a.rows(), a.cols());
+        }
+        let n = a.rows();
+        let mut l = Mat::zeros(n, n);
+        for i in 0..n {
+            for j in 0..=i {
+                let mut s = a[(i, j)];
+                for k in 0..j {
+                    s -= l[(i, k)] * l[(j, k)];
+                }
+                if i == j {
+                    if s <= 0.0 {
+                        bail!(
+                            "cholesky: non-positive pivot {:.3e} at index {} (matrix not SPD)",
+                            s,
+                            i
+                        );
+                    }
+                    l[(i, j)] = s.sqrt();
+                } else {
+                    l[(i, j)] = s / l[(j, j)];
+                }
+            }
+        }
+        Ok(Cholesky { l })
+    }
+
+    /// Order of the factored matrix.
+    pub fn order(&self) -> usize {
+        self.l.rows()
+    }
+
+    /// The lower factor `L`.
+    pub fn l(&self) -> &Mat {
+        &self.l
+    }
+
+    /// Solve `A x = b` via forward + back substitution.
+    pub fn solve(&self, b: &[f64]) -> Vec<f64> {
+        let mut x = b.to_vec();
+        self.solve_in_place(&mut x);
+        x
+    }
+
+    /// In-place solve (hot path, zero alloc).
+    pub fn solve_in_place(&self, x: &mut [f64]) {
+        let n = self.order();
+        assert_eq!(x.len(), n, "cholesky solve: dimension mismatch");
+        // forward: L y = b
+        for i in 0..n {
+            let row = self.l.row(i);
+            let mut s = x[i];
+            for k in 0..i {
+                s -= row[k] * x[k];
+            }
+            x[i] = s / row[i];
+        }
+        // backward: Lᵀ x = y
+        for i in (0..n).rev() {
+            let mut s = x[i];
+            for k in i + 1..n {
+                s -= self.l[(k, i)] * x[k];
+            }
+            x[i] = s / self.l[(i, i)];
+        }
+    }
+
+    /// Explicit inverse `A⁻¹` (solve against the identity, column by
+    /// column). Used only at setup time to bake worker-side operands for
+    /// the HLO artifacts; never on the per-iteration path.
+    pub fn inverse(&self) -> Mat {
+        let n = self.order();
+        let mut inv = Mat::zeros(n, n);
+        let mut e = vec![0.0; n];
+        for j in 0..n {
+            e.fill(0.0);
+            e[j] = 1.0;
+            self.solve_in_place(&mut e);
+            for i in 0..n {
+                inv[(i, j)] = e[i];
+            }
+        }
+        inv
+    }
+
+    /// log(det A) = 2 Σ log L_ii, overflow-safe.
+    pub fn log_det(&self) -> f64 {
+        (0..self.order()).map(|i| self.l[(i, i)].ln()).sum::<f64>() * 2.0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::vector::max_abs_diff;
+
+    fn spd3() -> Mat {
+        // A = Bᵀ B + I with B fixed — guaranteed SPD.
+        let b = Mat::from_rows(&[
+            vec![1.0, 2.0, 0.5],
+            vec![-1.0, 0.3, 2.0],
+            vec![0.7, -0.2, 1.1],
+        ]);
+        let mut a = b.gram_cols();
+        for i in 0..3 {
+            a[(i, i)] += 1.0;
+        }
+        a
+    }
+
+    #[test]
+    fn factor_reconstructs() {
+        let a = spd3();
+        let ch = Cholesky::new(&a).unwrap();
+        let rec = ch.l().matmul(&ch.l().transpose());
+        assert!(rec.sub(&a).max_abs() < 1e-12);
+    }
+
+    #[test]
+    fn solve_round_trip() {
+        let a = spd3();
+        let ch = Cholesky::new(&a).unwrap();
+        let xtrue = vec![1.0, -2.0, 3.0];
+        let b = a.matvec(&xtrue);
+        let x = ch.solve(&b);
+        assert!(max_abs_diff(&x, &xtrue) < 1e-12);
+    }
+
+    #[test]
+    fn inverse_is_inverse() {
+        let a = spd3();
+        let inv = Cholesky::new(&a).unwrap().inverse();
+        let prod = a.matmul(&inv);
+        assert!(prod.sub(&Mat::eye(3)).max_abs() < 1e-12);
+    }
+
+    #[test]
+    fn rejects_non_spd() {
+        let mut a = Mat::eye(3);
+        a[(2, 2)] = -1.0;
+        assert!(Cholesky::new(&a).is_err());
+    }
+
+    #[test]
+    fn rejects_non_square() {
+        let a = Mat::zeros(2, 3);
+        assert!(Cholesky::new(&a).is_err());
+    }
+
+    #[test]
+    fn log_det_identity_is_zero() {
+        let ch = Cholesky::new(&Mat::eye(5)).unwrap();
+        assert!(ch.log_det().abs() < 1e-14);
+    }
+}

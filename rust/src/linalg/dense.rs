@@ -1,0 +1,409 @@
+//! Row-major dense matrix.
+//!
+//! `Mat` is the workhorse container for the whole stack: per-machine blocks
+//! `A_i`, Gram matrices, projection matrices in tests, and the spectrum
+//! analysis in `rates/`. Storage is a flat `Vec<f64>`, row-major, so a row
+//! slice is contiguous — matvec walks rows with `dot`, which is the layout
+//! the coordinator's hot path wants (each worker's `A_i` is a row block).
+
+use super::vector::dot;
+use std::fmt;
+
+/// Dense row-major f64 matrix.
+#[derive(Clone, PartialEq)]
+pub struct Mat {
+    rows: usize,
+    cols: usize,
+    data: Vec<f64>,
+}
+
+impl Mat {
+    /// Zero matrix of shape `rows × cols`.
+    pub fn zeros(rows: usize, cols: usize) -> Self {
+        Mat { rows, cols, data: vec![0.0; rows * cols] }
+    }
+
+    /// Identity of order `n`.
+    pub fn eye(n: usize) -> Self {
+        let mut m = Mat::zeros(n, n);
+        for i in 0..n {
+            m[(i, i)] = 1.0;
+        }
+        m
+    }
+
+    /// Build from a flat row-major buffer. Panics if sizes disagree.
+    pub fn from_vec(rows: usize, cols: usize, data: Vec<f64>) -> Self {
+        assert_eq!(data.len(), rows * cols, "from_vec: size mismatch");
+        Mat { rows, cols, data }
+    }
+
+    /// Build from nested rows (test convenience).
+    pub fn from_rows(rows: &[Vec<f64>]) -> Self {
+        let r = rows.len();
+        let c = if r == 0 { 0 } else { rows[0].len() };
+        let mut data = Vec::with_capacity(r * c);
+        for row in rows {
+            assert_eq!(row.len(), c, "from_rows: ragged rows");
+            data.extend_from_slice(row);
+        }
+        Mat { rows: r, cols: c, data }
+    }
+
+    /// Diagonal matrix from the given entries.
+    pub fn from_diag(d: &[f64]) -> Self {
+        let mut m = Mat::zeros(d.len(), d.len());
+        for (i, &v) in d.iter().enumerate() {
+            m[(i, i)] = v;
+        }
+        m
+    }
+
+    pub fn rows(&self) -> usize {
+        self.rows
+    }
+
+    pub fn cols(&self) -> usize {
+        self.cols
+    }
+
+    pub fn is_square(&self) -> bool {
+        self.rows == self.cols
+    }
+
+    /// Contiguous row slice.
+    #[inline]
+    pub fn row(&self, i: usize) -> &[f64] {
+        &self.data[i * self.cols..(i + 1) * self.cols]
+    }
+
+    /// Mutable contiguous row slice.
+    #[inline]
+    pub fn row_mut(&mut self, i: usize) -> &mut [f64] {
+        &mut self.data[i * self.cols..(i + 1) * self.cols]
+    }
+
+    /// Copy of column `j`.
+    pub fn col(&self, j: usize) -> Vec<f64> {
+        (0..self.rows).map(|i| self[(i, j)]).collect()
+    }
+
+    /// Flat row-major view of the storage (used by the PJRT literal bridge).
+    pub fn as_slice(&self) -> &[f64] {
+        &self.data
+    }
+
+    /// Flat mutable view.
+    pub fn as_mut_slice(&mut self) -> &mut [f64] {
+        &mut self.data
+    }
+
+    /// Consume into the flat buffer.
+    pub fn into_vec(self) -> Vec<f64> {
+        self.data
+    }
+
+    /// `y = A x`.
+    pub fn matvec(&self, x: &[f64]) -> Vec<f64> {
+        assert_eq!(x.len(), self.cols, "matvec: dimension mismatch");
+        let mut y = vec![0.0; self.rows];
+        self.matvec_into(x, &mut y);
+        y
+    }
+
+    /// `y = A x` into a caller-provided buffer (hot path: zero alloc).
+    #[inline]
+    pub fn matvec_into(&self, x: &[f64], y: &mut [f64]) {
+        assert_eq!(x.len(), self.cols, "matvec_into: dimension mismatch");
+        assert_eq!(y.len(), self.rows, "matvec_into: output mismatch");
+        for i in 0..self.rows {
+            y[i] = dot(self.row(i), x);
+        }
+    }
+
+    /// `y = Aᵀ x` without forming the transpose.
+    pub fn tr_matvec(&self, x: &[f64]) -> Vec<f64> {
+        let mut y = vec![0.0; self.cols];
+        self.tr_matvec_into(x, &mut y);
+        y
+    }
+
+    /// `y = Aᵀ x` into a caller-provided buffer. Row-major friendly:
+    /// accumulates row-by-row so the inner loop is contiguous.
+    #[inline]
+    pub fn tr_matvec_into(&self, x: &[f64], y: &mut [f64]) {
+        assert_eq!(x.len(), self.rows, "tr_matvec_into: dimension mismatch");
+        assert_eq!(y.len(), self.cols, "tr_matvec_into: output mismatch");
+        y.fill(0.0);
+        for i in 0..self.rows {
+            let xi = x[i];
+            if xi == 0.0 {
+                continue;
+            }
+            let row = self.row(i);
+            for j in 0..self.cols {
+                y[j] += xi * row[j];
+            }
+        }
+    }
+
+    /// Matrix product `A·B`. Blocked i-k-j loop order (row-major friendly).
+    pub fn matmul(&self, b: &Mat) -> Mat {
+        assert_eq!(self.cols, b.rows, "matmul: inner dimension mismatch");
+        let mut c = Mat::zeros(self.rows, b.cols);
+        for i in 0..self.rows {
+            let arow = self.row(i);
+            // split borrows: write row i of c while reading rows of b
+            let crow = &mut c.data[i * b.cols..(i + 1) * b.cols];
+            for (k, &aik) in arow.iter().enumerate() {
+                if aik == 0.0 {
+                    continue;
+                }
+                let brow = b.row(k);
+                for j in 0..b.cols {
+                    crow[j] += aik * brow[j];
+                }
+            }
+        }
+        c
+    }
+
+    /// Explicit transpose.
+    pub fn transpose(&self) -> Mat {
+        let mut t = Mat::zeros(self.cols, self.rows);
+        for i in 0..self.rows {
+            for j in 0..self.cols {
+                t[(j, i)] = self[(i, j)];
+            }
+        }
+        t
+    }
+
+    /// Gram matrix `A Aᵀ` (shape rows × rows), exploiting symmetry.
+    pub fn gram_rows(&self) -> Mat {
+        let mut g = Mat::zeros(self.rows, self.rows);
+        for i in 0..self.rows {
+            for j in i..self.rows {
+                let v = dot(self.row(i), self.row(j));
+                g[(i, j)] = v;
+                g[(j, i)] = v;
+            }
+        }
+        g
+    }
+
+    /// Gram matrix `Aᵀ A` (shape cols × cols), exploiting symmetry.
+    pub fn gram_cols(&self) -> Mat {
+        let mut g = Mat::zeros(self.cols, self.cols);
+        for r in 0..self.rows {
+            let row = self.row(r);
+            for i in 0..self.cols {
+                let ri = row[i];
+                if ri == 0.0 {
+                    continue;
+                }
+                for j in i..self.cols {
+                    g.data[i * self.cols + j] += ri * row[j];
+                }
+            }
+        }
+        for i in 0..self.cols {
+            for j in 0..i {
+                g[(i, j)] = g[(j, i)];
+            }
+        }
+        g
+    }
+
+    /// `A + B`.
+    pub fn add(&self, b: &Mat) -> Mat {
+        assert_eq!((self.rows, self.cols), (b.rows, b.cols), "add: shape mismatch");
+        let data = self.data.iter().zip(&b.data).map(|(x, y)| x + y).collect();
+        Mat { rows: self.rows, cols: self.cols, data }
+    }
+
+    /// `A − B`.
+    pub fn sub(&self, b: &Mat) -> Mat {
+        assert_eq!((self.rows, self.cols), (b.rows, b.cols), "sub: shape mismatch");
+        let data = self.data.iter().zip(&b.data).map(|(x, y)| x - y).collect();
+        Mat { rows: self.rows, cols: self.cols, data }
+    }
+
+    /// `s·A`.
+    pub fn scaled(&self, s: f64) -> Mat {
+        let data = self.data.iter().map(|x| s * x).collect();
+        Mat { rows: self.rows, cols: self.cols, data }
+    }
+
+    /// In-place `A ← A + s·B`.
+    pub fn axpy_mat(&mut self, s: f64, b: &Mat) {
+        assert_eq!((self.rows, self.cols), (b.rows, b.cols), "axpy_mat: shape mismatch");
+        for (x, y) in self.data.iter_mut().zip(&b.data) {
+            *x += s * y;
+        }
+    }
+
+    /// Extract the row block `[r0, r1)` as a new matrix.
+    pub fn row_block(&self, r0: usize, r1: usize) -> Mat {
+        assert!(r0 <= r1 && r1 <= self.rows, "row_block: bad range");
+        Mat {
+            rows: r1 - r0,
+            cols: self.cols,
+            data: self.data[r0 * self.cols..r1 * self.cols].to_vec(),
+        }
+    }
+
+    /// Stack matrices vertically (all must share `cols`).
+    pub fn vstack(blocks: &[Mat]) -> Mat {
+        assert!(!blocks.is_empty(), "vstack: empty");
+        let cols = blocks[0].cols;
+        let rows = blocks.iter().map(|b| b.rows).sum();
+        let mut data = Vec::with_capacity(rows * cols);
+        for b in blocks {
+            assert_eq!(b.cols, cols, "vstack: column mismatch");
+            data.extend_from_slice(&b.data);
+        }
+        Mat { rows, cols, data }
+    }
+
+    /// Frobenius norm.
+    pub fn fro_norm(&self) -> f64 {
+        super::vector::nrm2(&self.data)
+    }
+
+    /// Max |entry| — used in approximate-equality assertions.
+    pub fn max_abs(&self) -> f64 {
+        self.data.iter().fold(0.0, |m, v| m.max(v.abs()))
+    }
+
+    /// Is `self` symmetric to within `tol` (absolute, scaled by max_abs)?
+    pub fn is_symmetric(&self, tol: f64) -> bool {
+        if !self.is_square() {
+            return false;
+        }
+        let scale = self.max_abs().max(1.0);
+        for i in 0..self.rows {
+            for j in 0..i {
+                if (self[(i, j)] - self[(j, i)]).abs() > tol * scale {
+                    return false;
+                }
+            }
+        }
+        true
+    }
+}
+
+impl std::ops::Index<(usize, usize)> for Mat {
+    type Output = f64;
+    #[inline]
+    fn index(&self, (i, j): (usize, usize)) -> &f64 {
+        debug_assert!(i < self.rows && j < self.cols);
+        &self.data[i * self.cols + j]
+    }
+}
+
+impl std::ops::IndexMut<(usize, usize)> for Mat {
+    #[inline]
+    fn index_mut(&mut self, (i, j): (usize, usize)) -> &mut f64 {
+        debug_assert!(i < self.rows && j < self.cols);
+        &mut self.data[i * self.cols + j]
+    }
+}
+
+impl fmt::Debug for Mat {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        writeln!(f, "Mat {}x{} [", self.rows, self.cols)?;
+        let show = self.rows.min(8);
+        for i in 0..show {
+            let cols = self.cols.min(8);
+            let row: Vec<String> = (0..cols).map(|j| format!("{:>11.4e}", self[(i, j)])).collect();
+            let ell = if self.cols > 8 { " …" } else { "" };
+            writeln!(f, "  [{}{}]", row.join(", "), ell)?;
+        }
+        if self.rows > show {
+            writeln!(f, "  …")?;
+        }
+        write!(f, "]")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::vector::max_abs_diff;
+
+    fn a23() -> Mat {
+        Mat::from_rows(&[vec![1.0, 2.0, 3.0], vec![4.0, 5.0, 6.0]])
+    }
+
+    #[test]
+    fn matvec_basic() {
+        let y = a23().matvec(&[1.0, 0.0, -1.0]);
+        assert_eq!(y, vec![-2.0, -2.0]);
+    }
+
+    #[test]
+    fn tr_matvec_matches_explicit_transpose() {
+        let a = a23();
+        let x = [2.0, -3.0];
+        let y1 = a.tr_matvec(&x);
+        let y2 = a.transpose().matvec(&x);
+        assert!(max_abs_diff(&y1, &y2) < 1e-15);
+    }
+
+    #[test]
+    fn matmul_identity() {
+        let a = a23();
+        let i3 = Mat::eye(3);
+        assert_eq!(a.matmul(&i3), a);
+    }
+
+    #[test]
+    fn matmul_known() {
+        let a = Mat::from_rows(&[vec![1.0, 2.0], vec![3.0, 4.0]]);
+        let b = Mat::from_rows(&[vec![0.0, 1.0], vec![1.0, 0.0]]);
+        let c = a.matmul(&b);
+        assert_eq!(c, Mat::from_rows(&[vec![2.0, 1.0], vec![4.0, 3.0]]));
+    }
+
+    #[test]
+    fn gram_rows_matches_matmul() {
+        let a = a23();
+        let g = a.gram_rows();
+        let g2 = a.matmul(&a.transpose());
+        assert!(g.sub(&g2).max_abs() < 1e-14);
+    }
+
+    #[test]
+    fn gram_cols_matches_matmul() {
+        let a = a23();
+        let g = a.gram_cols();
+        let g2 = a.transpose().matmul(&a);
+        assert!(g.sub(&g2).max_abs() < 1e-14);
+    }
+
+    #[test]
+    fn vstack_and_row_block_roundtrip() {
+        let a = a23();
+        let b = Mat::from_rows(&[vec![7.0, 8.0, 9.0]]);
+        let s = Mat::vstack(&[a.clone(), b.clone()]);
+        assert_eq!(s.rows(), 3);
+        assert_eq!(s.row_block(0, 2), a);
+        assert_eq!(s.row_block(2, 3), b);
+    }
+
+    #[test]
+    fn symmetry_check() {
+        assert!(Mat::eye(4).is_symmetric(1e-14));
+        assert!(!a23().is_symmetric(1e-14));
+        let mut m = Mat::eye(3);
+        m[(0, 1)] = 1e-3;
+        assert!(!m.is_symmetric(1e-8));
+    }
+
+    #[test]
+    fn transpose_involution() {
+        let a = a23();
+        assert_eq!(a.transpose().transpose(), a);
+    }
+}

@@ -1,0 +1,404 @@
+//! Symmetric eigensolver and spectrum utilities.
+//!
+//! The paper's entire analysis is spectral: the convergence rates of every
+//! method are functions of the eigenvalues of `X = (1/m) Σ Aᵢᵀ(AᵢAᵢᵀ)⁻¹Aᵢ`
+//! and of `AᵀA` — both symmetric PSD — and the modified-ADMM iteration
+//! matrix `(ξ/m) Σ (AᵢᵀAᵢ+ξI)⁻¹` is symmetric PSD too. So a dense
+//! symmetric eigensolver (Householder tridiagonalization + implicit-shift
+//! QL, the classic `tred2`/`tqli` pair) covers every rate computation in
+//! `rates/`, and power iteration covers the cases where only the extreme
+//! eigenvalue is needed.
+
+use super::dense::Mat;
+use anyhow::{bail, Result};
+
+/// Eigen decomposition of a symmetric matrix: `A = V diag(λ) Vᵀ`.
+#[derive(Clone, Debug)]
+pub struct SymEigen {
+    /// Eigenvalues in ascending order.
+    pub values: Vec<f64>,
+    /// Column `j` of `vectors` is the eigenvector for `values[j]`.
+    pub vectors: Mat,
+}
+
+/// Householder reduction of a real symmetric matrix to tridiagonal form,
+/// accumulating the orthogonal transform (tred2).
+fn tridiagonalize(a: &Mat) -> (Mat, Vec<f64>, Vec<f64>) {
+    let n = a.rows();
+    let mut z = a.clone();
+    let mut d = vec![0.0; n]; // diagonal
+    let mut e = vec![0.0; n]; // off-diagonal (e[0] unused)
+
+    for i in (1..n).rev() {
+        let l = i; // columns 0..l of row i participate
+        let mut h = 0.0;
+        if l > 1 {
+            let mut scale = 0.0;
+            for k in 0..l {
+                scale += z[(i, k)].abs();
+            }
+            if scale == 0.0 {
+                e[i] = z[(i, l - 1)];
+            } else {
+                for k in 0..l {
+                    z[(i, k)] /= scale;
+                    h += z[(i, k)] * z[(i, k)];
+                }
+                let mut f = z[(i, l - 1)];
+                let g = if f >= 0.0 { -h.sqrt() } else { h.sqrt() };
+                e[i] = scale * g;
+                h -= f * g;
+                z[(i, l - 1)] = f - g;
+                let mut tau = 0.0;
+                for j in 0..l {
+                    z[(j, i)] = z[(i, j)] / h;
+                    // form element of A·u
+                    let mut g2 = 0.0;
+                    for k in 0..=j {
+                        g2 += z[(j, k)] * z[(i, k)];
+                    }
+                    for k in j + 1..l {
+                        g2 += z[(k, j)] * z[(i, k)];
+                    }
+                    e[j] = g2 / h;
+                    tau += e[j] * z[(i, j)];
+                }
+                let hh = tau / (h + h);
+                for j in 0..l {
+                    f = z[(i, j)];
+                    let g3 = e[j] - hh * f;
+                    e[j] = g3;
+                    for k in 0..=j {
+                        let zik = z[(i, k)];
+                        let ek = e[k];
+                        z[(j, k)] -= f * ek + g3 * zik;
+                    }
+                }
+            }
+        } else {
+            e[i] = z[(i, l - 1)];
+        }
+        d[i] = h;
+    }
+
+    d[0] = 0.0;
+    e[0] = 0.0;
+    // accumulate transformation
+    for i in 0..n {
+        if d[i] != 0.0 {
+            for j in 0..i {
+                let mut g = 0.0;
+                for k in 0..i {
+                    g += z[(i, k)] * z[(k, j)];
+                }
+                for k in 0..i {
+                    let zki = z[(k, i)];
+                    z[(k, j)] -= g * zki;
+                }
+            }
+        }
+        d[i] = z[(i, i)];
+        z[(i, i)] = 1.0;
+        for j in 0..i {
+            z[(j, i)] = 0.0;
+            z[(i, j)] = 0.0;
+        }
+    }
+    (z, d, e)
+}
+
+/// Implicit-shift QL on a symmetric tridiagonal, updating the accumulated
+/// orthogonal matrix (tqli). `d` = diagonal, `e` = subdiagonal in `e[1..]`.
+fn tql_implicit(d: &mut [f64], e: &mut [f64], z: &mut Mat) -> Result<()> {
+    let n = d.len();
+    // shift off-diagonals down
+    for i in 1..n {
+        e[i - 1] = e[i];
+    }
+    e[n - 1] = 0.0;
+
+    for l in 0..n {
+        let mut iter = 0;
+        loop {
+            // find a negligible subdiagonal element
+            let mut m = l;
+            while m < n - 1 {
+                let dd = d[m].abs() + d[m + 1].abs();
+                if e[m].abs() <= f64::EPSILON * dd {
+                    break;
+                }
+                m += 1;
+            }
+            if m == l {
+                break;
+            }
+            iter += 1;
+            if iter > 50 {
+                bail!("sym_eigen: QL failed to converge at index {}", l);
+            }
+            // form shift
+            let mut g = (d[l + 1] - d[l]) / (2.0 * e[l]);
+            let mut r = g.hypot(1.0);
+            g = d[m] - d[l] + e[l] / (g + if g >= 0.0 { r.abs() } else { -r.abs() });
+            let (mut s, mut c) = (1.0f64, 1.0f64);
+            let mut p = 0.0f64;
+            for i in (l..m).rev() {
+                let mut f = s * e[i];
+                let b = c * e[i];
+                r = f.hypot(g);
+                e[i + 1] = r;
+                if r == 0.0 {
+                    d[i + 1] -= p;
+                    e[m] = 0.0;
+                    break;
+                }
+                s = f / r;
+                c = g / r;
+                g = d[i + 1] - p;
+                r = (d[i] - g) * s + 2.0 * c * b;
+                p = s * r;
+                d[i + 1] = g + p;
+                g = c * r - b;
+                // accumulate eigenvectors
+                for k in 0..n {
+                    f = z[(k, i + 1)];
+                    z[(k, i + 1)] = s * z[(k, i)] + c * f;
+                    z[(k, i)] = c * z[(k, i)] - s * f;
+                }
+            }
+            if r == 0.0 && m > l + 1 {
+                continue;
+            }
+            d[l] -= p;
+            e[l] = g;
+            e[m] = 0.0;
+        }
+    }
+    Ok(())
+}
+
+/// Full eigen decomposition of a symmetric matrix. Fails if the input is
+/// not (numerically) symmetric or QL stalls.
+pub fn sym_eigen(a: &Mat) -> Result<SymEigen> {
+    if !a.is_square() {
+        bail!("sym_eigen: matrix must be square");
+    }
+    if !a.is_symmetric(1e-8) {
+        bail!("sym_eigen: matrix is not symmetric to 1e-8 (relative)");
+    }
+    let n = a.rows();
+    if n == 0 {
+        return Ok(SymEigen { values: vec![], vectors: Mat::zeros(0, 0) });
+    }
+    if n == 1 {
+        return Ok(SymEigen { values: vec![a[(0, 0)]], vectors: Mat::eye(1) });
+    }
+    let (mut z, mut d, mut e) = tridiagonalize(a);
+    tql_implicit(&mut d, &mut e, &mut z)?;
+    // sort ascending, permuting vector columns
+    let mut idx: Vec<usize> = (0..n).collect();
+    idx.sort_by(|&i, &j| d[i].partial_cmp(&d[j]).unwrap());
+    let values: Vec<f64> = idx.iter().map(|&i| d[i]).collect();
+    let mut vectors = Mat::zeros(n, n);
+    for (new_j, &old_j) in idx.iter().enumerate() {
+        for i in 0..n {
+            vectors[(i, new_j)] = z[(i, old_j)];
+        }
+    }
+    Ok(SymEigen { values, vectors })
+}
+
+impl SymEigen {
+    /// Largest eigenvalue.
+    pub fn lambda_max(&self) -> f64 {
+        *self.values.last().expect("empty spectrum")
+    }
+
+    /// Smallest eigenvalue.
+    pub fn lambda_min(&self) -> f64 {
+        self.values[0]
+    }
+
+    /// Condition number `λ_max / λ_min` of a PSD matrix; returns `inf` when
+    /// numerically singular.
+    pub fn cond(&self) -> f64 {
+        let lmin = self.lambda_min();
+        let lmax = self.lambda_max();
+        if lmin <= 0.0 || lmin < 1e-300 * lmax {
+            f64::INFINITY
+        } else {
+            lmax / lmin
+        }
+    }
+
+    /// `A^{-1/2}` for an SPD matrix (used by the §6 distributed
+    /// preconditioning: each worker forms `(AᵢAᵢᵀ)^{-1/2}`).
+    pub fn inv_sqrt(&self) -> Result<Mat> {
+        self.function(|l| {
+            if l <= 0.0 {
+                None
+            } else {
+                Some(1.0 / l.sqrt())
+            }
+        })
+    }
+
+    /// Apply a scalar function to the spectrum: `V f(Λ) Vᵀ`. `f` returning
+    /// `None` signals an invalid eigenvalue for the function's domain.
+    pub fn function(&self, f: impl Fn(f64) -> Option<f64>) -> Result<Mat> {
+        let n = self.values.len();
+        let mut fl = vec![0.0; n];
+        for (i, &l) in self.values.iter().enumerate() {
+            fl[i] = match f(l) {
+                Some(v) => v,
+                None => bail!("matrix function undefined at eigenvalue {:.3e}", l),
+            };
+        }
+        // V diag(fl) Vᵀ
+        let mut scaled = self.vectors.clone();
+        for i in 0..n {
+            for j in 0..n {
+                scaled[(i, j)] *= fl[j];
+            }
+        }
+        Ok(scaled.matmul(&self.vectors.transpose()))
+    }
+}
+
+/// Power iteration for the dominant eigenvalue (by magnitude) of a linear
+/// operator given as a closure. Deterministic start vector. Returns
+/// `(lambda, iterations)`.
+pub fn power_iteration(
+    n: usize,
+    mut apply: impl FnMut(&[f64], &mut [f64]),
+    tol: f64,
+    max_iter: usize,
+) -> (f64, usize) {
+    let mut v = vec![0.0; n];
+    // deterministic pseudo-random start (avoids orthogonal-start stalls)
+    let mut s = 0x9e3779b97f4a7c15u64;
+    for x in v.iter_mut() {
+        s = s.wrapping_mul(6364136223846793005).wrapping_add(1442695040888963407);
+        *x = ((s >> 11) as f64 / (1u64 << 53) as f64) - 0.5;
+    }
+    let mut w = vec![0.0; n];
+    let mut lambda = 0.0;
+    for it in 1..=max_iter {
+        apply(&v, &mut w);
+        let nw = super::vector::nrm2(&w);
+        if nw == 0.0 {
+            return (0.0, it);
+        }
+        let new_lambda = super::vector::dot(&v, &w);
+        for i in 0..n {
+            v[i] = w[i] / nw;
+        }
+        if (new_lambda - lambda).abs() <= tol * new_lambda.abs().max(1e-300) {
+            return (new_lambda, it);
+        }
+        lambda = new_lambda;
+    }
+    (lambda, max_iter)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::vector::nrm2;
+
+    fn sym4() -> Mat {
+        // symmetric with known-ish structure
+        let b = Mat::from_rows(&[
+            vec![1.0, 2.0, 0.0, -1.0],
+            vec![0.5, -1.0, 1.0, 0.3],
+            vec![2.0, 0.1, 0.4, 1.0],
+        ]);
+        b.gram_cols() // 4x4 PSD
+    }
+
+    #[test]
+    fn eigen_reconstructs() {
+        let a = sym4();
+        let e = sym_eigen(&a).unwrap();
+        let rec = e.vectors.matmul(&Mat::from_diag(&e.values)).matmul(&e.vectors.transpose());
+        assert!(rec.sub(&a).max_abs() < 1e-10);
+    }
+
+    #[test]
+    fn eigen_vectors_orthonormal() {
+        let e = sym_eigen(&sym4()).unwrap();
+        let vtv = e.vectors.gram_cols();
+        assert!(vtv.sub(&Mat::eye(4)).max_abs() < 1e-10);
+    }
+
+    #[test]
+    fn eigen_residuals_small() {
+        let a = sym4();
+        let e = sym_eigen(&a).unwrap();
+        for j in 0..4 {
+            let v = e.vectors.col(j);
+            let av = a.matvec(&v);
+            let res: Vec<f64> = av.iter().zip(&v).map(|(x, y)| x - e.values[j] * y).collect();
+            assert!(nrm2(&res) < 1e-10, "residual for eigenpair {}", j);
+        }
+    }
+
+    #[test]
+    fn eigen_diag_exact() {
+        let a = Mat::from_diag(&[3.0, -1.0, 2.0]);
+        let e = sym_eigen(&a).unwrap();
+        assert!((e.values[0] + 1.0).abs() < 1e-12);
+        assert!((e.values[1] - 2.0).abs() < 1e-12);
+        assert!((e.values[2] - 3.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn eigen_values_sorted() {
+        let e = sym_eigen(&sym4()).unwrap();
+        for w in e.values.windows(2) {
+            assert!(w[0] <= w[1] + 1e-15);
+        }
+    }
+
+    #[test]
+    fn inv_sqrt_squares_to_inverse() {
+        let mut a = sym4();
+        for i in 0..4 {
+            a[(i, i)] += 1.0; // make strictly PD
+        }
+        let e = sym_eigen(&a).unwrap();
+        let s = e.inv_sqrt().unwrap();
+        // s * a * s = I
+        let prod = s.matmul(&a).matmul(&s);
+        assert!(prod.sub(&Mat::eye(4)).max_abs() < 1e-9);
+    }
+
+    #[test]
+    fn rejects_asymmetric() {
+        let a = Mat::from_rows(&[vec![1.0, 2.0], vec![0.0, 1.0]]);
+        assert!(sym_eigen(&a).is_err());
+    }
+
+    #[test]
+    fn power_iteration_matches_eigen() {
+        let mut a = sym4();
+        for i in 0..4 {
+            a[(i, i)] += 0.5;
+        }
+        let e = sym_eigen(&a).unwrap();
+        let (lmax, _) = power_iteration(4, |x, y| a.matvec_into(x, y), 1e-12, 10_000);
+        assert!((lmax - e.lambda_max()).abs() < 1e-8 * e.lambda_max());
+    }
+
+    #[test]
+    fn eigen_1x1_and_2x2() {
+        let a = Mat::from_rows(&[vec![7.0]]);
+        let e = sym_eigen(&a).unwrap();
+        assert_eq!(e.values, vec![7.0]);
+
+        let b = Mat::from_rows(&[vec![2.0, 1.0], vec![1.0, 2.0]]);
+        let e2 = sym_eigen(&b).unwrap();
+        assert!((e2.values[0] - 1.0).abs() < 1e-12);
+        assert!((e2.values[1] - 3.0).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,144 @@
+//! LU factorization with partial pivoting.
+//!
+//! Used for the "ground truth" direct solves that benchmark problems are
+//! validated against (`x* = A⁻¹ b`), and for general nonsymmetric solves in
+//! tests. Not on any iterative hot path.
+
+use super::dense::Mat;
+use anyhow::{bail, Result};
+
+/// `P A = L U` with partial pivoting. `lu` stores both factors compactly.
+#[derive(Clone, Debug)]
+pub struct Lu {
+    lu: Mat,
+    /// Row permutation: `piv[i]` is the original row now at position i.
+    piv: Vec<usize>,
+    /// Sign of the permutation (for determinants).
+    sign: f64,
+}
+
+impl Lu {
+    pub fn new(a: &Mat) -> Result<Self> {
+        if !a.is_square() {
+            bail!("lu: matrix must be square, got {}x{}", a.rows(), a.cols());
+        }
+        let n = a.rows();
+        let mut lu = a.clone();
+        let mut piv: Vec<usize> = (0..n).collect();
+        let mut sign = 1.0;
+        for k in 0..n {
+            // pivot: largest |entry| in column k at/below diagonal
+            let mut pk = k;
+            let mut pmax = lu[(k, k)].abs();
+            for i in k + 1..n {
+                let v = lu[(i, k)].abs();
+                if v > pmax {
+                    pmax = v;
+                    pk = i;
+                }
+            }
+            if pmax == 0.0 {
+                bail!("lu: exactly singular at column {}", k);
+            }
+            if pk != k {
+                for j in 0..n {
+                    let tmp = lu[(k, j)];
+                    lu[(k, j)] = lu[(pk, j)];
+                    lu[(pk, j)] = tmp;
+                }
+                piv.swap(k, pk);
+                sign = -sign;
+            }
+            let pivot = lu[(k, k)];
+            for i in k + 1..n {
+                let m = lu[(i, k)] / pivot;
+                lu[(i, k)] = m;
+                if m != 0.0 {
+                    for j in k + 1..n {
+                        let v = lu[(k, j)];
+                        lu[(i, j)] -= m * v;
+                    }
+                }
+            }
+        }
+        Ok(Lu { lu, piv, sign })
+    }
+
+    pub fn order(&self) -> usize {
+        self.lu.rows()
+    }
+
+    /// Solve `A x = b`.
+    pub fn solve(&self, b: &[f64]) -> Vec<f64> {
+        let n = self.order();
+        assert_eq!(b.len(), n, "lu solve: dimension mismatch");
+        // apply permutation
+        let mut x: Vec<f64> = self.piv.iter().map(|&p| b[p]).collect();
+        // forward: L y = Pb (unit lower)
+        for i in 0..n {
+            let row = self.lu.row(i);
+            let mut s = x[i];
+            for k in 0..i {
+                s -= row[k] * x[k];
+            }
+            x[i] = s;
+        }
+        // backward: U x = y
+        for i in (0..n).rev() {
+            let row = self.lu.row(i);
+            let mut s = x[i];
+            for k in i + 1..n {
+                s -= row[k] * x[k];
+            }
+            x[i] = s / row[i];
+        }
+        x
+    }
+
+    /// Determinant (sign · Π U_ii). Overflows for large n; test-only use.
+    pub fn det(&self) -> f64 {
+        let mut d = self.sign;
+        for i in 0..self.order() {
+            d *= self.lu[(i, i)];
+        }
+        d
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::vector::max_abs_diff;
+
+    #[test]
+    fn solve_round_trip() {
+        let a = Mat::from_rows(&[
+            vec![0.0, 2.0, 1.0], // zero pivot forces a row swap
+            vec![3.0, -1.0, 2.0],
+            vec![1.0, 0.5, -1.0],
+        ]);
+        let xtrue = vec![1.0, -2.0, 0.5];
+        let b = a.matvec(&xtrue);
+        let x = Lu::new(&a).unwrap().solve(&b);
+        assert!(max_abs_diff(&x, &xtrue) < 1e-12);
+    }
+
+    #[test]
+    fn det_known() {
+        let a = Mat::from_rows(&[vec![2.0, 0.0], vec![0.0, 3.0]]);
+        assert!((Lu::new(&a).unwrap().det() - 6.0).abs() < 1e-14);
+        let b = Mat::from_rows(&[vec![0.0, 1.0], vec![1.0, 0.0]]);
+        assert!((Lu::new(&b).unwrap().det() + 1.0).abs() < 1e-14);
+    }
+
+    #[test]
+    fn rejects_singular() {
+        let a = Mat::from_rows(&[vec![1.0, 2.0], vec![2.0, 4.0]]);
+        assert!(Lu::new(&a).is_err());
+    }
+
+    #[test]
+    fn rejects_non_square() {
+        assert!(Lu::new(&Mat::zeros(2, 3)).is_err());
+    }
+}

@@ -1,0 +1,31 @@
+//! Dense linear algebra substrate.
+//!
+//! The image has no BLAS/LAPACK bindings and no crates beyond `xla` +
+//! `anyhow`, so everything the paper's analysis needs is implemented here
+//! from scratch in f64:
+//!
+//! * [`Mat`] — row-major dense matrix with matvec / matmul / transpose,
+//! * [`cholesky`] — SPD factorization, solves, inverse, inverse square root,
+//! * [`qr`] — Householder QR (used for orthogonal sampling + least squares),
+//! * [`lu`] — partial-pivot LU (general solves, determinant sanity),
+//! * [`eig`] — symmetric eigensolver (tridiagonalization + implicit QL),
+//!   power iteration, and spectrum utilities (condition numbers).
+//!
+//! Numerical conventions: all algorithms are deterministic, tolerance
+//! constants live next to their use sites, and failures (non-SPD input,
+//! singular pivot) are `anyhow::Error`s rather than panics so solver code
+//! can surface them through the coordinator.
+
+pub mod cholesky;
+pub mod dense;
+pub mod eig;
+pub mod lu;
+pub mod qr;
+pub mod vector;
+
+pub use cholesky::Cholesky;
+pub use dense::Mat;
+pub use eig::{power_iteration, sym_eigen, SymEigen};
+pub use lu::Lu;
+pub use qr::Qr;
+pub use vector::{axpy, dot, nrm2, relative_error, scale, sub};

@@ -1,0 +1,291 @@
+//! Householder QR factorization.
+//!
+//! Two roles in this repo:
+//! * sampling random orthogonal matrices for the prescribed-spectrum
+//!   surrogate problems (`gen/problems.rs`) — Q from the QR of a gaussian
+//!   matrix (with sign fix) is Haar-distributed,
+//! * least-squares solves for tall systems (`examples/least_squares.rs`)
+//!   and the per-machine initial solutions `x_i(0)` in minimum-norm form.
+
+use super::dense::Mat;
+use anyhow::{bail, Result};
+
+/// Compact Householder QR: `A = Q R`, `A` is `m × n` with `m ≥ n`.
+///
+/// Stores the Householder vectors in the lower trapezoid of `qr` and the
+/// upper triangle of `R` in its upper triangle, LAPACK-style.
+#[derive(Clone, Debug)]
+pub struct Qr {
+    qr: Mat,
+    /// `tau[k]` is the scaling of the k-th Householder reflector.
+    tau: Vec<f64>,
+}
+
+impl Qr {
+    /// Factor `a` (requires rows ≥ cols).
+    pub fn new(a: &Mat) -> Result<Self> {
+        let (m, n) = (a.rows(), a.cols());
+        if m < n {
+            bail!("qr: need rows >= cols, got {}x{}", m, n);
+        }
+        let mut qr = a.clone();
+        let mut tau = vec![0.0; n];
+        for k in 0..n {
+            // norm of the k-th column below the diagonal
+            let mut nrm = 0.0f64;
+            for i in k..m {
+                nrm = nrm.hypot(qr[(i, k)]);
+            }
+            if nrm == 0.0 {
+                tau[k] = 0.0;
+                continue;
+            }
+            // reflector v = x ± ‖x‖ e1, normalized so v[k] = 1
+            let alpha = if qr[(k, k)] >= 0.0 { -nrm } else { nrm };
+            let v0 = qr[(k, k)] - alpha;
+            for i in k + 1..m {
+                qr[(i, k)] /= v0;
+            }
+            tau[k] = -v0 / alpha;
+            qr[(k, k)] = alpha;
+            // apply to remaining columns: A ← (I − τ v vᵀ) A
+            for j in k + 1..n {
+                let mut s = qr[(k, j)];
+                for i in k + 1..m {
+                    s += qr[(i, k)] * qr[(i, j)];
+                }
+                s *= tau[k];
+                qr[(k, j)] -= s;
+                for i in k + 1..m {
+                    let vik = qr[(i, k)];
+                    qr[(i, j)] -= s * vik;
+                }
+            }
+        }
+        Ok(Qr { qr, tau })
+    }
+
+    /// Apply `Qᵀ` to a vector of length `m` in place.
+    fn apply_qt(&self, x: &mut [f64]) {
+        let (m, n) = (self.qr.rows(), self.qr.cols());
+        assert_eq!(x.len(), m);
+        for k in 0..n {
+            if self.tau[k] == 0.0 {
+                continue;
+            }
+            let mut s = x[k];
+            for i in k + 1..m {
+                s += self.qr[(i, k)] * x[i];
+            }
+            s *= self.tau[k];
+            x[k] -= s;
+            for i in k + 1..m {
+                x[i] -= s * self.qr[(i, k)];
+            }
+        }
+    }
+
+    /// Apply `Q` to a vector of length `m` in place.
+    fn apply_q(&self, x: &mut [f64]) {
+        let (m, n) = (self.qr.rows(), self.qr.cols());
+        assert_eq!(x.len(), m);
+        for k in (0..n).rev() {
+            if self.tau[k] == 0.0 {
+                continue;
+            }
+            let mut s = x[k];
+            for i in k + 1..m {
+                s += self.qr[(i, k)] * x[i];
+            }
+            s *= self.tau[k];
+            x[k] -= s;
+            for i in k + 1..m {
+                x[i] -= s * self.qr[(i, k)];
+            }
+        }
+    }
+
+    /// The thin orthogonal factor `Q` (`m × n`).
+    pub fn thin_q(&self) -> Mat {
+        let (m, n) = (self.qr.rows(), self.qr.cols());
+        let mut q = Mat::zeros(m, n);
+        let mut e = vec![0.0; m];
+        for j in 0..n {
+            e.fill(0.0);
+            e[j] = 1.0;
+            self.apply_q(&mut e);
+            for i in 0..m {
+                q[(i, j)] = e[i];
+            }
+        }
+        q
+    }
+
+    /// The full orthogonal factor `Q` (`m × m`). Used to sample Haar
+    /// orthogonal matrices.
+    pub fn full_q(&self) -> Mat {
+        let m = self.qr.rows();
+        let mut q = Mat::zeros(m, m);
+        let mut e = vec![0.0; m];
+        for j in 0..m {
+            e.fill(0.0);
+            e[j] = 1.0;
+            self.apply_q(&mut e);
+            for i in 0..m {
+                q[(i, j)] = e[i];
+            }
+        }
+        q
+    }
+
+    /// The upper-triangular factor `R` (`n × n`).
+    pub fn r(&self) -> Mat {
+        let n = self.qr.cols();
+        let mut r = Mat::zeros(n, n);
+        for i in 0..n {
+            for j in i..n {
+                r[(i, j)] = self.qr[(i, j)];
+            }
+        }
+        r
+    }
+
+    /// Diagonal of `R` (signs used for Haar correction; magnitudes for rank
+    /// checks).
+    pub fn r_diag(&self) -> Vec<f64> {
+        (0..self.qr.cols()).map(|k| self.qr[(k, k)]).collect()
+    }
+
+    /// Least-squares solve `min ‖Ax − b‖`. Fails if `R` is numerically
+    /// singular.
+    pub fn solve_ls(&self, b: &[f64]) -> Result<Vec<f64>> {
+        let (m, n) = (self.qr.rows(), self.qr.cols());
+        assert_eq!(b.len(), m, "qr solve: rhs length mismatch");
+        let mut y = b.to_vec();
+        self.apply_qt(&mut y);
+        // back substitution on the leading n×n of R
+        let mut x = vec![0.0; n];
+        for i in (0..n).rev() {
+            let mut s = y[i];
+            for j in i + 1..n {
+                s -= self.qr[(i, j)] * x[j];
+            }
+            let d = self.qr[(i, i)];
+            if d.abs() < 1e-300 {
+                bail!("qr: singular R (pivot {} ~ 0)", i);
+            }
+            x[i] = s / d;
+        }
+        Ok(x)
+    }
+
+    /// Minimum-norm solution of the *underdetermined* system `Mx = b`
+    /// (`M` is `p × n`, `p ≤ n`): factor `Mᵀ = QR`, then
+    /// `x = Q R⁻ᵀ b`. This is how each worker computes its feasible
+    /// initial point `x_i(0)` (paper, Algorithm 1 initialization).
+    pub fn min_norm_solve(m_mat: &Mat, b: &[f64]) -> Result<Vec<f64>> {
+        let p = m_mat.rows();
+        let n = m_mat.cols();
+        if p > n {
+            bail!("min_norm_solve: system must be underdetermined (p ≤ n)");
+        }
+        assert_eq!(b.len(), p, "min_norm_solve: rhs length mismatch");
+        let qr = Qr::new(&m_mat.transpose())?;
+        // forward substitution: Rᵀ y = b
+        let mut y = vec![0.0; p];
+        for i in 0..p {
+            let mut s = b[i];
+            for j in 0..i {
+                s -= qr.qr[(j, i)] * y[j];
+            }
+            let d = qr.qr[(i, i)];
+            if d.abs() < 1e-300 {
+                bail!("min_norm_solve: rank-deficient block (pivot {} ~ 0)", i);
+            }
+            y[i] = s / d;
+        }
+        // x = Q [y; 0]
+        let mut x = vec![0.0; n];
+        x[..p].copy_from_slice(&y);
+        qr.apply_q(&mut x);
+        Ok(x)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::vector::{max_abs_diff, nrm2, sub};
+
+    fn a43() -> Mat {
+        Mat::from_rows(&[
+            vec![1.0, 2.0, 3.0],
+            vec![-1.0, 0.5, 2.0],
+            vec![0.3, -0.7, 1.0],
+            vec![2.0, 1.0, -1.0],
+        ])
+    }
+
+    #[test]
+    fn qr_reconstructs() {
+        let a = a43();
+        let qr = Qr::new(&a).unwrap();
+        let rec = qr.thin_q().matmul(&qr.r());
+        assert!(rec.sub(&a).max_abs() < 1e-12);
+    }
+
+    #[test]
+    fn thin_q_orthonormal() {
+        let qr = Qr::new(&a43()).unwrap();
+        let q = qr.thin_q();
+        let qtq = q.gram_cols();
+        assert!(qtq.sub(&Mat::eye(3)).max_abs() < 1e-12);
+    }
+
+    #[test]
+    fn full_q_orthogonal() {
+        let qr = Qr::new(&a43()).unwrap();
+        let q = qr.full_q();
+        let qtq = q.gram_cols();
+        assert!(qtq.sub(&Mat::eye(4)).max_abs() < 1e-12);
+    }
+
+    #[test]
+    fn least_squares_square_exact() {
+        let a = Mat::from_rows(&[vec![2.0, 1.0], vec![1.0, 3.0]]);
+        let xtrue = vec![1.0, -1.0];
+        let b = a.matvec(&xtrue);
+        let x = Qr::new(&a).unwrap().solve_ls(&b).unwrap();
+        assert!(max_abs_diff(&x, &xtrue) < 1e-12);
+    }
+
+    #[test]
+    fn least_squares_residual_orthogonal() {
+        // residual of LS solution must be orthogonal to the column space
+        let a = a43();
+        let b = vec![1.0, 2.0, 3.0, 4.0];
+        let x = Qr::new(&a).unwrap().solve_ls(&b).unwrap();
+        let r = sub(&b, &a.matvec(&x));
+        let atr = a.tr_matvec(&r);
+        assert!(nrm2(&atr) < 1e-10);
+    }
+
+    #[test]
+    fn min_norm_is_feasible_and_in_row_space() {
+        let m = Mat::from_rows(&[vec![1.0, 2.0, 3.0, 4.0], vec![0.0, 1.0, -1.0, 2.0]]);
+        let b = vec![5.0, -1.0];
+        let x = Qr::min_norm_solve(&m, &b).unwrap();
+        // feasible
+        assert!(max_abs_diff(&m.matvec(&x), &b) < 1e-12);
+        // minimum norm ⇒ x ∈ rowspace(M) ⇒ P_null x = 0, i.e. x = Mᵀ(MMᵀ)⁻¹Mx
+        let g = m.gram_rows();
+        let ch = crate::linalg::Cholesky::new(&g).unwrap();
+        let proj = m.tr_matvec(&ch.solve(&m.matvec(&x)));
+        assert!(max_abs_diff(&proj, &x) < 1e-12);
+    }
+
+    #[test]
+    fn rejects_fat_matrix() {
+        assert!(Qr::new(&Mat::zeros(2, 3)).is_err());
+    }
+}

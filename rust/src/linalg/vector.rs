@@ -1,0 +1,155 @@
+//! Vector primitives shared across the solver stack.
+//!
+//! These are the innermost loops of every iterative method here; they are
+//! written as straight slices so LLVM auto-vectorizes them (checked with
+//! `--emit asm` during the perf pass — see EXPERIMENTS.md §Perf).
+
+/// Dot product `xᵀy`. Panics on length mismatch (programming error).
+#[inline]
+pub fn dot(x: &[f64], y: &[f64]) -> f64 {
+    assert_eq!(x.len(), y.len(), "dot: length mismatch");
+    // 4-way unrolled accumulation: keeps f64 adds in independent chains so
+    // the compiler can use SIMD adds without -ffast-math reassociation.
+    let mut acc = [0.0f64; 4];
+    let chunks = x.len() / 4;
+    for c in 0..chunks {
+        let i = c * 4;
+        acc[0] += x[i] * y[i];
+        acc[1] += x[i + 1] * y[i + 1];
+        acc[2] += x[i + 2] * y[i + 2];
+        acc[3] += x[i + 3] * y[i + 3];
+    }
+    let mut s = (acc[0] + acc[1]) + (acc[2] + acc[3]);
+    for i in chunks * 4..x.len() {
+        s += x[i] * y[i];
+    }
+    s
+}
+
+/// Euclidean norm `‖x‖₂` with overflow-safe scaling for extreme inputs.
+#[inline]
+pub fn nrm2(x: &[f64]) -> f64 {
+    let mut scale = 0.0f64;
+    let mut ssq = 1.0f64;
+    for &v in x {
+        if v != 0.0 {
+            let a = v.abs();
+            if scale < a {
+                ssq = 1.0 + ssq * (scale / a).powi(2);
+                scale = a;
+            } else {
+                ssq += (a / scale).powi(2);
+            }
+        }
+    }
+    scale * ssq.sqrt()
+}
+
+/// `y ← a·x + y`.
+#[inline]
+pub fn axpy(a: f64, x: &[f64], y: &mut [f64]) {
+    assert_eq!(x.len(), y.len(), "axpy: length mismatch");
+    for i in 0..x.len() {
+        y[i] += a * x[i];
+    }
+}
+
+/// `x ← a·x`.
+#[inline]
+pub fn scale(a: f64, x: &mut [f64]) {
+    for v in x.iter_mut() {
+        *v *= a;
+    }
+}
+
+/// Element-wise difference `x − y` as a new vector.
+#[inline]
+pub fn sub(x: &[f64], y: &[f64]) -> Vec<f64> {
+    assert_eq!(x.len(), y.len(), "sub: length mismatch");
+    x.iter().zip(y).map(|(a, b)| a - b).collect()
+}
+
+/// Element-wise sum `x + y` as a new vector.
+#[inline]
+pub fn add(x: &[f64], y: &[f64]) -> Vec<f64> {
+    assert_eq!(x.len(), y.len(), "add: length mismatch");
+    x.iter().zip(y).map(|(a, b)| a + b).collect()
+}
+
+/// Relative error `‖x − x*‖ / ‖x*‖` — the paper's Figure-2 y-axis.
+#[inline]
+pub fn relative_error(x: &[f64], xstar: &[f64]) -> f64 {
+    let denom = nrm2(xstar);
+    if denom == 0.0 {
+        return nrm2(x);
+    }
+    nrm2(&sub(x, xstar)) / denom
+}
+
+/// Maximum absolute difference, for exactness assertions in tests.
+#[inline]
+pub fn max_abs_diff(x: &[f64], y: &[f64]) -> f64 {
+    assert_eq!(x.len(), y.len(), "max_abs_diff: length mismatch");
+    x.iter()
+        .zip(y)
+        .map(|(a, b)| (a - b).abs())
+        .fold(0.0, f64::max)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn dot_matches_naive() {
+        let x: Vec<f64> = (0..37).map(|i| i as f64 * 0.5 - 3.0).collect();
+        let y: Vec<f64> = (0..37).map(|i| (i as f64).sin()).collect();
+        let naive: f64 = x.iter().zip(&y).map(|(a, b)| a * b).sum();
+        assert!((dot(&x, &y) - naive).abs() < 1e-12 * naive.abs().max(1.0));
+    }
+
+    #[test]
+    fn dot_empty_is_zero() {
+        assert_eq!(dot(&[], &[]), 0.0);
+    }
+
+    #[test]
+    fn nrm2_simple() {
+        assert!((nrm2(&[3.0, 4.0]) - 5.0).abs() < 1e-15);
+    }
+
+    #[test]
+    fn nrm2_overflow_safe() {
+        let big = 1e200;
+        let n = nrm2(&[big, big]);
+        assert!((n - big * std::f64::consts::SQRT_2).abs() / n < 1e-15);
+    }
+
+    #[test]
+    fn nrm2_underflow_safe() {
+        let tiny = 1e-200;
+        let n = nrm2(&[tiny, tiny]);
+        assert!((n - tiny * std::f64::consts::SQRT_2).abs() / n < 1e-15);
+    }
+
+    #[test]
+    fn axpy_and_scale() {
+        let x = [1.0, 2.0, 3.0];
+        let mut y = [10.0, 20.0, 30.0];
+        axpy(2.0, &x, &mut y);
+        assert_eq!(y, [12.0, 24.0, 36.0]);
+        scale(0.5, &mut y);
+        assert_eq!(y, [6.0, 12.0, 18.0]);
+    }
+
+    #[test]
+    fn relative_error_at_solution_is_zero() {
+        let x = [1.0, -2.0, 0.5];
+        assert_eq!(relative_error(&x, &x), 0.0);
+    }
+
+    #[test]
+    fn relative_error_zero_reference() {
+        assert!((relative_error(&[3.0, 4.0], &[0.0, 0.0]) - 5.0).abs() < 1e-15);
+    }
+}

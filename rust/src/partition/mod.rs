@@ -1,0 +1,414 @@
+//! Row partitioning of `Ax = b` across machines, with the per-machine
+//! cached factorizations that make every method's iteration `O(pn)`.
+//!
+//! Paper §2: the master splits the `N` equations into `m` disjoint row
+//! blocks `[A_i, b_i]`, `A_i ∈ R^{p×n}` with `p = N/m` (we also support
+//! uneven splits — the analysis only needs each block to be full row
+//! rank). Paper §3.3: each machine pre-factors its Gram matrix
+//! `A_i A_iᵀ` once (`O(p³)` setup), after which a projection application
+//! costs two matvecs + one `p×p` solve.
+
+use crate::linalg::{sym_eigen, Cholesky, Mat, Qr};
+use anyhow::{bail, Context, Result};
+
+/// One machine's share of the system plus its cached factorizations.
+#[derive(Clone, Debug)]
+pub struct MachineBlock {
+    /// Machine index (0-based).
+    pub index: usize,
+    /// Global row range `[row0, row1)` this block came from.
+    pub row0: usize,
+    pub row1: usize,
+    /// `A_i ∈ R^{p×n}`.
+    pub a: Mat,
+    /// `b_i ∈ R^p`.
+    pub b: Vec<f64>,
+    /// Cholesky of the row Gram `A_i A_iᵀ` (the `O(p³)` one-time cost).
+    pub gram_chol: Cholesky,
+}
+
+impl MachineBlock {
+    /// Build a block, factoring its Gram matrix. Fails if the block is
+    /// row-rank deficient (the paper assumes full-row-rank blocks; a
+    /// deficient block means the partition put dependent equations
+    /// together — callers can re-partition or perturb).
+    pub fn new(index: usize, row0: usize, a: Mat, b: Vec<f64>) -> Result<Self> {
+        if a.rows() == 0 {
+            bail!("machine {}: empty row block", index);
+        }
+        if a.rows() > a.cols() {
+            bail!(
+                "machine {}: block is overdetermined ({}x{}); need p ≤ n",
+                index,
+                a.rows(),
+                a.cols()
+            );
+        }
+        assert_eq!(a.rows(), b.len(), "block rhs length mismatch");
+        let gram = a.gram_rows();
+        let gram_chol = Cholesky::new(&gram)
+            .with_context(|| format!("machine {}: A_i A_iᵀ not SPD (rank-deficient block?)", index))?;
+        let row1 = row0 + a.rows();
+        Ok(MachineBlock { index, row0, row1, a, b, gram_chol })
+    }
+
+    /// Rows in this block (`p`).
+    pub fn p(&self) -> usize {
+        self.a.rows()
+    }
+
+    /// Unknowns (`n`).
+    pub fn n(&self) -> usize {
+        self.a.cols()
+    }
+
+    /// Feasible initial point: the minimum-norm solution of `A_i x = b_i`
+    /// (Algorithm 1's initialization; any feasible point works, min-norm
+    /// is deterministic and cheap given the QR machinery).
+    pub fn initial_solution(&self) -> Result<Vec<f64>> {
+        Qr::min_norm_solve(&self.a, &self.b)
+    }
+
+    /// Apply the nullspace projection `P_i v = v − A_iᵀ (A_iA_iᵀ)⁻¹ A_i v`
+    /// using the cached factor — `O(pn)` per call, no `n×n` matrix ever
+    /// formed. Scratch buffers are caller-provided so the hot loop is
+    /// allocation-free.
+    pub fn project_into(&self, v: &[f64], scratch_p: &mut Vec<f64>, out: &mut [f64]) {
+        let p = self.p();
+        scratch_p.resize(p, 0.0);
+        // t = A_i v
+        self.a.matvec_into(v, scratch_p);
+        // t ← (A_iA_iᵀ)⁻¹ t
+        self.gram_chol.solve_in_place(scratch_p);
+        // out = v − A_iᵀ t
+        self.a.tr_matvec_into(scratch_p, out);
+        for k in 0..v.len() {
+            out[k] = v[k] - out[k];
+        }
+    }
+
+    /// Dense projector `P_i` (tests/analysis only — `O(pn²)`).
+    pub fn projector(&self) -> Mat {
+        let n = self.n();
+        let mut p_mat = Mat::eye(n);
+        let mut scratch = Vec::new();
+        let mut col = vec![0.0; n];
+        let mut e = vec![0.0; n];
+        for j in 0..n {
+            e.fill(0.0);
+            e[j] = 1.0;
+            self.project_into(&e, &mut scratch, &mut col);
+            for i in 0..n {
+                p_mat[(i, j)] = col[i];
+            }
+        }
+        p_mat
+    }
+
+    /// The pseudoinverse application `A_i⁺ r = A_iᵀ (A_iA_iᵀ)⁻¹ r` (block
+    /// Cimmino's per-machine step).
+    pub fn pinv_apply(&self, r: &[f64]) -> Vec<f64> {
+        let mut t = r.to_vec();
+        self.gram_chol.solve_in_place(&mut t);
+        self.a.tr_matvec(&t)
+    }
+
+    /// `(A_i A_iᵀ)^{-1/2} A_i` and the matching rhs transform — the §6
+    /// distributed preconditioning. `O(p³ + p²n)` one-time cost, done
+    /// locally by each machine.
+    pub fn preconditioned(&self) -> Result<(Mat, Vec<f64>)> {
+        let gram = self.a.gram_rows();
+        let eig = sym_eigen(&gram).context("preconditioning: gram eigensolve")?;
+        let inv_sqrt = eig.inv_sqrt().context("preconditioning: gram not SPD")?;
+        let c = inv_sqrt.matmul(&self.a);
+        let d = inv_sqrt.matvec(&self.b);
+        Ok((c, d))
+    }
+}
+
+/// The partitioned system: all machine blocks plus global metadata.
+#[derive(Clone, Debug)]
+pub struct PartitionedSystem {
+    pub blocks: Vec<MachineBlock>,
+    /// Unknowns.
+    pub n: usize,
+    /// Total equations.
+    pub n_rows: usize,
+}
+
+impl PartitionedSystem {
+    /// Even split into `m` blocks (paper's setting; when `m ∤ N` the first
+    /// `N mod m` blocks get one extra row).
+    pub fn split_even(a: &Mat, b: &[f64], m: usize) -> Result<Self> {
+        if m == 0 {
+            bail!("partition: need at least one machine");
+        }
+        if a.rows() < m {
+            bail!("partition: more machines ({}) than equations ({})", m, a.rows());
+        }
+        assert_eq!(a.rows(), b.len(), "partition: rhs length mismatch");
+        let base = a.rows() / m;
+        let extra = a.rows() % m;
+        let mut blocks = Vec::with_capacity(m);
+        let mut row = 0usize;
+        for i in 0..m {
+            let p = base + usize::from(i < extra);
+            let blk_a = a.row_block(row, row + p);
+            let blk_b = b[row..row + p].to_vec();
+            blocks.push(MachineBlock::new(i, row, blk_a, blk_b)?);
+            row += p;
+        }
+        Ok(PartitionedSystem { blocks, n: a.cols(), n_rows: a.rows() })
+    }
+
+    /// Split at explicit row boundaries (uneven loads, locality-aware
+    /// placement). `bounds` are the interior cut points, strictly
+    /// increasing in `(0, N)`.
+    pub fn split_at(a: &Mat, b: &[f64], bounds: &[usize]) -> Result<Self> {
+        assert_eq!(a.rows(), b.len(), "partition: rhs length mismatch");
+        let mut cuts = Vec::with_capacity(bounds.len() + 2);
+        cuts.push(0);
+        for &c in bounds {
+            if c == 0 || c >= a.rows() || Some(&c) <= cuts.last() {
+                bail!("partition: bad cut point {}", c);
+            }
+            cuts.push(c);
+        }
+        cuts.push(a.rows());
+        let mut blocks = Vec::with_capacity(cuts.len() - 1);
+        for i in 0..cuts.len() - 1 {
+            let (r0, r1) = (cuts[i], cuts[i + 1]);
+            blocks.push(MachineBlock::new(i, r0, a.row_block(r0, r1), b[r0..r1].to_vec())?);
+        }
+        Ok(PartitionedSystem { blocks, n: a.cols(), n_rows: a.rows() })
+    }
+
+    /// Machine count.
+    pub fn m(&self) -> usize {
+        self.blocks.len()
+    }
+
+    /// The matrix `X = (1/m) Σ A_iᵀ(A_iA_iᵀ)⁻¹A_i` whose spectrum drives
+    /// APC/Cimmino/consensus rates (Eq. 3). Dense `O(m·pn²)`; analysis
+    /// path only.
+    pub fn x_matrix(&self) -> Mat {
+        let n = self.n;
+        let mut x = Mat::zeros(n, n);
+        let mut scratch = Vec::new();
+        let mut proj = vec![0.0; n];
+        let mut e = vec![0.0; n];
+        for j in 0..n {
+            e.fill(0.0);
+            e[j] = 1.0;
+            // column j of X = (1/m) Σ (I − P_i) e_j
+            for blk in &self.blocks {
+                blk.project_into(&e, &mut scratch, &mut proj);
+                for i in 0..n {
+                    x[(i, j)] += (e[i] - proj[i]) / self.m() as f64;
+                }
+            }
+        }
+        // X is symmetric in exact arithmetic; symmetrize the numerical
+        // residue so downstream eigensolves see a clean input.
+        let xt = x.transpose();
+        x.axpy_mat(1.0, &xt);
+        x.scaled(0.5)
+    }
+
+    /// Global residual `‖Ax − b‖ / ‖b‖` evaluated block-wise.
+    pub fn relative_residual(&self, x: &[f64]) -> f64 {
+        let mut num = 0.0;
+        let mut den = 0.0;
+        for blk in &self.blocks {
+            let r = blk.a.matvec(x);
+            for (ri, bi) in r.iter().zip(&blk.b) {
+                num += (ri - bi) * (ri - bi);
+                den += bi * bi;
+            }
+        }
+        if den == 0.0 {
+            num.sqrt()
+        } else {
+            (num / den).sqrt()
+        }
+    }
+
+    /// Reassemble the full `A` (tests/analysis).
+    pub fn assemble_a(&self) -> Mat {
+        Mat::vstack(&self.blocks.iter().map(|b| b.a.clone()).collect::<Vec<_>>())
+    }
+
+    /// Reassemble the full `b`.
+    pub fn assemble_b(&self) -> Vec<f64> {
+        let mut b = Vec::with_capacity(self.n_rows);
+        for blk in &self.blocks {
+            b.extend_from_slice(&blk.b);
+        }
+        b
+    }
+
+    /// The §6-preconditioned system `Cx = d` as a new partitioned system
+    /// over the same machine layout.
+    pub fn preconditioned(&self) -> Result<PartitionedSystem> {
+        let mut blocks = Vec::with_capacity(self.m());
+        for blk in &self.blocks {
+            let (c, d) = blk.preconditioned()?;
+            blocks.push(MachineBlock::new(blk.index, blk.row0, c, d)?);
+        }
+        Ok(PartitionedSystem { blocks, n: self.n, n_rows: self.n_rows })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gen::problems::Problem;
+    use crate::linalg::vector::{max_abs_diff, nrm2};
+
+    fn small_system() -> (Mat, Vec<f64>) {
+        let p = Problem::standard_gaussian(24, 12, 4).build(17);
+        (p.a, p.b)
+    }
+
+    #[test]
+    fn even_split_covers_all_rows() {
+        let (a, b) = small_system();
+        let sys = PartitionedSystem::split_even(&a, &b, 4).unwrap();
+        assert_eq!(sys.m(), 4);
+        assert_eq!(sys.blocks.iter().map(|b| b.p()).sum::<usize>(), 24);
+        assert_eq!(sys.assemble_a(), a);
+        assert_eq!(sys.assemble_b(), b);
+    }
+
+    #[test]
+    fn uneven_split_when_m_divides_not() {
+        let (a, b) = small_system();
+        let sys = PartitionedSystem::split_even(&a, &b, 5).unwrap();
+        let sizes: Vec<usize> = sys.blocks.iter().map(|b| b.p()).collect();
+        assert_eq!(sizes, vec![5, 5, 5, 5, 4]);
+        assert_eq!(sys.assemble_a(), a);
+    }
+
+    #[test]
+    fn split_at_explicit_bounds() {
+        let (a, b) = small_system();
+        let sys = PartitionedSystem::split_at(&a, &b, &[3, 10, 18]).unwrap();
+        let sizes: Vec<usize> = sys.blocks.iter().map(|b| b.p()).collect();
+        assert_eq!(sizes, vec![3, 7, 8, 6]);
+        assert_eq!(sys.assemble_a(), a);
+    }
+
+    #[test]
+    fn split_at_rejects_bad_bounds() {
+        let (a, b) = small_system();
+        assert!(PartitionedSystem::split_at(&a, &b, &[0]).is_err());
+        assert!(PartitionedSystem::split_at(&a, &b, &[24]).is_err());
+        assert!(PartitionedSystem::split_at(&a, &b, &[10, 10]).is_err());
+        assert!(PartitionedSystem::split_at(&a, &b, &[10, 5]).is_err());
+    }
+
+    #[test]
+    fn overdetermined_block_rejected() {
+        let (a, b) = small_system();
+        // one machine with 24 rows > 12 cols
+        assert!(PartitionedSystem::split_even(&a, &b, 1).is_err());
+    }
+
+    #[test]
+    fn projector_is_projection_and_annihilated() {
+        let (a, b) = small_system();
+        let sys = PartitionedSystem::split_even(&a, &b, 4).unwrap();
+        for blk in &sys.blocks {
+            let p = blk.projector();
+            // P² = P
+            assert!(p.matmul(&p).sub(&p).max_abs() < 1e-10, "P_i not idempotent");
+            // A_i P = 0
+            assert!(blk.a.matmul(&p).max_abs() < 1e-10, "A_i P_i ≠ 0");
+            // symmetric
+            assert!(p.is_symmetric(1e-10));
+        }
+    }
+
+    #[test]
+    fn project_into_matches_dense_projector() {
+        let (a, b) = small_system();
+        let sys = PartitionedSystem::split_even(&a, &b, 3).unwrap();
+        let blk = &sys.blocks[1];
+        let v: Vec<f64> = (0..12).map(|i| (i as f64 * 0.37).sin()).collect();
+        let dense = blk.projector().matvec(&v);
+        let mut scratch = Vec::new();
+        let mut fast = vec![0.0; 12];
+        blk.project_into(&v, &mut scratch, &mut fast);
+        assert!(max_abs_diff(&dense, &fast) < 1e-11);
+    }
+
+    #[test]
+    fn initial_solution_is_feasible() {
+        let (a, b) = small_system();
+        let sys = PartitionedSystem::split_even(&a, &b, 4).unwrap();
+        for blk in &sys.blocks {
+            let x0 = blk.initial_solution().unwrap();
+            assert!(max_abs_diff(&blk.a.matvec(&x0), &blk.b) < 1e-10);
+        }
+    }
+
+    #[test]
+    fn x_matrix_is_avg_complement_of_projectors() {
+        let (a, b) = small_system();
+        let sys = PartitionedSystem::split_even(&a, &b, 4).unwrap();
+        let x = sys.x_matrix();
+        // X = I − (1/m) Σ P_i
+        let mut expect = Mat::eye(12);
+        for blk in &sys.blocks {
+            expect.axpy_mat(-1.0 / 4.0, &blk.projector());
+        }
+        assert!(x.sub(&expect).max_abs() < 1e-10);
+    }
+
+    #[test]
+    fn x_matrix_spectrum_in_unit_interval() {
+        let (a, b) = small_system();
+        let sys = PartitionedSystem::split_even(&a, &b, 4).unwrap();
+        let eig = crate::linalg::sym_eigen(&sys.x_matrix()).unwrap();
+        assert!(eig.lambda_min() > -1e-10);
+        assert!(eig.lambda_max() < 1.0 + 1e-10);
+    }
+
+    #[test]
+    fn pinv_apply_solves_consistent_system() {
+        let (a, b) = small_system();
+        let sys = PartitionedSystem::split_even(&a, &b, 4).unwrap();
+        let blk = &sys.blocks[0];
+        // A_i (A_i⁺ b_i) = b_i for full-row-rank A_i
+        let x = blk.pinv_apply(&blk.b);
+        assert!(max_abs_diff(&blk.a.matvec(&x), &blk.b) < 1e-10);
+    }
+
+    #[test]
+    fn relative_residual_zero_at_solution() {
+        let p = Problem::standard_gaussian(20, 20, 4).build(3);
+        let sys = PartitionedSystem::split_even(&p.a, &p.b, 4).unwrap();
+        assert!(sys.relative_residual(&p.x_star) < 1e-12);
+        let zero = vec![0.0; 20];
+        assert!(sys.relative_residual(&zero) > 0.5);
+    }
+
+    #[test]
+    fn preconditioned_blocks_have_orthonormal_rows() {
+        let (a, b) = small_system();
+        let sys = PartitionedSystem::split_even(&a, &b, 4).unwrap();
+        let pre = sys.preconditioned().unwrap();
+        for blk in &pre.blocks {
+            let g = blk.a.gram_rows();
+            assert!(g.sub(&Mat::eye(blk.p())).max_abs() < 1e-9, "C_i C_iᵀ ≠ I");
+        }
+        // preconditioned system has the same solution
+        let p = Problem::standard_gaussian(24, 12, 4).build(17);
+        let x = &p.x_star;
+        for blk in &pre.blocks {
+            let r = blk.a.matvec(x);
+            let diff: Vec<f64> = r.iter().zip(&blk.b).map(|(u, v)| u - v).collect();
+            assert!(nrm2(&diff) < 1e-9);
+        }
+    }
+}

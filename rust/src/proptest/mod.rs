@@ -1,0 +1,223 @@
+//! Minimal property-based testing framework (the image has no `proptest`
+//! crate).
+//!
+//! Provides seeded generators over the crate's own [`Pcg64`], a `forall`
+//! runner that reports the seed and generated case on failure (so any
+//! failure is reproducible by rerunning with that seed), and greedy
+//! shrinking for the numeric/vector generators. Used by
+//! `rust/tests/property.rs` for linalg/solver/coordinator invariants.
+
+use crate::gen::rng::Pcg64;
+
+/// A generator of test cases.
+pub trait Gen {
+    type Value: std::fmt::Debug + Clone;
+    fn generate(&self, rng: &mut Pcg64) -> Self::Value;
+
+    /// Candidate simplifications of a failing case (empty = atomic).
+    fn shrink(&self, value: &Self::Value) -> Vec<Self::Value> {
+        let _ = value;
+        Vec::new()
+    }
+}
+
+/// Uniform f64 in `[lo, hi)`.
+pub struct F64Range(pub f64, pub f64);
+
+impl Gen for F64Range {
+    type Value = f64;
+    fn generate(&self, rng: &mut Pcg64) -> f64 {
+        rng.uniform_in(self.0, self.1)
+    }
+    fn shrink(&self, v: &f64) -> Vec<f64> {
+        let mut out = Vec::new();
+        for cand in [0.0, 1.0, self.0, v / 2.0] {
+            if (self.0..self.1).contains(&cand) && cand.abs() < v.abs() {
+                out.push(cand);
+            }
+        }
+        out.dedup_by(|a, b| a == b);
+        out
+    }
+}
+
+/// Uniform usize in `[lo, hi]`.
+pub struct UsizeRange(pub usize, pub usize);
+
+impl Gen for UsizeRange {
+    type Value = usize;
+    fn generate(&self, rng: &mut Pcg64) -> usize {
+        self.0 + rng.below((self.1 - self.0 + 1) as u64) as usize
+    }
+    fn shrink(&self, v: &usize) -> Vec<usize> {
+        let mut out = Vec::new();
+        if *v > self.0 {
+            out.push(self.0);
+            out.push(self.0 + (v - self.0) / 2);
+        }
+        out.dedup();
+        out
+    }
+}
+
+/// Vector of standard normals with generated length.
+pub struct GaussianVec(pub UsizeRange);
+
+impl Gen for GaussianVec {
+    type Value = Vec<f64>;
+    fn generate(&self, rng: &mut Pcg64) -> Vec<f64> {
+        let len = self.0.generate(rng);
+        rng.gaussian_vec(len)
+    }
+    fn shrink(&self, v: &Vec<f64>) -> Vec<Vec<f64>> {
+        let mut out = Vec::new();
+        if v.len() > self.0 .0 {
+            out.push(v[..v.len() / 2.max(self.0 .0)].to_vec());
+            out.push(v[..self.0 .0].to_vec());
+        }
+        // zero out entries (simpler numerics)
+        if v.iter().any(|x| *x != 0.0) {
+            out.push(vec![0.0; v.len()]);
+        }
+        out
+    }
+}
+
+/// Pair of independent generators.
+pub struct Pair<A, B>(pub A, pub B);
+
+impl<A: Gen, B: Gen> Gen for Pair<A, B> {
+    type Value = (A::Value, B::Value);
+    fn generate(&self, rng: &mut Pcg64) -> Self::Value {
+        (self.0.generate(rng), self.1.generate(rng))
+    }
+    fn shrink(&self, (a, b): &Self::Value) -> Vec<Self::Value> {
+        let mut out: Vec<Self::Value> =
+            self.0.shrink(a).into_iter().map(|a2| (a2, b.clone())).collect();
+        out.extend(self.1.shrink(b).into_iter().map(|b2| (a.clone(), b2)));
+        out
+    }
+}
+
+/// Outcome of a property check.
+pub enum Outcome {
+    Pass,
+    /// Failure with a human-readable reason.
+    Fail(String),
+    /// Case rejected by a precondition (doesn't count toward the budget).
+    Discard,
+}
+
+impl From<bool> for Outcome {
+    fn from(ok: bool) -> Outcome {
+        if ok {
+            Outcome::Pass
+        } else {
+            Outcome::Fail("property returned false".into())
+        }
+    }
+}
+
+impl From<Result<(), String>> for Outcome {
+    fn from(r: Result<(), String>) -> Outcome {
+        match r {
+            Ok(()) => Outcome::Pass,
+            Err(e) => Outcome::Fail(e),
+        }
+    }
+}
+
+/// Run `cases` generated checks of `prop`; panics with a reproducible
+/// report (seed + minimal case) on failure.
+pub fn forall<G: Gen, O: Into<Outcome>>(
+    name: &str,
+    seed: u64,
+    cases: usize,
+    gen: &G,
+    mut prop: impl FnMut(&G::Value) -> O,
+) {
+    let mut rng = Pcg64::with_stream(seed, 0xfa11);
+    let mut executed = 0usize;
+    let mut attempts = 0usize;
+    while executed < cases {
+        attempts += 1;
+        if attempts > cases * 20 {
+            panic!("property {name:?}: too many discards ({attempts} attempts)");
+        }
+        let value = gen.generate(&mut rng);
+        match prop(&value).into() {
+            Outcome::Pass => executed += 1,
+            Outcome::Discard => continue,
+            Outcome::Fail(reason) => {
+                // greedy shrink
+                let mut best = value;
+                let mut best_reason = reason;
+                'shrinking: loop {
+                    for cand in gen.shrink(&best) {
+                        if let Outcome::Fail(r) = prop(&cand).into() {
+                            best = cand;
+                            best_reason = r;
+                            continue 'shrinking;
+                        }
+                    }
+                    break;
+                }
+                panic!(
+                    "property {name:?} failed (seed {seed}, case {executed}):\n  \
+                     minimal case: {best:?}\n  reason: {best_reason}"
+                );
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_passes() {
+        forall("abs-nonneg", 1, 200, &F64Range(-10.0, 10.0), |x| x.abs() >= 0.0);
+    }
+
+    #[test]
+    #[should_panic(expected = "minimal case")]
+    fn failing_property_reports_and_shrinks() {
+        forall("everything-small", 2, 200, &F64Range(0.0, 100.0), |x| *x < 1e9 && *x < 50.0);
+    }
+
+    #[test]
+    fn discards_do_not_count() {
+        let mut executed = 0;
+        forall("conditional", 3, 50, &UsizeRange(0, 100), |n| {
+            if n % 2 == 1 {
+                return Outcome::Discard;
+            }
+            executed += 1;
+            Outcome::Pass
+        });
+        assert_eq!(executed, 50);
+    }
+
+    #[test]
+    #[should_panic(expected = "too many discards")]
+    fn discard_storm_detected() {
+        forall("always-discard", 4, 10, &UsizeRange(0, 10), |_| Outcome::Discard);
+    }
+
+    #[test]
+    fn pair_and_vec_generators() {
+        forall(
+            "vec-len-bounds",
+            5,
+            100,
+            &Pair(GaussianVec(UsizeRange(1, 8)), F64Range(0.5, 2.0)),
+            |(v, s)| !v.is_empty() && v.len() <= 8 && *s >= 0.5,
+        );
+    }
+
+    #[test]
+    fn result_outcome_conversion() {
+        forall("ok-result", 6, 10, &UsizeRange(0, 5), |_| Ok::<(), String>(()));
+    }
+}

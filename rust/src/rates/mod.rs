@@ -1,0 +1,558 @@
+//! Analytical convergence rates and optimal parameters — Theorem 1,
+//! Table 1, and the per-method tuning rules of §4.
+//!
+//! Everything here is a function of two spectra:
+//! * `μ_min, μ_max` of `X = (1/m) Σ A_iᵀ(A_iA_iᵀ)⁻¹A_i` — APC, consensus,
+//!   block Cimmino;
+//! * `λ_min, λ_max` of `AᵀA` — DGD, D-NAG, D-HBM;
+//!
+//! plus the modified-ADMM iteration matrix `(ξ/m) Σ (A_iᵀA_i + ξI)⁻¹`,
+//! whose ξ is tuned numerically (golden-section on log ξ).
+//!
+//! The *convergence time* reported throughout is the paper's
+//! `T = 1/(−log ρ) ≈ 1/(1−ρ)` — iterations per e-fold of error decay.
+
+use crate::linalg::{power_iteration, sym_eigen, Cholesky, Mat};
+use crate::partition::PartitionedSystem;
+use anyhow::{bail, Context, Result};
+
+/// Spectral summary of a partitioned system: everything the rate formulas
+/// need, computed once.
+#[derive(Clone, Debug)]
+pub struct SpectralInfo {
+    /// Extreme eigenvalues of `X` (Eq. 3).
+    pub mu_min: f64,
+    pub mu_max: f64,
+    /// Extreme eigenvalues of `AᵀA`.
+    pub lambda_min: f64,
+    pub lambda_max: f64,
+}
+
+impl SpectralInfo {
+    /// Full computation via dense symmetric eigensolves (`O(n³)`).
+    pub fn compute(sys: &PartitionedSystem) -> Result<Self> {
+        let x = sys.x_matrix();
+        let ex = sym_eigen(&x).context("spectrum of X")?;
+        let a = sys.assemble_a();
+        let ata = a.gram_cols();
+        let ea = sym_eigen(&ata).context("spectrum of AᵀA")?;
+        Ok(SpectralInfo {
+            mu_min: ex.lambda_min().max(0.0),
+            mu_max: ex.lambda_max().min(1.0),
+            lambda_min: ea.lambda_min().max(0.0),
+            lambda_max: ea.lambda_max(),
+        })
+    }
+
+    /// `κ(X)`.
+    pub fn kappa_x(&self) -> f64 {
+        if self.mu_min <= 0.0 {
+            f64::INFINITY
+        } else {
+            self.mu_max / self.mu_min
+        }
+    }
+
+    /// `κ(AᵀA)`.
+    pub fn kappa_ata(&self) -> f64 {
+        if self.lambda_min <= 0.0 {
+            f64::INFINITY
+        } else {
+            self.lambda_max / self.lambda_min
+        }
+    }
+}
+
+impl SpectralInfo {
+    /// Distributed-friendly *estimate* of the spectrum, for systems where
+    /// the dense `O(n³)` eigensolves of [`SpectralInfo::compute`] defeat
+    /// the point of distributing in the first place.
+    ///
+    /// Uses only operations the workers already implement:
+    /// * `μ_max(X)`: power iteration on `X v = (1/m) Σ (v − P_i v)` —
+    ///   one projection round per iteration;
+    /// * `μ_min(X)`: power iteration on `I − X` (its top eigenvalue is
+    ///   `1 − μ_min`) with the `μ_max`-eigendirection deflated… in
+    ///   practice `λ_max(I−X) = 1 − μ_min` directly since `μ_min` is the
+    ///   extreme of the *complement*;
+    /// * `λ_max(AᵀA)`: power iteration with partial-gradient rounds;
+    /// * `λ_min(AᵀA)`: estimated via `λ_max` of `cI − AᵀA` with
+    ///   `c = λ_max` (shift-and-invert-free, slow for clustered spectra
+    ///   but tuning only needs ~1 digit).
+    ///
+    /// Each estimate is intentionally *biased safe* for APC tuning: the
+    /// returned `mu_min` is shrunk by `safety` (default 0.9) because
+    /// over-estimating `μ_min` puts the tuned `(γ*, η*)` outside the
+    /// stability set S and diverges, while under-estimating only costs
+    /// rate (see the sensitivity ablation and EXPERIMENTS.md).
+    pub fn estimate(sys: &PartitionedSystem, iters: usize, safety: f64) -> Result<Self> {
+        let n = sys.n;
+        let m = sys.m() as f64;
+        let mut scratch = Vec::new();
+        let mut proj = vec![0.0; n];
+
+        // X v, via the blocks' cached projections
+        let mut apply_x = |v: &[f64], out: &mut [f64]| {
+            out.fill(0.0);
+            for blk in &sys.blocks {
+                blk.project_into(v, &mut scratch, &mut proj);
+                for k in 0..n {
+                    out[k] += (v[k] - proj[k]) / m;
+                }
+            }
+        };
+        let (mu_max, _) = power_iteration(n, &mut apply_x, 1e-10, iters);
+        // I − X has top eigenvalue 1 − μ_min (μ's live in [0, 1])
+        let mut apply_ix = |v: &[f64], out: &mut [f64]| {
+            apply_x(v, out);
+            for k in 0..n {
+                out[k] = v[k] - out[k];
+            }
+        };
+        let (one_minus_mu_min, _) = power_iteration(n, &mut apply_ix, 1e-10, iters);
+        drop(apply_ix);
+
+        // AᵀA via partial-gradient style accumulation
+        let mut buf_n = vec![0.0; n];
+        let mut apply_ata = |v: &[f64], out: &mut [f64]| {
+            out.fill(0.0);
+            for blk in &sys.blocks {
+                let mut t = vec![0.0; blk.p()];
+                blk.a.matvec_into(v, &mut t);
+                blk.a.tr_matvec_into(&t, &mut buf_n);
+                for k in 0..n {
+                    out[k] += buf_n[k];
+                }
+            }
+        };
+        let (lambda_max, _) = power_iteration(n, &mut apply_ata, 1e-10, iters);
+        let shift = lambda_max * (1.0 + 1e-6);
+        let mut apply_shifted = |v: &[f64], out: &mut [f64]| {
+            apply_ata(v, out);
+            for k in 0..n {
+                out[k] = shift * v[k] - out[k];
+            }
+        };
+        let (top_shifted, _) = power_iteration(n, &mut apply_shifted, 1e-10, iters);
+        let lambda_min = (shift - top_shifted).max(0.0);
+
+        let mu_min = (1.0 - one_minus_mu_min).max(0.0) * safety.clamp(0.0, 1.0);
+        if mu_min <= 0.0 {
+            bail!(
+                "spectral estimate: μ_min ≈ 0 after {} power iterations — X is \
+                 numerically singular or needs more iterations",
+                iters
+            );
+        }
+        Ok(SpectralInfo {
+            mu_min,
+            mu_max: mu_max.min(1.0),
+            lambda_min: lambda_min.max(lambda_max * 1e-16),
+            lambda_max,
+        })
+    }
+}
+
+/// Convergence time `T = 1/(−log ρ)`; `∞` for non-convergent `ρ ≥ 1`.
+pub fn convergence_time(rho: f64) -> f64 {
+    if !(0.0..1.0).contains(&rho) {
+        return f64::INFINITY;
+    }
+    if rho == 0.0 {
+        return 0.0;
+    }
+    -1.0 / rho.ln()
+}
+
+/// Optimal APC parameters and rate (Theorem 1).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct ApcParams {
+    pub gamma: f64,
+    pub eta: f64,
+    pub rho: f64,
+}
+
+/// Solve Theorem 1's optimality system in closed form.
+///
+/// With `ρ = (√κ−1)/(√κ+1)` and `S = (1+ρ)²/μ_max`, the system
+/// `{μ_max γη = (1+ρ)², (γ−1)(η−1) = ρ²}` becomes `γη = S`,
+/// `γ+η = S + 1 − ρ²`, so `γ, η` are the roots of
+/// `z² − (S+1−ρ²) z + S = 0`. The paper's Algorithm 1 takes `γ ∈ [0, 2]`;
+/// the smaller root is `γ*`, the larger `η*` (η may exceed 2 — it is an
+/// extrapolation weight, not a step size).
+pub fn apc_optimal(mu_min: f64, mu_max: f64) -> Result<ApcParams> {
+    if mu_min <= 0.0 || mu_max < mu_min {
+        bail!("apc_optimal: need 0 < μ_min ≤ μ_max (got {mu_min:.3e}, {mu_max:.3e})");
+    }
+    let kappa = mu_max / mu_min;
+    let sk = kappa.sqrt();
+    let rho = (sk - 1.0) / (sk + 1.0);
+    let s = (1.0 + rho) * (1.0 + rho) / mu_max;
+    let sum = s + 1.0 - rho * rho;
+    let disc = sum * sum - 4.0 * s;
+    // disc can dip below 0 by rounding when κ ≈ 1
+    let sq = disc.max(0.0).sqrt();
+    let gamma = (sum - sq) / 2.0;
+    let eta = (sum + sq) / 2.0;
+    Ok(ApcParams { gamma, eta, rho })
+}
+
+/// APC spectral radius for *arbitrary* `(γ, η)` — the max over the
+/// characteristic roots of `p_i(λ)` (Eq. 5) across `μ ∈ {μ_min, μ_max}`
+/// plus the `(m−1)n`-fold eigenvalue `|1−γ|`.
+///
+/// `p(λ) = λ² + (−ηγ(1−μ) + γ − 1 + η − 1)λ + (γ−1)(η−1)`; because the
+/// root magnitude is a convex function of μ maximized at an endpoint, the
+/// extremes suffice — but for safety near the interior we also accept an
+/// explicit eigenvalue list.
+pub fn apc_rho(mus: &[f64], gamma: f64, eta: f64) -> f64 {
+    let mut worst: f64 = (1.0 - gamma).abs();
+    for &mu in mus {
+        let b = -eta * gamma * (1.0 - mu) + gamma - 1.0 + eta - 1.0;
+        let c = (gamma - 1.0) * (eta - 1.0);
+        let disc = b * b - 4.0 * c;
+        let mag = if disc >= 0.0 {
+            let r1 = (-b + disc.sqrt()) / 2.0;
+            let r2 = (-b - disc.sqrt()) / 2.0;
+            r1.abs().max(r2.abs())
+        } else {
+            // complex pair: |λ| = √c
+            c.abs().sqrt()
+        };
+        worst = worst.max(mag);
+    }
+    worst
+}
+
+/// DGD optimal rate (§4.1): `ρ = (κ−1)/(κ+1)` at `α* = 2/(λ_max+λ_min)`.
+pub fn dgd_optimal(lambda_min: f64, lambda_max: f64) -> (f64, f64) {
+    let alpha = 2.0 / (lambda_max + lambda_min);
+    let kappa = lambda_max / lambda_min;
+    let rho = (kappa - 1.0) / (kappa + 1.0);
+    (alpha, rho)
+}
+
+/// D-NAG optimal rate (§4.2, Eq. 11): `ρ = 1 − 2/√(3κ+1)` at the
+/// Lessard–Recht–Packard tuning `α = 4/(3λ_max+λ_min)`,
+/// `β = (√(3κ+1) − 2)/(√(3κ+1) + 2)`.
+pub fn nag_optimal(lambda_min: f64, lambda_max: f64) -> (f64, f64, f64) {
+    let kappa = lambda_max / lambda_min;
+    let alpha = 4.0 / (3.0 * lambda_max + lambda_min);
+    let s = (3.0 * kappa + 1.0).sqrt();
+    let beta = (s - 2.0) / (s + 2.0);
+    let rho = 1.0 - 2.0 / s;
+    (alpha, beta, rho)
+}
+
+/// D-HBM optimal rate (§4.3, Eq. 13): `ρ = (√κ−1)/(√κ+1)` at
+/// `α = (2/(√λ_max+√λ_min))²`, `β = ρ²`.
+pub fn hbm_optimal(lambda_min: f64, lambda_max: f64) -> (f64, f64, f64) {
+    let sl_max = lambda_max.sqrt();
+    let sl_min = lambda_min.sqrt();
+    let alpha = (2.0 / (sl_max + sl_min)).powi(2);
+    let rho = (sl_max - sl_min) / (sl_max + sl_min);
+    let beta = rho * rho;
+    (alpha, beta, rho)
+}
+
+/// Block Cimmino optimal rate (§4.5, Eq. 16): APC with `γ = 1`,
+/// `η = mν`. Optimal `ν* = 2/(m(μ_max+μ_min))`, giving
+/// `ρ = (κ(X)−1)/(κ(X)+1)`.
+pub fn cimmino_optimal(mu_min: f64, mu_max: f64, m: usize) -> (f64, f64) {
+    let nu = 2.0 / (m as f64 * (mu_max + mu_min));
+    let kappa = mu_max / mu_min;
+    let rho = (kappa - 1.0) / (kappa + 1.0);
+    (nu, rho)
+}
+
+/// Vanilla projection-based consensus ([11, 14]; Table 1): `γ = η = 1`,
+/// `ρ = 1 − μ_min`.
+pub fn consensus_rho(mu_min: f64) -> f64 {
+    1.0 - mu_min
+}
+
+/// Modified-ADMM (y≡0, §4.4) spectral radius at penalty ξ:
+/// `ρ(ξ) = λ_max((ξ/m) Σ (A_iᵀA_i + ξI)⁻¹)`.
+///
+/// Evaluated by explicit symmetric eigensolve of the n×n iteration matrix.
+pub fn admm_rho(sys: &PartitionedSystem, xi: f64) -> Result<f64> {
+    let n = sys.n;
+    let m = sys.m() as f64;
+    let mut iter_mat = Mat::zeros(n, n);
+    for blk in &sys.blocks {
+        let mut local = blk.a.gram_cols();
+        for i in 0..n {
+            local[(i, i)] += xi;
+        }
+        let chol = Cholesky::new(&local).context("admm_rho: A_iᵀA_i + ξI not SPD")?;
+        let inv = chol.inverse();
+        iter_mat.axpy_mat(xi / m, &inv);
+    }
+    let eig = sym_eigen(&iter_mat).context("admm_rho: eigensolve")?;
+    Ok(eig.lambda_max())
+}
+
+/// Tune ADMM's ξ. Returns `(ξ*, ρ*)`.
+///
+/// `ρ(ξ)` is *monotone increasing* in ξ: each summand
+/// `ξ(A_iᵀA_i+ξI)⁻¹` has eigenvalues `ξ/(s+ξ)` which increase in ξ, so
+/// λ_max of the sum does too (Weyl). The infimum as `ξ → 0⁺` is
+/// `λ_max((1/m) Σ P̃_i) = 1 − μ_min(X)` — i.e. modified ADMM degenerates
+/// to the vanilla consensus method (the local update becomes
+/// `x_i = A_i⁺b_i + P̃_i x̄`). ξ = 0 itself is singular, and tiny ξ makes
+/// `(A_iᵀA_i + ξI)` ill-conditioned (its nullspace eigenvalues are ξ), so
+/// the practical optimum is a *stability floor*: we search
+/// `[λ_max·10⁻⁶, λ_max·10³]` by golden section (robust even if the
+/// monotonicity ever failed) and document that the returned ξ sits at the
+/// floor. This mirrors the paper's observation that ADMM "is very slow
+/// (and often unstable) in its native form" (§4.4).
+pub fn admm_optimal(sys: &PartitionedSystem, spectral: &SpectralInfo) -> Result<(f64, f64)> {
+    let lo = (spectral.lambda_max * 1e-6).ln();
+    let hi = (spectral.lambda_max * 1e3).ln();
+    let phi = (5f64.sqrt() - 1.0) / 2.0;
+    let mut a = lo;
+    let mut b = hi;
+    let mut c = b - phi * (b - a);
+    let mut d = a + phi * (b - a);
+    let mut fc = admm_rho(sys, c.exp())?;
+    let mut fd = admm_rho(sys, d.exp())?;
+    for _ in 0..40 {
+        if (b - a).abs() < 1e-3 {
+            break;
+        }
+        if fc < fd {
+            b = d;
+            d = c;
+            fd = fc;
+            c = b - phi * (b - a);
+            fc = admm_rho(sys, c.exp())?;
+        } else {
+            a = c;
+            c = d;
+            fc = fd;
+            d = a + phi * (b - a);
+            fd = admm_rho(sys, d.exp())?;
+        }
+    }
+    let (xlog, rho) = if fc < fd { (c, fc) } else { (d, fd) };
+    Ok((xlog.exp(), rho))
+}
+
+/// One Table-1/Table-2 row: every method's optimal ρ for a given system.
+#[derive(Clone, Debug)]
+pub struct MethodRates {
+    pub dgd: f64,
+    pub nag: f64,
+    pub hbm: f64,
+    pub consensus: f64,
+    pub cimmino: f64,
+    pub apc: f64,
+    /// `None` when ADMM tuning was skipped (it is the expensive one).
+    pub admm: Option<f64>,
+}
+
+impl MethodRates {
+    /// Compute all closed-form rates; `tune_admm` additionally runs the
+    /// golden-section ξ search (O(40·m·n³)).
+    pub fn compute(sys: &PartitionedSystem, tune_admm: bool) -> Result<(SpectralInfo, Self)> {
+        let s = SpectralInfo::compute(sys)?;
+        let apc = apc_optimal(s.mu_min, s.mu_max)?.rho;
+        let (_, dgd) = dgd_optimal(s.lambda_min, s.lambda_max);
+        let (_, _, nag) = nag_optimal(s.lambda_min, s.lambda_max);
+        let (_, _, hbm) = hbm_optimal(s.lambda_min, s.lambda_max);
+        let (_, cimmino) = cimmino_optimal(s.mu_min, s.mu_max, sys.m());
+        let consensus = consensus_rho(s.mu_min);
+        let admm = if tune_admm { Some(admm_optimal(sys, &s)?.1) } else { None };
+        Ok((s, MethodRates { dgd, nag, hbm, consensus, cimmino, apc, admm }))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gen::problems::Problem;
+
+    fn sys(n: usize, m: usize, seed: u64) -> PartitionedSystem {
+        let p = Problem::standard_gaussian(n, n, m).build(seed);
+        PartitionedSystem::split_even(&p.a, &p.b, m).unwrap()
+    }
+
+    #[test]
+    fn apc_optimal_satisfies_theorem1_system() {
+        let (mu_min, mu_max) = (0.08, 0.9);
+        let p = apc_optimal(mu_min, mu_max).unwrap();
+        // check the two defining equations
+        let lhs1 = mu_max * p.eta * p.gamma;
+        let rho2 = (p.gamma - 1.0) * (p.eta - 1.0);
+        let rhs1 = (1.0 + rho2.max(0.0).sqrt()).powi(2);
+        assert!((lhs1 - rhs1).abs() < 1e-10, "first optimality equation");
+        let lhs2 = mu_min * p.eta * p.gamma;
+        let rhs2 = (1.0 - rho2.max(0.0).sqrt()).powi(2);
+        assert!((lhs2 - rhs2).abs() < 1e-10, "second optimality equation");
+        // and ρ matches (√κ−1)/(√κ+1)
+        let sk = (mu_max / mu_min).sqrt();
+        assert!((p.rho - (sk - 1.0) / (sk + 1.0)).abs() < 1e-12);
+    }
+
+    #[test]
+    fn apc_rho_at_optimum_matches_closed_form() {
+        let (mu_min, mu_max) = (0.05, 0.85);
+        let p = apc_optimal(mu_min, mu_max).unwrap();
+        let rho = apc_rho(&[mu_min, 0.3, 0.6, mu_max], p.gamma, p.eta);
+        // at the optimum the endpoint roots are double roots, so the root
+        // magnitude is only √ε-stable against rounding in the coefficients
+        assert!(
+            (rho - p.rho).abs() < 1e-6,
+            "characteristic-poly ρ {} vs closed form {}",
+            rho,
+            p.rho
+        );
+    }
+
+    #[test]
+    fn apc_rho_detects_divergence() {
+        // γ far outside [0,2] must blow up
+        assert!(apc_rho(&[0.1, 0.9], 3.5, 1.0) > 1.0);
+    }
+
+    #[test]
+    fn apc_optimal_degenerate_kappa_one() {
+        let p = apc_optimal(0.5, 0.5).unwrap();
+        assert!(p.rho.abs() < 1e-12);
+        // with ρ=0 the scheme converges in essentially one averaged step
+        assert!(p.gamma > 0.0 && p.eta > 0.0);
+    }
+
+    #[test]
+    fn apc_optimal_rejects_singular() {
+        assert!(apc_optimal(0.0, 0.5).is_err());
+        assert!(apc_optimal(-0.1, 0.5).is_err());
+    }
+
+    #[test]
+    fn table1_ordering_holds() {
+        // DGD ≥ NAG ≥ HBM and Consensus ≥ Cimmino ≥ APC for a generic system
+        let sys = sys(48, 6, 5);
+        let (_, r) = MethodRates::compute(&sys, false).unwrap();
+        assert!(r.dgd >= r.nag - 1e-12, "dgd {} vs nag {}", r.dgd, r.nag);
+        assert!(r.nag >= r.hbm - 1e-12, "nag {} vs hbm {}", r.nag, r.hbm);
+        assert!(r.consensus >= r.cimmino - 1e-12);
+        assert!(r.cimmino >= r.apc - 1e-12);
+        // every rate is a valid contraction
+        for rho in [r.dgd, r.nag, r.hbm, r.consensus, r.cimmino, r.apc] {
+            assert!((0.0..1.0).contains(&rho), "rho {}", rho);
+        }
+    }
+
+    #[test]
+    fn convergence_time_monotone() {
+        assert!(convergence_time(0.9) < convergence_time(0.99));
+        assert_eq!(convergence_time(1.0), f64::INFINITY);
+        assert_eq!(convergence_time(0.0), 0.0);
+        // T ≈ 1/(1−ρ) for ρ→1
+        let t = convergence_time(0.999);
+        assert!((t - 1000.0).abs() / 1000.0 < 0.01, "t={}", t);
+    }
+
+    #[test]
+    fn dgd_alpha_is_optimal_locally() {
+        let (lmin, lmax) = (0.5, 9.0);
+        let (alpha, rho) = dgd_optimal(lmin, lmax);
+        // perturbing α in either direction can only raise the spectral
+        // radius max(|1−αλmin|, |1−αλmax|)
+        let radius = |a: f64| (1.0 - a * lmin).abs().max((1.0 - a * lmax).abs());
+        assert!((radius(alpha) - rho).abs() < 1e-12);
+        assert!(radius(alpha * 1.05) >= rho - 1e-12);
+        assert!(radius(alpha * 0.95) >= rho - 1e-12);
+    }
+
+    #[test]
+    fn admm_rho_positive_and_tunable() {
+        let sys = sys(24, 4, 9);
+        let s = SpectralInfo::compute(&sys).unwrap();
+        let (xi, rho) = admm_optimal(&sys, &s).unwrap();
+        assert!(xi > 0.0);
+        assert!((0.0..1.0).contains(&rho), "admm rho {}", rho);
+        // ρ(ξ) is monotone increasing (see admm_optimal docs), so the
+        // tuned ξ must beat any larger penalty and sit near the stability
+        // floor of the search range.
+        let rho_hi = admm_rho(&sys, xi * 30.0).unwrap();
+        assert!(rho <= rho_hi + 1e-9);
+        assert!(xi <= s.lambda_max * 1e-5, "ξ {} should be at the floor", xi);
+        // monotonicity spot check
+        let r1 = admm_rho(&sys, 0.1).unwrap();
+        let r2 = admm_rho(&sys, 1.0).unwrap();
+        let r3 = admm_rho(&sys, 10.0).unwrap();
+        assert!(r1 <= r2 + 1e-12 && r2 <= r3 + 1e-12, "ρ(ξ) not monotone: {r1} {r2} {r3}");
+        // and the ξ→0 limit is the consensus rate 1 − μ_min(X)
+        let r_tiny = admm_rho(&sys, s.lambda_max * 1e-9).unwrap();
+        assert!(
+            (r_tiny - consensus_rho(s.mu_min)).abs() < 1e-3,
+            "ξ→0 limit {} vs consensus {}",
+            r_tiny,
+            consensus_rho(s.mu_min)
+        );
+    }
+
+    #[test]
+    fn estimate_tracks_exact_spectrum() {
+        let sys = sys(36, 4, 21);
+        let exact = SpectralInfo::compute(&sys).unwrap();
+        let est = SpectralInfo::estimate(&sys, 4000, 1.0).unwrap();
+        assert!(
+            (est.mu_max - exact.mu_max).abs() < 1e-3 * exact.mu_max,
+            "μ_max est {:.6e} vs {:.6e}",
+            est.mu_max,
+            exact.mu_max
+        );
+        assert!(
+            (est.mu_min - exact.mu_min).abs() < 0.05 * exact.mu_min.max(1e-6),
+            "μ_min est {:.6e} vs {:.6e}",
+            est.mu_min,
+            exact.mu_min
+        );
+        assert!(
+            (est.lambda_max - exact.lambda_max).abs() < 1e-3 * exact.lambda_max,
+            "λ_max est {:.6e} vs {:.6e}",
+            est.lambda_max,
+            exact.lambda_max
+        );
+    }
+
+    #[test]
+    fn estimate_safety_shrinks_mu_min() {
+        let sys = sys(24, 3, 23);
+        let full = SpectralInfo::estimate(&sys, 2000, 1.0).unwrap();
+        let safe = SpectralInfo::estimate(&sys, 2000, 0.8).unwrap();
+        assert!((safe.mu_min - 0.8 * full.mu_min).abs() < 1e-12);
+        // safe tuning never yields a faster (smaller) ρ than full
+        let rho_full = apc_optimal(full.mu_min, full.mu_max).unwrap().rho;
+        let rho_safe = apc_optimal(safe.mu_min, safe.mu_max).unwrap().rho;
+        assert!(rho_safe >= rho_full);
+    }
+
+    #[test]
+    fn spectral_info_sane_for_square_system() {
+        let sys = sys(32, 4, 2);
+        let s = SpectralInfo::compute(&sys).unwrap();
+        assert!(s.mu_min > 0.0 && s.mu_max <= 1.0 + 1e-12);
+        assert!(s.lambda_min > 0.0 && s.lambda_max >= s.lambda_min);
+        assert!(s.kappa_x() >= 1.0);
+        assert!(s.kappa_ata() >= 1.0);
+    }
+
+    #[test]
+    fn kappa_x_not_worse_than_kappa_ata_on_gaussian() {
+        // The paper's empirical speculation (§4.3): X is typically much
+        // better conditioned than AᵀA. Verify at least "not worse" on a
+        // gaussian instance.
+        let sys = sys(40, 5, 11);
+        let s = SpectralInfo::compute(&sys).unwrap();
+        assert!(
+            s.kappa_x() <= s.kappa_ata() * 1.01,
+            "κ(X) {:.3e} vs κ(AᵀA) {:.3e}",
+            s.kappa_x(),
+            s.kappa_ata()
+        );
+    }
+}

@@ -1,0 +1,191 @@
+//! Artifact manifest: the contract between `python/compile/aot.py` and the
+//! rust runtime.
+
+use crate::config::Json;
+use anyhow::{anyhow, bail, Context, Result};
+use std::path::{Path, PathBuf};
+
+/// One AOT-lowered step function at one shape.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ArtifactEntry {
+    pub name: String,
+    /// Step kind: `apc_worker`, `grad_worker`, `cimmino_worker`,
+    /// `admm_worker`, `master_momentum`, `apc_fused`, `residual_norm`.
+    pub step: String,
+    pub m: usize,
+    pub p: usize,
+    pub n: usize,
+    /// Input tensor shapes, in call order (empty vec = rank-0 scalar).
+    pub inputs: Vec<Vec<usize>>,
+    /// Number of outputs in the result tuple.
+    pub outputs: usize,
+    /// Absolute path of the HLO text file.
+    pub path: PathBuf,
+}
+
+/// Parsed `manifest.json`.
+#[derive(Clone, Debug)]
+pub struct Manifest {
+    pub entries: Vec<ArtifactEntry>,
+    pub dir: PathBuf,
+}
+
+impl Manifest {
+    /// Load `<dir>/manifest.json`.
+    pub fn load(dir: impl AsRef<Path>) -> Result<Self> {
+        let dir = dir.as_ref().to_path_buf();
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path).with_context(|| {
+            format!(
+                "reading {:?} — run `make artifacts` to build the AOT artifacts first",
+                path
+            )
+        })?;
+        let root = Json::parse(&text).context("parsing manifest.json")?;
+        let dtype = root.req("dtype")?.as_str().unwrap_or("");
+        if dtype != "f64" {
+            bail!("manifest dtype {:?} unsupported (runtime is f64-only)", dtype);
+        }
+        let mut entries = Vec::new();
+        for e in root.req("entries")?.as_arr().ok_or_else(|| anyhow!("entries not array"))? {
+            let name = e.req("name")?.as_str().ok_or_else(|| anyhow!("name"))?.to_string();
+            let file = e.req("file")?.as_str().ok_or_else(|| anyhow!("file"))?.to_string();
+            let inputs = e
+                .req("inputs")?
+                .as_arr()
+                .ok_or_else(|| anyhow!("inputs"))?
+                .iter()
+                .map(|shape| {
+                    shape
+                        .as_arr()
+                        .ok_or_else(|| anyhow!("input shape not array"))?
+                        .iter()
+                        .map(|d| d.as_usize().ok_or_else(|| anyhow!("bad dim")))
+                        .collect::<Result<Vec<usize>>>()
+                })
+                .collect::<Result<Vec<_>>>()?;
+            entries.push(ArtifactEntry {
+                name: name.clone(),
+                step: e.req("step")?.as_str().ok_or_else(|| anyhow!("step"))?.to_string(),
+                m: e.req("m")?.as_usize().ok_or_else(|| anyhow!("m"))?,
+                p: e.req("p")?.as_usize().ok_or_else(|| anyhow!("p"))?,
+                n: e.req("n")?.as_usize().ok_or_else(|| anyhow!("n"))?,
+                inputs,
+                outputs: e.req("outputs")?.as_usize().ok_or_else(|| anyhow!("outputs"))?,
+                path: dir.join(&file),
+            });
+        }
+        if entries.is_empty() {
+            bail!("manifest has no entries");
+        }
+        Ok(Manifest { entries, dir })
+    }
+
+    /// Find a worker-step artifact by `(step, p, n)`.
+    pub fn find_worker(&self, step: &str, p: usize, n: usize) -> Result<&ArtifactEntry> {
+        self.entries
+            .iter()
+            .find(|e| e.step == step && e.p == p && e.n == n)
+            .ok_or_else(|| {
+                anyhow!(
+                    "no artifact for step {:?} at p={}, n={}; available: {}",
+                    step,
+                    p,
+                    n,
+                    self.describe(step)
+                )
+            })
+    }
+
+    /// Find a whole-system artifact by `(step, m, p, n)`.
+    pub fn find_fused(&self, step: &str, m: usize, p: usize, n: usize) -> Result<&ArtifactEntry> {
+        self.entries
+            .iter()
+            .find(|e| e.step == step && e.m == m && e.p == p && e.n == n)
+            .ok_or_else(|| {
+                anyhow!(
+                    "no artifact for step {:?} at m={}, p={}, n={}; available: {}",
+                    step,
+                    m,
+                    p,
+                    n,
+                    self.describe(step)
+                )
+            })
+    }
+
+    fn describe(&self, step: &str) -> String {
+        let shapes: Vec<String> = self
+            .entries
+            .iter()
+            .filter(|e| e.step == step)
+            .map(|e| format!("(m={},p={},n={})", e.m, e.p, e.n))
+            .collect();
+        if shapes.is_empty() {
+            format!("none (no {:?} artifacts at all)", step)
+        } else {
+            shapes.join(", ")
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn write_fake_manifest(dir: &Path) {
+        std::fs::create_dir_all(dir).unwrap();
+        std::fs::write(dir.join("x.hlo.txt"), "HloModule fake").unwrap();
+        std::fs::write(
+            dir.join("manifest.json"),
+            r#"{"version":1,"dtype":"f64","fingerprint":"t","entries":[
+                {"name":"apc_worker_p2_n4","file":"x.hlo.txt","step":"apc_worker",
+                 "m":1,"p":2,"n":4,"inputs":[[2,4],[2,2],[4],[4],[]],"outputs":1}
+            ]}"#,
+        )
+        .unwrap();
+    }
+
+    #[test]
+    fn loads_and_finds() {
+        let dir = std::env::temp_dir().join("apc_manifest_test");
+        write_fake_manifest(&dir);
+        let m = Manifest::load(&dir).unwrap();
+        assert_eq!(m.entries.len(), 1);
+        let e = m.find_worker("apc_worker", 2, 4).unwrap();
+        assert_eq!(e.inputs.len(), 5);
+        assert_eq!(e.inputs[4], Vec::<usize>::new());
+        assert!(m.find_worker("apc_worker", 3, 4).is_err());
+        assert!(m.find_worker("grad_worker", 2, 4).is_err());
+    }
+
+    #[test]
+    fn missing_dir_gives_actionable_error() {
+        let err = Manifest::load("/nonexistent/apc").unwrap_err();
+        assert!(format!("{:#}", err).contains("make artifacts"));
+    }
+
+    #[test]
+    fn rejects_wrong_dtype() {
+        let dir = std::env::temp_dir().join("apc_manifest_dtype_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(
+            dir.join("manifest.json"),
+            r#"{"version":1,"dtype":"f32","entries":[]}"#,
+        )
+        .unwrap();
+        assert!(Manifest::load(&dir).is_err());
+    }
+
+    #[test]
+    fn loads_real_manifest_if_present() {
+        let dir = concat!(env!("CARGO_MANIFEST_DIR"), "/artifacts");
+        if std::path::Path::new(dir).join("manifest.json").exists() {
+            let m = Manifest::load(dir).unwrap();
+            // the deployed shape set from aot.py must include the
+            // quickstart worker
+            assert!(m.find_worker("apc_worker", 25, 200).is_ok());
+            assert!(m.find_fused("apc_fused", 8, 25, 200).is_ok());
+        }
+    }
+}

@@ -1,0 +1,271 @@
+//! PJRT execution engine: compile HLO-text artifacts once, execute many.
+
+use super::artifact::ArtifactEntry;
+use anyhow::{anyhow, bail, Context, Result};
+use std::collections::HashMap;
+
+/// A tensor argument for an artifact call: either fresh host data uploaded
+/// per call, or a handle to a cached device buffer (loop-invariant
+/// operands like `A_i` / Gram inverses — uploading those every round
+/// dominated the Hlo backend's cost before the cache existed).
+pub enum TensorArg<'a> {
+    /// Host data `(flat f64 row-major, dims)`; dims `&[]` for scalars.
+    Host(&'a [f64], &'a [usize]),
+    /// Key into the engine's device-buffer cache (see
+    /// [`Engine::cache_buffer`]).
+    Cached(&'a str),
+}
+
+/// One thread's PJRT client plus its compiled executables and
+/// device-buffer cache. NOT `Send`: construct per thread.
+pub struct Engine {
+    client: xla::PjRtClient,
+    executables: HashMap<String, xla::PjRtLoadedExecutable>,
+    buffers: HashMap<String, xla::PjRtBuffer>,
+}
+
+impl Engine {
+    /// Construct on the PJRT CPU client.
+    pub fn cpu() -> Result<Self> {
+        let client = xla::PjRtClient::cpu().map_err(wrap_xla)?;
+        Ok(Engine { client, executables: HashMap::new(), buffers: HashMap::new() })
+    }
+
+    /// Load + compile an artifact (no-op if already compiled).
+    pub fn load(&mut self, entry: &ArtifactEntry) -> Result<()> {
+        if self.executables.contains_key(&entry.name) {
+            return Ok(());
+        }
+        let path = entry
+            .path
+            .to_str()
+            .ok_or_else(|| anyhow!("non-utf8 artifact path {:?}", entry.path))?;
+        let proto = xla::HloModuleProto::from_text_file(path)
+            .map_err(wrap_xla)
+            .with_context(|| format!("parsing HLO text {:?}", path))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .map_err(wrap_xla)
+            .with_context(|| format!("compiling artifact {:?}", entry.name))?;
+        self.executables.insert(entry.name.clone(), exe);
+        Ok(())
+    }
+
+    /// Upload a loop-invariant operand once; later calls reference it as
+    /// [`TensorArg::Cached`].
+    pub fn cache_buffer(&mut self, key: &str, data: &[f64], dims: &[usize]) -> Result<()> {
+        let buf = self.client.buffer_from_host_buffer(data, dims, None).map_err(wrap_xla)?;
+        self.buffers.insert(key.to_string(), buf);
+        Ok(())
+    }
+
+    /// Execute a loaded artifact. Returns the flattened f64 contents of
+    /// each output in the result tuple.
+    pub fn execute(&mut self, entry: &ArtifactEntry, args: &[TensorArg]) -> Result<Vec<Vec<f64>>> {
+        if args.len() != entry.inputs.len() {
+            bail!(
+                "artifact {:?} expects {} inputs, got {}",
+                entry.name,
+                entry.inputs.len(),
+                args.len()
+            );
+        }
+        // all-buffer path: upload Host args, reference Cached ones
+        let mut owned: Vec<xla::PjRtBuffer> = Vec::new();
+        let mut ptrs: Vec<&xla::PjRtBuffer> = Vec::with_capacity(args.len());
+        for (i, arg) in args.iter().enumerate() {
+            match arg {
+                TensorArg::Host(data, dims) => {
+                    let expect: usize = entry.inputs[i].iter().product();
+                    if data.len() != expect {
+                        bail!(
+                            "artifact {:?} input {} wants {:?} ({} elems), got {}",
+                            entry.name,
+                            i,
+                            entry.inputs[i],
+                            expect,
+                            data.len()
+                        );
+                    }
+                    owned.push(
+                        self.client
+                            .buffer_from_host_buffer(data, dims, None)
+                            .map_err(wrap_xla)?,
+                    );
+                }
+                TensorArg::Cached(key) => {
+                    if !self.buffers.contains_key(*key) {
+                        bail!("no cached buffer {:?} (cache_buffer it first)", key);
+                    }
+                }
+            }
+        }
+        // second pass builds the pointer list (owned vec is now stable)
+        let mut owned_iter = owned.iter();
+        for arg in args {
+            match arg {
+                TensorArg::Host(..) => ptrs.push(owned_iter.next().expect("counted above")),
+                TensorArg::Cached(key) => ptrs.push(&self.buffers[*key]),
+            }
+        }
+        let exe = self
+            .executables
+            .get(&entry.name)
+            .ok_or_else(|| anyhow!("artifact {:?} not loaded (call load first)", entry.name))?;
+        let result = exe.execute_b(&ptrs).map_err(wrap_xla)?;
+        let tuple = result
+            .into_iter()
+            .next()
+            .ok_or_else(|| anyhow!("no replica output"))?
+            .into_iter()
+            .next()
+            .ok_or_else(|| anyhow!("empty output"))?
+            .to_literal_sync()
+            .map_err(wrap_xla)?;
+        // aot.py lowers with return_tuple=True: unwrap the tuple
+        let parts = tuple.to_tuple().map_err(wrap_xla)?;
+        if parts.len() != entry.outputs {
+            bail!(
+                "artifact {:?} promised {} outputs, produced {}",
+                entry.name,
+                entry.outputs,
+                parts.len()
+            );
+        }
+        parts
+            .into_iter()
+            .map(|lit| lit.to_vec::<f64>().map_err(wrap_xla))
+            .collect::<Result<Vec<_>>>()
+    }
+
+    /// Number of compiled executables (introspection for tests/metrics).
+    pub fn loaded_count(&self) -> usize {
+        self.executables.len()
+    }
+}
+
+/// The xla crate has its own error type; flatten it into anyhow.
+fn wrap_xla(e: xla::Error) -> anyhow::Error {
+    anyhow!("xla: {}", e)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::Manifest;
+
+    fn manifest() -> Option<Manifest> {
+        let dir = concat!(env!("CARGO_MANIFEST_DIR"), "/artifacts");
+        Manifest::load(dir).ok()
+    }
+
+    /// Full AOT round trip: python-lowered HLO executed via PJRT matches
+    /// the rust-native kernel. THE composition test for the three layers.
+    #[test]
+    fn apc_worker_artifact_matches_native_kernel() {
+        let Some(manifest) = manifest() else {
+            eprintln!("skipping: run `make artifacts` first");
+            return;
+        };
+        let entry = manifest.find_worker("apc_worker", 25, 200).unwrap().clone();
+        let mut engine = Engine::cpu().unwrap();
+        engine.load(&entry).unwrap();
+
+        // build a matching problem: p=25, n=200
+        let problem = crate::gen::problems::Problem::standard_gaussian(200, 200, 8).build(77);
+        let sys =
+            crate::partition::PartitionedSystem::split_even(&problem.a, &problem.b, 8).unwrap();
+        let blk = &sys.blocks[3];
+        let ginv = blk.gram_chol.inverse();
+        let mut local = crate::solvers::local::ApcLocal::new(blk, 1.21).unwrap();
+        let x0 = local.x.clone();
+        let xbar: Vec<f64> = (0..200).map(|i| (i as f64 * 0.13).sin()).collect();
+
+        let out = engine
+            .execute(
+                &entry,
+                &[
+                    TensorArg::Host(blk.a.as_slice(), &[25, 200]),
+                    TensorArg::Host(ginv.as_slice(), &[25, 25]),
+                    TensorArg::Host(&x0, &[200]),
+                    TensorArg::Host(&xbar, &[200]),
+                    TensorArg::Host(&[1.21], &[]),
+                ],
+            )
+            .unwrap();
+        assert_eq!(out.len(), 1);
+
+        local.step(blk, &xbar);
+        let diff = crate::linalg::vector::max_abs_diff(&out[0], &local.x);
+        assert!(diff < 1e-10, "HLO vs native diff {:.2e}", diff);
+    }
+
+    #[test]
+    fn cached_buffers_give_same_answer() {
+        let Some(manifest) = manifest() else {
+            eprintln!("skipping: run `make artifacts` first");
+            return;
+        };
+        let entry = manifest.find_worker("grad_worker", 25, 200).unwrap().clone();
+        let mut engine = Engine::cpu().unwrap();
+        engine.load(&entry).unwrap();
+
+        let problem = crate::gen::problems::Problem::standard_gaussian(200, 200, 8).build(78);
+        let sys =
+            crate::partition::PartitionedSystem::split_even(&problem.a, &problem.b, 8).unwrap();
+        let blk = &sys.blocks[0];
+        let x: Vec<f64> = (0..200).map(|i| 0.01 * i as f64).collect();
+
+        engine.cache_buffer("a", blk.a.as_slice(), &[25, 200]).unwrap();
+        engine.cache_buffer("b", &blk.b, &[25]).unwrap();
+        let out_cached = engine
+            .execute(
+                &entry,
+                &[TensorArg::Cached("a"), TensorArg::Cached("b"), TensorArg::Host(&x, &[200])],
+            )
+            .unwrap();
+        let out_host = engine
+            .execute(
+                &entry,
+                &[
+                    TensorArg::Host(blk.a.as_slice(), &[25, 200]),
+                    TensorArg::Host(&blk.b, &[25]),
+                    TensorArg::Host(&x, &[200]),
+                ],
+            )
+            .unwrap();
+        assert_eq!(out_cached, out_host);
+
+        // and matches native
+        let mut g = crate::solvers::local::GradLocal::new(blk);
+        let mut expect = vec![0.0; 200];
+        g.partial_grad(blk, &x, &mut expect);
+        let diff = crate::linalg::vector::max_abs_diff(&out_cached[0], &expect);
+        assert!(diff < 1e-10, "HLO vs native diff {:.2e}", diff);
+    }
+
+    #[test]
+    fn execute_rejects_wrong_arity_and_shape() {
+        let Some(manifest) = manifest() else {
+            eprintln!("skipping: run `make artifacts` first");
+            return;
+        };
+        let entry = manifest.find_worker("apc_worker", 25, 200).unwrap().clone();
+        let mut engine = Engine::cpu().unwrap();
+        engine.load(&entry).unwrap();
+        // wrong arity
+        assert!(engine.execute(&entry, &[]).is_err());
+        // wrong element count
+        let bad = vec![0.0; 3];
+        let args = [
+            TensorArg::Host(&bad, &[3]),
+            TensorArg::Host(&bad, &[3]),
+            TensorArg::Host(&bad, &[3]),
+            TensorArg::Host(&bad, &[3]),
+            TensorArg::Host(&bad, &[3]),
+        ];
+        assert!(engine.execute(&entry, &args).is_err());
+    }
+}

@@ -1,0 +1,20 @@
+//! PJRT runtime: load the AOT artifacts built by `python/compile/aot.py`
+//! and execute them from rust.
+//!
+//! * [`artifact`] — manifest parsing and lookup by `(step, shape)`.
+//! * [`engine`] — a PJRT CPU client wrapper holding compiled executables,
+//!   with `Vec<f64>` ⇄ `xla::Literal` conversion and an optional
+//!   device-buffer cache for loop-invariant operands (the worker's `A_i`
+//!   and Gram inverse never change across rounds — re-uploading them every
+//!   iteration dominated the HLO backend before this cache; see
+//!   EXPERIMENTS.md §Perf).
+//!
+//! PJRT handles are not `Send` (raw C pointers), so each coordinator
+//! worker thread owns a private [`engine::Engine`]. Compilation is
+//! per-thread but cheap (the artifacts are a few KB of HLO text).
+
+pub mod artifact;
+pub mod engine;
+
+pub use artifact::{ArtifactEntry, Manifest};
+pub use engine::{Engine, TensorArg};

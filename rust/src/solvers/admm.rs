@@ -1,0 +1,228 @@
+//! Modified consensus-ADMM (§4.4): the y≡0 variant the paper actually
+//! benchmarks ("setting yᵢ's to zero can speed up the convergence
+//! significantly. We use this modified version in Section 5").
+//!
+//! `x_i(t+1) = (A_iᵀA_i + ξI)⁻¹ (A_iᵀ b_i + ξ x̄(t))`,
+//! `x̄(t+1)  = (1/m) Σ x_i(t+1)`,
+//!
+//! with the per-machine solve done via the matrix-inversion lemma at
+//! `O(pn)`/iteration (see [`crate::solvers::local::AdmmLocal`]).
+//!
+//! The full (unmodified) three-variable ADMM of Eq. 14 is also provided
+//! ([`FullAdmm`]) for the ablation bench that justifies the paper's
+//! modification.
+
+use super::local::AdmmLocal;
+use super::Solver;
+use crate::partition::PartitionedSystem;
+use crate::rates::{admm_optimal, SpectralInfo};
+use anyhow::Result;
+
+/// Modified (y≡0) consensus ADMM.
+#[derive(Clone, Debug)]
+pub struct Admm {
+    pub xi: f64,
+    locals: Vec<AdmmLocal>,
+    xbar: Vec<f64>,
+    xi_buf: Vec<f64>,
+    sum: Vec<f64>,
+}
+
+impl Admm {
+    pub fn with_params(sys: &PartitionedSystem, xi: f64) -> Result<Self> {
+        let locals = sys
+            .blocks
+            .iter()
+            .map(|blk| AdmmLocal::new(blk, xi))
+            .collect::<Result<Vec<_>>>()?;
+        Ok(Admm {
+            xi,
+            locals,
+            xbar: vec![0.0; sys.n],
+            xi_buf: vec![0.0; sys.n],
+            sum: vec![0.0; sys.n],
+        })
+    }
+
+    /// ξ tuned by [`admm_optimal`] (golden-section with a stability
+    /// floor — see that function's docs for why the optimum is a floor).
+    pub fn auto(sys: &PartitionedSystem) -> Result<Self> {
+        let s = SpectralInfo::compute(sys)?;
+        Self::auto_with_spectral(sys, &s)
+    }
+
+    pub fn auto_with_spectral(sys: &PartitionedSystem, s: &SpectralInfo) -> Result<Self> {
+        let (xi, _) = admm_optimal(sys, s)?;
+        Self::with_params(sys, xi)
+    }
+}
+
+impl Solver for Admm {
+    fn name(&self) -> &'static str {
+        "M-ADMM"
+    }
+
+    fn xbar(&self) -> &[f64] {
+        &self.xbar
+    }
+
+    fn iterate(&mut self, sys: &PartitionedSystem) {
+        self.sum.fill(0.0);
+        for (local, blk) in self.locals.iter_mut().zip(&sys.blocks) {
+            local.step(blk, &self.xbar, &mut self.xi_buf);
+            for (s, v) in self.sum.iter_mut().zip(&self.xi_buf) {
+                *s += v;
+            }
+        }
+        let m = sys.m() as f64;
+        for (x, s) in self.xbar.iter_mut().zip(&self.sum) {
+            *x = s / m;
+        }
+    }
+
+    fn reset(&mut self, _sys: &PartitionedSystem) {
+        self.xbar.fill(0.0);
+    }
+}
+
+/// The native three-variable consensus ADMM (Eq. 14), with dual variables
+/// `y_i` kept. Used by the ablation bench to demonstrate why the paper
+/// switched to the modified version.
+#[derive(Clone, Debug)]
+pub struct FullAdmm {
+    pub xi: f64,
+    locals: Vec<AdmmLocal>,
+    y: Vec<Vec<f64>>,
+    x: Vec<Vec<f64>>,
+    xbar: Vec<f64>,
+    buf: Vec<f64>,
+}
+
+impl FullAdmm {
+    pub fn with_params(sys: &PartitionedSystem, xi: f64) -> Result<Self> {
+        let locals = sys
+            .blocks
+            .iter()
+            .map(|blk| AdmmLocal::new(blk, xi))
+            .collect::<Result<Vec<_>>>()?;
+        Ok(FullAdmm {
+            xi,
+            locals,
+            y: vec![vec![0.0; sys.n]; sys.m()],
+            x: vec![vec![0.0; sys.n]; sys.m()],
+            xbar: vec![0.0; sys.n],
+            buf: vec![0.0; sys.n],
+        })
+    }
+}
+
+impl Solver for FullAdmm {
+    fn name(&self) -> &'static str {
+        "ADMM(full)"
+    }
+
+    fn xbar(&self) -> &[f64] {
+        &self.xbar
+    }
+
+    fn iterate(&mut self, sys: &PartitionedSystem) {
+        let n = sys.n;
+        let m = sys.m() as f64;
+        // x_i = (A_iᵀA_i + ξI)⁻¹(A_iᵀb_i − y_i + ξ x̄)
+        for ((local, blk), (xi_vec, y_vec)) in self
+            .locals
+            .iter_mut()
+            .zip(&sys.blocks)
+            .zip(self.x.iter_mut().zip(&self.y))
+        {
+            // fold −y_i into the rhs by shifting x̄: the lemma step computes
+            // (…)⁻¹(A_iᵀb_i + ξ x̄'); we need an extra −y_i term, so call
+            // with x̄' = x̄ − y_i/ξ.
+            for k in 0..n {
+                self.buf[k] = self.xbar[k] - y_vec[k] / self.xi;
+            }
+            local.step(blk, &self.buf, xi_vec);
+        }
+        // x̄ = mean(x_i)
+        self.xbar.fill(0.0);
+        for xi_vec in &self.x {
+            for (s, v) in self.xbar.iter_mut().zip(xi_vec) {
+                *s += v;
+            }
+        }
+        for v in self.xbar.iter_mut() {
+            *v /= m;
+        }
+        // y_i += ξ(x_i − x̄)
+        for (y_vec, xi_vec) in self.y.iter_mut().zip(&self.x) {
+            for k in 0..n {
+                y_vec[k] += self.xi * (xi_vec[k] - self.xbar[k]);
+            }
+        }
+    }
+
+    fn reset(&mut self, sys: &PartitionedSystem) {
+        self.xbar.fill(0.0);
+        for v in self.x.iter_mut().chain(self.y.iter_mut()) {
+            v.fill(0.0);
+        }
+        let _ = sys;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gen::problems::Problem;
+    use crate::solvers::{Metric, SolverOptions};
+
+    #[test]
+    fn modified_admm_converges() {
+        let p = Problem::standard_gaussian(24, 24, 3).build(51);
+        let sys = PartitionedSystem::split_even(&p.a, &p.b, 3).unwrap();
+        let mut solver = Admm::with_params(&sys, 0.5).unwrap();
+        let opts = SolverOptions {
+            tol: 1e-7,
+            max_iter: 2_000_000,
+            metric: Metric::ErrorVsTruth(p.x_star.clone()),
+            ..Default::default()
+        };
+        let rep = solver.solve(&sys, &opts).unwrap();
+        assert!(rep.converged, "M-ADMM err {:.2e} after {}", rep.final_error, rep.iterations);
+    }
+
+    #[test]
+    fn full_admm_also_converges() {
+        // The paper's "zeroing y speeds things up significantly" is a
+        // statement about well-tuned runs on its ill-conditioned suite,
+        // not a per-instance theorem — at a fixed arbitrary ξ either
+        // variant can win (the dual dynamics add momentum-like effects).
+        // Here we only pin correctness of the three-variable recursion;
+        // the modified-vs-full comparison lives in the ablation bench
+        // where both are tuned.
+        let p = Problem::standard_gaussian(20, 20, 2).build(53);
+        let sys = PartitionedSystem::split_even(&p.a, &p.b, 2).unwrap();
+        let opts = SolverOptions {
+            tol: 1e-6,
+            max_iter: 3_000_000,
+            metric: Metric::ErrorVsTruth(p.x_star.clone()),
+            ..Default::default()
+        };
+        let rep_mod = Admm::with_params(&sys, 1.0).unwrap().solve(&sys, &opts).unwrap();
+        let rep_full = FullAdmm::with_params(&sys, 1.0).unwrap().solve(&sys, &opts).unwrap();
+        assert!(rep_mod.converged, "modified failed: {:.2e}", rep_mod.final_error);
+        assert!(rep_full.converged, "full failed: {:.2e}", rep_full.final_error);
+    }
+
+    #[test]
+    fn fixed_point_is_solution() {
+        // one ADMM step away from x* must return x* exactly
+        let p = Problem::standard_gaussian(16, 16, 2).build(55);
+        let sys = PartitionedSystem::split_even(&p.a, &p.b, 2).unwrap();
+        let mut solver = Admm::with_params(&sys, 0.9).unwrap();
+        solver.xbar.copy_from_slice(&p.x_star);
+        solver.iterate(&sys);
+        let err = crate::linalg::vector::max_abs_diff(solver.xbar(), &p.x_star);
+        assert!(err < 1e-9, "fixed-point drift {:.2e}", err);
+    }
+}

@@ -1,0 +1,226 @@
+//! Accelerated Projection-based Consensus — Algorithm 1, the paper's
+//! contribution.
+
+use super::local::{master_momentum_average, ApcLocal};
+use super::Solver;
+use crate::partition::PartitionedSystem;
+use crate::rates::{apc_optimal, ApcParams, SpectralInfo};
+use anyhow::Result;
+
+/// APC solver state: one [`ApcLocal`] per machine plus the master's `x̄`.
+#[derive(Clone, Debug)]
+pub struct Apc {
+    pub gamma: f64,
+    pub eta: f64,
+    locals: Vec<ApcLocal>,
+    xbar: Vec<f64>,
+    sum: Vec<f64>,
+}
+
+impl Apc {
+    /// Build with explicit `(γ, η)` (e.g. from [`apc_optimal`], or for
+    /// sensitivity ablations).
+    pub fn with_params(sys: &PartitionedSystem, gamma: f64, eta: f64) -> Result<Self> {
+        let locals = sys
+            .blocks
+            .iter()
+            .map(|blk| ApcLocal::new(blk, gamma))
+            .collect::<Result<Vec<_>>>()?;
+        let mut s = Apc { gamma, eta, locals, xbar: vec![0.0; sys.n], sum: vec![0.0; sys.n] };
+        s.init_xbar(sys);
+        Ok(s)
+    }
+
+    /// Build with the Theorem-1 optimal `(γ*, η*)` computed from the
+    /// spectrum of `X` (an `O(n³)` analysis performed once).
+    pub fn auto(sys: &PartitionedSystem) -> Result<Self> {
+        let spectral = SpectralInfo::compute(sys)?;
+        Self::auto_with_spectral(sys, &spectral)
+    }
+
+    /// Like [`auto`](Apc::auto) but reusing a precomputed spectrum (benches
+    /// tune many solvers off one eigensolve).
+    pub fn auto_with_spectral(sys: &PartitionedSystem, s: &SpectralInfo) -> Result<Self> {
+        let ApcParams { gamma, eta, .. } = apc_optimal(s.mu_min, s.mu_max)?;
+        Self::with_params(sys, gamma, eta)
+    }
+
+    /// Production tuning without the `O(n³)` eigensolve: estimate the
+    /// spectrum with `iters` distributed power-iteration rounds
+    /// ([`SpectralInfo::estimate`]) and tune *conservatively*.
+    ///
+    /// The sensitivity ablation (EXPERIMENTS.md §Ablations D) shows the
+    /// Theorem-1 optimum sits on the boundary of the stability set S:
+    /// over-estimating `μ_min` diverges while under-estimating only costs
+    /// rate. `safety < 1` shrinks the `μ_min` estimate accordingly
+    /// (0.9 is a good default; use smaller when `iters` is tight).
+    pub fn auto_estimated(sys: &PartitionedSystem, iters: usize, safety: f64) -> Result<Self> {
+        let s = SpectralInfo::estimate(sys, iters, safety)?;
+        Self::auto_with_spectral(sys, &s)
+    }
+
+    /// Paper's master initialization: average of the feasible starts.
+    fn init_xbar(&mut self, sys: &PartitionedSystem) {
+        self.xbar.fill(0.0);
+        for l in &self.locals {
+            for (s, v) in self.xbar.iter_mut().zip(&l.x) {
+                *s += v;
+            }
+        }
+        let m = sys.m() as f64;
+        for v in self.xbar.iter_mut() {
+            *v /= m;
+        }
+    }
+
+    /// Per-machine iterates (used by the coordinator parity tests).
+    pub fn locals(&self) -> &[ApcLocal] {
+        &self.locals
+    }
+}
+
+impl Solver for Apc {
+    fn name(&self) -> &'static str {
+        "APC"
+    }
+
+    fn xbar(&self) -> &[f64] {
+        &self.xbar
+    }
+
+    fn iterate(&mut self, sys: &PartitionedSystem) {
+        // machine phase (parallel in the distributed execution)
+        for (local, blk) in self.locals.iter_mut().zip(&sys.blocks) {
+            local.step(blk, &self.xbar);
+        }
+        // master phase: x̄ ← (η/m) Σ x_i + (1−η) x̄
+        self.sum.fill(0.0);
+        for local in &self.locals {
+            for (s, v) in self.sum.iter_mut().zip(&local.x) {
+                *s += v;
+            }
+        }
+        master_momentum_average(&mut self.xbar, &self.sum, sys.m(), self.eta);
+    }
+
+    fn reset(&mut self, sys: &PartitionedSystem) {
+        for (local, blk) in self.locals.iter_mut().zip(&sys.blocks) {
+            *local = ApcLocal::new(blk, self.gamma).expect("reset of a previously valid block");
+        }
+        self.init_xbar(sys);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gen::problems::Problem;
+    use crate::linalg::vector::relative_error;
+    use crate::solvers::{fit_decay_rate, Metric, SolverOptions};
+
+    fn build(n: usize, m: usize, seed: u64) -> (PartitionedSystem, Vec<f64>) {
+        let p = Problem::standard_gaussian(n, n, m).build(seed);
+        let sys = PartitionedSystem::split_even(&p.a, &p.b, m).unwrap();
+        (sys, p.x_star)
+    }
+
+    #[test]
+    fn apc_converges_to_planted_solution() {
+        let (sys, xstar) = build(40, 5, 31);
+        let mut solver = Apc::auto(&sys).unwrap();
+        let opts = SolverOptions {
+            tol: 1e-10,
+            metric: Metric::ErrorVsTruth(xstar.clone()),
+            ..Default::default()
+        };
+        let rep = solver.solve(&sys, &opts).unwrap();
+        assert!(rep.converged, "APC failed: {:?} iters, err {:.2e}", rep.iterations, rep.final_error);
+        assert!(relative_error(&rep.solution, &xstar) < 1e-9);
+    }
+
+    #[test]
+    fn apc_measured_rate_matches_theorem1() {
+        let (sys, xstar) = build(36, 4, 7);
+        let spectral = SpectralInfo::compute(&sys).unwrap();
+        let params = apc_optimal(spectral.mu_min, spectral.mu_max).unwrap();
+        let mut solver = Apc::auto_with_spectral(&sys, &spectral).unwrap();
+        let opts = SolverOptions {
+            tol: 1e-12,
+            max_iter: 600,
+            metric: Metric::ErrorVsTruth(xstar),
+            record_every: 1,
+            ..Default::default()
+        };
+        let rep = solver.solve(&sys, &opts).unwrap();
+        let measured = fit_decay_rate(&rep.history).expect("history");
+        // measured per-iteration contraction should match ρ* closely;
+        // allow slack because the finite-horizon fit sees subdominant modes
+        assert!(
+            (measured - params.rho).abs() < 0.05 + 0.05 * params.rho,
+            "measured ρ̂ {:.4} vs theoretical ρ* {:.4}",
+            measured,
+            params.rho
+        );
+    }
+
+    #[test]
+    fn apc_reset_reproduces_run() {
+        let (sys, _) = build(24, 4, 3);
+        let mut solver = Apc::auto(&sys).unwrap();
+        let opts = SolverOptions { max_iter: 50, tol: 0.0, ..Default::default() };
+        let rep1 = solver.solve(&sys, &opts).unwrap();
+        solver.reset(&sys);
+        let rep2 = solver.solve(&sys, &opts).unwrap();
+        assert_eq!(rep1.solution, rep2.solution);
+    }
+
+    #[test]
+    fn apc_diverges_outside_stability_region() {
+        // (γ, η) far outside S must grow the error (Theorem 1 "only if")
+        let (sys, xstar) = build(24, 4, 5);
+        let mut solver = Apc::with_params(&sys, 1.99, 8.0).unwrap();
+        let opts = SolverOptions {
+            tol: 0.0,
+            max_iter: 200,
+            metric: Metric::ErrorVsTruth(xstar),
+            ..Default::default()
+        };
+        let rep = solver.solve(&sys, &opts).unwrap();
+        assert!(
+            rep.final_error > 1e2 || !rep.final_error.is_finite(),
+            "expected divergence, got {:.2e}",
+            rep.final_error
+        );
+    }
+
+    #[test]
+    fn apc_auto_estimated_converges() {
+        // tuning from the distributed power-iteration estimate (no O(n³)
+        // eigensolve) must converge — slightly slower than exact tuning
+        // is acceptable, divergence is not
+        let (sys, xstar) = build(40, 5, 33);
+        let mut solver = Apc::auto_estimated(&sys, 3000, 0.9).unwrap();
+        let opts = SolverOptions {
+            tol: 1e-9,
+            max_iter: 500_000,
+            metric: Metric::ErrorVsTruth(xstar),
+            ..Default::default()
+        };
+        let rep = solver.solve(&sys, &opts).unwrap();
+        assert!(rep.converged, "estimated tuning failed: {:.2e}", rep.final_error);
+    }
+
+    #[test]
+    fn apc_tall_system() {
+        let p = Problem::standard_gaussian(60, 30, 6).build(13);
+        let sys = PartitionedSystem::split_even(&p.a, &p.b, 6).unwrap();
+        let mut solver = Apc::auto(&sys).unwrap();
+        let opts = SolverOptions {
+            tol: 1e-9,
+            metric: Metric::ErrorVsTruth(p.x_star.clone()),
+            ..Default::default()
+        };
+        let rep = solver.solve(&sys, &opts).unwrap();
+        assert!(rep.converged, "tall APC err {:.2e}", rep.final_error);
+    }
+}

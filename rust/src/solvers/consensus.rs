@@ -1,0 +1,96 @@
+//! Vanilla projection-based consensus (Liu–Mou–Morse [11, 14]; Table 1
+//! column "Consensus"): APC without either momentum, i.e. `γ = 1` and
+//! plain averaging `η = 1`. Rate `1 − μ_min(X)` — dramatically slower than
+//! APC; kept as a first-class baseline because it is the method APC
+//! directly accelerates.
+
+use super::apc::Apc;
+use super::Solver;
+use crate::partition::PartitionedSystem;
+use anyhow::Result;
+
+/// The un-accelerated consensus baseline (a thin wrapper pinning APC's
+/// parameters to `γ = η = 1`).
+#[derive(Clone, Debug)]
+pub struct Consensus {
+    inner: Apc,
+}
+
+impl Consensus {
+    pub fn new(sys: &PartitionedSystem) -> Result<Self> {
+        Ok(Consensus { inner: Apc::with_params(sys, 1.0, 1.0)? })
+    }
+}
+
+impl Solver for Consensus {
+    fn name(&self) -> &'static str {
+        "Consensus"
+    }
+
+    fn xbar(&self) -> &[f64] {
+        self.inner.xbar()
+    }
+
+    fn iterate(&mut self, sys: &PartitionedSystem) {
+        self.inner.iterate(sys)
+    }
+
+    fn reset(&mut self, sys: &PartitionedSystem) {
+        self.inner.reset(sys)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gen::problems::Problem;
+    use crate::rates::{consensus_rho, SpectralInfo};
+    use crate::solvers::apc::Apc;
+    use crate::solvers::{fit_decay_rate, Metric, SolverOptions};
+
+    #[test]
+    fn consensus_converges_but_slower_than_apc() {
+        let p = Problem::standard_gaussian(30, 30, 3).build(41);
+        let sys = PartitionedSystem::split_even(&p.a, &p.b, 3).unwrap();
+        let opts = SolverOptions {
+            tol: 1e-6,
+            max_iter: 2_000_000,
+            metric: Metric::ErrorVsTruth(p.x_star.clone()),
+            ..Default::default()
+        };
+        let rep_con = Consensus::new(&sys).unwrap().solve(&sys, &opts).unwrap();
+        let rep_apc = Apc::auto(&sys).unwrap().solve(&sys, &opts).unwrap();
+        assert!(rep_con.converged, "consensus err {:.2e}", rep_con.final_error);
+        assert!(rep_apc.converged);
+        assert!(
+            rep_apc.iterations * 2 < rep_con.iterations,
+            "APC {} vs consensus {}",
+            rep_apc.iterations,
+            rep_con.iterations
+        );
+    }
+
+    #[test]
+    fn consensus_rate_is_one_minus_mu_min() {
+        let p = Problem::standard_gaussian(24, 24, 4).build(43);
+        let sys = PartitionedSystem::split_even(&p.a, &p.b, 4).unwrap();
+        let s = SpectralInfo::compute(&sys).unwrap();
+        let rho = consensus_rho(s.mu_min);
+        let mut solver = Consensus::new(&sys).unwrap();
+        let opts = SolverOptions {
+            tol: 0.0,
+            max_iter: 3_000,
+            metric: Metric::ErrorVsTruth(p.x_star.clone()),
+            record_every: 1,
+            ..Default::default()
+        };
+        let rep = solver.solve(&sys, &opts).unwrap();
+        let measured = fit_decay_rate(&rep.history).unwrap();
+        assert!(
+            (measured - rho).abs() < 0.02,
+            "measured {:.5} vs 1−μ_min {:.5}",
+            measured,
+            rho
+        );
+    }
+}

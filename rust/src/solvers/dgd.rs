@@ -1,0 +1,130 @@
+//! Distributed Gradient Descent (§4.1, Eq. 8):
+//! `x(t+1) = x(t) − α Σ_i A_iᵀ(A_i x(t) − b_i)`.
+
+use super::local::GradLocal;
+use super::Solver;
+use crate::partition::PartitionedSystem;
+use crate::rates::{dgd_optimal, SpectralInfo};
+use anyhow::Result;
+
+/// DGD solver: the master holds `x`, machines return partial gradients.
+#[derive(Clone, Debug)]
+pub struct Dgd {
+    pub alpha: f64,
+    locals: Vec<GradLocal>,
+    x: Vec<f64>,
+    grad: Vec<f64>,
+    partial: Vec<f64>,
+}
+
+impl Dgd {
+    pub fn with_params(sys: &PartitionedSystem, alpha: f64) -> Self {
+        let locals = sys.blocks.iter().map(GradLocal::new).collect();
+        Dgd {
+            alpha,
+            locals,
+            x: vec![0.0; sys.n],
+            grad: vec![0.0; sys.n],
+            partial: vec![0.0; sys.n],
+        }
+    }
+
+    /// Optimal step `α* = 2/(λ_max + λ_min)` from the spectrum of `AᵀA`.
+    pub fn auto(sys: &PartitionedSystem) -> Result<Self> {
+        let s = SpectralInfo::compute(sys)?;
+        Ok(Self::auto_with_spectral(sys, &s))
+    }
+
+    pub fn auto_with_spectral(sys: &PartitionedSystem, s: &SpectralInfo) -> Self {
+        let (alpha, _) = dgd_optimal(s.lambda_min, s.lambda_max);
+        Self::with_params(sys, alpha)
+    }
+}
+
+impl Solver for Dgd {
+    fn name(&self) -> &'static str {
+        "DGD"
+    }
+
+    fn xbar(&self) -> &[f64] {
+        &self.x
+    }
+
+    fn iterate(&mut self, sys: &PartitionedSystem) {
+        self.grad.fill(0.0);
+        for (local, blk) in self.locals.iter_mut().zip(&sys.blocks) {
+            local.partial_grad(blk, &self.x, &mut self.partial);
+            for (g, p) in self.grad.iter_mut().zip(&self.partial) {
+                *g += p;
+            }
+        }
+        for (x, g) in self.x.iter_mut().zip(&self.grad) {
+            *x -= self.alpha * g;
+        }
+    }
+
+    fn reset(&mut self, _sys: &PartitionedSystem) {
+        self.x.fill(0.0);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gen::problems::Problem;
+    use crate::solvers::{fit_decay_rate, Metric, SolverOptions};
+
+    #[test]
+    fn dgd_converges_on_well_conditioned() {
+        let p = Problem::with_condition("dgd-easy", 30, 30, 3, 25.0).build(3);
+        let sys = PartitionedSystem::split_even(&p.a, &p.b, 3).unwrap();
+        let mut solver = Dgd::auto(&sys).unwrap();
+        let opts = SolverOptions {
+            tol: 1e-9,
+            metric: Metric::ErrorVsTruth(p.x_star.clone()),
+            ..Default::default()
+        };
+        let rep = solver.solve(&sys, &opts).unwrap();
+        assert!(rep.converged, "DGD err {:.2e} after {}", rep.final_error, rep.iterations);
+    }
+
+    #[test]
+    fn dgd_measured_rate_matches_formula() {
+        let p = Problem::with_condition("dgd-rate", 24, 24, 3, 16.0).build(5);
+        let sys = PartitionedSystem::split_even(&p.a, &p.b, 3).unwrap();
+        let s = SpectralInfo::compute(&sys).unwrap();
+        let (_, rho) = dgd_optimal(s.lambda_min, s.lambda_max);
+        let mut solver = Dgd::auto_with_spectral(&sys, &s);
+        let opts = SolverOptions {
+            tol: 1e-13,
+            max_iter: 400,
+            metric: Metric::ErrorVsTruth(p.x_star.clone()),
+            record_every: 1,
+            ..Default::default()
+        };
+        let rep = solver.solve(&sys, &opts).unwrap();
+        let measured = fit_decay_rate(&rep.history).unwrap();
+        assert!(
+            (measured - rho).abs() < 0.03,
+            "measured {:.4} vs analytical {:.4}",
+            measured,
+            rho
+        );
+    }
+
+    #[test]
+    fn dgd_overly_large_step_diverges() {
+        let p = Problem::standard_gaussian(20, 20, 2).build(9);
+        let sys = PartitionedSystem::split_even(&p.a, &p.b, 2).unwrap();
+        let s = SpectralInfo::compute(&sys).unwrap();
+        let mut solver = Dgd::with_params(&sys, 2.5 / s.lambda_max * 2.0);
+        let opts = SolverOptions {
+            tol: 0.0,
+            max_iter: 100,
+            metric: Metric::ErrorVsTruth(p.x_star.clone()),
+            ..Default::default()
+        };
+        let rep = solver.solve(&sys, &opts).unwrap();
+        assert!(rep.final_error > 1.0 || !rep.final_error.is_finite());
+    }
+}

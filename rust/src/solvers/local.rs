@@ -1,0 +1,294 @@
+//! Per-machine ("local") kernels — the worker-side compute of each method.
+//!
+//! These are the exact operations a machine executes in one round. The
+//! single-process solvers loop over them; the [`crate::coordinator`]
+//! workers run one of them per thread; and the PJRT runtime executes the
+//! HLO-compiled equivalents authored in `python/compile/model.py`
+//! (integration tests pin the two against each other).
+
+use crate::linalg::Cholesky;
+use crate::partition::MachineBlock;
+use anyhow::{Context, Result};
+
+/// APC worker state (Algorithm 1 line 1): holds `x_i` and applies
+/// `x_i ← x_i + γ P_i (x̄ − x_i)` each round.
+#[derive(Clone, Debug)]
+pub struct ApcLocal {
+    pub gamma: f64,
+    pub x: Vec<f64>,
+    /// p-sized scratch for the Gram solve.
+    scratch_p: Vec<f64>,
+    /// n-sized scratch for the projection output.
+    scratch_n: Vec<f64>,
+}
+
+impl ApcLocal {
+    /// Initialize at a feasible point of `A_i x = b_i` (min-norm).
+    pub fn new(blk: &MachineBlock, gamma: f64) -> Result<Self> {
+        let x = blk.initial_solution().context("apc local init")?;
+        Ok(ApcLocal { gamma, x, scratch_p: Vec::new(), scratch_n: vec![0.0; blk.n()] })
+    }
+
+    /// One round: `x_i ← x_i + γ P_i (x̄ − x_i)`. Zero allocations.
+    pub fn step(&mut self, blk: &MachineBlock, xbar: &[f64]) {
+        let n = self.x.len();
+        // w = x̄ − x_i (reuse scratch_n as w, then as P w)
+        for k in 0..n {
+            self.scratch_n[k] = xbar[k] - self.x[k];
+        }
+        // in-place projection: scratch_n ← P_i scratch_n
+        let p = blk.p();
+        self.scratch_p.resize(p, 0.0);
+        blk.a.matvec_into(&self.scratch_n, &mut self.scratch_p);
+        blk.gram_chol.solve_in_place(&mut self.scratch_p);
+        // x_i += γ (w − A_iᵀ t); fold the subtraction into the update
+        for k in 0..n {
+            self.x[k] += self.gamma * self.scratch_n[k];
+        }
+        // subtract γ A_iᵀ t without materializing A_iᵀ t:
+        for r in 0..p {
+            let t = self.scratch_p[r];
+            if t == 0.0 {
+                continue;
+            }
+            let row = blk.a.row(r);
+            for k in 0..n {
+                self.x[k] -= self.gamma * t * row[k];
+            }
+        }
+    }
+}
+
+/// Gradient worker (shared by DGD / D-NAG / D-HBM): computes the partial
+/// gradient `g_i = A_iᵀ(A_i x − b_i)` of `½‖A_i x − b_i‖²`.
+#[derive(Clone, Debug)]
+pub struct GradLocal {
+    scratch_p: Vec<f64>,
+}
+
+impl GradLocal {
+    pub fn new(blk: &MachineBlock) -> Self {
+        GradLocal { scratch_p: vec![0.0; blk.p()] }
+    }
+
+    /// `out = A_iᵀ(A_i x − b_i)`. Zero allocations.
+    pub fn partial_grad(&mut self, blk: &MachineBlock, x: &[f64], out: &mut [f64]) {
+        blk.a.matvec_into(x, &mut self.scratch_p);
+        for (r, bi) in self.scratch_p.iter_mut().zip(&blk.b) {
+            *r -= bi;
+        }
+        blk.a.tr_matvec_into(&self.scratch_p, out);
+    }
+}
+
+/// Block-Cimmino worker: `r_i = A_i⁺ (b_i − A_i x̄)`.
+#[derive(Clone, Debug)]
+pub struct CimminoLocal {
+    scratch_p: Vec<f64>,
+}
+
+impl CimminoLocal {
+    pub fn new(blk: &MachineBlock) -> Self {
+        CimminoLocal { scratch_p: vec![0.0; blk.p()] }
+    }
+
+    /// `out = A_iᵀ (A_iA_iᵀ)⁻¹ (b_i − A_i x̄)`. Zero allocations.
+    pub fn step(&mut self, blk: &MachineBlock, xbar: &[f64], out: &mut [f64]) {
+        blk.a.matvec_into(xbar, &mut self.scratch_p);
+        for (r, bi) in self.scratch_p.iter_mut().zip(&blk.b) {
+            *r = bi - *r;
+        }
+        blk.gram_chol.solve_in_place(&mut self.scratch_p);
+        blk.a.tr_matvec_into(&self.scratch_p, out);
+    }
+}
+
+/// Modified-ADMM worker (§4.4 with y≡0):
+/// `x_i = (A_iᵀA_i + ξI)⁻¹ (A_iᵀ b_i + ξ x̄)`.
+///
+/// Implemented with the matrix-inversion lemma so the per-iteration cost
+/// stays `O(pn)` as the paper notes:
+/// `(A_iᵀA_i + ξI)⁻¹ v = (1/ξ)(v − A_iᵀ (ξI + A_iA_iᵀ)⁻¹ A_i v)`,
+/// with the `p×p` factor `(ξI + A_iA_iᵀ)` Cholesky-cached at setup.
+#[derive(Clone, Debug)]
+pub struct AdmmLocal {
+    pub xi: f64,
+    /// Cholesky of `ξI_p + A_i A_iᵀ`.
+    shifted_gram: Cholesky,
+    /// Cached `A_iᵀ b_i`.
+    atb: Vec<f64>,
+    scratch_p: Vec<f64>,
+    scratch_n: Vec<f64>,
+}
+
+impl AdmmLocal {
+    pub fn new(blk: &MachineBlock, xi: f64) -> Result<Self> {
+        let mut g = blk.a.gram_rows();
+        for i in 0..g.rows() {
+            g[(i, i)] += xi;
+        }
+        let shifted_gram = Cholesky::new(&g).context("admm local: ξI + A_iA_iᵀ not SPD")?;
+        let atb = blk.a.tr_matvec(&blk.b);
+        Ok(AdmmLocal {
+            xi,
+            shifted_gram,
+            atb,
+            scratch_p: vec![0.0; blk.p()],
+            scratch_n: vec![0.0; blk.n()],
+        })
+    }
+
+    /// `out = (A_iᵀA_i + ξI)⁻¹ (A_iᵀ b_i + ξ x̄)`. Zero allocations.
+    pub fn step(&mut self, blk: &MachineBlock, xbar: &[f64], out: &mut [f64]) {
+        let n = out.len();
+        // v = A_iᵀ b_i + ξ x̄
+        for k in 0..n {
+            self.scratch_n[k] = self.atb[k] + self.xi * xbar[k];
+        }
+        // lemma: out = (v − A_iᵀ (ξI+G)⁻¹ A_i v)/ξ
+        blk.a.matvec_into(&self.scratch_n, &mut self.scratch_p);
+        self.shifted_gram.solve_in_place(&mut self.scratch_p);
+        blk.a.tr_matvec_into(&self.scratch_p, out);
+        for k in 0..n {
+            out[k] = (self.scratch_n[k] - out[k]) / self.xi;
+        }
+    }
+}
+
+/// Dense-check helper: the explicit `(A_iᵀA_i + ξI)⁻¹ (A_iᵀb_i + ξ x̄)`
+/// via an n×n factorization. Test-only reference for [`AdmmLocal`].
+#[cfg(test)]
+pub fn admm_step_dense(blk: &MachineBlock, xi: f64, xbar: &[f64]) -> Vec<f64> {
+    let n = blk.n();
+    let mut local = blk.a.gram_cols();
+    for i in 0..n {
+        local[(i, i)] += xi;
+    }
+    let chol = Cholesky::new(&local).unwrap();
+    let mut v = blk.a.tr_matvec(&blk.b);
+    for k in 0..n {
+        v[k] += xi * xbar[k];
+    }
+    chol.solve(&v)
+}
+
+/// Assemble-side helper: master momentum averaging (Algorithm 1 line 2):
+/// `x̄ ← (η/m) Σ x_i + (1−η) x̄`, written to be reused by the coordinator.
+pub fn master_momentum_average(xbar: &mut [f64], sum_xi: &[f64], m: usize, eta: f64) {
+    let scale = eta / m as f64;
+    for k in 0..xbar.len() {
+        xbar[k] = scale * sum_xi[k] + (1.0 - eta) * xbar[k];
+    }
+}
+
+/// Dense reference for [`ApcLocal::step`] (test-only).
+#[cfg(test)]
+pub fn apc_step_dense(blk: &MachineBlock, gamma: f64, x: &[f64], xbar: &[f64]) -> Vec<f64> {
+    let p_mat = blk.projector();
+    let w: Vec<f64> = xbar.iter().zip(x).map(|(a, b)| a - b).collect();
+    let pw = p_mat.matvec(&w);
+    x.iter().zip(&pw).map(|(xi, pi)| xi + gamma * pi).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gen::problems::Problem;
+    use crate::linalg::vector::max_abs_diff;
+    use crate::partition::PartitionedSystem;
+
+    fn sys() -> PartitionedSystem {
+        let p = Problem::standard_gaussian(18, 9, 3).build(23);
+        PartitionedSystem::split_even(&p.a, &p.b, 3).unwrap()
+    }
+
+    #[test]
+    fn apc_local_matches_dense_reference() {
+        let sys = sys();
+        let blk = &sys.blocks[1];
+        let mut local = ApcLocal::new(blk, 1.37).unwrap();
+        let xbar: Vec<f64> = (0..9).map(|i| (i as f64).cos()).collect();
+        let expect = apc_step_dense(blk, 1.37, &local.x, &xbar);
+        local.step(blk, &xbar);
+        assert!(max_abs_diff(&local.x, &expect) < 1e-11);
+    }
+
+    #[test]
+    fn apc_local_stays_feasible() {
+        // Invariant: x_i(t) always solves A_i x = b_i — the projection
+        // moves only within the affine solution set.
+        let sys = sys();
+        let blk = &sys.blocks[0];
+        let mut local = ApcLocal::new(blk, 0.9).unwrap();
+        let mut xbar: Vec<f64> = vec![0.3; 9];
+        for round in 0..10 {
+            local.step(blk, &xbar);
+            let ax = blk.a.matvec(&local.x);
+            assert!(
+                max_abs_diff(&ax, &blk.b) < 1e-9,
+                "feasibility lost at round {round}"
+            );
+            // drift x̄ a bit each round
+            for v in xbar.iter_mut() {
+                *v *= 0.9;
+            }
+        }
+    }
+
+    #[test]
+    fn grad_local_matches_formula() {
+        let sys = sys();
+        let blk = &sys.blocks[2];
+        let mut g = GradLocal::new(blk);
+        let x: Vec<f64> = (0..9).map(|i| 0.1 * i as f64).collect();
+        let mut out = vec![0.0; 9];
+        g.partial_grad(blk, &x, &mut out);
+        let r: Vec<f64> = blk.a.matvec(&x).iter().zip(&blk.b).map(|(a, b)| a - b).collect();
+        let expect = blk.a.tr_matvec(&r);
+        assert!(max_abs_diff(&out, &expect) < 1e-12);
+    }
+
+    #[test]
+    fn cimmino_local_is_pinv_residual() {
+        let sys = sys();
+        let blk = &sys.blocks[0];
+        let mut c = CimminoLocal::new(blk);
+        let xbar: Vec<f64> = (0..9).map(|i| (i as f64 * 0.7).sin()).collect();
+        let mut out = vec![0.0; 9];
+        c.step(blk, &xbar, &mut out);
+        let resid: Vec<f64> =
+            blk.b.iter().zip(blk.a.matvec(&xbar)).map(|(bi, axi)| bi - axi).collect();
+        let expect = blk.pinv_apply(&resid);
+        assert!(max_abs_diff(&out, &expect) < 1e-12);
+    }
+
+    #[test]
+    fn admm_local_lemma_matches_dense() {
+        let sys = sys();
+        let blk = &sys.blocks[1];
+        let xi = 0.7;
+        let mut a = AdmmLocal::new(blk, xi).unwrap();
+        let xbar: Vec<f64> = (0..9).map(|i| 0.2 * i as f64 - 0.5).collect();
+        let mut out = vec![0.0; 9];
+        a.step(blk, &xbar, &mut out);
+        let expect = admm_step_dense(blk, xi, &xbar);
+        assert!(max_abs_diff(&out, &expect) < 1e-10);
+    }
+
+    #[test]
+    fn master_momentum_reduces_to_average_at_eta_one() {
+        let mut xbar = vec![5.0, 5.0];
+        let sum = vec![2.0, 4.0];
+        master_momentum_average(&mut xbar, &sum, 2, 1.0);
+        assert_eq!(xbar, vec![1.0, 2.0]);
+    }
+
+    #[test]
+    fn master_momentum_keeps_fixed_point() {
+        // if Σx_i/m == x̄ then any η leaves x̄ unchanged
+        let mut xbar = vec![1.5, -2.0];
+        let sum = vec![3.0, -4.0];
+        master_momentum_average(&mut xbar, &sum, 2, 1.8);
+        assert!(max_abs_diff(&xbar, &[1.5, -2.0]) < 1e-15);
+    }
+}

@@ -1,0 +1,145 @@
+//! Name-indexed solver construction — the shared glue between the CLI,
+//! the examples, and the paper-table benches: "give me method X, tuned
+//! optimally for this system" as one call.
+
+use super::{admm::Admm, apc::Apc, cimmino::Cimmino, consensus::Consensus, dgd::Dgd, hbm::Hbm,
+            nag::Nag, phbm::Phbm, Solver};
+use crate::coordinator::Method;
+use crate::partition::PartitionedSystem;
+use crate::rates::{self, SpectralInfo};
+use anyhow::{bail, Result};
+
+/// Method names in the paper's Table-2 column order.
+pub const TABLE2_ORDER: [&str; 6] = ["dgd", "nag", "hbm", "admm", "cimmino", "apc"];
+
+/// All methods, including the ones outside Table 2 (consensus baseline,
+/// §6 preconditioned HBM).
+pub const ALL: [&str; 8] = ["dgd", "nag", "hbm", "admm", "cimmino", "apc", "consensus", "phbm"];
+
+/// Construct the optimally tuned single-process solver `name`.
+pub fn tuned_solver(
+    name: &str,
+    sys: &PartitionedSystem,
+    s: &SpectralInfo,
+) -> Result<Box<dyn Solver>> {
+    Ok(match name {
+        "apc" => Box::new(Apc::auto_with_spectral(sys, s)?),
+        "consensus" => Box::new(Consensus::new(sys)?),
+        "dgd" => Box::new(Dgd::auto_with_spectral(sys, s)),
+        "nag" => Box::new(Nag::auto_with_spectral(sys, s)),
+        "hbm" => Box::new(Hbm::auto_with_spectral(sys, s)),
+        "cimmino" => Box::new(Cimmino::auto_with_spectral(sys, s)),
+        "admm" => Box::new(Admm::auto_with_spectral(sys, s)?),
+        "phbm" => Box::new(Phbm::auto(sys)?),
+        other => bail!("unknown solver {:?} (expected one of {:?})", other, ALL),
+    })
+}
+
+/// Construct the optimally tuned coordinator [`Method`] descriptor.
+///
+/// `phbm` is intentionally absent: §6 preconditioning transforms the
+/// *system*, not the master rule — precondition with
+/// [`PartitionedSystem::preconditioned`] and run `hbm` on the result.
+pub fn tuned_method(name: &str, sys: &PartitionedSystem, s: &SpectralInfo) -> Result<Method> {
+    Ok(match name {
+        "apc" => {
+            let p = rates::apc_optimal(s.mu_min, s.mu_max)?;
+            Method::Apc { gamma: p.gamma, eta: p.eta }
+        }
+        "consensus" => Method::Consensus,
+        "dgd" => {
+            let (alpha, _) = rates::dgd_optimal(s.lambda_min, s.lambda_max);
+            Method::Dgd { alpha }
+        }
+        "nag" => {
+            let (alpha, beta, _) = rates::nag_optimal(s.lambda_min, s.lambda_max);
+            Method::Nag { alpha, beta }
+        }
+        "hbm" => {
+            let (alpha, beta, _) = rates::hbm_optimal(s.lambda_min, s.lambda_max);
+            Method::Hbm { alpha, beta }
+        }
+        "cimmino" => {
+            let (nu, _) = rates::cimmino_optimal(s.mu_min, s.mu_max, sys.m());
+            Method::Cimmino { nu }
+        }
+        "admm" => {
+            let (xi, _) = rates::admm_optimal(sys, s)?;
+            Method::Admm { xi }
+        }
+        other => bail!(
+            "unknown coordinator method {:?} (phbm runs as hbm on sys.preconditioned())",
+            other
+        ),
+    })
+}
+
+/// The analytical optimal rate for `name` (Table 1 row), where closed
+/// form exists; ADMM needs the numeric tuning and is returned by
+/// [`rates::admm_optimal`] instead.
+pub fn analytic_rho(name: &str, sys: &PartitionedSystem, s: &SpectralInfo) -> Result<f64> {
+    Ok(match name {
+        "apc" => rates::apc_optimal(s.mu_min, s.mu_max)?.rho,
+        "consensus" => rates::consensus_rho(s.mu_min),
+        "dgd" => rates::dgd_optimal(s.lambda_min, s.lambda_max).1,
+        "nag" => rates::nag_optimal(s.lambda_min, s.lambda_max).2,
+        "hbm" => rates::hbm_optimal(s.lambda_min, s.lambda_max).2,
+        "cimmino" => rates::cimmino_optimal(s.mu_min, s.mu_max, sys.m()).1,
+        "admm" => rates::admm_optimal(sys, s)?.1,
+        "phbm" => {
+            // §6: same rate as APC by construction
+            rates::apc_optimal(s.mu_min, s.mu_max)?.rho
+        }
+        other => bail!("unknown method {:?}", other),
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gen::problems::Problem;
+    use crate::solvers::{Metric, SolverOptions};
+
+    #[test]
+    fn every_named_solver_constructs_and_converges() {
+        let p = Problem::standard_gaussian(24, 24, 3).build(91);
+        let sys = PartitionedSystem::split_even(&p.a, &p.b, 3).unwrap();
+        let s = SpectralInfo::compute(&sys).unwrap();
+        for name in ALL {
+            let mut solver = tuned_solver(name, &sys, &s).unwrap();
+            let opts = SolverOptions {
+                tol: 1e-6,
+                max_iter: 2_000_000,
+                metric: Metric::ErrorVsTruth(p.x_star.clone()),
+                ..Default::default()
+            };
+            let rep = solver.solve(&sys, &opts).unwrap();
+            assert!(rep.converged, "{name}: err {:.2e} after {}", rep.final_error, rep.iterations);
+        }
+    }
+
+    #[test]
+    fn every_coordinator_method_constructs() {
+        let p = Problem::standard_gaussian(24, 24, 3).build(93);
+        let sys = PartitionedSystem::split_even(&p.a, &p.b, 3).unwrap();
+        let s = SpectralInfo::compute(&sys).unwrap();
+        for name in TABLE2_ORDER {
+            tuned_method(name, &sys, &s).unwrap();
+        }
+        assert!(tuned_method("phbm", &sys, &s).is_err());
+        assert!(tuned_solver("bogus", &sys, &s).is_err());
+    }
+
+    #[test]
+    fn analytic_rho_ordering_matches_table1() {
+        let p = Problem::standard_gaussian(32, 32, 4).build(95);
+        let sys = PartitionedSystem::split_even(&p.a, &p.b, 4).unwrap();
+        let s = SpectralInfo::compute(&sys).unwrap();
+        let rho = |n: &str| analytic_rho(n, &sys, &s).unwrap();
+        assert!(rho("apc") <= rho("cimmino"));
+        assert!(rho("cimmino") <= rho("consensus"));
+        assert!(rho("hbm") <= rho("nag"));
+        assert!(rho("nag") <= rho("dgd"));
+        assert!((rho("phbm") - rho("apc")).abs() < 1e-15);
+    }
+}

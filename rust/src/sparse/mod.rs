@@ -1,0 +1,260 @@
+//! Sparse matrix substrate (COO builder + CSR kernels).
+//!
+//! The original Matrix-Market problems (ORSIRR 1, ASH608) are sparse; the
+//! MM reader produces a [`Coo`] which converts to [`Csr`] for matvec. The
+//! iterative solvers accept either dense or sparse operators through
+//! [`LinOp`].
+
+use crate::linalg::Mat;
+use anyhow::{bail, Result};
+
+/// Triplet (COO) accumulation format — what the Matrix Market reader emits.
+#[derive(Clone, Debug, Default)]
+pub struct Coo {
+    pub rows: usize,
+    pub cols: usize,
+    pub entries: Vec<(usize, usize, f64)>,
+}
+
+impl Coo {
+    pub fn new(rows: usize, cols: usize) -> Self {
+        Coo { rows, cols, entries: Vec::new() }
+    }
+
+    /// Add `value` at `(i, j)`. Duplicates are summed on conversion
+    /// (Matrix Market allows them for assembled matrices).
+    pub fn push(&mut self, i: usize, j: usize, value: f64) -> Result<()> {
+        if i >= self.rows || j >= self.cols {
+            bail!("coo: entry ({}, {}) outside {}x{}", i, j, self.rows, self.cols);
+        }
+        self.entries.push((i, j, value));
+        Ok(())
+    }
+
+    /// Convert to CSR, summing duplicates.
+    pub fn to_csr(&self) -> Csr {
+        let mut entries = self.entries.clone();
+        entries.sort_by_key(|&(i, j, _)| (i, j));
+        // merge duplicates
+        let mut merged: Vec<(usize, usize, f64)> = Vec::with_capacity(entries.len());
+        for (i, j, v) in entries {
+            match merged.last_mut() {
+                Some(last) if last.0 == i && last.1 == j => last.2 += v,
+                _ => merged.push((i, j, v)),
+            }
+        }
+        let mut row_ptr = vec![0usize; self.rows + 1];
+        for &(i, _, _) in &merged {
+            row_ptr[i + 1] += 1;
+        }
+        for i in 0..self.rows {
+            row_ptr[i + 1] += row_ptr[i];
+        }
+        let col_idx = merged.iter().map(|&(_, j, _)| j).collect();
+        let values = merged.iter().map(|&(_, _, v)| v).collect();
+        Csr { rows: self.rows, cols: self.cols, row_ptr, col_idx, values }
+    }
+
+    /// Dense conversion (small matrices / tests).
+    pub fn to_dense(&self) -> Mat {
+        let mut m = Mat::zeros(self.rows, self.cols);
+        for &(i, j, v) in &self.entries {
+            m[(i, j)] += v;
+        }
+        m
+    }
+}
+
+/// Compressed sparse row matrix.
+#[derive(Clone, Debug)]
+pub struct Csr {
+    pub rows: usize,
+    pub cols: usize,
+    pub row_ptr: Vec<usize>,
+    pub col_idx: Vec<usize>,
+    pub values: Vec<f64>,
+}
+
+impl Csr {
+    pub fn nnz(&self) -> usize {
+        self.values.len()
+    }
+
+    /// `y = A x`.
+    pub fn matvec(&self, x: &[f64]) -> Vec<f64> {
+        let mut y = vec![0.0; self.rows];
+        self.matvec_into(x, &mut y);
+        y
+    }
+
+    /// `y = A x`, zero-alloc.
+    pub fn matvec_into(&self, x: &[f64], y: &mut [f64]) {
+        assert_eq!(x.len(), self.cols, "csr matvec: dimension mismatch");
+        assert_eq!(y.len(), self.rows, "csr matvec: output mismatch");
+        for i in 0..self.rows {
+            let mut s = 0.0;
+            for k in self.row_ptr[i]..self.row_ptr[i + 1] {
+                s += self.values[k] * x[self.col_idx[k]];
+            }
+            y[i] = s;
+        }
+    }
+
+    /// `y = Aᵀ x`, zero-alloc.
+    pub fn tr_matvec_into(&self, x: &[f64], y: &mut [f64]) {
+        assert_eq!(x.len(), self.rows, "csr tr_matvec: dimension mismatch");
+        assert_eq!(y.len(), self.cols, "csr tr_matvec: output mismatch");
+        y.fill(0.0);
+        for i in 0..self.rows {
+            let xi = x[i];
+            if xi == 0.0 {
+                continue;
+            }
+            for k in self.row_ptr[i]..self.row_ptr[i + 1] {
+                y[self.col_idx[k]] += self.values[k] * xi;
+            }
+        }
+    }
+
+    /// Extract the dense row block `[r0, r1)` — how a worker materializes
+    /// its `A_i` from a sparse global matrix.
+    pub fn row_block_dense(&self, r0: usize, r1: usize) -> Mat {
+        assert!(r0 <= r1 && r1 <= self.rows, "row_block_dense: bad range");
+        let mut m = Mat::zeros(r1 - r0, self.cols);
+        for i in r0..r1 {
+            for k in self.row_ptr[i]..self.row_ptr[i + 1] {
+                m[(i - r0, self.col_idx[k])] = self.values[k];
+            }
+        }
+        m
+    }
+
+    /// Dense conversion.
+    pub fn to_dense(&self) -> Mat {
+        self.row_block_dense(0, self.rows)
+    }
+
+    /// Build from a dense matrix, dropping exact zeros.
+    pub fn from_dense(a: &Mat) -> Csr {
+        let mut coo = Coo::new(a.rows(), a.cols());
+        for i in 0..a.rows() {
+            for j in 0..a.cols() {
+                let v = a[(i, j)];
+                if v != 0.0 {
+                    coo.push(i, j, v).expect("in-range by construction");
+                }
+            }
+        }
+        coo.to_csr()
+    }
+}
+
+/// Linear operator abstraction: solvers that only need `Ax` / `Aᵀx` work
+/// against this, so both dense blocks and sparse global matrices plug in.
+pub trait LinOp {
+    fn shape(&self) -> (usize, usize);
+    fn apply_into(&self, x: &[f64], y: &mut [f64]);
+    fn apply_transpose_into(&self, x: &[f64], y: &mut [f64]);
+}
+
+impl LinOp for Mat {
+    fn shape(&self) -> (usize, usize) {
+        (self.rows(), self.cols())
+    }
+    fn apply_into(&self, x: &[f64], y: &mut [f64]) {
+        self.matvec_into(x, y)
+    }
+    fn apply_transpose_into(&self, x: &[f64], y: &mut [f64]) {
+        self.tr_matvec_into(x, y)
+    }
+}
+
+impl LinOp for Csr {
+    fn shape(&self) -> (usize, usize) {
+        (self.rows, self.cols)
+    }
+    fn apply_into(&self, x: &[f64], y: &mut [f64]) {
+        self.matvec_into(x, y)
+    }
+    fn apply_transpose_into(&self, x: &[f64], y: &mut [f64]) {
+        self.tr_matvec_into(x, y)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::vector::max_abs_diff;
+
+    fn sample() -> Coo {
+        let mut c = Coo::new(3, 4);
+        c.push(0, 0, 1.0).unwrap();
+        c.push(0, 3, 2.0).unwrap();
+        c.push(1, 1, -1.0).unwrap();
+        c.push(2, 2, 3.0).unwrap();
+        c.push(2, 0, 0.5).unwrap();
+        c
+    }
+
+    #[test]
+    fn csr_matvec_matches_dense() {
+        let coo = sample();
+        let csr = coo.to_csr();
+        let dense = coo.to_dense();
+        let x = [1.0, 2.0, 3.0, 4.0];
+        assert!(max_abs_diff(&csr.matvec(&x), &dense.matvec(&x)) < 1e-15);
+    }
+
+    #[test]
+    fn csr_tr_matvec_matches_dense() {
+        let coo = sample();
+        let csr = coo.to_csr();
+        let dense = coo.to_dense();
+        let x = [1.0, -2.0, 0.5];
+        let mut y1 = vec![0.0; 4];
+        csr.tr_matvec_into(&x, &mut y1);
+        assert!(max_abs_diff(&y1, &dense.tr_matvec(&x)) < 1e-15);
+    }
+
+    #[test]
+    fn duplicates_are_summed() {
+        let mut c = Coo::new(2, 2);
+        c.push(0, 0, 1.0).unwrap();
+        c.push(0, 0, 2.0).unwrap();
+        let csr = c.to_csr();
+        assert_eq!(csr.nnz(), 1);
+        assert_eq!(csr.to_dense()[(0, 0)], 3.0);
+    }
+
+    #[test]
+    fn out_of_range_rejected() {
+        let mut c = Coo::new(2, 2);
+        assert!(c.push(2, 0, 1.0).is_err());
+    }
+
+    #[test]
+    fn row_block_dense_matches() {
+        let coo = sample();
+        let csr = coo.to_csr();
+        let dense = coo.to_dense();
+        let blk = csr.row_block_dense(1, 3);
+        assert_eq!(blk, dense.row_block(1, 3));
+    }
+
+    #[test]
+    fn from_dense_roundtrip() {
+        let dense = sample().to_dense();
+        let csr = Csr::from_dense(&dense);
+        assert_eq!(csr.to_dense(), dense);
+        assert_eq!(csr.nnz(), 5);
+    }
+
+    #[test]
+    fn empty_rows_handled() {
+        let mut c = Coo::new(4, 2);
+        c.push(3, 1, 5.0).unwrap();
+        let csr = c.to_csr();
+        let y = csr.matvec(&[1.0, 1.0]);
+        assert_eq!(y, vec![0.0, 0.0, 0.0, 5.0]);
+    }
+}

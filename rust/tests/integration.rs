@@ -1,0 +1,244 @@
+//! Cross-module integration tests: generator → Matrix Market I/O →
+//! partition → tuning → solver → direct-solve verification, plus
+//! coordinator failure handling and config plumbing.
+
+use apc::config::{Backend, RunConfig};
+use apc::coordinator::{Coordinator, Method, StragglerSpec};
+use apc::gen::problems::Problem;
+use apc::linalg::{vector::relative_error, Lu};
+use apc::partition::PartitionedSystem;
+use apc::rates::SpectralInfo;
+use apc::solvers::{suite, Metric, SolverOptions};
+
+/// The full offline pipeline: build → write .mtx → read .mtx → partition
+/// → tune → solve → compare against an LU direct solve (not the planted
+/// solution — an independent ground truth).
+#[test]
+fn pipeline_mtx_roundtrip_solve_matches_direct() {
+    let dir = std::env::temp_dir().join("apc_integration");
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join("pipeline.mtx");
+
+    let built = Problem::with_condition("pipeline", 60, 60, 5, 1.0e4).build(3);
+    apc::mm::write_dense_path(&path, &built.a, "integration pipeline").unwrap();
+    let a = apc::mm::read_path(&path).unwrap().to_dense();
+
+    // independent ground truth
+    let direct = Lu::new(&a).unwrap().solve(&built.b);
+
+    let sys = PartitionedSystem::split_even(&a, &built.b, 5).unwrap();
+    let s = SpectralInfo::compute(&sys).unwrap();
+    for name in ["apc", "hbm"] {
+        let mut solver = suite::tuned_solver(name, &sys, &s).unwrap();
+        let rep = solver
+            .solve(
+                &sys,
+                &SolverOptions {
+                    tol: 1e-11,
+                    max_iter: 300_000,
+                    metric: Metric::Residual,
+                    ..Default::default()
+                },
+            )
+            .unwrap();
+        assert!(rep.converged, "{name} did not converge");
+        let err = relative_error(&rep.solution, &direct);
+        assert!(err < 1e-8, "{name} vs direct solve: {err:.2e}");
+    }
+    std::fs::remove_file(&path).ok();
+}
+
+/// Distributed == single-process for every coordinator method (native
+/// backend, short fixed horizon, bit-exact).
+#[test]
+fn distributed_parity_all_methods() {
+    let built = Problem::standard_gaussian(30, 30, 5).build(11);
+    let sys = PartitionedSystem::split_even(&built.a, &built.b, 5).unwrap();
+    let s = SpectralInfo::compute(&sys).unwrap();
+    let opts = SolverOptions {
+        tol: 0.0,
+        max_iter: 25,
+        metric: Metric::ErrorVsTruth(built.x_star.clone()),
+        ..Default::default()
+    };
+    for name in suite::TABLE2_ORDER {
+        let method = suite::tuned_method(name, &sys, &s).unwrap();
+        let dist = Coordinator::new(&sys, method, Backend::Native, None, None, 1)
+            .unwrap()
+            .run(&sys, &opts)
+            .unwrap();
+        let mut single = suite::tuned_solver(name, &sys, &s).unwrap();
+        let rep = single.solve(&sys, &opts).unwrap();
+        assert_eq!(
+            dist.report.solution, rep.solution,
+            "{name}: distributed and single-process trajectories differ"
+        );
+    }
+}
+
+/// Stragglers change timing, never results.
+#[test]
+fn stragglers_do_not_change_results() {
+    let built = Problem::standard_gaussian(24, 24, 4).build(13);
+    let sys = PartitionedSystem::split_even(&built.a, &built.b, 4).unwrap();
+    let s = SpectralInfo::compute(&sys).unwrap();
+    let method = suite::tuned_method("apc", &sys, &s).unwrap();
+    let opts = SolverOptions {
+        tol: 0.0,
+        max_iter: 30,
+        metric: Metric::ErrorVsTruth(built.x_star.clone()),
+        ..Default::default()
+    };
+    let clean = Coordinator::new(&sys, method, Backend::Native, None, None, 1)
+        .unwrap()
+        .run(&sys, &opts)
+        .unwrap();
+    let slow = Coordinator::new(
+        &sys,
+        method,
+        Backend::Native,
+        None,
+        Some(StragglerSpec { prob: 0.5, delay_us: 500 }),
+        1,
+    )
+    .unwrap()
+    .run(&sys, &opts)
+    .unwrap();
+    assert_eq!(clean.report.solution, slow.report.solution);
+    assert!(slow.metrics.straggler_delay_us > 0);
+}
+
+/// Divergent configurations stop early via the divergence guard instead
+/// of spinning to max_iter with NaNs.
+#[test]
+fn divergence_guard_stops_early() {
+    let built = Problem::standard_gaussian(20, 20, 4).build(17);
+    let sys = PartitionedSystem::split_even(&built.a, &built.b, 4).unwrap();
+    // deliberately unstable parameters
+    let method = Method::Apc { gamma: 1.99, eta: 9.0 };
+    let opts = SolverOptions {
+        tol: 1e-8,
+        max_iter: 1_000_000,
+        metric: Metric::ErrorVsTruth(built.x_star.clone()),
+        ..Default::default()
+    };
+    let dist = Coordinator::new(&sys, method, Backend::Native, None, None, 1)
+        .unwrap()
+        .run(&sys, &opts)
+        .unwrap();
+    assert!(!dist.report.converged);
+    assert!(
+        dist.report.iterations < 1_000_000,
+        "guard should have fired well before max_iter (ran {})",
+        dist.report.iterations
+    );
+}
+
+/// Uneven partitions work end to end (different p per worker).
+#[test]
+fn uneven_partition_distributed_solve() {
+    let built = Problem::standard_gaussian(50, 25, 4).build(19);
+    let sys = PartitionedSystem::split_at(&built.a, &built.b, &[7, 20, 38]).unwrap();
+    let s = SpectralInfo::compute(&sys).unwrap();
+    let method = suite::tuned_method("apc", &sys, &s).unwrap();
+    let dist = Coordinator::new(&sys, method, Backend::Native, None, None, 1)
+        .unwrap()
+        .run(
+            &sys,
+            &SolverOptions {
+                tol: 1e-9,
+                max_iter: 200_000,
+                metric: Metric::ErrorVsTruth(built.x_star.clone()),
+                ..Default::default()
+            },
+        )
+        .unwrap();
+    assert!(dist.report.converged, "err {:.2e}", dist.report.final_error);
+}
+
+/// RunConfig file → coordinator plumbing (what `apc solve --config` does).
+#[test]
+fn config_file_drives_a_run() {
+    let dir = std::env::temp_dir().join("apc_integration");
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join("run.conf");
+    std::fs::write(
+        &path,
+        "problem = gaussian:40x40\nmachines = 4\nsolver = hbm\ntol = 1e-7\nseed = 9\n",
+    )
+    .unwrap();
+    let cfg = RunConfig::from_file(path.to_str().unwrap()).unwrap();
+    assert_eq!(cfg.solver, "hbm");
+
+    let problem = Problem::by_name(&cfg.problem, cfg.machines).unwrap();
+    let built = problem.build(cfg.seed);
+    let sys = PartitionedSystem::split_even(&built.a, &built.b, cfg.machines).unwrap();
+    let s = SpectralInfo::compute(&sys).unwrap();
+    let method = suite::tuned_method(&cfg.solver, &sys, &s).unwrap();
+    let dist = Coordinator::new(&sys, method, cfg.backend, None, None, cfg.seed)
+        .unwrap()
+        .run(
+            &sys,
+            &SolverOptions {
+                tol: cfg.tol,
+                max_iter: cfg.max_iter,
+                metric: Metric::Residual,
+                ..Default::default()
+            },
+        )
+        .unwrap();
+    assert!(dist.report.converged);
+    std::fs::remove_file(&path).ok();
+}
+
+/// Sparse CSR path: a genuinely sparse system through block extraction.
+#[test]
+fn sparse_system_block_extraction_and_solve() {
+    use apc::sparse::Coo;
+    // tridiagonal system, strongly diagonally dominant
+    let n = 40;
+    let mut coo = Coo::new(n, n);
+    for i in 0..n {
+        coo.push(i, i, 4.0).unwrap();
+        if i > 0 {
+            coo.push(i, i - 1, -1.0).unwrap();
+        }
+        if i + 1 < n {
+            coo.push(i, i + 1, -1.0).unwrap();
+        }
+    }
+    let csr = coo.to_csr();
+    let mut rng = apc::gen::Pcg64::new(23);
+    let x_star = rng.gaussian_vec(n);
+    let b = csr.matvec(&x_star);
+
+    // workers materialize dense row blocks from the sparse global matrix
+    let m = 4;
+    let p = n / m;
+    let blocks: Vec<apc::partition::MachineBlock> = (0..m)
+        .map(|i| {
+            apc::partition::MachineBlock::new(
+                i,
+                i * p,
+                csr.row_block_dense(i * p, (i + 1) * p),
+                b[i * p..(i + 1) * p].to_vec(),
+            )
+            .unwrap()
+        })
+        .collect();
+    let sys = PartitionedSystem { blocks, n, n_rows: n };
+    let s = SpectralInfo::compute(&sys).unwrap();
+    let mut solver = suite::tuned_solver("apc", &sys, &s).unwrap();
+    let rep = solver
+        .solve(
+            &sys,
+            &SolverOptions {
+                tol: 1e-10,
+                max_iter: 50_000,
+                metric: Metric::ErrorVsTruth(x_star),
+                ..Default::default()
+            },
+        )
+        .unwrap();
+    assert!(rep.converged, "sparse-backed APC err {:.2e}", rep.final_error);
+}

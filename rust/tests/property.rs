@@ -1,0 +1,248 @@
+//! Property-based tests over the crate's own mini-proptest framework:
+//! randomized invariants for the linalg substrate, the partition/projection
+//! machinery, the rate formulas, and solver behavior.
+
+use apc::gen::problems::Problem;
+use apc::gen::rng::Pcg64;
+use apc::linalg::{sym_eigen, Cholesky, Lu, Mat, Qr};
+use apc::partition::PartitionedSystem;
+use apc::proptest::{forall, F64Range, Gen, Outcome, Pair, UsizeRange};
+use apc::rates::{apc_optimal, apc_rho};
+
+/// Generator: random square gaussian matrix of generated order.
+struct SquareMat(UsizeRange);
+
+impl Gen for SquareMat {
+    type Value = (usize, Vec<f64>);
+    fn generate(&self, rng: &mut Pcg64) -> Self::Value {
+        let n = self.0.generate(rng);
+        (n, rng.gaussian_vec(n * n))
+    }
+}
+
+fn to_mat((n, data): &(usize, Vec<f64>)) -> Mat {
+    Mat::from_vec(*n, *n, data.clone())
+}
+
+#[test]
+fn prop_lu_solve_roundtrip() {
+    forall("lu-roundtrip", 11, 60, &SquareMat(UsizeRange(1, 12)), |case| {
+        let a = to_mat(case);
+        let mut rng = Pcg64::new(case.0 as u64);
+        let x = rng.gaussian_vec(case.0);
+        let b = a.matvec(&x);
+        match Lu::new(&a) {
+            Err(_) => Outcome::Discard, // singular draw (measure zero)
+            Ok(lu) => {
+                let got = lu.solve(&b);
+                let err = apc::linalg::vector::max_abs_diff(&got, &x);
+                // gaussian square matrices can be poorly conditioned at
+                // small n; scale tolerance by a crude condition proxy
+                Outcome::from(err < 1e-6)
+            }
+        }
+    });
+}
+
+#[test]
+fn prop_cholesky_inverse_identity() {
+    forall("chol-inverse", 12, 60, &SquareMat(UsizeRange(1, 10)), |case| {
+        let g = to_mat(case);
+        // SPD-ify: A = GGᵀ + I
+        let mut a = g.gram_rows();
+        for i in 0..a.rows() {
+            a[(i, i)] += 1.0;
+        }
+        let inv = Cholesky::new(&a).expect("SPD by construction").inverse();
+        let prod = a.matmul(&inv);
+        prod.sub(&Mat::eye(a.rows())).max_abs() < 1e-8
+    });
+}
+
+#[test]
+fn prop_qr_orthonormal_and_reconstructs() {
+    struct TallMat;
+    impl Gen for TallMat {
+        type Value = (usize, usize, Vec<f64>);
+        fn generate(&self, rng: &mut Pcg64) -> Self::Value {
+            let n = UsizeRange(1, 8).generate(rng);
+            let m = n + UsizeRange(0, 8).generate(rng);
+            (m, n, rng.gaussian_vec(m * n))
+        }
+    }
+    forall("qr-props", 13, 60, &TallMat, |(m, n, data)| {
+        let a = Mat::from_vec(*m, *n, data.clone());
+        let qr = Qr::new(&a).expect("m >= n by construction");
+        let q = qr.thin_q();
+        let ortho = q.gram_cols().sub(&Mat::eye(*n)).max_abs();
+        let rec = q.matmul(&qr.r()).sub(&a).max_abs();
+        Outcome::from(if ortho > 1e-9 {
+            Err(format!("QᵀQ−I = {ortho:.2e}"))
+        } else if rec > 1e-9 {
+            Err(format!("QR−A = {rec:.2e}"))
+        } else {
+            Ok(())
+        })
+    });
+}
+
+#[test]
+fn prop_sym_eigen_reconstructs() {
+    forall("eigen-reconstruct", 14, 40, &SquareMat(UsizeRange(1, 10)), |case| {
+        let g = to_mat(case);
+        let a = g.gram_rows(); // symmetric PSD
+        let e = sym_eigen(&a).expect("symmetric by construction");
+        let rec = e
+            .vectors
+            .matmul(&Mat::from_diag(&e.values))
+            .matmul(&e.vectors.transpose());
+        let scale = a.max_abs().max(1.0);
+        rec.sub(&a).max_abs() < 1e-8 * scale
+    });
+}
+
+#[test]
+fn prop_projection_idempotent_and_orthogonal() {
+    struct Block;
+    impl Gen for Block {
+        type Value = (usize, usize, Vec<f64>, Vec<f64>);
+        fn generate(&self, rng: &mut Pcg64) -> Self::Value {
+            let p = UsizeRange(1, 5).generate(rng);
+            let n = p + UsizeRange(1, 10).generate(rng);
+            (p, n, rng.gaussian_vec(p * n), rng.gaussian_vec(n))
+        }
+    }
+    forall("projection-props", 15, 60, &Block, |(p, n, data, v)| {
+        let a = Mat::from_vec(*p, *n, data.clone());
+        let b = vec![0.0; *p];
+        let blk = match apc::partition::MachineBlock::new(0, 0, a.clone(), b) {
+            Err(_) => return Outcome::Discard,
+            Ok(blk) => blk,
+        };
+        let mut scratch = Vec::new();
+        let mut pv = vec![0.0; *n];
+        let mut ppv = vec![0.0; *n];
+        blk.project_into(v, &mut scratch, &mut pv);
+        blk.project_into(&pv, &mut scratch, &mut ppv);
+        // idempotent
+        let idem = apc::linalg::vector::max_abs_diff(&pv, &ppv);
+        // A (P v) = 0
+        let apv = a.matvec(&pv);
+        let annihilated = apc::linalg::vector::nrm2(&apv);
+        // v − Pv ⊥ Pv (orthogonal projection)
+        let diff: Vec<f64> = v.iter().zip(&pv).map(|(x, y)| x - y).collect();
+        let ortho = apc::linalg::vector::dot(&diff, &pv).abs();
+        let scale = apc::linalg::vector::nrm2(v).max(1.0);
+        Outcome::from(if idem > 1e-8 * scale {
+            Err(format!("not idempotent: {idem:.2e}"))
+        } else if annihilated > 1e-8 * scale {
+            Err(format!("A·Pv = {annihilated:.2e}"))
+        } else if ortho > 1e-7 * scale * scale {
+            Err(format!("not orthogonal: {ortho:.2e}"))
+        } else {
+            Ok(())
+        })
+    });
+}
+
+#[test]
+fn prop_apc_rho_inside_stability_set_converges() {
+    // For any spectrum in (0,1] and the TUNED parameters, the
+    // characteristic radius is < 1 (Theorem 1 "if" direction).
+    forall(
+        "tuned-rho-contractive",
+        16,
+        200,
+        &Pair(F64Range(1e-6, 0.5), F64Range(0.5, 1.0)),
+        |(mu_min, mu_max)| {
+            let p = apc_optimal(*mu_min, *mu_max).expect("valid spectrum");
+            let mus = [*mu_min, (mu_min + mu_max) / 2.0, *mu_max];
+            let rho = apc_rho(&mus, p.gamma, p.eta);
+            Outcome::from(if rho < 1.0 - 1e-12 {
+                Ok(())
+            } else {
+                Err(format!("rho = {rho} at gamma={}, eta={}", p.gamma, p.eta))
+            })
+        },
+    );
+}
+
+#[test]
+fn prop_apc_monotone_in_kappa() {
+    // ρ*(κ) is increasing: worse conditioning is never faster.
+    forall(
+        "rho-monotone-kappa",
+        17,
+        200,
+        &Pair(F64Range(1e-5, 0.3), F64Range(1.1, 50.0)),
+        |(mu_min, factor)| {
+            let mu_max = 0.9;
+            let p1 = apc_optimal(*mu_min, mu_max).unwrap();
+            let p2 = apc_optimal(mu_min / factor, mu_max).unwrap();
+            p2.rho >= p1.rho - 1e-12
+        },
+    );
+}
+
+#[test]
+fn prop_partition_roundtrip_any_machine_count() {
+    forall("partition-roundtrip", 18, 40, &UsizeRange(1, 12), |m| {
+        let built = Problem::standard_gaussian(24, 12, *m).build(5);
+        match PartitionedSystem::split_even(&built.a, &built.b, *m) {
+            Err(_) => Outcome::Discard, // m=1 gives overdetermined block
+            Ok(sys) => Outcome::from(
+                sys.assemble_a() == built.a && sys.assemble_b() == built.b && sys.m() == *m,
+            ),
+        }
+    });
+}
+
+#[test]
+fn prop_x_matrix_spectrum_in_unit_interval() {
+    forall("x-spectrum-bounds", 19, 25, &UsizeRange(2, 6), |m| {
+        let built = Problem::standard_gaussian(4 * *m, 2 * *m, *m).build(9);
+        let sys = PartitionedSystem::split_even(&built.a, &built.b, *m).expect("p<=n");
+        let eig = sym_eigen(&sys.x_matrix()).expect("symmetric");
+        Outcome::from(eig.lambda_min() > -1e-9 && eig.lambda_max() < 1.0 + 1e-9)
+    });
+}
+
+#[test]
+fn prop_solver_solution_satisfies_every_block() {
+    // Whatever APC returns at convergence satisfies each machine's own
+    // equations — the consensus invariant.
+    forall("consensus-feasibility", 20, 15, &UsizeRange(2, 5), |m| {
+        use apc::solvers::{apc::Apc, Metric, Solver, SolverOptions};
+        let built = Problem::standard_gaussian(8 * *m, 4 * *m, *m).build(21);
+        let sys = PartitionedSystem::split_even(&built.a, &built.b, *m).expect("p<=n");
+        let mut solver = Apc::auto(&sys).expect("tunable");
+        let rep = solver
+            .solve(
+                &sys,
+                &SolverOptions {
+                    tol: 1e-10,
+                    max_iter: 500_000,
+                    metric: Metric::ErrorVsTruth(built.x_star.clone()),
+                    ..Default::default()
+                },
+            )
+            .expect("solve");
+        if !rep.converged {
+            return Outcome::Discard; // pathological draw; convergence is
+                                     // asserted by dedicated tests
+        }
+        for blk in &sys.blocks {
+            let r = blk.a.matvec(&rep.solution);
+            let err: f64 = r
+                .iter()
+                .zip(&blk.b)
+                .map(|(x, y)| (x - y) * (x - y))
+                .sum::<f64>()
+                .sqrt();
+            if err > 1e-7 {
+                return Outcome::Fail(format!("block {} residual {err:.2e}", blk.index));
+            }
+        }
+        Outcome::Pass
+    });
+}

@@ -1,0 +1,227 @@
+//! Runtime integration: every AOT artifact executed through PJRT against
+//! its rust-native counterpart, plus the fused whole-iteration artifact
+//! against the single-process APC trajectory.
+//!
+//! These tests need `make artifacts`; they skip with a stderr note when
+//! the manifest is missing so `cargo test` stays green on a fresh clone.
+
+use apc::gen::problems::Problem;
+use apc::linalg::vector::max_abs_diff;
+use apc::partition::PartitionedSystem;
+use apc::runtime::{Engine, Manifest, TensorArg};
+use apc::solvers::local::{AdmmLocal, ApcLocal, CimminoLocal, GradLocal};
+
+const P: usize = 25;
+const N: usize = 200;
+const M: usize = 8;
+
+fn setup() -> Option<(Manifest, PartitionedSystem, Vec<f64>)> {
+    let dir = concat!(env!("CARGO_MANIFEST_DIR"), "/artifacts");
+    let Ok(manifest) = Manifest::load(dir) else {
+        eprintln!("skipping runtime integration: run `make artifacts` first");
+        return None;
+    };
+    let built = Problem::standard_gaussian(N, N, M).build(99);
+    let sys = PartitionedSystem::split_even(&built.a, &built.b, M).unwrap();
+    Some((manifest, sys, built.x_star))
+}
+
+fn xbar() -> Vec<f64> {
+    (0..N).map(|i| (i as f64 * 0.17).sin()).collect()
+}
+
+#[test]
+fn every_worker_artifact_matches_native() {
+    let Some((manifest, sys, _)) = setup() else { return };
+    let mut engine = Engine::cpu().unwrap();
+    let blk = &sys.blocks[2];
+    let ginv = blk.gram_chol.inverse();
+    let xbar = xbar();
+
+    // apc_worker
+    {
+        let entry = manifest.find_worker("apc_worker", P, N).unwrap().clone();
+        engine.load(&entry).unwrap();
+        let mut local = ApcLocal::new(blk, 0.97).unwrap();
+        let x0 = local.x.clone();
+        let out = engine
+            .execute(
+                &entry,
+                &[
+                    TensorArg::Host(blk.a.as_slice(), &[P, N]),
+                    TensorArg::Host(ginv.as_slice(), &[P, P]),
+                    TensorArg::Host(&x0, &[N]),
+                    TensorArg::Host(&xbar, &[N]),
+                    TensorArg::Host(&[0.97], &[]),
+                ],
+            )
+            .unwrap();
+        local.step(blk, &xbar);
+        assert!(max_abs_diff(&out[0], &local.x) < 1e-10, "apc_worker drift");
+    }
+    // grad_worker
+    {
+        let entry = manifest.find_worker("grad_worker", P, N).unwrap().clone();
+        engine.load(&entry).unwrap();
+        let out = engine
+            .execute(
+                &entry,
+                &[
+                    TensorArg::Host(blk.a.as_slice(), &[P, N]),
+                    TensorArg::Host(&blk.b, &[P]),
+                    TensorArg::Host(&xbar, &[N]),
+                ],
+            )
+            .unwrap();
+        let mut native = vec![0.0; N];
+        GradLocal::new(blk).partial_grad(blk, &xbar, &mut native);
+        assert!(max_abs_diff(&out[0], &native) < 1e-10, "grad_worker drift");
+    }
+    // cimmino_worker
+    {
+        let entry = manifest.find_worker("cimmino_worker", P, N).unwrap().clone();
+        engine.load(&entry).unwrap();
+        let out = engine
+            .execute(
+                &entry,
+                &[
+                    TensorArg::Host(blk.a.as_slice(), &[P, N]),
+                    TensorArg::Host(ginv.as_slice(), &[P, P]),
+                    TensorArg::Host(&blk.b, &[P]),
+                    TensorArg::Host(&xbar, &[N]),
+                ],
+            )
+            .unwrap();
+        let mut native = vec![0.0; N];
+        CimminoLocal::new(blk).step(blk, &xbar, &mut native);
+        assert!(max_abs_diff(&out[0], &native) < 1e-10, "cimmino_worker drift");
+    }
+    // admm_worker
+    {
+        let entry = manifest.find_worker("admm_worker", P, N).unwrap().clone();
+        engine.load(&entry).unwrap();
+        let xi = 0.8;
+        let mut g = blk.a.gram_rows();
+        for i in 0..P {
+            g[(i, i)] += xi;
+        }
+        let sginv = apc::linalg::Cholesky::new(&g).unwrap().inverse();
+        let atb = blk.a.tr_matvec(&blk.b);
+        let out = engine
+            .execute(
+                &entry,
+                &[
+                    TensorArg::Host(blk.a.as_slice(), &[P, N]),
+                    TensorArg::Host(sginv.as_slice(), &[P, P]),
+                    TensorArg::Host(&atb, &[N]),
+                    TensorArg::Host(&xbar, &[N]),
+                    TensorArg::Host(&[xi], &[]),
+                ],
+            )
+            .unwrap();
+        let mut native = vec![0.0; N];
+        AdmmLocal::new(blk, xi).unwrap().step(blk, &xbar, &mut native);
+        assert!(max_abs_diff(&out[0], &native) < 1e-9, "admm_worker drift");
+    }
+    // master_momentum
+    {
+        let entry = manifest.find_worker("master_momentum", 0, N).unwrap().clone();
+        engine.load(&entry).unwrap();
+        let sum: Vec<f64> = (0..N).map(|i| i as f64 * 0.3).collect();
+        let mut xb = xbar.clone();
+        let out = engine
+            .execute(
+                &entry,
+                &[
+                    TensorArg::Host(&sum, &[N]),
+                    TensorArg::Host(&xb, &[N]),
+                    TensorArg::Host(&[1.4], &[]),
+                    TensorArg::Host(&[M as f64], &[]),
+                ],
+            )
+            .unwrap();
+        apc::solvers::local::master_momentum_average(&mut xb, &sum, M, 1.4);
+        assert!(max_abs_diff(&out[0], &xb) < 1e-12, "master_momentum drift");
+    }
+}
+
+/// The fused whole-iteration artifact retraces the single-process APC
+/// trajectory over many rounds (stacked machine tensors built once,
+/// state round-tripped through PJRT each iteration).
+#[test]
+fn fused_iteration_artifact_retraces_apc() {
+    use apc::solvers::{apc::Apc, Solver};
+    let Some((manifest, sys, _)) = setup() else { return };
+    let entry = manifest.find_fused("apc_fused", M, P, N).unwrap().clone();
+    let mut engine = Engine::cpu().unwrap();
+    engine.load(&entry).unwrap();
+
+    let (gamma, eta) = (1.03, 3.7);
+    let mut reference = Apc::with_params(&sys, gamma, eta).unwrap();
+
+    // stack per-machine tensors
+    let mut a_stack = Vec::with_capacity(M * P * N);
+    let mut ginv_stack = Vec::with_capacity(M * P * P);
+    let mut xs = Vec::with_capacity(M * N);
+    for (blk, local) in sys.blocks.iter().zip(reference.locals()) {
+        a_stack.extend_from_slice(blk.a.as_slice());
+        ginv_stack.extend_from_slice(blk.gram_chol.inverse().as_slice());
+        xs.extend_from_slice(&local.x);
+    }
+    let mut xbar_h = reference.xbar().to_vec();
+    engine.cache_buffer("a", &a_stack, &[M, P, N]).unwrap();
+    engine.cache_buffer("ginv", &ginv_stack, &[M, P, P]).unwrap();
+
+    for round in 0..25 {
+        let out = engine
+            .execute(
+                &entry,
+                &[
+                    TensorArg::Cached("a"),
+                    TensorArg::Cached("ginv"),
+                    TensorArg::Host(&xs, &[M, N]),
+                    TensorArg::Host(&xbar_h, &[N]),
+                    TensorArg::Host(&[gamma], &[]),
+                    TensorArg::Host(&[eta], &[]),
+                ],
+            )
+            .unwrap();
+        xs = out[0].clone();
+        xbar_h = out[1].clone();
+        reference.iterate(&sys);
+        let drift = max_abs_diff(&xbar_h, reference.xbar());
+        assert!(drift < 1e-9, "fused trajectory drift {drift:.2e} at round {round}");
+    }
+}
+
+/// residual_norm artifact agrees with the partitioned residual.
+#[test]
+fn residual_artifact_matches_native() {
+    let Some((manifest, sys, x_star)) = setup() else { return };
+    let entry = manifest.find_fused("residual_norm", M, P, N).unwrap().clone();
+    let mut engine = Engine::cpu().unwrap();
+    engine.load(&entry).unwrap();
+
+    let mut a_stack = Vec::new();
+    let mut b_stack = Vec::new();
+    for blk in &sys.blocks {
+        a_stack.extend_from_slice(blk.a.as_slice());
+        b_stack.extend_from_slice(&blk.b);
+    }
+    // at a perturbed point
+    let x: Vec<f64> = x_star.iter().enumerate().map(|(i, v)| v + 0.01 * (i as f64).cos()).collect();
+    let out = engine
+        .execute(
+            &entry,
+            &[
+                TensorArg::Host(&a_stack, &[M, P, N]),
+                TensorArg::Host(&b_stack, &[M, P]),
+                TensorArg::Host(&x, &[N]),
+            ],
+        )
+        .unwrap();
+    let (num2, den2) = (out[0][0], out[1][0]);
+    let native = sys.relative_residual(&x);
+    let hlo = (num2 / den2).sqrt();
+    assert!((native - hlo).abs() < 1e-10, "residual {native:.6e} vs {hlo:.6e}");
+}
