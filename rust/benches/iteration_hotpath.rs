@@ -1,27 +1,70 @@
 //! PER-ITERATION COST — the paper's §3.3/§4 claim that every method pays
-//! the same `2pn` per machine per iteration, plus the Native-vs-Hlo
-//! backend comparison for the worker hot path.
+//! the same `2pn` per machine per iteration, plus the serial-vs-parallel
+//! machine phase comparison and the Native-vs-Hlo backend comparison for
+//! the worker hot path.
 //!
 //! Reports:
 //!  * per-machine kernel times (APC projection, partial gradient,
 //!    Cimmino residual, ADMM lemma solve) — should all be ≈ the same
-//!    2pn-flop cost;
-//!  * one full synchronous round of each method (single-process loop);
+//!    2pn-flop cost — with achieved GFLOP/s per kernel;
+//!  * one full synchronous round of each method at the paper-scale
+//!    `n = 2000, m = 8`, executed twice: with the machine phase forced
+//!    serial ([`apc::parallel::serial_scope`]) and fanned out across the
+//!    [`apc::parallel`] pool — the speedup column is the whole point of
+//!    the parallel machine phase;
 //!  * the APC worker step through the PJRT Hlo artifact (cached device
-//!    buffers) vs native — the overhead of crossing the runtime boundary;
-//!  * achieved flop rate vs a pure-matvec roofline on this host.
+//!    buffers) vs native — the overhead of crossing the runtime boundary
+//!    (skipped without artifacts / the `pjrt` feature).
+//!
+//! Besides the human tables, the bench emits a machine-readable
+//! `BENCH_hotpath.json` at the repository root so the perf trajectory is
+//! tracked PR-over-PR (see EXPERIMENTS.md §Perf).
 //!
 //! ```bash
 //! cargo bench --bench iteration_hotpath
 //! ```
 
-use apc::bench::{bench, fmt_duration, BenchOptions, Table};
+use apc::bench::{bench, fmt_duration, BenchOptions, Stats, Table};
+use apc::config::Json;
 use apc::gen::problems::Problem;
+use apc::parallel;
 use apc::partition::PartitionedSystem;
 use apc::rates::SpectralInfo;
 use apc::runtime::{Engine, Manifest, TensorArg};
 use apc::solvers::local::{AdmmLocal, ApcLocal, CimminoLocal, GradLocal};
 use apc::solvers::suite;
+use apc::solvers::{
+    admm::Admm, apc::Apc, cimmino::Cimmino, consensus::Consensus, dgd::Dgd, hbm::Hbm, nag::Nag,
+    Solver,
+};
+use std::collections::BTreeMap;
+
+/// Round-benchmark scale: the ISSUE/EXPERIMENTS reference configuration.
+const ROUND_N: usize = 2000;
+const ROUND_M: usize = 8;
+
+fn jobj(pairs: Vec<(&str, Json)>) -> Json {
+    Json::Obj(pairs.into_iter().map(|(k, v)| (k.to_string(), v)).collect::<BTreeMap<_, _>>())
+}
+
+/// Solver with *fixed* (not spectrally tuned) parameters: per-round cost
+/// is parameter-independent, and tuning would need an `O(n³)` eigensolve
+/// at `n = 2000`.
+fn fixed_solver(name: &str, sys: &PartitionedSystem) -> anyhow::Result<Box<dyn Solver>> {
+    Ok(match name {
+        "apc" => Box::new(Apc::with_params(sys, 1.1, 1.2)?),
+        "consensus" => Box::new(Consensus::new(sys)?),
+        "dgd" => Box::new(Dgd::with_params(sys, 1e-4)),
+        "nag" => Box::new(Nag::with_params(sys, 1e-4, 0.5)),
+        "hbm" => Box::new(Hbm::with_params(sys, 1e-4, 0.5)),
+        "cimmino" => Box::new(Cimmino::with_params(sys, 0.1)),
+        "admm" => Box::new(Admm::with_params(sys, 1.0)?),
+        other => anyhow::bail!("no fixed tuning for {other}"),
+    })
+}
+
+/// All seven single-process solvers adopting the parallel machine phase.
+const SEVEN: [&str; 7] = ["apc", "consensus", "dgd", "nag", "hbm", "cimmino", "admm"];
 
 fn main() -> anyhow::Result<()> {
     let (n, m) = (500, 10);
@@ -32,11 +75,14 @@ fn main() -> anyhow::Result<()> {
     let opts = BenchOptions::default();
     let flops_per_kernel = 2.0 * p as f64 * n as f64;
 
-    println!("=== per-machine kernels (p={}, n={}; nominal cost 2pn = {:.0} flops) ===\n", p, n, flops_per_kernel);
+    println!(
+        "=== per-machine kernels (p={}, n={}; nominal cost 2pn = {:.0} flops) ===\n",
+        p, n, flops_per_kernel
+    );
     let xbar: Vec<f64> = (0..n).map(|i| (i as f64 * 0.01).sin()).collect();
     let mut out = vec![0.0; n];
 
-    let mut rows = Vec::new();
+    let mut rows: Vec<(&str, Stats)> = Vec::new();
     {
         let mut local = ApcLocal::new(blk, 1.2)?;
         let s = bench("apc projection step", &opts, || local.step(blk, &xbar));
@@ -59,17 +105,79 @@ fn main() -> anyhow::Result<()> {
     }
     let mut table = Table::new(&["worker kernel", "time/call", "GFLOP/s", "vs APC"]);
     let apc_time = rows[0].1.median.as_secs_f64();
+    let mut kernels_json = Vec::new();
     for (name, s) in &rows {
+        let secs = s.median.as_secs_f64();
+        let gflops = flops_per_kernel / secs / 1e9;
         table.row(&[
             name.to_string(),
             fmt_duration(s.median),
-            format!("{:.2}", flops_per_kernel / s.median.as_secs_f64() / 1e9),
-            format!("{:.2}x", s.median.as_secs_f64() / apc_time),
+            format!("{:.2}", gflops),
+            format!("{:.2}x", secs / apc_time),
         ]);
+        kernels_json.push((
+            *name,
+            jobj(vec![
+                ("time_ns", Json::Num(s.median.as_nanos() as f64)),
+                ("gflops", Json::Num(gflops)),
+            ]),
+        ));
     }
     println!("{}", table.render());
 
-    println!("=== one full synchronous round, single-process loop (m={}) ===\n", m);
+    println!(
+        "=== one full synchronous round, serial vs parallel machine phase (n={}, m={}, {} threads) ===\n",
+        ROUND_N,
+        ROUND_M,
+        parallel::global().threads()
+    );
+    let round_problem = Problem::standard_gaussian(ROUND_N, ROUND_N, ROUND_M).build(11);
+    let round_sys = PartitionedSystem::split_even(&round_problem.a, &round_problem.b, ROUND_M)?;
+    let round_opts = BenchOptions {
+        samples: 15,
+        warmup: std::time::Duration::from_millis(200),
+        budget: std::time::Duration::from_secs(6),
+        ..BenchOptions::default()
+    };
+    let mut table =
+        Table::new(&["method", "serial/round", "parallel/round", "speedup", "per-machine share"]);
+    let mut rounds_json = Vec::new();
+    let mut min_speedup = f64::INFINITY;
+    for name in SEVEN {
+        let mut solver = fixed_solver(name, &round_sys)?;
+        let s_serial = parallel::serial_scope(|| {
+            bench(&format!("{name} serial"), &round_opts, || solver.iterate(&round_sys))
+        });
+        solver.reset(&round_sys);
+        let s_par = bench(&format!("{name} parallel"), &round_opts, || solver.iterate(&round_sys));
+        let speedup = s_serial.median.as_secs_f64() / s_par.median.as_secs_f64();
+        min_speedup = min_speedup.min(speedup);
+        table.row(&[
+            name.to_string(),
+            fmt_duration(s_serial.median),
+            fmt_duration(s_par.median),
+            format!("{:.2}x", speedup),
+            fmt_duration(s_par.median / ROUND_M as u32),
+        ]);
+        rounds_json.push((
+            name,
+            jobj(vec![
+                ("serial_ns", Json::Num(s_serial.median.as_nanos() as f64)),
+                ("parallel_ns", Json::Num(s_par.median.as_nanos() as f64)),
+                ("speedup", Json::Num(speedup)),
+            ]),
+        ));
+    }
+    println!("{}", table.render());
+    println!(
+        "paper check: all methods pay the same per-iteration cost (\"identical to that of\n\
+         APC\", §4.1/§4.4) — the rounds above should agree within ~2x; the speedup\n\
+         column is the parallel machine phase vs the forced-serial loop (min {:.2}x).\n",
+        min_speedup
+    );
+
+    // smaller tuned-round table retained for continuity with earlier runs
+    println!("=== one full synchronous round, tuned solvers (n={}, m={}) ===\n", n, m);
     let s = SpectralInfo::compute(&sys)?;
     let mut table = Table::new(&["method", "time/round", "per-machine share"]);
     for name in suite::TABLE2_ORDER {
@@ -82,72 +190,102 @@ fn main() -> anyhow::Result<()> {
         ]);
     }
     println!("{}", table.render());
-    println!(
-        "paper check: all methods pay the same per-iteration cost (\"identical to that of\n\
-         APC\", §4.1/§4.4) — the rounds above should agree within ~2x.\n"
-    );
+
+    // machine-readable trajectory: BENCH_hotpath.json at the repo root
+    let json = jobj(vec![
+        ("bench", Json::Str("iteration_hotpath".into())),
+        (
+            "config",
+            jobj(vec![
+                (
+                    "kernel",
+                    jobj(vec![
+                        ("n", Json::Num(n as f64)),
+                        ("m", Json::Num(m as f64)),
+                        ("p", Json::Num(p as f64)),
+                    ]),
+                ),
+                (
+                    "round",
+                    jobj(vec![
+                        ("n", Json::Num(ROUND_N as f64)),
+                        ("m", Json::Num(ROUND_M as f64)),
+                    ]),
+                ),
+                ("threads", Json::Num(parallel::global().threads() as f64)),
+            ]),
+        ),
+        ("kernels", jobj(kernels_json)),
+        ("rounds", jobj(rounds_json)),
+        ("min_round_speedup", Json::Num(min_speedup)),
+    ]);
+    let json_path = concat!(env!("CARGO_MANIFEST_DIR"), "/../BENCH_hotpath.json");
+    std::fs::write(json_path, json.to_string_pretty() + "\n")?;
+    println!("wrote {}", json_path);
 
     // Hlo backend hot path (skipped gracefully without artifacts)
     match Manifest::load("artifacts") {
         Err(e) => println!("(skipping Hlo hot path: {e:#})"),
-        Ok(manifest) => {
-            println!("=== APC worker step: Native vs Hlo (PJRT) ===\n");
-            let entry = manifest.find_worker("apc_worker", p, n)?.clone();
-            let mut engine = Engine::cpu()?;
-            engine.load(&entry)?;
-            let ginv = blk.gram_chol.inverse();
-            engine.cache_buffer("a", blk.a.as_slice(), &[p, n])?;
-            engine.cache_buffer("ginv", ginv.as_slice(), &[p, p])?;
-            let x: Vec<f64> = blk.initial_solution()?;
-            let gamma = [1.2f64];
+        Ok(manifest) => match Engine::cpu() {
+            Err(e) => println!("(skipping Hlo hot path: {e:#})"),
+            Ok(mut engine) => {
+                println!("=== APC worker step: Native vs Hlo (PJRT) ===\n");
+                let entry = manifest.find_worker("apc_worker", p, n)?.clone();
+                engine.load(&entry)?;
+                let ginv = blk.gram_chol.inverse();
+                engine.cache_buffer("a", blk.a.as_slice(), &[p, n])?;
+                engine.cache_buffer("ginv", ginv.as_slice(), &[p, p])?;
+                let x: Vec<f64> = blk.initial_solution()?;
+                let gamma = [1.2f64];
 
-            let hlo_opts = BenchOptions { samples: 20, ..BenchOptions::default() };
-            let s_hlo = bench("hlo apc worker (cached operands)", &hlo_opts, || {
-                engine
-                    .execute(
-                        &entry,
-                        &[
-                            TensorArg::Cached("a"),
-                            TensorArg::Cached("ginv"),
-                            TensorArg::Host(&x, &[n]),
-                            TensorArg::Host(&xbar, &[n]),
-                            TensorArg::Host(&gamma, &[]),
-                        ],
-                    )
-                    .expect("hlo exec")
-            });
-            let s_hlo_upload = bench("hlo apc worker (upload A every call)", &hlo_opts, || {
-                engine
-                    .execute(
-                        &entry,
-                        &[
-                            TensorArg::Host(blk.a.as_slice(), &[p, n]),
-                            TensorArg::Host(ginv.as_slice(), &[p, p]),
-                            TensorArg::Host(&x, &[n]),
-                            TensorArg::Host(&xbar, &[n]),
-                            TensorArg::Host(&gamma, &[]),
-                        ],
-                    )
-                    .expect("hlo exec")
-            });
-            let mut local = ApcLocal::new(blk, 1.2)?;
-            let s_native = bench("native apc worker", &opts, || local.step(blk, &xbar));
+                let hlo_opts = BenchOptions { samples: 20, ..BenchOptions::default() };
+                let s_hlo = bench("hlo apc worker (cached operands)", &hlo_opts, || {
+                    engine
+                        .execute(
+                            &entry,
+                            &[
+                                TensorArg::Cached("a"),
+                                TensorArg::Cached("ginv"),
+                                TensorArg::Host(&x, &[n]),
+                                TensorArg::Host(&xbar, &[n]),
+                                TensorArg::Host(&gamma, &[]),
+                            ],
+                        )
+                        .expect("hlo exec")
+                });
+                let s_hlo_upload = bench("hlo apc worker (upload A every call)", &hlo_opts, || {
+                    engine
+                        .execute(
+                            &entry,
+                            &[
+                                TensorArg::Host(blk.a.as_slice(), &[p, n]),
+                                TensorArg::Host(ginv.as_slice(), &[p, p]),
+                                TensorArg::Host(&x, &[n]),
+                                TensorArg::Host(&xbar, &[n]),
+                                TensorArg::Host(&gamma, &[]),
+                            ],
+                        )
+                        .expect("hlo exec")
+                });
+                let mut local = ApcLocal::new(blk, 1.2)?;
+                let s_native = bench("native apc worker", &opts, || local.step(blk, &xbar));
 
-            let mut table = Table::new(&["path", "time/call", "vs native"]);
-            for s in [&s_native, &s_hlo, &s_hlo_upload] {
-                table.row(&[
-                    s.name.clone(),
-                    fmt_duration(s.median),
-                    format!("{:.1}x", s.median.as_secs_f64() / s_native.median.as_secs_f64()),
-                ]);
+                let mut table = Table::new(&["path", "time/call", "vs native"]);
+                for s in [&s_native, &s_hlo, &s_hlo_upload] {
+                    table.row(&[
+                        s.name.clone(),
+                        fmt_duration(s.median),
+                        format!("{:.1}x", s.median.as_secs_f64() / s_native.median.as_secs_f64()),
+                    ]);
+                }
+                println!("{}", table.render());
+                println!(
+                    "(the cached-operand column is the runtime's deployed configuration; the\n\
+                     upload-every-call row is what EXPERIMENTS.md §Perf measured before the\n\
+                     device-buffer cache existed)"
+                );
             }
-            println!("{}", table.render());
-            println!(
-                "(the cached-operand column is the runtime's deployed configuration; the\n\
-                 upload-every-call row is what EXPERIMENTS.md §Perf measured before the\n\
-                 device-buffer cache existed)"
-            );
-        }
+        },
     }
     Ok(())
 }

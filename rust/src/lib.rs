@@ -21,8 +21,10 @@
 //!
 //! ## Layering
 //!
-//! * substrates: [`linalg`], [`sparse`], [`mm`], [`gen`], [`bench`],
-//!   [`proptest`], [`config`], [`cli`]
+//! * substrates: [`linalg`] (incl. the blocked hot-path kernels in
+//!   [`linalg::kernels`]), [`parallel`] (the machine-phase thread pool),
+//!   [`sparse`], [`mm`], [`gen`], [`bench`], [`proptest`], [`config`],
+//!   [`cli`]
 //! * the paper: [`partition`], [`solvers`], [`rates`]
 //! * the system: [`coordinator`] (L3), [`runtime`] (PJRT bridge to the
 //!   L2/L1 artifacts built by `python/compile/`)
@@ -34,6 +36,7 @@ pub mod coordinator;
 pub mod gen;
 pub mod linalg;
 pub mod mm;
+pub mod parallel;
 pub mod partition;
 pub mod proptest;
 pub mod rates;

@@ -5,6 +5,8 @@
 //! paper) and for the ADMM local solves `(A_iᵀA_i + ξI)⁻¹`.
 
 use super::dense::Mat;
+use super::kernels::dot;
+use super::vector::axpy;
 use anyhow::{bail, Result};
 
 /// Lower-triangular Cholesky factor `L` with `L Lᵀ = A`.
@@ -63,26 +65,26 @@ impl Cholesky {
         x
     }
 
-    /// In-place solve (hot path, zero alloc).
+    /// In-place solve (hot path, zero alloc). Both sweeps walk contiguous
+    /// rows of `L`: the forward substitution is a [`dot`] against the row
+    /// prefix, and the backward substitution is run column-oriented so
+    /// the inner update is an [`axpy`] over the same contiguous prefix —
+    /// no strided column walk over `Lᵀ`.
     pub fn solve_in_place(&self, x: &mut [f64]) {
         let n = self.order();
         assert_eq!(x.len(), n, "cholesky solve: dimension mismatch");
         // forward: L y = b
         for i in 0..n {
             let row = self.l.row(i);
-            let mut s = x[i];
-            for k in 0..i {
-                s -= row[k] * x[k];
-            }
-            x[i] = s / row[i];
+            x[i] = (x[i] - dot(&row[..i], &x[..i])) / row[i];
         }
-        // backward: Lᵀ x = y
+        // backward: Lᵀ x = y, column-oriented — once x[i] is final,
+        // subtract its contribution x[i]·L[i, k] from every k < i
         for i in (0..n).rev() {
-            let mut s = x[i];
-            for k in i + 1..n {
-                s -= self.l[(k, i)] * x[k];
-            }
-            x[i] = s / self.l[(i, i)];
+            let row = self.l.row(i);
+            let xi = x[i] / row[i];
+            x[i] = xi;
+            axpy(-xi, &row[..i], &mut x[..i]);
         }
     }
 

@@ -3,10 +3,11 @@
 //! `Mat` is the workhorse container for the whole stack: per-machine blocks
 //! `A_i`, Gram matrices, projection matrices in tests, and the spectrum
 //! analysis in `rates/`. Storage is a flat `Vec<f64>`, row-major, so a row
-//! slice is contiguous — matvec walks rows with `dot`, which is the layout
-//! the coordinator's hot path wants (each worker's `A_i` is a row block).
+//! slice is contiguous — the layout the blocked hot-path kernels in
+//! [`super::kernels`] want (each worker's `A_i` is a row block; matvec /
+//! trans-matvec / SYRK stream 4 rows per pass).
 
-use super::vector::dot;
+use super::kernels;
 use std::fmt;
 
 /// Dense row-major f64 matrix.
@@ -112,13 +113,12 @@ impl Mat {
     }
 
     /// `y = A x` into a caller-provided buffer (hot path: zero alloc).
+    /// Runs the blocked kernel: 4 rows share one pass over `x`.
     #[inline]
     pub fn matvec_into(&self, x: &[f64], y: &mut [f64]) {
         assert_eq!(x.len(), self.cols, "matvec_into: dimension mismatch");
         assert_eq!(y.len(), self.rows, "matvec_into: output mismatch");
-        for i in 0..self.rows {
-            y[i] = dot(self.row(i), x);
-        }
+        kernels::matvec(&self.data, self.rows, self.cols, x, y);
     }
 
     /// `y = Aᵀ x` without forming the transpose.
@@ -129,22 +129,22 @@ impl Mat {
     }
 
     /// `y = Aᵀ x` into a caller-provided buffer. Row-major friendly:
-    /// accumulates row-by-row so the inner loop is contiguous.
+    /// the blocked kernel folds 4 scaled rows per pass over `y`.
     #[inline]
     pub fn tr_matvec_into(&self, x: &[f64], y: &mut [f64]) {
         assert_eq!(x.len(), self.rows, "tr_matvec_into: dimension mismatch");
         assert_eq!(y.len(), self.cols, "tr_matvec_into: output mismatch");
-        y.fill(0.0);
-        for i in 0..self.rows {
-            let xi = x[i];
-            if xi == 0.0 {
-                continue;
-            }
-            let row = self.row(i);
-            for j in 0..self.cols {
-                y[j] += xi * row[j];
-            }
-        }
+        kernels::tr_matvec(&self.data, self.rows, self.cols, x, y);
+    }
+
+    /// `y += α · Aᵀ x` — fused accumulate variant for hot loops that fold
+    /// the back-projection directly into an iterate (e.g. the APC step's
+    /// `x_i ← x_i − γ A_iᵀ t`).
+    #[inline]
+    pub fn tr_matvec_axpy_into(&self, x: &[f64], alpha: f64, y: &mut [f64]) {
+        assert_eq!(x.len(), self.rows, "tr_matvec_axpy_into: dimension mismatch");
+        assert_eq!(y.len(), self.cols, "tr_matvec_axpy_into: output mismatch");
+        kernels::tr_matvec_axpy(&self.data, self.rows, self.cols, x, alpha, y);
     }
 
     /// Matrix product `A·B`. Blocked i-k-j loop order (row-major friendly).
@@ -179,16 +179,11 @@ impl Mat {
         t
     }
 
-    /// Gram matrix `A Aᵀ` (shape rows × rows), exploiting symmetry.
+    /// Gram matrix `A Aᵀ` (shape rows × rows) via the blocked SYRK kernel:
+    /// upper triangle only (half the flops of a general matmul), mirrored.
     pub fn gram_rows(&self) -> Mat {
         let mut g = Mat::zeros(self.rows, self.rows);
-        for i in 0..self.rows {
-            for j in i..self.rows {
-                let v = dot(self.row(i), self.row(j));
-                g[(i, j)] = v;
-                g[(j, i)] = v;
-            }
-        }
+        kernels::syrk_rows(&self.data, self.rows, self.cols, &mut g.data);
         g
     }
 

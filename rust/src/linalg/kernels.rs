@@ -1,0 +1,340 @@
+//! Cache-blocked compute kernels for the iteration hot path.
+//!
+//! Every method in the paper pays `2pn` flops per machine per round
+//! (§3.3/§4), all of it spent in three primitives over the row-major
+//! block `A_i`: `y = A x`, `y = Aᵀ x`, and (at setup) the row Gram
+//! `A Aᵀ`. The naive loops stream `x` (or `y`) from memory once per
+//! matrix row; at `n = 2000` the vectors no longer sit in L1 and the
+//! kernels go bandwidth-bound. The kernels here block over **4 rows at a
+//! time** so one pass of the shared vector feeds four dot products /
+//! four accumulation rows, cutting vector traffic 4× and giving the
+//! compiler four independent f64 chains to schedule:
+//!
+//! * [`matvec`] — `y = A x`, 4 rows share one `x` stream, two
+//!   accumulators per row (even/odd lanes) so adds don't serialize;
+//! * [`tr_matvec`] / [`tr_matvec_axpy`] — `y (+)= α Aᵀ x` with the four
+//!   per-row scales fused into a single pass over `y`;
+//! * [`syrk_rows`] — `G = A Aᵀ` computing only the upper triangle
+//!   (halving the Gram build flops vs. a general matmul) with the same
+//!   4-wide row blocking, then mirroring.
+//!
+//! [`Mat`](super::Mat) forwards `matvec_into` / `tr_matvec_into` /
+//! `gram_rows` here, and [`Cholesky`](super::Cholesky) runs its
+//! substitutions through [`dot`] — so the single-process solvers, the
+//! coordinator workers, and the benches all hit these kernels without
+//! holding a reference to this module.
+//!
+//! Numerics: blocking changes floating-point summation *order* relative
+//! to the naive loops (parity tests pin the kernels against naive
+//! references to ~1e-13 relative), but every kernel is deterministic —
+//! same inputs, same bits — which is what lets the parallel machine
+//! phase in [`crate::parallel`] reproduce the serial loop bit-for-bit.
+
+pub use super::vector::dot;
+
+/// Rows per micro-panel. Four f64 row streams + the shared vector stream
+/// stay within L1/L2 associativity for the block sizes the partition
+/// layer produces (`p = N/m`, `n` up to a few thousand).
+pub const MR: usize = 4;
+
+#[inline]
+fn row_of(a: &[f64], i: usize, cols: usize) -> &[f64] {
+    &a[i * cols..(i + 1) * cols]
+}
+
+/// `y = A x` for row-major `a` of shape `rows × cols`.
+///
+/// Blocked: 4 rows at a time share one pass over `x`; each row keeps two
+/// accumulators (even/odd positions) so the adds form independent chains.
+pub fn matvec(a: &[f64], rows: usize, cols: usize, x: &[f64], y: &mut [f64]) {
+    assert_eq!(a.len(), rows * cols, "kernels::matvec: matrix size mismatch");
+    assert_eq!(x.len(), cols, "kernels::matvec: x length mismatch");
+    assert_eq!(y.len(), rows, "kernels::matvec: y length mismatch");
+    let mut i = 0;
+    while i + MR <= rows {
+        let r0 = row_of(a, i, cols);
+        let r1 = row_of(a, i + 1, cols);
+        let r2 = row_of(a, i + 2, cols);
+        let r3 = row_of(a, i + 3, cols);
+        let (mut s0a, mut s0b) = (0.0f64, 0.0f64);
+        let (mut s1a, mut s1b) = (0.0f64, 0.0f64);
+        let (mut s2a, mut s2b) = (0.0f64, 0.0f64);
+        let (mut s3a, mut s3b) = (0.0f64, 0.0f64);
+        let pairs = cols / 2;
+        for c in 0..pairs {
+            let k = 2 * c;
+            let (xa, xb) = (x[k], x[k + 1]);
+            s0a += r0[k] * xa;
+            s0b += r0[k + 1] * xb;
+            s1a += r1[k] * xa;
+            s1b += r1[k + 1] * xb;
+            s2a += r2[k] * xa;
+            s2b += r2[k + 1] * xb;
+            s3a += r3[k] * xa;
+            s3b += r3[k + 1] * xb;
+        }
+        if cols % 2 == 1 {
+            let k = cols - 1;
+            let xk = x[k];
+            s0a += r0[k] * xk;
+            s1a += r1[k] * xk;
+            s2a += r2[k] * xk;
+            s3a += r3[k] * xk;
+        }
+        y[i] = s0a + s0b;
+        y[i + 1] = s1a + s1b;
+        y[i + 2] = s2a + s2b;
+        y[i + 3] = s3a + s3b;
+        i += MR;
+    }
+    while i < rows {
+        y[i] = dot(row_of(a, i, cols), x);
+        i += 1;
+    }
+}
+
+/// `y = Aᵀ x` for row-major `a` of shape `rows × cols` (`x` has `rows`
+/// entries, `y` has `cols`). Overwrites `y`.
+pub fn tr_matvec(a: &[f64], rows: usize, cols: usize, x: &[f64], y: &mut [f64]) {
+    assert_eq!(y.len(), cols, "kernels::tr_matvec: y length mismatch");
+    y.fill(0.0);
+    tr_matvec_axpy(a, rows, cols, x, 1.0, y);
+}
+
+/// `y += α · Aᵀ x` — fused accumulation, 4 rows folded per pass over `y`.
+///
+/// This is the back-projection half of every worker kernel (`A_iᵀ t`),
+/// and with `α = −γ` it is the entire tail of the APC step
+/// `x_i ← x_i − γ A_iᵀ t` without a temporary.
+pub fn tr_matvec_axpy(a: &[f64], rows: usize, cols: usize, x: &[f64], alpha: f64, y: &mut [f64]) {
+    assert_eq!(a.len(), rows * cols, "kernels::tr_matvec_axpy: matrix size mismatch");
+    assert_eq!(x.len(), rows, "kernels::tr_matvec_axpy: x length mismatch");
+    assert_eq!(y.len(), cols, "kernels::tr_matvec_axpy: y length mismatch");
+    let mut i = 0;
+    while i + MR <= rows {
+        let x0 = alpha * x[i];
+        let x1 = alpha * x[i + 1];
+        let x2 = alpha * x[i + 2];
+        let x3 = alpha * x[i + 3];
+        if x0 != 0.0 || x1 != 0.0 || x2 != 0.0 || x3 != 0.0 {
+            let r0 = row_of(a, i, cols);
+            let r1 = row_of(a, i + 1, cols);
+            let r2 = row_of(a, i + 2, cols);
+            let r3 = row_of(a, i + 3, cols);
+            for j in 0..cols {
+                y[j] += x0 * r0[j] + x1 * r1[j] + x2 * r2[j] + x3 * r3[j];
+            }
+        }
+        i += MR;
+    }
+    while i < rows {
+        let xi = alpha * x[i];
+        if xi != 0.0 {
+            let row = row_of(a, i, cols);
+            for j in 0..cols {
+                y[j] += xi * row[j];
+            }
+        }
+        i += 1;
+    }
+}
+
+/// `G = A Aᵀ` (SYRK) for row-major `a` of shape `rows × cols`; `g` is the
+/// `rows × rows` output, fully written (both triangles).
+///
+/// Only the upper triangle is *computed* — half the flops of a general
+/// `A · Aᵀ` matmul — and each loaded row `i` is dotted against 4 rows `j`
+/// per pass, so the `O(p²n)` Gram build streams `A` 4× less than the
+/// dot-per-entry loop it replaces.
+pub fn syrk_rows(a: &[f64], rows: usize, cols: usize, g: &mut [f64]) {
+    assert_eq!(a.len(), rows * cols, "kernels::syrk_rows: matrix size mismatch");
+    assert_eq!(g.len(), rows * rows, "kernels::syrk_rows: output size mismatch");
+    for i in 0..rows {
+        let ri = row_of(a, i, cols);
+        let mut j = i;
+        while j + MR <= rows {
+            let r0 = row_of(a, j, cols);
+            let r1 = row_of(a, j + 1, cols);
+            let r2 = row_of(a, j + 2, cols);
+            let r3 = row_of(a, j + 3, cols);
+            let (mut s0, mut s1, mut s2, mut s3) = (0.0f64, 0.0f64, 0.0f64, 0.0f64);
+            for k in 0..cols {
+                let v = ri[k];
+                s0 += v * r0[k];
+                s1 += v * r1[k];
+                s2 += v * r2[k];
+                s3 += v * r3[k];
+            }
+            g[i * rows + j] = s0;
+            g[i * rows + j + 1] = s1;
+            g[i * rows + j + 2] = s2;
+            g[i * rows + j + 3] = s3;
+            j += MR;
+        }
+        while j < rows {
+            g[i * rows + j] = dot(ri, row_of(a, j, cols));
+            j += 1;
+        }
+    }
+    for i in 1..rows {
+        for j in 0..i {
+            g[i * rows + j] = g[j * rows + i];
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Deterministic pseudo-random fill (no external RNG needed here).
+    fn filled(len: usize, seed: u64) -> Vec<f64> {
+        let mut state = seed.wrapping_mul(0x9E37_79B9_7F4A_7C15).max(1);
+        (0..len)
+            .map(|_| {
+                // xorshift64*
+                state ^= state >> 12;
+                state ^= state << 25;
+                state ^= state >> 27;
+                let bits = state.wrapping_mul(0x2545_F491_4F6C_DD1D);
+                (bits >> 11) as f64 / (1u64 << 53) as f64 - 0.5
+            })
+            .collect()
+    }
+
+    fn naive_matvec(a: &[f64], rows: usize, cols: usize, x: &[f64]) -> Vec<f64> {
+        (0..rows)
+            .map(|i| (0..cols).map(|j| a[i * cols + j] * x[j]).sum())
+            .collect()
+    }
+
+    fn naive_tr_matvec(a: &[f64], rows: usize, cols: usize, x: &[f64]) -> Vec<f64> {
+        (0..cols)
+            .map(|j| (0..rows).map(|i| a[i * cols + j] * x[i]).sum())
+            .collect()
+    }
+
+    fn max_rel_diff(a: &[f64], b: &[f64]) -> f64 {
+        a.iter()
+            .zip(b)
+            .map(|(x, y)| (x - y).abs() / x.abs().max(y.abs()).max(1.0))
+            .fold(0.0, f64::max)
+    }
+
+    /// Shapes that exercise every blocking remainder: rows ≡ 0..3 mod 4,
+    /// odd/even cols, degenerate empties.
+    const SHAPES: [(usize, usize); 9] =
+        [(0, 5), (1, 1), (3, 7), (4, 8), (5, 9), (7, 16), (8, 33), (12, 40), (17, 101)];
+
+    #[test]
+    fn matvec_matches_naive_across_remainders() {
+        for &(rows, cols) in &SHAPES {
+            let a = filled(rows * cols, 1 + rows as u64 * 31 + cols as u64);
+            let x = filled(cols, 77);
+            let mut y = vec![f64::NAN; rows];
+            matvec(&a, rows, cols, &x, &mut y);
+            let expect = naive_matvec(&a, rows, cols, &x);
+            assert!(
+                max_rel_diff(&y, &expect) < 1e-13,
+                "matvec {}x{} diverged from naive",
+                rows,
+                cols
+            );
+        }
+    }
+
+    #[test]
+    fn tr_matvec_matches_naive_across_remainders() {
+        for &(rows, cols) in &SHAPES {
+            let a = filled(rows * cols, 2 + rows as u64 * 13 + cols as u64);
+            let x = filled(rows, 78);
+            let mut y = vec![f64::NAN; cols];
+            tr_matvec(&a, rows, cols, &x, &mut y);
+            let expect = naive_tr_matvec(&a, rows, cols, &x);
+            assert!(
+                max_rel_diff(&y, &expect) < 1e-13,
+                "tr_matvec {}x{} diverged from naive",
+                rows,
+                cols
+            );
+        }
+    }
+
+    #[test]
+    fn tr_matvec_axpy_accumulates_scaled() {
+        let (rows, cols) = (11, 23);
+        let a = filled(rows * cols, 5);
+        let x = filled(rows, 6);
+        let y0 = filled(cols, 7);
+        let alpha = -1.37;
+        let mut y = y0.clone();
+        tr_matvec_axpy(&a, rows, cols, &x, alpha, &mut y);
+        let t = naive_tr_matvec(&a, rows, cols, &x);
+        let expect: Vec<f64> = y0.iter().zip(&t).map(|(y, t)| y + alpha * t).collect();
+        assert!(max_rel_diff(&y, &expect) < 1e-13);
+    }
+
+    #[test]
+    fn tr_matvec_axpy_zero_alpha_is_noop() {
+        let (rows, cols) = (6, 10);
+        let a = filled(rows * cols, 9);
+        let x = filled(rows, 10);
+        let y0 = filled(cols, 11);
+        let mut y = y0.clone();
+        tr_matvec_axpy(&a, rows, cols, &x, 0.0, &mut y);
+        assert_eq!(y, y0, "α = 0 must leave y bit-identical");
+    }
+
+    #[test]
+    fn syrk_matches_naive_and_is_symmetric() {
+        for &(rows, cols) in &SHAPES {
+            let a = filled(rows * cols, 3 + rows as u64 * 7 + cols as u64);
+            let mut g = vec![f64::NAN; rows * rows];
+            syrk_rows(&a, rows, cols, &mut g);
+            for i in 0..rows {
+                for j in 0..rows {
+                    let expect: f64 = (0..cols).map(|k| a[i * cols + k] * a[j * cols + k]).sum();
+                    let got = g[i * rows + j];
+                    let scale = expect.abs().max(1.0);
+                    assert!(
+                        (got - expect).abs() / scale < 1e-13,
+                        "syrk {}x{} entry ({},{}) {} vs {}",
+                        rows,
+                        cols,
+                        i,
+                        j,
+                        got,
+                        expect
+                    );
+                    // exact mirror, not merely approximate symmetry
+                    assert_eq!(g[i * rows + j], g[j * rows + i]);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn kernels_are_deterministic() {
+        // same inputs → same bits, the property the parallel machine
+        // phase's bit-exactness guarantee rests on
+        let (rows, cols) = (13, 29);
+        let a = filled(rows * cols, 21);
+        let x = filled(cols, 22);
+        let xt = filled(rows, 23);
+        let mut y1 = vec![0.0; rows];
+        let mut y2 = vec![0.0; rows];
+        matvec(&a, rows, cols, &x, &mut y1);
+        matvec(&a, rows, cols, &x, &mut y2);
+        assert_eq!(y1, y2);
+        let mut t1 = vec![0.0; cols];
+        let mut t2 = vec![0.0; cols];
+        tr_matvec(&a, rows, cols, &xt, &mut t1);
+        tr_matvec(&a, rows, cols, &xt, &mut t2);
+        assert_eq!(t1, t2);
+        let mut g1 = vec![0.0; rows * rows];
+        let mut g2 = vec![0.0; rows * rows];
+        syrk_rows(&a, rows, cols, &mut g1);
+        syrk_rows(&a, rows, cols, &mut g2);
+        assert_eq!(g1, g2);
+    }
+}

@@ -5,6 +5,9 @@
 //! from scratch in f64:
 //!
 //! * [`Mat`] — row-major dense matrix with matvec / matmul / transpose,
+//! * [`kernels`] — cache-blocked hot-path kernels (4-row matvec, fused
+//!   transpose-matvec accumulation, symmetric SYRK) that `Mat` and
+//!   `Cholesky` forward to,
 //! * [`cholesky`] — SPD factorization, solves, inverse, inverse square root,
 //! * [`qr`] — Householder QR (used for orthogonal sampling + least squares),
 //! * [`lu`] — partial-pivot LU (general solves, determinant sanity),
@@ -19,6 +22,7 @@
 pub mod cholesky;
 pub mod dense;
 pub mod eig;
+pub mod kernels;
 pub mod lu;
 pub mod qr;
 pub mod vector;

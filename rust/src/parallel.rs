@@ -1,0 +1,482 @@
+//! Std-only persistent thread pool for the synchronous machine phase.
+//!
+//! The paper's execution model is one communication round = one *parallel*
+//! machine phase (every machine applies its local kernel to the broadcast
+//! iterate) followed by one master phase (a deterministic fold of the
+//! per-machine outputs). The single-process solvers in [`crate::solvers`]
+//! used to run the machine phase serially, understating every method's
+//! wall-clock by a factor of `m`; they now fan it out through
+//! [`machine_phase`], which dispatches the `m` per-block kernels across a
+//! persistent pool of worker threads and barriers until all have
+//! completed.
+//!
+//! Design constraints and how they are met:
+//!
+//! * **std-only** — no rayon/crossbeam in the image. Workers are plain
+//!   [`std::thread`]s parked on a [`Condvar`]; one pool is built lazily
+//!   per process ([`global`]) and reused by every round of every solver,
+//!   so the per-round cost is two condvar transitions, not `m` thread
+//!   spawns.
+//! * **scoped** — the phase closure borrows solver state off the caller's
+//!   stack. [`machine_phase`] lifetime-launders a reference to it for the
+//!   workers and *does not return* until every index has completed (or
+//!   the pool observed a panic), which is what makes the laundering
+//!   sound; the closure can therefore capture non-`'static` borrows.
+//! * **bit-identical to the serial loop** — tasks are per-machine and
+//!   write only their own machine's state (see [`SliceCells`]); the
+//!   cross-machine fold stays on the caller, in machine-index order. The
+//!   scheduling order of the phase is irrelevant to the result, so
+//!   parallel and serial execution produce the same bits (pinned by
+//!   `tests/parallel_parity.rs`).
+//! * **deterministic claim protocol** — indices are claimed under the
+//!   pool mutex (tasks are coarse — `2pn` flops each — so one lock per
+//!   claim is noise), which also makes epoch transitions race-free: a
+//!   straggler from round `t` can never claim work from round `t+1`.
+//!
+//! Thread count: `APC_THREADS` env var if set, else
+//! [`std::thread::available_parallelism`]. With one thread the pool
+//! degenerates to the serial loop. [`serial_scope`] forces the serial
+//! path for a region — the parity tests and the serial baselines in
+//! `benches/iteration_hotpath.rs` use it.
+
+use std::marker::PhantomData;
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::{Arc, Condvar, Mutex, OnceLock};
+use std::thread::JoinHandle;
+
+// ---------------------------------------------------------------------------
+// shared pool state
+// ---------------------------------------------------------------------------
+
+/// Type-erased pointer to the caller's phase closure. The lifetime is
+/// laundered to `'static`; soundness rests on `machine_phase` blocking
+/// until the phase fully completes, so the pointee outlives every use.
+#[derive(Clone, Copy)]
+struct TaskPtr(*const (dyn Fn(usize) + Sync + 'static));
+
+// SAFETY: the pointee is `Sync` (bound enforced at the only construction
+// site, in `machine_phase`) and outlives all worker accesses (barrier).
+unsafe impl Send for TaskPtr {}
+
+struct PhaseState {
+    /// Monotone phase counter; workers use it to tell a new phase from a
+    /// spurious wakeup and to refuse stale claims.
+    epoch: u64,
+    /// The active phase closure, `None` between phases.
+    task: Option<TaskPtr>,
+    /// Number of tasks in the active phase.
+    m: usize,
+    /// Next unclaimed index.
+    claimed: usize,
+    /// Completed (returned or panicked) task count.
+    done: usize,
+    /// A task panicked this phase; the caller re-raises after the barrier.
+    panicked: bool,
+    shutdown: bool,
+}
+
+struct Shared {
+    state: Mutex<PhaseState>,
+    /// Workers wait here for a new epoch.
+    work_cv: Condvar,
+    /// The caller waits here for `done == m`.
+    done_cv: Condvar,
+}
+
+impl Shared {
+    /// Claim-and-run loop shared by workers and the dispatching caller.
+    /// Returns the number of tasks this thread completed for `epoch`.
+    fn run_tasks(&self, task: TaskPtr, m: usize, epoch: u64) -> usize {
+        let mut ran = 0usize;
+        loop {
+            let i = {
+                let mut st = self.state.lock().unwrap();
+                if st.epoch != epoch || st.claimed >= m {
+                    break;
+                }
+                let i = st.claimed;
+                st.claimed += 1;
+                i
+            };
+            // SAFETY: the claim above succeeded under the lock with the
+            // phase's epoch still current, and the dispatcher cannot pass
+            // the barrier (and drop the closure) until this task reports
+            // done below — so the pointee is alive for this call.
+            let f = unsafe { &*task.0 };
+            let result = catch_unwind(AssertUnwindSafe(|| f(i)));
+            ran += 1;
+            let mut st = self.state.lock().unwrap();
+            if st.epoch == epoch {
+                st.done += 1;
+                if result.is_err() {
+                    st.panicked = true;
+                }
+                if st.done >= st.m {
+                    self.done_cv.notify_all();
+                }
+            }
+        }
+        ran
+    }
+}
+
+fn worker_loop(shared: Arc<Shared>) {
+    let mut seen_epoch = 0u64;
+    loop {
+        let (task, m, epoch) = {
+            let mut st = shared.state.lock().unwrap();
+            loop {
+                if st.shutdown {
+                    return;
+                }
+                if let Some(t) = st.task {
+                    if st.epoch != seen_epoch {
+                        break (t, st.m, st.epoch);
+                    }
+                }
+                st = shared.work_cv.wait(st).unwrap();
+            }
+        };
+        seen_epoch = epoch;
+        IN_PHASE.with(|c| c.set(c.get() + 1));
+        shared.run_tasks(task, m, epoch);
+        IN_PHASE.with(|c| c.set(c.get() - 1));
+    }
+}
+
+// ---------------------------------------------------------------------------
+// the pool
+// ---------------------------------------------------------------------------
+
+/// Persistent machine-phase thread pool. Most code should use the free
+/// function [`machine_phase`] (the lazily-built process-global pool);
+/// constructing an explicit pool is for tests and ablations.
+pub struct ThreadPool {
+    shared: Arc<Shared>,
+    handles: Vec<JoinHandle<()>>,
+    /// Serializes dispatching callers: one phase in flight at a time
+    /// (two user threads iterating two solvers over one pool queue up
+    /// rather than corrupting each other's phase).
+    dispatch: Mutex<()>,
+}
+
+impl ThreadPool {
+    /// Pool that executes phases across `threads` threads total — the
+    /// dispatching caller participates, so `threads - 1` workers are
+    /// spawned. `threads == 1` (or 0) means fully serial.
+    pub fn new(threads: usize) -> Self {
+        let shared = Arc::new(Shared {
+            state: Mutex::new(PhaseState {
+                epoch: 0,
+                task: None,
+                m: 0,
+                claimed: 0,
+                done: 0,
+                panicked: false,
+                shutdown: false,
+            }),
+            work_cv: Condvar::new(),
+            done_cv: Condvar::new(),
+        });
+        let helpers = threads.saturating_sub(1);
+        let handles = (0..helpers)
+            .map(|i| {
+                let shared = Arc::clone(&shared);
+                std::thread::Builder::new()
+                    .name(format!("apc-pool-{i}"))
+                    .spawn(move || worker_loop(shared))
+                    .expect("spawn pool worker")
+            })
+            .collect();
+        ThreadPool { shared, handles, dispatch: Mutex::new(()) }
+    }
+
+    /// Total threads a phase can use (helpers + the caller).
+    pub fn threads(&self) -> usize {
+        self.handles.len() + 1
+    }
+
+    /// Run one barrier-synchronized machine phase: `f(i)` is invoked
+    /// exactly once for every `i in 0..m`, across the pool's threads, and
+    /// this call returns only after all `m` invocations have completed.
+    ///
+    /// Falls back to the plain serial loop when the pool has no helpers,
+    /// `m < 2`, a [`serial_scope`] is active, or the calling thread is
+    /// itself inside a phase (nested phases would deadlock the claim
+    /// protocol; serial execution is always semantically equivalent).
+    ///
+    /// Panics (after the barrier) if any task panicked, so a failed
+    /// assertion inside a kernel surfaces instead of vanishing into a
+    /// worker thread.
+    pub fn machine_phase<F: Fn(usize) + Sync>(&self, m: usize, f: F) {
+        if self.handles.is_empty() || m < 2 || serial_forced() {
+            for i in 0..m {
+                f(i);
+            }
+            return;
+        }
+
+        // one phase at a time; held until the barrier completes. A
+        // poisoned lock only means an earlier phase panicked — the
+        // guarded state is (), so recovery is always safe.
+        let dispatch = self.dispatch.lock().unwrap_or_else(|e| e.into_inner());
+
+        // launder the closure's lifetime for the workers; see TaskPtr.
+        // SAFETY: this function does not return until `done == m`, so the
+        // laundered reference never outlives `f`.
+        let obj: &(dyn Fn(usize) + Sync) = &f;
+        let obj: &'static (dyn Fn(usize) + Sync) = unsafe { std::mem::transmute(obj) };
+        let task = TaskPtr(obj as *const (dyn Fn(usize) + Sync));
+
+        let epoch = {
+            let mut st = self.shared.state.lock().unwrap();
+            debug_assert!(st.task.is_none(), "machine_phase: phase already active");
+            st.epoch += 1;
+            st.task = Some(task);
+            st.m = m;
+            st.claimed = 0;
+            st.done = 0;
+            st.panicked = false;
+            self.shared.work_cv.notify_all();
+            st.epoch
+        };
+
+        // the caller is a participant, not just a dispatcher
+        IN_PHASE.with(|c| c.set(c.get() + 1));
+        self.shared.run_tasks(task, m, epoch);
+        IN_PHASE.with(|c| c.set(c.get() - 1));
+
+        // barrier: wait for the stragglers, then retire the phase
+        let mut st = self.shared.state.lock().unwrap();
+        while st.done < st.m {
+            st = self.shared.done_cv.wait(st).unwrap();
+        }
+        st.task = None;
+        let panicked = st.panicked;
+        drop(st);
+        // release the dispatch slot BEFORE re-raising, so one failed
+        // phase doesn't poison the pool for every later caller
+        drop(dispatch);
+        if panicked {
+            panic!("machine_phase: a phase task panicked (see worker backtrace above)");
+        }
+    }
+}
+
+impl Drop for ThreadPool {
+    fn drop(&mut self) {
+        {
+            let mut st = self.shared.state.lock().unwrap();
+            st.shutdown = true;
+            self.shared.work_cv.notify_all();
+        }
+        for h in self.handles.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// process-global pool + serial override
+// ---------------------------------------------------------------------------
+
+thread_local! {
+    /// Depth of active [`serial_scope`]s on this thread.
+    static SERIAL_DEPTH: std::cell::Cell<u32> = const { std::cell::Cell::new(0) };
+    /// Depth of phases this thread is currently executing inside of.
+    static IN_PHASE: std::cell::Cell<u32> = const { std::cell::Cell::new(0) };
+}
+
+fn serial_forced() -> bool {
+    SERIAL_DEPTH.with(|c| c.get()) > 0 || IN_PHASE.with(|c| c.get()) > 0
+}
+
+/// Default thread count: `APC_THREADS` env override, else the machine's
+/// available parallelism, never less than 1.
+pub fn default_threads() -> usize {
+    if let Ok(v) = std::env::var("APC_THREADS") {
+        if let Ok(n) = v.trim().parse::<usize>() {
+            return n.max(1);
+        }
+    }
+    std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+}
+
+/// The process-global machine-phase pool, built on first use.
+pub fn global() -> &'static ThreadPool {
+    static POOL: OnceLock<ThreadPool> = OnceLock::new();
+    POOL.get_or_init(|| ThreadPool::new(default_threads()))
+}
+
+/// Fan the `m` per-machine tasks of one synchronous round across the
+/// global pool and barrier until all complete. Inside a [`serial_scope`]
+/// this is exactly `for i in 0..m { f(i) }`.
+pub fn machine_phase<F: Fn(usize) + Sync>(m: usize, f: F) {
+    global().machine_phase(m, f)
+}
+
+/// Run `f` with the machine phase forced onto the plain serial loop on
+/// this thread (nestable). This is how the parity tests and the bench's
+/// serial baseline obtain the reference trajectory from the *same*
+/// solver code that normally runs parallel.
+pub fn serial_scope<R>(f: impl FnOnce() -> R) -> R {
+    struct Guard;
+    impl Drop for Guard {
+        fn drop(&mut self) {
+            SERIAL_DEPTH.with(|c| c.set(c.get() - 1));
+        }
+    }
+    SERIAL_DEPTH.with(|c| c.set(c.get() + 1));
+    let _g = Guard;
+    f()
+}
+
+// ---------------------------------------------------------------------------
+// disjoint per-machine mutable access
+// ---------------------------------------------------------------------------
+
+/// Shareable view of a `&mut [T]` granting per-index mutable access from
+/// a machine phase, where task `i` touches only element `i` — the
+/// "machines own disjoint state" invariant of the synchronous model,
+/// expressed as an API.
+pub struct SliceCells<'a, T> {
+    ptr: *mut T,
+    len: usize,
+    _marker: PhantomData<&'a mut [T]>,
+}
+
+// SAFETY: hands out &mut T only through the unsafe, caller-audited
+// `index_mut`; the wrapper itself holds no aliasing references.
+unsafe impl<T: Send> Sync for SliceCells<'_, T> {}
+unsafe impl<T: Send> Send for SliceCells<'_, T> {}
+
+impl<'a, T> SliceCells<'a, T> {
+    pub fn new(slice: &'a mut [T]) -> Self {
+        SliceCells { ptr: slice.as_mut_ptr(), len: slice.len(), _marker: PhantomData }
+    }
+
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    /// Mutable access to element `i`.
+    ///
+    /// # Safety
+    ///
+    /// During any window in which the returned reference is alive, no
+    /// other reference to element `i` may exist. In a [`machine_phase`]
+    /// this holds when task `i` is the only task accessing index `i` —
+    /// the pool invokes each task exactly once per phase.
+    #[allow(clippy::mut_from_ref)] // aliasing discipline is the caller contract above
+    pub unsafe fn index_mut(&self, i: usize) -> &mut T {
+        assert!(i < self.len, "SliceCells: index {} out of bounds ({})", i, self.len);
+        &mut *self.ptr.add(i)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::{AtomicUsize, Ordering};
+
+    #[test]
+    fn phase_runs_every_index_exactly_once() {
+        let pool = ThreadPool::new(4);
+        let counts: Vec<AtomicUsize> = (0..64).map(|_| AtomicUsize::new(0)).collect();
+        pool.machine_phase(64, |i| {
+            counts[i].fetch_add(1, Ordering::SeqCst);
+        });
+        for (i, c) in counts.iter().enumerate() {
+            assert_eq!(c.load(Ordering::SeqCst), 1, "index {i} ran a wrong number of times");
+        }
+    }
+
+    #[test]
+    fn phases_are_reusable_and_barriered() {
+        // the barrier property: after machine_phase returns, every write
+        // performed by the phase is visible to the caller
+        let pool = ThreadPool::new(3);
+        let mut data = vec![0u64; 40];
+        for round in 1..=5u64 {
+            let cells = SliceCells::new(&mut data);
+            pool.machine_phase(cells.len(), |i| {
+                // SAFETY: task i is the only accessor of index i
+                let v = unsafe { cells.index_mut(i) };
+                *v += round * (i as u64 + 1);
+            });
+        }
+        let total: u64 = (1..=5u64).sum();
+        for (i, v) in data.iter().enumerate() {
+            assert_eq!(*v, total * (i as u64 + 1));
+        }
+    }
+
+    #[test]
+    fn serial_scope_forces_caller_thread() {
+        let pool = ThreadPool::new(4);
+        let caller = std::thread::current().id();
+        let ran = AtomicUsize::new(0);
+        serial_scope(|| {
+            pool.machine_phase(16, |_| {
+                assert_eq!(std::thread::current().id(), caller, "task escaped serial_scope");
+                ran.fetch_add(1, Ordering::SeqCst);
+            });
+        });
+        assert_eq!(ran.load(Ordering::SeqCst), 16);
+    }
+
+    #[test]
+    fn parallel_matches_serial_results() {
+        let pool = ThreadPool::new(4);
+        let work = |i: usize| ((i as f64) * 0.1).sin() * ((i as f64) + 1.0).sqrt();
+        let mut par = vec![0.0f64; 33];
+        {
+            let cells = SliceCells::new(&mut par);
+            pool.machine_phase(cells.len(), |i| {
+                // SAFETY: task i is the only accessor of index i
+                unsafe { *cells.index_mut(i) = work(i) };
+            });
+        }
+        let ser: Vec<f64> = (0..33).map(work).collect();
+        assert_eq!(par, ser, "parallel phase must be bit-identical to serial");
+    }
+
+    #[test]
+    fn nested_phase_degenerates_to_serial() {
+        let pool = ThreadPool::new(4);
+        let ran = AtomicUsize::new(0);
+        pool.machine_phase(4, |_| {
+            // nested: must run inline rather than deadlock the pool
+            pool.machine_phase(4, |_| {
+                ran.fetch_add(1, Ordering::SeqCst);
+            });
+        });
+        assert_eq!(ran.load(Ordering::SeqCst), 16);
+    }
+
+    #[test]
+    fn single_thread_pool_is_serial() {
+        let pool = ThreadPool::new(1);
+        assert_eq!(pool.threads(), 1);
+        let caller = std::thread::current().id();
+        pool.machine_phase(8, |_| {
+            assert_eq!(std::thread::current().id(), caller);
+        });
+    }
+
+    #[test]
+    fn empty_and_singleton_phases() {
+        let pool = ThreadPool::new(2);
+        pool.machine_phase(0, |_| panic!("no tasks to run"));
+        let ran = AtomicUsize::new(0);
+        pool.machine_phase(1, |i| {
+            assert_eq!(i, 0);
+            ran.fetch_add(1, Ordering::SeqCst);
+        });
+        assert_eq!(ran.load(Ordering::SeqCst), 1);
+    }
+}

@@ -1,7 +1,19 @@
 //! PJRT execution engine: compile HLO-text artifacts once, execute many.
+//!
+//! The real engine needs the `xla` PJRT bindings (a native libxla
+//! install) and is gated behind the `pjrt` cargo feature. Without the
+//! feature this module exposes an API-compatible stub whose constructor
+//! returns an error, so everything downstream (coordinator `Backend::Hlo`
+//! path, the hotpath bench's HLO section) degrades gracefully at setup
+//! instead of at link time.
 
 use super::artifact::ArtifactEntry;
-use anyhow::{anyhow, bail, Context, Result};
+#[cfg(not(feature = "pjrt"))]
+use anyhow::bail;
+#[cfg(feature = "pjrt")]
+use anyhow::{anyhow, bail, Context};
+use anyhow::Result;
+#[cfg(feature = "pjrt")]
 use std::collections::HashMap;
 
 /// A tensor argument for an artifact call: either fresh host data uploaded
@@ -18,12 +30,14 @@ pub enum TensorArg<'a> {
 
 /// One thread's PJRT client plus its compiled executables and
 /// device-buffer cache. NOT `Send`: construct per thread.
+#[cfg(feature = "pjrt")]
 pub struct Engine {
     client: xla::PjRtClient,
     executables: HashMap<String, xla::PjRtLoadedExecutable>,
     buffers: HashMap<String, xla::PjRtBuffer>,
 }
 
+#[cfg(feature = "pjrt")]
 impl Engine {
     /// Construct on the PJRT CPU client.
     pub fn cpu() -> Result<Self> {
@@ -147,11 +161,63 @@ impl Engine {
 }
 
 /// The xla crate has its own error type; flatten it into anyhow.
+#[cfg(feature = "pjrt")]
 fn wrap_xla(e: xla::Error) -> anyhow::Error {
     anyhow!("xla: {}", e)
 }
 
-#[cfg(test)]
+/// Stub engine (crate built without the `pjrt` feature): construction
+/// fails with a descriptive error and the remaining methods are provably
+/// unreachable (the struct cannot be instantiated).
+#[cfg(not(feature = "pjrt"))]
+pub struct Engine {
+    void: Void,
+}
+
+#[cfg(not(feature = "pjrt"))]
+enum Void {}
+
+#[cfg(not(feature = "pjrt"))]
+impl Engine {
+    /// Always errors: the crate was built without the `pjrt` feature.
+    pub fn cpu() -> Result<Self> {
+        bail!(
+            "PJRT engine unavailable: the crate was built without the `pjrt` \
+             feature (requires the xla bindings + libxla). Use Backend::Native, \
+             or rebuild with `--features pjrt`."
+        )
+    }
+
+    pub fn load(&mut self, _entry: &ArtifactEntry) -> Result<()> {
+        match self.void {}
+    }
+
+    pub fn cache_buffer(&mut self, _key: &str, _data: &[f64], _dims: &[usize]) -> Result<()> {
+        match self.void {}
+    }
+
+    pub fn execute(&mut self, _entry: &ArtifactEntry, _args: &[TensorArg]) -> Result<Vec<Vec<f64>>> {
+        match self.void {}
+    }
+
+    pub fn loaded_count(&self) -> usize {
+        match self.void {}
+    }
+}
+
+#[cfg(all(test, not(feature = "pjrt")))]
+mod stub_tests {
+    use super::*;
+
+    #[test]
+    fn stub_engine_fails_with_guidance() {
+        let err = Engine::cpu().err().expect("stub must not construct");
+        let msg = format!("{err:#}");
+        assert!(msg.contains("pjrt"), "unhelpful stub error: {msg}");
+    }
+}
+
+#[cfg(all(test, feature = "pjrt"))]
 mod tests {
     use super::*;
     use crate::runtime::Manifest;

@@ -14,17 +14,19 @@
 
 use super::local::AdmmLocal;
 use super::Solver;
+use crate::parallel::{self, SliceCells};
 use crate::partition::PartitionedSystem;
 use crate::rates::{admm_optimal, SpectralInfo};
 use anyhow::Result;
 
-/// Modified (y≡0) consensus ADMM.
+/// Modified (y≡0) consensus ADMM (per-machine solve buffers; machine
+/// phase runs on the [`crate::parallel`] pool).
 #[derive(Clone, Debug)]
 pub struct Admm {
     pub xi: f64,
     locals: Vec<AdmmLocal>,
     xbar: Vec<f64>,
-    xi_buf: Vec<f64>,
+    xs: Vec<Vec<f64>>,
     sum: Vec<f64>,
 }
 
@@ -39,7 +41,7 @@ impl Admm {
             xi,
             locals,
             xbar: vec![0.0; sys.n],
-            xi_buf: vec![0.0; sys.n],
+            xs: vec![vec![0.0; sys.n]; sys.m()],
             sum: vec![0.0; sys.n],
         })
     }
@@ -67,10 +69,21 @@ impl Solver for Admm {
     }
 
     fn iterate(&mut self, sys: &PartitionedSystem) {
+        // machine phase: x_i = (A_iᵀA_i + ξI)⁻¹(A_iᵀb_i + ξx̄) into xs[i]
+        let blocks = &sys.blocks;
+        let xbar = &self.xbar;
+        let locals = SliceCells::new(&mut self.locals);
+        let xs = SliceCells::new(&mut self.xs);
+        parallel::machine_phase(blocks.len(), |i| {
+            // SAFETY: task i is the phase's only accessor of index i
+            let local = unsafe { locals.index_mut(i) };
+            let out = unsafe { xs.index_mut(i) };
+            local.step(&blocks[i], xbar, out);
+        });
+        // master phase: x̄ = mean(x_i), folded in machine-index order
         self.sum.fill(0.0);
-        for (local, blk) in self.locals.iter_mut().zip(&sys.blocks) {
-            local.step(blk, &self.xbar, &mut self.xi_buf);
-            for (s, v) in self.sum.iter_mut().zip(&self.xi_buf) {
+        for x_i in &self.xs {
+            for (s, v) in self.sum.iter_mut().zip(x_i) {
                 *s += v;
             }
         }

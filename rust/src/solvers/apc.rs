@@ -3,6 +3,7 @@
 
 use super::local::{master_momentum_average, ApcLocal};
 use super::Solver;
+use crate::parallel::{self, SliceCells};
 use crate::partition::PartitionedSystem;
 use crate::rates::{apc_optimal, ApcParams, SpectralInfo};
 use anyhow::Result;
@@ -89,11 +90,19 @@ impl Solver for Apc {
     }
 
     fn iterate(&mut self, sys: &PartitionedSystem) {
-        // machine phase (parallel in the distributed execution)
-        for (local, blk) in self.locals.iter_mut().zip(&sys.blocks) {
-            local.step(blk, &self.xbar);
-        }
-        // master phase: x̄ ← (η/m) Σ x_i + (1−η) x̄
+        // machine phase — one task per machine, fanned out across the
+        // pool (each task touches only its own x_i, so the phase is
+        // bit-identical to the serial loop)
+        let blocks = &sys.blocks;
+        let xbar = &self.xbar;
+        let locals = SliceCells::new(&mut self.locals);
+        parallel::machine_phase(blocks.len(), |i| {
+            // SAFETY: task i is the phase's only accessor of locals[i]
+            let local = unsafe { locals.index_mut(i) };
+            local.step(&blocks[i], xbar);
+        });
+        // master phase: x̄ ← (η/m) Σ x_i + (1−η) x̄, folded in
+        // machine-index order (deterministic)
         self.sum.fill(0.0);
         for local in &self.locals {
             for (s, v) in self.sum.iter_mut().zip(&local.x) {

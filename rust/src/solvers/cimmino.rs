@@ -6,24 +6,32 @@
 
 use super::local::CimminoLocal;
 use super::Solver;
+use crate::parallel::{self, SliceCells};
 use crate::partition::PartitionedSystem;
 use crate::rates::{cimmino_optimal, SpectralInfo};
 use anyhow::Result;
 
-/// Block Cimmino solver.
+/// Block Cimmino solver (per-machine residual buffers; machine phase
+/// runs on the [`crate::parallel`] pool).
 #[derive(Clone, Debug)]
 pub struct Cimmino {
     pub nu: f64,
     locals: Vec<CimminoLocal>,
     xbar: Vec<f64>,
-    r: Vec<f64>,
+    rs: Vec<Vec<f64>>,
     sum: Vec<f64>,
 }
 
 impl Cimmino {
     pub fn with_params(sys: &PartitionedSystem, nu: f64) -> Self {
         let locals = sys.blocks.iter().map(CimminoLocal::new).collect();
-        Cimmino { nu, locals, xbar: vec![0.0; sys.n], r: vec![0.0; sys.n], sum: vec![0.0; sys.n] }
+        Cimmino {
+            nu,
+            locals,
+            xbar: vec![0.0; sys.n],
+            rs: vec![vec![0.0; sys.n]; sys.m()],
+            sum: vec![0.0; sys.n],
+        }
     }
 
     /// Optimal `ν* = 2/(m(μ_max + μ_min))` from the spectrum of `X`.
@@ -50,13 +58,25 @@ impl Solver for Cimmino {
     fn iterate(&mut self, sys: &PartitionedSystem) {
         // Jacobi-style round: every machine sees the SAME x̄(t) (Eq. 15a);
         // the sum is applied only after all machines have reported. Folding
-        // the update into x̄ inside the loop would silently turn this into
-        // a Gauss–Seidel sweep with a different (often better, but wrong)
-        // trajectory — caught by the Proposition-2 equivalence test.
+        // the update into x̄ inside the machine phase would silently turn
+        // this into a Gauss–Seidel sweep with a different (often better,
+        // but wrong) trajectory — caught by the Proposition-2 test. The
+        // parallel fan-out preserves the Jacobi semantics for free: every
+        // task reads the same broadcast x̄ and writes only rs[i].
+        let blocks = &sys.blocks;
+        let xbar = &self.xbar;
+        let locals = SliceCells::new(&mut self.locals);
+        let rs = SliceCells::new(&mut self.rs);
+        parallel::machine_phase(blocks.len(), |i| {
+            // SAFETY: task i is the phase's only accessor of index i
+            let local = unsafe { locals.index_mut(i) };
+            let out = unsafe { rs.index_mut(i) };
+            local.step(&blocks[i], xbar, out);
+        });
+        // master phase: fold in machine-index order
         self.sum.fill(0.0);
-        for (local, blk) in self.locals.iter_mut().zip(&sys.blocks) {
-            local.step(blk, &self.xbar, &mut self.r);
-            for (s, ri) in self.sum.iter_mut().zip(&self.r) {
+        for r in &self.rs {
+            for (s, ri) in self.sum.iter_mut().zip(r) {
                 *s += ri;
             }
         }

@@ -3,18 +3,20 @@
 
 use super::local::GradLocal;
 use super::Solver;
+use crate::parallel::{self, SliceCells};
 use crate::partition::PartitionedSystem;
 use crate::rates::{dgd_optimal, SpectralInfo};
 use anyhow::Result;
 
-/// DGD solver: the master holds `x`, machines return partial gradients.
+/// DGD solver: the master holds `x`, machines return partial gradients
+/// (one output buffer per machine so the machine phase can run parallel).
 #[derive(Clone, Debug)]
 pub struct Dgd {
     pub alpha: f64,
     locals: Vec<GradLocal>,
     x: Vec<f64>,
     grad: Vec<f64>,
-    partial: Vec<f64>,
+    partials: Vec<Vec<f64>>,
 }
 
 impl Dgd {
@@ -25,7 +27,7 @@ impl Dgd {
             locals,
             x: vec![0.0; sys.n],
             grad: vec![0.0; sys.n],
-            partial: vec![0.0; sys.n],
+            partials: vec![vec![0.0; sys.n]; sys.m()],
         }
     }
 
@@ -51,10 +53,22 @@ impl Solver for Dgd {
     }
 
     fn iterate(&mut self, sys: &PartitionedSystem) {
+        // machine phase: g_i = A_iᵀ(A_i x − b_i) into partials[i]
+        let blocks = &sys.blocks;
+        let x = &self.x;
+        let locals = SliceCells::new(&mut self.locals);
+        let partials = SliceCells::new(&mut self.partials);
+        parallel::machine_phase(blocks.len(), |i| {
+            // SAFETY: task i is the phase's only accessor of index i
+            let local = unsafe { locals.index_mut(i) };
+            let out = unsafe { partials.index_mut(i) };
+            local.partial_grad(&blocks[i], x, out);
+        });
+        // master phase: fold in machine-index order (matches the serial
+        // loop's accumulation order bit-for-bit), then descend
         self.grad.fill(0.0);
-        for (local, blk) in self.locals.iter_mut().zip(&sys.blocks) {
-            local.partial_grad(blk, &self.x, &mut self.partial);
-            for (g, p) in self.grad.iter_mut().zip(&self.partial) {
+        for partial in &self.partials {
+            for (g, p) in self.grad.iter_mut().zip(partial) {
                 *g += p;
             }
         }

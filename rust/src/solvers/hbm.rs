@@ -7,11 +7,13 @@
 
 use super::local::GradLocal;
 use super::Solver;
+use crate::parallel::{self, SliceCells};
 use crate::partition::PartitionedSystem;
 use crate::rates::{hbm_optimal, SpectralInfo};
 use anyhow::Result;
 
-/// D-HBM solver.
+/// D-HBM solver (per-machine partial-gradient buffers; machine phase
+/// runs on the [`crate::parallel`] pool).
 #[derive(Clone, Debug)]
 pub struct Hbm {
     pub alpha: f64,
@@ -20,7 +22,7 @@ pub struct Hbm {
     x: Vec<f64>,
     z: Vec<f64>,
     grad: Vec<f64>,
-    partial: Vec<f64>,
+    partials: Vec<Vec<f64>>,
 }
 
 impl Hbm {
@@ -33,7 +35,7 @@ impl Hbm {
             x: vec![0.0; sys.n],
             z: vec![0.0; sys.n],
             grad: vec![0.0; sys.n],
-            partial: vec![0.0; sys.n],
+            partials: vec![vec![0.0; sys.n]; sys.m()],
         }
     }
 
@@ -59,10 +61,21 @@ impl Solver for Hbm {
     }
 
     fn iterate(&mut self, sys: &PartitionedSystem) {
+        // machine phase: g_i into partials[i], one task per machine
+        let blocks = &sys.blocks;
+        let x = &self.x;
+        let locals = SliceCells::new(&mut self.locals);
+        let partials = SliceCells::new(&mut self.partials);
+        parallel::machine_phase(blocks.len(), |i| {
+            // SAFETY: task i is the phase's only accessor of index i
+            let local = unsafe { locals.index_mut(i) };
+            let out = unsafe { partials.index_mut(i) };
+            local.partial_grad(&blocks[i], x, out);
+        });
+        // master phase: fold in machine-index order, then heavy-ball step
         self.grad.fill(0.0);
-        for (local, blk) in self.locals.iter_mut().zip(&sys.blocks) {
-            local.partial_grad(blk, &self.x, &mut self.partial);
-            for (g, p) in self.grad.iter_mut().zip(&self.partial) {
+        for partial in &self.partials {
+            for (g, p) in self.grad.iter_mut().zip(partial) {
                 *g += p;
             }
         }

@@ -24,38 +24,29 @@ pub struct ApcLocal {
 
 impl ApcLocal {
     /// Initialize at a feasible point of `A_i x = b_i` (min-norm).
+    /// Scratch buffers are sized here, once — `step` never allocates.
     pub fn new(blk: &MachineBlock, gamma: f64) -> Result<Self> {
         let x = blk.initial_solution().context("apc local init")?;
-        Ok(ApcLocal { gamma, x, scratch_p: Vec::new(), scratch_n: vec![0.0; blk.n()] })
+        Ok(ApcLocal { gamma, x, scratch_p: vec![0.0; blk.p()], scratch_n: vec![0.0; blk.n()] })
     }
 
     /// One round: `x_i ← x_i + γ P_i (x̄ − x_i)`. Zero allocations.
     pub fn step(&mut self, blk: &MachineBlock, xbar: &[f64]) {
         let n = self.x.len();
+        debug_assert_eq!(self.scratch_p.len(), blk.p(), "apc local: scratch/block mismatch");
         // w = x̄ − x_i (reuse scratch_n as w, then as P w)
         for k in 0..n {
             self.scratch_n[k] = xbar[k] - self.x[k];
         }
-        // in-place projection: scratch_n ← P_i scratch_n
-        let p = blk.p();
-        self.scratch_p.resize(p, 0.0);
+        // t = (A_iA_iᵀ)⁻¹ A_i w via the cached factor
         blk.a.matvec_into(&self.scratch_n, &mut self.scratch_p);
         blk.gram_chol.solve_in_place(&mut self.scratch_p);
         // x_i += γ (w − A_iᵀ t); fold the subtraction into the update
         for k in 0..n {
             self.x[k] += self.gamma * self.scratch_n[k];
         }
-        // subtract γ A_iᵀ t without materializing A_iᵀ t:
-        for r in 0..p {
-            let t = self.scratch_p[r];
-            if t == 0.0 {
-                continue;
-            }
-            let row = blk.a.row(r);
-            for k in 0..n {
-                self.x[k] -= self.gamma * t * row[k];
-            }
-        }
+        // fused blocked kernel: x_i ← x_i − γ A_iᵀ t, no temporary
+        blk.a.tr_matvec_axpy_into(&self.scratch_p, -self.gamma, &mut self.x);
     }
 }
 

@@ -17,6 +17,14 @@
 //! distributed [`crate::coordinator`] workers, so "the distributed run
 //! computes exactly what the reference loop computes" is a structural
 //! fact checked by integration tests, not a hope.
+//!
+//! The single-process solvers execute the machine phase of every round
+//! through [`crate::parallel::machine_phase`] — one task per machine,
+//! fanned across the persistent pool — and fold the per-machine outputs
+//! on the caller in machine-index order, so the parallel execution is
+//! bit-identical to the serial loop (`tests/parallel_parity.rs` pins
+//! this; wrap a region in [`crate::parallel::serial_scope`] to force the
+//! serial path).
 
 pub mod admm;
 pub mod apc;

@@ -4,11 +4,13 @@
 
 use super::local::GradLocal;
 use super::Solver;
+use crate::parallel::{self, SliceCells};
 use crate::partition::PartitionedSystem;
 use crate::rates::{nag_optimal, SpectralInfo};
 use anyhow::Result;
 
-/// D-NAG solver.
+/// D-NAG solver (per-machine partial-gradient buffers; machine phase
+/// runs on the [`crate::parallel`] pool).
 #[derive(Clone, Debug)]
 pub struct Nag {
     pub alpha: f64,
@@ -17,7 +19,7 @@ pub struct Nag {
     x: Vec<f64>,
     y: Vec<f64>,
     grad: Vec<f64>,
-    partial: Vec<f64>,
+    partials: Vec<Vec<f64>>,
 }
 
 impl Nag {
@@ -30,7 +32,7 @@ impl Nag {
             x: vec![0.0; sys.n],
             y: vec![0.0; sys.n],
             grad: vec![0.0; sys.n],
-            partial: vec![0.0; sys.n],
+            partials: vec![vec![0.0; sys.n]; sys.m()],
         }
     }
 
@@ -56,10 +58,21 @@ impl Solver for Nag {
     }
 
     fn iterate(&mut self, sys: &PartitionedSystem) {
+        // machine phase: g_i into partials[i], one task per machine
+        let blocks = &sys.blocks;
+        let x = &self.x;
+        let locals = SliceCells::new(&mut self.locals);
+        let partials = SliceCells::new(&mut self.partials);
+        parallel::machine_phase(blocks.len(), |i| {
+            // SAFETY: task i is the phase's only accessor of index i
+            let local = unsafe { locals.index_mut(i) };
+            let out = unsafe { partials.index_mut(i) };
+            local.partial_grad(&blocks[i], x, out);
+        });
+        // master phase: fold in machine-index order, then the momentum step
         self.grad.fill(0.0);
-        for (local, blk) in self.locals.iter_mut().zip(&sys.blocks) {
-            local.partial_grad(blk, &self.x, &mut self.partial);
-            for (g, p) in self.grad.iter_mut().zip(&self.partial) {
+        for partial in &self.partials {
+            for (g, p) in self.grad.iter_mut().zip(partial) {
                 *g += p;
             }
         }

@@ -1,0 +1,112 @@
+//! Parallel/serial parity: the machine phase fanned across the
+//! [`apc::parallel`] pool must reproduce the forced-serial loop
+//! **bit-for-bit**, for every one of the seven single-process solvers.
+//!
+//! This is the load-bearing guarantee of the parallel adoption: per-task
+//! state is disjoint (each machine owns its block state and output
+//! buffer) and the cross-machine fold happens on the caller in
+//! machine-index order, so thread scheduling cannot leak into the
+//! trajectory. `assert_eq!` on `f64` slices — no tolerances.
+
+use apc::gen::problems::Problem;
+use apc::parallel;
+use apc::partition::PartitionedSystem;
+use apc::proptest::{forall, Gen, Outcome, Pair, UsizeRange};
+use apc::rates::SpectralInfo;
+use apc::solvers::{
+    admm::Admm, apc::Apc, cimmino::Cimmino, consensus::Consensus, dgd::Dgd, hbm::Hbm, nag::Nag,
+    suite, Solver,
+};
+
+const SEVEN: [&str; 7] = ["apc", "consensus", "dgd", "nag", "hbm", "cimmino", "admm"];
+
+/// Deterministic fixed-parameter construction (no spectral tuning needed
+/// for parity — the trajectory only has to be *identical*, not good).
+fn fixed_solver(name: &str, sys: &PartitionedSystem) -> Box<dyn Solver> {
+    match name {
+        "apc" => Box::new(Apc::with_params(sys, 1.1, 1.2).unwrap()),
+        "consensus" => Box::new(Consensus::new(sys).unwrap()),
+        "dgd" => Box::new(Dgd::with_params(sys, 1e-3)),
+        "nag" => Box::new(Nag::with_params(sys, 1e-3, 0.4)),
+        "hbm" => Box::new(Hbm::with_params(sys, 1e-3, 0.4)),
+        "cimmino" => Box::new(Cimmino::with_params(sys, 0.07)),
+        "admm" => Box::new(Admm::with_params(sys, 0.8).unwrap()),
+        other => panic!("unknown solver {other}"),
+    }
+}
+
+#[test]
+fn tuned_solvers_parallel_matches_serial_bit_for_bit() {
+    let p = Problem::standard_gaussian(48, 24, 6).build(123);
+    let sys = PartitionedSystem::split_even(&p.a, &p.b, 6).unwrap();
+    let s = SpectralInfo::compute(&sys).unwrap();
+    for name in SEVEN {
+        let mut par = suite::tuned_solver(name, &sys, &s).unwrap();
+        let mut ser = suite::tuned_solver(name, &sys, &s).unwrap();
+        assert_eq!(par.xbar(), ser.xbar(), "{name}: construction not deterministic");
+        for round in 0..30 {
+            par.iterate(&sys);
+            parallel::serial_scope(|| ser.iterate(&sys));
+            assert_eq!(
+                par.xbar(),
+                ser.xbar(),
+                "{name}: parallel trajectory diverged from serial at round {round}"
+            );
+        }
+    }
+}
+
+/// Generator over partition shapes: (n, m, seed).
+struct Shape;
+
+impl Gen for Shape {
+    type Value = ((usize, usize), usize);
+    fn generate(&self, rng: &mut apc::gen::rng::Pcg64) -> Self::Value {
+        Pair(Pair(UsizeRange(8, 28), UsizeRange(2, 5)), UsizeRange(0, 10_000)).generate(rng)
+    }
+}
+
+#[test]
+fn prop_parallel_machine_phase_is_bit_exact_across_shapes() {
+    forall("parallel-parity", 29, 12, &Shape, |&((n, m), seed)| {
+        let p = Problem::standard_gaussian(n, n, m).build(seed as u64);
+        let sys = match PartitionedSystem::split_even(&p.a, &p.b, m) {
+            Ok(sys) => sys,
+            Err(_) => return Outcome::Discard, // rank-deficient draw
+        };
+        for name in SEVEN {
+            let mut par = fixed_solver(name, &sys);
+            let mut ser = fixed_solver(name, &sys);
+            for round in 0..5 {
+                par.iterate(&sys);
+                parallel::serial_scope(|| ser.iterate(&sys));
+                if par.xbar() != ser.xbar() {
+                    return Outcome::Fail(format!(
+                        "{name} diverged at round {round} (n={n}, m={m}, seed={seed})"
+                    ));
+                }
+            }
+        }
+        Outcome::Pass
+    });
+}
+
+#[test]
+fn reset_after_parallel_run_reproduces_trajectory() {
+    // reset + rerun under the pool must land on the same bits: the pool
+    // holds no cross-round state
+    let p = Problem::standard_gaussian(30, 15, 5).build(7);
+    let sys = PartitionedSystem::split_even(&p.a, &p.b, 5).unwrap();
+    for name in SEVEN {
+        let mut solver = fixed_solver(name, &sys);
+        for _ in 0..10 {
+            solver.iterate(&sys);
+        }
+        let first = solver.xbar().to_vec();
+        solver.reset(&sys);
+        for _ in 0..10 {
+            solver.iterate(&sys);
+        }
+        assert_eq!(solver.xbar(), &first[..], "{name}: reset+rerun differs");
+    }
+}
