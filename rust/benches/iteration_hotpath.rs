@@ -12,13 +12,17 @@
 //!    serial ([`apc::parallel::serial_scope`]) and fanned out across the
 //!    [`apc::parallel`] pool — the speedup column is the whole point of
 //!    the parallel machine phase;
+//!  * one full synchronous round of each method on the *same* sparse
+//!    system (n = 4000, density 0.5%, m = 8) through dense machine
+//!    blocks vs CSR machine blocks — the sparse-backend speedup
+//!    (EXPERIMENTS.md §Perf "Sparse backend");
 //!  * the APC worker step through the PJRT Hlo artifact (cached device
 //!    buffers) vs native — the overhead of crossing the runtime boundary
 //!    (skipped without artifacts / the `pjrt` feature).
 //!
-//! Besides the human tables, the bench emits a machine-readable
-//! `BENCH_hotpath.json` at the repository root so the perf trajectory is
-//! tracked PR-over-PR (see EXPERIMENTS.md §Perf).
+//! Besides the human tables, the bench emits machine-readable
+//! `BENCH_hotpath.json` and `BENCH_sparse.json` at the repository root so
+//! the perf trajectory is tracked PR-over-PR (see EXPERIMENTS.md §Perf).
 //!
 //! ```bash
 //! cargo bench --bench iteration_hotpath
@@ -26,7 +30,7 @@
 
 use apc::bench::{bench, fmt_duration, BenchOptions, Stats, Table};
 use apc::config::Json;
-use apc::gen::problems::Problem;
+use apc::gen::problems::{Problem, SparseProblem};
 use apc::parallel;
 use apc::partition::PartitionedSystem;
 use apc::rates::SpectralInfo;
@@ -223,6 +227,89 @@ fn main() -> anyhow::Result<()> {
     std::fs::write(json_path, json.to_string_pretty() + "\n")?;
     println!("wrote {}", json_path);
 
+    // === sparse machine blocks: dense vs CSR backend, one parallel round ===
+    //
+    // The §5 workloads are sparse; at 0.5% density the dense path spends
+    // ~99% of its 2pn flops on stored zeros. Same matrix both times: the
+    // dense system densifies the generated CSR, the sparse system slices
+    // it with the nnz-balanced partitioner.
+    const SPARSE_N: usize = 4000;
+    const SPARSE_M: usize = 8;
+    const SPARSE_DENSITY: f64 = 0.005;
+    println!(
+        "=== one full synchronous round, dense vs sparse machine blocks \
+         (n={}, density={:.2}%, m={}) ===\n",
+        SPARSE_N,
+        SPARSE_DENSITY * 100.0,
+        SPARSE_M
+    );
+    let sp = SparseProblem::random_sparse(SPARSE_N, SPARSE_N, SPARSE_DENSITY, SPARSE_M).build(13);
+    let nnz = sp.a.nnz();
+    let sparse_sys = PartitionedSystem::split_csr_nnz_balanced(&sp.a, &sp.b, SPARSE_M)?;
+    let dense_sys = {
+        let dense_a = sp.a.to_dense();
+        PartitionedSystem::split_even(&dense_a, &sp.b, SPARSE_M)?
+    };
+    let sparse_opts = BenchOptions {
+        samples: 15,
+        warmup: std::time::Duration::from_millis(200),
+        budget: std::time::Duration::from_secs(6),
+        ..BenchOptions::default()
+    };
+    let mut table = Table::new(&["method", "dense/round", "sparse/round", "speedup"]);
+    let mut sparse_json = Vec::new();
+    let mut min_sparse_speedup = f64::INFINITY;
+    for name in SEVEN {
+        let mut solver_d = fixed_solver(name, &dense_sys)?;
+        let s_dense =
+            bench(&format!("{name} dense"), &sparse_opts, || solver_d.iterate(&dense_sys));
+        drop(solver_d);
+        let mut solver_s = fixed_solver(name, &sparse_sys)?;
+        let s_sparse =
+            bench(&format!("{name} sparse"), &sparse_opts, || solver_s.iterate(&sparse_sys));
+        let speedup = s_dense.median.as_secs_f64() / s_sparse.median.as_secs_f64();
+        min_sparse_speedup = min_sparse_speedup.min(speedup);
+        table.row(&[
+            name.to_string(),
+            fmt_duration(s_dense.median),
+            fmt_duration(s_sparse.median),
+            format!("{:.1}x", speedup),
+        ]);
+        sparse_json.push((
+            name,
+            jobj(vec![
+                ("dense_ns", Json::Num(s_dense.median.as_nanos() as f64)),
+                ("sparse_ns", Json::Num(s_sparse.median.as_nanos() as f64)),
+                ("speedup", Json::Num(speedup)),
+            ]),
+        ));
+    }
+    println!("{}", table.render());
+    println!(
+        "per-machine cost is O(nnz_i + p_i²) sparse vs O(p·n) dense (the p×p Gram\n\
+         solve is dense in both); nnz balance, not row balance, sets the barrier\n\
+         wall-clock. min speedup {:.1}x.\n",
+        min_sparse_speedup
+    );
+    let sparse_report = jobj(vec![
+        ("bench", Json::Str("iteration_hotpath/sparse".into())),
+        (
+            "config",
+            jobj(vec![
+                ("n", Json::Num(SPARSE_N as f64)),
+                ("m", Json::Num(SPARSE_M as f64)),
+                ("density", Json::Num(SPARSE_DENSITY)),
+                ("nnz", Json::Num(nnz as f64)),
+                ("threads", Json::Num(parallel::global().threads() as f64)),
+            ]),
+        ),
+        ("rounds", jobj(sparse_json)),
+        ("min_speedup", Json::Num(min_sparse_speedup)),
+    ]);
+    let sparse_path = concat!(env!("CARGO_MANIFEST_DIR"), "/../BENCH_sparse.json");
+    std::fs::write(sparse_path, sparse_report.to_string_pretty() + "\n")?;
+    println!("wrote {}", sparse_path);
+
     // Hlo backend hot path (skipped gracefully without artifacts)
     match Manifest::load("artifacts") {
         Err(e) => println!("(skipping Hlo hot path: {e:#})"),
@@ -233,7 +320,8 @@ fn main() -> anyhow::Result<()> {
                 let entry = manifest.find_worker("apc_worker", p, n)?.clone();
                 engine.load(&entry)?;
                 let ginv = blk.gram_chol.inverse();
-                engine.cache_buffer("a", blk.a.as_slice(), &[p, n])?;
+                let a_dense = blk.a.dense()?;
+                engine.cache_buffer("a", a_dense.as_slice(), &[p, n])?;
                 engine.cache_buffer("ginv", ginv.as_slice(), &[p, p])?;
                 let x: Vec<f64> = blk.initial_solution()?;
                 let gamma = [1.2f64];
@@ -258,7 +346,7 @@ fn main() -> anyhow::Result<()> {
                         .execute(
                             &entry,
                             &[
-                                TensorArg::Host(blk.a.as_slice(), &[p, n]),
+                                TensorArg::Host(a_dense.as_slice(), &[p, n]),
                                 TensorArg::Host(ginv.as_slice(), &[p, p]),
                                 TensorArg::Host(&x, &[n]),
                                 TensorArg::Host(&xbar, &[n]),

@@ -73,10 +73,12 @@ fn run_inner(spec: WorkerSpec, rx: Receiver<ToWorker>, tx: Sender<FromWorker>) -
             let entry = artifact.context("hlo backend requires a resolved artifact")?;
             let mut engine = Engine::cpu()?;
             engine.load(&entry)?;
-            // pin loop-invariant operands on device
+            // pin loop-invariant operands on device (HLO artifacts are
+            // dense-shaped, so the block must hold a dense buffer)
             let p = blk.p();
             let n = blk.n();
-            engine.cache_buffer("a", blk.a.as_slice(), &[p, n])?;
+            let a_dense = blk.a.dense().context("hlo backend requires dense machine blocks")?;
+            engine.cache_buffer("a", a_dense.as_slice(), &[p, n])?;
             let (x, scalar) = match method {
                 Method::Apc { .. } | Method::Consensus => {
                     let gamma = match method {

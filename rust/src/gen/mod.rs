@@ -5,5 +5,5 @@
 pub mod problems;
 pub mod rng;
 
-pub use problems::{BuiltProblem, Problem};
+pub use problems::{BuiltProblem, BuiltSparseProblem, Problem, SparseProblem};
 pub use rng::Pcg64;

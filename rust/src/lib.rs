@@ -23,9 +23,11 @@
 //!
 //! * substrates: [`linalg`] (incl. the blocked hot-path kernels in
 //!   [`linalg::kernels`]), [`parallel`] (the machine-phase thread pool),
-//!   [`sparse`], [`mm`], [`gen`], [`bench`], [`proptest`], [`config`],
-//!   [`cli`]
-//! * the paper: [`partition`], [`solvers`], [`rates`]
+//!   [`sparse`] (CSR kernels backing sparse machine blocks), [`mm`],
+//!   [`gen`], [`bench`], [`proptest`], [`config`], [`cli`]
+//! * the paper: [`partition`] (dense/CSR blocks behind
+//!   [`partition::BlockOp`], nnz-balanced sparse splits), [`solvers`],
+//!   [`rates`]
 //! * the system: [`coordinator`] (L3), [`runtime`] (PJRT bridge to the
 //!   L2/L1 artifacts built by `python/compile/`)
 

@@ -12,7 +12,7 @@
 //! `symmetric`, and `skew-symmetric` symmetries.
 
 use crate::linalg::Mat;
-use crate::sparse::Coo;
+use crate::sparse::{Coo, Csr};
 use anyhow::{anyhow, bail, Context, Result};
 use std::io::{BufRead, BufReader, Read, Write};
 use std::path::Path;
@@ -90,6 +90,20 @@ impl MmMatrix {
     /// Real dense matrix; complex files map each entry to its real part.
     pub fn to_dense(&self) -> Mat {
         self.real.to_dense()
+    }
+
+    /// Consume into CSR (real part) — the sparse solver entry point:
+    /// `read_path(..)?.into_csr()` feeds
+    /// [`crate::partition::PartitionedSystem::split_csr_nnz_balanced`]
+    /// without ever materializing a dense matrix. Uses the in-place
+    /// [`Coo::into_csr`] conversion (no clone of the triplet list).
+    pub fn into_csr(self) -> Csr {
+        self.real.into_csr()
+    }
+
+    /// CSR of the real part, keeping the reader result (clones triplets).
+    pub fn to_csr(&self) -> Csr {
+        self.real.to_csr()
     }
 
     /// Modulus matrix `|a_ij|` for complex files; identical to `to_dense`
@@ -442,6 +456,18 @@ mod tests {
         write_dense(&mut buf, &a, "roundtrip test").unwrap();
         let m = read(BufReader::new(Cursor::new(buf))).unwrap();
         assert!(m.to_dense().sub(&a).max_abs() < 1e-16);
+    }
+
+    #[test]
+    fn reader_into_csr_sums_symmetric_duplicates() {
+        let s = "%%MatrixMarket matrix coordinate real symmetric\n\
+                 2 2 2\n\
+                 1 1 1.0\n\
+                 2 1 3.0\n";
+        let csr = read_str(s).unwrap().into_csr();
+        assert_eq!(csr.nnz(), 3); // (0,0), (1,0), (0,1) mirrored
+        assert_eq!(csr.to_dense()[(0, 1)], 3.0);
+        assert_eq!(csr.to_dense()[(1, 0)], 3.0);
     }
 
     #[test]

@@ -7,9 +7,144 @@
 //! rank). Paper §3.3: each machine pre-factors its Gram matrix
 //! `A_i A_iᵀ` once (`O(p³)` setup), after which a projection application
 //! costs two matvecs + one `p×p` solve.
+//!
+//! The per-machine operator is a [`BlockOp`]: either a dense [`Mat`] row
+//! block or a [`CsrBlock`] sliced from a sparse global matrix without
+//! densifying. Every solver local dispatches through it, so a sparse
+//! machine pays `O(nnz_i)` per matvec instead of `O(pn)` — the §5
+//! Matrix-Market workloads (ORSIRR 1, ASH608) are sparse, and on them
+//! the dense path wastes ~99% of its flops on stored zeros. Sparse
+//! systems should be split with [`PartitionedSystem::split_csr_nnz_balanced`]:
+//! the synchronous barrier in [`crate::parallel::machine_phase`] waits
+//! for the slowest machine, so per-machine *nnz* balance (not row-count
+//! balance) is what balances wall-clock.
 
-use crate::linalg::{sym_eigen, Cholesky, Mat, Qr};
+use crate::linalg::{sym_eigen, Cholesky, Mat};
+use crate::sparse::{Csr, CsrBlock};
 use anyhow::{bail, Context, Result};
+
+/// The per-machine operator `A_i`: a dense row block or a CSR row block.
+///
+/// All iteration hot-path kernels (`matvec_into`, `tr_matvec_into`, the
+/// fused `tr_matvec_axpy_into`) and the one-time Gram builds dispatch
+/// through this enum, so the solver locals in [`crate::solvers::local`]
+/// are backend-agnostic. The match per call is noise next to the
+/// `O(pn)` / `O(nnz_i)` kernel behind it.
+#[derive(Clone, Debug)]
+pub enum BlockOp {
+    Dense(Mat),
+    Sparse(CsrBlock),
+}
+
+impl BlockOp {
+    /// Rows (`p`).
+    pub fn rows(&self) -> usize {
+        match self {
+            BlockOp::Dense(a) => a.rows(),
+            BlockOp::Sparse(a) => a.rows,
+        }
+    }
+
+    /// Columns (`n`).
+    pub fn cols(&self) -> usize {
+        match self {
+            BlockOp::Dense(a) => a.cols(),
+            BlockOp::Sparse(a) => a.cols,
+        }
+    }
+
+    /// Stored entries (dense blocks store everything).
+    pub fn nnz(&self) -> usize {
+        match self {
+            BlockOp::Dense(a) => a.rows() * a.cols(),
+            BlockOp::Sparse(a) => a.nnz(),
+        }
+    }
+
+    pub fn is_sparse(&self) -> bool {
+        matches!(self, BlockOp::Sparse(_))
+    }
+
+    /// The dense buffer, for paths that need raw row-major storage (the
+    /// HLO backend's device uploads). Errors on sparse blocks rather
+    /// than silently densifying.
+    pub fn dense(&self) -> Result<&Mat> {
+        match self {
+            BlockOp::Dense(a) => Ok(a),
+            BlockOp::Sparse(_) => {
+                bail!("block is sparse; this path requires a dense operator")
+            }
+        }
+    }
+
+    /// Materialize as dense (analysis/tests; `O(pn)` memory).
+    pub fn to_dense(&self) -> Mat {
+        match self {
+            BlockOp::Dense(a) => a.clone(),
+            BlockOp::Sparse(a) => a.to_dense(),
+        }
+    }
+
+    /// `y = A x`, zero-alloc.
+    #[inline]
+    pub fn matvec_into(&self, x: &[f64], y: &mut [f64]) {
+        match self {
+            BlockOp::Dense(a) => a.matvec_into(x, y),
+            BlockOp::Sparse(a) => a.matvec_into(x, y),
+        }
+    }
+
+    /// `y = A x` (allocating convenience).
+    pub fn matvec(&self, x: &[f64]) -> Vec<f64> {
+        let mut y = vec![0.0; self.rows()];
+        self.matvec_into(x, &mut y);
+        y
+    }
+
+    /// `y = Aᵀ x`, zero-alloc.
+    #[inline]
+    pub fn tr_matvec_into(&self, x: &[f64], y: &mut [f64]) {
+        match self {
+            BlockOp::Dense(a) => a.tr_matvec_into(x, y),
+            BlockOp::Sparse(a) => a.tr_matvec_into(x, y),
+        }
+    }
+
+    /// `y = Aᵀ x` (allocating convenience).
+    pub fn tr_matvec(&self, x: &[f64]) -> Vec<f64> {
+        let mut y = vec![0.0; self.cols()];
+        self.tr_matvec_into(x, &mut y);
+        y
+    }
+
+    /// `y += α · Aᵀ x` — the fused tail of the APC worker step, zero-alloc
+    /// in both backends.
+    #[inline]
+    pub fn tr_matvec_axpy_into(&self, x: &[f64], alpha: f64, y: &mut [f64]) {
+        match self {
+            BlockOp::Dense(a) => a.tr_matvec_axpy_into(x, alpha, y),
+            BlockOp::Sparse(a) => a.tr_matvec_axpy_into(x, alpha, y),
+        }
+    }
+
+    /// Row Gram `A Aᵀ` as a dense `p×p` matrix — the factorization input.
+    /// Dense blocks run the blocked SYRK; sparse blocks use sorted sparse
+    /// row dot-products.
+    pub fn gram_rows(&self) -> Mat {
+        match self {
+            BlockOp::Dense(a) => a.gram_rows(),
+            BlockOp::Sparse(a) => a.gram_rows(),
+        }
+    }
+
+    /// Column Gram `AᵀA` as a dense `n×n` matrix (analysis paths).
+    pub fn gram_cols(&self) -> Mat {
+        match self {
+            BlockOp::Dense(a) => a.gram_cols(),
+            BlockOp::Sparse(a) => a.gram_cols(),
+        }
+    }
+}
 
 /// One machine's share of the system plus its cached factorizations.
 #[derive(Clone, Debug)]
@@ -19,8 +154,8 @@ pub struct MachineBlock {
     /// Global row range `[row0, row1)` this block came from.
     pub row0: usize,
     pub row1: usize,
-    /// `A_i ∈ R^{p×n}`.
-    pub a: Mat,
+    /// `A_i ∈ R^{p×n}` — dense or CSR.
+    pub a: BlockOp,
     /// `b_i ∈ R^p`.
     pub b: Vec<f64>,
     /// Cholesky of the row Gram `A_i A_iᵀ` (the `O(p³)` one-time cost).
@@ -28,11 +163,17 @@ pub struct MachineBlock {
 }
 
 impl MachineBlock {
-    /// Build a block, factoring its Gram matrix. Fails if the block is
-    /// row-rank deficient (the paper assumes full-row-rank blocks; a
-    /// deficient block means the partition put dependent equations
-    /// together — callers can re-partition or perturb).
+    /// Build a dense block, factoring its Gram matrix.
     pub fn new(index: usize, row0: usize, a: Mat, b: Vec<f64>) -> Result<Self> {
+        Self::from_op(index, row0, BlockOp::Dense(a), b)
+    }
+
+    /// Build a block from either backend, factoring its Gram matrix.
+    /// Fails if the block is row-rank deficient (the paper assumes
+    /// full-row-rank blocks; a deficient block means the partition put
+    /// dependent equations together — callers can re-partition or
+    /// perturb).
+    pub fn from_op(index: usize, row0: usize, a: BlockOp, b: Vec<f64>) -> Result<Self> {
         if a.rows() == 0 {
             bail!("machine {}: empty row block", index);
         }
@@ -63,19 +204,28 @@ impl MachineBlock {
     }
 
     /// Feasible initial point: the minimum-norm solution of `A_i x = b_i`
-    /// (Algorithm 1's initialization; any feasible point works, min-norm
-    /// is deterministic and cheap given the QR machinery).
+    /// (Algorithm 1's initialization), computed as `A_i⁺ b_i =
+    /// A_iᵀ(A_iA_iᵀ)⁻¹ b_i` through the cached Gram factor — the same
+    /// machinery every later projection uses, and backend-agnostic.
+    ///
+    /// Accuracy note: the Gram solve carries `κ(A_i)²` amplification
+    /// where a QR min-norm solve would carry `κ(A_i)` — but every
+    /// projection of every subsequent round goes through this same
+    /// cached factor, so the initialization is exactly as accurate as
+    /// one projection application; a more accurate start would not
+    /// survive the first round. Blocks ill-conditioned enough to matter
+    /// here are ill-conditioned for the whole method.
     pub fn initial_solution(&self) -> Result<Vec<f64>> {
-        Qr::min_norm_solve(&self.a, &self.b)
+        Ok(self.pinv_apply(&self.b))
     }
 
     /// Apply the nullspace projection `P_i v = v − A_iᵀ (A_iA_iᵀ)⁻¹ A_i v`
-    /// using the cached factor — `O(pn)` per call, no `n×n` matrix ever
-    /// formed. Scratch buffers are caller-provided so the hot loop is
-    /// allocation-free.
-    pub fn project_into(&self, v: &[f64], scratch_p: &mut Vec<f64>, out: &mut [f64]) {
-        let p = self.p();
-        scratch_p.resize(p, 0.0);
+    /// using the cached factor — `O(pn)` (dense) / `O(nnz_i + p²)`
+    /// (sparse) per call, no `n×n` matrix ever formed. Scratch is a
+    /// caller-provided `p`-sized slice so the hot loop is allocation-free
+    /// (no per-call `resize`).
+    pub fn project_into(&self, v: &[f64], scratch_p: &mut [f64], out: &mut [f64]) {
+        debug_assert_eq!(scratch_p.len(), self.p(), "project_into: scratch must be p-sized");
         // t = A_i v
         self.a.matvec_into(v, scratch_p);
         // t ← (A_iA_iᵀ)⁻¹ t
@@ -91,7 +241,7 @@ impl MachineBlock {
     pub fn projector(&self) -> Mat {
         let n = self.n();
         let mut p_mat = Mat::eye(n);
-        let mut scratch = Vec::new();
+        let mut scratch = vec![0.0; self.p()];
         let mut col = vec![0.0; n];
         let mut e = vec![0.0; n];
         for j in 0..n {
@@ -115,15 +265,76 @@ impl MachineBlock {
 
     /// `(A_i A_iᵀ)^{-1/2} A_i` and the matching rhs transform — the §6
     /// distributed preconditioning. `O(p³ + p²n)` one-time cost, done
-    /// locally by each machine.
+    /// locally by each machine. The transformed block is dense in either
+    /// backend: the left-multiplication fills in the sparsity.
     pub fn preconditioned(&self) -> Result<(Mat, Vec<f64>)> {
         let gram = self.a.gram_rows();
         let eig = sym_eigen(&gram).context("preconditioning: gram eigensolve")?;
         let inv_sqrt = eig.inv_sqrt().context("preconditioning: gram not SPD")?;
-        let c = inv_sqrt.matmul(&self.a);
+        let c = inv_sqrt.matmul(&self.a.to_dense());
         let d = inv_sqrt.matvec(&self.b);
         Ok((c, d))
     }
+}
+
+/// Interior cut points for an nnz-balanced contiguous row partition of a
+/// sparse matrix into `m` blocks: strictly increasing `c_1 < … < c_{m−1}`
+/// in `(0, N)` such that the per-block nnz are as even as a contiguous
+/// greedy can make them, subject to every block having `1 ≤ p ≤ n` rows.
+///
+/// Why nnz and not rows: the machine phase barriers on the slowest
+/// machine, and a sparse machine's round cost is `O(nnz_i + p_i²)` — a
+/// row-balanced split of a matrix with skewed row densities leaves one
+/// straggler holding most of the nonzeros while the rest idle at the
+/// barrier.
+pub fn nnz_balanced_bounds(a: &Csr, m: usize) -> Result<Vec<usize>> {
+    if m == 0 {
+        bail!("partition: need at least one machine");
+    }
+    if a.rows < m {
+        bail!("partition: more machines ({}) than equations ({})", m, a.rows);
+    }
+    if a.rows > m * a.cols {
+        bail!(
+            "partition: {} rows cannot fit {} machines with p ≤ {}",
+            a.rows,
+            m,
+            a.cols
+        );
+    }
+    let n = a.cols;
+    let row_nnz = |r: usize| a.row_ptr[r + 1] - a.row_ptr[r];
+    let mut cuts = Vec::with_capacity(m - 1);
+    let mut row = 0usize;
+    for i in 0..m.saturating_sub(1) {
+        let machines_left = m - i; // including this one
+        let rows_left = a.rows - row;
+        // leave ≥ 1 row for each later machine; respect p ≤ n
+        let max_take = (rows_left - (machines_left - 1)).min(n);
+        // …and don't take so few that later machines (capped at n rows
+        // each) can't absorb the remainder
+        let min_take = rows_left.saturating_sub((machines_left - 1) * n).max(1);
+        // even share of the *remaining* nnz, so early over/undershoot
+        // doesn't compound down the row range
+        let target = (a.nnz() - a.row_ptr[row]) / machines_left;
+        let mut take = 1usize;
+        let mut acc = row_nnz(row);
+        while take < max_take {
+            let next = row_nnz(row + take);
+            // stop when adding the next row would overshoot the target by
+            // more than stopping here undershoots it
+            if acc + next > target && (acc + next - target) > target.saturating_sub(acc) {
+                break;
+            }
+            acc += next;
+            take += 1;
+        }
+        let take = take.max(min_take);
+        debug_assert!(take <= max_take, "nnz balance: feasibility bounds crossed");
+        row += take;
+        cuts.push(row);
+    }
+    Ok(cuts)
 }
 
 /// The partitioned system: all machine blocks plus global metadata.
@@ -166,15 +377,7 @@ impl PartitionedSystem {
     /// increasing in `(0, N)`.
     pub fn split_at(a: &Mat, b: &[f64], bounds: &[usize]) -> Result<Self> {
         assert_eq!(a.rows(), b.len(), "partition: rhs length mismatch");
-        let mut cuts = Vec::with_capacity(bounds.len() + 2);
-        cuts.push(0);
-        for &c in bounds {
-            if c == 0 || c >= a.rows() || Some(&c) <= cuts.last() {
-                bail!("partition: bad cut point {}", c);
-            }
-            cuts.push(c);
-        }
-        cuts.push(a.rows());
+        let cuts = validated_cuts(a.rows(), bounds)?;
         let mut blocks = Vec::with_capacity(cuts.len() - 1);
         for i in 0..cuts.len() - 1 {
             let (r0, r1) = (cuts[i], cuts[i + 1]);
@@ -183,9 +386,64 @@ impl PartitionedSystem {
         Ok(PartitionedSystem { blocks, n: a.cols(), n_rows: a.rows() })
     }
 
+    /// Even split of a sparse system into `m` CSR blocks — rows are
+    /// sliced, never densified (each machine holds `O(nnz_i)`, not
+    /// `O(pn)`). Row-count balanced; prefer
+    /// [`split_csr_nnz_balanced`](PartitionedSystem::split_csr_nnz_balanced)
+    /// when row densities are skewed.
+    pub fn split_csr(a: &Csr, b: &[f64], m: usize) -> Result<Self> {
+        if m == 0 {
+            bail!("partition: need at least one machine");
+        }
+        if a.rows < m {
+            bail!("partition: more machines ({}) than equations ({})", m, a.rows);
+        }
+        let base = a.rows / m;
+        let extra = a.rows % m;
+        let mut bounds = Vec::with_capacity(m.saturating_sub(1));
+        let mut row = 0usize;
+        for i in 0..m - 1 {
+            row += base + usize::from(i < extra);
+            bounds.push(row);
+        }
+        Self::split_csr_at(a, b, &bounds)
+    }
+
+    /// Sparse split at explicit row boundaries (CSR analogue of
+    /// [`split_at`](PartitionedSystem::split_at)).
+    pub fn split_csr_at(a: &Csr, b: &[f64], bounds: &[usize]) -> Result<Self> {
+        assert_eq!(a.rows, b.len(), "partition: rhs length mismatch");
+        let cuts = validated_cuts(a.rows, bounds)?;
+        let mut blocks = Vec::with_capacity(cuts.len() - 1);
+        for i in 0..cuts.len() - 1 {
+            let (r0, r1) = (cuts[i], cuts[i + 1]);
+            blocks.push(MachineBlock::from_op(
+                i,
+                r0,
+                BlockOp::Sparse(a.slice_rows(r0, r1)),
+                b[r0..r1].to_vec(),
+            )?);
+        }
+        Ok(PartitionedSystem { blocks, n: a.cols, n_rows: a.rows })
+    }
+
+    /// Sparse split with per-machine **nnz** balance (see
+    /// [`nnz_balanced_bounds`]) — the right default for real sparse
+    /// workloads, where the synchronous barrier makes the heaviest
+    /// machine's nnz the round's wall-clock.
+    pub fn split_csr_nnz_balanced(a: &Csr, b: &[f64], m: usize) -> Result<Self> {
+        let bounds = nnz_balanced_bounds(a, m)?;
+        Self::split_csr_at(a, b, &bounds)
+    }
+
     /// Machine count.
     pub fn m(&self) -> usize {
         self.blocks.len()
+    }
+
+    /// Largest block row count — the scratch size that serves every block.
+    pub fn max_p(&self) -> usize {
+        self.blocks.iter().map(|b| b.p()).max().unwrap_or(0)
     }
 
     /// The matrix `X = (1/m) Σ A_iᵀ(A_iA_iᵀ)⁻¹A_i` whose spectrum drives
@@ -194,7 +452,7 @@ impl PartitionedSystem {
     pub fn x_matrix(&self) -> Mat {
         let n = self.n;
         let mut x = Mat::zeros(n, n);
-        let mut scratch = Vec::new();
+        let mut scratch = vec![0.0; self.max_p()];
         let mut proj = vec![0.0; n];
         let mut e = vec![0.0; n];
         for j in 0..n {
@@ -202,7 +460,7 @@ impl PartitionedSystem {
             e[j] = 1.0;
             // column j of X = (1/m) Σ (I − P_i) e_j
             for blk in &self.blocks {
-                blk.project_into(&e, &mut scratch, &mut proj);
+                blk.project_into(&e, &mut scratch[..blk.p()], &mut proj);
                 for i in 0..n {
                     x[(i, j)] += (e[i] - proj[i]) / self.m() as f64;
                 }
@@ -233,9 +491,9 @@ impl PartitionedSystem {
         }
     }
 
-    /// Reassemble the full `A` (tests/analysis).
+    /// Reassemble the full `A` as dense (tests/analysis).
     pub fn assemble_a(&self) -> Mat {
-        Mat::vstack(&self.blocks.iter().map(|b| b.a.clone()).collect::<Vec<_>>())
+        Mat::vstack(&self.blocks.iter().map(|b| b.a.to_dense()).collect::<Vec<_>>())
     }
 
     /// Reassemble the full `b`.
@@ -248,7 +506,8 @@ impl PartitionedSystem {
     }
 
     /// The §6-preconditioned system `Cx = d` as a new partitioned system
-    /// over the same machine layout.
+    /// over the same machine layout (dense blocks — the preconditioner
+    /// fills in any sparsity).
     pub fn preconditioned(&self) -> Result<PartitionedSystem> {
         let mut blocks = Vec::with_capacity(self.m());
         for blk in &self.blocks {
@@ -259,11 +518,27 @@ impl PartitionedSystem {
     }
 }
 
+/// Validate interior cut points and return the full cut list
+/// `[0, c_1, …, c_{k}, rows]`.
+fn validated_cuts(rows: usize, bounds: &[usize]) -> Result<Vec<usize>> {
+    let mut cuts = Vec::with_capacity(bounds.len() + 2);
+    cuts.push(0);
+    for &c in bounds {
+        if c == 0 || c >= rows || Some(&c) <= cuts.last() {
+            bail!("partition: bad cut point {}", c);
+        }
+        cuts.push(c);
+    }
+    cuts.push(rows);
+    Ok(cuts)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::gen::problems::Problem;
+    use crate::gen::problems::{Problem, SparseProblem};
     use crate::linalg::vector::{max_abs_diff, nrm2};
+    use crate::sparse::Coo;
 
     fn small_system() -> (Mat, Vec<f64>) {
         let p = Problem::standard_gaussian(24, 12, 4).build(17);
@@ -323,7 +598,7 @@ mod tests {
             // P² = P
             assert!(p.matmul(&p).sub(&p).max_abs() < 1e-10, "P_i not idempotent");
             // A_i P = 0
-            assert!(blk.a.matmul(&p).max_abs() < 1e-10, "A_i P_i ≠ 0");
+            assert!(blk.a.to_dense().matmul(&p).max_abs() < 1e-10, "A_i P_i ≠ 0");
             // symmetric
             assert!(p.is_symmetric(1e-10));
         }
@@ -336,19 +611,24 @@ mod tests {
         let blk = &sys.blocks[1];
         let v: Vec<f64> = (0..12).map(|i| (i as f64 * 0.37).sin()).collect();
         let dense = blk.projector().matvec(&v);
-        let mut scratch = Vec::new();
+        let mut scratch = vec![0.0; blk.p()];
         let mut fast = vec![0.0; 12];
         blk.project_into(&v, &mut scratch, &mut fast);
         assert!(max_abs_diff(&dense, &fast) < 1e-11);
     }
 
     #[test]
-    fn initial_solution_is_feasible() {
+    fn initial_solution_is_feasible_and_min_norm() {
         let (a, b) = small_system();
         let sys = PartitionedSystem::split_even(&a, &b, 4).unwrap();
         for blk in &sys.blocks {
             let x0 = blk.initial_solution().unwrap();
             assert!(max_abs_diff(&blk.a.matvec(&x0), &blk.b) < 1e-10);
+            // min-norm: x0 ∈ rowspace(A_i), i.e. P_i x0 = 0
+            let mut scratch = vec![0.0; blk.p()];
+            let mut px = vec![0.0; blk.n()];
+            blk.project_into(&x0, &mut scratch, &mut px);
+            assert!(nrm2(&px) < 1e-9 * nrm2(&x0).max(1.0), "x0 not min-norm");
         }
     }
 
@@ -410,5 +690,118 @@ mod tests {
             let diff: Vec<f64> = r.iter().zip(&blk.b).map(|(u, v)| u - v).collect();
             assert!(nrm2(&diff) < 1e-9);
         }
+    }
+
+    // --- sparse splits ----------------------------------------------------
+
+    #[test]
+    fn split_csr_covers_and_matches_dense_split() {
+        let built = SparseProblem::random_sparse(24, 16, 0.3, 4).build(5);
+        let dense = built.a.to_dense();
+        let ssys = PartitionedSystem::split_csr(&built.a, &built.b, 4).unwrap();
+        assert_eq!(ssys.m(), 4);
+        assert!(ssys.blocks.iter().all(|b| b.a.is_sparse()));
+        assert_eq!(ssys.blocks.iter().map(|b| b.p()).sum::<usize>(), 24);
+        assert_eq!(ssys.assemble_a(), dense);
+        assert_eq!(ssys.assemble_b(), built.b);
+        // same row ranges as the dense even split
+        let dsys = PartitionedSystem::split_even(&dense, &built.b, 4).unwrap();
+        for (s, d) in ssys.blocks.iter().zip(&dsys.blocks) {
+            assert_eq!((s.row0, s.row1), (d.row0, d.row1));
+        }
+    }
+
+    #[test]
+    fn sparse_projection_matches_dense_projection() {
+        let built = SparseProblem::banded(20, 20, 2, 4).build(9);
+        let dense = built.a.to_dense();
+        let ssys = PartitionedSystem::split_csr(&built.a, &built.b, 4).unwrap();
+        let dsys = PartitionedSystem::split_even(&dense, &built.b, 4).unwrap();
+        let v: Vec<f64> = (0..20).map(|i| (i as f64 * 0.41).cos()).collect();
+        for (sb, db) in ssys.blocks.iter().zip(&dsys.blocks) {
+            let mut scratch = vec![0.0; sb.p()];
+            let mut sp = vec![0.0; 20];
+            let mut dp = vec![0.0; 20];
+            sb.project_into(&v, &mut scratch, &mut sp);
+            db.project_into(&v, &mut scratch, &mut dp);
+            assert!(max_abs_diff(&sp, &dp) < 1e-12, "backends disagree on P_i v");
+        }
+    }
+
+    #[test]
+    fn nnz_balance_isolates_heavy_rows() {
+        // row 0 carries 10 nnz, the other 7 rows one each; m = 2 must cut
+        // right after the heavy row, where the even split would cut at 4.
+        let mut coo = Coo::new(8, 10);
+        for j in 0..10 {
+            coo.push(0, j, 1.0 + j as f64).unwrap();
+        }
+        for i in 1..8 {
+            coo.push(i, i, 2.0).unwrap();
+        }
+        let csr = coo.into_csr();
+        assert_eq!(nnz_balanced_bounds(&csr, 2).unwrap(), vec![1]);
+        // the balanced split is valid end-to-end
+        let b = vec![1.0; 8];
+        let sys = PartitionedSystem::split_csr_nnz_balanced(&csr, &b, 2).unwrap();
+        assert_eq!(sys.blocks[0].p(), 1);
+        assert_eq!(sys.blocks[1].p(), 7);
+    }
+
+    #[test]
+    fn nnz_balance_respects_row_cap() {
+        // 6 rows, 3 cols, nnz concentrated in the first two rows: pure
+        // nnz balance would give machine 0 only 2 rows, but then machine
+        // 1 would hold 4 > n = 3 rows — the feasibility floor must push
+        // the cut to 3.
+        let mut coo = Coo::new(6, 3);
+        for i in 0..2 {
+            for j in 0..3 {
+                coo.push(i, j, 1.0 + (i * 3 + j) as f64).unwrap();
+            }
+        }
+        for i in 2..6 {
+            // distinct columns per trailing block row keep every block
+            // full row rank
+            coo.push(i, i % 3, 2.0 + i as f64).unwrap();
+        }
+        let csr = coo.into_csr();
+        let cuts = nnz_balanced_bounds(&csr, 2).unwrap();
+        assert_eq!(cuts, vec![3]);
+        let b = vec![1.0; 6];
+        let sys = PartitionedSystem::split_csr_at(&csr, &b, &cuts).unwrap();
+        for blk in &sys.blocks {
+            assert!(blk.p() <= 3, "block exceeds p ≤ n cap");
+        }
+        assert_eq!(sys.blocks.iter().map(|b| b.p()).sum::<usize>(), 6);
+    }
+
+    #[test]
+    fn nnz_balance_rejects_infeasible() {
+        let mut coo = Coo::new(4, 4);
+        for i in 0..4 {
+            coo.push(i, i, 1.0).unwrap();
+        }
+        let csr = coo.into_csr();
+        assert!(nnz_balanced_bounds(&csr, 0).is_err());
+        assert!(nnz_balanced_bounds(&csr, 5).is_err()); // m > rows
+        let mut skinny = Coo::new(4, 1);
+        for i in 0..4 {
+            skinny.push(i, 0, 1.0).unwrap();
+        }
+        // 4 rows, 1 col, 2 machines: needs p ≤ 1 per block ⇒ 4 > 2·1
+        assert!(nnz_balanced_bounds(&skinny.into_csr(), 2).is_err());
+    }
+
+    #[test]
+    fn block_op_dense_accessor() {
+        let (a, b) = small_system();
+        let dsys = PartitionedSystem::split_even(&a, &b, 4).unwrap();
+        assert!(dsys.blocks[0].a.dense().is_ok());
+        assert!(!dsys.blocks[0].a.is_sparse());
+        let built = SparseProblem::banded(12, 12, 1, 3).build(3);
+        let ssys = PartitionedSystem::split_csr(&built.a, &built.b, 3).unwrap();
+        assert!(ssys.blocks[0].a.dense().is_err());
+        assert_eq!(ssys.blocks[0].a.nnz(), ssys.blocks[0].a.to_dense().as_slice().iter().filter(|v| **v != 0.0).count());
     }
 }

@@ -88,14 +88,14 @@ impl SpectralInfo {
     pub fn estimate(sys: &PartitionedSystem, iters: usize, safety: f64) -> Result<Self> {
         let n = sys.n;
         let m = sys.m() as f64;
-        let mut scratch = Vec::new();
+        let mut scratch = vec![0.0; sys.max_p()];
         let mut proj = vec![0.0; n];
 
         // X v, via the blocks' cached projections
         let mut apply_x = |v: &[f64], out: &mut [f64]| {
             out.fill(0.0);
             for blk in &sys.blocks {
-                blk.project_into(v, &mut scratch, &mut proj);
+                blk.project_into(v, &mut scratch[..blk.p()], &mut proj);
                 for k in 0..n {
                     out[k] += (v[k] - proj[k]) / m;
                 }
@@ -112,14 +112,16 @@ impl SpectralInfo {
         let (one_minus_mu_min, _) = power_iteration(n, &mut apply_ix, 1e-10, iters);
         drop(apply_ix);
 
-        // AᵀA via partial-gradient style accumulation
+        // AᵀA via partial-gradient style accumulation (scratch reused
+        // across power-iteration rounds — no per-application allocation)
         let mut buf_n = vec![0.0; n];
+        let mut buf_p = vec![0.0; sys.max_p()];
         let mut apply_ata = |v: &[f64], out: &mut [f64]| {
             out.fill(0.0);
             for blk in &sys.blocks {
-                let mut t = vec![0.0; blk.p()];
-                blk.a.matvec_into(v, &mut t);
-                blk.a.tr_matvec_into(&t, &mut buf_n);
+                let t = &mut buf_p[..blk.p()];
+                blk.a.matvec_into(v, t);
+                blk.a.tr_matvec_into(t, &mut buf_n);
                 for k in 0..n {
                     out[k] += buf_n[k];
                 }

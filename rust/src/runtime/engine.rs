@@ -253,7 +253,7 @@ mod tests {
             .execute(
                 &entry,
                 &[
-                    TensorArg::Host(blk.a.as_slice(), &[25, 200]),
+                    TensorArg::Host(blk.a.dense().unwrap().as_slice(), &[25, 200]),
                     TensorArg::Host(ginv.as_slice(), &[25, 25]),
                     TensorArg::Host(&x0, &[200]),
                     TensorArg::Host(&xbar, &[200]),
@@ -284,7 +284,7 @@ mod tests {
         let blk = &sys.blocks[0];
         let x: Vec<f64> = (0..200).map(|i| 0.01 * i as f64).collect();
 
-        engine.cache_buffer("a", blk.a.as_slice(), &[25, 200]).unwrap();
+        engine.cache_buffer("a", blk.a.dense().unwrap().as_slice(), &[25, 200]).unwrap();
         engine.cache_buffer("b", &blk.b, &[25]).unwrap();
         let out_cached = engine
             .execute(
@@ -296,7 +296,7 @@ mod tests {
             .execute(
                 &entry,
                 &[
-                    TensorArg::Host(blk.a.as_slice(), &[25, 200]),
+                    TensorArg::Host(blk.a.dense().unwrap().as_slice(), &[25, 200]),
                     TensorArg::Host(&blk.b, &[25]),
                     TensorArg::Host(&x, &[200]),
                 ],

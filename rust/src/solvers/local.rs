@@ -5,6 +5,12 @@
 //! workers run one of them per thread; and the PJRT runtime executes the
 //! HLO-compiled equivalents authored in `python/compile/model.py`
 //! (integration tests pin the two against each other).
+//!
+//! Every kernel reaches `A_i` through [`crate::partition::BlockOp`], so
+//! the same code runs dense (`O(pn)` blocked kernels) and sparse
+//! (`O(nnz_i)` CSR kernels) — backend parity is pinned by
+//! `tests/sparse_parity.rs`. All steps stay allocation-free in both
+//! backends, including the γ-fused APC tail `x_i ← x_i − γ A_iᵀ t`.
 
 use crate::linalg::Cholesky;
 use crate::partition::MachineBlock;

@@ -31,9 +31,17 @@ impl Coo {
         Ok(())
     }
 
-    /// Convert to CSR, summing duplicates.
+    /// Convert to CSR, summing duplicates. Clones the entry list; prefer
+    /// [`into_csr`](Coo::into_csr) when the COO is no longer needed (the
+    /// `mm` reader path), which sorts in place instead.
     pub fn to_csr(&self) -> Csr {
-        let mut entries = self.entries.clone();
+        self.clone().into_csr()
+    }
+
+    /// Consume into CSR, summing duplicates — no clone, no re-sort of a
+    /// copy: the entry buffer itself is sorted and compacted.
+    pub fn into_csr(self) -> Csr {
+        let Coo { rows, cols, mut entries } = self;
         entries.sort_by_key(|&(i, j, _)| (i, j));
         // merge duplicates
         let mut merged: Vec<(usize, usize, f64)> = Vec::with_capacity(entries.len());
@@ -43,16 +51,16 @@ impl Coo {
                 _ => merged.push((i, j, v)),
             }
         }
-        let mut row_ptr = vec![0usize; self.rows + 1];
+        let mut row_ptr = vec![0usize; rows + 1];
         for &(i, _, _) in &merged {
             row_ptr[i + 1] += 1;
         }
-        for i in 0..self.rows {
+        for i in 0..rows {
             row_ptr[i + 1] += row_ptr[i];
         }
         let col_idx = merged.iter().map(|&(_, j, _)| j).collect();
         let values = merged.iter().map(|&(_, _, v)| v).collect();
-        Csr { rows: self.rows, cols: self.cols, row_ptr, col_idx, values }
+        Csr { rows, cols, row_ptr, col_idx, values }
     }
 
     /// Dense conversion (small matrices / tests).
@@ -116,6 +124,122 @@ impl Csr {
         }
     }
 
+    /// `y += α · Aᵀ x` — fused accumulation, zero-alloc. With `α = −γ`
+    /// this is the entire tail of the APC worker step
+    /// `x_i ← x_i − γ A_iᵀ t`, mirroring the dense
+    /// [`kernels::tr_matvec_axpy`](crate::linalg::kernels::tr_matvec_axpy).
+    pub fn tr_matvec_axpy_into(&self, x: &[f64], alpha: f64, y: &mut [f64]) {
+        assert_eq!(x.len(), self.rows, "csr tr_matvec_axpy: dimension mismatch");
+        assert_eq!(y.len(), self.cols, "csr tr_matvec_axpy: output mismatch");
+        for i in 0..self.rows {
+            let xi = alpha * x[i];
+            if xi == 0.0 {
+                continue;
+            }
+            for k in self.row_ptr[i]..self.row_ptr[i + 1] {
+                y[self.col_idx[k]] += self.values[k] * xi;
+            }
+        }
+    }
+
+    /// Row Gram `G = A Aᵀ` as a *dense* `rows × rows` matrix — the one-time
+    /// per-machine factorization input (`A_i A_iᵀ` feeds [`Cholesky`]
+    /// unchanged). Each entry is a sparse·sparse row dot-product over the
+    /// sorted column indices (two-pointer merge); pairs whose column
+    /// ranges don't overlap are skipped without touching their values, so
+    /// banded blocks build their Gram in `O(p · bandwidth)` pairs instead
+    /// of `O(p²)`. Only the upper triangle is computed, then mirrored —
+    /// same contract as the dense SYRK kernel.
+    ///
+    /// [`Cholesky`]: crate::linalg::Cholesky
+    pub fn gram_rows(&self) -> Mat {
+        let p = self.rows;
+        let mut g = Mat::zeros(p, p);
+        for i in 0..p {
+            let (si, ei) = (self.row_ptr[i], self.row_ptr[i + 1]);
+            if si == ei {
+                continue;
+            }
+            let (i_first, i_last) = (self.col_idx[si], self.col_idx[ei - 1]);
+            for j in i..p {
+                let (sj, ej) = (self.row_ptr[j], self.row_ptr[j + 1]);
+                if sj == ej || self.col_idx[sj] > i_last || self.col_idx[ej - 1] < i_first {
+                    continue; // disjoint column ranges: dot is exactly 0
+                }
+                let (mut a, mut b) = (si, sj);
+                let mut s = 0.0;
+                while a < ei && b < ej {
+                    match self.col_idx[a].cmp(&self.col_idx[b]) {
+                        std::cmp::Ordering::Less => a += 1,
+                        std::cmp::Ordering::Greater => b += 1,
+                        std::cmp::Ordering::Equal => {
+                            s += self.values[a] * self.values[b];
+                            a += 1;
+                            b += 1;
+                        }
+                    }
+                }
+                g[(i, j)] = s;
+            }
+        }
+        for i in 1..p {
+            for j in 0..i {
+                g[(i, j)] = g[(j, i)];
+            }
+        }
+        g
+    }
+
+    /// Column Gram `AᵀA` as a dense `cols × cols` matrix (analysis paths:
+    /// the ADMM iteration-matrix tuning). `O(Σ_i nnz(row_i)²)`.
+    pub fn gram_cols(&self) -> Mat {
+        let n = self.cols;
+        let mut g = Mat::zeros(n, n);
+        for i in 0..self.rows {
+            for a in self.row_ptr[i]..self.row_ptr[i + 1] {
+                let (ja, va) = (self.col_idx[a], self.values[a]);
+                for b in a..self.row_ptr[i + 1] {
+                    g[(ja, self.col_idx[b])] += va * self.values[b];
+                }
+            }
+        }
+        for i in 1..n {
+            for j in 0..i {
+                g[(i, j)] = g[(j, i)];
+            }
+        }
+        g
+    }
+
+    /// Slice rows `[r0, r1)` into an owned CSR block *without densifying* —
+    /// how a machine takes its `A_i` from a sparse global matrix. Column
+    /// indices keep their global meaning (the block still maps `R^n`);
+    /// rows are re-indexed to `0..p`. `O(nnz_block)`.
+    pub fn slice_rows(&self, r0: usize, r1: usize) -> Csr {
+        assert!(r0 <= r1 && r1 <= self.rows, "slice_rows: bad range");
+        let base = self.row_ptr[r0];
+        let end = self.row_ptr[r1];
+        Csr {
+            rows: r1 - r0,
+            cols: self.cols,
+            row_ptr: self.row_ptr[r0..=r1].iter().map(|&k| k - base).collect(),
+            col_idx: self.col_idx[base..end].to_vec(),
+            values: self.values[base..end].to_vec(),
+        }
+    }
+
+    /// Back to triplets (sorted by `(row, col)`) — for writing through the
+    /// Matrix Market `coordinate` path.
+    pub fn to_coo(&self) -> Coo {
+        let mut entries = Vec::with_capacity(self.nnz());
+        for i in 0..self.rows {
+            for k in self.row_ptr[i]..self.row_ptr[i + 1] {
+                entries.push((i, self.col_idx[k], self.values[k]));
+            }
+        }
+        Coo { rows: self.rows, cols: self.cols, entries }
+    }
+
     /// Extract the dense row block `[r0, r1)` — how a worker materializes
     /// its `A_i` from a sparse global matrix.
     pub fn row_block_dense(&self, r0: usize, r1: usize) -> Mat {
@@ -148,6 +272,12 @@ impl Csr {
         coo.to_csr()
     }
 }
+
+/// A machine's row block in CSR form: a [`Csr`] whose rows have been
+/// re-indexed to `0..p` by [`Csr::slice_rows`] while the columns keep
+/// their global meaning. The alias names the role — it is what
+/// [`crate::partition::BlockOp::Sparse`] holds.
+pub type CsrBlock = Csr;
 
 /// Linear operator abstraction: solvers that only need `Ax` / `Aᵀx` work
 /// against this, so both dense blocks and sparse global matrices plug in.
@@ -256,5 +386,92 @@ mod tests {
         let csr = c.to_csr();
         let y = csr.matvec(&[1.0, 1.0]);
         assert_eq!(y, vec![0.0, 0.0, 0.0, 5.0]);
+    }
+
+    #[test]
+    fn into_csr_matches_to_csr() {
+        let mut c = Coo::new(3, 3);
+        c.push(2, 1, 1.0).unwrap();
+        c.push(0, 2, 2.0).unwrap();
+        c.push(2, 1, 0.5).unwrap(); // duplicate, summed
+        let a = c.to_csr();
+        let b = c.into_csr();
+        assert_eq!(a.row_ptr, b.row_ptr);
+        assert_eq!(a.col_idx, b.col_idx);
+        assert_eq!(a.values, b.values);
+        assert_eq!(b.to_dense()[(2, 1)], 1.5);
+    }
+
+    #[test]
+    fn tr_matvec_axpy_accumulates_scaled() {
+        let csr = sample().to_csr();
+        let dense = sample().to_dense();
+        let x = [1.0, -2.0, 0.5];
+        let y0 = [0.1, 0.2, 0.3, 0.4];
+        let alpha = -1.37;
+        let mut y = y0.to_vec();
+        csr.tr_matvec_axpy_into(&x, alpha, &mut y);
+        let t = dense.tr_matvec(&x);
+        let expect: Vec<f64> = y0.iter().zip(&t).map(|(y, t)| y + alpha * t).collect();
+        assert!(max_abs_diff(&y, &expect) < 1e-14);
+        // α = 0 must leave y bit-identical (mirrors the dense kernel)
+        let mut y = y0.to_vec();
+        csr.tr_matvec_axpy_into(&[0.0; 3], 1.0, &mut y);
+        assert_eq!(y, y0.to_vec());
+    }
+
+    #[test]
+    fn gram_rows_matches_dense() {
+        let csr = sample().to_csr();
+        let dense = sample().to_dense();
+        let g = csr.gram_rows();
+        let expect = dense.gram_rows();
+        assert!(g.sub(&expect).max_abs() < 1e-14);
+        // exact mirror, as the dense SYRK guarantees
+        for i in 0..3 {
+            for j in 0..3 {
+                assert_eq!(g[(i, j)], g[(j, i)]);
+            }
+        }
+    }
+
+    #[test]
+    fn gram_cols_matches_dense() {
+        let csr = sample().to_csr();
+        let dense = sample().to_dense();
+        assert!(csr.gram_cols().sub(&dense.gram_cols()).max_abs() < 1e-14);
+    }
+
+    #[test]
+    fn gram_handles_empty_rows() {
+        let mut c = Coo::new(3, 4);
+        c.push(1, 2, 2.0).unwrap();
+        let g = c.to_csr().gram_rows();
+        assert_eq!(g[(1, 1)], 4.0);
+        assert_eq!(g[(0, 0)], 0.0);
+        assert_eq!(g[(0, 1)], 0.0);
+    }
+
+    #[test]
+    fn slice_rows_matches_dense_block() {
+        let csr = sample().to_csr();
+        let dense = sample().to_dense();
+        let blk = csr.slice_rows(1, 3);
+        assert_eq!(blk.rows, 2);
+        assert_eq!(blk.cols, 4);
+        assert_eq!(blk.nnz(), 3);
+        assert_eq!(blk.to_dense(), dense.row_block(1, 3));
+        // degenerate slices
+        assert_eq!(csr.slice_rows(0, 0).nnz(), 0);
+        assert_eq!(csr.slice_rows(0, 3).to_dense(), dense);
+    }
+
+    #[test]
+    fn to_coo_roundtrips() {
+        let csr = sample().to_csr();
+        let back = csr.to_coo().into_csr();
+        assert_eq!(back.row_ptr, csr.row_ptr);
+        assert_eq!(back.col_idx, csr.col_idx);
+        assert_eq!(back.values, csr.values);
     }
 }

@@ -191,9 +191,10 @@ fn config_file_drives_a_run() {
     std::fs::remove_file(&path).ok();
 }
 
-/// Sparse CSR path: a genuinely sparse system through block extraction.
+/// Sparse CSR path: a genuinely sparse system solved through CSR machine
+/// blocks — no densification anywhere in the pipeline.
 #[test]
-fn sparse_system_block_extraction_and_solve() {
+fn sparse_system_csr_blocks_solve() {
     use apc::sparse::Coo;
     // tridiagonal system, strongly diagonally dominant
     let n = 40;
@@ -207,26 +208,13 @@ fn sparse_system_block_extraction_and_solve() {
             coo.push(i, i + 1, -1.0).unwrap();
         }
     }
-    let csr = coo.to_csr();
+    let csr = coo.into_csr();
     let mut rng = apc::gen::Pcg64::new(23);
     let x_star = rng.gaussian_vec(n);
     let b = csr.matvec(&x_star);
 
-    // workers materialize dense row blocks from the sparse global matrix
-    let m = 4;
-    let p = n / m;
-    let blocks: Vec<apc::partition::MachineBlock> = (0..m)
-        .map(|i| {
-            apc::partition::MachineBlock::new(
-                i,
-                i * p,
-                csr.row_block_dense(i * p, (i + 1) * p),
-                b[i * p..(i + 1) * p].to_vec(),
-            )
-            .unwrap()
-        })
-        .collect();
-    let sys = PartitionedSystem { blocks, n, n_rows: n };
+    let sys = PartitionedSystem::split_csr(&csr, &b, 4).unwrap();
+    assert!(sys.blocks.iter().all(|blk| blk.a.is_sparse()));
     let s = SpectralInfo::compute(&sys).unwrap();
     let mut solver = suite::tuned_solver("apc", &sys, &s).unwrap();
     let rep = solver
@@ -241,4 +229,42 @@ fn sparse_system_block_extraction_and_solve() {
         )
         .unwrap();
     assert!(rep.converged, "sparse-backed APC err {:.2e}", rep.final_error);
+}
+
+/// The sparse end-to-end pipeline the Matrix-Market workloads use:
+/// generate sparse → write `.mtx` (coordinate) → read back → `into_csr`
+/// → nnz-balanced split → tune → solve → verify against the planted
+/// solution. No step densifies the system matrix.
+#[test]
+fn sparse_mtx_nnz_balanced_pipeline() {
+    use apc::gen::problems::SparseProblem;
+    let dir = std::env::temp_dir().join("apc_integration");
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join("sparse_pipeline.mtx");
+
+    let built = SparseProblem::banded(64, 64, 3, 4).build(29);
+    apc::mm::write_coo_path(&path, &built.a.to_coo(), "sparse pipeline").unwrap();
+    let csr = apc::mm::read_path(&path).unwrap().into_csr();
+    assert_eq!(csr.nnz(), built.a.nnz(), "mtx roundtrip changed the sparsity");
+
+    let sys = PartitionedSystem::split_csr_nnz_balanced(&csr, &built.b, 4).unwrap();
+    assert!(sys.blocks.iter().all(|blk| blk.a.is_sparse()));
+    assert_eq!(sys.blocks.iter().map(|blk| blk.p()).sum::<usize>(), 64);
+    let s = SpectralInfo::compute(&sys).unwrap();
+    for name in ["apc", "cimmino"] {
+        let mut solver = suite::tuned_solver(name, &sys, &s).unwrap();
+        let rep = solver
+            .solve(
+                &sys,
+                &SolverOptions {
+                    tol: 1e-9,
+                    max_iter: 200_000,
+                    metric: Metric::ErrorVsTruth(built.x_star.clone()),
+                    ..Default::default()
+                },
+            )
+            .unwrap();
+        assert!(rep.converged, "{name} on sparse mtx pipeline: {:.2e}", rep.final_error);
+    }
+    std::fs::remove_file(&path).ok();
 }

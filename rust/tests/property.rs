@@ -119,7 +119,7 @@ fn prop_projection_idempotent_and_orthogonal() {
             Err(_) => return Outcome::Discard,
             Ok(blk) => blk,
         };
-        let mut scratch = Vec::new();
+        let mut scratch = vec![0.0; *p];
         let mut pv = vec![0.0; *n];
         let mut ppv = vec![0.0; *n];
         blk.project_into(v, &mut scratch, &mut pv);
@@ -192,6 +192,59 @@ fn prop_partition_roundtrip_any_machine_count() {
             Err(_) => Outcome::Discard, // m=1 gives overdetermined block
             Ok(sys) => Outcome::from(
                 sys.assemble_a() == built.a && sys.assemble_b() == built.b && sys.m() == *m,
+            ),
+        }
+    });
+}
+
+#[test]
+fn prop_nnz_balanced_partition_covers_rows_once() {
+    use apc::gen::problems::SparseProblem;
+    // (machines, cols, rows, density scaled by 100): rows drawn within
+    // the feasible band m ≤ rows ≤ m·cols.
+    struct SparseCase;
+    impl Gen for SparseCase {
+        type Value = (usize, usize, usize, u64);
+        fn generate(&self, rng: &mut Pcg64) -> Self::Value {
+            let m = UsizeRange(1, 6).generate(rng);
+            let cols = UsizeRange(3, 10).generate(rng);
+            let max_rows = (m * cols).min(30);
+            let rows = UsizeRange(m, max_rows.max(m)).generate(rng);
+            (m, cols, rows, rng.next_u64())
+        }
+    }
+    forall("nnz-balanced-partition", 21, 60, &SparseCase, |(m, cols, rows, seed)| {
+        let built = SparseProblem::random_sparse(*rows, *cols, 0.3, *m).build(*seed);
+        let cuts = match apc::partition::nnz_balanced_bounds(&built.a, *m) {
+            Err(e) => return Outcome::Fail(format!("feasible case rejected: {e:#}")),
+            Ok(c) => c,
+        };
+        // strictly increasing interior cuts partitioning [0, rows)
+        if cuts.len() + 1 != *m {
+            return Outcome::Fail(format!("{} cuts for m={m}", cuts.len()));
+        }
+        let mut edges = Vec::with_capacity(m + 1);
+        edges.push(0);
+        edges.extend_from_slice(&cuts);
+        edges.push(*rows);
+        for w in edges.windows(2) {
+            let p = w[1] as i64 - w[0] as i64;
+            if p < 1 {
+                return Outcome::Fail(format!("non-positive block at cut {w:?}"));
+            }
+            if p as usize > *cols {
+                return Outcome::Fail(format!("block of {p} rows exceeds p ≤ n = {cols}"));
+            }
+        }
+        // every row covered exactly once ⇔ edges partition [0, rows)
+        // (contiguity makes this equivalent to the window checks above
+        // plus the 0/rows endpoints, which are by construction)
+        // and the full split reassembles the matrix
+        match apc::partition::PartitionedSystem::split_csr_at(&built.a, &built.b, &cuts) {
+            Err(_) => Outcome::Discard, // rank-deficient random block
+            Ok(sys) => Outcome::from(
+                sys.blocks.iter().map(|b| b.p()).sum::<usize>() == *rows
+                    && sys.assemble_a() == built.a.to_dense(),
             ),
         }
     });

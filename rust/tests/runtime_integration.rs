@@ -48,7 +48,7 @@ fn every_worker_artifact_matches_native() {
             .execute(
                 &entry,
                 &[
-                    TensorArg::Host(blk.a.as_slice(), &[P, N]),
+                    TensorArg::Host(blk.a.dense().unwrap().as_slice(), &[P, N]),
                     TensorArg::Host(ginv.as_slice(), &[P, P]),
                     TensorArg::Host(&x0, &[N]),
                     TensorArg::Host(&xbar, &[N]),
@@ -67,7 +67,7 @@ fn every_worker_artifact_matches_native() {
             .execute(
                 &entry,
                 &[
-                    TensorArg::Host(blk.a.as_slice(), &[P, N]),
+                    TensorArg::Host(blk.a.dense().unwrap().as_slice(), &[P, N]),
                     TensorArg::Host(&blk.b, &[P]),
                     TensorArg::Host(&xbar, &[N]),
                 ],
@@ -85,7 +85,7 @@ fn every_worker_artifact_matches_native() {
             .execute(
                 &entry,
                 &[
-                    TensorArg::Host(blk.a.as_slice(), &[P, N]),
+                    TensorArg::Host(blk.a.dense().unwrap().as_slice(), &[P, N]),
                     TensorArg::Host(ginv.as_slice(), &[P, P]),
                     TensorArg::Host(&blk.b, &[P]),
                     TensorArg::Host(&xbar, &[N]),
@@ -111,7 +111,7 @@ fn every_worker_artifact_matches_native() {
             .execute(
                 &entry,
                 &[
-                    TensorArg::Host(blk.a.as_slice(), &[P, N]),
+                    TensorArg::Host(blk.a.dense().unwrap().as_slice(), &[P, N]),
                     TensorArg::Host(sginv.as_slice(), &[P, P]),
                     TensorArg::Host(&atb, &[N]),
                     TensorArg::Host(&xbar, &[N]),
@@ -164,7 +164,7 @@ fn fused_iteration_artifact_retraces_apc() {
     let mut ginv_stack = Vec::with_capacity(M * P * P);
     let mut xs = Vec::with_capacity(M * N);
     for (blk, local) in sys.blocks.iter().zip(reference.locals()) {
-        a_stack.extend_from_slice(blk.a.as_slice());
+        a_stack.extend_from_slice(blk.a.dense().unwrap().as_slice());
         ginv_stack.extend_from_slice(blk.gram_chol.inverse().as_slice());
         xs.extend_from_slice(&local.x);
     }
@@ -205,7 +205,7 @@ fn residual_artifact_matches_native() {
     let mut a_stack = Vec::new();
     let mut b_stack = Vec::new();
     for blk in &sys.blocks {
-        a_stack.extend_from_slice(blk.a.as_slice());
+        a_stack.extend_from_slice(blk.a.dense().unwrap().as_slice());
         b_stack.extend_from_slice(&blk.b);
     }
     // at a perturbed point

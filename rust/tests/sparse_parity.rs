@@ -1,0 +1,115 @@
+//! Dense-vs-sparse backend parity: the same partitioned system built
+//! through dense `Mat` row blocks and through CSR row blocks must
+//! produce the same trajectory for every solver.
+//!
+//! Exact bit equality is *not* expected — the dense blocked kernels and
+//! the CSR kernels sum in different orders — so the pin is
+//! `≤ 1e-12` max-abs divergence per round over a fixed horizon, with
+//! fixed non-expansive parameters so kernel-level rounding differences
+//! cannot be amplified by a divergent iteration.
+
+use apc::gen::problems::SparseProblem;
+use apc::linalg::vector::max_abs_diff;
+use apc::partition::PartitionedSystem;
+use apc::solvers::{
+    admm::Admm, apc::Apc, cimmino::Cimmino, consensus::Consensus, dgd::Dgd, hbm::Hbm, nag::Nag,
+    Solver,
+};
+
+const SEVEN: [&str; 7] = ["apc", "consensus", "dgd", "nag", "hbm", "cimmino", "admm"];
+const ROUNDS: usize = 25;
+const TOL: f64 = 1e-12;
+
+/// Fixed, stable parameters shared by both backends (spectral tuning
+/// would introduce its own backend-dependent rounding into the params).
+/// Deliberately NOT the tunings in `benches/iteration_hotpath.rs` or
+/// `tests/parallel_parity.rs`: parity needs non-expansive iterations so
+/// kernel rounding differences cannot grow, which is a different goal
+/// from representative per-round cost.
+fn fixed_solver(name: &str, sys: &PartitionedSystem) -> Box<dyn Solver> {
+    match name {
+        "apc" => Box::new(Apc::with_params(sys, 0.9, 1.1).unwrap()),
+        "consensus" => Box::new(Consensus::new(sys).unwrap()),
+        "dgd" => Box::new(Dgd::with_params(sys, 1e-3)),
+        "nag" => Box::new(Nag::with_params(sys, 1e-3, 0.5)),
+        "hbm" => Box::new(Hbm::with_params(sys, 1e-3, 0.5)),
+        "cimmino" => Box::new(Cimmino::with_params(sys, 0.05)),
+        "admm" => Box::new(Admm::with_params(sys, 1.0).unwrap()),
+        other => panic!("no fixed tuning for {other}"),
+    }
+}
+
+/// The same system twice: dense blocks from the densified matrix, CSR
+/// blocks sliced from the sparse original — identical row ranges.
+fn both_backends(seed: u64) -> (PartitionedSystem, PartitionedSystem) {
+    let m = 4;
+    let built = SparseProblem::random_sparse(48, 32, 0.2, m).build(seed);
+    let dense = built.a.to_dense();
+    let dsys = PartitionedSystem::split_even(&dense, &built.b, m).unwrap();
+    let ssys = PartitionedSystem::split_csr(&built.a, &built.b, m).unwrap();
+    assert!(ssys.blocks.iter().all(|b| b.a.is_sparse()));
+    assert!(dsys.blocks.iter().all(|b| !b.a.is_sparse()));
+    (dsys, ssys)
+}
+
+#[test]
+fn all_seven_solvers_trajectories_match() {
+    let (dsys, ssys) = both_backends(41);
+    for name in SEVEN {
+        let mut d = fixed_solver(name, &dsys);
+        let mut s = fixed_solver(name, &ssys);
+        for round in 0..=ROUNDS {
+            let diff = max_abs_diff(d.xbar(), s.xbar());
+            assert!(
+                diff <= TOL,
+                "{name}: backends diverged to {diff:.2e} at round {round}"
+            );
+            d.iterate(&dsys);
+            s.iterate(&ssys);
+        }
+    }
+}
+
+#[test]
+fn parity_survives_banded_structure() {
+    // Banded blocks exercise the sparse Gram's disjoint-column-range
+    // fast path; pin APC (projection) and HBM (gradient) over it.
+    let m = 4;
+    let built = SparseProblem::banded(40, 40, 2, m).build(43);
+    let dense = built.a.to_dense();
+    let dsys = PartitionedSystem::split_even(&dense, &built.b, m).unwrap();
+    let ssys = PartitionedSystem::split_csr(&built.a, &built.b, m).unwrap();
+    for name in ["apc", "hbm"] {
+        let mut d = fixed_solver(name, &dsys);
+        let mut s = fixed_solver(name, &ssys);
+        for round in 0..=ROUNDS {
+            let diff = max_abs_diff(d.xbar(), s.xbar());
+            assert!(diff <= TOL, "{name} banded: {diff:.2e} at round {round}");
+            d.iterate(&dsys);
+            s.iterate(&ssys);
+        }
+    }
+}
+
+#[test]
+fn sparse_backend_converges_with_spectral_tuning() {
+    // Not just parity: the sparse backend carries a full auto-tuned solve
+    // to the planted solution (SpectralInfo runs its power iterations
+    // through the CSR projections).
+    use apc::solvers::{Metric, SolverOptions};
+    let built = SparseProblem::random_sparse(60, 60, 0.15, 5).build(47);
+    let sys = PartitionedSystem::split_csr_nnz_balanced(&built.a, &built.b, 5).unwrap();
+    let mut solver = Apc::auto(&sys).unwrap();
+    let rep = solver
+        .solve(
+            &sys,
+            &SolverOptions {
+                tol: 1e-9,
+                max_iter: 200_000,
+                metric: Metric::ErrorVsTruth(built.x_star.clone()),
+                ..Default::default()
+            },
+        )
+        .unwrap();
+    assert!(rep.converged, "sparse auto-tuned APC err {:.2e}", rep.final_error);
+}
