@@ -27,8 +27,15 @@
 //! ```bash
 //! cargo bench --bench iteration_hotpath
 //! ```
+//!
+//! Set `APC_BENCH_SMOKE=1` to shrink every `n`/`m` and the sampling
+//! budget so the whole target finishes in seconds — this is what CI's
+//! `bench-smoke` job runs to prove the pipeline measures end-to-end. The
+//! smoke JSON carries a `do not commit` provenance marker (CI's
+//! provenance validator rejects it); only full-size runs belong in the
+//! committed `BENCH_*.json`.
 
-use apc::bench::{bench, fmt_duration, BenchOptions, Stats, Table};
+use apc::bench::{bench, fmt_duration, jobj, provenance, smoke_mode, BenchOptions, Stats, Table};
 use apc::config::Json;
 use apc::gen::problems::{Problem, SparseProblem};
 use apc::parallel;
@@ -41,16 +48,6 @@ use apc::solvers::{
     admm::Admm, apc::Apc, cimmino::Cimmino, consensus::Consensus, dgd::Dgd, hbm::Hbm, nag::Nag,
     Solver,
 };
-use std::collections::BTreeMap;
-
-/// Round-benchmark scale: the ISSUE/EXPERIMENTS reference configuration.
-const ROUND_N: usize = 2000;
-const ROUND_M: usize = 8;
-
-fn jobj(pairs: Vec<(&str, Json)>) -> Json {
-    Json::Obj(pairs.into_iter().map(|(k, v)| (k.to_string(), v)).collect::<BTreeMap<_, _>>())
-}
-
 /// Solver with *fixed* (not spectrally tuned) parameters: per-round cost
 /// is parameter-independent, and tuning would need an `O(n³)` eigensolve
 /// at `n = 2000`.
@@ -71,12 +68,28 @@ fn fixed_solver(name: &str, sys: &PartitionedSystem) -> anyhow::Result<Box<dyn S
 const SEVEN: [&str; 7] = ["apc", "consensus", "dgd", "nag", "hbm", "cimmino", "admm"];
 
 fn main() -> anyhow::Result<()> {
-    let (n, m) = (500, 10);
+    let smoke = smoke_mode();
+    if smoke {
+        println!("[APC_BENCH_SMOKE] reduced sizes + sampling; JSON is artifact-only\n");
+    }
+    // Round-benchmark scale: the ISSUE/EXPERIMENTS reference
+    // configuration, shrunk in smoke mode so CI runs the whole target.
+    let (round_n, round_m) = if smoke { (240, 4) } else { (2000, 8) };
+    let (n, m) = if smoke { (120, 4) } else { (500, 10) };
     let built = Problem::standard_gaussian(n, n, m).build(7);
     let sys = PartitionedSystem::split_even(&built.a, &built.b, m)?;
     let blk = &sys.blocks[0];
     let p = blk.p();
-    let opts = BenchOptions::default();
+    let opts = if smoke {
+        BenchOptions {
+            warmup: std::time::Duration::from_millis(30),
+            samples: 5,
+            budget: std::time::Duration::from_secs(1),
+            ..BenchOptions::default()
+        }
+    } else {
+        BenchOptions::default()
+    };
     let flops_per_kernel = 2.0 * p as f64 * n as f64;
 
     println!(
@@ -131,17 +144,21 @@ fn main() -> anyhow::Result<()> {
 
     println!(
         "=== one full synchronous round, serial vs parallel machine phase (n={}, m={}, {} threads) ===\n",
-        ROUND_N,
-        ROUND_M,
+        round_n,
+        round_m,
         parallel::global().threads()
     );
-    let round_problem = Problem::standard_gaussian(ROUND_N, ROUND_N, ROUND_M).build(11);
-    let round_sys = PartitionedSystem::split_even(&round_problem.a, &round_problem.b, ROUND_M)?;
-    let round_opts = BenchOptions {
-        samples: 15,
-        warmup: std::time::Duration::from_millis(200),
-        budget: std::time::Duration::from_secs(6),
-        ..BenchOptions::default()
+    let round_problem = Problem::standard_gaussian(round_n, round_n, round_m).build(11);
+    let round_sys = PartitionedSystem::split_even(&round_problem.a, &round_problem.b, round_m)?;
+    let round_opts = if smoke {
+        opts
+    } else {
+        BenchOptions {
+            samples: 15,
+            warmup: std::time::Duration::from_millis(200),
+            budget: std::time::Duration::from_secs(6),
+            ..BenchOptions::default()
+        }
     };
     let mut table =
         Table::new(&["method", "serial/round", "parallel/round", "speedup", "per-machine share"]);
@@ -161,7 +178,7 @@ fn main() -> anyhow::Result<()> {
             fmt_duration(s_serial.median),
             fmt_duration(s_par.median),
             format!("{:.2}x", speedup),
-            fmt_duration(s_par.median / ROUND_M as u32),
+            fmt_duration(s_par.median / round_m as u32),
         ]);
         rounds_json.push((
             name,
@@ -212,12 +229,20 @@ fn main() -> anyhow::Result<()> {
                 (
                     "round",
                     jobj(vec![
-                        ("n", Json::Num(ROUND_N as f64)),
-                        ("m", Json::Num(ROUND_M as f64)),
+                        ("n", Json::Num(round_n as f64)),
+                        ("m", Json::Num(round_m as f64)),
                     ]),
                 ),
                 ("threads", Json::Num(parallel::global().threads() as f64)),
+                ("smoke", Json::Bool(smoke)),
             ]),
+        ),
+        (
+            "provenance",
+            Json::Str(provenance(
+                "cargo bench --bench iteration_hotpath",
+                parallel::global().threads(),
+            )),
         ),
         ("kernels", jobj(kernels_json)),
         ("rounds", jobj(rounds_json)),
@@ -233,29 +258,23 @@ fn main() -> anyhow::Result<()> {
     // ~99% of its 2pn flops on stored zeros. Same matrix both times: the
     // dense system densifies the generated CSR, the sparse system slices
     // it with the nnz-balanced partitioner.
-    const SPARSE_N: usize = 4000;
-    const SPARSE_M: usize = 8;
-    const SPARSE_DENSITY: f64 = 0.005;
+    let (sparse_n, sparse_m, sparse_density) =
+        if smoke { (600, 4, 0.01) } else { (4000, 8, 0.005) };
     println!(
         "=== one full synchronous round, dense vs sparse machine blocks \
          (n={}, density={:.2}%, m={}) ===\n",
-        SPARSE_N,
-        SPARSE_DENSITY * 100.0,
-        SPARSE_M
+        sparse_n,
+        sparse_density * 100.0,
+        sparse_m
     );
-    let sp = SparseProblem::random_sparse(SPARSE_N, SPARSE_N, SPARSE_DENSITY, SPARSE_M).build(13);
+    let sp = SparseProblem::random_sparse(sparse_n, sparse_n, sparse_density, sparse_m).build(13);
     let nnz = sp.a.nnz();
-    let sparse_sys = PartitionedSystem::split_csr_nnz_balanced(&sp.a, &sp.b, SPARSE_M)?;
+    let sparse_sys = PartitionedSystem::split_csr_nnz_balanced(&sp.a, &sp.b, sparse_m)?;
     let dense_sys = {
         let dense_a = sp.a.to_dense();
-        PartitionedSystem::split_even(&dense_a, &sp.b, SPARSE_M)?
+        PartitionedSystem::split_even(&dense_a, &sp.b, sparse_m)?
     };
-    let sparse_opts = BenchOptions {
-        samples: 15,
-        warmup: std::time::Duration::from_millis(200),
-        budget: std::time::Duration::from_secs(6),
-        ..BenchOptions::default()
-    };
+    let sparse_opts = round_opts;
     let mut table = Table::new(&["method", "dense/round", "sparse/round", "speedup"]);
     let mut sparse_json = Vec::new();
     let mut min_sparse_speedup = f64::INFINITY;
@@ -296,12 +315,20 @@ fn main() -> anyhow::Result<()> {
         (
             "config",
             jobj(vec![
-                ("n", Json::Num(SPARSE_N as f64)),
-                ("m", Json::Num(SPARSE_M as f64)),
-                ("density", Json::Num(SPARSE_DENSITY)),
+                ("n", Json::Num(sparse_n as f64)),
+                ("m", Json::Num(sparse_m as f64)),
+                ("density", Json::Num(sparse_density)),
                 ("nnz", Json::Num(nnz as f64)),
                 ("threads", Json::Num(parallel::global().threads() as f64)),
+                ("smoke", Json::Bool(smoke)),
             ]),
+        ),
+        (
+            "provenance",
+            Json::Str(provenance(
+                "cargo bench --bench iteration_hotpath",
+                parallel::global().threads(),
+            )),
         ),
         ("rounds", jobj(sparse_json)),
         ("min_speedup", Json::Num(min_sparse_speedup)),

@@ -10,7 +10,42 @@
 //!
 //! Used by every target under `rust/benches/`.
 
+use crate::config::Json;
+use std::collections::BTreeMap;
 use std::time::{Duration, Instant};
+
+/// JSON object from `(key, value)` pairs — the builder every bench's
+/// `BENCH_*.json` report goes through (one definition, so the emitted
+/// reports cannot drift in construction between targets).
+pub fn jobj(pairs: Vec<(&str, Json)>) -> Json {
+    Json::Obj(pairs.into_iter().map(|(k, v)| (k.to_string(), v)).collect::<BTreeMap<_, _>>())
+}
+
+/// True when the `APC_BENCH_SMOKE` environment variable is set to
+/// anything but `0`/empty. Bench targets consult this to shrink their
+/// problem sizes and sampling budgets so CI can *run* them end-to-end
+/// (the `bench-smoke` job) instead of only compiling them — the emitted
+/// JSON is uploaded as a workflow artifact, never committed (its
+/// `provenance` marker says so, and the provenance validator rejects it).
+pub fn smoke_mode() -> bool {
+    std::env::var("APC_BENCH_SMOKE").map(|v| !v.is_empty() && v != "0").unwrap_or(false)
+}
+
+/// The `provenance` string stamped into every emitted `BENCH_*.json`:
+/// records whether the figures are real measurements from a full-size run
+/// (committable) or a reduced smoke run (artifact-only). Committed bench
+/// JSON must carry a provenance field; CI validates that and rejects
+/// smoke provenance.
+pub fn provenance(bench_cmd: &str, threads: usize) -> String {
+    if smoke_mode() {
+        format!(
+            "smoke run (APC_BENCH_SMOKE=1, {threads} threads): reduced sizes for the CI \
+             bench-smoke artifact — do not commit; regenerate with `{bench_cmd}`"
+        )
+    } else {
+        format!("measured by `{bench_cmd}` on a {threads}-thread host")
+    }
+}
 
 /// One benchmark's collected statistics (per single invocation).
 #[derive(Clone, Debug)]

@@ -25,9 +25,10 @@
 //!   [`linalg::kernels`]), [`parallel`] (the machine-phase thread pool),
 //!   [`sparse`] (CSR kernels backing sparse machine blocks), [`mm`],
 //!   [`gen`], [`bench`], [`proptest`], [`config`], [`cli`]
-//! * the paper: [`partition`] (dense/CSR blocks behind
-//!   [`partition::BlockOp`], nnz-balanced sparse splits), [`solvers`],
-//!   [`rates`]
+//! * the paper: [`partition`] (dense/CSR/whitened blocks behind
+//!   [`partition::BlockOp`], nnz-balanced sparse splits), [`precond`]
+//!   (§6 preconditioning in factored form — sparse blocks stay sparse),
+//!   [`solvers`], [`rates`]
 //! * the system: [`coordinator`] (L3), [`runtime`] (PJRT bridge to the
 //!   L2/L1 artifacts built by `python/compile/`)
 
@@ -40,6 +41,7 @@ pub mod linalg;
 pub mod mm;
 pub mod parallel;
 pub mod partition;
+pub mod precond;
 pub mod proptest;
 pub mod rates;
 pub mod runtime;

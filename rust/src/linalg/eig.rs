@@ -142,6 +142,13 @@ fn tql_implicit(d: &mut [f64], e: &mut [f64], z: &mut Mat) -> Result<()> {
             g = d[m] - d[l] + e[l] / (g + if g >= 0.0 { r.abs() } else { -r.abs() });
             let (mut s, mut c) = (1.0f64, 1.0f64);
             let mut p = 0.0f64;
+            // set when an underflow (r == 0) aborts the rotation sweep —
+            // the recovery skips the trailing d[l]/e[l] update and
+            // restarts the QL pass (tqli's `r == 0.0 && i >= l` test;
+            // the old `m > l + 1` form both skipped a required update on
+            // natural completion with a final r == 0 and corrupted e[l]
+            // when the abort happened with m == l + 1)
+            let mut aborted = false;
             for i in (l..m).rev() {
                 let mut f = s * e[i];
                 let b = c * e[i];
@@ -150,6 +157,7 @@ fn tql_implicit(d: &mut [f64], e: &mut [f64], z: &mut Mat) -> Result<()> {
                 if r == 0.0 {
                     d[i + 1] -= p;
                     e[m] = 0.0;
+                    aborted = true;
                     break;
                 }
                 s = f / r;
@@ -166,7 +174,7 @@ fn tql_implicit(d: &mut [f64], e: &mut [f64], z: &mut Mat) -> Result<()> {
                     z[(k, i)] = c * z[(k, i)] - s * f;
                 }
             }
-            if r == 0.0 && m > l + 1 {
+            if aborted {
                 continue;
             }
             d[l] -= p;
@@ -274,13 +282,8 @@ pub fn power_iteration(
     tol: f64,
     max_iter: usize,
 ) -> (f64, usize) {
-    let mut v = vec![0.0; n];
     // deterministic pseudo-random start (avoids orthogonal-start stalls)
-    let mut s = 0x9e3779b97f4a7c15u64;
-    for x in v.iter_mut() {
-        s = s.wrapping_mul(6364136223846793005).wrapping_add(1442695040888963407);
-        *x = ((s >> 11) as f64 / (1u64 << 53) as f64) - 0.5;
-    }
+    let mut v = super::vector::lcg_start_vector(n, 0x9e3779b97f4a7c15);
     let mut w = vec![0.0; n];
     let mut lambda = 0.0;
     for it in 1..=max_iter {

@@ -12,7 +12,11 @@
 //! * [`qr`] — Householder QR (used for orthogonal sampling + least squares),
 //! * [`lu`] — partial-pivot LU (general solves, determinant sanity),
 //! * [`eig`] — symmetric eigensolver (tridiagonalization + implicit QL),
-//!   power iteration, and spectrum utilities (condition numbers).
+//!   power iteration, and spectrum utilities (condition numbers),
+//! * [`lanczos`] — matrix-free Lanczos edge estimation (reorthogonalized
+//!   3-term recurrence + values-only QL on the tridiagonal) resolving
+//!   both spectral edges in tens of matvecs, clusters included — the
+//!   engine behind sparse-scale auto-tuning.
 //!
 //! Numerical conventions: all algorithms are deterministic, tolerance
 //! constants live next to their use sites, and failures (non-SPD input,
@@ -23,6 +27,7 @@ pub mod cholesky;
 pub mod dense;
 pub mod eig;
 pub mod kernels;
+pub mod lanczos;
 pub mod lu;
 pub mod qr;
 pub mod vector;
@@ -30,6 +35,7 @@ pub mod vector;
 pub use cholesky::Cholesky;
 pub use dense::Mat;
 pub use eig::{power_iteration, sym_eigen, SymEigen};
+pub use lanczos::{lanczos_extremes, tridiag_eigenvalues, LanczosEdges};
 pub use lu::Lu;
 pub use qr::Qr;
 pub use vector::{axpy, dot, nrm2, relative_error, scale, sub};

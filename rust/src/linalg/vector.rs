@@ -86,6 +86,21 @@ pub fn relative_error(x: &[f64], xstar: &[f64]) -> f64 {
     nrm2(&sub(x, xstar)) / denom
 }
 
+/// Deterministic pseudo-random vector with entries in `[−0.5, 0.5)` —
+/// the shared start-vector generator of the matrix-free eigenvalue
+/// estimators (power iteration, Lanczos). `seed` selects the stream so
+/// the estimators never share a pathological start; a fixed seed makes
+/// every estimate bit-reproducible.
+pub fn lcg_start_vector(n: usize, seed: u64) -> Vec<f64> {
+    let mut v = vec![0.0; n];
+    let mut s = seed;
+    for x in v.iter_mut() {
+        s = s.wrapping_mul(6364136223846793005).wrapping_add(1442695040888963407);
+        *x = ((s >> 11) as f64 / (1u64 << 53) as f64) - 0.5;
+    }
+    v
+}
+
 /// Maximum absolute difference, for exactness assertions in tests.
 #[inline]
 pub fn max_abs_diff(x: &[f64], y: &[f64]) -> f64 {

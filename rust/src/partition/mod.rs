@@ -20,20 +20,26 @@
 //! balance) is what balances wall-clock.
 
 use crate::linalg::{sym_eigen, Cholesky, Mat};
+use crate::precond::{Preconditioner, WhitenedCsr};
 use crate::sparse::{Csr, CsrBlock};
 use anyhow::{bail, Context, Result};
 
-/// The per-machine operator `A_i`: a dense row block or a CSR row block.
+/// The per-machine operator `A_i`: a dense row block, a CSR row block, or
+/// a §6-whitened CSR block `(A_iA_iᵀ)^{-1/2} A_i` kept in factored form.
 ///
 /// All iteration hot-path kernels (`matvec_into`, `tr_matvec_into`, the
 /// fused `tr_matvec_axpy_into`) and the one-time Gram builds dispatch
 /// through this enum, so the solver locals in [`crate::solvers::local`]
 /// are backend-agnostic. The match per call is noise next to the
-/// `O(pn)` / `O(nnz_i)` kernel behind it.
+/// `O(pn)` / `O(nnz_i)` / `O(nnz_i + p²)` kernel behind it.
 #[derive(Clone, Debug)]
 pub enum BlockOp {
     Dense(Mat),
     Sparse(CsrBlock),
+    /// Factored §6 preconditioned operator over a CSR block — produced by
+    /// [`PartitionedSystem::preconditioned`] on sparse systems so the
+    /// transformed blocks never densify (`O(nnz_i + p²)` memory).
+    Whitened(WhitenedCsr),
 }
 
 impl BlockOp {
@@ -42,6 +48,7 @@ impl BlockOp {
         match self {
             BlockOp::Dense(a) => a.rows(),
             BlockOp::Sparse(a) => a.rows,
+            BlockOp::Whitened(a) => a.rows(),
         }
     }
 
@@ -50,28 +57,45 @@ impl BlockOp {
         match self {
             BlockOp::Dense(a) => a.cols(),
             BlockOp::Sparse(a) => a.cols,
+            BlockOp::Whitened(a) => a.cols(),
         }
     }
 
-    /// Stored entries (dense blocks store everything).
+    /// Stored entries (dense blocks store everything; whitened blocks
+    /// store their CSR values plus the `p×p` cached preconditioner).
     pub fn nnz(&self) -> usize {
         match self {
             BlockOp::Dense(a) => a.rows() * a.cols(),
             BlockOp::Sparse(a) => a.nnz(),
+            BlockOp::Whitened(a) => a.stored_floats(),
         }
     }
 
+    /// True when the operator is CSR-backed: a raw CSR block or a
+    /// factored whitened one — i.e. memory scales with `nnz_i`, not
+    /// `p·n`.
     pub fn is_sparse(&self) -> bool {
-        matches!(self, BlockOp::Sparse(_))
+        matches!(self, BlockOp::Sparse(_) | BlockOp::Whitened(_))
+    }
+
+    /// The underlying CSR block, when the operator is CSR-backed. The
+    /// §6-preconditioning no-densification guarantee is asserted through
+    /// this accessor in `tests/precond_parity.rs`.
+    pub fn csr(&self) -> Option<&CsrBlock> {
+        match self {
+            BlockOp::Dense(_) => None,
+            BlockOp::Sparse(a) => Some(a),
+            BlockOp::Whitened(a) => Some(a.csr()),
+        }
     }
 
     /// The dense buffer, for paths that need raw row-major storage (the
-    /// HLO backend's device uploads). Errors on sparse blocks rather
+    /// HLO backend's device uploads). Errors on CSR-backed blocks rather
     /// than silently densifying.
     pub fn dense(&self) -> Result<&Mat> {
         match self {
             BlockOp::Dense(a) => Ok(a),
-            BlockOp::Sparse(_) => {
+            BlockOp::Sparse(_) | BlockOp::Whitened(_) => {
                 bail!("block is sparse; this path requires a dense operator")
             }
         }
@@ -82,15 +106,18 @@ impl BlockOp {
         match self {
             BlockOp::Dense(a) => a.clone(),
             BlockOp::Sparse(a) => a.to_dense(),
+            BlockOp::Whitened(a) => a.to_dense(),
         }
     }
 
-    /// `y = A x`, zero-alloc.
+    /// `y = A x`, allocation-free in every backend (the whitened backend
+    /// stages through a thread-local `O(p)` buffer sized on first use).
     #[inline]
     pub fn matvec_into(&self, x: &[f64], y: &mut [f64]) {
         match self {
             BlockOp::Dense(a) => a.matvec_into(x, y),
             BlockOp::Sparse(a) => a.matvec_into(x, y),
+            BlockOp::Whitened(a) => a.matvec_into(x, y),
         }
     }
 
@@ -101,12 +128,13 @@ impl BlockOp {
         y
     }
 
-    /// `y = Aᵀ x`, zero-alloc.
+    /// `y = Aᵀ x`, allocation-free in every backend.
     #[inline]
     pub fn tr_matvec_into(&self, x: &[f64], y: &mut [f64]) {
         match self {
             BlockOp::Dense(a) => a.tr_matvec_into(x, y),
             BlockOp::Sparse(a) => a.tr_matvec_into(x, y),
+            BlockOp::Whitened(a) => a.tr_matvec_into(x, y),
         }
     }
 
@@ -117,13 +145,13 @@ impl BlockOp {
         y
     }
 
-    /// `y += α · Aᵀ x` — the fused tail of the APC worker step, zero-alloc
-    /// in both backends.
+    /// `y += α · Aᵀ x` — the fused tail of the APC worker step.
     #[inline]
     pub fn tr_matvec_axpy_into(&self, x: &[f64], alpha: f64, y: &mut [f64]) {
         match self {
             BlockOp::Dense(a) => a.tr_matvec_axpy_into(x, alpha, y),
             BlockOp::Sparse(a) => a.tr_matvec_axpy_into(x, alpha, y),
+            BlockOp::Whitened(a) => a.tr_matvec_axpy_into(x, alpha, y),
         }
     }
 
@@ -134,6 +162,7 @@ impl BlockOp {
         match self {
             BlockOp::Dense(a) => a.gram_rows(),
             BlockOp::Sparse(a) => a.gram_rows(),
+            BlockOp::Whitened(a) => a.gram_rows(),
         }
     }
 
@@ -142,6 +171,7 @@ impl BlockOp {
         match self {
             BlockOp::Dense(a) => a.gram_cols(),
             BlockOp::Sparse(a) => a.gram_cols(),
+            BlockOp::Whitened(a) => a.gram_cols(),
         }
     }
 }
@@ -263,10 +293,13 @@ impl MachineBlock {
         self.a.tr_matvec(&t)
     }
 
-    /// `(A_i A_iᵀ)^{-1/2} A_i` and the matching rhs transform — the §6
-    /// distributed preconditioning. `O(p³ + p²n)` one-time cost, done
-    /// locally by each machine. The transformed block is dense in either
-    /// backend: the left-multiplication fills in the sparsity.
+    /// The *explicit* `(A_i A_iᵀ)^{-1/2} A_i` and matching rhs transform —
+    /// the §6 distributed preconditioning as a materialized dense block
+    /// (`O(p³ + p²n)` one-time cost, `O(pn)` memory regardless of
+    /// backend: the left-multiplication fills in any sparsity). This is
+    /// the reference path; sparse systems should go through
+    /// [`preconditioned_factored`](MachineBlock::preconditioned_factored),
+    /// which `tests/precond_parity.rs` pins against this product.
     pub fn preconditioned(&self) -> Result<(Mat, Vec<f64>)> {
         let gram = self.a.gram_rows();
         let eig = sym_eigen(&gram).context("preconditioning: gram eigensolve")?;
@@ -274,6 +307,30 @@ impl MachineBlock {
         let c = inv_sqrt.matmul(&self.a.to_dense());
         let d = inv_sqrt.matvec(&self.b);
         Ok((c, d))
+    }
+
+    /// The §6 preconditioning in the block's native backend: dense blocks
+    /// materialize the product as before (it costs what they already
+    /// cost), CSR blocks keep `(A_iA_iᵀ)^{-1/2}` **factored** next to the
+    /// untouched CSR operator — `O(p³)` one-time eigensolve of the sparse
+    /// row-Gram merge, `O(nnz_i + p²)` memory, no densification. A block
+    /// that is already whitened passes through unchanged: its row Gram is
+    /// `I` by construction, so its §6 transform is the identity
+    /// (preconditioning is idempotent).
+    pub fn preconditioned_factored(&self) -> Result<(BlockOp, Vec<f64>)> {
+        match &self.a {
+            BlockOp::Dense(_) => {
+                let (c, d) = self.preconditioned()?;
+                Ok((BlockOp::Dense(c), d))
+            }
+            BlockOp::Sparse(a) => {
+                let pre = Preconditioner::from_gram(&a.gram_rows())
+                    .with_context(|| format!("machine {}: §6 whitening", self.index))?;
+                let d = pre.apply(&self.b);
+                Ok((BlockOp::Whitened(WhitenedCsr::new(a.clone(), pre)), d))
+            }
+            BlockOp::Whitened(w) => Ok((BlockOp::Whitened(w.clone()), self.b.clone())),
+        }
     }
 }
 
@@ -506,9 +563,24 @@ impl PartitionedSystem {
     }
 
     /// The §6-preconditioned system `Cx = d` as a new partitioned system
-    /// over the same machine layout (dense blocks — the preconditioner
-    /// fills in any sparsity).
+    /// over the same machine layout, each block transformed in its native
+    /// backend: dense blocks materialize the product, CSR blocks stay CSR
+    /// behind a factored whitener ([`BlockOp::Whitened`], `O(nnz_i + p²)`
+    /// memory) — the dense fallback that used to erase the sparse
+    /// backend's win on exactly the §5 workloads is gone.
     pub fn preconditioned(&self) -> Result<PartitionedSystem> {
+        let mut blocks = Vec::with_capacity(self.m());
+        for blk in &self.blocks {
+            let (c, d) = blk.preconditioned_factored()?;
+            blocks.push(MachineBlock::from_op(blk.index, blk.row0, c, d)?);
+        }
+        Ok(PartitionedSystem { blocks, n: self.n, n_rows: self.n_rows })
+    }
+
+    /// The §6-preconditioned system with every block forced to the
+    /// explicit dense product — the reference implementation the factored
+    /// path is pinned against (tests/benches; `O(pn)` memory per block).
+    pub fn preconditioned_dense(&self) -> Result<PartitionedSystem> {
         let mut blocks = Vec::with_capacity(self.m());
         for blk in &self.blocks {
             let (c, d) = blk.preconditioned()?;
@@ -791,6 +863,47 @@ mod tests {
         }
         // 4 rows, 1 col, 2 machines: needs p ≤ 1 per block ⇒ 4 > 2·1
         assert!(nnz_balanced_bounds(&skinny.into_csr(), 2).is_err());
+    }
+
+    #[test]
+    fn sparse_preconditioning_stays_csr_backed() {
+        let built = SparseProblem::random_sparse(32, 24, 0.2, 4).build(29);
+        let sys = PartitionedSystem::split_csr_nnz_balanced(&built.a, &built.b, 4).unwrap();
+        let pre = sys.preconditioned().unwrap();
+        for (blk, orig) in pre.blocks.iter().zip(&sys.blocks) {
+            // still CSR-backed: no densification happened
+            assert!(blk.a.is_sparse(), "whitened block lost its sparse backing");
+            let csr = blk.a.csr().expect("whitened block exposes its CSR");
+            assert_eq!(csr.nnz(), orig.a.csr().unwrap().nnz(), "CSR payload changed");
+            assert!(blk.a.dense().is_err());
+            // memory is nnz_i + p², not p·n
+            assert_eq!(blk.a.nnz(), csr.nnz() + blk.p() * blk.p());
+            // orthonormal rows, like the dense §6 transform
+            assert!(blk.a.gram_rows().sub(&Mat::eye(blk.p())).max_abs() < 1e-9);
+        }
+        // same solution set: the planted x* still solves the whitened system
+        assert!(pre.relative_residual(&built.x_star) < 1e-9);
+        // and the operator equals the explicit dense reference
+        let dense_ref = sys.preconditioned_dense().unwrap();
+        for (f, d) in pre.blocks.iter().zip(&dense_ref.blocks) {
+            assert!(
+                f.a.to_dense().sub(&d.a.to_dense()).max_abs() < 1e-10,
+                "factored block diverges from the explicit product"
+            );
+            assert!(max_abs_diff(&f.b, &d.b) < 1e-10);
+        }
+    }
+
+    #[test]
+    fn preconditioning_is_idempotent() {
+        let built = SparseProblem::banded(18, 18, 2, 3).build(31);
+        let sys = PartitionedSystem::split_csr(&built.a, &built.b, 3).unwrap();
+        let once = sys.preconditioned().unwrap();
+        let twice = once.preconditioned().unwrap();
+        for (a, b) in once.blocks.iter().zip(&twice.blocks) {
+            assert!(a.a.to_dense().sub(&b.a.to_dense()).max_abs() < 1e-12);
+            assert!(max_abs_diff(&a.b, &b.b) < 1e-12);
+        }
     }
 
     #[test]

@@ -1,0 +1,302 @@
+//! §6 preconditioning in factored form — sparse blocks stay sparse.
+//!
+//! The paper's distributed preconditioner has each machine left-multiply
+//! its block by `W_i = (A_i A_iᵀ)^{-1/2}`, turning `Ax = b` into `Cx = d`
+//! with `κ(CᵀC) = κ(X)`. Forming the product `W_i A_i` explicitly is fine
+//! for dense blocks (it costs what the block already costs) but fatal for
+//! CSR blocks: the left-multiplication fills in the sparsity, so a machine
+//! that held `O(nnz_i)` suddenly holds `O(p·n)` — on the §5 Matrix-Market
+//! shapes (ORSIRR 1, ASH608; a few nonzeros per row) that is a ~100×
+//! memory and flop regression, erasing the sparse backend's entire win.
+//!
+//! This module keeps the preconditioner **factored** instead:
+//!
+//! * [`Preconditioner`] caches `W_i` itself — a dense symmetric `p×p`
+//!   matrix built once from the eigendecomposition of the row Gram
+//!   `G_i = A_i A_iᵀ` (which the sparse backend already assembles by
+//!   sorted row-merge dot products, [`crate::sparse::Csr::gram_rows`]).
+//!   `O(p³)` one-time, `O(p²)` stored — the same order as the Gram
+//!   Cholesky every block caches anyway.
+//! * [`WhitenedCsr`] is the operator `C_i = W_i A_i` *as a composition*:
+//!   `C_i x` is a CSR matvec followed by the `p×p` whitening apply, and
+//!   `C_iᵀ y = A_iᵀ (W_i y)` is the whitening apply followed by a CSR
+//!   transpose-matvec. Per-round cost `O(nnz_i + p²)` and memory
+//!   `O(nnz_i + p²)` — no `p×n` dense block ever exists.
+//!
+//! [`crate::partition::BlockOp::Whitened`] carries this operator through
+//! the same solver locals as the plain dense/CSR backends, so P-HBM on a
+//! sparse system is now a first-class sparse path
+//! (`tests/precond_parity.rs` pins it against the explicit dense
+//! `(A_iA_iᵀ)^{-1/2} A_i` reference to ≤ 1e-10).
+
+use crate::linalg::{sym_eigen, Mat};
+use crate::sparse::CsrBlock;
+use anyhow::{Context, Result};
+use std::cell::RefCell;
+
+thread_local! {
+    /// Per-thread staging buffer between a whitened block's CSR kernel
+    /// and its `p×p` whitening apply. Sized once per thread (machine-
+    /// phase workers each own one), so the whitened kernels are
+    /// allocation-free on the iteration hot path — the same contract the
+    /// dense and CSR backends keep. The kernels never nest, so the
+    /// `RefCell` borrow is always uncontended.
+    static STAGE: RefCell<Vec<f64>> = RefCell::new(Vec::new());
+}
+
+/// Run `f` with a `p`-sized slice of this thread's staging buffer.
+fn with_stage<R>(p: usize, f: impl FnOnce(&mut [f64]) -> R) -> R {
+    STAGE.with(|s| {
+        let mut buf = s.borrow_mut();
+        if buf.len() < p {
+            buf.resize(p, 0.0);
+        }
+        f(&mut buf[..p])
+    })
+}
+
+/// The cached per-machine preconditioner `W = (A_i A_iᵀ)^{-1/2}`.
+///
+/// Built from the symmetric eigendecomposition `G = V Λ Vᵀ` as
+/// `W = V Λ^{-1/2} Vᵀ` — the *symmetric* inverse square root, matching
+/// the paper's §6 operator exactly (a Cholesky whitening `L⁻¹` would give
+/// the same `CᵀC` but a different `C`, breaking trajectory-level parity
+/// with the dense reference). The two eigenvector applications are folded
+/// into one explicit symmetric `p×p` matrix so an apply is a single dense
+/// matvec.
+#[derive(Clone, Debug)]
+pub struct Preconditioner {
+    /// `W = G^{-1/2}`, dense symmetric `p×p`.
+    w: Mat,
+}
+
+impl Preconditioner {
+    /// Build from the row Gram `G = A_i A_iᵀ` (`O(p³)` eigensolve, done
+    /// once per machine at setup — the same scale as the Gram Cholesky).
+    /// Fails if `G` is not SPD (rank-deficient block).
+    pub fn from_gram(gram: &Mat) -> Result<Self> {
+        let eig = sym_eigen(gram).context("preconditioner: gram eigensolve")?;
+        let w = eig.inv_sqrt().context("preconditioner: gram not SPD")?;
+        Ok(Preconditioner { w })
+    }
+
+    /// Block row count `p`.
+    pub fn p(&self) -> usize {
+        self.w.rows()
+    }
+
+    /// The explicit `W` (analysis/tests; it is already dense `p×p`).
+    pub fn matrix(&self) -> &Mat {
+        &self.w
+    }
+
+    /// `out = W v` — the whitening apply, one dense `p×p` matvec.
+    #[inline]
+    pub fn apply_into(&self, v: &[f64], out: &mut [f64]) {
+        self.w.matvec_into(v, out);
+    }
+
+    /// `W v` (allocating convenience; the rhs transform `d_i = W b_i`).
+    pub fn apply(&self, v: &[f64]) -> Vec<f64> {
+        self.w.matvec(v)
+    }
+}
+
+/// The factored preconditioned operator `C_i = W_i A_i` over a CSR block.
+///
+/// Memory is `O(nnz_i + p²)`; applies are `O(nnz_i + p²)`. The `p`-sized
+/// staging buffer between the CSR kernel and the whitening apply is
+/// thread-local (see `with_stage`), keeping the operator plain data —
+/// `Sync`-shareable across the machine-phase threads — while the apply
+/// path stays allocation-free after each thread's first call.
+#[derive(Clone, Debug)]
+pub struct WhitenedCsr {
+    a: CsrBlock,
+    pre: Preconditioner,
+}
+
+impl WhitenedCsr {
+    /// Compose a CSR block with its whitening preconditioner.
+    pub fn new(a: CsrBlock, pre: Preconditioner) -> Self {
+        assert_eq!(a.rows, pre.p(), "whitened block: preconditioner order mismatch");
+        WhitenedCsr { a, pre }
+    }
+
+    /// Build from a CSR block alone: assemble its sparse row Gram and
+    /// factor it.
+    pub fn from_csr(a: CsrBlock) -> Result<Self> {
+        let pre = Preconditioner::from_gram(&a.gram_rows())?;
+        Ok(WhitenedCsr::new(a, pre))
+    }
+
+    /// Rows (`p`).
+    pub fn rows(&self) -> usize {
+        self.a.rows
+    }
+
+    /// Columns (`n`).
+    pub fn cols(&self) -> usize {
+        self.a.cols
+    }
+
+    /// Stored nonzeros of the CSR part.
+    pub fn nnz(&self) -> usize {
+        self.a.nnz()
+    }
+
+    /// Total stored floats: `nnz_i` (CSR values) + `p²` (the cached `W`) —
+    /// the factored form's memory footprint, vs `p·n` for the explicit
+    /// dense product (the figure the preconditioning bench reports).
+    pub fn stored_floats(&self) -> usize {
+        self.a.nnz() + self.pre.p() * self.pre.p()
+    }
+
+    /// The underlying CSR block.
+    pub fn csr(&self) -> &CsrBlock {
+        &self.a
+    }
+
+    /// The whitening preconditioner.
+    pub fn preconditioner(&self) -> &Preconditioner {
+        &self.pre
+    }
+
+    /// The transformed rhs `d_i = W b_i`.
+    pub fn whiten_rhs(&self, b: &[f64]) -> Vec<f64> {
+        self.pre.apply(b)
+    }
+
+    /// `y = C x = W (A x)`.
+    pub fn matvec_into(&self, x: &[f64], y: &mut [f64]) {
+        with_stage(self.rows(), |t| {
+            self.a.matvec_into(x, t);
+            self.pre.apply_into(t, y);
+        });
+    }
+
+    /// `y = Cᵀ x = Aᵀ (W x)` (`W` is symmetric).
+    pub fn tr_matvec_into(&self, x: &[f64], y: &mut [f64]) {
+        with_stage(self.rows(), |t| {
+            self.pre.apply_into(x, t);
+            self.a.tr_matvec_into(t, y);
+        });
+    }
+
+    /// `y += α · Cᵀ x` — the fused APC-tail accumulation, mirroring the
+    /// dense and CSR backends.
+    pub fn tr_matvec_axpy_into(&self, x: &[f64], alpha: f64, y: &mut [f64]) {
+        with_stage(self.rows(), |t| {
+            self.pre.apply_into(x, t);
+            self.a.tr_matvec_axpy_into(t, alpha, y);
+        });
+    }
+
+    /// Row Gram `C Cᵀ = W G W` as a dense `p×p` — identity up to the
+    /// eigensolve's rounding. Computed numerically (two `p×p` matmuls,
+    /// setup path) rather than returned as an exact `I` so a badly
+    /// conditioned whitening surfaces in the downstream SPD check instead
+    /// of being papered over.
+    pub fn gram_rows(&self) -> Mat {
+        let g = self.pre.w.matmul(&self.a.gram_rows()).matmul(&self.pre.w);
+        // symmetrize the matmul rounding residue (same contract as the
+        // SYRK / sparse-merge gram kernels: exact mirror)
+        let gt = g.transpose();
+        let mut s = g;
+        s.axpy_mat(1.0, &gt);
+        s.scaled(0.5)
+    }
+
+    /// Column Gram `CᵀC = Aᵀ G⁻¹ A` as dense `n×n` (analysis paths only).
+    pub fn gram_cols(&self) -> Mat {
+        self.to_dense().gram_cols()
+    }
+
+    /// Materialize the explicit product `W A` (tests/analysis — this is
+    /// precisely the `O(p·n)` densification the factored form avoids on
+    /// the iteration path).
+    pub fn to_dense(&self) -> Mat {
+        self.pre.w.matmul(&self.a.to_dense())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gen::problems::SparseProblem;
+    use crate::linalg::vector::max_abs_diff;
+
+    fn sample_block() -> CsrBlock {
+        let built = SparseProblem::random_sparse(24, 16, 0.25, 4).build(19);
+        built.a.slice_rows(0, 6)
+    }
+
+    #[test]
+    fn preconditioner_is_inverse_sqrt() {
+        let a = sample_block();
+        let g = a.gram_rows();
+        let pre = Preconditioner::from_gram(&g).unwrap();
+        // W G W = I
+        let wgw = pre.matrix().matmul(&g).matmul(pre.matrix());
+        assert!(wgw.sub(&Mat::eye(6)).max_abs() < 1e-9, "W G W ≠ I");
+        // symmetric
+        assert!(pre.matrix().is_symmetric(1e-10));
+    }
+
+    #[test]
+    fn whitened_matches_explicit_product() {
+        let a = sample_block();
+        let dense = a.to_dense();
+        let w = WhitenedCsr::from_csr(a).unwrap();
+        let explicit = w.preconditioner().matrix().matmul(&dense);
+        assert!(w.to_dense().sub(&explicit).max_abs() < 1e-12);
+
+        let x: Vec<f64> = (0..16).map(|i| (i as f64 * 0.31).sin()).collect();
+        let mut y = vec![0.0; 6];
+        w.matvec_into(&x, &mut y);
+        assert!(max_abs_diff(&y, &explicit.matvec(&x)) < 1e-12);
+
+        let r: Vec<f64> = (0..6).map(|i| (i as f64 * 0.7).cos()).collect();
+        let mut z = vec![0.0; 16];
+        w.tr_matvec_into(&r, &mut z);
+        assert!(max_abs_diff(&z, &explicit.tr_matvec(&r)) < 1e-12);
+
+        let mut acc: Vec<f64> = (0..16).map(|i| 0.1 * i as f64).collect();
+        let mut expect = acc.clone();
+        w.tr_matvec_axpy_into(&r, -0.37, &mut acc);
+        explicit.tr_matvec_axpy_into(&r, -0.37, &mut expect);
+        assert!(max_abs_diff(&acc, &expect) < 1e-12);
+    }
+
+    #[test]
+    fn whitened_gram_is_identity() {
+        let w = WhitenedCsr::from_csr(sample_block()).unwrap();
+        let g = w.gram_rows();
+        assert!(g.sub(&Mat::eye(6)).max_abs() < 1e-9, "C Cᵀ ≠ I");
+        // exact mirror, like every other gram kernel
+        for i in 0..6 {
+            for j in 0..6 {
+                assert_eq!(g[(i, j)], g[(j, i)]);
+            }
+        }
+    }
+
+    #[test]
+    fn stored_floats_counts_factored_footprint() {
+        let a = sample_block();
+        let nnz = a.nnz();
+        let w = WhitenedCsr::from_csr(a).unwrap();
+        assert_eq!(w.stored_floats(), nnz + 36);
+        // the whole point: far below the p·n dense product
+        assert!(w.stored_floats() < 6 * 16 + 36);
+    }
+
+    #[test]
+    fn rhs_whitening_matches_reference() {
+        let a = sample_block();
+        let w = WhitenedCsr::from_csr(a).unwrap();
+        let b: Vec<f64> = (0..6).map(|i| 1.0 + i as f64).collect();
+        let d = w.whiten_rhs(&b);
+        let expect = w.preconditioner().matrix().matvec(&b);
+        assert!(max_abs_diff(&d, &expect) < 1e-14);
+    }
+}

@@ -12,7 +12,7 @@
 //! The *convergence time* reported throughout is the paper's
 //! `T = 1/(−log ρ) ≈ 1/(1−ρ)` — iterations per e-fold of error decay.
 
-use crate::linalg::{power_iteration, sym_eigen, Cholesky, Mat};
+use crate::linalg::{lanczos_extremes, sym_eigen, Cholesky, Mat};
 use crate::partition::PartitionedSystem;
 use anyhow::{bail, Context, Result};
 
@@ -30,11 +30,21 @@ pub struct SpectralInfo {
 
 impl SpectralInfo {
     /// Full computation via dense symmetric eigensolves (`O(n³)`).
+    ///
+    /// Both `n×n` inputs are accumulated **per block** so CSR systems
+    /// never materialize the assembled `A`: `X`'s columns come from
+    /// [`MachineBlock::project_into`](crate::partition::MachineBlock::project_into)
+    /// (`O(nnz_i + p²)` per application on sparse blocks) and
+    /// `AᵀA = Σ A_iᵀA_i` from each block's own `gram_cols` kernel — the
+    /// dense `O(N·n)` staging matrix is gone; only the unavoidable `n×n`
+    /// eigensolve inputs are dense.
     pub fn compute(sys: &PartitionedSystem) -> Result<Self> {
         let x = sys.x_matrix();
         let ex = sym_eigen(&x).context("spectrum of X")?;
-        let a = sys.assemble_a();
-        let ata = a.gram_cols();
+        let mut ata = Mat::zeros(sys.n, sys.n);
+        for blk in &sys.blocks {
+            ata.axpy_mat(1.0, &blk.a.gram_cols());
+        }
         let ea = sym_eigen(&ata).context("spectrum of AᵀA")?;
         Ok(SpectralInfo {
             mu_min: ex.lambda_min().max(0.0),
@@ -63,36 +73,63 @@ impl SpectralInfo {
     }
 }
 
+/// Matvec counts of a [`SpectralInfo::estimate`] run — one Lanczos pass
+/// per operator, each resolving *both* spectral edges.
+#[derive(Clone, Copy, Debug)]
+pub struct EstimateStats {
+    /// Lanczos steps (= projection rounds) spent on `X`.
+    pub x_iterations: usize,
+    /// Lanczos steps (= partial-gradient rounds) spent on `AᵀA`.
+    pub ata_iterations: usize,
+}
+
 impl SpectralInfo {
     /// Distributed-friendly *estimate* of the spectrum, for systems where
     /// the dense `O(n³)` eigensolves of [`SpectralInfo::compute`] defeat
     /// the point of distributing in the first place.
     ///
-    /// Uses only operations the workers already implement:
-    /// * `μ_max(X)`: power iteration on `X v = (1/m) Σ (v − P_i v)` —
-    ///   one projection round per iteration;
-    /// * `μ_min(X)`: power iteration on `I − X` (its top eigenvalue is
-    ///   `1 − μ_min`) with the `μ_max`-eigendirection deflated… in
-    ///   practice `λ_max(I−X) = 1 − μ_min` directly since `μ_min` is the
-    ///   extreme of the *complement*;
-    /// * `λ_max(AᵀA)`: power iteration with partial-gradient rounds;
-    /// * `λ_min(AᵀA)`: estimated via `λ_max` of `cI − AᵀA` with
-    ///   `c = λ_max` (shift-and-invert-free, slow for clustered spectra
-    ///   but tuning only needs ~1 digit).
+    /// Two Lanczos passes ([`lanczos_extremes`]), each built from
+    /// operations the workers already implement:
+    /// * `μ_min, μ_max` of `X` from **one** Krylov space over
+    ///   `X v = (1/m) Σ (v − P_i v)` — one projection round per step;
+    /// * `λ_min, λ_max` of `AᵀA` from one Krylov space over
+    ///   partial-gradient rounds.
     ///
-    /// Each estimate is intentionally *biased safe* for APC tuning: the
-    /// returned `mu_min` is shrunk by `safety` (default 0.9) because
-    /// over-estimating `μ_min` puts the tuned `(γ*, η*)` outside the
-    /// stability set S and diverges, while under-estimating only costs
-    /// rate (see the sensitivity ablation and EXPERIMENTS.md).
+    /// This replaces the previous four power iterations: power iteration
+    /// resolves one edge per run at a rate set by the top shifted
+    /// eigenvalue *ratio*, which degenerates to ~1 on the clustered
+    /// spectra of the ill-conditioned §5 workloads (μ_min took thousands
+    /// of rounds there); Lanczos reaches both edges of each operator in
+    /// tens of matvecs even inside a cluster. `iters` caps the Krylov
+    /// dimension per operator (values ≥ `n` make the edges exact).
+    ///
+    /// The estimate stays intentionally *biased safe* for APC tuning: the
+    /// returned `mu_min` is shrunk by `safety` (default 0.9). Ritz values
+    /// approach `μ_min` from **above**, and over-estimating `μ_min` puts
+    /// the tuned `(γ*, η*)` outside the stability set S and diverges,
+    /// while under-estimating only costs rate (see the sensitivity
+    /// ablation and EXPERIMENTS.md).
     pub fn estimate(sys: &PartitionedSystem, iters: usize, safety: f64) -> Result<Self> {
+        Self::estimate_with_stats(sys, iters, safety).map(|(s, _)| s)
+    }
+
+    /// [`estimate`](SpectralInfo::estimate), also reporting how many
+    /// Lanczos steps each operator took (the auto-tuning cost a
+    /// deployment actually pays — asserted small on clustered spectra in
+    /// `tests/precond_parity.rs`).
+    pub fn estimate_with_stats(
+        sys: &PartitionedSystem,
+        iters: usize,
+        safety: f64,
+    ) -> Result<(Self, EstimateStats)> {
         let n = sys.n;
         let m = sys.m() as f64;
         let mut scratch = vec![0.0; sys.max_p()];
         let mut proj = vec![0.0; n];
 
-        // X v, via the blocks' cached projections
-        let mut apply_x = |v: &[f64], out: &mut [f64]| {
+        // X v, via the blocks' cached projections (scratch reused across
+        // Lanczos steps — no per-application allocation)
+        let apply_x = |v: &[f64], out: &mut [f64]| {
             out.fill(0.0);
             for blk in &sys.blocks {
                 blk.project_into(v, &mut scratch[..blk.p()], &mut proj);
@@ -101,22 +138,12 @@ impl SpectralInfo {
                 }
             }
         };
-        let (mu_max, _) = power_iteration(n, &mut apply_x, 1e-10, iters);
-        // I − X has top eigenvalue 1 − μ_min (μ's live in [0, 1])
-        let mut apply_ix = |v: &[f64], out: &mut [f64]| {
-            apply_x(v, out);
-            for k in 0..n {
-                out[k] = v[k] - out[k];
-            }
-        };
-        let (one_minus_mu_min, _) = power_iteration(n, &mut apply_ix, 1e-10, iters);
-        drop(apply_ix);
+        let ex = lanczos_extremes(n, apply_x, iters, 1e-10).context("lanczos on X")?;
 
-        // AᵀA via partial-gradient style accumulation (scratch reused
-        // across power-iteration rounds — no per-application allocation)
+        // AᵀA via partial-gradient style accumulation
         let mut buf_n = vec![0.0; n];
         let mut buf_p = vec![0.0; sys.max_p()];
-        let mut apply_ata = |v: &[f64], out: &mut [f64]| {
+        let apply_ata = |v: &[f64], out: &mut [f64]| {
             out.fill(0.0);
             for blk in &sys.blocks {
                 let t = &mut buf_p[..blk.p()];
@@ -127,31 +154,26 @@ impl SpectralInfo {
                 }
             }
         };
-        let (lambda_max, _) = power_iteration(n, &mut apply_ata, 1e-10, iters);
-        let shift = lambda_max * (1.0 + 1e-6);
-        let mut apply_shifted = |v: &[f64], out: &mut [f64]| {
-            apply_ata(v, out);
-            for k in 0..n {
-                out[k] = shift * v[k] - out[k];
-            }
-        };
-        let (top_shifted, _) = power_iteration(n, &mut apply_shifted, 1e-10, iters);
-        let lambda_min = (shift - top_shifted).max(0.0);
+        let ea = lanczos_extremes(n, apply_ata, iters, 1e-10).context("lanczos on AᵀA")?;
 
-        let mu_min = (1.0 - one_minus_mu_min).max(0.0) * safety.clamp(0.0, 1.0);
+        let mu_min = ex.lambda_min.max(0.0) * safety.clamp(0.0, 1.0);
         if mu_min <= 0.0 {
             bail!(
-                "spectral estimate: μ_min ≈ 0 after {} power iterations — X is \
+                "spectral estimate: μ_min ≈ 0 after {} Lanczos steps — X is \
                  numerically singular or needs more iterations",
-                iters
+                ex.iterations
             );
         }
-        Ok(SpectralInfo {
-            mu_min,
-            mu_max: mu_max.min(1.0),
-            lambda_min: lambda_min.max(lambda_max * 1e-16),
-            lambda_max,
-        })
+        let lambda_max = ea.lambda_max;
+        Ok((
+            SpectralInfo {
+                mu_min,
+                mu_max: ex.lambda_max.min(1.0),
+                lambda_min: ea.lambda_min.max(lambda_max * 1e-16),
+                lambda_max,
+            },
+            EstimateStats { x_iterations: ex.iterations, ata_iterations: ea.iterations },
+        ))
     }
 }
 

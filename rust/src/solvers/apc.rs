@@ -47,7 +47,7 @@ impl Apc {
     }
 
     /// Production tuning without the `O(n³)` eigensolve: estimate the
-    /// spectrum with `iters` distributed power-iteration rounds
+    /// spectrum with at most `iters` distributed Lanczos rounds
     /// ([`SpectralInfo::estimate`]) and tune *conservatively*.
     ///
     /// The sensitivity ablation (EXPERIMENTS.md §Ablations D) shows the

@@ -7,10 +7,13 @@
 //! (integration tests pin the two against each other).
 //!
 //! Every kernel reaches `A_i` through [`crate::partition::BlockOp`], so
-//! the same code runs dense (`O(pn)` blocked kernels) and sparse
-//! (`O(nnz_i)` CSR kernels) — backend parity is pinned by
-//! `tests/sparse_parity.rs`. All steps stay allocation-free in both
-//! backends, including the γ-fused APC tail `x_i ← x_i − γ A_iᵀ t`.
+//! the same code runs dense (`O(pn)` blocked kernels), sparse
+//! (`O(nnz_i)` CSR kernels), and §6-whitened (`O(nnz_i + p²)` factored
+//! preconditioning, [`crate::precond::WhitenedCsr`]) — backend parity is
+//! pinned by `tests/sparse_parity.rs` and `tests/precond_parity.rs`. All
+//! steps stay allocation-free in every backend, including the γ-fused
+//! APC tail `x_i ← x_i − γ A_iᵀ t` (the whitened backend stages through
+//! a thread-local `O(p)` buffer sized on first use).
 
 use crate::linalg::Cholesky;
 use crate::partition::MachineBlock;

@@ -30,7 +30,7 @@ pub fn tuned_solver(
         "hbm" => Box::new(Hbm::auto_with_spectral(sys, s)),
         "cimmino" => Box::new(Cimmino::auto_with_spectral(sys, s)),
         "admm" => Box::new(Admm::auto_with_spectral(sys, s)?),
-        "phbm" => Box::new(Phbm::auto(sys)?),
+        "phbm" => Box::new(Phbm::auto_with_spectral(sys, s)?),
         other => bail!("unknown solver {:?} (expected one of {:?})", other, ALL),
     })
 }

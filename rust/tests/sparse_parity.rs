@@ -94,8 +94,8 @@ fn parity_survives_banded_structure() {
 #[test]
 fn sparse_backend_converges_with_spectral_tuning() {
     // Not just parity: the sparse backend carries a full auto-tuned solve
-    // to the planted solution (SpectralInfo runs its power iterations
-    // through the CSR projections).
+    // to the planted solution (SpectralInfo accumulates X and AᵀA through
+    // the CSR projections and gram kernels).
     use apc::solvers::{Metric, SolverOptions};
     let built = SparseProblem::random_sparse(60, 60, 0.15, 5).build(47);
     let sys = PartitionedSystem::split_csr_nnz_balanced(&built.a, &built.b, 5).unwrap();
