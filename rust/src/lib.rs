@@ -28,7 +28,8 @@
 //! * the paper: [`partition`] (dense/CSR/whitened blocks behind
 //!   [`partition::BlockOp`], nnz-balanced sparse splits), [`precond`]
 //!   (§6 preconditioning in factored form — sparse blocks stay sparse),
-//!   [`solvers`], [`rates`]
+//!   [`solvers`] (incl. [`solvers::batch`] — batched multi-RHS solves
+//!   with per-column deflation for the serving workload), [`rates`]
 //! * the system: [`coordinator`] (L3), [`runtime`] (PJRT bridge to the
 //!   L2/L1 artifacts built by `python/compile/`)
 

@@ -6,6 +6,7 @@
 
 use super::dense::Mat;
 use super::kernels::dot;
+use super::multivec::MultiVec;
 use super::vector::axpy;
 use anyhow::{bail, Result};
 
@@ -88,6 +89,49 @@ impl Cholesky {
         }
     }
 
+    /// In-place solve of `A X = B` over an `n × k` column block — the
+    /// shared-factorization step of the batched solvers: the factor is
+    /// computed once per machine block, and all `k` right-hand sides run
+    /// through one pair of triangular sweeps. Both sweeps walk `L`'s
+    /// contiguous rows exactly like [`solve_in_place`](Cholesky::solve_in_place),
+    /// but every elimination touches a `k`-wide lane slice (contiguous in
+    /// the row-major [`MultiVec`]) instead of a scalar. Zero alloc.
+    pub fn solve_multi_in_place(&self, x: &mut MultiVec) {
+        let n = self.order();
+        assert_eq!(x.len(), n, "cholesky multi solve: dimension mismatch");
+        let k = x.width();
+        if k == 0 {
+            return;
+        }
+        let data = x.as_mut_slice();
+        // forward: L Y = B — row i accumulates −L[i,j]·row_j, then /L_ii
+        for i in 0..n {
+            let row = self.l.row(i);
+            let (head, tail) = data.split_at_mut(i * k);
+            let xi = &mut tail[..k];
+            for j in 0..i {
+                axpy(-row[j], &head[j * k..(j + 1) * k], xi);
+            }
+            for v in xi.iter_mut() {
+                *v /= row[i];
+            }
+        }
+        // backward: Lᵀ X = Y, column-oriented — once row i is final,
+        // subtract its contribution L[i,j]·row_i from every row j < i
+        for i in (0..n).rev() {
+            let row = self.l.row(i);
+            let (head, tail) = data.split_at_mut(i * k);
+            let xi = &mut tail[..k];
+            for v in xi.iter_mut() {
+                *v /= row[i];
+            }
+            let xi = &tail[..k];
+            for j in 0..i {
+                axpy(-row[j], xi, &mut head[j * k..(j + 1) * k]);
+            }
+        }
+    }
+
     /// Explicit inverse `A⁻¹` (solve against the identity, column by
     /// column). Used only at setup time to bake worker-side operands for
     /// the HLO artifacts; never on the per-iteration path.
@@ -147,6 +191,30 @@ mod tests {
         let b = a.matvec(&xtrue);
         let x = ch.solve(&b);
         assert!(max_abs_diff(&x, &xtrue) < 1e-12);
+    }
+
+    #[test]
+    fn multi_solve_matches_column_loop() {
+        let a = spd3();
+        let ch = Cholesky::new(&a).unwrap();
+        let cols: Vec<Vec<f64>> = vec![
+            vec![1.0, -2.0, 3.0],
+            vec![0.5, 0.0, -1.5],
+            vec![-4.0, 2.5, 0.25],
+            vec![0.0, 0.0, 0.0],
+        ];
+        let mut x = MultiVec::from_columns(&cols);
+        ch.solve_multi_in_place(&mut x);
+        for (j, b) in cols.iter().enumerate() {
+            let expect = ch.solve(b);
+            assert!(
+                max_abs_diff(&x.col(j), &expect) < 1e-12,
+                "multi-solve lane {j} diverged from the single solve"
+            );
+        }
+        // zero-width block is a no-op, not a panic
+        let mut empty = MultiVec::zeros(3, 0);
+        ch.solve_multi_in_place(&mut empty);
     }
 
     #[test]

@@ -8,6 +8,7 @@
 //! trans-matvec / SYRK stream 4 rows per pass).
 
 use super::kernels;
+use super::multivec::MultiVec;
 use std::fmt;
 
 /// Dense row-major f64 matrix.
@@ -147,33 +148,70 @@ impl Mat {
         kernels::tr_matvec_axpy(&self.data, self.rows, self.cols, x, alpha, y);
     }
 
-    /// Matrix product `A·B`. Blocked i-k-j loop order (row-major friendly).
+    /// `Y = A X` over an `n×k` column block (the batched multi-RHS
+    /// apply): one streamed pass of `A` and `X` serves all `k` lanes.
+    /// Runs the blocked GEMM kernel ([`kernels::matmat`]); zero alloc.
+    #[inline]
+    pub fn matmat_into(&self, x: &MultiVec, y: &mut MultiVec) {
+        assert_eq!(x.len(), self.cols, "matmat_into: dimension mismatch");
+        assert_eq!(y.len(), self.rows, "matmat_into: output mismatch");
+        assert_eq!(x.width(), y.width(), "matmat_into: width mismatch");
+        kernels::matmat(&self.data, self.rows, self.cols, x.as_slice(), x.width(), y.as_mut_slice());
+    }
+
+    /// `Y = Aᵀ X` over a column block, without forming the transpose.
+    #[inline]
+    pub fn tr_matmat_into(&self, x: &MultiVec, y: &mut MultiVec) {
+        assert_eq!(x.len(), self.rows, "tr_matmat_into: dimension mismatch");
+        assert_eq!(y.len(), self.cols, "tr_matmat_into: output mismatch");
+        assert_eq!(x.width(), y.width(), "tr_matmat_into: width mismatch");
+        kernels::tr_matmat(&self.data, self.rows, self.cols, x.as_slice(), x.width(), y.as_mut_slice());
+    }
+
+    /// `Y += α · Aᵀ X` — the fused multi-RHS accumulate (batched APC tail).
+    #[inline]
+    pub fn tr_matmat_axpy_into(&self, x: &MultiVec, alpha: f64, y: &mut MultiVec) {
+        assert_eq!(x.len(), self.rows, "tr_matmat_axpy_into: dimension mismatch");
+        assert_eq!(y.len(), self.cols, "tr_matmat_axpy_into: output mismatch");
+        assert_eq!(x.width(), y.width(), "tr_matmat_axpy_into: width mismatch");
+        kernels::tr_matmat_axpy(
+            &self.data,
+            self.rows,
+            self.cols,
+            x.as_slice(),
+            x.width(),
+            alpha,
+            y.as_mut_slice(),
+        );
+    }
+
+    /// Matrix product `A·B` through the blocked GEMM kernel
+    /// ([`kernels::matmat`]): `B` is already the row-major `cols × k`
+    /// operand the kernel wants, so all dense hot-path products live in
+    /// one module.
     pub fn matmul(&self, b: &Mat) -> Mat {
         assert_eq!(self.cols, b.rows, "matmul: inner dimension mismatch");
         let mut c = Mat::zeros(self.rows, b.cols);
-        for i in 0..self.rows {
-            let arow = self.row(i);
-            // split borrows: write row i of c while reading rows of b
-            let crow = &mut c.data[i * b.cols..(i + 1) * b.cols];
-            for (k, &aik) in arow.iter().enumerate() {
-                if aik == 0.0 {
-                    continue;
-                }
-                let brow = b.row(k);
-                for j in 0..b.cols {
-                    crow[j] += aik * brow[j];
-                }
-            }
-        }
+        kernels::matmat(&self.data, self.rows, self.cols, &b.data, b.cols, &mut c.data);
         c
     }
 
-    /// Explicit transpose.
+    /// Explicit transpose, tiled: both matrices are walked in `TB × TB`
+    /// blocks so reads and writes each stay within a cache-resident tile
+    /// (the untiled j-major write pattern strides the full row length per
+    /// element, missing on every store once `rows` outgrows the TLB).
     pub fn transpose(&self) -> Mat {
+        const TB: usize = 16;
         let mut t = Mat::zeros(self.cols, self.rows);
-        for i in 0..self.rows {
-            for j in 0..self.cols {
-                t[(j, i)] = self[(i, j)];
+        for i0 in (0..self.rows).step_by(TB) {
+            let i1 = (i0 + TB).min(self.rows);
+            for j0 in (0..self.cols).step_by(TB) {
+                let j1 = (j0 + TB).min(self.cols);
+                for i in i0..i1 {
+                    for j in j0..j1 {
+                        t.data[j * self.rows + i] = self.data[i * self.cols + j];
+                    }
+                }
             }
         }
         t
@@ -400,5 +438,53 @@ mod tests {
     fn transpose_involution() {
         let a = a23();
         assert_eq!(a.transpose().transpose(), a);
+    }
+
+    #[test]
+    fn tiled_transpose_crosses_tile_boundaries() {
+        // shapes straddling the 16-wide tile in each dimension
+        for &(r, c) in &[(1usize, 40usize), (17, 16), (16, 17), (33, 47)] {
+            let a = Mat::from_vec(r, c, (0..r * c).map(|v| v as f64 * 0.5 - 3.0).collect());
+            let t = a.transpose();
+            assert_eq!((t.rows(), t.cols()), (c, r));
+            for i in 0..r {
+                for j in 0..c {
+                    assert_eq!(t[(j, i)], a[(i, j)]);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn matmat_into_matches_column_loop() {
+        let a = a23();
+        let cols: Vec<Vec<f64>> =
+            vec![vec![1.0, 0.0, -1.0], vec![0.5, 2.0, 1.5], vec![-2.0, 0.25, 3.0]];
+        let x = MultiVec::from_columns(&cols);
+        let mut y = MultiVec::zeros(2, 3);
+        a.matmat_into(&x, &mut y);
+        for (j, c) in cols.iter().enumerate() {
+            assert!(max_abs_diff(&y.col(j), &a.matvec(c)) < 1e-14);
+        }
+    }
+
+    #[test]
+    fn tr_matmat_matches_column_loop() {
+        let a = a23();
+        let cols: Vec<Vec<f64>> = vec![vec![2.0, -3.0], vec![0.5, 0.25]];
+        let x = MultiVec::from_columns(&cols);
+        let mut y = MultiVec::zeros(3, 2);
+        a.tr_matmat_into(&x, &mut y);
+        for (j, c) in cols.iter().enumerate() {
+            assert!(max_abs_diff(&y.col(j), &a.tr_matvec(c)) < 1e-14);
+        }
+        // fused axpy against the per-column fused kernel
+        let mut acc = MultiVec::from_columns(&[vec![1.0, 2.0, 3.0], vec![-1.0, 0.0, 1.0]]);
+        let mut expect: Vec<Vec<f64>> = (0..2).map(|j| acc.col(j)).collect();
+        a.tr_matmat_axpy_into(&x, -0.7, &mut acc);
+        for (j, e) in expect.iter_mut().enumerate() {
+            a.tr_matvec_axpy_into(&cols[j], -0.7, e);
+            assert!(max_abs_diff(&acc.col(j), e) < 1e-14);
+        }
     }
 }

@@ -139,6 +139,124 @@ pub fn tr_matvec_axpy(a: &[f64], rows: usize, cols: usize, x: &[f64], alpha: f64
     }
 }
 
+/// `Y = A X` for row-major `a` of shape `rows × cols` and a row-major
+/// column block `x` of shape `cols × k` (`k` RHS lanes); `y` is
+/// `rows × k`, overwritten.
+///
+/// This is the batched (multi-RHS) counterpart of [`matvec`] — and, with
+/// `x` any row-major matrix, the general GEMM behind [`Mat::matmul`]
+/// (`Mat`: [`super::Mat`]). Same 4-row blocking: one pass over the
+/// shared `x` stream feeds four output rows, and each streamed row of
+/// `x` updates all `k` lanes through one contiguous `k`-wide slice — so
+/// serving `k` right-hand sides streams `A` and `X` once, not `k`
+/// times.
+pub fn matmat(a: &[f64], rows: usize, cols: usize, x: &[f64], k: usize, y: &mut [f64]) {
+    assert_eq!(a.len(), rows * cols, "kernels::matmat: matrix size mismatch");
+    assert_eq!(x.len(), cols * k, "kernels::matmat: x size mismatch");
+    assert_eq!(y.len(), rows * k, "kernels::matmat: y size mismatch");
+    y.fill(0.0);
+    if k == 0 {
+        return;
+    }
+    let mut i = 0;
+    while i + MR <= rows {
+        let r0 = row_of(a, i, cols);
+        let r1 = row_of(a, i + 1, cols);
+        let r2 = row_of(a, i + 2, cols);
+        let r3 = row_of(a, i + 3, cols);
+        let block = &mut y[i * k..(i + MR) * k];
+        let (y0, rest) = block.split_at_mut(k);
+        let (y1, rest) = rest.split_at_mut(k);
+        let (y2, y3) = rest.split_at_mut(k);
+        for c in 0..cols {
+            let xr = &x[c * k..(c + 1) * k];
+            let (a0, a1, a2, a3) = (r0[c], r1[c], r2[c], r3[c]);
+            for t in 0..k {
+                let xv = xr[t];
+                y0[t] += a0 * xv;
+                y1[t] += a1 * xv;
+                y2[t] += a2 * xv;
+                y3[t] += a3 * xv;
+            }
+        }
+        i += MR;
+    }
+    while i < rows {
+        let ri = row_of(a, i, cols);
+        let yr = &mut y[i * k..(i + 1) * k];
+        for c in 0..cols {
+            let xr = &x[c * k..(c + 1) * k];
+            let ac = ri[c];
+            for t in 0..k {
+                yr[t] += ac * xr[t];
+            }
+        }
+        i += 1;
+    }
+}
+
+/// `Y = Aᵀ X` for row-major `a` of shape `rows × cols`; `x` is
+/// `rows × k`, `y` is `cols × k`, overwritten. Batched counterpart of
+/// [`tr_matvec`].
+pub fn tr_matmat(a: &[f64], rows: usize, cols: usize, x: &[f64], k: usize, y: &mut [f64]) {
+    assert_eq!(y.len(), cols * k, "kernels::tr_matmat: y size mismatch");
+    y.fill(0.0);
+    tr_matmat_axpy(a, rows, cols, x, k, 1.0, y);
+}
+
+/// `Y += α · Aᵀ X` — fused multi-RHS accumulation, 4 rows folded per
+/// pass over `y`. With `α = −γ` this is the entire tail of the batched
+/// APC step `X_i ← X_i − γ A_iᵀ T` without a temporary, mirroring
+/// [`tr_matvec_axpy`].
+pub fn tr_matmat_axpy(
+    a: &[f64],
+    rows: usize,
+    cols: usize,
+    x: &[f64],
+    k: usize,
+    alpha: f64,
+    y: &mut [f64],
+) {
+    assert_eq!(a.len(), rows * cols, "kernels::tr_matmat_axpy: matrix size mismatch");
+    assert_eq!(x.len(), rows * k, "kernels::tr_matmat_axpy: x size mismatch");
+    assert_eq!(y.len(), cols * k, "kernels::tr_matmat_axpy: y size mismatch");
+    if alpha == 0.0 || k == 0 {
+        return; // exact noop, same contract as the single-vector kernel
+    }
+    let mut i = 0;
+    while i + MR <= rows {
+        let r0 = row_of(a, i, cols);
+        let r1 = row_of(a, i + 1, cols);
+        let r2 = row_of(a, i + 2, cols);
+        let r3 = row_of(a, i + 3, cols);
+        let x0 = &x[i * k..(i + 1) * k];
+        let x1 = &x[(i + 1) * k..(i + 2) * k];
+        let x2 = &x[(i + 2) * k..(i + 3) * k];
+        let x3 = &x[(i + 3) * k..(i + 4) * k];
+        for j in 0..cols {
+            let yr = &mut y[j * k..(j + 1) * k];
+            let (a0, a1, a2, a3) =
+                (alpha * r0[j], alpha * r1[j], alpha * r2[j], alpha * r3[j]);
+            for t in 0..k {
+                yr[t] += a0 * x0[t] + a1 * x1[t] + a2 * x2[t] + a3 * x3[t];
+            }
+        }
+        i += MR;
+    }
+    while i < rows {
+        let ri = row_of(a, i, cols);
+        let xi = &x[i * k..(i + 1) * k];
+        for j in 0..cols {
+            let yr = &mut y[j * k..(j + 1) * k];
+            let aij = alpha * ri[j];
+            for t in 0..k {
+                yr[t] += aij * xi[t];
+            }
+        }
+        i += 1;
+    }
+}
+
 /// `G = A Aᵀ` (SYRK) for row-major `a` of shape `rows × cols`; `g` is the
 /// `rows × rows` output, fully written (both triangles).
 ///
@@ -311,6 +429,96 @@ mod tests {
                 }
             }
         }
+    }
+
+    /// Batch widths exercising the lane loop: single lane, small, odd, wide.
+    const WIDTHS: [usize; 4] = [1, 3, 4, 9];
+
+    #[test]
+    fn matmat_matches_column_loop_of_matvec() {
+        for &(rows, cols) in &SHAPES {
+            for &k in &WIDTHS {
+                let a = filled(rows * cols, 4 + rows as u64 * 31 + cols as u64 + k as u64);
+                let x = filled(cols * k, 81 + k as u64);
+                let mut y = vec![f64::NAN; rows * k];
+                matmat(&a, rows, cols, &x, k, &mut y);
+                for lane in 0..k {
+                    let xcol: Vec<f64> = (0..cols).map(|c| x[c * k + lane]).collect();
+                    let ycol: Vec<f64> = (0..rows).map(|r| y[r * k + lane]).collect();
+                    let expect = naive_matvec(&a, rows, cols, &xcol);
+                    assert!(
+                        max_rel_diff(&ycol, &expect) < 1e-13,
+                        "matmat {}x{} k={} lane {} diverged",
+                        rows,
+                        cols,
+                        k,
+                        lane
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn tr_matmat_matches_column_loop_of_tr_matvec() {
+        for &(rows, cols) in &SHAPES {
+            for &k in &WIDTHS {
+                let a = filled(rows * cols, 5 + rows as u64 * 13 + cols as u64 + k as u64);
+                let x = filled(rows * k, 83 + k as u64);
+                let mut y = vec![f64::NAN; cols * k];
+                tr_matmat(&a, rows, cols, &x, k, &mut y);
+                for lane in 0..k {
+                    let xcol: Vec<f64> = (0..rows).map(|r| x[r * k + lane]).collect();
+                    let ycol: Vec<f64> = (0..cols).map(|c| y[c * k + lane]).collect();
+                    let expect = naive_tr_matvec(&a, rows, cols, &xcol);
+                    assert!(
+                        max_rel_diff(&ycol, &expect) < 1e-13,
+                        "tr_matmat {}x{} k={} lane {} diverged",
+                        rows,
+                        cols,
+                        k,
+                        lane
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn tr_matmat_axpy_accumulates_scaled_lanes() {
+        let (rows, cols, k) = (11, 23, 5);
+        let a = filled(rows * cols, 15);
+        let x = filled(rows * k, 16);
+        let y0 = filled(cols * k, 17);
+        let alpha = -1.37;
+        let mut y = y0.clone();
+        tr_matmat_axpy(&a, rows, cols, &x, k, alpha, &mut y);
+        for lane in 0..k {
+            let xcol: Vec<f64> = (0..rows).map(|r| x[r * k + lane]).collect();
+            let t = naive_tr_matvec(&a, rows, cols, &xcol);
+            for c in 0..cols {
+                let expect = y0[c * k + lane] + alpha * t[c];
+                let got = y[c * k + lane];
+                assert!(
+                    (got - expect).abs() / expect.abs().max(1.0) < 1e-13,
+                    "lane {lane} entry {c}: {got} vs {expect}"
+                );
+            }
+        }
+        // α = 0 must leave y bit-identical
+        let mut y = y0.clone();
+        tr_matmat_axpy(&a, rows, cols, &x, k, 0.0, &mut y);
+        assert_eq!(y, y0);
+    }
+
+    #[test]
+    fn multi_kernels_handle_zero_width() {
+        let (rows, cols) = (6, 10);
+        let a = filled(rows * cols, 19);
+        let mut y: Vec<f64> = vec![];
+        matmat(&a, rows, cols, &[], 0, &mut y);
+        tr_matmat(&a, rows, cols, &[], 0, &mut y);
+        tr_matmat_axpy(&a, rows, cols, &[], 0, 1.0, &mut y);
     }
 
     #[test]

@@ -6,8 +6,11 @@
 //!
 //! * [`Mat`] — row-major dense matrix with matvec / matmul / transpose,
 //! * [`kernels`] — cache-blocked hot-path kernels (4-row matvec, fused
-//!   transpose-matvec accumulation, symmetric SYRK) that `Mat` and
-//!   `Cholesky` forward to,
+//!   transpose-matvec accumulation, symmetric SYRK, and their multi-RHS
+//!   GEMM counterparts) that `Mat` and `Cholesky` forward to,
+//! * [`multivec`] — the `n×k` column block ([`MultiVec`]) the batched
+//!   multi-RHS solve path streams through those GEMM kernels, with
+//!   in-place column deflation,
 //! * [`cholesky`] — SPD factorization, solves, inverse, inverse square root,
 //! * [`qr`] — Householder QR (used for orthogonal sampling + least squares),
 //! * [`lu`] — partial-pivot LU (general solves, determinant sanity),
@@ -29,11 +32,13 @@ pub mod eig;
 pub mod kernels;
 pub mod lanczos;
 pub mod lu;
+pub mod multivec;
 pub mod qr;
 pub mod vector;
 
 pub use cholesky::Cholesky;
 pub use dense::Mat;
+pub use multivec::MultiVec;
 pub use eig::{power_iteration, sym_eigen, SymEigen};
 pub use lanczos::{lanczos_extremes, tridiag_eigenvalues, LanczosEdges};
 pub use lu::Lu;

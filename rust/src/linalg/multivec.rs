@@ -1,0 +1,208 @@
+//! `MultiVec` — an `n × k` column block of `k` right-hand-side "lanes".
+//!
+//! The batched solve path processes `k` right-hand sides per round
+//! through one GEMM/SpMM pass instead of `k` matvecs. `MultiVec` is the
+//! container every batched kernel speaks: `k` vectors of length `n`,
+//! stored **row-major** (`data[r*k + j]` is lane `j` of row `r`), so one
+//! streamed matrix row touches all `k` lanes through one contiguous
+//! `k`-wide slice — the layout the multi-vector kernels in
+//! [`super::kernels`] and the CSR SpMM kernels in [`crate::sparse`]
+//! want.
+//!
+//! Deflation support: when a lane's solve converges, the batched drivers
+//! swap it out of the active block so late rounds shrink their GEMM
+//! width. [`MultiVec::compact_columns`] performs that shrink **in
+//! place** (forward copy, no allocation) — the buffer keeps its original
+//! capacity, so a solver's scratch blocks are sized once at construction
+//! and never reallocate, the same contract as
+//! [`crate::partition::MachineBlock::project_into`].
+
+/// `k` column vectors of length `n`, stored row-major (`n × k`).
+#[derive(Clone, Debug, PartialEq)]
+pub struct MultiVec {
+    n: usize,
+    k: usize,
+    data: Vec<f64>,
+}
+
+impl MultiVec {
+    /// Zero block of `k` vectors of length `n`.
+    pub fn zeros(n: usize, k: usize) -> Self {
+        MultiVec { n, k, data: vec![0.0; n * k] }
+    }
+
+    /// Build from `k` equal-length columns (lane `j` = `cols[j]`).
+    pub fn from_columns(cols: &[Vec<f64>]) -> Self {
+        let k = cols.len();
+        let n = if k == 0 { 0 } else { cols[0].len() };
+        let mut mv = MultiVec::zeros(n, k);
+        for (j, c) in cols.iter().enumerate() {
+            assert_eq!(c.len(), n, "from_columns: ragged columns");
+            mv.set_col(j, c);
+        }
+        mv
+    }
+
+    /// Vector length (`n`).
+    pub fn len(&self) -> usize {
+        self.n
+    }
+
+    /// True when the block holds no rows.
+    pub fn is_empty(&self) -> bool {
+        self.n == 0
+    }
+
+    /// Batch width (`k` — the number of lanes).
+    pub fn width(&self) -> usize {
+        self.k
+    }
+
+    /// Flat row-major storage (`n·k` floats).
+    #[inline]
+    pub fn as_slice(&self) -> &[f64] {
+        &self.data
+    }
+
+    /// Flat mutable storage.
+    #[inline]
+    pub fn as_mut_slice(&mut self) -> &mut [f64] {
+        &mut self.data
+    }
+
+    /// The `k`-wide lane slice of row `r`.
+    #[inline]
+    pub fn row(&self, r: usize) -> &[f64] {
+        &self.data[r * self.k..(r + 1) * self.k]
+    }
+
+    /// Mutable lane slice of row `r`.
+    #[inline]
+    pub fn row_mut(&mut self, r: usize) -> &mut [f64] {
+        &mut self.data[r * self.k..(r + 1) * self.k]
+    }
+
+    /// Copy lane `j` out as a plain vector.
+    pub fn col(&self, j: usize) -> Vec<f64> {
+        let mut out = vec![0.0; self.n];
+        self.col_into(j, &mut out);
+        out
+    }
+
+    /// Gather lane `j` into a caller-provided buffer (strided read).
+    pub fn col_into(&self, j: usize, out: &mut [f64]) {
+        assert!(j < self.k, "col_into: lane {} out of {}", j, self.k);
+        assert_eq!(out.len(), self.n, "col_into: output length mismatch");
+        for (r, o) in out.iter_mut().enumerate() {
+            *o = self.data[r * self.k + j];
+        }
+    }
+
+    /// Scatter a vector into lane `j` (strided write).
+    pub fn set_col(&mut self, j: usize, v: &[f64]) {
+        assert!(j < self.k, "set_col: lane {} out of {}", j, self.k);
+        assert_eq!(v.len(), self.n, "set_col: column length mismatch");
+        for (r, x) in v.iter().enumerate() {
+            self.data[r * self.k + j] = *x;
+        }
+    }
+
+    /// Zero every entry.
+    pub fn fill(&mut self, v: f64) {
+        self.data.fill(v);
+    }
+
+    /// Drop every lane not named in `keep`, **in place** — the deflation
+    /// shrink. `keep` must be strictly increasing lane indices; the
+    /// surviving lanes retain their relative order. Forward row-by-row
+    /// copy: the write index never passes the read index
+    /// (`r·k_new + t ≤ r·k_old + keep[t]`), so no scratch and no
+    /// allocation — the buffer is truncated, keeping its capacity.
+    pub fn compact_columns(&mut self, keep: &[usize]) {
+        let k_new = keep.len();
+        debug_assert!(
+            keep.windows(2).all(|w| w[0] < w[1])
+                && (keep.is_empty() || keep[k_new - 1] < self.k),
+            "compact_columns: keep must be strictly increasing lanes < {}",
+            self.k
+        );
+        if k_new == self.k {
+            return; // keep == 0..k is the only strictly-increasing full set
+        }
+        for r in 0..self.n {
+            for (t, &c) in keep.iter().enumerate() {
+                self.data[r * k_new + t] = self.data[r * self.k + c];
+            }
+        }
+        self.k = k_new;
+        self.data.truncate(self.n * k_new);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample() -> MultiVec {
+        // rows 0..4, lanes carry 10*r + j so every entry is identifiable
+        let cols: Vec<Vec<f64>> =
+            (0..3).map(|j| (0..4).map(|r| (10 * r + j) as f64).collect()).collect();
+        MultiVec::from_columns(&cols)
+    }
+
+    #[test]
+    fn roundtrips_columns() {
+        let mv = sample();
+        assert_eq!((mv.len(), mv.width()), (4, 3));
+        for j in 0..3 {
+            let c = mv.col(j);
+            assert_eq!(c, (0..4).map(|r| (10 * r + j) as f64).collect::<Vec<_>>());
+        }
+        // row-major layout: row r is the k-wide lane slice
+        assert_eq!(mv.row(2), &[20.0, 21.0, 22.0]);
+    }
+
+    #[test]
+    fn set_col_overwrites_one_lane() {
+        let mut mv = sample();
+        mv.set_col(1, &[5.0, 6.0, 7.0, 8.0]);
+        assert_eq!(mv.col(1), vec![5.0, 6.0, 7.0, 8.0]);
+        assert_eq!(mv.col(0), sample().col(0));
+        assert_eq!(mv.col(2), sample().col(2));
+    }
+
+    #[test]
+    fn compact_drops_lanes_in_place() {
+        let mut mv = sample();
+        let cap = mv.data.capacity();
+        mv.compact_columns(&[0, 2]);
+        assert_eq!(mv.width(), 2);
+        assert_eq!(mv.col(0), sample().col(0));
+        assert_eq!(mv.col(1), sample().col(2));
+        assert_eq!(mv.data.capacity(), cap, "compaction must not reallocate");
+        // compact again to a single lane
+        mv.compact_columns(&[1]);
+        assert_eq!(mv.width(), 1);
+        assert_eq!(mv.col(0), sample().col(2));
+        // identity compaction is a no-op
+        let before = mv.clone();
+        mv.compact_columns(&[0]);
+        assert_eq!(mv, before);
+    }
+
+    #[test]
+    fn compact_to_empty() {
+        let mut mv = sample();
+        mv.compact_columns(&[]);
+        assert_eq!(mv.width(), 0);
+        assert_eq!(mv.as_slice().len(), 0);
+    }
+
+    #[test]
+    fn col_into_gathers_strided() {
+        let mv = sample();
+        let mut out = vec![0.0; 4];
+        mv.col_into(2, &mut out);
+        assert_eq!(out, vec![2.0, 12.0, 22.0, 32.0]);
+    }
+}

@@ -19,7 +19,7 @@
 //! for the slowest machine, so per-machine *nnz* balance (not row-count
 //! balance) is what balances wall-clock.
 
-use crate::linalg::{sym_eigen, Cholesky, Mat};
+use crate::linalg::{sym_eigen, Cholesky, Mat, MultiVec};
 use crate::precond::{Preconditioner, WhitenedCsr};
 use crate::sparse::{Csr, CsrBlock};
 use anyhow::{bail, Context, Result};
@@ -155,6 +155,53 @@ impl BlockOp {
         }
     }
 
+    /// `Y = A X` over an `n×k` column block (row-major `x`: `n×k`, `y`:
+    /// `p×k`) — the batched multi-RHS apply. Dense blocks run the
+    /// blocked GEMM, CSR blocks the SpMM that streams each row once
+    /// across all `k` lanes, whitened blocks the staged composition.
+    /// Allocation-free in every backend.
+    #[inline]
+    pub fn matmat_into(&self, x: &MultiVec, y: &mut MultiVec) {
+        debug_assert_eq!(x.len(), self.cols(), "matmat_into: dimension mismatch");
+        debug_assert_eq!(y.len(), self.rows(), "matmat_into: output mismatch");
+        assert_eq!(x.width(), y.width(), "matmat_into: width mismatch");
+        match self {
+            BlockOp::Dense(a) => a.matmat_into(x, y),
+            BlockOp::Sparse(a) => a.matmat_into(x.as_slice(), x.width(), y.as_mut_slice()),
+            BlockOp::Whitened(a) => a.matmat_into(x.as_slice(), x.width(), y.as_mut_slice()),
+        }
+    }
+
+    /// `Y = Aᵀ X` over a `p×k` block, allocation-free in every backend.
+    #[inline]
+    pub fn tr_matmat_into(&self, x: &MultiVec, y: &mut MultiVec) {
+        debug_assert_eq!(x.len(), self.rows(), "tr_matmat_into: dimension mismatch");
+        debug_assert_eq!(y.len(), self.cols(), "tr_matmat_into: output mismatch");
+        assert_eq!(x.width(), y.width(), "tr_matmat_into: width mismatch");
+        match self {
+            BlockOp::Dense(a) => a.tr_matmat_into(x, y),
+            BlockOp::Sparse(a) => a.tr_matmat_into(x.as_slice(), x.width(), y.as_mut_slice()),
+            BlockOp::Whitened(a) => a.tr_matmat_into(x.as_slice(), x.width(), y.as_mut_slice()),
+        }
+    }
+
+    /// `Y += α · Aᵀ X` — the fused tail of the batched APC worker step.
+    #[inline]
+    pub fn tr_matmat_axpy_into(&self, x: &MultiVec, alpha: f64, y: &mut MultiVec) {
+        debug_assert_eq!(x.len(), self.rows(), "tr_matmat_axpy_into: dimension mismatch");
+        debug_assert_eq!(y.len(), self.cols(), "tr_matmat_axpy_into: output mismatch");
+        assert_eq!(x.width(), y.width(), "tr_matmat_axpy_into: width mismatch");
+        match self {
+            BlockOp::Dense(a) => a.tr_matmat_axpy_into(x, alpha, y),
+            BlockOp::Sparse(a) => {
+                a.tr_matmat_axpy_into(x.as_slice(), x.width(), alpha, y.as_mut_slice())
+            }
+            BlockOp::Whitened(a) => {
+                a.tr_matmat_axpy_into(x.as_slice(), x.width(), alpha, y.as_mut_slice())
+            }
+        }
+    }
+
     /// Row Gram `A Aᵀ` as a dense `p×p` matrix — the factorization input.
     /// Dense blocks run the blocked SYRK; sparse blocks use sorted sparse
     /// row dot-products.
@@ -265,6 +312,38 @@ impl MachineBlock {
         for k in 0..v.len() {
             out[k] = v[k] - out[k];
         }
+    }
+
+    /// Batched nullspace projection: `OUT = V − A_iᵀ (A_iA_iᵀ)⁻¹ A_i V`
+    /// over an `n×k` column block through the one cached Gram factor —
+    /// the multi-RHS counterpart of [`project_into`](MachineBlock::project_into),
+    /// and the reference form of the batched projection (the batched APC
+    /// worker fuses the same sequence with its γ-scaled update to avoid
+    /// an extra `n×k` buffer; any change here must be mirrored in
+    /// [`crate::solvers::local::ApcBatchLocal::step`]).
+    /// `scratch_pk` is a caller-provided `p×k` block (pre-sized at solver
+    /// construction), so the batched hot loop is allocation-free.
+    pub fn project_multi_into(&self, v: &MultiVec, scratch_pk: &mut MultiVec, out: &mut MultiVec) {
+        debug_assert_eq!(scratch_pk.len(), self.p(), "project_multi_into: scratch must be p rows");
+        // T = A_i V
+        self.a.matmat_into(v, scratch_pk);
+        // T ← (A_iA_iᵀ)⁻¹ T — all k lanes through one factor
+        self.gram_chol.solve_multi_in_place(scratch_pk);
+        // OUT = V − A_iᵀ T
+        self.a.tr_matmat_into(scratch_pk, out);
+        for (o, vv) in out.as_mut_slice().iter_mut().zip(v.as_slice()) {
+            *o = vv - *o;
+        }
+    }
+
+    /// Batched pseudoinverse application `A_i⁺ R = A_iᵀ (A_iA_iᵀ)⁻¹ R`
+    /// over a `p×k` block (setup path: the batched feasible starts).
+    pub fn pinv_apply_multi(&self, r: &MultiVec) -> MultiVec {
+        let mut t = r.clone();
+        self.gram_chol.solve_multi_in_place(&mut t);
+        let mut out = MultiVec::zeros(self.n(), r.width());
+        self.a.tr_matmat_into(&t, &mut out);
+        out
     }
 
     /// Dense projector `P_i` (tests/analysis only — `O(pn²)`).
@@ -530,6 +609,22 @@ impl PartitionedSystem {
         x.scaled(0.5)
     }
 
+    /// Replace every block's right-hand side with the matching rows of a
+    /// new global `b` — the cheap piece of re-pointing a solve at a new
+    /// query. The expensive per-block state (operators, cached Gram
+    /// factors) is untouched: only the `b_i` row slices are overwritten
+    /// in place. Used by the column-loop multi-RHS baseline
+    /// ([`crate::solvers::batch::solve_columns_serially`]).
+    pub fn set_rhs(&mut self, b: &[f64]) -> Result<()> {
+        if b.len() != self.n_rows {
+            bail!("set_rhs: rhs has {} rows, system has {}", b.len(), self.n_rows);
+        }
+        for blk in &mut self.blocks {
+            blk.b.copy_from_slice(&b[blk.row0..blk.row1]);
+        }
+        Ok(())
+    }
+
     /// Global residual `‖Ax − b‖ / ‖b‖` evaluated block-wise.
     pub fn relative_residual(&self, x: &[f64]) -> f64 {
         let mut num = 0.0;
@@ -687,6 +782,61 @@ mod tests {
         let mut fast = vec![0.0; 12];
         blk.project_into(&v, &mut scratch, &mut fast);
         assert!(max_abs_diff(&dense, &fast) < 1e-11);
+    }
+
+    #[test]
+    fn project_multi_matches_column_loop_on_every_backend() {
+        // dense, CSR, and whitened blocks all agree lane-by-lane with the
+        // single-vector projection through the same cached factor
+        let built = SparseProblem::random_sparse(24, 16, 0.3, 4).build(7);
+        let dense = built.a.to_dense();
+        let systems = [
+            PartitionedSystem::split_even(&dense, &built.b, 4).unwrap(),
+            PartitionedSystem::split_csr(&built.a, &built.b, 4).unwrap(),
+            PartitionedSystem::split_csr(&built.a, &built.b, 4).unwrap().preconditioned().unwrap(),
+        ];
+        let k = 3;
+        let cols: Vec<Vec<f64>> = (0..k)
+            .map(|j| (0..16).map(|i| ((i * k + j) as f64 * 0.29).sin()).collect())
+            .collect();
+        let v = MultiVec::from_columns(&cols);
+        for sys in &systems {
+            for blk in &sys.blocks {
+                let mut scratch = MultiVec::zeros(blk.p(), k);
+                let mut out = MultiVec::zeros(16, k);
+                blk.project_multi_into(&v, &mut scratch, &mut out);
+                let mut s1 = vec![0.0; blk.p()];
+                let mut o1 = vec![0.0; 16];
+                for (j, c) in cols.iter().enumerate() {
+                    blk.project_into(c, &mut s1, &mut o1);
+                    assert!(
+                        max_abs_diff(&out.col(j), &o1) < 1e-12,
+                        "machine {} lane {} diverged",
+                        blk.index,
+                        j
+                    );
+                }
+                // batched pinv matches the single-vector pinv
+                let r = MultiVec::from_columns(
+                    &(0..k).map(|j| (0..blk.p()).map(|i| (i + j) as f64 * 0.1).collect()).collect::<Vec<_>>(),
+                );
+                let pm = blk.pinv_apply_multi(&r);
+                for j in 0..k {
+                    assert!(max_abs_diff(&pm.col(j), &blk.pinv_apply(&r.col(j))) < 1e-12);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn set_rhs_repoints_blocks_without_touching_operators() {
+        let (a, b) = small_system();
+        let mut sys = PartitionedSystem::split_even(&a, &b, 4).unwrap();
+        let b2: Vec<f64> = (0..24).map(|i| (i as f64 * 0.17).cos()).collect();
+        sys.set_rhs(&b2).unwrap();
+        assert_eq!(sys.assemble_b(), b2);
+        assert_eq!(sys.assemble_a(), a, "operators must be untouched");
+        assert!(sys.set_rhs(&vec![0.0; 23]).is_err());
     }
 
     #[test]

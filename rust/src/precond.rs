@@ -29,7 +29,7 @@
 //! (`tests/precond_parity.rs` pins it against the explicit dense
 //! `(A_iA_iᵀ)^{-1/2} A_i` reference to ≤ 1e-10).
 
-use crate::linalg::{sym_eigen, Mat};
+use crate::linalg::{kernels, sym_eigen, Mat};
 use crate::sparse::CsrBlock;
 use anyhow::{Context, Result};
 use std::cell::RefCell;
@@ -44,14 +44,15 @@ thread_local! {
     static STAGE: RefCell<Vec<f64>> = RefCell::new(Vec::new());
 }
 
-/// Run `f` with a `p`-sized slice of this thread's staging buffer.
-fn with_stage<R>(p: usize, f: impl FnOnce(&mut [f64]) -> R) -> R {
+/// Run `f` with a `len`-sized slice of this thread's staging buffer
+/// (`p` for the single-vector kernels, `p·k` for the batched ones).
+fn with_stage<R>(len: usize, f: impl FnOnce(&mut [f64]) -> R) -> R {
     STAGE.with(|s| {
         let mut buf = s.borrow_mut();
-        if buf.len() < p {
-            buf.resize(p, 0.0);
+        if buf.len() < len {
+            buf.resize(len, 0.0);
         }
-        f(&mut buf[..p])
+        f(&mut buf[..len])
     })
 }
 
@@ -99,6 +100,13 @@ impl Preconditioner {
     /// `W v` (allocating convenience; the rhs transform `d_i = W b_i`).
     pub fn apply(&self, v: &[f64]) -> Vec<f64> {
         self.w.matvec(v)
+    }
+
+    /// `OUT = W V` over a row-major `p × k` column block — the batched
+    /// whitening apply, one blocked GEMM over the cached `W`.
+    #[inline]
+    pub fn apply_multi_into(&self, v: &[f64], k: usize, out: &mut [f64]) {
+        kernels::matmat(self.w.as_slice(), self.p(), self.p(), v, k, out);
     }
 }
 
@@ -191,6 +199,33 @@ impl WhitenedCsr {
         });
     }
 
+    /// `Y = C X = W (A X)` over a `n × k` column block — the batched
+    /// whitened apply: CSR SpMM into the thread-local `p×k` stage, then
+    /// one `p×p` GEMM. Allocation-free after each thread's first call at
+    /// a given width, same contract as the single-vector kernels.
+    pub fn matmat_into(&self, x: &[f64], k: usize, y: &mut [f64]) {
+        with_stage(self.rows() * k, |t| {
+            self.a.matmat_into(x, k, t);
+            self.pre.apply_multi_into(t, k, y);
+        });
+    }
+
+    /// `Y = Cᵀ X = Aᵀ (W X)` over a `p × k` block (`W` is symmetric).
+    pub fn tr_matmat_into(&self, x: &[f64], k: usize, y: &mut [f64]) {
+        with_stage(self.rows() * k, |t| {
+            self.pre.apply_multi_into(x, k, t);
+            self.a.tr_matmat_into(t, k, y);
+        });
+    }
+
+    /// `Y += α · Cᵀ X` — the fused batched APC-tail accumulation.
+    pub fn tr_matmat_axpy_into(&self, x: &[f64], k: usize, alpha: f64, y: &mut [f64]) {
+        with_stage(self.rows() * k, |t| {
+            self.pre.apply_multi_into(x, k, t);
+            self.a.tr_matmat_axpy_into(t, k, alpha, y);
+        });
+    }
+
     /// Row Gram `C Cᵀ = W G W` as a dense `p×p` — identity up to the
     /// eigensolve's rounding. Computed numerically (two `p×p` matmuls,
     /// setup path) rather than returned as an exact `I` so a badly
@@ -265,6 +300,39 @@ mod tests {
         w.tr_matvec_axpy_into(&r, -0.37, &mut acc);
         explicit.tr_matvec_axpy_into(&r, -0.37, &mut expect);
         assert!(max_abs_diff(&acc, &expect) < 1e-12);
+    }
+
+    #[test]
+    fn whitened_multi_kernels_match_column_loop() {
+        let w = WhitenedCsr::from_csr(sample_block()).unwrap();
+        let k = 3;
+        let x: Vec<f64> = (0..16 * k).map(|i| (i as f64 * 0.23).sin()).collect();
+        let mut y = vec![f64::NAN; 6 * k];
+        w.matmat_into(&x, k, &mut y);
+        for lane in 0..k {
+            let xcol: Vec<f64> = (0..16).map(|r| x[r * k + lane]).collect();
+            let mut expect = vec![0.0; 6];
+            w.matvec_into(&xcol, &mut expect);
+            let ycol: Vec<f64> = (0..6).map(|r| y[r * k + lane]).collect();
+            assert!(max_abs_diff(&ycol, &expect) < 1e-12, "matmat lane {lane}");
+        }
+        let xt: Vec<f64> = (0..6 * k).map(|i| (i as f64 * 0.41).cos()).collect();
+        let mut yt = vec![f64::NAN; 16 * k];
+        w.tr_matmat_into(&xt, k, &mut yt);
+        let mut acc: Vec<f64> = (0..16 * k).map(|i| 0.05 * i as f64).collect();
+        let acc0 = acc.clone();
+        w.tr_matmat_axpy_into(&xt, k, -0.37, &mut acc);
+        for lane in 0..k {
+            let xcol: Vec<f64> = (0..6).map(|r| xt[r * k + lane]).collect();
+            let mut expect = vec![0.0; 16];
+            w.tr_matvec_into(&xcol, &mut expect);
+            let ycol: Vec<f64> = (0..16).map(|r| yt[r * k + lane]).collect();
+            assert!(max_abs_diff(&ycol, &expect) < 1e-12, "tr_matmat lane {lane}");
+            for r in 0..16 {
+                let want = acc0[r * k + lane] - 0.37 * expect[r];
+                assert!((acc[r * k + lane] - want).abs() < 1e-12, "axpy lane {lane}");
+            }
+        }
     }
 
     #[test]

@@ -12,6 +12,7 @@
 //! ([`FullAdmm`]) for the ablation bench that justifies the paper's
 //! modification.
 
+use super::batch;
 use super::local::AdmmLocal;
 use super::Solver;
 use crate::parallel::{self, SliceCells};
@@ -95,6 +96,29 @@ impl Solver for Admm {
 
     fn reset(&mut self, _sys: &PartitionedSystem) {
         self.xbar.fill(0.0);
+    }
+
+    /// ADMM caches `A_iᵀ b_i` per machine at construction, so a plain
+    /// reset would keep serving the old rhs — rebinding recomputes just
+    /// that cache (the shifted-Gram factor is b-independent and kept).
+    fn rebind(&mut self, sys: &PartitionedSystem) -> Result<()> {
+        for (local, blk) in self.locals.iter_mut().zip(&sys.blocks) {
+            local.rebind(blk);
+        }
+        self.reset(sys);
+        Ok(())
+    }
+
+    /// Batched M-ADMM: all `k` lemma solves per machine through one
+    /// shifted-Gram factor.
+    fn solve_batch(
+        &mut self,
+        sys: &PartitionedSystem,
+        rhs: &[Vec<f64>],
+        opts: &batch::BatchOptions,
+    ) -> Result<batch::BatchReport> {
+        let mut engine = batch::AdmmBatch::new(sys, rhs, self.xi)?;
+        batch::run(&mut engine, sys, rhs, opts, self.name())
     }
 }
 
@@ -180,6 +204,17 @@ impl Solver for FullAdmm {
             v.fill(0.0);
         }
         let _ = sys;
+    }
+
+    /// Same cached-`A_iᵀb_i` hazard as the modified variant: recompute
+    /// the per-machine rhs cache so the column loop serves the current
+    /// `b`, keeping the b-independent shifted-Gram factors.
+    fn rebind(&mut self, sys: &PartitionedSystem) -> Result<()> {
+        for (local, blk) in self.locals.iter_mut().zip(&sys.blocks) {
+            local.rebind(blk);
+        }
+        self.reset(sys);
+        Ok(())
     }
 }
 

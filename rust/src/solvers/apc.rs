@@ -1,6 +1,7 @@
 //! Accelerated Projection-based Consensus — Algorithm 1, the paper's
 //! contribution.
 
+use super::batch;
 use super::local::{master_momentum_average, ApcLocal};
 use super::Solver;
 use crate::parallel::{self, SliceCells};
@@ -117,6 +118,18 @@ impl Solver for Apc {
             *local = ApcLocal::new(blk, self.gamma).expect("reset of a previously valid block");
         }
         self.init_xbar(sys);
+    }
+
+    /// Batched Algorithm 1: one GEMM machine phase per round over all
+    /// `k` lanes, the cached Gram factors shared across the batch.
+    fn solve_batch(
+        &mut self,
+        sys: &PartitionedSystem,
+        rhs: &[Vec<f64>],
+        opts: &batch::BatchOptions,
+    ) -> Result<batch::BatchReport> {
+        let mut engine = batch::ApcBatch::new(sys, rhs, self.gamma, self.eta)?;
+        batch::run(&mut engine, sys, rhs, opts, self.name())
     }
 }
 

@@ -1,0 +1,798 @@
+//! Batched multi-RHS solves — the serving mode of the paper's setting.
+//!
+//! The taskmaster owns one partitioned system `[A_i, b_i]`; a serving
+//! deployment answers a *stream* of queries against the same `A`, one
+//! right-hand side each. Running the single-RHS solvers `k` times pays
+//! `k×` the memory traffic of streaming every `A_i`, `k×` the thread-pool
+//! barrier synchronization per round, and re-derives nothing from the
+//! cached per-block Gram factors. This module batches the `k` solves:
+//!
+//! * every per-machine kernel becomes one GEMM/SpMM pass over an `n×k`
+//!   [`MultiVec`] column block (multi-vector kernels in
+//!   [`crate::linalg::kernels`] / [`crate::sparse`]), turning `k`
+//!   memory-bound matvecs into one compute-bound pass;
+//! * the one cached Cholesky factor per block serves all `k` lanes via
+//!   multi-column triangular solves — the factorization is computed once
+//!   per block, never per query;
+//! * one [`parallel::machine_phase`] dispatch per round covers the whole
+//!   batch, amortizing the barrier `k×`;
+//! * **deflation**: per-column convergence is tracked every round, and
+//!   converged columns are compacted out of the active block
+//!   ([`MultiVec::compact_columns`], in place, no allocation), so late
+//!   rounds shrink their GEMM width instead of wasting flops on lanes
+//!   that already finished.
+//!
+//! [`run`] is the shared driver: it owns convergence tracking, deflation
+//! bookkeeping, per-column histories, and the final [`BatchReport`]; the
+//! solver-specific state lives in a [`BatchEngine`] (one per method:
+//! [`ApcBatch`], [`CimminoBatch`], [`GradBatch`] for DGD/D-NAG/D-HBM,
+//! [`AdmmBatch`]). [`Solver::solve_batch`] dispatches here; its default
+//! implementation is the column-loop baseline
+//! ([`solve_columns_serially`]) the batched path is benchmarked against
+//! (`benches/batch_throughput.rs`). Column `j` of every batched
+//! trajectory is pinned against the corresponding single-RHS run by
+//! `tests/batch_parity.rs`.
+//!
+//! All engine hot paths are allocation-free per round: every scratch
+//! block is sized at construction (the `project_into` contract), and
+//! deflation truncates in place.
+
+use super::local::{
+    master_momentum_average, AdmmBatchLocal, ApcBatchLocal, CimminoBatchLocal, GradBatchLocal,
+};
+use super::Solver;
+use crate::linalg::vector::relative_error;
+use crate::linalg::MultiVec;
+use crate::parallel::{self, SliceCells};
+use crate::partition::{MachineBlock, PartitionedSystem};
+use crate::solvers::{Metric, SolverOptions};
+use anyhow::{bail, Context, Result};
+
+/// Stopping metric for a batched solve, evaluated per column.
+#[derive(Clone, Debug)]
+pub enum BatchMetric {
+    /// Per-column relative residual `‖A x_j − b_j‖/‖b_j‖` against the
+    /// **original** system (practical stopping rule; what a serving
+    /// deployment uses).
+    Residual,
+    /// Per-column relative error against known solutions, one truth per
+    /// RHS column (parity tests and benches with planted solutions).
+    ErrorVsTruth(Vec<Vec<f64>>),
+}
+
+/// Options controlling a [`Solver::solve_batch`] run. `max_iter`, `tol`
+/// and `record_every` mean exactly what they mean on [`SolverOptions`],
+/// applied to each column independently.
+#[derive(Clone, Debug)]
+pub struct BatchOptions {
+    pub max_iter: usize,
+    /// A column deflates when its metric first drops below `tol`.
+    pub tol: f64,
+    pub metric: BatchMetric,
+    /// Record the per-column metric every `record_every` rounds into
+    /// that column's history (0 = no history).
+    pub record_every: usize,
+}
+
+impl Default for BatchOptions {
+    fn default() -> Self {
+        BatchOptions { max_iter: 50_000, tol: 1e-8, metric: BatchMetric::Residual, record_every: 0 }
+    }
+}
+
+/// Outcome of one column of a batched solve — the same fields a
+/// single-RHS [`super::SolveReport`] carries, so column `j` of a batch is
+/// directly comparable to the standalone solve of rhs `j`.
+#[derive(Clone, Debug)]
+pub struct ColumnReport {
+    /// Rounds this column ran before deflating (or the driver stopped).
+    pub iterations: usize,
+    pub converged: bool,
+    pub final_error: f64,
+    /// `(round, metric)` samples when `record_every > 0`.
+    pub history: Vec<(usize, f64)>,
+    /// The column's solution at deflation (frozen — later rounds no
+    /// longer touch it) or at exit.
+    pub solution: Vec<f64>,
+}
+
+/// Outcome of a batched solve.
+#[derive(Clone, Debug)]
+pub struct BatchReport {
+    pub solver: &'static str,
+    /// Synchronous rounds the batch executed (= the slowest column's
+    /// iteration count). For the column-loop baseline this is instead the
+    /// **sum** of per-column iterations — the machine-phase dispatch
+    /// count the batched path amortizes.
+    pub rounds: usize,
+    /// Per-column outcomes, in the caller's RHS order.
+    pub columns: Vec<ColumnReport>,
+}
+
+/// Every RHS column must span the system's rows (engine constructors
+/// check this before slicing per-machine blocks).
+fn check_rhs(sys: &PartitionedSystem, rhs: &[Vec<f64>]) -> Result<()> {
+    for (j, col) in rhs.iter().enumerate() {
+        if col.len() != sys.n_rows {
+            bail!("batch rhs column {} has {} rows, system has {}", j, col.len(), sys.n_rows);
+        }
+    }
+    Ok(())
+}
+
+/// Check the batch inputs: every RHS column must span the system's rows,
+/// and an `ErrorVsTruth` metric must carry one `n`-sized truth per column.
+pub fn validate_batch(
+    sys: &PartitionedSystem,
+    rhs: &[Vec<f64>],
+    metric: &BatchMetric,
+) -> Result<()> {
+    check_rhs(sys, rhs)?;
+    if let BatchMetric::ErrorVsTruth(truths) = metric {
+        if truths.len() != rhs.len() {
+            bail!("batch metric carries {} truths for {} rhs columns", truths.len(), rhs.len());
+        }
+        for (j, t) in truths.iter().enumerate() {
+            if t.len() != sys.n {
+                bail!("batch truth {} has {} entries, system has n = {}", j, t.len(), sys.n);
+            }
+        }
+    }
+    Ok(())
+}
+
+/// Slice machine `blk`'s rows out of the `k` global RHS columns into its
+/// `p×k` per-machine RHS block.
+pub fn block_rhs(blk: &MachineBlock, rhs: &[Vec<f64>]) -> MultiVec {
+    let k = rhs.len();
+    let mut mv = MultiVec::zeros(blk.p(), k);
+    for r in 0..blk.p() {
+        let row = mv.row_mut(r);
+        for (j, col) in rhs.iter().enumerate() {
+            row[j] = col[blk.row0 + r];
+        }
+    }
+    mv
+}
+
+/// A method's batched iteration state: the master's `n×k_active` estimate
+/// block, one synchronous round over the whole batch, and the in-place
+/// deflation shrink. The driver ([`run`]) owns everything else.
+pub trait BatchEngine {
+    /// Current master estimate block (one lane per active column).
+    fn xbar(&self) -> &MultiVec;
+    /// Advance one synchronous round: one machine phase over the pool
+    /// covering every active lane, then the master fold.
+    fn round(&mut self);
+    /// Drop every lane not in `keep` (strictly increasing active-lane
+    /// indices) from all state, in place.
+    fn deflate(&mut self, keep: &[usize]);
+}
+
+/// The shared batched-solve driver: evaluates the per-column metric every
+/// round (the cadence [`Solver::solve`] uses), freezes and deflates
+/// converged columns, and assembles the per-column reports.
+///
+/// `metric_sys`/`rhs` are the **original** system and right-hand sides —
+/// engines that iterate a transformed system (P-HBM) still converge
+/// against the untransformed residual, exactly like their single-RHS
+/// counterparts.
+pub fn run<E: BatchEngine>(
+    engine: &mut E,
+    metric_sys: &PartitionedSystem,
+    rhs: &[Vec<f64>],
+    opts: &BatchOptions,
+    solver: &'static str,
+) -> Result<BatchReport> {
+    validate_batch(metric_sys, rhs, &opts.metric)?;
+    let n = metric_sys.n;
+    let k = rhs.len();
+    let mut columns: Vec<ColumnReport> = (0..k)
+        .map(|_| ColumnReport {
+            iterations: 0,
+            converged: false,
+            final_error: f64::NAN,
+            history: Vec::new(),
+            solution: vec![0.0; n],
+        })
+        .collect();
+    if k == 0 {
+        return Ok(BatchReport { solver, rounds: 0, columns });
+    }
+    // lane → original column map; compacted alongside the engine state
+    let mut active: Vec<usize> = (0..k).collect();
+    // ‖b_j‖² per original column (constant across rounds)
+    let dens: Vec<f64> = rhs.iter().map(|c| c.iter().map(|v| v * v).sum()).collect();
+    // pre-sized metric scratch: one p×k block per machine, deflated with
+    // the engine so the evaluation loop never allocates either (only the
+    // residual metric streams A·X̄; ErrorVsTruth needs no block scratch)
+    let mut scratches: Vec<MultiVec> = match &opts.metric {
+        BatchMetric::Residual => {
+            metric_sys.blocks.iter().map(|b| MultiVec::zeros(b.p(), k)).collect()
+        }
+        BatchMetric::ErrorVsTruth(_) => Vec::new(),
+    };
+    let mut col_buf = vec![0.0; n];
+    let mut errs = vec![0.0; k];
+    let mut round = 0usize;
+    loop {
+        evaluate(engine.xbar(), metric_sys, rhs, &active, opts, &dens, &mut scratches, &mut col_buf, &mut errs);
+        for (lane, &col) in active.iter().enumerate() {
+            let e = errs[lane];
+            columns[col].final_error = e;
+            if opts.record_every > 0 && (round == 0 || round % opts.record_every == 0) {
+                columns[col].history.push((round, e));
+            }
+        }
+        // a lane keeps iterating while its error is finite and above tol
+        // (the Solver::solve loop condition, per column)
+        let keeps = |e: f64| e.is_finite() && e > opts.tol;
+        let keep: Vec<usize> = (0..active.len()).filter(|&l| keeps(errs[l])).collect();
+        // freeze the lanes stopping here, while their columns still exist
+        for (lane, &col) in active.iter().enumerate() {
+            if !keeps(errs[lane]) {
+                columns[col].iterations = round;
+                columns[col].converged = errs[lane] <= opts.tol;
+                engine.xbar().col_into(lane, &mut columns[col].solution);
+            }
+        }
+        if keep.is_empty() {
+            break;
+        }
+        if round >= opts.max_iter {
+            for &lane in &keep {
+                let col = active[lane];
+                columns[col].iterations = round;
+                columns[col].converged = false;
+                engine.xbar().col_into(lane, &mut columns[col].solution);
+            }
+            break;
+        }
+        if keep.len() < active.len() {
+            engine.deflate(&keep);
+            for s in &mut scratches {
+                s.compact_columns(&keep);
+            }
+            active = keep.iter().map(|&l| active[l]).collect();
+        }
+        engine.round();
+        round += 1;
+    }
+    Ok(BatchReport { solver, rounds: round, columns })
+}
+
+/// Per-active-lane metric into `errs[..active.len()]`.
+#[allow(clippy::too_many_arguments)] // driver-internal plumbing, one call site
+fn evaluate(
+    xbar: &MultiVec,
+    sys: &PartitionedSystem,
+    rhs: &[Vec<f64>],
+    active: &[usize],
+    opts: &BatchOptions,
+    dens: &[f64],
+    scratches: &mut [MultiVec],
+    col_buf: &mut [f64],
+    errs: &mut [f64],
+) {
+    let ka = active.len();
+    match &opts.metric {
+        BatchMetric::Residual => {
+            errs[..ka].fill(0.0); // accumulate ‖A x_j − b_j‖² per lane
+            for (blk, scratch) in sys.blocks.iter().zip(scratches.iter_mut()) {
+                blk.a.matmat_into(xbar, scratch);
+                for r in 0..blk.p() {
+                    let row = scratch.row(r);
+                    for (lane, &col) in active.iter().enumerate() {
+                        let d = row[lane] - rhs[col][blk.row0 + r];
+                        errs[lane] += d * d;
+                    }
+                }
+            }
+            for (lane, &col) in active.iter().enumerate() {
+                let den = dens[col];
+                errs[lane] =
+                    if den == 0.0 { errs[lane].sqrt() } else { (errs[lane] / den).sqrt() };
+            }
+        }
+        BatchMetric::ErrorVsTruth(truths) => {
+            for (lane, &col) in active.iter().enumerate() {
+                xbar.col_into(lane, col_buf);
+                errs[lane] = relative_error(col_buf, &truths[col]);
+            }
+        }
+    }
+}
+
+/// The column-loop baseline — and the [`Solver::solve_batch`] default:
+/// solve the `k` right-hand sides one after another through the
+/// single-RHS path, re-pointing the (cloned-once) system at each column
+/// via [`PartitionedSystem::set_rhs`] + [`Solver::rebind`]. This is what
+/// the batched engines are measured against: it pays `k` separate
+/// machine-phase dispatch streams and `k` passes over every `A_i` per
+/// round-equivalent.
+pub fn solve_columns_serially<S: Solver + ?Sized>(
+    solver: &mut S,
+    sys: &PartitionedSystem,
+    rhs: &[Vec<f64>],
+    opts: &BatchOptions,
+) -> Result<BatchReport> {
+    validate_batch(sys, rhs, &opts.metric)?;
+    let mut work = sys.clone();
+    let mut columns = Vec::with_capacity(rhs.len());
+    let mut rounds = 0usize;
+    for (j, col) in rhs.iter().enumerate() {
+        work.set_rhs(col)?;
+        solver.rebind(&work).with_context(|| format!("column {} rebind", j))?;
+        let single = SolverOptions {
+            max_iter: opts.max_iter,
+            tol: opts.tol,
+            metric: match &opts.metric {
+                BatchMetric::Residual => Metric::Residual,
+                BatchMetric::ErrorVsTruth(ts) => Metric::ErrorVsTruth(ts[j].clone()),
+            },
+            record_every: opts.record_every,
+        };
+        let rep = solver.solve(&work, &single)?;
+        rounds += rep.iterations;
+        columns.push(ColumnReport {
+            iterations: rep.iterations,
+            converged: rep.converged,
+            final_error: rep.final_error,
+            history: rep.history,
+            solution: rep.solution,
+        });
+    }
+    Ok(BatchReport { solver: solver.name(), rounds, columns })
+}
+
+// ---------------------------------------------------------------------------
+// engines
+// ---------------------------------------------------------------------------
+
+/// Batched APC (Algorithm 1 over `k` lanes): per-machine
+/// [`ApcBatchLocal`]s plus the master's `n×k` momentum average. Also
+/// serves the consensus baseline at `γ = η = 1`.
+pub struct ApcBatch<'a> {
+    sys: &'a PartitionedSystem,
+    pub gamma: f64,
+    pub eta: f64,
+    locals: Vec<ApcBatchLocal>,
+    xbar: MultiVec,
+    sum: MultiVec,
+}
+
+impl<'a> ApcBatch<'a> {
+    pub fn new(
+        sys: &'a PartitionedSystem,
+        rhs: &[Vec<f64>],
+        gamma: f64,
+        eta: f64,
+    ) -> Result<Self> {
+        check_rhs(sys, rhs)?;
+        let k = rhs.len();
+        let locals = sys
+            .blocks
+            .iter()
+            .map(|blk| ApcBatchLocal::new(blk, gamma, &block_rhs(blk, rhs)))
+            .collect::<Result<Vec<_>>>()?;
+        let mut xbar = MultiVec::zeros(sys.n, k);
+        // master initialization: average of the per-machine feasible starts
+        for l in &locals {
+            for (s, v) in xbar.as_mut_slice().iter_mut().zip(l.x.as_slice()) {
+                *s += v;
+            }
+        }
+        let m = sys.m() as f64;
+        for v in xbar.as_mut_slice() {
+            *v /= m;
+        }
+        Ok(ApcBatch { sys, gamma, eta, locals, xbar, sum: MultiVec::zeros(sys.n, k) })
+    }
+}
+
+impl BatchEngine for ApcBatch<'_> {
+    fn xbar(&self) -> &MultiVec {
+        &self.xbar
+    }
+
+    fn round(&mut self) {
+        // one machine phase covers every machine × every active lane
+        let blocks = &self.sys.blocks;
+        let xbar = &self.xbar;
+        let locals = SliceCells::new(&mut self.locals);
+        parallel::machine_phase(blocks.len(), |i| {
+            // SAFETY: task i is the phase's only accessor of locals[i]
+            let local = unsafe { locals.index_mut(i) };
+            local.step(&blocks[i], xbar);
+        });
+        // master phase: X̄ ← (η/m) Σ X_i + (1−η) X̄, machine-index order
+        self.sum.fill(0.0);
+        for local in &self.locals {
+            for (s, v) in self.sum.as_mut_slice().iter_mut().zip(local.x.as_slice()) {
+                *s += v;
+            }
+        }
+        master_momentum_average(
+            self.xbar.as_mut_slice(),
+            self.sum.as_slice(),
+            self.sys.m(),
+            self.eta,
+        );
+    }
+
+    fn deflate(&mut self, keep: &[usize]) {
+        for l in &mut self.locals {
+            l.deflate(keep);
+        }
+        self.xbar.compact_columns(keep);
+        self.sum.compact_columns(keep);
+    }
+}
+
+/// Batched block Cimmino: `R_i = A_i⁺(B_i − A_i X̄)`,
+/// `X̄ ← X̄ + ν Σ R_i`, all `k` lanes per pass.
+pub struct CimminoBatch<'a> {
+    sys: &'a PartitionedSystem,
+    pub nu: f64,
+    locals: Vec<CimminoBatchLocal>,
+    rs: Vec<MultiVec>,
+    xbar: MultiVec,
+    sum: MultiVec,
+}
+
+impl<'a> CimminoBatch<'a> {
+    pub fn new(sys: &'a PartitionedSystem, rhs: &[Vec<f64>], nu: f64) -> Result<Self> {
+        check_rhs(sys, rhs)?;
+        let k = rhs.len();
+        let locals = sys
+            .blocks
+            .iter()
+            .map(|blk| CimminoBatchLocal::new(blk, &block_rhs(blk, rhs)))
+            .collect();
+        Ok(CimminoBatch {
+            sys,
+            nu,
+            locals,
+            rs: vec![MultiVec::zeros(sys.n, k); sys.m()],
+            xbar: MultiVec::zeros(sys.n, k),
+            sum: MultiVec::zeros(sys.n, k),
+        })
+    }
+}
+
+impl BatchEngine for CimminoBatch<'_> {
+    fn xbar(&self) -> &MultiVec {
+        &self.xbar
+    }
+
+    fn round(&mut self) {
+        // Jacobi semantics: every machine reads the same broadcast X̄ and
+        // writes only rs[i] (see the single-RHS Cimmino's comment)
+        let blocks = &self.sys.blocks;
+        let xbar = &self.xbar;
+        let locals = SliceCells::new(&mut self.locals);
+        let rs = SliceCells::new(&mut self.rs);
+        parallel::machine_phase(blocks.len(), |i| {
+            // SAFETY: task i is the phase's only accessor of index i
+            let local = unsafe { locals.index_mut(i) };
+            let out = unsafe { rs.index_mut(i) };
+            local.step(&blocks[i], xbar, out);
+        });
+        self.sum.fill(0.0);
+        for r in &self.rs {
+            for (s, ri) in self.sum.as_mut_slice().iter_mut().zip(r.as_slice()) {
+                *s += ri;
+            }
+        }
+        for (x, s) in self.xbar.as_mut_slice().iter_mut().zip(self.sum.as_slice()) {
+            *x += self.nu * s;
+        }
+    }
+
+    fn deflate(&mut self, keep: &[usize]) {
+        for l in &mut self.locals {
+            l.deflate(keep);
+        }
+        for r in &mut self.rs {
+            r.compact_columns(keep);
+        }
+        self.xbar.compact_columns(keep);
+        self.sum.compact_columns(keep);
+    }
+}
+
+/// Master rule of a batched gradient method — which of §4.1–4.3 the
+/// engine runs after the shared partial-gradient machine phase.
+#[derive(Clone, Copy, Debug)]
+pub enum GradRule {
+    /// DGD: `X ← X − α G`.
+    Dgd { alpha: f64 },
+    /// D-HBM: `Z ← β Z + G`, `X ← X − α Z` (P-HBM is this rule over the
+    /// §6-preconditioned system with per-block whitened RHS).
+    Hbm { alpha: f64, beta: f64 },
+    /// D-NAG: `Y⁺ = X − α G`, `X ← (1+β) Y⁺ − β Y`.
+    Nag { alpha: f64, beta: f64 },
+}
+
+/// Batched gradient-family engine (DGD / D-NAG / D-HBM / P-HBM): shared
+/// [`GradBatchLocal`] machine phase, rule-specific master fold.
+pub struct GradBatch<'a> {
+    sys: &'a PartitionedSystem,
+    pub rule: GradRule,
+    locals: Vec<GradBatchLocal>,
+    x: MultiVec,
+    /// `Z` for heavy-ball, `Y` for Nesterov, unused for DGD.
+    aux: MultiVec,
+    grad: MultiVec,
+    partials: Vec<MultiVec>,
+}
+
+impl<'a> GradBatch<'a> {
+    /// RHS columns sliced from the global `rhs` by each block's row range.
+    pub fn new(sys: &'a PartitionedSystem, rhs: &[Vec<f64>], rule: GradRule) -> Result<Self> {
+        check_rhs(sys, rhs)?;
+        let blocks = sys.blocks.iter().map(|blk| block_rhs(blk, rhs)).collect();
+        Self::with_rhs_blocks(sys, blocks, rule)
+    }
+
+    /// Explicit per-machine RHS blocks — the P-HBM path hands the
+    /// §6-whitened `D_i = W_i B_i` here while iterating the transformed
+    /// system.
+    pub fn with_rhs_blocks(
+        sys: &'a PartitionedSystem,
+        rhs_blocks: Vec<MultiVec>,
+        rule: GradRule,
+    ) -> Result<Self> {
+        if rhs_blocks.len() != sys.m() {
+            bail!("grad batch: {} rhs blocks for {} machines", rhs_blocks.len(), sys.m());
+        }
+        let k = rhs_blocks.first().map_or(0, |b| b.width());
+        if rhs_blocks.iter().any(|b| b.width() != k) {
+            bail!("grad batch: rhs blocks disagree on batch width");
+        }
+        let locals = sys
+            .blocks
+            .iter()
+            .zip(&rhs_blocks)
+            .map(|(blk, b)| GradBatchLocal::new(blk, b))
+            .collect();
+        Ok(GradBatch {
+            sys,
+            rule,
+            locals,
+            x: MultiVec::zeros(sys.n, k),
+            aux: MultiVec::zeros(sys.n, k),
+            grad: MultiVec::zeros(sys.n, k),
+            partials: vec![MultiVec::zeros(sys.n, k); sys.m()],
+        })
+    }
+}
+
+impl BatchEngine for GradBatch<'_> {
+    fn xbar(&self) -> &MultiVec {
+        &self.x
+    }
+
+    fn round(&mut self) {
+        let blocks = &self.sys.blocks;
+        let x = &self.x;
+        let locals = SliceCells::new(&mut self.locals);
+        let partials = SliceCells::new(&mut self.partials);
+        parallel::machine_phase(blocks.len(), |i| {
+            // SAFETY: task i is the phase's only accessor of index i
+            let local = unsafe { locals.index_mut(i) };
+            let out = unsafe { partials.index_mut(i) };
+            local.partial_grad(&blocks[i], x, out);
+        });
+        self.grad.fill(0.0);
+        for partial in &self.partials {
+            for (g, p) in self.grad.as_mut_slice().iter_mut().zip(partial.as_slice()) {
+                *g += p;
+            }
+        }
+        let x = self.x.as_mut_slice();
+        let aux = self.aux.as_mut_slice();
+        let grad = self.grad.as_slice();
+        match self.rule {
+            GradRule::Dgd { alpha } => {
+                for (xv, g) in x.iter_mut().zip(grad) {
+                    *xv -= alpha * g;
+                }
+            }
+            GradRule::Hbm { alpha, beta } => {
+                for ((xv, z), g) in x.iter_mut().zip(aux.iter_mut()).zip(grad) {
+                    *z = beta * *z + g;
+                    *xv -= alpha * *z;
+                }
+            }
+            GradRule::Nag { alpha, beta } => {
+                for ((xv, y), g) in x.iter_mut().zip(aux.iter_mut()).zip(grad) {
+                    let y_next = *xv - alpha * g;
+                    *xv = (1.0 + beta) * y_next - beta * *y;
+                    *y = y_next;
+                }
+            }
+        }
+    }
+
+    fn deflate(&mut self, keep: &[usize]) {
+        for l in &mut self.locals {
+            l.deflate(keep);
+        }
+        for p in &mut self.partials {
+            p.compact_columns(keep);
+        }
+        self.x.compact_columns(keep);
+        self.aux.compact_columns(keep);
+        self.grad.compact_columns(keep);
+    }
+}
+
+/// Batched modified ADMM (§4.4, y≡0): lemma solves over all `k` lanes
+/// through one shifted-Gram factor per block, master mean fold.
+pub struct AdmmBatch<'a> {
+    sys: &'a PartitionedSystem,
+    pub xi: f64,
+    locals: Vec<AdmmBatchLocal>,
+    xs: Vec<MultiVec>,
+    xbar: MultiVec,
+    sum: MultiVec,
+}
+
+impl<'a> AdmmBatch<'a> {
+    pub fn new(sys: &'a PartitionedSystem, rhs: &[Vec<f64>], xi: f64) -> Result<Self> {
+        check_rhs(sys, rhs)?;
+        let k = rhs.len();
+        let locals = sys
+            .blocks
+            .iter()
+            .map(|blk| AdmmBatchLocal::new(blk, xi, &block_rhs(blk, rhs)))
+            .collect::<Result<Vec<_>>>()?;
+        Ok(AdmmBatch {
+            sys,
+            xi,
+            locals,
+            xs: vec![MultiVec::zeros(sys.n, k); sys.m()],
+            xbar: MultiVec::zeros(sys.n, k),
+            sum: MultiVec::zeros(sys.n, k),
+        })
+    }
+}
+
+impl BatchEngine for AdmmBatch<'_> {
+    fn xbar(&self) -> &MultiVec {
+        &self.xbar
+    }
+
+    fn round(&mut self) {
+        let blocks = &self.sys.blocks;
+        let xbar = &self.xbar;
+        let locals = SliceCells::new(&mut self.locals);
+        let xs = SliceCells::new(&mut self.xs);
+        parallel::machine_phase(blocks.len(), |i| {
+            // SAFETY: task i is the phase's only accessor of index i
+            let local = unsafe { locals.index_mut(i) };
+            let out = unsafe { xs.index_mut(i) };
+            local.step(&blocks[i], xbar, out);
+        });
+        self.sum.fill(0.0);
+        for x_i in &self.xs {
+            for (s, v) in self.sum.as_mut_slice().iter_mut().zip(x_i.as_slice()) {
+                *s += v;
+            }
+        }
+        let m = self.sys.m() as f64;
+        for (x, s) in self.xbar.as_mut_slice().iter_mut().zip(self.sum.as_slice()) {
+            *x = s / m;
+        }
+    }
+
+    fn deflate(&mut self, keep: &[usize]) {
+        for l in &mut self.locals {
+            l.deflate(keep);
+        }
+        for x in &mut self.xs {
+            x.compact_columns(keep);
+        }
+        self.xbar.compact_columns(keep);
+        self.sum.compact_columns(keep);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gen::problems::Problem;
+    use crate::linalg::vector::max_abs_diff;
+    use crate::solvers::apc::Apc;
+
+    fn sys_and_rhs(k: usize) -> (PartitionedSystem, Vec<Vec<f64>>, Vec<Vec<f64>>) {
+        let p = Problem::standard_gaussian(24, 12, 4).build(117);
+        let sys = PartitionedSystem::split_even(&p.a, &p.b, 4).unwrap();
+        // planted per-column solutions x_j, rhs b_j = A x_j
+        let truths: Vec<Vec<f64>> = (0..k)
+            .map(|j| (0..12).map(|i| ((i * (j + 1)) as f64 * 0.37).sin()).collect())
+            .collect();
+        let rhs: Vec<Vec<f64>> = truths.iter().map(|x| p.a.matvec(x)).collect();
+        (sys, rhs, truths)
+    }
+
+    #[test]
+    fn batched_apc_solves_every_column() {
+        let (sys, rhs, truths) = sys_and_rhs(3);
+        let mut solver = Apc::auto(&sys).unwrap();
+        let opts = BatchOptions { tol: 1e-10, max_iter: 100_000, ..Default::default() };
+        let rep = solver.solve_batch(&sys, &rhs, &opts).unwrap();
+        assert_eq!(rep.columns.len(), 3);
+        for (j, col) in rep.columns.iter().enumerate() {
+            assert!(col.converged, "column {j} err {:.2e}", col.final_error);
+            assert!(
+                max_abs_diff(&col.solution, &truths[j]) < 1e-7,
+                "column {j} solution diverged"
+            );
+        }
+    }
+
+    #[test]
+    fn deflation_freezes_converged_columns() {
+        // distinct per-column rhs converge at different rounds, so the
+        // later assertions exercise the deflation bookkeeping
+        let (sys, rhs, truths) = sys_and_rhs(3);
+        let mut solver = Apc::auto(&sys).unwrap();
+        let opts = BatchOptions {
+            tol: 1e-9,
+            max_iter: 100_000,
+            metric: BatchMetric::ErrorVsTruth(truths.clone()),
+            record_every: 1,
+        };
+        let rep = solver.solve_batch(&sys, &rhs, &opts).unwrap();
+        let its: Vec<usize> = rep.columns.iter().map(|c| c.iterations).collect();
+        assert!(rep.columns.iter().all(|c| c.converged), "iterations {:?}", its);
+        // total rounds = the slowest column's count; every column's
+        // history stops when it deflates
+        assert_eq!(rep.rounds, *its.iter().max().unwrap());
+        for (c, &it) in rep.columns.iter().zip(&its) {
+            assert_eq!(c.history.last().unwrap().0, it);
+            assert!(c.final_error <= 1e-9);
+        }
+    }
+
+    #[test]
+    fn column_loop_baseline_matches_batched_solutions() {
+        let (sys, rhs, _) = sys_and_rhs(2);
+        let opts = BatchOptions { tol: 1e-10, max_iter: 100_000, ..Default::default() };
+        let rep_batch = Apc::auto(&sys).unwrap().solve_batch(&sys, &rhs, &opts).unwrap();
+        let mut solver = Apc::auto(&sys).unwrap();
+        let rep_loop = solve_columns_serially(&mut solver, &sys, &rhs, &opts).unwrap();
+        for (b, l) in rep_batch.columns.iter().zip(&rep_loop.columns) {
+            assert!(b.converged && l.converged);
+            assert!(max_abs_diff(&b.solution, &l.solution) < 1e-8);
+        }
+        // the baseline pays the sum of per-column rounds
+        assert_eq!(
+            rep_loop.rounds,
+            rep_loop.columns.iter().map(|c| c.iterations).sum::<usize>()
+        );
+    }
+
+    #[test]
+    fn validation_rejects_bad_inputs() {
+        let (sys, mut rhs, truths) = sys_and_rhs(2);
+        let mut solver = Apc::auto(&sys).unwrap();
+        let opts = BatchOptions::default();
+        // short rhs column
+        rhs[1].pop();
+        assert!(solver.solve_batch(&sys, &rhs, &opts).is_err());
+        rhs[1].push(0.0);
+        // truth count mismatch
+        let bad = BatchOptions {
+            metric: BatchMetric::ErrorVsTruth(truths[..1].to_vec()),
+            ..Default::default()
+        };
+        assert!(solver.solve_batch(&sys, &rhs, &bad).is_err());
+        // empty batch is a clean no-op
+        let rep = solver.solve_batch(&sys, &[], &opts).unwrap();
+        assert_eq!(rep.columns.len(), 0);
+        assert_eq!(rep.rounds, 0);
+    }
+}

@@ -4,6 +4,7 @@
 //! Proposition 2: this is exactly APC with `γ = 1`, `η = mν` — a fact the
 //! tests verify bit-for-bit against [`crate::solvers::apc::Apc`].
 
+use super::batch;
 use super::local::CimminoLocal;
 use super::Solver;
 use crate::parallel::{self, SliceCells};
@@ -87,6 +88,18 @@ impl Solver for Cimmino {
 
     fn reset(&mut self, _sys: &PartitionedSystem) {
         self.xbar.fill(0.0);
+    }
+
+    /// Batched block Cimmino: all `k` residual projections per machine
+    /// in one pass through the cached Gram factor.
+    fn solve_batch(
+        &mut self,
+        sys: &PartitionedSystem,
+        rhs: &[Vec<f64>],
+        opts: &batch::BatchOptions,
+    ) -> Result<batch::BatchReport> {
+        let mut engine = batch::CimminoBatch::new(sys, rhs, self.nu)?;
+        batch::run(&mut engine, sys, rhs, opts, self.name())
     }
 }
 

@@ -5,6 +5,7 @@
 //! directly accelerates.
 
 use super::apc::Apc;
+use super::batch;
 use super::Solver;
 use crate::partition::PartitionedSystem;
 use anyhow::Result;
@@ -37,6 +38,17 @@ impl Solver for Consensus {
 
     fn reset(&mut self, sys: &PartitionedSystem) {
         self.inner.reset(sys)
+    }
+
+    /// Batched consensus = the batched APC engine pinned to `γ = η = 1`.
+    fn solve_batch(
+        &mut self,
+        sys: &PartitionedSystem,
+        rhs: &[Vec<f64>],
+        opts: &batch::BatchOptions,
+    ) -> Result<batch::BatchReport> {
+        let mut engine = batch::ApcBatch::new(sys, rhs, 1.0, 1.0)?;
+        batch::run(&mut engine, sys, rhs, opts, self.name())
     }
 }
 

@@ -1,6 +1,7 @@
 //! Distributed Gradient Descent (§4.1, Eq. 8):
 //! `x(t+1) = x(t) − α Σ_i A_iᵀ(A_i x(t) − b_i)`.
 
+use super::batch::{self, GradRule};
 use super::local::GradLocal;
 use super::Solver;
 use crate::parallel::{self, SliceCells};
@@ -79,6 +80,17 @@ impl Solver for Dgd {
 
     fn reset(&mut self, _sys: &PartitionedSystem) {
         self.x.fill(0.0);
+    }
+
+    /// Batched DGD: `k` partial gradients per machine in one GEMM pass.
+    fn solve_batch(
+        &mut self,
+        sys: &PartitionedSystem,
+        rhs: &[Vec<f64>],
+        opts: &batch::BatchOptions,
+    ) -> Result<batch::BatchReport> {
+        let mut engine = batch::GradBatch::new(sys, rhs, GradRule::Dgd { alpha: self.alpha })?;
+        batch::run(&mut engine, sys, rhs, opts, self.name())
     }
 }
 

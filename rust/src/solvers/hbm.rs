@@ -5,6 +5,7 @@
 //! The paper's closest competitor to APC: same `√κ` acceleration, but of
 //! `κ(AᵀA)` instead of `κ(X)`.
 
+use super::batch::{self, GradRule};
 use super::local::GradLocal;
 use super::Solver;
 use crate::parallel::{self, SliceCells};
@@ -88,6 +89,19 @@ impl Solver for Hbm {
     fn reset(&mut self, _sys: &PartitionedSystem) {
         self.x.fill(0.0);
         self.z.fill(0.0);
+    }
+
+    /// Batched D-HBM: `k` partial gradients per machine in one GEMM
+    /// pass, momentum folded lane-wise.
+    fn solve_batch(
+        &mut self,
+        sys: &PartitionedSystem,
+        rhs: &[Vec<f64>],
+        opts: &batch::BatchOptions,
+    ) -> Result<batch::BatchReport> {
+        let mut engine =
+            batch::GradBatch::new(sys, rhs, GradRule::Hbm { alpha: self.alpha, beta: self.beta })?;
+        batch::run(&mut engine, sys, rhs, opts, self.name())
     }
 }
 

@@ -15,7 +15,7 @@
 //! APC tail `x_i ← x_i − γ A_iᵀ t` (the whitened backend stages through
 //! a thread-local `O(p)` buffer sized on first use).
 
-use crate::linalg::Cholesky;
+use crate::linalg::{Cholesky, MultiVec};
 use crate::partition::MachineBlock;
 use anyhow::{Context, Result};
 
@@ -59,6 +59,72 @@ impl ApcLocal {
     }
 }
 
+/// Batched APC worker state: `k` per-machine iterates advanced through
+/// **one** pass of the block per round. The Gram Cholesky cached on the
+/// [`MachineBlock`] is computed once per block — never per RHS — and all
+/// `k` lanes run through it via the multi-column triangular solves
+/// ([`Cholesky::solve_multi_in_place`]). Deflation
+/// ([`ApcBatchLocal::deflate`]) shrinks every column block in place, so
+/// late rounds pay GEMM width `k_active`, not `k`.
+#[derive(Clone, Debug)]
+pub struct ApcBatchLocal {
+    pub gamma: f64,
+    /// `X_i ∈ R^{n×k}` — one iterate lane per RHS.
+    pub x: MultiVec,
+    scratch_pk: MultiVec,
+    scratch_nk: MultiVec,
+}
+
+impl ApcBatchLocal {
+    /// Initialize every lane at the feasible min-norm point of
+    /// `A_i x = b_i^{(j)}` — the batched Algorithm-1 start, through the
+    /// cached Gram factor. `rhs` is this machine's `p×k` RHS block.
+    /// Scratch blocks are sized here, once — `step` never allocates.
+    pub fn new(blk: &MachineBlock, gamma: f64, rhs: &MultiVec) -> Result<Self> {
+        assert_eq!(rhs.len(), blk.p(), "apc batch local: rhs block must have p rows");
+        let k = rhs.width();
+        let x = blk.pinv_apply_multi(rhs);
+        Ok(ApcBatchLocal {
+            gamma,
+            x,
+            scratch_pk: MultiVec::zeros(blk.p(), k),
+            scratch_nk: MultiVec::zeros(blk.n(), k),
+        })
+    }
+
+    /// One round over all active lanes:
+    /// `X_i ← X_i + γ P_i (X̄ − X_i)`. Zero allocations.
+    pub fn step(&mut self, blk: &MachineBlock, xbar: &MultiVec) {
+        debug_assert_eq!(self.scratch_pk.len(), blk.p(), "apc batch: scratch/block mismatch");
+        debug_assert_eq!(xbar.width(), self.x.width(), "apc batch: width mismatch");
+        // W = X̄ − X_i (reuse scratch_nk as W)
+        for (w, (xb, xi)) in self
+            .scratch_nk
+            .as_mut_slice()
+            .iter_mut()
+            .zip(xbar.as_slice().iter().zip(self.x.as_slice()))
+        {
+            *w = xb - xi;
+        }
+        // T = (A_iA_iᵀ)⁻¹ A_i W via the one cached factor, all lanes at once
+        blk.a.matmat_into(&self.scratch_nk, &mut self.scratch_pk);
+        blk.gram_chol.solve_multi_in_place(&mut self.scratch_pk);
+        // X_i += γ (W − A_iᵀ T); fold the subtraction into the update
+        for (xi, w) in self.x.as_mut_slice().iter_mut().zip(self.scratch_nk.as_slice()) {
+            *xi += self.gamma * w;
+        }
+        // fused GEMM tail: X_i ← X_i − γ A_iᵀ T, no temporary
+        blk.a.tr_matmat_axpy_into(&self.scratch_pk, -self.gamma, &mut self.x);
+    }
+
+    /// Drop every lane not in `keep` (strictly increasing); in place.
+    pub fn deflate(&mut self, keep: &[usize]) {
+        self.x.compact_columns(keep);
+        self.scratch_pk.compact_columns(keep);
+        self.scratch_nk.compact_columns(keep);
+    }
+}
+
 /// Gradient worker (shared by DGD / D-NAG / D-HBM): computes the partial
 /// gradient `g_i = A_iᵀ(A_i x − b_i)` of `½‖A_i x − b_i‖²`.
 #[derive(Clone, Debug)]
@@ -81,6 +147,39 @@ impl GradLocal {
     }
 }
 
+/// Batched gradient worker (shared by the batched DGD / D-NAG / D-HBM):
+/// `G_i = A_iᵀ(A_i X − B_i)` over all `k` lanes in one block pass. The
+/// per-machine RHS block `B_i` lives here (the single-RHS path reads
+/// `blk.b`; a batch carries one `b` per lane).
+#[derive(Clone, Debug)]
+pub struct GradBatchLocal {
+    /// `B_i ∈ R^{p×k}`.
+    b: MultiVec,
+    scratch_pk: MultiVec,
+}
+
+impl GradBatchLocal {
+    pub fn new(blk: &MachineBlock, rhs: &MultiVec) -> Self {
+        assert_eq!(rhs.len(), blk.p(), "grad batch local: rhs block must have p rows");
+        GradBatchLocal { b: rhs.clone(), scratch_pk: MultiVec::zeros(blk.p(), rhs.width()) }
+    }
+
+    /// `OUT = A_iᵀ(A_i X − B_i)`. Zero allocations.
+    pub fn partial_grad(&mut self, blk: &MachineBlock, x: &MultiVec, out: &mut MultiVec) {
+        blk.a.matmat_into(x, &mut self.scratch_pk);
+        for (r, bi) in self.scratch_pk.as_mut_slice().iter_mut().zip(self.b.as_slice()) {
+            *r -= bi;
+        }
+        blk.a.tr_matmat_into(&self.scratch_pk, out);
+    }
+
+    /// Drop every lane not in `keep` (strictly increasing); in place.
+    pub fn deflate(&mut self, keep: &[usize]) {
+        self.b.compact_columns(keep);
+        self.scratch_pk.compact_columns(keep);
+    }
+}
+
 /// Block-Cimmino worker: `r_i = A_i⁺ (b_i − A_i x̄)`.
 #[derive(Clone, Debug)]
 pub struct CimminoLocal {
@@ -100,6 +199,38 @@ impl CimminoLocal {
         }
         blk.gram_chol.solve_in_place(&mut self.scratch_p);
         blk.a.tr_matvec_into(&self.scratch_p, out);
+    }
+}
+
+/// Batched block-Cimmino worker: `R_i = A_i⁺ (B_i − A_i X̄)` over all
+/// `k` lanes through the one cached Gram factor.
+#[derive(Clone, Debug)]
+pub struct CimminoBatchLocal {
+    /// `B_i ∈ R^{p×k}`.
+    b: MultiVec,
+    scratch_pk: MultiVec,
+}
+
+impl CimminoBatchLocal {
+    pub fn new(blk: &MachineBlock, rhs: &MultiVec) -> Self {
+        assert_eq!(rhs.len(), blk.p(), "cimmino batch local: rhs block must have p rows");
+        CimminoBatchLocal { b: rhs.clone(), scratch_pk: MultiVec::zeros(blk.p(), rhs.width()) }
+    }
+
+    /// `OUT = A_iᵀ (A_iA_iᵀ)⁻¹ (B_i − A_i X̄)`. Zero allocations.
+    pub fn step(&mut self, blk: &MachineBlock, xbar: &MultiVec, out: &mut MultiVec) {
+        blk.a.matmat_into(xbar, &mut self.scratch_pk);
+        for (r, bi) in self.scratch_pk.as_mut_slice().iter_mut().zip(self.b.as_slice()) {
+            *r = bi - *r;
+        }
+        blk.gram_chol.solve_multi_in_place(&mut self.scratch_pk);
+        blk.a.tr_matmat_into(&self.scratch_pk, out);
+    }
+
+    /// Drop every lane not in `keep` (strictly increasing); in place.
+    pub fn deflate(&mut self, keep: &[usize]) {
+        self.b.compact_columns(keep);
+        self.scratch_pk.compact_columns(keep);
     }
 }
 
@@ -138,6 +269,14 @@ impl AdmmLocal {
         })
     }
 
+    /// Re-point at the block's **current** rhs: recompute the cached
+    /// `A_iᵀ b_i`, keeping the shifted-Gram factor — which depends only
+    /// on `A_i` and `ξ` — intact. This is the per-column cost of the
+    /// column-loop baseline (`O(pn)` instead of an `O(p³)` refactor).
+    pub fn rebind(&mut self, blk: &MachineBlock) {
+        self.atb = blk.a.tr_matvec(&blk.b);
+    }
+
     /// `out = (A_iᵀA_i + ξI)⁻¹ (A_iᵀ b_i + ξ x̄)`. Zero allocations.
     pub fn step(&mut self, blk: &MachineBlock, xbar: &[f64], out: &mut [f64]) {
         let n = out.len();
@@ -152,6 +291,69 @@ impl AdmmLocal {
         for k in 0..n {
             out[k] = (self.scratch_n[k] - out[k]) / self.xi;
         }
+    }
+}
+
+/// Batched modified-ADMM worker:
+/// `X_i = (A_iᵀA_i + ξI)⁻¹ (A_iᵀ B_i + ξ X̄)` over all `k` lanes, via
+/// the same matrix-inversion lemma as [`AdmmLocal`]: the `p×p` shifted
+/// Gram `(ξI + A_iA_iᵀ)` is Cholesky-factored **once** per block and
+/// every lane runs through the multi-column solve.
+#[derive(Clone, Debug)]
+pub struct AdmmBatchLocal {
+    pub xi: f64,
+    shifted_gram: Cholesky,
+    /// Cached `A_iᵀ B_i ∈ R^{n×k}`.
+    atb: MultiVec,
+    scratch_pk: MultiVec,
+    scratch_nk: MultiVec,
+}
+
+impl AdmmBatchLocal {
+    pub fn new(blk: &MachineBlock, xi: f64, rhs: &MultiVec) -> Result<Self> {
+        assert_eq!(rhs.len(), blk.p(), "admm batch local: rhs block must have p rows");
+        let k = rhs.width();
+        let mut g = blk.a.gram_rows();
+        for i in 0..g.rows() {
+            g[(i, i)] += xi;
+        }
+        let shifted_gram = Cholesky::new(&g).context("admm batch local: ξI + A_iA_iᵀ not SPD")?;
+        let mut atb = MultiVec::zeros(blk.n(), k);
+        blk.a.tr_matmat_into(rhs, &mut atb);
+        Ok(AdmmBatchLocal {
+            xi,
+            shifted_gram,
+            atb,
+            scratch_pk: MultiVec::zeros(blk.p(), k),
+            scratch_nk: MultiVec::zeros(blk.n(), k),
+        })
+    }
+
+    /// `OUT = (A_iᵀA_i + ξI)⁻¹ (A_iᵀ B_i + ξ X̄)`. Zero allocations.
+    pub fn step(&mut self, blk: &MachineBlock, xbar: &MultiVec, out: &mut MultiVec) {
+        // V = A_iᵀ B_i + ξ X̄
+        for (v, (atb, xb)) in self
+            .scratch_nk
+            .as_mut_slice()
+            .iter_mut()
+            .zip(self.atb.as_slice().iter().zip(xbar.as_slice()))
+        {
+            *v = atb + self.xi * xb;
+        }
+        // lemma: OUT = (V − A_iᵀ (ξI+G)⁻¹ A_i V)/ξ
+        blk.a.matmat_into(&self.scratch_nk, &mut self.scratch_pk);
+        self.shifted_gram.solve_multi_in_place(&mut self.scratch_pk);
+        blk.a.tr_matmat_into(&self.scratch_pk, out);
+        for (o, v) in out.as_mut_slice().iter_mut().zip(self.scratch_nk.as_slice()) {
+            *o = (v - *o) / self.xi;
+        }
+    }
+
+    /// Drop every lane not in `keep` (strictly increasing); in place.
+    pub fn deflate(&mut self, keep: &[usize]) {
+        self.atb.compact_columns(keep);
+        self.scratch_pk.compact_columns(keep);
+        self.scratch_nk.compact_columns(keep);
     }
 }
 
@@ -273,6 +475,134 @@ mod tests {
         a.step(blk, &xbar, &mut out);
         let expect = admm_step_dense(blk, xi, &xbar);
         assert!(max_abs_diff(&out, &expect) < 1e-10);
+    }
+
+    /// `k` per-machine RHS blocks: lane 0 is the block's own `b_i`,
+    /// later lanes deterministic variants.
+    fn rhs_block(blk: &crate::partition::MachineBlock, k: usize) -> MultiVec {
+        let cols: Vec<Vec<f64>> = (0..k)
+            .map(|j| {
+                blk.b
+                    .iter()
+                    .enumerate()
+                    .map(|(i, b)| b * (1.0 + j as f64 * 0.5) + (i * (j + 1)) as f64 * 0.01)
+                    .collect()
+            })
+            .collect();
+        MultiVec::from_columns(&cols)
+    }
+
+    #[test]
+    fn apc_batch_local_matches_single_lane_by_lane() {
+        let sys = sys();
+        let blk = &sys.blocks[1];
+        let k = 3;
+        let rhs = rhs_block(blk, k);
+        let mut batch = ApcBatchLocal::new(blk, 0.9, &rhs).unwrap();
+        // per-lane single locals over a block with the lane's rhs
+        let mut singles: Vec<ApcLocal> = (0..k)
+            .map(|j| {
+                let mut b2 = blk.clone();
+                b2.b = rhs.col(j);
+                ApcLocal::new(&b2, 0.9).unwrap()
+            })
+            .collect();
+        let xbar_cols: Vec<Vec<f64>> =
+            (0..k).map(|j| (0..9).map(|i| ((i + j) as f64 * 0.3).cos()).collect()).collect();
+        let xbar = MultiVec::from_columns(&xbar_cols);
+        for round in 0..5 {
+            for j in 0..k {
+                assert!(
+                    max_abs_diff(&batch.x.col(j), &singles[j].x) < 1e-12,
+                    "apc batch lane {j} diverged at round {round}"
+                );
+            }
+            batch.step(blk, &xbar);
+            for (j, s) in singles.iter_mut().enumerate() {
+                let mut b2 = blk.clone();
+                b2.b = rhs.col(j);
+                s.step(&b2, &xbar_cols[j]);
+            }
+        }
+        // deflation keeps the surviving lanes' trajectories intact
+        batch.deflate(&[0, 2]);
+        let xbar2 = MultiVec::from_columns(&[xbar_cols[0].clone(), xbar_cols[2].clone()]);
+        batch.step(blk, &xbar2);
+        for (t, j) in [0usize, 2].into_iter().enumerate() {
+            let mut b2 = blk.clone();
+            b2.b = rhs.col(j);
+            singles[j].step(&b2, &xbar_cols[j]);
+            assert!(
+                max_abs_diff(&batch.x.col(t), &singles[j].x) < 1e-12,
+                "apc batch lane {j} diverged after deflation"
+            );
+        }
+    }
+
+    #[test]
+    fn grad_batch_local_matches_single() {
+        let sys = sys();
+        let blk = &sys.blocks[2];
+        let k = 4;
+        let rhs = rhs_block(blk, k);
+        let mut batch = GradBatchLocal::new(blk, &rhs);
+        let x_cols: Vec<Vec<f64>> =
+            (0..k).map(|j| (0..9).map(|i| 0.1 * (i + j) as f64).collect()).collect();
+        let x = MultiVec::from_columns(&x_cols);
+        let mut out = MultiVec::zeros(9, k);
+        batch.partial_grad(blk, &x, &mut out);
+        let mut single = GradLocal::new(blk);
+        for j in 0..k {
+            let mut b2 = blk.clone();
+            b2.b = rhs.col(j);
+            let mut o1 = vec![0.0; 9];
+            single.partial_grad(&b2, &x_cols[j], &mut o1);
+            assert!(max_abs_diff(&out.col(j), &o1) < 1e-12, "grad batch lane {j}");
+        }
+    }
+
+    #[test]
+    fn cimmino_batch_local_matches_single() {
+        let sys = sys();
+        let blk = &sys.blocks[0];
+        let k = 3;
+        let rhs = rhs_block(blk, k);
+        let mut batch = CimminoBatchLocal::new(blk, &rhs);
+        let xbar_cols: Vec<Vec<f64>> =
+            (0..k).map(|j| (0..9).map(|i| ((i * (j + 2)) as f64 * 0.7).sin()).collect()).collect();
+        let xbar = MultiVec::from_columns(&xbar_cols);
+        let mut out = MultiVec::zeros(9, k);
+        batch.step(blk, &xbar, &mut out);
+        let mut single = CimminoLocal::new(blk);
+        for j in 0..k {
+            let mut b2 = blk.clone();
+            b2.b = rhs.col(j);
+            let mut o1 = vec![0.0; 9];
+            single.step(&b2, &xbar_cols[j], &mut o1);
+            assert!(max_abs_diff(&out.col(j), &o1) < 1e-12, "cimmino batch lane {j}");
+        }
+    }
+
+    #[test]
+    fn admm_batch_local_matches_single() {
+        let sys = sys();
+        let blk = &sys.blocks[1];
+        let (k, xi) = (3, 0.7);
+        let rhs = rhs_block(blk, k);
+        let mut batch = AdmmBatchLocal::new(blk, xi, &rhs).unwrap();
+        let xbar_cols: Vec<Vec<f64>> =
+            (0..k).map(|j| (0..9).map(|i| 0.2 * i as f64 - 0.5 + j as f64 * 0.1).collect()).collect();
+        let xbar = MultiVec::from_columns(&xbar_cols);
+        let mut out = MultiVec::zeros(9, k);
+        batch.step(blk, &xbar, &mut out);
+        for j in 0..k {
+            let mut b2 = blk.clone();
+            b2.b = rhs.col(j);
+            let mut single = AdmmLocal::new(&b2, xi).unwrap();
+            let mut o1 = vec![0.0; 9];
+            single.step(&b2, &xbar_cols[j], &mut o1);
+            assert!(max_abs_diff(&out.col(j), &o1) < 1e-11, "admm batch lane {j}");
+        }
     }
 
     #[test]

@@ -1,16 +1,24 @@
 //! The paper's algorithm zoo: APC and every baseline of §4, behind one
 //! [`Solver`] trait.
 //!
-//! | module | method | per-iteration cost | optimal ρ (Table 1) |
-//! |---|---|---|---|
-//! | [`apc`] | Accelerated Projection-based Consensus (Alg. 1) | 2pn/machine | `(√κ(X)−1)/(√κ(X)+1)` |
-//! | [`consensus`] | vanilla projection consensus [11,14] | 2pn | `1 − μ_min(X)` |
-//! | [`cimmino`] | block Cimmino (≡ APC at γ=1, η=mν) | 2pn | `≈ 1 − 2/κ(X)` |
-//! | [`dgd`] | distributed gradient descent | 2pn | `≈ 1 − 2/κ(AᵀA)` |
-//! | [`nag`] | distributed Nesterov | 2pn | `1 − 2/√(3κ(AᵀA)+1)` |
-//! | [`hbm`] | distributed heavy-ball | 2pn | `≈ 1 − 2/√κ(AᵀA)` |
-//! | [`admm`] | modified consensus-ADMM (y≡0, §4.4) | 2pn (inversion lemma) | monotone in ξ, see `rates` |
-//! | [`phbm`] | §6 preconditioned heavy-ball | 2pn | same as APC |
+//! | module | method | per-iteration cost | batched, width k ([`batch`]) | optimal ρ (Table 1) |
+//! |---|---|---|---|---|
+//! | [`apc`] | Accelerated Projection-based Consensus (Alg. 1) | 2pn/machine | 2pnk, one GEMM pass | `(√κ(X)−1)/(√κ(X)+1)` |
+//! | [`consensus`] | vanilla projection consensus [11,14] | 2pn | 2pnk (APC engine, γ=η=1) | `1 − μ_min(X)` |
+//! | [`cimmino`] | block Cimmino (≡ APC at γ=1, η=mν) | 2pn | 2pnk, one GEMM pass | `≈ 1 − 2/κ(X)` |
+//! | [`dgd`] | distributed gradient descent | 2pn | 2pnk, one GEMM pass | `≈ 1 − 2/κ(AᵀA)` |
+//! | [`nag`] | distributed Nesterov | 2pn | 2pnk, one GEMM pass | `1 − 2/√(3κ(AᵀA)+1)` |
+//! | [`hbm`] | distributed heavy-ball | 2pn | 2pnk, one GEMM pass | `≈ 1 − 2/√κ(AᵀA)` |
+//! | [`admm`] | modified consensus-ADMM (y≡0, §4.4) | 2pn (inversion lemma) | 2pnk, one shifted factor | monotone in ξ, see `rates` |
+//! | [`phbm`] | §6 preconditioned heavy-ball | 2pn | 2pnk over the whitened blocks | same as APC |
+//!
+//! The batched column costs every method `2pnk` flops per machine per
+//! round in **one** streamed pass of `A_i` (GEMM/SpMM over an `n×k`
+//! [`crate::linalg::MultiVec`]) and one machine-phase barrier — vs the
+//! column loop's `k` separate `2pn` passes and `k` barriers. The cached
+//! `p×p` Gram factor is shared by all `k` lanes through multi-column
+//! triangular solves, and deflation shrinks `k` to the still-unconverged
+//! lane count as columns hit their tolerance (see [`batch`]).
 //!
 //! Each method factors its per-machine work into a `local` kernel (in
 //! [`local`]) shared verbatim by the single-process loop here and by the
@@ -28,6 +36,7 @@
 
 pub mod admm;
 pub mod apc;
+pub mod batch;
 pub mod cimmino;
 pub mod consensus;
 pub mod dgd;
@@ -103,6 +112,18 @@ pub trait Solver {
     /// across repeated benchmark runs).
     fn reset(&mut self, sys: &PartitionedSystem);
 
+    /// Re-point this solver at `sys` — same tuning, arbitrary new
+    /// right-hand sides — rebuilding any state derived from the blocks'
+    /// `b_i` (the column-loop baseline swaps rhs between solves via
+    /// [`PartitionedSystem::set_rhs`]). The default delegates to
+    /// [`reset`](Solver::reset), which suffices for every method whose
+    /// locals read `blk.b` per step; methods that *cache* rhs-derived
+    /// state (ADMM's `A_iᵀb_i`, P-HBM's whitened `d_i`) override it.
+    fn rebind(&mut self, sys: &PartitionedSystem) -> Result<()> {
+        self.reset(sys);
+        Ok(())
+    }
+
     /// Run until `opts.tol` or `opts.max_iter`.
     fn solve(&mut self, sys: &PartitionedSystem, opts: &SolverOptions) -> Result<SolveReport> {
         let eval = |xbar: &[f64]| -> f64 {
@@ -133,6 +154,22 @@ pub trait Solver {
             history,
             solution: self.xbar().to_vec(),
         })
+    }
+
+    /// Solve the same partitioned system against `k` right-hand sides at
+    /// once, with per-column convergence tracking and deflation (see
+    /// [`batch`]). The default implementation is the column-loop
+    /// baseline ([`batch::solve_columns_serially`]): `k` independent
+    /// single-RHS solves. APC, consensus, Cimmino, DGD, D-NAG, D-HBM,
+    /// M-ADMM and P-HBM override it with genuinely batched engines —
+    /// one GEMM/SpMM machine phase per round covering the whole batch.
+    fn solve_batch(
+        &mut self,
+        sys: &PartitionedSystem,
+        rhs: &[Vec<f64>],
+        opts: &batch::BatchOptions,
+    ) -> Result<batch::BatchReport> {
+        batch::solve_columns_serially(self, sys, rhs, opts)
     }
 }
 
@@ -189,5 +226,90 @@ mod tests {
         // zeros are filtered
         let h = vec![(0, 0.0), (1, 0.0), (2, 0.0)];
         assert!(fit_decay_rate(&h).is_none());
+    }
+
+    // --- SolverOptions plumbing ------------------------------------------
+    //
+    // Metric::Residual early-stop and record_every sampling are contracts
+    // of Solver::solve itself; pin them on one projection-family solver
+    // (APC) and one gradient-family solver (D-HBM).
+
+    use crate::gen::problems::Problem;
+    use crate::solvers::{apc::Apc, hbm::Hbm};
+
+    fn plumbing_sys(seed: u64) -> PartitionedSystem {
+        let p = Problem::standard_gaussian(24, 24, 3).build(seed);
+        PartitionedSystem::split_even(&p.a, &p.b, 3).unwrap()
+    }
+
+    fn residual_early_stop_contract(mut solver: impl Solver) {
+        let sys = plumbing_sys(71);
+        let tol = 1e-6;
+        let opts =
+            SolverOptions { tol, metric: Metric::Residual, max_iter: 500_000, record_every: 0 };
+        let rep = solver.solve(&sys, &opts).unwrap();
+        assert!(rep.converged, "{}: residual stop never fired", rep.solver);
+        // stopped exactly when the metric crossed tol…
+        assert!(rep.final_error <= tol);
+        assert_eq!(rep.final_error, sys.relative_residual(&rep.solution));
+        // …and not a round later: a run capped one iteration earlier must
+        // still sit above tol (early-stop fired at the first crossing)
+        assert!(rep.iterations > 0);
+        solver.reset(&sys);
+        let capped = SolverOptions { max_iter: rep.iterations - 1, ..opts.clone() };
+        let rep_short = solver.solve(&sys, &capped).unwrap();
+        assert!(!rep_short.converged, "{}: stopped late", rep_short.solver);
+        assert!(rep_short.final_error > tol);
+        assert_eq!(rep_short.iterations, rep.iterations - 1);
+        // record_every = 0 keeps no history
+        assert!(rep.history.is_empty());
+    }
+
+    fn record_every_contract(mut solver: impl Solver) {
+        let sys = plumbing_sys(73);
+        let (cap, every) = (25usize, 4usize);
+        let opts = SolverOptions {
+            tol: 0.0, // run the full horizon
+            metric: Metric::Residual,
+            max_iter: cap,
+            record_every: every,
+        };
+        let init_err = sys.relative_residual(solver.xbar());
+        let rep = solver.solve(&sys, &opts).unwrap();
+        assert!(!rep.converged);
+        assert_eq!(rep.iterations, cap);
+        // samples at 0, every, 2·every, … ≤ cap — the initial point plus
+        // every every-th iteration
+        let expect: Vec<usize> = std::iter::once(0).chain((1..=cap).filter(|i| i % every == 0)).collect();
+        let got: Vec<usize> = rep.history.iter().map(|(i, _)| *i).collect();
+        assert_eq!(got, expect, "{}: sample iterations", rep.solver);
+        // recorded values are the metric at those iterations: positive,
+        // finite, and the first sample is the starting residual
+        assert!(rep.history.iter().all(|(_, e)| e.is_finite() && *e >= 0.0));
+        assert_eq!(rep.history[0], (0, init_err));
+    }
+
+    #[test]
+    fn apc_residual_early_stop() {
+        let sys = plumbing_sys(71);
+        residual_early_stop_contract(Apc::auto(&sys).unwrap());
+    }
+
+    #[test]
+    fn hbm_residual_early_stop() {
+        let sys = plumbing_sys(71);
+        residual_early_stop_contract(Hbm::auto(&sys).unwrap());
+    }
+
+    #[test]
+    fn apc_record_every_history() {
+        let sys = plumbing_sys(73);
+        record_every_contract(Apc::auto(&sys).unwrap());
+    }
+
+    #[test]
+    fn hbm_record_every_history() {
+        let sys = plumbing_sys(73);
+        record_every_contract(Hbm::auto(&sys).unwrap());
     }
 }

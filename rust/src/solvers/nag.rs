@@ -2,6 +2,7 @@
 //! `y(t+1) = x(t) − α Σ g_i(x(t))`,
 //! `x(t+1) = (1+β) y(t+1) − β y(t)`.
 
+use super::batch::{self, GradRule};
 use super::local::GradLocal;
 use super::Solver;
 use crate::parallel::{self, SliceCells};
@@ -87,6 +88,19 @@ impl Solver for Nag {
     fn reset(&mut self, _sys: &PartitionedSystem) {
         self.x.fill(0.0);
         self.y.fill(0.0);
+    }
+
+    /// Batched D-NAG: `k` partial gradients per machine in one GEMM
+    /// pass, the Nesterov extrapolation folded lane-wise.
+    fn solve_batch(
+        &mut self,
+        sys: &PartitionedSystem,
+        rhs: &[Vec<f64>],
+        opts: &batch::BatchOptions,
+    ) -> Result<batch::BatchReport> {
+        let mut engine =
+            batch::GradBatch::new(sys, rhs, GradRule::Nag { alpha: self.alpha, beta: self.beta })?;
+        batch::run(&mut engine, sys, rhs, opts, self.name())
     }
 }
 

@@ -6,11 +6,14 @@
 //! transformed system achieves APC's rate. The κ identity follows from
 //! `CᵀC = Σ A_iᵀ(A_iA_iᵀ)⁻¹A_i = mX`, which the tests verify.
 
+use super::batch::{self, GradRule};
 use super::hbm::Hbm;
 use super::Solver;
-use crate::partition::PartitionedSystem;
+use crate::linalg::MultiVec;
+use crate::partition::{BlockOp, PartitionedSystem};
+use crate::precond::Preconditioner;
 use crate::rates::{hbm_optimal, SpectralInfo};
-use anyhow::{Context, Result};
+use anyhow::{bail, Context, Result};
 
 /// Preconditioned D-HBM: owns the transformed system and an inner HBM.
 ///
@@ -23,6 +26,35 @@ pub struct Phbm {
     /// The §6-transformed system `Cx = d` (same machine layout).
     pre_sys: PartitionedSystem,
     inner: Hbm,
+    /// Cached per-machine `W_i = (A_iA_iᵀ)^{-1/2}` — the rhs transform
+    /// `d_i = W_i b_i` is the only b-dependent piece of the §6 setup, so
+    /// [`Phbm::rebind`] and the batched rhs whitening reuse these instead
+    /// of re-running the per-block eigensolves per query. `None` marks a
+    /// block whose §6 transform is the identity (the input block was
+    /// already whitened; preconditioning is idempotent).
+    whiteners: Vec<Option<Preconditioner>>,
+}
+
+/// One rhs whitener per machine: an already-whitened input block gets the
+/// identity (`None`, matching the idempotent block pass-through); sparse
+/// blocks already carry their `W_i` inside [`BlockOp::Whitened`]; dense
+/// blocks recompute it from the original row Gram (the same
+/// `sym_eigen → inv_sqrt` the block transform ran).
+fn whiteners_for(
+    sys: &PartitionedSystem,
+    pre_sys: &PartitionedSystem,
+) -> Result<Vec<Option<Preconditioner>>> {
+    sys.blocks
+        .iter()
+        .zip(&pre_sys.blocks)
+        .map(|(orig, pre)| match (&orig.a, &pre.a) {
+            (BlockOp::Whitened(_), _) => Ok(None),
+            (_, BlockOp::Whitened(w)) => Ok(Some(w.preconditioner().clone())),
+            _ => Preconditioner::from_gram(&orig.a.gram_rows())
+                .map(Some)
+                .with_context(|| format!("machine {}: §6 rhs whitening", orig.index)),
+        })
+        .collect()
 }
 
 impl Phbm {
@@ -45,7 +77,8 @@ impl Phbm {
         let m = sys.m() as f64;
         let (alpha, beta, _) = hbm_optimal(m * s.mu_min, m * s.mu_max);
         let inner = Hbm::with_params(&pre_sys, alpha, beta);
-        Ok(Phbm { pre_sys, inner })
+        let whiteners = whiteners_for(sys, &pre_sys)?;
+        Ok(Phbm { pre_sys, inner, whiteners })
     }
 
     /// Fully sparse-scale construction: estimate `(μ_min, μ_max)` by the
@@ -61,7 +94,8 @@ impl Phbm {
     pub fn with_params(sys: &PartitionedSystem, alpha: f64, beta: f64) -> Result<Self> {
         let pre_sys = sys.preconditioned().context("§6 preconditioning")?;
         let inner = Hbm::with_params(&pre_sys, alpha, beta);
-        Ok(Phbm { pre_sys, inner })
+        let whiteners = whiteners_for(sys, &pre_sys)?;
+        Ok(Phbm { pre_sys, inner, whiteners })
     }
 
     /// The transformed system (exposed for rate verification in benches).
@@ -88,6 +122,72 @@ impl Solver for Phbm {
 
     fn reset(&mut self, _sys: &PartitionedSystem) {
         self.inner.reset(&self.pre_sys);
+    }
+
+    /// The transformed rhs `d_i = W_i b_i` is baked into `pre_sys` at
+    /// construction, so a plain reset would keep solving the old query.
+    /// Only the rhs depends on `b`: rebinding re-whitens each block's
+    /// `b_i` through the cached `W_i` (`O(p²)` per machine) and leaves
+    /// the transformed operators and their factorizations alone —
+    /// `rebind` assumes the same machine layout/operators, per the trait
+    /// contract.
+    fn rebind(&mut self, sys: &PartitionedSystem) -> Result<()> {
+        if sys.m() != self.pre_sys.m() {
+            bail!(
+                "rebind: system has {} machines, preconditioned state has {}",
+                sys.m(),
+                self.pre_sys.m()
+            );
+        }
+        for ((pre_blk, w), orig) in
+            self.pre_sys.blocks.iter_mut().zip(&self.whiteners).zip(&sys.blocks)
+        {
+            pre_blk.b = match w {
+                Some(w) => w.apply(&orig.b),
+                None => orig.b.clone(),
+            };
+        }
+        self.inner.reset(&self.pre_sys);
+        Ok(())
+    }
+
+    /// Batched P-HBM: whiten each machine's `p×k` RHS block once
+    /// (`D_i = W_i B_i`, the batched §6 rhs transform) and run the
+    /// batched heavy-ball engine over the internally held preconditioned
+    /// system. Convergence is still tracked against the **original**
+    /// residual, like the single-RHS path.
+    fn solve_batch(
+        &mut self,
+        sys: &PartitionedSystem,
+        rhs: &[Vec<f64>],
+        opts: &batch::BatchOptions,
+    ) -> Result<batch::BatchReport> {
+        batch::validate_batch(sys, rhs, &opts.metric)?;
+        let Phbm { pre_sys, inner, whiteners } = self;
+        if sys.m() != whiteners.len() {
+            bail!(
+                "solve_batch: system has {} machines, preconditioned state has {}",
+                sys.m(),
+                whiteners.len()
+            );
+        }
+        let k = rhs.len();
+        let mut rhs_blocks = Vec::with_capacity(sys.m());
+        for (blk, w) in sys.blocks.iter().zip(whiteners.iter()) {
+            // the cached W_i = (A_iA_iᵀ)^{-1/2} of the §6 block transform
+            let b = batch::block_rhs(blk, rhs);
+            rhs_blocks.push(match w {
+                Some(w) => {
+                    let mut d = MultiVec::zeros(blk.p(), k);
+                    w.apply_multi_into(b.as_slice(), k, d.as_mut_slice());
+                    d
+                }
+                None => b,
+            });
+        }
+        let rule = GradRule::Hbm { alpha: inner.alpha, beta: inner.beta };
+        let mut engine = batch::GradBatch::with_rhs_blocks(pre_sys, rhs_blocks, rule)?;
+        batch::run(&mut engine, sys, rhs, opts, "P-HBM")
     }
 }
 

@@ -142,6 +142,60 @@ impl Csr {
         }
     }
 
+    /// `Y = A X` over a row-major `cols × k` column block (`y` is
+    /// `rows × k`, overwritten) — CSR SpMM, the batched counterpart of
+    /// [`matvec_into`](Csr::matvec_into). Each CSR row is streamed
+    /// **once** across all `k` lanes: every stored `(col, value)` pair
+    /// issues one contiguous `k`-wide multiply-accumulate, so serving
+    /// `k` right-hand sides costs one pass over the nonzeros, not `k`.
+    pub fn matmat_into(&self, x: &[f64], k: usize, y: &mut [f64]) {
+        assert_eq!(x.len(), self.cols * k, "csr matmat: x size mismatch");
+        assert_eq!(y.len(), self.rows * k, "csr matmat: y size mismatch");
+        y.fill(0.0);
+        if k == 0 {
+            return;
+        }
+        for i in 0..self.rows {
+            let yr = &mut y[i * k..(i + 1) * k];
+            for nz in self.row_ptr[i]..self.row_ptr[i + 1] {
+                let v = self.values[nz];
+                let xr = &x[self.col_idx[nz] * k..self.col_idx[nz] * k + k];
+                for t in 0..k {
+                    yr[t] += v * xr[t];
+                }
+            }
+        }
+    }
+
+    /// `Y = Aᵀ X` over a `rows × k` block (`y` is `cols × k`,
+    /// overwritten) — one pass over the nonzeros for all `k` lanes.
+    pub fn tr_matmat_into(&self, x: &[f64], k: usize, y: &mut [f64]) {
+        assert_eq!(y.len(), self.cols * k, "csr tr_matmat: y size mismatch");
+        y.fill(0.0);
+        self.tr_matmat_axpy_into(x, k, 1.0, y);
+    }
+
+    /// `Y += α · Aᵀ X` — fused multi-RHS accumulation; with `α = −γ` the
+    /// entire tail of the batched APC step, mirroring the dense
+    /// [`kernels::tr_matmat_axpy`](crate::linalg::kernels::tr_matmat_axpy).
+    pub fn tr_matmat_axpy_into(&self, x: &[f64], k: usize, alpha: f64, y: &mut [f64]) {
+        assert_eq!(x.len(), self.rows * k, "csr tr_matmat_axpy: x size mismatch");
+        assert_eq!(y.len(), self.cols * k, "csr tr_matmat_axpy: y size mismatch");
+        if alpha == 0.0 || k == 0 {
+            return; // exact noop, same contract as the single-vector kernel
+        }
+        for i in 0..self.rows {
+            let xr = &x[i * k..(i + 1) * k];
+            for nz in self.row_ptr[i]..self.row_ptr[i + 1] {
+                let av = alpha * self.values[nz];
+                let yr = &mut y[self.col_idx[nz] * k..self.col_idx[nz] * k + k];
+                for t in 0..k {
+                    yr[t] += av * xr[t];
+                }
+            }
+        }
+    }
+
     /// Row Gram `G = A Aᵀ` as a *dense* `rows × rows` matrix — the one-time
     /// per-machine factorization input (`A_i A_iᵀ` feeds [`Cholesky`]
     /// unchanged). Each entry is a sparse·sparse row dot-product over the
@@ -418,6 +472,54 @@ mod tests {
         let mut y = y0.to_vec();
         csr.tr_matvec_axpy_into(&[0.0; 3], 1.0, &mut y);
         assert_eq!(y, y0.to_vec());
+    }
+
+    #[test]
+    fn spmm_matches_column_loop_of_matvec() {
+        let csr = sample().to_csr();
+        let dense = sample().to_dense();
+        let k = 3;
+        // x: 4×3 column block
+        let x: Vec<f64> = (0..4 * k).map(|i| (i as f64 * 0.37).sin()).collect();
+        let mut y = vec![f64::NAN; 3 * k];
+        csr.matmat_into(&x, k, &mut y);
+        for lane in 0..k {
+            let xcol: Vec<f64> = (0..4).map(|r| x[r * k + lane]).collect();
+            let ycol: Vec<f64> = (0..3).map(|r| y[r * k + lane]).collect();
+            assert!(max_abs_diff(&ycol, &dense.matvec(&xcol)) < 1e-14);
+        }
+        // transpose SpMM
+        let xt: Vec<f64> = (0..3 * k).map(|i| (i as f64 * 0.61).cos()).collect();
+        let mut yt = vec![f64::NAN; 4 * k];
+        csr.tr_matmat_into(&xt, k, &mut yt);
+        for lane in 0..k {
+            let xcol: Vec<f64> = (0..3).map(|r| xt[r * k + lane]).collect();
+            let ycol: Vec<f64> = (0..4).map(|r| yt[r * k + lane]).collect();
+            assert!(max_abs_diff(&ycol, &dense.tr_matvec(&xcol)) < 1e-14);
+        }
+    }
+
+    #[test]
+    fn spmm_axpy_accumulates_and_alpha_zero_noop() {
+        let csr = sample().to_csr();
+        let dense = sample().to_dense();
+        let k = 2;
+        let x: Vec<f64> = (0..3 * k).map(|i| 0.3 * i as f64 - 0.7).collect();
+        let y0: Vec<f64> = (0..4 * k).map(|i| 0.1 * i as f64).collect();
+        let alpha = -0.83;
+        let mut y = y0.clone();
+        csr.tr_matmat_axpy_into(&x, k, alpha, &mut y);
+        for lane in 0..k {
+            let xcol: Vec<f64> = (0..3).map(|r| x[r * k + lane]).collect();
+            let t = dense.tr_matvec(&xcol);
+            for r in 0..4 {
+                let expect = y0[r * k + lane] + alpha * t[r];
+                assert!((y[r * k + lane] - expect).abs() < 1e-14);
+            }
+        }
+        let mut y = y0.clone();
+        csr.tr_matmat_axpy_into(&x, k, 0.0, &mut y);
+        assert_eq!(y, y0, "α = 0 must leave y bit-identical");
     }
 
     #[test]

@@ -1,0 +1,299 @@
+//! Batched-vs-single parity: column `j` of a k-RHS batched solve must
+//! reproduce the single-RHS trajectory of rhs `j`, on every backend.
+//!
+//! Exact bit equality is *not* expected — the multi-vector GEMM/SpMM
+//! kernels sum in a different order than the single-vector kernels — so
+//! the pin is `≤ 1e-12` max-abs divergence per round over a fixed
+//! horizon with fixed non-expansive parameters (the `sparse_parity.rs`
+//! methodology). Deflation correctness is pinned at the driver level:
+//! with columns converging (and deflating) at different rounds, each
+//! column's recorded history must match the standalone run sample for
+//! sample, and the batch must be invariant to column order.
+
+use apc::linalg::vector::max_abs_diff;
+use apc::partition::PartitionedSystem;
+use apc::solvers::batch::{
+    self, AdmmBatch, ApcBatch, BatchEngine, BatchMetric, BatchOptions, CimminoBatch, GradBatch,
+    GradRule,
+};
+use apc::solvers::{
+    admm::Admm, apc::Apc, cimmino::Cimmino, consensus::Consensus, dgd::Dgd, hbm::Hbm, nag::Nag,
+    phbm::Phbm, Solver,
+};
+
+const SEVEN: [&str; 7] = ["apc", "consensus", "dgd", "nag", "hbm", "cimmino", "admm"];
+const ROUNDS: usize = 25;
+const TOL: f64 = 1e-12;
+
+/// Fixed, stable parameters shared by the batched engine and the
+/// single-RHS reference (same values as `tests/sparse_parity.rs`: parity
+/// needs non-expansive iterations so kernel rounding cannot grow).
+fn fixed_engine<'a>(
+    name: &str,
+    sys: &'a PartitionedSystem,
+    rhs: &[Vec<f64>],
+) -> Box<dyn BatchEngine + 'a> {
+    match name {
+        "apc" => Box::new(ApcBatch::new(sys, rhs, 0.9, 1.1).unwrap()),
+        "consensus" => Box::new(ApcBatch::new(sys, rhs, 1.0, 1.0).unwrap()),
+        "dgd" => Box::new(GradBatch::new(sys, rhs, GradRule::Dgd { alpha: 1e-3 }).unwrap()),
+        "nag" => {
+            Box::new(GradBatch::new(sys, rhs, GradRule::Nag { alpha: 1e-3, beta: 0.5 }).unwrap())
+        }
+        "hbm" => {
+            Box::new(GradBatch::new(sys, rhs, GradRule::Hbm { alpha: 1e-3, beta: 0.5 }).unwrap())
+        }
+        "cimmino" => Box::new(CimminoBatch::new(sys, rhs, 0.05).unwrap()),
+        "admm" => Box::new(AdmmBatch::new(sys, rhs, 1.0).unwrap()),
+        other => panic!("no fixed engine for {other}"),
+    }
+}
+
+fn fixed_solver(name: &str, sys: &PartitionedSystem) -> Box<dyn Solver> {
+    match name {
+        "apc" => Box::new(Apc::with_params(sys, 0.9, 1.1).unwrap()),
+        "consensus" => Box::new(Consensus::new(sys).unwrap()),
+        "dgd" => Box::new(Dgd::with_params(sys, 1e-3)),
+        "nag" => Box::new(Nag::with_params(sys, 1e-3, 0.5)),
+        "hbm" => Box::new(Hbm::with_params(sys, 1e-3, 0.5)),
+        "cimmino" => Box::new(Cimmino::with_params(sys, 0.05)),
+        "admm" => Box::new(Admm::with_params(sys, 1.0).unwrap()),
+        other => panic!("no fixed tuning for {other}"),
+    }
+}
+
+/// `k` deterministic RHS columns spanning the system's rows.
+fn rhs_columns(n_rows: usize, k: usize, seed: u64) -> Vec<Vec<f64>> {
+    (0..k)
+        .map(|j| {
+            (0..n_rows)
+                .map(|i| (((i * (k + j + 1)) as f64 + seed as f64 * 0.11) * 0.43).sin())
+                .collect()
+        })
+        .collect()
+}
+
+/// Every engine's column `j` must track the single-RHS trajectory of
+/// rhs `j` (the system re-pointed via `set_rhs`) to ≤ 1e-12 per round.
+fn pin_trajectories(sys: &PartitionedSystem, label: &str) {
+    let k = 3;
+    let rhs = rhs_columns(sys.n_rows, k, 5);
+    for name in SEVEN {
+        let mut engine = fixed_engine(name, sys, &rhs);
+        let mut singles: Vec<(PartitionedSystem, Box<dyn Solver>)> = rhs
+            .iter()
+            .map(|col| {
+                let mut wsys = sys.clone();
+                wsys.set_rhs(col).unwrap();
+                let solver = fixed_solver(name, &wsys);
+                (wsys, solver)
+            })
+            .collect();
+        for round in 0..=ROUNDS {
+            for (j, (_, s)) in singles.iter().enumerate() {
+                let diff = max_abs_diff(&engine.xbar().col(j), s.xbar());
+                assert!(
+                    diff <= TOL,
+                    "{name} on {label}: lane {j} diverged to {diff:.2e} at round {round}"
+                );
+            }
+            engine.round();
+            for (wsys, s) in singles.iter_mut() {
+                s.iterate(wsys);
+            }
+        }
+    }
+}
+
+#[test]
+fn batched_trajectories_match_single_rhs_dense() {
+    let built = apc::gen::problems::SparseProblem::random_sparse(48, 32, 0.2, 4).build(41);
+    let dense = built.a.to_dense();
+    let sys = PartitionedSystem::split_even(&dense, &built.b, 4).unwrap();
+    assert!(sys.blocks.iter().all(|b| !b.a.is_sparse()));
+    pin_trajectories(&sys, "dense blocks");
+}
+
+#[test]
+fn batched_trajectories_match_single_rhs_csr() {
+    let built = apc::gen::problems::SparseProblem::random_sparse(48, 32, 0.2, 4).build(41);
+    let sys = PartitionedSystem::split_csr_nnz_balanced(&built.a, &built.b, 4).unwrap();
+    assert!(sys.blocks.iter().all(|b| b.a.is_sparse()));
+    pin_trajectories(&sys, "CSR blocks");
+}
+
+#[test]
+fn batched_trajectories_match_single_rhs_whitened() {
+    // BlockOp::Whitened backend: the §6-preconditioned sparse system.
+    // Both sides see the SAME whitened system, so this pins the whitened
+    // multi-kernels against the whitened single-vector kernels.
+    let built = apc::gen::problems::SparseProblem::random_sparse(40, 28, 0.25, 4).build(43);
+    let sys = PartitionedSystem::split_csr(&built.a, &built.b, 4).unwrap();
+    let pre = sys.preconditioned().unwrap();
+    assert!(pre.blocks.iter().all(|b| b.a.csr().is_some() && b.a.dense().is_err()));
+    pin_trajectories(&pre, "whitened blocks");
+}
+
+/// Driver-level deflation parity: the zero rhs column converges (and
+/// deflates) at round 0 while the others run on — each column's sampled
+/// history and frozen solution must match its standalone solve.
+fn pin_deflation(sys: &PartitionedSystem, label: &str) {
+    let k = 4;
+    let mut rhs = rhs_columns(sys.n_rows, k, 9);
+    rhs[0] = vec![0.0; sys.n_rows]; // deflates at round 0 for every method
+    let opts = BatchOptions {
+        tol: 1e-8,
+        max_iter: 400,
+        metric: BatchMetric::Residual,
+        record_every: 1,
+    };
+    for name in ["apc", "cimmino", "hbm"] {
+        let mut solver = fixed_solver(name, sys);
+        let rep = solver.solve_batch(sys, &rhs, &opts).unwrap();
+        let its: Vec<usize> = rep.columns.iter().map(|c| c.iterations).collect();
+        assert_eq!(its[0], 0, "{name} on {label}: zero column must deflate at round 0");
+        assert!(
+            its.iter().any(|&i| i > 0),
+            "{name} on {label}: expected later columns to keep iterating, got {its:?}"
+        );
+        // per-column history parity against the standalone run, sample by
+        // sample (threshold-free: compares recorded values at each round)
+        for (j, col) in rep.columns.iter().enumerate() {
+            let mut wsys = sys.clone();
+            wsys.set_rhs(&rhs[j]).unwrap();
+            let mut single = fixed_solver(name, &wsys);
+            let srep = single
+                .solve(
+                    &wsys,
+                    &apc::solvers::SolverOptions {
+                        tol: opts.tol,
+                        max_iter: opts.max_iter,
+                        metric: apc::solvers::Metric::Residual,
+                        record_every: 1,
+                    },
+                )
+                .unwrap();
+            assert_eq!(
+                col.history.len(),
+                srep.history.len(),
+                "{name} on {label}: column {j} sampled a different number of rounds \
+                 (batch {:?} vs single {:?})",
+                col.history.last(),
+                srep.history.last()
+            );
+            for ((ri, ei), (rj, ej)) in col.history.iter().zip(&srep.history) {
+                assert_eq!(ri, rj);
+                assert!(
+                    (ei - ej).abs() <= TOL,
+                    "{name} on {label}: column {j} history diverged at round {ri}: \
+                     {ei:.3e} vs {ej:.3e}"
+                );
+            }
+            assert_eq!(col.converged, srep.converged);
+            assert!(
+                max_abs_diff(&col.solution, &srep.solution) <= TOL,
+                "{name} on {label}: column {j} frozen solution diverged"
+            );
+        }
+    }
+}
+
+#[test]
+fn deflation_matches_single_rhs_dense() {
+    let built = apc::gen::problems::SparseProblem::random_sparse(36, 24, 0.3, 4).build(47);
+    let sys = PartitionedSystem::split_even(&built.a.to_dense(), &built.b, 4).unwrap();
+    pin_deflation(&sys, "dense blocks");
+}
+
+#[test]
+fn deflation_matches_single_rhs_csr() {
+    let built = apc::gen::problems::SparseProblem::random_sparse(36, 24, 0.3, 4).build(47);
+    let sys = PartitionedSystem::split_csr(&built.a, &built.b, 4).unwrap();
+    pin_deflation(&sys, "CSR blocks");
+}
+
+#[test]
+fn deflation_matches_single_rhs_whitened() {
+    let built = apc::gen::problems::SparseProblem::random_sparse(36, 24, 0.3, 4).build(47);
+    let sys = PartitionedSystem::split_csr(&built.a, &built.b, 4).unwrap().preconditioned().unwrap();
+    pin_deflation(&sys, "whitened blocks");
+}
+
+#[test]
+fn batch_is_invariant_to_column_order() {
+    // per-lane arithmetic is independent of lane position and batch
+    // width, so permuting the RHS columns must permute the reports —
+    // including deflation happening in a different lane order
+    let built = apc::gen::problems::SparseProblem::random_sparse(36, 24, 0.3, 4).build(53);
+    let sys = PartitionedSystem::split_even(&built.a.to_dense(), &built.b, 4).unwrap();
+    let mut rhs = rhs_columns(sys.n_rows, 3, 13);
+    rhs[1] = vec![0.0; sys.n_rows]; // deflates first in one order, mid in the other
+    let perm = [2usize, 0, 1];
+    let rhs_perm: Vec<Vec<f64>> = perm.iter().map(|&j| rhs[j].clone()).collect();
+    let opts = BatchOptions { tol: 1e-8, max_iter: 400, ..Default::default() };
+    let rep_a = fixed_solver("apc", &sys).solve_batch(&sys, &rhs, &opts).unwrap();
+    let rep_b = fixed_solver("apc", &sys).solve_batch(&sys, &rhs_perm, &opts).unwrap();
+    for (pos, &j) in perm.iter().enumerate() {
+        assert_eq!(rep_b.columns[pos].iterations, rep_a.columns[j].iterations);
+        assert_eq!(rep_b.columns[pos].converged, rep_a.columns[j].converged);
+        assert!(
+            max_abs_diff(&rep_b.columns[pos].solution, &rep_a.columns[j].solution) <= 1e-13,
+            "column {j} not order-invariant"
+        );
+    }
+}
+
+#[test]
+fn phbm_batched_solve_matches_column_loop() {
+    // end-to-end P-HBM on a sparse system: batched whitened-rhs engine vs
+    // the column loop (which re-preconditions per column via rebind) —
+    // different code paths, same answers
+    let built = apc::gen::problems::SparseProblem::random_sparse(40, 40, 0.2, 4).build(59);
+    let sys = PartitionedSystem::split_csr_nnz_balanced(&built.a, &built.b, 4).unwrap();
+    let truths: Vec<Vec<f64>> = (0..3)
+        .map(|j| (0..40).map(|i| ((i * (j + 2)) as f64 * 0.31).cos()).collect())
+        .collect();
+    let rhs: Vec<Vec<f64>> = truths.iter().map(|x| built.a.matvec(x)).collect();
+    let opts = BatchOptions { tol: 1e-8, max_iter: 500_000, ..Default::default() };
+    let rep_batch =
+        Phbm::auto_estimated(&sys, 48, 0.9).unwrap().solve_batch(&sys, &rhs, &opts).unwrap();
+    let mut loop_solver = Phbm::auto_estimated(&sys, 48, 0.9).unwrap();
+    let rep_loop = batch::solve_columns_serially(&mut loop_solver, &sys, &rhs, &opts).unwrap();
+    for (j, (b, l)) in rep_batch.columns.iter().zip(&rep_loop.columns).enumerate() {
+        assert!(b.converged && l.converged, "P-HBM column {j} failed to converge");
+        // both are tol-accurate solutions of the same consistent system
+        assert!(max_abs_diff(&b.solution, &truths[j]) < 1e-5, "batched column {j}");
+        assert!(max_abs_diff(&b.solution, &l.solution) < 1e-5, "column {j} paths disagree");
+        // the whitening rounding differs between the paths; iteration
+        // counts may differ only by a crossing-round boundary effect
+        assert!(
+            b.iterations.abs_diff(l.iterations) <= 1,
+            "column {j}: batched {} vs loop {} iterations",
+            b.iterations,
+            l.iterations
+        );
+    }
+}
+
+#[test]
+fn deflated_widths_shrink_the_active_block() {
+    // white-box: engine deflation compacts to the kept lanes and keeps
+    // advancing only those
+    let built = apc::gen::problems::SparseProblem::random_sparse(36, 24, 0.3, 4).build(61);
+    let sys = PartitionedSystem::split_even(&built.a.to_dense(), &built.b, 4).unwrap();
+    let rhs = rhs_columns(sys.n_rows, 4, 17);
+    let mut engine = ApcBatch::new(&sys, &rhs, 0.9, 1.1).unwrap();
+    assert_eq!(engine.xbar().width(), 4);
+    for _ in 0..3 {
+        engine.round();
+    }
+    let keep = [1usize, 3];
+    let expect: Vec<Vec<f64>> = keep.iter().map(|&j| engine.xbar().col(j)).collect();
+    engine.deflate(&keep);
+    assert_eq!(engine.xbar().width(), 2);
+    for (t, e) in expect.iter().enumerate() {
+        assert_eq!(&engine.xbar().col(t), e, "kept lane moved during deflation");
+    }
+    engine.round(); // must not panic at the reduced width
+    assert_eq!(engine.xbar().width(), 2);
+}
