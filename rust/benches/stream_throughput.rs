@@ -1,0 +1,245 @@
+//! STREAMING REFILL THROUGHPUT — the serving-mode claim of the refill
+//! driver ([`apc::solvers::stream`]): admitting new queries into freed
+//! lanes of a *running* batch sustains a higher steady-state RHS/sec
+//! than draining the batch before refilling, because the drain policy
+//! pays an ever-narrower GEMM tail (the last straggler iterates alone,
+//! with full per-round barrier and `A_i`-streaming overhead) while the
+//! refill policy keeps the batch at full width whenever the queue is
+//! non-empty.
+//!
+//! Protocol, for `k ∈ {4, 16, 64}` lanes on a tall dense system:
+//!
+//!  * `3k` queries with planted solutions arrive on a **deterministic
+//!    Poisson-ish schedule** (exponential inter-arrival gaps drawn from
+//!    the shared LCG stream, quantized to rounds) — heavy traffic: the
+//!    queue stays non-empty until the tail of the run;
+//!  * both policies run through the *same* [`StreamingBatch`] driver
+//!    (identical admission code, evaluation cadence and deflation), so
+//!    the measured gap is purely the [`Admission::Refill`] vs
+//!    [`Admission::Drain`] policy;
+//!  * reported: wall-clock to drain all queries, completed RHS/sec,
+//!    driver rounds, and the mean active width (Σ per-query rounds /
+//!    driver rounds — how full the GEMM actually ran).
+//!
+//! The whole table is emitted machine-readably as `BENCH_stream.json`
+//! at the repository root (provenance-stamped; see EXPERIMENTS.md
+//! §Perf).
+//!
+//! ```bash
+//! cargo bench --bench stream_throughput
+//! ```
+//!
+//! Set `APC_BENCH_SMOKE=1` to shrink sizes/sampling so CI's bench-smoke
+//! job runs the target end-to-end; smoke JSON carries a `do not commit`
+//! provenance marker.
+
+use apc::bench::{bench, fmt_duration, jobj, provenance, smoke_mode, BenchOptions, Table};
+use apc::config::Json;
+use apc::gen::problems::Problem;
+use apc::parallel;
+use apc::partition::PartitionedSystem;
+use apc::rates::{apc_optimal, SpectralInfo};
+use apc::solvers::batch::ApcBatch;
+use apc::solvers::stream::{Admission, StreamOptions, StreamReport, StreamingBatch};
+
+/// Deterministic Poisson-ish arrival rounds: exponential inter-arrival
+/// gaps with the given mean, drawn from the shared LCG stream and
+/// accumulated, so every run (and every policy) sees the identical
+/// schedule.
+fn arrival_schedule(q: usize, mean_gap: f64, seed: u64) -> Vec<usize> {
+    let mut s = seed;
+    let mut t = 0.0f64;
+    (0..q)
+        .map(|_| {
+            s = s.wrapping_mul(6364136223846793005).wrapping_add(1442695040888963407);
+            let u = (((s >> 11) as f64 / (1u64 << 53) as f64) + 1e-12).min(1.0);
+            t += -u.ln() * mean_gap;
+            t.floor() as usize
+        })
+        .collect()
+}
+
+/// Planted per-query solutions and their right-hand sides.
+fn queries(a: &apc::linalg::Mat, q: usize) -> Vec<Vec<f64>> {
+    (0..q)
+        .map(|j| {
+            let x: Vec<f64> =
+                (0..a.cols()).map(|i| ((i * (j + 3)) as f64 * 0.037).sin()).collect();
+            a.matvec(&x)
+        })
+        .collect()
+}
+
+/// Drive one full arrival-to-drain run under the given admission policy.
+fn drive(
+    sys: &PartitionedSystem,
+    gamma: f64,
+    eta: f64,
+    rhs: &[Vec<f64>],
+    arrivals: &[usize],
+    max_width: usize,
+    tol: f64,
+    admission: Admission,
+) -> StreamReport {
+    let engine = ApcBatch::new(sys, &[], gamma, eta).expect("empty engine");
+    let opts = StreamOptions { max_width, tol, admission, ..Default::default() };
+    let mut stream = StreamingBatch::new(engine, sys, opts, "APC").expect("driver");
+    let mut next = 0usize;
+    while next < rhs.len() || !stream.is_drained() {
+        while next < rhs.len() && arrivals[next] <= stream.round() {
+            stream.submit(rhs[next].clone()).expect("submit");
+            next += 1;
+        }
+        stream.tick().expect("tick");
+    }
+    stream.finish()
+}
+
+/// Mean active GEMM width over the run: Σ per-query rounds / driver
+/// rounds.
+fn mean_width(rep: &StreamReport) -> f64 {
+    let lane_rounds: usize =
+        rep.queries.iter().filter_map(|q| q.report.as_ref()).map(|r| r.iterations).sum();
+    if rep.rounds == 0 {
+        0.0
+    } else {
+        lane_rounds as f64 / rep.rounds as f64
+    }
+}
+
+fn main() -> anyhow::Result<()> {
+    let smoke = smoke_mode();
+    if smoke {
+        println!("[APC_BENCH_SMOKE] reduced sizes + sampling; JSON is artifact-only\n");
+    }
+    let (rows, n, m) = if smoke { (240, 120, 4) } else { (1000, 500, 8) };
+    let ks: Vec<usize> = if smoke { vec![4, 16] } else { vec![4, 16, 64] };
+    let queries_per_width = if smoke { 2 } else { 3 };
+    let tol = 1e-6;
+    let mean_gap = 0.5; // heavy traffic: ~2 arrivals per round
+    let opts = if smoke {
+        BenchOptions {
+            warmup: std::time::Duration::from_millis(30),
+            samples: 3,
+            budget: std::time::Duration::from_secs(2),
+            ..BenchOptions::default()
+        }
+    } else {
+        BenchOptions {
+            samples: 7,
+            warmup: std::time::Duration::from_millis(100),
+            budget: std::time::Duration::from_secs(20),
+            ..BenchOptions::default()
+        }
+    };
+
+    println!(
+        "=== streaming refill vs drain-then-refill, dense blocks \
+         (N={rows}, n={n}, m={m}, {} threads) ===\n",
+        parallel::global().threads()
+    );
+    let p = Problem::standard_gaussian(rows, n, m).build(17);
+    let sys = PartitionedSystem::split_even(&p.a, &p.b, m)?;
+    // Lanczos-estimated tuning: no O(n³) step in the serving setup
+    let s = SpectralInfo::estimate(&sys, 200, 0.9)?;
+    let params = apc_optimal(s.mu_min, s.mu_max)?;
+    let (gamma, eta) = (params.gamma, params.eta);
+
+    let mut table = Table::new(&[
+        "k",
+        "queries",
+        "refill RHS/s",
+        "drain RHS/s",
+        "speedup",
+        "refill width",
+        "drain width",
+        "drain time",
+    ]);
+    let mut widths_json = Vec::new();
+    for &k in &ks {
+        let q = queries_per_width * k;
+        let rhs = queries(&p.a, q);
+        let arrivals = arrival_schedule(q, mean_gap, 0x5eed_0000 + k as u64);
+        let refill_rep =
+            drive(&sys, gamma, eta, &rhs, &arrivals, k, tol, Admission::Refill);
+        let drain_rep = drive(&sys, gamma, eta, &rhs, &arrivals, k, tol, Admission::Drain);
+        assert!(
+            refill_rep.queries.iter().all(|c| c.report.as_ref().is_some_and(|r| r.converged)),
+            "refill run left unconverged queries"
+        );
+        let s_refill = bench(&format!("refill k={k}"), &opts, || {
+            drive(&sys, gamma, eta, &rhs, &arrivals, k, tol, Admission::Refill)
+        });
+        let s_drain = bench(&format!("drain  k={k}"), &opts, || {
+            drive(&sys, gamma, eta, &rhs, &arrivals, k, tol, Admission::Drain)
+        });
+        let refill_rps = q as f64 / s_refill.median.as_secs_f64();
+        let drain_rps = q as f64 / s_drain.median.as_secs_f64();
+        let speedup = refill_rps / drain_rps;
+        table.row(&[
+            k.to_string(),
+            q.to_string(),
+            format!("{:.0}", refill_rps),
+            format!("{:.0}", drain_rps),
+            format!("{:.2}x", speedup),
+            format!("{:.1}", mean_width(&refill_rep)),
+            format!("{:.1}", mean_width(&drain_rep)),
+            fmt_duration(s_drain.median),
+        ]);
+        widths_json.push((
+            format!("k{k}"),
+            jobj(vec![
+                ("k", Json::Num(k as f64)),
+                ("queries", Json::Num(q as f64)),
+                ("refill_secs", Json::Num(s_refill.median.as_secs_f64())),
+                ("drain_secs", Json::Num(s_drain.median.as_secs_f64())),
+                ("refill_rhs_per_sec", Json::Num(refill_rps)),
+                ("drain_rhs_per_sec", Json::Num(drain_rps)),
+                ("speedup_refill_vs_drain", Json::Num(speedup)),
+                ("refill_rounds", Json::Num(refill_rep.rounds as f64)),
+                ("drain_rounds", Json::Num(drain_rep.rounds as f64)),
+                ("refill_mean_width", Json::Num(mean_width(&refill_rep))),
+                ("drain_mean_width", Json::Num(mean_width(&drain_rep))),
+            ]),
+        ));
+    }
+    println!("{}", table.render());
+    println!(
+        "refill holds the GEMM width near k whenever the queue is non-empty; drain\n\
+         pays the narrowing tail of every batch (its mean width is what the gap is\n\
+         made of). Same driver code both sides — only the admission policy differs.\n"
+    );
+
+    let json = jobj(vec![
+        ("bench", Json::Str("stream_throughput".into())),
+        (
+            "config",
+            jobj(vec![
+                ("rows", Json::Num(rows as f64)),
+                ("n", Json::Num(n as f64)),
+                ("m", Json::Num(m as f64)),
+                ("tol", Json::Num(tol)),
+                ("mean_arrival_gap_rounds", Json::Num(mean_gap)),
+                ("queries_per_width", Json::Num(queries_per_width as f64)),
+                (
+                    "widths",
+                    Json::Arr(ks.iter().map(|&k| Json::Num(k as f64)).collect()),
+                ),
+                ("threads", Json::Num(parallel::global().threads() as f64)),
+                ("smoke", Json::Bool(smoke)),
+            ]),
+        ),
+        (
+            "provenance",
+            Json::Str(provenance(
+                "cargo bench --bench stream_throughput",
+                parallel::global().threads(),
+            )),
+        ),
+        ("streaming", Json::Obj(widths_json.into_iter().collect())),
+    ]);
+    let json_path = concat!(env!("CARGO_MANIFEST_DIR"), "/../BENCH_stream.json");
+    std::fs::write(json_path, json.to_string_pretty() + "\n")?;
+    println!("wrote {}", json_path);
+    Ok(())
+}

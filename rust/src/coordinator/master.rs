@@ -312,6 +312,14 @@ impl Coordinator {
                 history.push((it, err));
             }
         }
+        // terminal sample on a metric stop (sub-tol / diverged), even off
+        // the record_every cadence — the Solver::solve recording contract
+        if opts.record_every > 0
+            && (err <= opts.tol || !err.is_finite() || err >= 1e15)
+            && history.last().map(|&(i, _)| i) != Some(it)
+        {
+            history.push((it, err));
+        }
         metrics.rounds = it as u64;
         metrics.wall = wall0.elapsed();
 

@@ -29,7 +29,9 @@
 //!   [`partition::BlockOp`], nnz-balanced sparse splits), [`precond`]
 //!   (§6 preconditioning in factored form — sparse blocks stay sparse),
 //!   [`solvers`] (incl. [`solvers::batch`] — batched multi-RHS solves
-//!   with per-column deflation for the serving workload), [`rates`]
+//!   with per-column deflation — and [`solvers::stream`] — the
+//!   streaming refill driver that admits new queries into a running
+//!   batch, the serving workload's steady state), [`rates`]
 //! * the system: [`coordinator`] (L3), [`runtime`] (PJRT bridge to the
 //!   L2/L1 artifacts built by `python/compile/`)
 

@@ -16,6 +16,14 @@
 //! capacity, so a solver's scratch blocks are sized once at construction
 //! and never reallocate, the same contract as
 //! [`crate::partition::MachineBlock::project_into`].
+//!
+//! Streaming support: the refill driver ([`crate::solvers::stream`])
+//! also *widens* a running block when it admits new queries into freed
+//! lanes. [`MultiVec::inject_columns`] is the in-place counterpart of
+//! `compact_columns` (backward copy, zero-filled new lanes), and
+//! [`MultiVec::reserve_columns`] pre-reserves the buffer for the
+//! driver's maximum width, so the lane storage itself never
+//! reallocates across steady-state deflate→refill cycles.
 
 /// `k` column vectors of length `n`, stored row-major (`n × k`).
 #[derive(Clone, Debug, PartialEq)]
@@ -137,6 +145,56 @@ impl MultiVec {
         self.k = k_new;
         self.data.truncate(self.n * k_new);
     }
+
+    /// Pre-reserve storage for up to `k_max` lanes, so every later
+    /// [`inject_columns`](MultiVec::inject_columns) up to that width is
+    /// allocation-free — the streaming driver reserves its maximum batch
+    /// width once at construction and the deflate→refill steady state
+    /// never touches the allocator.
+    pub fn reserve_columns(&mut self, k_max: usize) {
+        let want = self.n * k_max;
+        if want > self.data.len() {
+            self.data.reserve(want - self.data.len());
+        }
+    }
+
+    /// Insert zero-filled lanes at positions `at`, **in place** — the
+    /// widening counterpart of [`compact_columns`](MultiVec::compact_columns).
+    /// `at` are strictly increasing lane indices *in the widened block*
+    /// (`k + at.len()` lanes wide); surviving lanes keep their relative
+    /// order. Backward row-by-row copy: the write index never drops
+    /// below the read index (`r·k_new + dst ≥ r·k_old + src` since
+    /// `k_new ≥ k_old` and `dst ≥ src`), so no scratch is needed, and
+    /// within reserved capacity ([`reserve_columns`](MultiVec::reserve_columns))
+    /// no allocation happens either. The caller fills the new lanes via
+    /// [`set_col`](MultiVec::set_col) (per-engine warm starts).
+    pub fn inject_columns(&mut self, at: &[usize]) {
+        if at.is_empty() {
+            return;
+        }
+        let k_old = self.k;
+        let k_new = k_old + at.len();
+        debug_assert!(
+            at.windows(2).all(|w| w[0] < w[1]) && at[at.len() - 1] < k_new,
+            "inject_columns: at must be strictly increasing lanes < {}",
+            k_new
+        );
+        self.data.resize(self.n * k_new, 0.0);
+        for r in (0..self.n).rev() {
+            let mut src = k_old;
+            let mut ai = at.len();
+            for dst in (0..k_new).rev() {
+                if ai > 0 && at[ai - 1] == dst {
+                    ai -= 1;
+                    self.data[r * k_new + dst] = 0.0;
+                } else {
+                    src -= 1;
+                    self.data[r * k_new + dst] = self.data[r * k_old + src];
+                }
+            }
+        }
+        self.k = k_new;
+    }
 }
 
 #[cfg(test)]
@@ -196,6 +254,56 @@ mod tests {
         mv.compact_columns(&[]);
         assert_eq!(mv.width(), 0);
         assert_eq!(mv.as_slice().len(), 0);
+    }
+
+    #[test]
+    fn inject_inserts_zero_lanes_in_place() {
+        let mut mv = sample();
+        mv.reserve_columns(5);
+        let cap = mv.data.capacity();
+        // new lanes land at positions 1 and 4 of the widened block
+        mv.inject_columns(&[1, 4]);
+        assert_eq!(mv.width(), 5);
+        assert_eq!(mv.col(0), sample().col(0));
+        assert_eq!(mv.col(1), vec![0.0; 4]);
+        assert_eq!(mv.col(2), sample().col(1));
+        assert_eq!(mv.col(3), sample().col(2));
+        assert_eq!(mv.col(4), vec![0.0; 4]);
+        assert_eq!(mv.data.capacity(), cap, "reserved injection must not reallocate");
+        // empty injection is a no-op
+        let before = mv.clone();
+        mv.inject_columns(&[]);
+        assert_eq!(mv, before);
+    }
+
+    #[test]
+    fn inject_roundtrips_compact() {
+        // compacting lanes out then injecting fresh lanes at the same
+        // positions restores the survivors' layout — the streaming
+        // driver's deflate→refill cycle
+        let mut mv = sample();
+        mv.reserve_columns(3);
+        mv.compact_columns(&[0, 2]);
+        mv.inject_columns(&[1]);
+        assert_eq!(mv.width(), 3);
+        assert_eq!(mv.col(0), sample().col(0));
+        assert_eq!(mv.col(1), vec![0.0; 4]);
+        assert_eq!(mv.col(2), sample().col(2));
+        // filling the fresh lane behaves like any other lane
+        mv.set_col(1, &[9.0, 8.0, 7.0, 6.0]);
+        assert_eq!(mv.row(0), &[0.0, 9.0, 2.0]);
+    }
+
+    #[test]
+    fn inject_into_empty_block() {
+        let mut mv = MultiVec::zeros(3, 0);
+        mv.reserve_columns(2);
+        mv.inject_columns(&[0, 1]);
+        assert_eq!((mv.len(), mv.width()), (3, 2));
+        assert!(mv.as_slice().iter().all(|v| *v == 0.0));
+        mv.set_col(0, &[1.0, 2.0, 3.0]);
+        assert_eq!(mv.col(0), vec![1.0, 2.0, 3.0]);
+        assert_eq!(mv.col(1), vec![0.0; 3]);
     }
 
     #[test]

@@ -397,18 +397,40 @@ impl MachineBlock {
     /// `I` by construction, so its §6 transform is the identity
     /// (preconditioning is idempotent).
     pub fn preconditioned_factored(&self) -> Result<(BlockOp, Vec<f64>)> {
+        let (c, d, _) = self.preconditioned_with_whitener()?;
+        Ok((c, d))
+    }
+
+    /// [`preconditioned_factored`](MachineBlock::preconditioned_factored)
+    /// that also hands back the rhs whitener `W_i = (A_iA_iᵀ)^{-1/2}`
+    /// the transform computed — **one** eigensolve per block serves both
+    /// the operator transform and every later rhs whitening (P-HBM's
+    /// rebind, batched `solve_batch`, and streaming admission all go
+    /// through this cached factor; re-deriving it per query would repeat
+    /// the `O(p³)` eigensolve). `None` marks a block whose §6 transform
+    /// is the identity (the input was already whitened).
+    pub fn preconditioned_with_whitener(
+        &self,
+    ) -> Result<(BlockOp, Vec<f64>, Option<Preconditioner>)> {
         match &self.a {
-            BlockOp::Dense(_) => {
-                let (c, d) = self.preconditioned()?;
-                Ok((BlockOp::Dense(c), d))
+            BlockOp::Dense(a) => {
+                let gram = self.a.gram_rows();
+                let eig = sym_eigen(&gram)
+                    .with_context(|| format!("machine {}: §6 gram eigensolve", self.index))?;
+                let inv_sqrt = eig
+                    .inv_sqrt()
+                    .with_context(|| format!("machine {}: §6 gram not SPD", self.index))?;
+                let c = inv_sqrt.matmul(a);
+                let d = inv_sqrt.matvec(&self.b);
+                Ok((BlockOp::Dense(c), d, Some(Preconditioner::from_inv_sqrt(inv_sqrt))))
             }
             BlockOp::Sparse(a) => {
                 let pre = Preconditioner::from_gram(&a.gram_rows())
                     .with_context(|| format!("machine {}: §6 whitening", self.index))?;
                 let d = pre.apply(&self.b);
-                Ok((BlockOp::Whitened(WhitenedCsr::new(a.clone(), pre)), d))
+                Ok((BlockOp::Whitened(WhitenedCsr::new(a.clone(), pre.clone())), d, Some(pre)))
             }
-            BlockOp::Whitened(w) => Ok((BlockOp::Whitened(w.clone()), self.b.clone())),
+            BlockOp::Whitened(w) => Ok((BlockOp::Whitened(w.clone()), self.b.clone(), None)),
         }
     }
 }
@@ -664,12 +686,26 @@ impl PartitionedSystem {
     /// memory) — the dense fallback that used to erase the sparse
     /// backend's win on exactly the §5 workloads is gone.
     pub fn preconditioned(&self) -> Result<PartitionedSystem> {
+        Ok(self.preconditioned_with_whiteners()?.0)
+    }
+
+    /// [`preconditioned`](PartitionedSystem::preconditioned) that also
+    /// returns the per-machine rhs whiteners the transform computed
+    /// (`None` = identity, the block was already whitened) — the cached
+    /// `W_i` consumers (P-HBM rebind / batched rhs transform / streaming
+    /// admission) take them from here so no second per-block eigensolve
+    /// ever runs.
+    pub fn preconditioned_with_whiteners(
+        &self,
+    ) -> Result<(PartitionedSystem, Vec<Option<Preconditioner>>)> {
         let mut blocks = Vec::with_capacity(self.m());
+        let mut whiteners = Vec::with_capacity(self.m());
         for blk in &self.blocks {
-            let (c, d) = blk.preconditioned_factored()?;
+            let (c, d, w) = blk.preconditioned_with_whitener()?;
             blocks.push(MachineBlock::from_op(blk.index, blk.row0, c, d)?);
+            whiteners.push(w);
         }
-        Ok(PartitionedSystem { blocks, n: self.n, n_rows: self.n_rows })
+        Ok((PartitionedSystem { blocks, n: self.n, n_rows: self.n_rows }, whiteners))
     }
 
     /// The §6-preconditioned system with every block forced to the
@@ -1041,6 +1077,36 @@ mod tests {
                 "factored block diverges from the explicit product"
             );
             assert!(max_abs_diff(&f.b, &d.b) < 1e-10);
+        }
+    }
+
+    #[test]
+    fn preconditioned_with_whiteners_caches_the_transform_factor() {
+        // the whitener handed back per block IS the factor the transform
+        // used: W (A_iA_iᵀ) W = I on the original gram, for dense and
+        // CSR backends alike, and a second preconditioning pass returns
+        // None (identity) for every already-whitened block
+        let built = SparseProblem::random_sparse(24, 16, 0.3, 4).build(37);
+        let dense = built.a.to_dense();
+        for sys in [
+            PartitionedSystem::split_even(&dense, &built.b, 4).unwrap(),
+            PartitionedSystem::split_csr(&built.a, &built.b, 4).unwrap(),
+        ] {
+            let (pre, whiteners) = sys.preconditioned_with_whiteners().unwrap();
+            assert_eq!(whiteners.len(), sys.m());
+            for (blk, w) in sys.blocks.iter().zip(&whiteners) {
+                let w = w.as_ref().expect("unwhitened block must yield its W_i");
+                let gram = blk.a.gram_rows();
+                let wgw = w.matrix().matmul(&gram).matmul(w.matrix());
+                assert!(wgw.sub(&Mat::eye(blk.p())).max_abs() < 1e-9, "W G W ≠ I");
+                // the cached factor whitens the rhs exactly as the
+                // transform did
+                let d = w.apply(&blk.b);
+                let pre_blk = &pre.blocks[blk.index];
+                assert!(max_abs_diff(&d, &pre_blk.b) < 1e-12);
+            }
+            let (_, again) = pre.preconditioned_with_whiteners().unwrap();
+            assert!(again.iter().all(|w| w.is_none()), "idempotent pass must yield identity");
         }
     }
 

@@ -81,6 +81,17 @@ impl Preconditioner {
         Ok(Preconditioner { w })
     }
 
+    /// Wrap an already-computed `W = G^{-1/2}` (square symmetric).
+    /// Callers that materialize the §6 transform anyway (the dense
+    /// block path of [`crate::partition::MachineBlock`]) cache their
+    /// eigensolve's output here instead of re-running it — one
+    /// eigensolve per block then serves the operator transform, rebind
+    /// re-whitening, the batched rhs transform, and streaming admission.
+    pub fn from_inv_sqrt(w: Mat) -> Self {
+        assert_eq!(w.rows(), w.cols(), "preconditioner: W must be square");
+        Preconditioner { w }
+    }
+
     /// Block row count `p`.
     pub fn p(&self) -> usize {
         self.w.rows()

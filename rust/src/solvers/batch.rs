@@ -45,6 +45,7 @@ use crate::linalg::vector::relative_error;
 use crate::linalg::MultiVec;
 use crate::parallel::{self, SliceCells};
 use crate::partition::{MachineBlock, PartitionedSystem};
+use crate::precond::Preconditioner;
 use crate::solvers::{Metric, SolverOptions};
 use anyhow::{bail, Context, Result};
 
@@ -156,8 +157,11 @@ pub fn block_rhs(blk: &MachineBlock, rhs: &[Vec<f64>]) -> MultiVec {
 }
 
 /// A method's batched iteration state: the master's `n×k_active` estimate
-/// block, one synchronous round over the whole batch, and the in-place
-/// deflation shrink. The driver ([`run`]) owns everything else.
+/// block, one synchronous round over the whole batch, the in-place
+/// deflation shrink, and mid-run admission of new queries into freed
+/// lanes (the streaming driver, [`crate::solvers::stream`]). The drivers
+/// ([`run`], [`crate::solvers::stream::StreamingBatch`]) own everything
+/// else.
 pub trait BatchEngine {
     /// Current master estimate block (one lane per active column).
     fn xbar(&self) -> &MultiVec;
@@ -167,6 +171,68 @@ pub trait BatchEngine {
     /// Drop every lane not in `keep` (strictly increasing active-lane
     /// indices) from all state, in place.
     fn deflate(&mut self, keep: &[usize]);
+    /// Admit new queries mid-run: widen every lane block
+    /// ([`MultiVec::inject_columns`]) and warm-start each admitted lane
+    /// exactly as the method's single-RHS construction would (zero or
+    /// min-norm init per engine), so the lane's trajectory reproduces a
+    /// standalone solve of that rhs. `cols` pairs each destination lane
+    /// (strictly increasing, indices in the widened block) with the
+    /// query's **global** right-hand side; the engine slices each
+    /// machine's `p`-sized piece through the block row ranges (and
+    /// whitens it where the iterated system is §6-transformed).
+    fn admit(&mut self, cols: &[(usize, &[f64])]) -> Result<()>;
+    /// Pre-reserve every lane block for up to `k_max` lanes, so lane
+    /// storage never reallocates across deflate→admit cycles
+    /// ([`MultiVec::reserve_columns`]).
+    fn reserve_lanes(&mut self, k_max: usize);
+}
+
+/// This machine's `p`-sized slices of the admitted queries' global
+/// right-hand sides, through the block's row range — the one slicing
+/// convention every engine admission shares.
+fn block_slices<'c>(blk: &MachineBlock, cols: &[(usize, &'c [f64])]) -> Vec<(usize, &'c [f64])> {
+    cols.iter().map(|&(l, c)| (l, &c[blk.row0..blk.row1])).collect()
+}
+
+/// Boxed engines drive generic code ([`crate::solvers::stream`]) the
+/// same as concrete ones.
+impl<E: BatchEngine + ?Sized> BatchEngine for Box<E> {
+    fn xbar(&self) -> &MultiVec {
+        (**self).xbar()
+    }
+    fn round(&mut self) {
+        (**self).round()
+    }
+    fn deflate(&mut self, keep: &[usize]) {
+        (**self).deflate(keep)
+    }
+    fn admit(&mut self, cols: &[(usize, &[f64])]) -> Result<()> {
+        (**self).admit(cols)
+    }
+    fn reserve_lanes(&mut self, k_max: usize) {
+        (**self).reserve_lanes(k_max)
+    }
+}
+
+/// Shared admission validation: destination lanes strictly increasing
+/// and in-bounds for the widened block, every rhs spanning the system's
+/// rows.
+fn check_admission(sys: &PartitionedSystem, width: usize, cols: &[(usize, &[f64])]) -> Result<()> {
+    let k_new = width + cols.len();
+    let mut prev: Option<usize> = None;
+    for &(lane, col) in cols {
+        if lane >= k_new {
+            bail!("admit: destination lane {} out of widened batch {}", lane, k_new);
+        }
+        if prev.is_some_and(|p| p >= lane) {
+            bail!("admit: destination lanes must be strictly increasing");
+        }
+        prev = Some(lane);
+        if col.len() != sys.n_rows {
+            bail!("admit: rhs has {} rows, system has {}", col.len(), sys.n_rows);
+        }
+    }
+    Ok(())
 }
 
 /// The shared batched-solve driver: evaluates the per-column metric every
@@ -234,6 +300,16 @@ pub fn run<E: BatchEngine>(
                 columns[col].iterations = round;
                 columns[col].converged = errs[lane] <= opts.tol;
                 engine.xbar().col_into(lane, &mut columns[col].solution);
+                // the freeze is this column's terminal state: always
+                // record it, even off the record_every cadence (same
+                // contract as the single-RHS Solver::solve) — without
+                // this a column deflating at `round % record_every != 0`
+                // never shows its sub-tol sample in the history
+                if opts.record_every > 0
+                    && columns[col].history.last().map(|&(r, _)| r) != Some(round)
+                {
+                    columns[col].history.push((round, errs[lane]));
+                }
             }
         }
         if keep.is_empty() {
@@ -427,6 +503,45 @@ impl BatchEngine for ApcBatch<'_> {
         self.xbar.compact_columns(keep);
         self.sum.compact_columns(keep);
     }
+
+    /// Admitted lanes start at the paper's master initialization: the
+    /// average of the per-machine min-norm feasible points of the new
+    /// rhs — exactly [`super::apc::Apc::with_params`]'s start for that
+    /// query.
+    fn admit(&mut self, cols: &[(usize, &[f64])]) -> Result<()> {
+        check_admission(self.sys, self.xbar.width(), cols)?;
+        let at: Vec<usize> = cols.iter().map(|&(l, _)| l).collect();
+        for (blk, local) in self.sys.blocks.iter().zip(&mut self.locals) {
+            local.admit(blk, &block_slices(blk, cols));
+        }
+        self.xbar.inject_columns(&at);
+        self.sum.inject_columns(&at);
+        let m = self.sys.m() as f64;
+        let mut acc = vec![0.0; self.sys.n];
+        let mut col = vec![0.0; self.sys.n];
+        for &(lane, _) in cols {
+            acc.fill(0.0);
+            for local in &self.locals {
+                local.x.col_into(lane, &mut col);
+                for (a, v) in acc.iter_mut().zip(&col) {
+                    *a += v;
+                }
+            }
+            for a in acc.iter_mut() {
+                *a /= m;
+            }
+            self.xbar.set_col(lane, &acc);
+        }
+        Ok(())
+    }
+
+    fn reserve_lanes(&mut self, k_max: usize) {
+        for l in &mut self.locals {
+            l.reserve_lanes(k_max);
+        }
+        self.xbar.reserve_columns(k_max);
+        self.sum.reserve_columns(k_max);
+    }
 }
 
 /// Batched block Cimmino: `R_i = A_i⁺(B_i − A_i X̄)`,
@@ -499,6 +614,33 @@ impl BatchEngine for CimminoBatch<'_> {
         self.xbar.compact_columns(keep);
         self.sum.compact_columns(keep);
     }
+
+    /// Admitted lanes start at the zero master estimate, like the
+    /// single-RHS Cimmino.
+    fn admit(&mut self, cols: &[(usize, &[f64])]) -> Result<()> {
+        check_admission(self.sys, self.xbar.width(), cols)?;
+        let at: Vec<usize> = cols.iter().map(|&(l, _)| l).collect();
+        for (blk, local) in self.sys.blocks.iter().zip(&mut self.locals) {
+            local.admit(&block_slices(blk, cols));
+        }
+        for r in &mut self.rs {
+            r.inject_columns(&at);
+        }
+        self.xbar.inject_columns(&at);
+        self.sum.inject_columns(&at);
+        Ok(())
+    }
+
+    fn reserve_lanes(&mut self, k_max: usize) {
+        for l in &mut self.locals {
+            l.reserve_lanes(k_max);
+        }
+        for r in &mut self.rs {
+            r.reserve_columns(k_max);
+        }
+        self.xbar.reserve_columns(k_max);
+        self.sum.reserve_columns(k_max);
+    }
 }
 
 /// Master rule of a batched gradient method — which of §4.1–4.3 the
@@ -525,6 +667,15 @@ pub struct GradBatch<'a> {
     aux: MultiVec,
     grad: MultiVec,
     partials: Vec<MultiVec>,
+    /// Per-machine §6 rhs whiteners for admission on a transformed
+    /// system (P-HBM): an admitted query's raw `p`-sized slice is passed
+    /// through the cached `W_i = (A_iA_iᵀ)^{-1/2}` before it reaches the
+    /// local (`None` entry = identity, the block was already whitened;
+    /// empty slice = untransformed system, no whitening at all).
+    /// Borrowed from the owner of the cache (P-HBM) — never cloned: the
+    /// whole point of the cache is that the `p×p` factors are built
+    /// once and shared.
+    whiteners: &'a [Option<Preconditioner>],
 }
 
 impl<'a> GradBatch<'a> {
@@ -543,8 +694,25 @@ impl<'a> GradBatch<'a> {
         rhs_blocks: Vec<MultiVec>,
         rule: GradRule,
     ) -> Result<Self> {
+        Self::with_rhs_blocks_whitened(sys, rhs_blocks, rule, &[])
+    }
+
+    /// [`with_rhs_blocks`](GradBatch::with_rhs_blocks) plus the cached
+    /// per-machine rhs whiteners, so later [`BatchEngine::admit`] calls
+    /// whiten each incoming `p×1` slice through the cached factor
+    /// instead of re-running any eigensolve — the P-HBM streaming path
+    /// ([`super::phbm::Phbm::streaming_engine`]).
+    pub fn with_rhs_blocks_whitened(
+        sys: &'a PartitionedSystem,
+        rhs_blocks: Vec<MultiVec>,
+        rule: GradRule,
+        whiteners: &'a [Option<Preconditioner>],
+    ) -> Result<Self> {
         if rhs_blocks.len() != sys.m() {
             bail!("grad batch: {} rhs blocks for {} machines", rhs_blocks.len(), sys.m());
+        }
+        if !whiteners.is_empty() && whiteners.len() != sys.m() {
+            bail!("grad batch: {} whiteners for {} machines", whiteners.len(), sys.m());
         }
         let k = rhs_blocks.first().map_or(0, |b| b.width());
         if rhs_blocks.iter().any(|b| b.width() != k) {
@@ -564,6 +732,7 @@ impl<'a> GradBatch<'a> {
             aux: MultiVec::zeros(sys.n, k),
             grad: MultiVec::zeros(sys.n, k),
             partials: vec![MultiVec::zeros(sys.n, k); sys.m()],
+            whiteners,
         })
     }
 }
@@ -625,6 +794,49 @@ impl BatchEngine for GradBatch<'_> {
         self.x.compact_columns(keep);
         self.aux.compact_columns(keep);
         self.grad.compact_columns(keep);
+    }
+
+    /// Admitted lanes start at `x = 0` with zero momentum, like every
+    /// single-RHS gradient method. On a §6-transformed system the
+    /// incoming slice is whitened through the cached per-machine `W_i`
+    /// (`O(p²)` — no eigensolve on the admission path).
+    fn admit(&mut self, cols: &[(usize, &[f64])]) -> Result<()> {
+        check_admission(self.sys, self.x.width(), cols)?;
+        let at: Vec<usize> = cols.iter().map(|&(l, _)| l).collect();
+        for (i, (blk, local)) in self.sys.blocks.iter().zip(&mut self.locals).enumerate() {
+            let whitener = self.whiteners.get(i).and_then(|w| w.as_ref());
+            match whitener {
+                Some(w) => {
+                    let whitened: Vec<(usize, Vec<f64>)> = cols
+                        .iter()
+                        .map(|&(l, c)| (l, w.apply(&c[blk.row0..blk.row1])))
+                        .collect();
+                    let slices: Vec<(usize, &[f64])> =
+                        whitened.iter().map(|(l, d)| (*l, d.as_slice())).collect();
+                    local.admit(&slices);
+                }
+                None => local.admit(&block_slices(blk, cols)),
+            }
+        }
+        for p in &mut self.partials {
+            p.inject_columns(&at);
+        }
+        self.x.inject_columns(&at);
+        self.aux.inject_columns(&at);
+        self.grad.inject_columns(&at);
+        Ok(())
+    }
+
+    fn reserve_lanes(&mut self, k_max: usize) {
+        for l in &mut self.locals {
+            l.reserve_lanes(k_max);
+        }
+        for p in &mut self.partials {
+            p.reserve_columns(k_max);
+        }
+        self.x.reserve_columns(k_max);
+        self.aux.reserve_columns(k_max);
+        self.grad.reserve_columns(k_max);
     }
 }
 
@@ -696,6 +908,34 @@ impl BatchEngine for AdmmBatch<'_> {
         }
         self.xbar.compact_columns(keep);
         self.sum.compact_columns(keep);
+    }
+
+    /// Admitted lanes start at the zero master estimate, like the
+    /// single-RHS M-ADMM; the per-lane `A_iᵀ b_i` cache is filled by the
+    /// locals through the b-independent shifted-Gram factors.
+    fn admit(&mut self, cols: &[(usize, &[f64])]) -> Result<()> {
+        check_admission(self.sys, self.xbar.width(), cols)?;
+        let at: Vec<usize> = cols.iter().map(|&(l, _)| l).collect();
+        for (blk, local) in self.sys.blocks.iter().zip(&mut self.locals) {
+            local.admit(blk, &block_slices(blk, cols));
+        }
+        for x in &mut self.xs {
+            x.inject_columns(&at);
+        }
+        self.xbar.inject_columns(&at);
+        self.sum.inject_columns(&at);
+        Ok(())
+    }
+
+    fn reserve_lanes(&mut self, k_max: usize) {
+        for l in &mut self.locals {
+            l.reserve_lanes(k_max);
+        }
+        for x in &mut self.xs {
+            x.reserve_columns(k_max);
+        }
+        self.xbar.reserve_columns(k_max);
+        self.sum.reserve_columns(k_max);
     }
 }
 
@@ -784,15 +1024,60 @@ mod tests {
         rhs[1].pop();
         assert!(solver.solve_batch(&sys, &rhs, &opts).is_err());
         rhs[1].push(0.0);
-        // truth count mismatch
-        let bad = BatchOptions {
+        // truth count mismatch (k−1 truths for k rhs): a clean bail,
+        // never an index panic inside the metric evaluation
+        let bad_count = BatchOptions {
             metric: BatchMetric::ErrorVsTruth(truths[..1].to_vec()),
             ..Default::default()
         };
-        assert!(solver.solve_batch(&sys, &rhs, &bad).is_err());
+        let err = solver.solve_batch(&sys, &rhs, &bad_count).unwrap_err();
+        assert!(err.to_string().contains("truths"), "unclear message: {err}");
+        // truth column length mismatch (≠ n): same contract
+        let mut short = truths.clone();
+        short[1].pop();
+        let bad_len =
+            BatchOptions { metric: BatchMetric::ErrorVsTruth(short), ..Default::default() };
+        let err = solver.solve_batch(&sys, &rhs, &bad_len).unwrap_err();
+        assert!(err.to_string().contains("truth 1"), "unclear message: {err}");
+        // the column-loop baseline enforces the identical contract
+        let mut long = truths.clone();
+        long[0].push(0.0);
+        let bad_long =
+            BatchOptions { metric: BatchMetric::ErrorVsTruth(long), ..Default::default() };
+        assert!(solve_columns_serially(&mut solver, &sys, &rhs, &bad_long).is_err());
         // empty batch is a clean no-op
         let rep = solver.solve_batch(&sys, &[], &opts).unwrap();
         assert_eq!(rep.columns.len(), 0);
         assert_eq!(rep.rounds, 0);
+    }
+
+    #[test]
+    fn rounds_semantics_batched_max_vs_loop_sum() {
+        // BatchReport.rounds is the *max* per-column iteration count on
+        // the batched path (synchronous rounds executed) and the *sum*
+        // on the column-loop baseline (machine-phase dispatch streams
+        // paid) — the throughput benches divide by this number, so both
+        // semantics are pinned here explicitly.
+        let (sys, rhs, _) = sys_and_rhs(3);
+        let opts = BatchOptions { tol: 1e-9, max_iter: 100_000, ..Default::default() };
+        let rep_batch = Apc::auto(&sys).unwrap().solve_batch(&sys, &rhs, &opts).unwrap();
+        let its: Vec<usize> = rep_batch.columns.iter().map(|c| c.iterations).collect();
+        assert!(rep_batch.columns.iter().all(|c| c.converged), "iterations {its:?}");
+        assert_eq!(rep_batch.rounds, *its.iter().max().unwrap());
+        let mut solver = Apc::auto(&sys).unwrap();
+        let rep_loop = solve_columns_serially(&mut solver, &sys, &rhs, &opts).unwrap();
+        assert_eq!(
+            rep_loop.rounds,
+            rep_loop.columns.iter().map(|c| c.iterations).sum::<usize>()
+        );
+        // distinct per-column counts keep the two semantics genuinely
+        // different (a degenerate batch where every column takes the
+        // same count would pin nothing)
+        assert!(
+            rep_loop.columns.iter().any(|c| c.iterations != rep_loop.columns[0].iterations),
+            "want distinct per-column iteration counts, got {:?}",
+            rep_loop.columns.iter().map(|c| c.iterations).collect::<Vec<_>>()
+        );
+        assert_ne!(rep_batch.rounds, rep_loop.rounds);
     }
 }

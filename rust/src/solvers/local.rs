@@ -123,6 +123,33 @@ impl ApcBatchLocal {
         self.scratch_pk.compact_columns(keep);
         self.scratch_nk.compact_columns(keep);
     }
+
+    /// Pre-reserve all lane blocks for up to `k_max` lanes (streaming
+    /// steady-state: admit after deflate without touching the allocator).
+    pub fn reserve_lanes(&mut self, k_max: usize) {
+        self.x.reserve_columns(k_max);
+        self.scratch_pk.reserve_columns(k_max);
+        self.scratch_nk.reserve_columns(k_max);
+    }
+
+    /// Admit new queries mid-run: widen every lane block at the
+    /// destination lanes and warm-start each admitted lane at the
+    /// feasible min-norm point of `A_i x = b_i^{(j)}` — exactly the
+    /// single-RHS [`ApcLocal::new`] initialization (same single-vector
+    /// pinv through the cached Gram factor), so an admitted lane's
+    /// trajectory reproduces the standalone solve. `cols` pairs each
+    /// destination lane (strictly increasing, indices in the widened
+    /// block) with this machine's `p`-sized slice of the query's rhs.
+    pub fn admit(&mut self, blk: &MachineBlock, cols: &[(usize, &[f64])]) {
+        let at: Vec<usize> = cols.iter().map(|&(l, _)| l).collect();
+        self.x.inject_columns(&at);
+        self.scratch_pk.inject_columns(&at);
+        self.scratch_nk.inject_columns(&at);
+        for &(lane, b) in cols {
+            debug_assert_eq!(b.len(), blk.p(), "apc batch admit: rhs slice must be p-sized");
+            self.x.set_col(lane, &blk.pinv_apply(b));
+        }
+    }
 }
 
 /// Gradient worker (shared by DGD / D-NAG / D-HBM): computes the partial
@@ -178,6 +205,27 @@ impl GradBatchLocal {
         self.b.compact_columns(keep);
         self.scratch_pk.compact_columns(keep);
     }
+
+    /// Pre-reserve all lane blocks for up to `k_max` lanes.
+    pub fn reserve_lanes(&mut self, k_max: usize) {
+        self.b.reserve_columns(k_max);
+        self.scratch_pk.reserve_columns(k_max);
+    }
+
+    /// Admit new queries mid-run: widen the lane blocks and store each
+    /// admitted lane's `p`-sized rhs slice in `B_i` (the gradient
+    /// iterate itself starts at the master's zero lane, like the
+    /// single-RHS methods). For P-HBM the engine hands the §6-whitened
+    /// slice `d_i = W_i b_i` here.
+    pub fn admit(&mut self, cols: &[(usize, &[f64])]) {
+        let at: Vec<usize> = cols.iter().map(|&(l, _)| l).collect();
+        self.b.inject_columns(&at);
+        self.scratch_pk.inject_columns(&at);
+        for &(lane, b) in cols {
+            debug_assert_eq!(b.len(), self.b.len(), "grad batch admit: rhs slice must be p-sized");
+            self.b.set_col(lane, b);
+        }
+    }
 }
 
 /// Block-Cimmino worker: `r_i = A_i⁺ (b_i − A_i x̄)`.
@@ -231,6 +279,28 @@ impl CimminoBatchLocal {
     pub fn deflate(&mut self, keep: &[usize]) {
         self.b.compact_columns(keep);
         self.scratch_pk.compact_columns(keep);
+    }
+
+    /// Pre-reserve all lane blocks for up to `k_max` lanes.
+    pub fn reserve_lanes(&mut self, k_max: usize) {
+        self.b.reserve_columns(k_max);
+        self.scratch_pk.reserve_columns(k_max);
+    }
+
+    /// Admit new queries mid-run: widen the lane blocks and store each
+    /// admitted lane's `p`-sized rhs slice in `B_i`.
+    pub fn admit(&mut self, cols: &[(usize, &[f64])]) {
+        let at: Vec<usize> = cols.iter().map(|&(l, _)| l).collect();
+        self.b.inject_columns(&at);
+        self.scratch_pk.inject_columns(&at);
+        for &(lane, b) in cols {
+            debug_assert_eq!(
+                b.len(),
+                self.b.len(),
+                "cimmino batch admit: rhs slice must be p-sized"
+            );
+            self.b.set_col(lane, b);
+        }
     }
 }
 
@@ -354,6 +424,29 @@ impl AdmmBatchLocal {
         self.atb.compact_columns(keep);
         self.scratch_pk.compact_columns(keep);
         self.scratch_nk.compact_columns(keep);
+    }
+
+    /// Pre-reserve all lane blocks for up to `k_max` lanes.
+    pub fn reserve_lanes(&mut self, k_max: usize) {
+        self.atb.reserve_columns(k_max);
+        self.scratch_pk.reserve_columns(k_max);
+        self.scratch_nk.reserve_columns(k_max);
+    }
+
+    /// Admit new queries mid-run: widen the lane blocks and cache each
+    /// admitted lane's `A_iᵀ b_i` — the same rhs-derived state
+    /// [`AdmmLocal::rebind`] recomputes, through the single-vector
+    /// kernel the standalone path uses. The shifted-Gram factor is
+    /// b-independent and shared with the new lanes as-is.
+    pub fn admit(&mut self, blk: &MachineBlock, cols: &[(usize, &[f64])]) {
+        let at: Vec<usize> = cols.iter().map(|&(l, _)| l).collect();
+        self.atb.inject_columns(&at);
+        self.scratch_pk.inject_columns(&at);
+        self.scratch_nk.inject_columns(&at);
+        for &(lane, b) in cols {
+            debug_assert_eq!(b.len(), blk.p(), "admm batch admit: rhs slice must be p-sized");
+            self.atb.set_col(lane, &blk.a.tr_matvec(b));
+        }
     }
 }
 
@@ -603,6 +696,80 @@ mod tests {
             single.step(&b2, &xbar_cols[j], &mut o1);
             assert!(max_abs_diff(&out.col(j), &o1) < 1e-11, "admm batch lane {j}");
         }
+    }
+
+    #[test]
+    fn apc_batch_local_admit_matches_fresh_lane() {
+        // a lane admitted mid-run warm-starts exactly like a standalone
+        // ApcLocal on that rhs, and the surviving lanes keep stepping as
+        // if nothing happened
+        let sys = sys();
+        let blk = &sys.blocks[0];
+        let rhs = rhs_block(blk, 3);
+        let survivors = MultiVec::from_columns(&[rhs.col(0), rhs.col(2)]);
+        let mut batch = ApcBatchLocal::new(blk, 0.9, &survivors).unwrap();
+        batch.reserve_lanes(3);
+        let xbar2 = MultiVec::from_columns(&[vec![0.2; 9], vec![-0.1; 9]]);
+        for _ in 0..3 {
+            batch.step(blk, &xbar2);
+        }
+        let kept: Vec<Vec<f64>> = (0..2).map(|t| batch.x.col(t)).collect();
+        // admit the middle rhs back into lane 1
+        let new_col = rhs.col(1);
+        batch.admit(blk, &[(1, &new_col)]);
+        assert_eq!(batch.x.width(), 3);
+        assert!(max_abs_diff(&batch.x.col(0), &kept[0]) == 0.0, "survivor lane 0 moved");
+        assert!(max_abs_diff(&batch.x.col(2), &kept[1]) == 0.0, "survivor lane 2 moved");
+        let mut b2 = blk.clone();
+        b2.b = new_col.clone();
+        let single = ApcLocal::new(&b2, 0.9).unwrap();
+        assert!(
+            max_abs_diff(&batch.x.col(1), &single.x) < 1e-15,
+            "admitted lane must start at the standalone min-norm point"
+        );
+        // one more step over the widened block still matches lane-by-lane
+        let xbar3 = MultiVec::from_columns(&[vec![0.2; 9], vec![0.05; 9], vec![-0.1; 9]]);
+        batch.step(blk, &xbar3);
+        let mut s1 = single;
+        s1.step(&b2, &[0.05; 9]);
+        assert!(max_abs_diff(&batch.x.col(1), &s1.x) < 1e-12);
+    }
+
+    #[test]
+    fn grad_cimmino_admm_admit_store_per_lane_rhs() {
+        let sys = sys();
+        let blk = &sys.blocks[2];
+        let rhs = rhs_block(blk, 3);
+        let p = blk.p();
+
+        let mut g = GradBatchLocal::new(blk, &MultiVec::from_columns(&[rhs.col(0)]));
+        let (c1, c2) = (rhs.col(1), rhs.col(2));
+        g.admit(&[(1, &c1), (2, &c2)]);
+        assert_eq!(g.b.width(), 3);
+        for j in 0..3 {
+            assert_eq!(g.b.col(j), rhs.col(j), "grad lane {j}");
+        }
+
+        let mut c = CimminoBatchLocal::new(blk, &MultiVec::zeros(p, 0));
+        let c0 = rhs.col(0);
+        c.admit(&[(0, &c0)]);
+        assert_eq!(c.b.col(0), rhs.col(0));
+
+        let mut a = AdmmBatchLocal::new(blk, 0.7, &MultiVec::from_columns(&[rhs.col(0)])).unwrap();
+        a.admit(blk, &[(1, &c1)]);
+        // the admitted lane's cached AᵀB column equals the rebind path's
+        let expect = blk.a.tr_matvec(&rhs.col(1));
+        assert!(max_abs_diff(&a.atb.col(1), &expect) == 0.0);
+        // and a step over the widened block matches the standalone solve
+        let xbar = MultiVec::from_columns(&[vec![0.1; 9], vec![-0.2; 9]]);
+        let mut out = MultiVec::zeros(9, 2);
+        a.step(blk, &xbar, &mut out);
+        let mut b2 = blk.clone();
+        b2.b = rhs.col(1);
+        let mut single = AdmmLocal::new(&b2, 0.7).unwrap();
+        let mut o1 = vec![0.0; 9];
+        single.step(&b2, &[-0.2; 9], &mut o1);
+        assert!(max_abs_diff(&out.col(1), &o1) < 1e-11);
     }
 
     #[test]

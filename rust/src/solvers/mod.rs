@@ -11,6 +11,7 @@
 //! | [`hbm`] | distributed heavy-ball | 2pn | 2pnk, one GEMM pass | `≈ 1 − 2/√κ(AᵀA)` |
 //! | [`admm`] | modified consensus-ADMM (y≡0, §4.4) | 2pn (inversion lemma) | 2pnk, one shifted factor | monotone in ξ, see `rates` |
 //! | [`phbm`] | §6 preconditioned heavy-ball | 2pn | 2pnk over the whitened blocks | same as APC |
+//! | [`stream`] | streaming batch refill (any engine above) | 2pn·k_active | holds k at `max_width` under load | inherits the engine's ρ per lane |
 //!
 //! The batched column costs every method `2pnk` flops per machine per
 //! round in **one** streamed pass of `A_i` (GEMM/SpMM over an `n×k`
@@ -18,7 +19,11 @@
 //! column loop's `k` separate `2pn` passes and `k` barriers. The cached
 //! `p×p` Gram factor is shared by all `k` lanes through multi-column
 //! triangular solves, and deflation shrinks `k` to the still-unconverged
-//! lane count as columns hit their tolerance (see [`batch`]).
+//! lane count as columns hit their tolerance (see [`batch`]). The
+//! streaming driver ([`stream`]) closes the serving loop: freed lanes
+//! are refilled from an admission queue mid-run, so under sustained
+//! traffic the GEMM width never decays toward the starved tail the
+//! drain-only batch pays (`benches/stream_throughput.rs`).
 //!
 //! Each method factors its per-machine work into a `local` kernel (in
 //! [`local`]) shared verbatim by the single-process loop here and by the
@@ -44,6 +49,7 @@ pub mod hbm;
 pub mod local;
 pub mod nag;
 pub mod phbm;
+pub mod stream;
 pub mod suite;
 
 use crate::linalg::vector::relative_error;
@@ -145,6 +151,17 @@ pub trait Solver {
             if opts.record_every > 0 && it % opts.record_every == 0 {
                 history.push((it, err));
             }
+        }
+        // terminal sample: a run that stops on its metric (sub-tol or
+        // non-finite) always records its final state, even off the
+        // record_every cadence — the batched driver mirrors this on
+        // deflation freeze. A max_iter exit records nothing extra (the
+        // horizon is the caller's cut, not the trajectory's).
+        if opts.record_every > 0
+            && (err <= opts.tol || !err.is_finite())
+            && history.last().map(|&(i, _)| i) != Some(it)
+        {
+            history.push((it, err));
         }
         Ok(SolveReport {
             solver: self.name(),

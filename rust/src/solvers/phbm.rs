@@ -10,7 +10,7 @@ use super::batch::{self, GradRule};
 use super::hbm::Hbm;
 use super::Solver;
 use crate::linalg::MultiVec;
-use crate::partition::{BlockOp, PartitionedSystem};
+use crate::partition::PartitionedSystem;
 use crate::precond::Preconditioner;
 use crate::rates::{hbm_optimal, SpectralInfo};
 use anyhow::{bail, Context, Result};
@@ -28,33 +28,14 @@ pub struct Phbm {
     inner: Hbm,
     /// Cached per-machine `W_i = (A_iA_iᵀ)^{-1/2}` — the rhs transform
     /// `d_i = W_i b_i` is the only b-dependent piece of the §6 setup, so
-    /// [`Phbm::rebind`] and the batched rhs whitening reuse these instead
-    /// of re-running the per-block eigensolves per query. `None` marks a
-    /// block whose §6 transform is the identity (the input block was
-    /// already whitened; preconditioning is idempotent).
+    /// [`Phbm::rebind`], the batched rhs whitening and streaming
+    /// admission all reuse these instead of re-running any per-block
+    /// eigensolve. Captured from the block transform itself
+    /// ([`PartitionedSystem::preconditioned_with_whiteners`]): one
+    /// eigensolve per block, ever. `None` marks a block whose §6
+    /// transform is the identity (the input block was already whitened;
+    /// preconditioning is idempotent).
     whiteners: Vec<Option<Preconditioner>>,
-}
-
-/// One rhs whitener per machine: an already-whitened input block gets the
-/// identity (`None`, matching the idempotent block pass-through); sparse
-/// blocks already carry their `W_i` inside [`BlockOp::Whitened`]; dense
-/// blocks recompute it from the original row Gram (the same
-/// `sym_eigen → inv_sqrt` the block transform ran).
-fn whiteners_for(
-    sys: &PartitionedSystem,
-    pre_sys: &PartitionedSystem,
-) -> Result<Vec<Option<Preconditioner>>> {
-    sys.blocks
-        .iter()
-        .zip(&pre_sys.blocks)
-        .map(|(orig, pre)| match (&orig.a, &pre.a) {
-            (BlockOp::Whitened(_), _) => Ok(None),
-            (_, BlockOp::Whitened(w)) => Ok(Some(w.preconditioner().clone())),
-            _ => Preconditioner::from_gram(&orig.a.gram_rows())
-                .map(Some)
-                .with_context(|| format!("machine {}: §6 rhs whitening", orig.index)),
-        })
-        .collect()
 }
 
 impl Phbm {
@@ -73,11 +54,11 @@ impl Phbm {
     /// which on sparse systems would otherwise be the only dense `O(n³)`
     /// step left in the pipeline.
     pub fn auto_with_spectral(sys: &PartitionedSystem, s: &SpectralInfo) -> Result<Self> {
-        let pre_sys = sys.preconditioned().context("§6 preconditioning")?;
+        let (pre_sys, whiteners) =
+            sys.preconditioned_with_whiteners().context("§6 preconditioning")?;
         let m = sys.m() as f64;
         let (alpha, beta, _) = hbm_optimal(m * s.mu_min, m * s.mu_max);
         let inner = Hbm::with_params(&pre_sys, alpha, beta);
-        let whiteners = whiteners_for(sys, &pre_sys)?;
         Ok(Phbm { pre_sys, inner, whiteners })
     }
 
@@ -92,15 +73,30 @@ impl Phbm {
 
     /// Explicit momentum parameters on the preconditioned system.
     pub fn with_params(sys: &PartitionedSystem, alpha: f64, beta: f64) -> Result<Self> {
-        let pre_sys = sys.preconditioned().context("§6 preconditioning")?;
+        let (pre_sys, whiteners) =
+            sys.preconditioned_with_whiteners().context("§6 preconditioning")?;
         let inner = Hbm::with_params(&pre_sys, alpha, beta);
-        let whiteners = whiteners_for(sys, &pre_sys)?;
         Ok(Phbm { pre_sys, inner, whiteners })
     }
 
     /// The transformed system (exposed for rate verification in benches).
     pub fn preconditioned_system(&self) -> &PartitionedSystem {
         &self.pre_sys
+    }
+
+    /// An empty batched engine over the internally held §6-transformed
+    /// system, carrying the cached per-machine rhs whiteners — the
+    /// P-HBM entry point of the streaming driver
+    /// ([`crate::solvers::stream::StreamingBatch`]): every query
+    /// admitted mid-run has its `p×1` per-machine slices whitened
+    /// through the cached `W_i` (an `O(p²)` matvec each; the `O(p³)`
+    /// eigensolves ran once at construction). Pair it with the
+    /// **original** system as the driver's metric system, like
+    /// [`Phbm::solve_batch`].
+    pub fn streaming_engine(&self) -> Result<batch::GradBatch<'_>> {
+        let rule = GradRule::Hbm { alpha: self.inner.alpha, beta: self.inner.beta };
+        let empty = self.pre_sys.blocks.iter().map(|b| MultiVec::zeros(b.p(), 0)).collect();
+        batch::GradBatch::with_rhs_blocks_whitened(&self.pre_sys, empty, rule, &self.whiteners)
     }
 }
 
@@ -186,7 +182,8 @@ impl Solver for Phbm {
             });
         }
         let rule = GradRule::Hbm { alpha: inner.alpha, beta: inner.beta };
-        let mut engine = batch::GradBatch::with_rhs_blocks(pre_sys, rhs_blocks, rule)?;
+        let mut engine =
+            batch::GradBatch::with_rhs_blocks_whitened(pre_sys, rhs_blocks, rule, whiteners)?;
         batch::run(&mut engine, sys, rhs, opts, "P-HBM")
     }
 }

@@ -220,6 +220,58 @@ fn deflation_matches_single_rhs_whitened() {
 }
 
 #[test]
+fn deflation_records_terminal_sample_off_cadence() {
+    // record_every far above any convergence horizon: without the
+    // always-push-on-freeze rule a converged column's history would hold
+    // only the round-0 sample and its sub-tol terminal metric would be
+    // invisible — the driver must append the final (round, err) exactly
+    // like the single-RHS recording.
+    let built = apc::gen::problems::SparseProblem::random_sparse(36, 24, 0.3, 4).build(67);
+    let sys = PartitionedSystem::split_even(&built.a.to_dense(), &built.b, 4).unwrap();
+    let rhs = rhs_columns(sys.n_rows, 3, 29);
+    let opts = BatchOptions {
+        tol: 1e-8,
+        max_iter: 5_000,
+        metric: BatchMetric::Residual,
+        record_every: 100_000, // only round 0 is on-cadence
+    };
+    let mut solver = Apc::auto(&sys).unwrap();
+    let rep = solver.solve_batch(&sys, &rhs, &opts).unwrap();
+    for (j, col) in rep.columns.iter().enumerate() {
+        assert!(col.converged, "column {j} err {:.2e}", col.final_error);
+        assert!(col.iterations > 0, "column {j} must take at least one round");
+        // exactly the initial sample plus the terminal freeze sample
+        assert_eq!(col.history.len(), 2, "column {j} history {:?}", col.history);
+        assert_eq!(
+            col.history[1],
+            (col.iterations, col.final_error),
+            "column {j} terminal sample missing or wrong"
+        );
+        assert!(col.history[1].1 <= opts.tol, "column {j} terminal sample not sub-tol");
+        // and it matches the single-RHS recording sample for sample
+        let mut wsys = sys.clone();
+        wsys.set_rhs(&rhs[j]).unwrap();
+        let srep = Apc::auto(&wsys)
+            .unwrap()
+            .solve(
+                &wsys,
+                &apc::solvers::SolverOptions {
+                    tol: opts.tol,
+                    max_iter: opts.max_iter,
+                    metric: apc::solvers::Metric::Residual,
+                    record_every: opts.record_every,
+                },
+            )
+            .unwrap();
+        assert_eq!(col.history.len(), srep.history.len(), "column {j} vs single-RHS");
+        for ((ri, ei), (rj, ej)) in col.history.iter().zip(&srep.history) {
+            assert_eq!(ri, rj, "column {j} sample rounds");
+            assert!((ei - ej).abs() <= TOL, "column {j} sample values");
+        }
+    }
+}
+
+#[test]
 fn batch_is_invariant_to_column_order() {
     // per-lane arithmetic is independent of lane position and batch
     // width, so permuting the RHS columns must permute the reports —

@@ -1,0 +1,304 @@
+//! Streaming-admission parity: every query admitted **mid-run** into a
+//! [`StreamingBatch`] must reproduce its standalone single-RHS
+//! trajectory — same iteration count, same recorded history sample for
+//! sample (≤ 1e-12, the `batch_parity.rs` methodology: multi-vector
+//! kernels sum in a different order than single-vector ones), same
+//! frozen solution — on dense, CSR and §6-whitened backends. The
+//! per-query round offsets are what make this non-trivial: a query
+//! admitted at driver round `r` must report ages, not driver rounds.
+//!
+//! Also pins the rebind surface the streaming/serving path hammers:
+//! after N successive [`PartitionedSystem::set_rhs`] calls, one
+//! [`Solver::rebind`] must leave the solver serving the *latest* rhs
+//! (ADMM's cached `A_iᵀb_i`, P-HBM's whitened `d_i`), bit-identical to
+//! a solver constructed fresh on that rhs.
+
+use apc::linalg::vector::max_abs_diff;
+use apc::partition::PartitionedSystem;
+use apc::solvers::batch::{
+    AdmmBatch, ApcBatch, BatchEngine, CimminoBatch, GradBatch, GradRule,
+};
+use apc::solvers::stream::{StreamOptions, StreamingBatch};
+use apc::solvers::{
+    admm::Admm, admm::FullAdmm, apc::Apc, cimmino::Cimmino, hbm::Hbm, phbm::Phbm, Metric, Solver,
+    SolverOptions,
+};
+
+const FOUR: [&str; 4] = ["apc", "cimmino", "hbm", "admm"];
+const TOL: f64 = 1e-12;
+
+/// Fixed, stable parameters shared by the streamed engine and the
+/// single-RHS reference (`batch_parity.rs` values: parity needs
+/// non-expansive iterations so kernel rounding cannot grow).
+fn empty_engine<'a>(name: &str, sys: &'a PartitionedSystem) -> Box<dyn BatchEngine + 'a> {
+    match name {
+        "apc" => Box::new(ApcBatch::new(sys, &[], 0.9, 1.1).unwrap()),
+        "cimmino" => Box::new(CimminoBatch::new(sys, &[], 0.05).unwrap()),
+        "hbm" => {
+            Box::new(GradBatch::new(sys, &[], GradRule::Hbm { alpha: 1e-3, beta: 0.5 }).unwrap())
+        }
+        "admm" => Box::new(AdmmBatch::new(sys, &[], 1.0).unwrap()),
+        other => panic!("no empty engine for {other}"),
+    }
+}
+
+fn fixed_solver(name: &str, sys: &PartitionedSystem) -> Box<dyn Solver> {
+    match name {
+        "apc" => Box::new(Apc::with_params(sys, 0.9, 1.1).unwrap()),
+        "cimmino" => Box::new(Cimmino::with_params(sys, 0.05)),
+        "hbm" => Box::new(Hbm::with_params(sys, 1e-3, 0.5)),
+        "admm" => Box::new(Admm::with_params(sys, 1.0).unwrap()),
+        other => panic!("no fixed tuning for {other}"),
+    }
+}
+
+/// `k` deterministic RHS columns spanning the system's rows.
+fn rhs_columns(n_rows: usize, k: usize, seed: u64) -> Vec<Vec<f64>> {
+    (0..k)
+        .map(|j| {
+            (0..n_rows)
+                .map(|i| (((i * (k + j + 1)) as f64 + seed as f64 * 0.11) * 0.43).sin())
+                .collect()
+        })
+        .collect()
+}
+
+/// Stream six queries through a width-3 batch with staggered arrivals
+/// (so admissions land in a *running*, partially converged batch) and
+/// pin every query against its standalone solve.
+fn pin_streaming(sys: &PartitionedSystem, label: &str) {
+    let rhs = rhs_columns(sys.n_rows, 6, 5);
+    let arrivals = [0usize, 0, 0, 1, 3, 7];
+    for name in FOUR {
+        let opts = StreamOptions {
+            max_width: 3,
+            tol: 1e-8,
+            max_iter: 400,
+            record_every: 1,
+            ..Default::default()
+        };
+        let mut stream = StreamingBatch::new(empty_engine(name, sys), sys, opts, "pin").unwrap();
+        let mut next = 0usize;
+        while next < rhs.len() || !stream.is_drained() {
+            while next < rhs.len() && arrivals[next] <= stream.round() {
+                stream.submit(rhs[next].clone()).unwrap();
+                next += 1;
+            }
+            stream.tick().unwrap();
+        }
+        let rep = stream.finish();
+        assert_eq!(rep.queries.len(), 6);
+        // arrivals 3..6 landed in a non-empty running batch: true mid-run
+        // admission, not a fresh batch in disguise
+        for (j, q) in rep.queries.iter().enumerate() {
+            let admitted = q.admitted.unwrap_or_else(|| panic!("{name}: query {j} never ran"));
+            assert!(admitted >= arrivals[j], "{name}: query {j} admitted before it arrived");
+        }
+        assert!(
+            rep.queries[3].admitted.unwrap() > 0,
+            "{name} on {label}: query 3 must join a running batch"
+        );
+        for (j, q) in rep.queries.iter().enumerate() {
+            let col = q.report.as_ref().unwrap();
+            let mut wsys = sys.clone();
+            wsys.set_rhs(&rhs[j]).unwrap();
+            let mut single = fixed_solver(name, &wsys);
+            let srep = single
+                .solve(
+                    &wsys,
+                    &SolverOptions {
+                        tol: 1e-8,
+                        max_iter: 400,
+                        metric: Metric::Residual,
+                        record_every: 1,
+                    },
+                )
+                .unwrap();
+            assert_eq!(
+                col.iterations, srep.iterations,
+                "{name} on {label}: query {j} ran {} rounds, standalone {}",
+                col.iterations, srep.iterations
+            );
+            assert_eq!(col.converged, srep.converged, "{name} on {label}: query {j}");
+            assert_eq!(
+                col.history.len(),
+                srep.history.len(),
+                "{name} on {label}: query {j} sampled a different number of rounds"
+            );
+            for ((ri, ei), (rj, ej)) in col.history.iter().zip(&srep.history) {
+                assert_eq!(ri, rj, "{name} on {label}: query {j} sample offset drifted");
+                assert!(
+                    (ei - ej).abs() <= TOL,
+                    "{name} on {label}: query {j} history diverged at age {ri}: \
+                     {ei:.3e} vs {ej:.3e}"
+                );
+            }
+            assert!(
+                max_abs_diff(&col.solution, &srep.solution) <= TOL,
+                "{name} on {label}: query {j} solution diverged"
+            );
+        }
+    }
+}
+
+#[test]
+fn streamed_queries_match_single_rhs_dense() {
+    let built = apc::gen::problems::SparseProblem::random_sparse(48, 32, 0.2, 4).build(71);
+    let sys = PartitionedSystem::split_even(&built.a.to_dense(), &built.b, 4).unwrap();
+    assert!(sys.blocks.iter().all(|b| !b.a.is_sparse()));
+    pin_streaming(&sys, "dense blocks");
+}
+
+#[test]
+fn streamed_queries_match_single_rhs_csr() {
+    let built = apc::gen::problems::SparseProblem::random_sparse(48, 32, 0.2, 4).build(71);
+    let sys = PartitionedSystem::split_csr_nnz_balanced(&built.a, &built.b, 4).unwrap();
+    assert!(sys.blocks.iter().all(|b| b.a.is_sparse()));
+    pin_streaming(&sys, "CSR blocks");
+}
+
+#[test]
+fn streamed_queries_match_single_rhs_whitened() {
+    // BlockOp::Whitened backend: engines run over the §6-preconditioned
+    // system, so admission exercises the whitened multi-kernels and the
+    // whitened-backend pinv warm start.
+    let built = apc::gen::problems::SparseProblem::random_sparse(40, 28, 0.25, 4).build(73);
+    let sys = PartitionedSystem::split_csr(&built.a, &built.b, 4).unwrap();
+    let pre = sys.preconditioned().unwrap();
+    assert!(pre.blocks.iter().all(|b| b.a.csr().is_some() && b.a.dense().is_err()));
+    pin_streaming(&pre, "whitened blocks");
+}
+
+#[test]
+fn phbm_streaming_admission_whitens_through_cached_factor() {
+    // End-to-end P-HBM serving: queries live in the ORIGINAL space; the
+    // engine iterates the transformed system and whitens each admitted
+    // query's per-machine slices through the W_i cached at construction
+    // (no eigensolve on the admission path). Every query must match a
+    // standalone P-HBM solve of that rhs.
+    let built = apc::gen::problems::SparseProblem::random_sparse(64, 32, 0.25, 4).build(79);
+    let sys = PartitionedSystem::split_csr_nnz_balanced(&built.a, &built.b, 4).unwrap();
+    let solver = Phbm::with_params(&sys, 0.2, 0.5).unwrap();
+    let opts = StreamOptions {
+        max_width: 2,
+        tol: 1e-8,
+        max_iter: 1_000,
+        record_every: 1,
+        ..Default::default()
+    };
+    let mut stream =
+        StreamingBatch::new(solver.streaming_engine().unwrap(), &sys, opts, "P-HBM").unwrap();
+    let rhs = rhs_columns(sys.n_rows, 4, 11);
+    let arrivals = [0usize, 0, 2, 5];
+    let mut next = 0usize;
+    while next < rhs.len() || !stream.is_drained() {
+        while next < rhs.len() && arrivals[next] <= stream.round() {
+            stream.submit(rhs[next].clone()).unwrap();
+            next += 1;
+        }
+        stream.tick().unwrap();
+    }
+    let rep = stream.finish();
+    for (j, q) in rep.queries.iter().enumerate() {
+        let col = q.report.as_ref().unwrap();
+        let mut wsys = sys.clone();
+        wsys.set_rhs(&rhs[j]).unwrap();
+        // fresh P-HBM on the re-pointed system: same operators, same
+        // cached W_i arithmetic, rhs whitened at construction
+        let mut single = Phbm::with_params(&wsys, 0.2, 0.5).unwrap();
+        let srep = single
+            .solve(
+                &wsys,
+                &SolverOptions {
+                    tol: 1e-8,
+                    max_iter: 1_000,
+                    metric: Metric::Residual,
+                    record_every: 1,
+                },
+            )
+            .unwrap();
+        assert_eq!(col.iterations, srep.iterations, "P-HBM query {j}");
+        assert_eq!(col.converged, srep.converged, "P-HBM query {j}");
+        for ((ri, ei), (rj, ej)) in col.history.iter().zip(&srep.history) {
+            assert_eq!(ri, rj);
+            assert!(
+                (ei - ej).abs() <= TOL,
+                "P-HBM query {j} history diverged at age {ri}: {ei:.3e} vs {ej:.3e}"
+            );
+        }
+        assert!(
+            max_abs_diff(&col.solution, &srep.solution) <= TOL,
+            "P-HBM query {j} solution diverged"
+        );
+    }
+}
+
+// ---------------------------------------------------------------------------
+// set_rhs + rebind under repeated rebinding (the path the streaming
+// serving loop hammers)
+// ---------------------------------------------------------------------------
+
+fn rebind_system() -> (PartitionedSystem, Vec<Vec<f64>>) {
+    let built = apc::gen::problems::SparseProblem::random_sparse(36, 24, 0.3, 4).build(83);
+    let sys = PartitionedSystem::split_even(&built.a.to_dense(), &built.b, 4).unwrap();
+    let rhs = rhs_columns(sys.n_rows, 3, 17);
+    (sys, rhs)
+}
+
+fn solve_opts() -> SolverOptions {
+    SolverOptions { tol: 1e-8, max_iter: 5_000, metric: Metric::Residual, record_every: 0 }
+}
+
+/// N successive `set_rhs` calls then ONE rebind: the solver must serve
+/// the *latest* rhs, bit-identical to a fresh solver built on it (the
+/// cached-state hazard: ADMM's `A_iᵀb_i` and P-HBM's whitened `d_i`
+/// frozen at the first rhs).
+fn pin_rebind_latest<S: Solver, F: Fn(&PartitionedSystem) -> S>(make: F, name: &str) {
+    let (sys, rhs) = rebind_system();
+    let mut work = sys.clone();
+    let mut solver = make(&sys);
+    // hammer: three rebinds across queries, then three set_rhs with a
+    // single trailing rebind — both orders must land on the latest rhs
+    for b in &rhs {
+        work.set_rhs(b).unwrap();
+        solver.rebind(&work).unwrap();
+        let rep = solver.solve(&work, &solve_opts()).unwrap();
+        let mut fresh_sys = sys.clone();
+        fresh_sys.set_rhs(b).unwrap();
+        let fresh = make(&fresh_sys).solve(&fresh_sys, &solve_opts()).unwrap();
+        assert_eq!(rep.iterations, fresh.iterations, "{name}: rebound iteration count");
+        assert_eq!(rep.solution, fresh.solution, "{name}: rebound solve drifted");
+    }
+    for b in &rhs {
+        work.set_rhs(b).unwrap(); // no rebind between — only the last matters
+    }
+    solver.rebind(&work).unwrap();
+    let rep = solver.solve(&work, &solve_opts()).unwrap();
+    let mut fresh_sys = sys.clone();
+    fresh_sys.set_rhs(&rhs[2]).unwrap();
+    let fresh = make(&fresh_sys).solve(&fresh_sys, &solve_opts()).unwrap();
+    assert_eq!(rep.iterations, fresh.iterations, "{name}: stale cache after N set_rhs");
+    assert_eq!(rep.solution, fresh.solution, "{name}: must track the LATEST rhs, not the first");
+}
+
+#[test]
+fn admm_rebind_tracks_latest_rhs() {
+    pin_rebind_latest(|s| Admm::with_params(s, 1.0).unwrap(), "M-ADMM");
+}
+
+#[test]
+fn full_admm_rebind_tracks_latest_rhs() {
+    pin_rebind_latest(|s| FullAdmm::with_params(s, 1.0).unwrap(), "ADMM(full)");
+}
+
+#[test]
+fn phbm_rebind_tracks_latest_rhs() {
+    pin_rebind_latest(|s| Phbm::with_params(s, 0.2, 0.5).unwrap(), "P-HBM");
+}
+
+#[test]
+fn apc_default_rebind_tracks_latest_rhs() {
+    // control: the default rebind (= reset) path — APC's locals re-read
+    // blk.b, so repeated set_rhs needs no cache invalidation
+    pin_rebind_latest(|s| Apc::with_params(s, 0.9, 1.1).unwrap(), "APC");
+}
