@@ -1,9 +1,19 @@
-//! The taskmaster: spawns workers, drives synchronous rounds, folds
-//! responses, monitors convergence.
+//! The taskmaster: drives (semi-)synchronous rounds over a [`Transport`],
+//! folds responses, tracks per-worker liveness, monitors convergence.
+//!
+//! The round loop never touches threads or channels directly — it speaks
+//! [`Transport`], so the same code runs against real in-process workers
+//! ([`ChannelTransport`]) and against thousands of simulated machines
+//! ([`crate::sim::SimTransport`]). [`QuorumConfig`] decides when a round
+//! folds: the default is the paper's full barrier (bit-exact with the
+//! single-process solvers); `semi_sync(q, deadline)` proceeds at `q`
+//! responses or a deadline, folding one-round-stale responses for the
+//! averaging family and re-weighting silent workers out of the average.
 
 use super::metrics::RunMetrics;
-use super::protocol::{FromWorker, Method, StragglerSpec, ToWorker};
-use super::worker::{self, WorkerSpec};
+use super::protocol::{FromWorker, Method, QuorumConfig, StragglerSpec, ToWorker};
+use super::transport::{ChannelTransport, Transport, TransportEvent};
+use super::worker::WorkerSpec;
 use crate::config::Backend;
 use crate::linalg::vector::relative_error;
 use crate::partition::PartitionedSystem;
@@ -11,14 +21,12 @@ use crate::runtime::Manifest;
 use crate::solvers::local::master_momentum_average;
 use crate::solvers::{Metric, SolveReport, SolverOptions};
 use anyhow::{bail, Context, Result};
-use std::sync::mpsc::{channel, Receiver, Sender};
 use std::sync::Arc;
-use std::thread::JoinHandle;
 use std::time::Instant;
 
 /// Per-method master-side recursion state. Mirrors the single-process
 /// solver structs exactly (parity is tested bit-for-bit on the Native
-/// backend).
+/// backend at the full barrier).
 enum MasterState {
     /// APC / Consensus: x̄ plus momentum weight η.
     Apc { eta: f64 },
@@ -34,6 +42,12 @@ enum MasterState {
     Admm,
 }
 
+/// A parked response: which round it answered, and the n-vector.
+struct InboxEntry {
+    seq: u64,
+    output: Vec<f64>,
+}
+
 /// Outcome of a distributed run: solver-style report + runtime metrics.
 #[derive(Clone, Debug)]
 pub struct DistributedReport {
@@ -41,24 +55,36 @@ pub struct DistributedReport {
     pub metrics: RunMetrics,
 }
 
-/// A running taskmaster with its worker pool.
+/// A running taskmaster over its transport (real threads or simulated
+/// machines).
 pub struct Coordinator {
     method: Method,
     n: usize,
     m: usize,
-    to_workers: Vec<Sender<ToWorker>>,
-    from_workers: Receiver<FromWorker>,
-    handles: Vec<JoinHandle<()>>,
+    /// `None` only after shutdown — `Option` so the `Drop` guard can
+    /// take it, guaranteeing worker threads are joined on *every* exit
+    /// path, including `?` early returns.
+    transport: Option<Box<dyn Transport>>,
+    quorum: QuorumConfig,
     /// Broadcast state (x̄ or x depending on family).
     state_vec: Vec<f64>,
     master: MasterState,
     seq: u64,
+    /// Workers currently presumed alive.
+    live: Vec<bool>,
+    /// Consecutive rounds each worker has stayed silent.
+    missed: Vec<u32>,
+    /// Re-admitted workers that must get a checkpoint `Restart` instead
+    /// of a plain `Round` on the next broadcast.
+    needs_restart: Vec<bool>,
     /// Responses parked for the current round (worker-indexed).
-    inbox: Vec<Option<Vec<f64>>>,
+    inbox: Vec<Option<InboxEntry>>,
 }
 
 impl Coordinator {
-    /// Spawn the worker pool for `method` over `sys`.
+    /// Spawn a real in-process worker pool for `method` over `sys`
+    /// (one OS thread per machine, mpsc channels) behind the transport
+    /// trait, at the default full-barrier quorum.
     ///
     /// `manifest` is required for [`Backend::Hlo`] and ignored for
     /// Native. Artifact lookup errors surface here, before any thread
@@ -71,31 +97,24 @@ impl Coordinator {
         straggler: Option<StragglerSpec>,
         seed: u64,
     ) -> Result<Self> {
-        let m = sys.m();
-        let n = sys.n;
-        let (tx_up, from_workers) = channel::<FromWorker>();
-        let mut to_workers = Vec::with_capacity(m);
-        let mut handles = Vec::with_capacity(m);
-
         let step_name = match method {
-            Method::Apc { .. } | Method::Consensus => Some("apc_worker"),
-            Method::Dgd { .. } | Method::Nag { .. } | Method::Hbm { .. } => Some("grad_worker"),
-            Method::Cimmino { .. } => Some("cimmino_worker"),
-            Method::Admm { .. } => Some("admm_worker"),
+            Method::Apc { .. } | Method::Consensus => "apc_worker",
+            Method::Dgd { .. } | Method::Nag { .. } | Method::Hbm { .. } => "grad_worker",
+            Method::Cimmino { .. } => "cimmino_worker",
+            Method::Admm { .. } => "admm_worker",
         };
 
+        let mut specs = Vec::with_capacity(sys.m());
         for blk in &sys.blocks {
             let artifact = match backend {
                 Backend::Native => None,
                 Backend::Hlo => {
                     let manifest = manifest
                         .context("Backend::Hlo requires a Manifest (run `make artifacts`)")?;
-                    let step = step_name.expect("every method has a worker step");
-                    Some(manifest.find_worker(step, blk.p(), blk.n())?.clone())
+                    Some(manifest.find_worker(step_name, blk.p(), blk.n())?.clone())
                 }
             };
-            let (tx_down, rx_down) = channel::<ToWorker>();
-            let spec = WorkerSpec {
+            specs.push(WorkerSpec {
                 index: blk.index,
                 blk: blk.clone(),
                 method,
@@ -103,10 +122,27 @@ impl Coordinator {
                 straggler,
                 artifact,
                 seed,
-            };
-            let tx_up = tx_up.clone();
-            handles.push(std::thread::spawn(move || worker::run(spec, rx_down, tx_up)));
-            to_workers.push(tx_down);
+            });
+        }
+        let transport = ChannelTransport::spawn(specs);
+        Self::with_transport(sys, method, Box::new(transport), QuorumConfig::barrier())
+    }
+
+    /// Build a coordinator over an existing transport (e.g. a
+    /// [`crate::sim::SimTransport`]) with an explicit round policy.
+    pub fn with_transport(
+        sys: &PartitionedSystem,
+        method: Method,
+        transport: Box<dyn Transport>,
+        quorum: QuorumConfig,
+    ) -> Result<Self> {
+        let m = sys.m();
+        let n = sys.n;
+        if transport.m() != m {
+            bail!("transport addresses {} workers, system has {m} blocks", transport.m());
+        }
+        if quorum.quorum > m {
+            bail!("quorum {} exceeds worker count {m}", quorum.quorum);
         }
 
         // master-side initial state, matching the single-process solvers
@@ -144,14 +180,26 @@ impl Coordinator {
             method,
             n,
             m,
-            to_workers,
-            from_workers,
-            handles,
+            transport: Some(transport),
+            quorum,
             state_vec,
             master,
             seq: 0,
-            inbox: vec![None; m],
+            live: vec![true; m],
+            missed: vec![0; m],
+            needs_restart: vec![false; m],
+            inbox: (0..m).map(|_| None).collect(),
         })
+    }
+
+    /// Override the round policy (builder-style; the default is the
+    /// full barrier).
+    pub fn with_quorum(mut self, quorum: QuorumConfig) -> Result<Self> {
+        if quorum.quorum > self.m {
+            bail!("quorum {} exceeds worker count {}", quorum.quorum, self.m);
+        }
+        self.quorum = quorum;
+        Ok(self)
     }
 
     /// Current master estimate.
@@ -159,65 +207,176 @@ impl Coordinator {
         &self.state_vec
     }
 
-    /// Drive one synchronous round. Returns per-round bookkeeping for the
-    /// metrics aggregator.
+    fn transport_mut(&mut self) -> &mut dyn Transport {
+        self.transport.as_mut().expect("transport present until shutdown").as_mut()
+    }
+
+    /// Responses parked for folding (fresh this round, or one-round
+    /// stale when the method family folds those).
+    fn contributions(&self) -> usize {
+        self.inbox.iter().filter(|s| s.is_some()).count()
+    }
+
+    /// Drive one (semi-)synchronous round.
     fn round(&mut self, metrics: &mut RunMetrics) -> Result<()> {
         self.seq += 1;
         let input = Arc::new(self.state_vec.clone());
-        for tx in &self.to_workers {
-            tx.send(ToWorker::Round { seq: self.seq, input: Arc::clone(&input) })
-                .map_err(|_| anyhow::anyhow!("worker channel closed (worker died?)"))?;
-        }
-        metrics.bytes_down += (self.m * self.n * 8) as u64;
 
-        // collect all m responses for this seq
-        let mut received = 0usize;
-        while received < self.m {
-            let msg = self
-                .from_workers
-                .recv()
-                .map_err(|_| anyhow::anyhow!("all workers disconnected mid-round"))?;
-            if msg.seq != self.seq {
-                bail!("protocol error: got round {} while in round {}", msg.seq, self.seq);
+        // broadcast to live workers; a re-admitted worker gets the
+        // checkpoint Restart so it re-enters from the last x̄
+        for w in 0..self.m {
+            if !self.live[w] {
+                continue;
             }
-            if msg.output.len() != self.n {
-                bail!(
-                    "worker {} returned {} values, expected {}",
-                    msg.worker,
-                    msg.output.len(),
-                    self.n
-                );
-            }
-            metrics.worker_compute_ns[msg.worker] += msg.compute_ns;
-            metrics.straggler_delay_us += msg.injected_delay_us;
-            metrics.bytes_up += (self.n * 8) as u64;
-            if self.inbox[msg.worker].replace(msg.output).is_some() {
-                bail!("worker {} answered twice in round {}", msg.worker, self.seq);
-            }
-            received += 1;
+            let msg = if self.needs_restart[w] {
+                self.needs_restart[w] = false;
+                ToWorker::Restart { seq: self.seq, input: Arc::clone(&input) }
+            } else {
+                ToWorker::Round { seq: self.seq, input: Arc::clone(&input) }
+            };
+            self.transport_mut().send(w, msg)?;
+            metrics.bytes_down += (self.n * 8) as u64;
         }
 
-        // fold in worker-index order (bit-exact parity with the
-        // single-process loop, independent of arrival order)
+        let live_at_start = self.live.iter().filter(|&&l| l).count();
+        if live_at_start == 0 {
+            bail!("all {} workers presumed crashed — cannot make progress", self.m);
+        }
+        // quorum 0 = "all live" (the barrier); clamp to the live set
+        let q = if self.quorum.quorum == 0 { self.m } else { self.quorum.quorum };
+        let target = q.min(live_at_start).max(1);
+        let deadline = self.quorum.deadline_us.map(|d| self.transport_mut().now_us() + d);
+
+        // collect until the quorum is met or the deadline fires
+        while self.contributions() < target {
+            match self.transport_mut().recv(deadline)? {
+                None => {
+                    metrics.deadline_fires += 1;
+                    break;
+                }
+                Some(TransportEvent::Rejoined { worker }) => {
+                    self.live[worker] = true;
+                    self.missed[worker] = 0;
+                    self.needs_restart[worker] = false;
+                    metrics.recoveries += 1;
+                    // hand it the checkpoint now so it can still
+                    // contribute to this round
+                    self.transport_mut()
+                        .send(worker, ToWorker::Restart { seq: self.seq, input: Arc::clone(&input) })?;
+                    metrics.bytes_down += (self.n * 8) as u64;
+                }
+                Some(TransportEvent::Response(msg)) => self.admit_response(msg, metrics)?,
+            }
+        }
+
+        // fold whatever arrived (in worker-index order — bit-exact parity
+        // with the single-process loop, independent of arrival order)
         let t0 = Instant::now();
+        let k = self.contributions();
+        if k == 0 {
+            // empty round: leave the state untouched rather than zeroing
+            metrics.skipped_folds += 1;
+        } else {
+            metrics.stale_folded +=
+                self.inbox.iter().flatten().filter(|e| e.seq != self.seq).count() as u64;
+            if k < live_at_start {
+                metrics.quorum_short_rounds += 1;
+            }
+            self.fold(k);
+        }
+        metrics.master_ns += t0.elapsed().as_nanos() as u64;
+
+        // liveness bookkeeping: silence accrues toward crash detection
+        for w in 0..self.m {
+            let contributed = self.inbox[w].is_some();
+            self.inbox[w] = None;
+            if !self.live[w] {
+                continue;
+            }
+            if contributed {
+                self.missed[w] = 0;
+            } else {
+                self.missed[w] += 1;
+                if self.missed[w] >= self.quorum.crash_after_missed {
+                    self.live[w] = false;
+                    metrics.crashes_detected += 1;
+                }
+            }
+        }
+        Ok(())
+    }
+
+    /// Park a response according to the round/staleness rules. Never
+    /// bails on duplicates or stale sequence numbers — those are normal
+    /// cluster weather under semi-synchronous rounds; only genuinely
+    /// corrupt messages (wrong vector length, unknown worker) are fatal.
+    fn admit_response(&mut self, msg: FromWorker, metrics: &mut RunMetrics) -> Result<()> {
+        if msg.worker >= self.m {
+            bail!("response from unknown worker {}", msg.worker);
+        }
+        if msg.output.len() != self.n {
+            bail!(
+                "worker {} returned {} values, expected {}",
+                msg.worker,
+                msg.output.len(),
+                self.n
+            );
+        }
+        metrics.worker_compute_ns[msg.worker] += msg.compute_ns;
+        metrics.straggler_delay_us += msg.injected_delay_us;
+        metrics.bytes_up += (self.n * 8) as u64;
+
+        let w = msg.worker;
+        if !self.live[w] {
+            // a presumed-dead worker spoke: re-admit it, but its local
+            // state may predate the presumption — re-sync it with a
+            // checkpoint Restart at the next broadcast
+            self.live[w] = true;
+            self.missed[w] = 0;
+            self.needs_restart[w] = true;
+            metrics.recoveries += 1;
+        }
+
+        if msg.seq == self.seq {
+            match &self.inbox[w] {
+                Some(e) if e.seq == self.seq => metrics.duplicates += 1,
+                // fresh answer; supersedes a parked stale one if any
+                _ => self.inbox[w] = Some(InboxEntry { seq: msg.seq, output: msg.output }),
+            }
+        } else if msg.seq + 1 == self.seq && self.method.folds_stale() && self.inbox[w].is_none() {
+            // late answer to the previous round: the averaging family
+            // folds it — an older point of the same trajectory
+            self.inbox[w] = Some(InboxEntry { seq: msg.seq, output: msg.output });
+        } else {
+            // too old, from the future, or the slot is already taken:
+            // dropped, counted, never fatal
+            metrics.stale_dropped += 1;
+        }
+        Ok(())
+    }
+
+    /// Fold the `k ≥ 1` parked responses into the master state, in
+    /// worker-index order. Missing workers are re-weighted out: the
+    /// averaging family divides by `k` (not `m`), the gradient family
+    /// steps on the partial sum.
+    fn fold(&mut self, k: usize) {
+        let n = self.n;
         match &mut self.master {
             MasterState::Apc { eta } => {
-                let mut sum = vec![0.0; self.n];
-                for slot in self.inbox.iter() {
-                    let x = slot.as_ref().expect("all received");
-                    for (s, v) in sum.iter_mut().zip(x) {
+                let mut sum = vec![0.0; n];
+                for slot in self.inbox.iter().flatten() {
+                    for (s, v) in sum.iter_mut().zip(&slot.output) {
                         *s += v;
                     }
                 }
-                master_momentum_average(&mut self.state_vec, &sum, self.m, *eta);
+                master_momentum_average(&mut self.state_vec, &sum, k, *eta);
             }
             MasterState::Dgd { alpha } => {
                 // sum first, step once — Eq. 8's Σ before the α-step, and
                 // the same rounding as the single-process reference loop
-                let mut grad = vec![0.0; self.n];
-                for slot in self.inbox.iter() {
-                    let g = slot.as_ref().expect("all received");
-                    for (s, gi) in grad.iter_mut().zip(g) {
+                let mut grad = vec![0.0; n];
+                for slot in self.inbox.iter().flatten() {
+                    for (s, gi) in grad.iter_mut().zip(&slot.output) {
                         *s += gi;
                     }
                 }
@@ -226,37 +385,34 @@ impl Coordinator {
                 }
             }
             MasterState::Nag { alpha, beta, y } => {
-                let mut grad = vec![0.0; self.n];
-                for slot in self.inbox.iter() {
-                    let g = slot.as_ref().expect("all received");
-                    for (s, gi) in grad.iter_mut().zip(g) {
+                let mut grad = vec![0.0; n];
+                for slot in self.inbox.iter().flatten() {
+                    for (s, gi) in grad.iter_mut().zip(&slot.output) {
                         *s += gi;
                     }
                 }
-                for k in 0..self.n {
-                    let y_next = self.state_vec[k] - *alpha * grad[k];
-                    self.state_vec[k] = (1.0 + *beta) * y_next - *beta * y[k];
-                    y[k] = y_next;
+                for j in 0..n {
+                    let y_next = self.state_vec[j] - *alpha * grad[j];
+                    self.state_vec[j] = (1.0 + *beta) * y_next - *beta * y[j];
+                    y[j] = y_next;
                 }
             }
             MasterState::Hbm { alpha, beta, z } => {
-                let mut grad = vec![0.0; self.n];
-                for slot in self.inbox.iter() {
-                    let g = slot.as_ref().expect("all received");
-                    for (s, gi) in grad.iter_mut().zip(g) {
+                let mut grad = vec![0.0; n];
+                for slot in self.inbox.iter().flatten() {
+                    for (s, gi) in grad.iter_mut().zip(&slot.output) {
                         *s += gi;
                     }
                 }
-                for k in 0..self.n {
-                    z[k] = *beta * z[k] + grad[k];
-                    self.state_vec[k] -= *alpha * z[k];
+                for j in 0..n {
+                    z[j] = *beta * z[j] + grad[j];
+                    self.state_vec[j] -= *alpha * z[j];
                 }
             }
             MasterState::Cimmino { nu } => {
-                let mut sum = vec![0.0; self.n];
-                for slot in self.inbox.iter() {
-                    let r = slot.as_ref().expect("all received");
-                    for (s, ri) in sum.iter_mut().zip(r) {
+                let mut sum = vec![0.0; n];
+                for slot in self.inbox.iter().flatten() {
+                    for (s, ri) in sum.iter_mut().zip(&slot.output) {
                         *s += ri;
                     }
                 }
@@ -265,37 +421,46 @@ impl Coordinator {
                 }
             }
             MasterState::Admm => {
-                let mut sum = vec![0.0; self.n];
-                for slot in self.inbox.iter() {
-                    let x = slot.as_ref().expect("all received");
-                    for (s, v) in sum.iter_mut().zip(x) {
+                let mut sum = vec![0.0; n];
+                for slot in self.inbox.iter().flatten() {
+                    for (s, v) in sum.iter_mut().zip(&slot.output) {
                         *s += v;
                     }
                 }
                 for (x, s) in self.state_vec.iter_mut().zip(&sum) {
-                    *x = s / self.m as f64;
+                    *x = s / k as f64;
                 }
             }
         }
-        metrics.master_ns += t0.elapsed().as_nanos() as u64;
-        for slot in self.inbox.iter_mut() {
-            *slot = None;
-        }
-        Ok(())
     }
 
-    /// Run to convergence (or `max_iter`). Consumes the coordinator: the
-    /// worker pool shuts down on return.
+    /// Run to convergence (or `max_iter`). Consumes the coordinator; the
+    /// transport shuts down on **every** return path — including errors —
+    /// and a worker failure discovered at shutdown (error return or
+    /// panic) surfaces in the result instead of being swallowed.
     pub fn run(mut self, sys: &PartitionedSystem, opts: &SolverOptions) -> Result<DistributedReport> {
+        let result = self.run_inner(sys, opts);
+        let shutdown = self.shutdown_now();
+        match (result, shutdown) {
+            (Ok(rep), Ok(())) => Ok(rep),
+            (Ok(_), Err(e)) => Err(e.context("run succeeded but worker shutdown reported failures")),
+            (Err(e), Ok(())) => Err(e),
+            (Err(run_err), Err(shut_err)) => {
+                Err(run_err.context(format!("additionally, shutdown reported: {shut_err:#}")))
+            }
+        }
+    }
+
+    fn run_inner(&mut self, sys: &PartitionedSystem, opts: &SolverOptions) -> Result<DistributedReport> {
         let eval = |xbar: &[f64]| -> f64 {
             match &opts.metric {
                 Metric::Residual => sys.relative_residual(xbar),
                 Metric::ErrorVsTruth(xs) => relative_error(xbar, xs),
             }
         };
-        let mut metrics =
-            RunMetrics { worker_compute_ns: vec![0; self.m], ..Default::default() };
+        let mut metrics = RunMetrics { worker_compute_ns: vec![0; self.m], ..Default::default() };
         let wall0 = Instant::now();
+        let clock0 = self.transport_mut().now_us();
         let mut history = Vec::new();
         let mut err = eval(self.estimate());
         if opts.record_every > 0 {
@@ -322,6 +487,7 @@ impl Coordinator {
         }
         metrics.rounds = it as u64;
         metrics.wall = wall0.elapsed();
+        metrics.clock_us = self.transport_mut().now_us().saturating_sub(clock0);
 
         let report = SolveReport {
             solver: self.method.name(),
@@ -331,16 +497,24 @@ impl Coordinator {
             history,
             solution: self.estimate().to_vec(),
         };
-        self.shutdown();
         Ok(DistributedReport { report, metrics })
     }
 
-    fn shutdown(self) {
-        for tx in &self.to_workers {
-            let _ = tx.send(ToWorker::Stop);
+    fn shutdown_now(&mut self) -> Result<()> {
+        match self.transport.take() {
+            Some(mut t) => t.shutdown(),
+            None => Ok(()),
         }
-        for h in self.handles {
-            let _ = h.join();
+    }
+}
+
+/// Last-resort guard: joins/stops workers even if the coordinator is
+/// dropped without `run` (or mid-panic). Failures here are already lost
+/// to the caller, so they are only logged by the transport.
+impl Drop for Coordinator {
+    fn drop(&mut self) {
+        if let Some(mut t) = self.transport.take() {
+            let _ = t.shutdown();
         }
     }
 }
@@ -351,6 +525,7 @@ mod tests {
     use crate::gen::problems::Problem;
     use crate::linalg::vector::max_abs_diff;
     use crate::rates::{apc_optimal, hbm_optimal, SpectralInfo};
+    use crate::sim::{FaultPlan, SimConfig, SimTransport};
     use crate::solvers::{apc::Apc, hbm::Hbm, Solver};
 
     fn build(n: usize, m: usize, seed: u64) -> (PartitionedSystem, Vec<f64>) {
@@ -417,30 +592,39 @@ mod tests {
         assert_eq!(dist.report.solution, rep.solution, "bit-exact parity violated");
     }
 
+    /// The straggler convergence test, migrated to the simulator: the 20%
+    /// / 200µs delays are **virtual** now, so the test runs in wall-clock
+    /// milliseconds regardless of how many rounds the solve takes.
     #[test]
     fn distributed_apc_converges_with_stragglers() {
         let (sys, xstar) = build(24, 4, 75);
         let s = SpectralInfo::compute(&sys).unwrap();
         let params = apc_optimal(s.mu_min, s.mu_max).unwrap();
+        let method = Method::Apc { gamma: params.gamma, eta: params.eta };
         let opts = SolverOptions {
             tol: 1e-9,
             max_iter: 5_000,
             metric: Metric::ErrorVsTruth(xstar),
             ..Default::default()
         };
-        let dist = Coordinator::new(
-            &sys,
-            Method::Apc { gamma: params.gamma, eta: params.eta },
-            Backend::Native,
-            None,
-            Some(StragglerSpec { prob: 0.2, delay_us: 200 }),
-            7,
-        )
-        .unwrap()
-        .run(&sys, &opts)
-        .unwrap();
+        let cfg = SimConfig {
+            faults: FaultPlan {
+                straggler: Some(StragglerSpec { prob: 0.2, delay_us: 200 }),
+                ..Default::default()
+            },
+            seed: 7,
+            ..Default::default()
+        };
+        let transport = SimTransport::new(&sys, method, cfg).unwrap();
+        let dist =
+            Coordinator::with_transport(&sys, method, Box::new(transport), QuorumConfig::barrier())
+                .unwrap()
+                .run(&sys, &opts)
+                .unwrap();
         assert!(dist.report.converged, "err {:.2e}", dist.report.final_error);
         assert!(dist.metrics.straggler_delay_us > 0, "no straggler fired");
+        // virtual time advanced; the barrier waits out every delay
+        assert!(dist.metrics.clock_us > 0);
     }
 
     #[test]
@@ -507,6 +691,10 @@ mod tests {
         assert_eq!(dist.metrics.bytes_down, 10 * 4 * 20 * 8);
         assert_eq!(dist.metrics.bytes_up, 10 * 4 * 20 * 8);
         assert_eq!(dist.metrics.round_times_us.len(), 10);
+        // barrier runs never short a round or detect crashes
+        assert_eq!(dist.metrics.quorum_short_rounds, 0);
+        assert_eq!(dist.metrics.crashes_detected, 0);
+        assert_eq!(dist.metrics.stale_folded, 0);
     }
 
     #[test]
@@ -521,6 +709,72 @@ mod tests {
             1,
         );
         assert!(err.is_err());
+    }
+
+    /// Dropping a coordinator without ever running it must still join
+    /// the worker threads (the Drop guard) — this test hangs or leaks
+    /// if it doesn't.
+    #[test]
+    fn drop_without_run_joins_workers() {
+        let (sys, _) = build(16, 4, 85);
+        let coord =
+            Coordinator::new(&sys, Method::Consensus, Backend::Native, None, None, 1).unwrap();
+        drop(coord);
+    }
+
+    /// An error mid-run must still shut the transport down (no leaked
+    /// threads) and the error must propagate.
+    #[test]
+    fn error_path_shuts_down_transport() {
+        use std::sync::atomic::{AtomicBool, Ordering};
+        use std::sync::Arc as StdArc;
+
+        struct FailingTransport {
+            m: usize,
+            shutdown_called: StdArc<AtomicBool>,
+        }
+        impl Transport for FailingTransport {
+            fn m(&self) -> usize {
+                self.m
+            }
+            fn now_us(&mut self) -> u64 {
+                0
+            }
+            fn send(&mut self, _w: usize, _msg: ToWorker) -> Result<()> {
+                Ok(())
+            }
+            fn recv(&mut self, _d: Option<u64>) -> Result<Option<TransportEvent>> {
+                anyhow::bail!("injected transport failure")
+            }
+            fn shutdown(&mut self) -> Result<()> {
+                self.shutdown_called.store(true, Ordering::SeqCst);
+                Ok(())
+            }
+        }
+
+        let (sys, xstar) = build(16, 4, 87);
+        let flag = StdArc::new(AtomicBool::new(false));
+        let transport =
+            FailingTransport { m: 4, shutdown_called: StdArc::clone(&flag) };
+        let coord = Coordinator::with_transport(
+            &sys,
+            Method::Consensus,
+            Box::new(transport),
+            QuorumConfig::barrier(),
+        )
+        .unwrap();
+        let opts = SolverOptions {
+            tol: 1e-9,
+            max_iter: 10,
+            metric: Metric::ErrorVsTruth(xstar),
+            ..Default::default()
+        };
+        let err = coord.run(&sys, &opts);
+        assert!(err.is_err(), "transport failure must propagate");
+        assert!(
+            flag.load(Ordering::SeqCst),
+            "shutdown must run on the error path (thread-leak regression)"
+        );
     }
 
     /// Parity of the Hlo backend against Native — the end-to-end proof

@@ -3,10 +3,19 @@
 use std::time::Duration;
 
 /// Aggregated metrics for a distributed run.
+///
+/// Two clocks coexist: `wall` is host wall time (what the process spent),
+/// `clock_us` is **transport time** — identical to wall on the channel
+/// transport, virtual on the simulator, where it is the quantity the
+/// fault benches compare (a thousand simulated machines advance it by
+/// hours while `wall` advances by milliseconds).
 #[derive(Clone, Debug, Default)]
 pub struct RunMetrics {
     pub rounds: u64,
     pub wall: Duration,
+    /// Elapsed transport clock (µs): wall-equivalent on channels,
+    /// virtual cluster time on the simulator.
+    pub clock_us: u64,
     /// Total pure-compute time per worker (ns), summed over rounds.
     pub worker_compute_ns: Vec<u64>,
     /// Master-side fold + convergence-check time (ns), summed.
@@ -19,6 +28,26 @@ pub struct RunMetrics {
     pub straggler_delay_us: u64,
     /// Per-round wall times (µs), recorded when `record_round_times`.
     pub round_times_us: Vec<u64>,
+
+    // --- semi-synchronous / fault accounting ---
+    /// Rounds folded with fewer contributions than live workers
+    /// (quorum or deadline cut the barrier short).
+    pub quorum_short_rounds: u64,
+    /// Rounds whose deadline fired before the quorum was met.
+    pub deadline_fires: u64,
+    /// Rounds folded with zero contributions (state left untouched).
+    pub skipped_folds: u64,
+    /// One-round-stale responses folded into the next round's average
+    /// (averaging family only; see `Method::folds_stale`).
+    pub stale_folded: u64,
+    /// Stale or out-of-round responses dropped.
+    pub stale_dropped: u64,
+    /// Duplicate answers for a round already answered (dropped).
+    pub duplicates: u64,
+    /// Workers presumed crashed after `crash_after_missed` silent rounds.
+    pub crashes_detected: u64,
+    /// Crashed workers re-admitted via checkpoint `Restart`.
+    pub recoveries: u64,
 }
 
 impl RunMetrics {
@@ -62,11 +91,20 @@ impl RunMetrics {
         crate::json_obj![
             ("rounds", self.rounds as usize),
             ("wall_us", self.wall.as_micros() as usize),
+            ("clock_us", self.clock_us as usize),
             ("master_ns", self.master_ns as usize),
             ("bytes_down", self.bytes_down as usize),
             ("bytes_up", self.bytes_up as usize),
             ("straggler_delay_us", self.straggler_delay_us as usize),
             ("imbalance", self.imbalance()),
+            ("quorum_short_rounds", self.quorum_short_rounds as usize),
+            ("deadline_fires", self.deadline_fires as usize),
+            ("skipped_folds", self.skipped_folds as usize),
+            ("stale_folded", self.stale_folded as usize),
+            ("stale_dropped", self.stale_dropped as usize),
+            ("duplicates", self.duplicates as usize),
+            ("crashes_detected", self.crashes_detected as usize),
+            ("recoveries", self.recoveries as usize),
         ]
     }
 }
@@ -101,5 +139,8 @@ mod tests {
         let j = RunMetrics::default().to_json();
         assert!(j.get("rounds").is_some());
         assert!(j.get("imbalance").is_some());
+        assert!(j.get("clock_us").is_some());
+        assert!(j.get("stale_folded").is_some());
+        assert!(j.get("crashes_detected").is_some());
     }
 }

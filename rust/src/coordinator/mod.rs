@@ -1,31 +1,72 @@
 //! L3 — the taskmaster/worker coordinator (the paper's Figure 1).
 //!
-//! The master owns the round loop and the consensus state; each machine is
-//! an OS thread holding its row block `[A_i, b_i]`, its cached
-//! factorizations, and (in the Hlo backend) its own PJRT engine with the
-//! AOT worker artifact compiled and its loop-invariant operands pinned in
-//! device buffers. Communication is `std::sync::mpsc` — one broadcast
-//! channel per worker downstream, one shared upstream channel — matching
-//! the paper's star topology: the master sends `x̄(t)` (n doubles) down,
-//! every worker sends its n-double response up, `2·m·n·8` bytes per round.
+//! The master owns the round loop and the consensus state; it reaches its
+//! `m` workers through a [`Transport`] — either real OS threads over
+//! `std::sync::mpsc` ([`ChannelTransport`]: one broadcast channel per
+//! worker downstream, one shared upstream channel, wall-clock deadlines)
+//! or a discrete-event simulated cluster ([`crate::sim::SimTransport`]:
+//! same numerics, virtual time). Either way the topology is the paper's
+//! star: the master sends `x̄(t)` (n doubles) down, every worker sends
+//! its n-double response up, `2·m·n·8` bytes per round.
 //!
-//! Rounds are synchronous (the algorithms are): the master blocks until
-//! all `m` responses for round `t` arrive, folds them with the
-//! method-specific master rule, checks convergence, and starts round
-//! `t+1`. Parity with the single-process reference loop is bit-exact —
-//! responses are folded in worker-index order regardless of arrival
-//! order — and pinned by integration tests.
+//! ## Round policy
 //!
-//! Fault model: [`StragglerSpec`] injects per-(worker, round) delays with
-//! a deterministic per-worker RNG, reproducing the paper's motivating
-//! observation that a synchronous star is bottlenecked by its slowest
-//! machine (the `scaling_ablation` bench measures it).
+//! [`QuorumConfig`] decides when a round folds:
+//!
+//! * **Barrier** (default): block until every live worker answers round
+//!   `t`. This is Algorithm 1 verbatim, and the fold is bit-exact with
+//!   the single-process solvers — responses fold in worker-index order
+//!   regardless of arrival order (pinned by integration tests on all
+//!   seven methods).
+//! * **Semi-synchronous** (`semi_sync(q, deadline)`): fold once `q ≤ m`
+//!   responses arrive or the round deadline fires. Missing workers are
+//!   re-weighted out of the average (the averaging family divides by
+//!   the contributor count `k`, the gradient family steps on the
+//!   partial sum).
+//!
+//! ## Fault model
+//!
+//! The coordinator tolerates — and measures — the failure modes a real
+//! cluster exhibits; `benches/cluster_faults.rs` sweeps them:
+//!
+//! * **Stragglers.** [`StragglerSpec`] injects per-(worker, round)
+//!   delays with a deterministic per-worker RNG — a real `thread::sleep`
+//!   on the channel transport, a virtual-time interval on the simulator.
+//!   Under the barrier a straggler stalls the whole round (the paper's
+//!   motivating observation); under a quorum it is simply left out and
+//!   its response arrives next round.
+//! * **Stale responses.** A response to round `t−1` arriving during
+//!   round `t` is *folded* for the averaging family (APC / Consensus /
+//!   Cimmino / ADMM — an older point of the same trajectory; cf. the
+//!   random-network consensus analyses of arXiv 2008.09795) and
+//!   *dropped* for the gradient family (DGD / D-NAG / D-HBM — a stale
+//!   gradient entering the momentum recursion keeps propagating). See
+//!   [`Method::folds_stale`]. Duplicate answers and out-of-window
+//!   sequence numbers are counted and dropped, never fatal.
+//! * **Crashes.** A worker silent for `crash_after_missed` consecutive
+//!   rounds is presumed dead: the master stops addressing it and
+//!   re-weights it out of the fold. If it speaks again — or the
+//!   simulator delivers a [`TransportEvent::Rejoined`] — it is
+//!   re-admitted with a checkpoint [`protocol::ToWorker::Restart`]
+//!   carrying the last broadcast `x̄`; the worker rebuilds its local
+//!   state warm-started at the min-norm feasible correction of that
+//!   checkpoint (`x = x̄ + A_i⁺(b_i − A_i x̄)`).
+//! * **Worker errors and panics.** Worker threads return `Result`; the
+//!   transport joins them on every exit path (including `?` early
+//!   returns, via a `Drop` guard on the coordinator) and propagates
+//!   error returns *and panic payloads* into the run's error instead of
+//!   swallowing them.
+//!
+//! Loss and delay distributions themselves live in the simulator's
+//! [`crate::sim::LinkModel`]; in-process channels are lossless.
 
 pub mod master;
 pub mod metrics;
 pub mod protocol;
+pub mod transport;
 pub mod worker;
 
 pub use master::{Coordinator, DistributedReport};
 pub use metrics::RunMetrics;
-pub use protocol::{Method, StragglerSpec};
+pub use protocol::{Method, QuorumConfig, StragglerSpec};
+pub use transport::{ChannelTransport, Transport, TransportEvent};

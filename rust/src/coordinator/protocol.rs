@@ -1,4 +1,5 @@
-//! Message types and method descriptors for the master↔worker protocol.
+//! Message types, method descriptors, and round-policy knobs for the
+//! master↔worker protocol.
 
 use std::sync::Arc;
 
@@ -44,20 +45,94 @@ impl Method {
     pub fn is_gradient_family(&self) -> bool {
         matches!(self, Method::Dgd { .. } | Method::Nag { .. } | Method::Hbm { .. })
     }
+
+    /// Stale-response policy under semi-synchronous rounds: may a
+    /// response computed against round `t−1`'s broadcast be folded into
+    /// round `t`'s update?
+    ///
+    /// * **Averaging family** (APC / Consensus / Cimmino / ADMM): yes.
+    ///   The master update is a (weighted) average of per-machine
+    ///   iterates or residual corrections, and partial-participation
+    ///   consensus with one-round-stale members still contracts toward
+    ///   the same fixed point (cf. the random-network analyses of
+    ///   arXiv 2008.09795) — the member's iterate is merely an older
+    ///   point of the same trajectory.
+    /// * **Gradient family** (DGD / D-NAG / D-HBM): no. The master-side
+    ///   momentum recursions (`y(t)`, `z(t)`) assume every folded `g_i`
+    ///   was evaluated at the *current* iterate; a stale gradient enters
+    ///   the momentum state and keeps propagating, which breaks the
+    ///   heavy-ball/Nesterov convergence arguments. Stale gradients are
+    ///   dropped and the round proceeds on the fresh partial sum.
+    pub fn folds_stale(&self) -> bool {
+        !self.is_gradient_family()
+    }
 }
 
 /// Deterministic straggler injection: each (worker, round) independently
 /// delays by `delay_us` with probability `prob`.
+///
+/// On the in-process channel transport the delay is a **real**
+/// `thread::sleep` inside the worker thread; on the simulated transport
+/// it is **virtual time** added to the worker's compute interval, so
+/// fault experiments with long delay tails run in milliseconds of wall
+/// time (see [`crate::sim`]).
 #[derive(Clone, Copy, Debug, PartialEq)]
 pub struct StragglerSpec {
     pub prob: f64,
     pub delay_us: u64,
 }
 
+/// Semi-synchronous round policy: when the master stops waiting, and how
+/// it decides a silent worker has crashed.
+///
+/// The default (`quorum = m`, no deadline) reproduces the paper's fully
+/// synchronous barrier bit-for-bit: the master blocks until every live
+/// worker has answered, and nothing is ever declared crashed.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct QuorumConfig {
+    /// Minimum responses before the master folds a round. `0` means "all
+    /// live workers" (the synchronous barrier). Clamped to the live
+    /// worker count at each round.
+    pub quorum: usize,
+    /// Per-round deadline in the transport's clock (µs). When it fires,
+    /// the master folds whatever has arrived — even fewer than `quorum`
+    /// responses (an empty round leaves the state untouched). `None`
+    /// disables the deadline: the master waits for the quorum.
+    pub deadline_us: Option<u64>,
+    /// Consecutive rounds a worker may miss before the master presumes it
+    /// crashed, stops addressing it, and re-weights it out of the fold.
+    /// A presumed-dead worker that speaks again (or a simulated worker
+    /// that recovers) is re-admitted with a checkpoint [`ToWorker::Restart`].
+    pub crash_after_missed: u32,
+}
+
+impl Default for QuorumConfig {
+    fn default() -> Self {
+        QuorumConfig { quorum: 0, deadline_us: None, crash_after_missed: 3 }
+    }
+}
+
+impl QuorumConfig {
+    /// Full synchronous barrier (the paper's Algorithm 1 taskmaster).
+    pub fn barrier() -> Self {
+        Self::default()
+    }
+
+    /// Proceed at `q` responses with a per-round deadline.
+    pub fn semi_sync(q: usize, deadline_us: u64) -> Self {
+        QuorumConfig { quorum: q, deadline_us: Some(deadline_us), ..Self::default() }
+    }
+}
+
 /// Master → worker.
 pub enum ToWorker {
     /// Start round `seq` with the broadcast vector (x̄ or x).
     Round { seq: u64, input: Arc<Vec<f64>> },
+    /// Checkpoint-resume: rebuild local state warm-started from the last
+    /// broadcast `x̄` (APC re-enters the feasible set at the min-norm
+    /// correction of the checkpoint; the stateless locals rebuild
+    /// as-new), then answer round `seq` computed on that same broadcast.
+    Restart { seq: u64, input: Arc<Vec<f64>> },
     /// Drain and exit.
     Stop,
 }
@@ -92,5 +167,29 @@ mod tests {
         assert!(Method::Hbm { alpha: 0.1, beta: 0.5 }.is_gradient_family());
         assert!(!Method::Apc { gamma: 1.0, eta: 1.0 }.is_gradient_family());
         assert!(!Method::Cimmino { nu: 0.1 }.is_gradient_family());
+    }
+
+    #[test]
+    fn stale_policy_follows_family() {
+        // averaging family folds one-round-stale responses…
+        assert!(Method::Apc { gamma: 1.0, eta: 1.0 }.folds_stale());
+        assert!(Method::Consensus.folds_stale());
+        assert!(Method::Cimmino { nu: 0.1 }.folds_stale());
+        assert!(Method::Admm { xi: 1.0 }.folds_stale());
+        // …the momentum recursions drop them
+        assert!(!Method::Dgd { alpha: 0.1 }.folds_stale());
+        assert!(!Method::Nag { alpha: 0.1, beta: 0.5 }.folds_stale());
+        assert!(!Method::Hbm { alpha: 0.1, beta: 0.5 }.folds_stale());
+    }
+
+    #[test]
+    fn quorum_defaults_are_the_barrier() {
+        let q = QuorumConfig::default();
+        assert_eq!(q.quorum, 0);
+        assert_eq!(q.deadline_us, None);
+        assert_eq!(QuorumConfig::barrier(), q);
+        let s = QuorumConfig::semi_sync(6, 2_000);
+        assert_eq!(s.quorum, 6);
+        assert_eq!(s.deadline_us, Some(2_000));
     }
 }

@@ -1,0 +1,229 @@
+//! The master's view of its cluster: a [`Transport`] trait with deadlines
+//! and liveness events, so the round loop in `master.rs` is agnostic to
+//! whether workers are in-process threads ([`ChannelTransport`]) or
+//! discrete-event simulated machines ([`crate::sim::SimTransport`]).
+//!
+//! The trait deliberately models an *unreliable* cluster: `send` to a
+//! crashed machine is a silent no-op (the wire does not error — the
+//! master learns from the missing response), `recv` takes an absolute
+//! deadline in the transport's own clock (wall µs for channels, virtual
+//! µs for the simulator), and crash recovery surfaces as a
+//! [`TransportEvent::Rejoined`] that the master answers with a
+//! checkpoint [`ToWorker::Restart`](super::protocol::ToWorker::Restart).
+
+use super::protocol::{FromWorker, ToWorker};
+use super::worker::{self, WorkerSpec};
+use anyhow::{anyhow, Result};
+use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, Sender};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+/// Something the transport delivered to the master.
+pub enum TransportEvent {
+    /// A worker's round response.
+    Response(FromWorker),
+    /// A previously crashed worker came back up and asks for a
+    /// checkpoint (simulated transport only — real threads don't
+    /// resurrect). The master re-admits it with a `Restart`.
+    Rejoined { worker: usize },
+}
+
+/// Master-side handle to `m` workers, real or simulated.
+///
+/// Clock contract: [`now_us`](Transport::now_us) is monotone within one
+/// transport and shares its unit (µs) with the `deadline_us` passed to
+/// [`recv`](Transport::recv). The channel transport reports wall time;
+/// the simulator reports virtual time, which is what makes
+/// thousand-machine fault sweeps run in milliseconds.
+pub trait Transport {
+    /// Number of workers this transport addresses.
+    fn m(&self) -> usize;
+
+    /// Current clock in µs (wall or virtual).
+    fn now_us(&mut self) -> u64;
+
+    /// Deliver `msg` to worker `w`. Delivery to a crashed or unreachable
+    /// worker is a silent no-op — loss is observed, not returned. `Err`
+    /// means the transport itself is broken (e.g. an in-process worker
+    /// thread exited), which is fatal for the run.
+    fn send(&mut self, w: usize, msg: ToWorker) -> Result<()>;
+
+    /// Block until the next event, or until the absolute `deadline_us`
+    /// passes (`Ok(None)`). `deadline_us = None` blocks indefinitely;
+    /// a transport that can prove nothing will ever arrive returns `Err`
+    /// instead of hanging.
+    fn recv(&mut self, deadline_us: Option<u64>) -> Result<Option<TransportEvent>>;
+
+    /// Stop all workers and reclaim their resources. Idempotent. Joins
+    /// real threads and propagates their panics/errors into the returned
+    /// `Err` — a panicked worker must not be silently swallowed.
+    fn shutdown(&mut self) -> Result<()>;
+}
+
+/// The in-process transport: one OS thread per worker, `std::sync::mpsc`
+/// channels (one broadcast channel per worker downstream, one shared
+/// upstream), wall-clock deadlines. This is the original taskmaster
+/// wiring, now behind the trait.
+pub struct ChannelTransport {
+    to_workers: Vec<Sender<ToWorker>>,
+    from_workers: Receiver<FromWorker>,
+    /// `None` after shutdown (idempotence).
+    handles: Vec<Option<JoinHandle<Result<()>>>>,
+    t0: Instant,
+}
+
+impl ChannelTransport {
+    /// Spawn one worker thread per spec.
+    pub fn spawn(specs: Vec<WorkerSpec>) -> Self {
+        let (tx_up, from_workers) = channel::<FromWorker>();
+        let mut to_workers = Vec::with_capacity(specs.len());
+        let mut handles = Vec::with_capacity(specs.len());
+        for spec in specs {
+            let (tx_down, rx_down) = channel::<ToWorker>();
+            let tx_up = tx_up.clone();
+            handles.push(Some(std::thread::spawn(move || worker::run(spec, rx_down, tx_up))));
+            to_workers.push(tx_down);
+        }
+        ChannelTransport { to_workers, from_workers, handles, t0: Instant::now() }
+    }
+}
+
+impl Transport for ChannelTransport {
+    fn m(&self) -> usize {
+        self.to_workers.len()
+    }
+
+    fn now_us(&mut self) -> u64 {
+        self.t0.elapsed().as_micros() as u64
+    }
+
+    fn send(&mut self, w: usize, msg: ToWorker) -> Result<()> {
+        // A closed channel means the thread is gone (panic or error) —
+        // that IS fatal in-process; shutdown() will surface the payload.
+        self.to_workers[w]
+            .send(msg)
+            .map_err(|_| anyhow!("worker {w} channel closed (thread exited?)"))
+    }
+
+    fn recv(&mut self, deadline_us: Option<u64>) -> Result<Option<TransportEvent>> {
+        let msg = match deadline_us {
+            None => self
+                .from_workers
+                .recv()
+                .map_err(|_| anyhow!("all workers disconnected mid-round"))?,
+            Some(d) => {
+                let now = self.now_us();
+                if d <= now {
+                    return Ok(None);
+                }
+                match self.from_workers.recv_timeout(Duration::from_micros(d - now)) {
+                    Ok(msg) => msg,
+                    Err(RecvTimeoutError::Timeout) => return Ok(None),
+                    Err(RecvTimeoutError::Disconnected) => {
+                        return Err(anyhow!("all workers disconnected mid-round"))
+                    }
+                }
+            }
+        };
+        Ok(Some(TransportEvent::Response(msg)))
+    }
+
+    fn shutdown(&mut self) -> Result<()> {
+        // Stop is best-effort: a dead thread's channel is already closed.
+        for tx in &self.to_workers {
+            let _ = tx.send(ToWorker::Stop);
+        }
+        let mut failures: Vec<String> = Vec::new();
+        for (i, slot) in self.handles.iter_mut().enumerate() {
+            let Some(h) = slot.take() else { continue };
+            match h.join() {
+                Ok(Ok(())) => {}
+                Ok(Err(e)) => failures.push(format!("worker {i} failed: {e:#}")),
+                Err(payload) => {
+                    // propagate the panic payload instead of swallowing it
+                    let msg = payload
+                        .downcast_ref::<&str>()
+                        .map(|s| s.to_string())
+                        .or_else(|| payload.downcast_ref::<String>().cloned())
+                        .unwrap_or_else(|| "non-string panic payload".to_string());
+                    failures.push(format!("worker {i} panicked: {msg}"));
+                }
+            }
+        }
+        if failures.is_empty() {
+            Ok(())
+        } else {
+            Err(anyhow!("{}", failures.join("; ")))
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::Backend;
+    use crate::gen::problems::Problem;
+    use crate::partition::PartitionedSystem;
+    use crate::coordinator::protocol::Method;
+    use std::sync::Arc;
+
+    fn specs(n: usize, m: usize, seed: u64) -> Vec<WorkerSpec> {
+        let p = Problem::standard_gaussian(n, n, m).build(seed);
+        let sys = PartitionedSystem::split_even(&p.a, &p.b, m).unwrap();
+        sys.blocks
+            .iter()
+            .map(|blk| WorkerSpec {
+                index: blk.index,
+                blk: blk.clone(),
+                method: Method::Consensus,
+                backend: Backend::Native,
+                straggler: None,
+                artifact: None,
+                seed: 1,
+            })
+            .collect()
+    }
+
+    #[test]
+    fn channel_roundtrip_and_clean_shutdown() {
+        let mut t = ChannelTransport::spawn(specs(12, 3, 41));
+        assert_eq!(t.m(), 3);
+        let input = Arc::new(vec![0.0; 12]);
+        for w in 0..3 {
+            t.send(w, ToWorker::Round { seq: 1, input: Arc::clone(&input) }).unwrap();
+        }
+        let mut got = 0;
+        while got < 3 {
+            match t.recv(None).unwrap() {
+                Some(TransportEvent::Response(r)) => {
+                    assert_eq!(r.seq, 1);
+                    assert_eq!(r.output.len(), 12);
+                    got += 1;
+                }
+                _ => panic!("unexpected event"),
+            }
+        }
+        t.shutdown().unwrap();
+        // idempotent
+        t.shutdown().unwrap();
+    }
+
+    #[test]
+    fn channel_recv_deadline_fires() {
+        let mut t = ChannelTransport::spawn(specs(10, 2, 43));
+        // no round broadcast → nothing will arrive; the deadline must fire
+        let deadline = t.now_us() + 2_000;
+        let got = t.recv(Some(deadline)).unwrap();
+        assert!(got.is_none(), "deadline did not fire");
+        assert!(t.now_us() >= deadline);
+        t.shutdown().unwrap();
+    }
+
+    #[test]
+    fn channel_recv_past_deadline_returns_immediately() {
+        let mut t = ChannelTransport::spawn(specs(10, 2, 47));
+        let got = t.recv(Some(0)).unwrap();
+        assert!(got.is_none());
+        t.shutdown().unwrap();
+    }
+}

@@ -1,4 +1,14 @@
-//! Worker thread: one simulated machine.
+//! Worker-side compute: the per-machine state machine shared by the
+//! in-process channel transport (one OS thread per worker, this file's
+//! [`run`] loop) and the discrete-event simulator (which hosts the same
+//! [`LocalState`] in-process and advances it at virtual-time delivery,
+//! see [`crate::sim`]).
+//!
+//! Straggler injection: on the **channel transport** the injected delay
+//! is a real `thread::sleep` — the workers are real threads and the
+//! master's wall clock is the experiment clock. The simulated transport
+//! never sleeps: straggler delays there are *virtual-time* additions to
+//! the compute interval, so fault tests don't burn real seconds.
 
 use super::protocol::{FromWorker, Method, StragglerSpec, ToWorker};
 use crate::config::Backend;
@@ -10,8 +20,9 @@ use anyhow::{Context, Result};
 use std::sync::mpsc::{Receiver, Sender};
 use std::time::Instant;
 
-/// Per-method worker state (native backend).
-enum LocalState {
+/// Per-method worker state (native backend). Shared with the simulated
+/// transport, which holds one per simulated machine.
+pub(crate) enum LocalState {
     Apc(ApcLocal),
     Grad(GradLocal, Vec<f64>),
     Cimmino(CimminoLocal, Vec<f64>),
@@ -44,19 +55,17 @@ pub struct WorkerSpec {
     pub seed: u64,
 }
 
-/// The worker loop. Runs until `Stop` or channel close; any setup or
-/// execution error is reported by sending a poisoned response (empty
-/// output) after logging — the master treats a short response set as a
-/// fatal error for the round.
-pub fn run(spec: WorkerSpec, rx: Receiver<ToWorker>, tx: Sender<FromWorker>) {
-    match run_inner(spec, rx, tx) {
-        Ok(()) => {}
-        Err(e) => {
-            // The master notices the missing response and aborts the run;
-            // we just record why on stderr.
-            eprintln!("[apc worker] fatal: {:#}", e);
-        }
-    }
+/// The worker loop. Runs until `Stop` or channel close. Setup/execution
+/// errors are logged and **returned** — the thread's `JoinHandle` carries
+/// the `Result`, and `ChannelTransport::shutdown` propagates it (or a
+/// panic payload) into the master's error instead of swallowing it.
+pub fn run(spec: WorkerSpec, rx: Receiver<ToWorker>, tx: Sender<FromWorker>) -> Result<()> {
+    let index = spec.index;
+    run_inner(spec, rx, tx).map_err(|e| {
+        // also log immediately: the master may only join much later
+        eprintln!("[apc worker {index}] fatal: {e:#}");
+        e
+    })
 }
 
 fn run_inner(spec: WorkerSpec, rx: Receiver<ToWorker>, tx: Sender<FromWorker>) -> Result<()> {
@@ -126,10 +135,23 @@ fn run_inner(spec: WorkerSpec, rx: Receiver<ToWorker>, tx: Sender<FromWorker>) -
         let (seq, input) = match msg {
             ToWorker::Stop => break,
             ToWorker::Round { seq, input } => (seq, input),
+            ToWorker::Restart { seq, input } => {
+                // checkpoint-resume: rebuild local state warm-started
+                // from the broadcast x̄, then answer this round on it
+                native = build_warm_state(&blk, method, &input)?;
+                if let Some(h) = hlo.as_mut() {
+                    if let LocalState::Apc(l) = &native {
+                        h.x = Some(l.x.clone());
+                    }
+                }
+                (seq, input)
+            }
         };
 
         let injected = match straggler {
             Some(s) if rng.uniform() < s.prob => {
+                // real sleep — channel transport only (simulated workers
+                // never reach this loop; their delays are virtual)
                 std::thread::sleep(std::time::Duration::from_micros(s.delay_us));
                 s.delay_us
             }
@@ -153,7 +175,9 @@ fn run_inner(spec: WorkerSpec, rx: Receiver<ToWorker>, tx: Sender<FromWorker>) -
     Ok(())
 }
 
-fn build_native_state(blk: &MachineBlock, method: Method) -> Result<LocalState> {
+/// Cold start: the state every worker boots with (APC at its block's
+/// min-norm feasible point, the rest stateless with scratch).
+pub(crate) fn build_native_state(blk: &MachineBlock, method: Method) -> Result<LocalState> {
     Ok(match method {
         Method::Apc { gamma, .. } => LocalState::Apc(ApcLocal::new(blk, gamma)?),
         Method::Consensus => LocalState::Apc(ApcLocal::new(blk, 1.0)?),
@@ -165,7 +189,27 @@ fn build_native_state(blk: &MachineBlock, method: Method) -> Result<LocalState> 
     })
 }
 
-fn native_round(blk: &MachineBlock, state: &mut LocalState, input: &[f64]) -> Vec<f64> {
+/// Checkpoint-resume state: like [`build_native_state`] but APC's `x_i`
+/// warm-starts at the min-norm feasible correction of the checkpoint
+/// `x̄` — the nearest point of `A_i x = b_i` to where the consensus
+/// already is — instead of the cold min-norm point (see
+/// [`ApcLocal::warm_start`]). The other methods carry no cross-round
+/// local state, so their rebuild equals a cold build.
+pub(crate) fn build_warm_state(
+    blk: &MachineBlock,
+    method: Method,
+    xbar: &[f64],
+) -> Result<LocalState> {
+    Ok(match method {
+        Method::Apc { gamma, .. } => LocalState::Apc(ApcLocal::warm_start(blk, gamma, xbar)),
+        Method::Consensus => LocalState::Apc(ApcLocal::warm_start(blk, 1.0, xbar)),
+        _ => build_native_state(blk, method)?,
+    })
+}
+
+/// One native round: advance `state` on `input`, return the response
+/// vector. Shared verbatim by the thread loop above and the simulator.
+pub(crate) fn native_round(blk: &MachineBlock, state: &mut LocalState, input: &[f64]) -> Vec<f64> {
     match state {
         LocalState::Apc(local) => {
             local.step(blk, input);

@@ -32,8 +32,10 @@
 //!   with per-column deflation — and [`solvers::stream`] — the
 //!   streaming refill driver that admits new queries into a running
 //!   batch, the serving workload's steady state), [`rates`]
-//! * the system: [`coordinator`] (L3), [`runtime`] (PJRT bridge to the
-//!   L2/L1 artifacts built by `python/compile/`)
+//! * the system: [`coordinator`] (L3, transport-agnostic quorum rounds),
+//!   [`sim`] (discrete-event cluster simulator: virtual-time faults,
+//!   stragglers, crash/recovery at thousands of machines), [`runtime`]
+//!   (PJRT bridge to the L2/L1 artifacts built by `python/compile/`)
 
 pub mod bench;
 pub mod cli;
@@ -48,6 +50,7 @@ pub mod precond;
 pub mod proptest;
 pub mod rates;
 pub mod runtime;
+pub mod sim;
 pub mod solvers;
 pub mod sparse;
 

@@ -1,0 +1,57 @@
+//! Fault injection plans for the simulated cluster.
+
+use crate::coordinator::StragglerSpec;
+
+/// A scheduled outage: worker `worker` is down for rounds
+/// `crash_round ≤ t < recover_round` (round granularity — messages for
+/// those rounds are dropped; the worker rejoins once the cluster reaches
+/// `recover_round`).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct CrashSpec {
+    pub worker: usize,
+    pub crash_round: u64,
+    pub recover_round: u64,
+}
+
+/// Everything that goes wrong on purpose.
+#[derive(Clone, Debug, Default)]
+pub struct FaultPlan {
+    /// Per-(worker, round) straggler delays, in **virtual** time — the
+    /// same spec the channel transport realizes with a real sleep.
+    pub straggler: Option<StragglerSpec>,
+    /// Deterministic, scripted outages (reproducible crash-at-k tests).
+    pub crashes: Vec<CrashSpec>,
+    /// I.i.d. per-(worker, round) crash probability, rolled at send time.
+    pub crash_prob: f64,
+    /// How many rounds a randomly crashed worker stays down (min 1).
+    pub down_rounds: u64,
+}
+
+impl FaultPlan {
+    /// No faults at all (the default).
+    pub fn none() -> Self {
+        Self::default()
+    }
+
+    /// True if this plan can never perturb a run — the condition under
+    /// which the simulated barrier must be bit-exact with the channel
+    /// transport.
+    pub fn is_clean(&self) -> bool {
+        self.straggler.is_none() && self.crashes.is_empty() && self.crash_prob == 0.0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn default_plan_is_clean() {
+        assert!(FaultPlan::none().is_clean());
+        let dirty = FaultPlan {
+            crashes: vec![CrashSpec { worker: 0, crash_round: 2, recover_round: 5 }],
+            ..Default::default()
+        };
+        assert!(!dirty.is_clean());
+    }
+}

@@ -1,0 +1,42 @@
+//! Discrete-event cluster simulator (dslab-style) for the coordinator.
+//!
+//! [`SimTransport`] implements [`crate::coordinator::Transport`] over a
+//! virtual clock: worker numerics execute **for real, in-process** (the
+//! exact same [`crate::coordinator::worker`] round kernels the channel
+//! transport runs — bit-exact at the barrier), but *when* each message
+//! and each compute interval lands is modeled by an event queue in
+//! virtual microseconds. A thousand simulated machines with second-long
+//! delay tails advance the virtual clock by hours while the host spends
+//! milliseconds, and every run is reproducible from one seed.
+//!
+//! Knobs ([`SimConfig`]):
+//! * [`LinkModel`] — per-message latency distribution ([`Delay`]:
+//!   fixed / uniform / log-normal), additive jitter, finite bandwidth
+//!   (bytes per µs; serialization delay for the n-vector payloads), and
+//!   i.i.d. message loss.
+//! * [`ComputeModel`] — per-round base compute time, a per-worker
+//!   heterogeneity spread (each machine draws a fixed slowdown once, at
+//!   boot), and per-round multiplicative jitter.
+//! * [`FaultPlan`] — virtual-time stragglers (same
+//!   [`crate::coordinator::StragglerSpec`] the channel transport
+//!   sleeps on), scheduled crash/recover windows ([`CrashSpec`], round
+//!   granularity), and i.i.d. per-round crash rolls.
+//!
+//! Crash semantics: a message sent to a down worker is silently dropped
+//! (the master observes the missing response, exactly as with a real
+//! dead machine). When the virtual cluster reaches the worker's recovery
+//! round, the transport surfaces a
+//! [`crate::coordinator::TransportEvent::Rejoined`], and the master
+//! re-admits the worker with a checkpoint `Restart` carrying the last
+//! broadcast `x̄` — the worker re-enters at its warm-start min-norm
+//! feasible point.
+
+mod event;
+mod fault;
+mod net;
+mod transport;
+
+pub use event::EventQueue;
+pub use fault::{CrashSpec, FaultPlan};
+pub use net::{ComputeModel, Delay, LinkModel};
+pub use transport::{SimConfig, SimTransport};

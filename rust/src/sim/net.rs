@@ -1,0 +1,201 @@
+//! Network and compute timing models for the simulated cluster.
+
+use crate::gen::rng::Pcg64;
+
+/// Per-message latency distribution (µs).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum Delay {
+    /// Constant.
+    Fixed(f64),
+    /// Uniform in `[lo_us, hi_us)`.
+    Uniform { lo_us: f64, hi_us: f64 },
+    /// Log-normal with the given median; `sigma` is the log-space spread
+    /// (the shape real RTT tails follow — heavy right tail, sharp left).
+    LogNormal { median_us: f64, sigma: f64 },
+}
+
+impl Delay {
+    /// Draw one latency sample (µs, ≥ 0).
+    pub fn sample_us(&self, rng: &mut Pcg64) -> f64 {
+        match *self {
+            Delay::Fixed(v) => v.max(0.0),
+            Delay::Uniform { lo_us, hi_us } => rng.uniform_in(lo_us, hi_us).max(0.0),
+            Delay::LogNormal { median_us, sigma } => {
+                (median_us * (sigma * rng.gaussian()).exp()).max(0.0)
+            }
+        }
+    }
+}
+
+/// One direction of a star link (master↔worker). Every message on the
+/// link pays `latency + jitter + bytes/bandwidth`, and is lost i.i.d.
+/// with `loss_prob`.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct LinkModel {
+    pub latency: Delay,
+    /// Additive uniform jitter in `[0, jitter_us)`.
+    pub jitter_us: f64,
+    /// Serialization rate in bytes/µs; `0` = infinite bandwidth.
+    pub bandwidth_bytes_per_us: f64,
+    /// Probability a message vanishes.
+    pub loss_prob: f64,
+}
+
+impl Default for LinkModel {
+    /// A tame datacenter link: fixed 50 µs latency, no jitter, infinite
+    /// bandwidth, lossless.
+    fn default() -> Self {
+        LinkModel {
+            latency: Delay::Fixed(50.0),
+            jitter_us: 0.0,
+            bandwidth_bytes_per_us: 0.0,
+            loss_prob: 0.0,
+        }
+    }
+}
+
+impl LinkModel {
+    /// Transit time for a `bytes`-sized message, or `None` if it is lost.
+    /// Draw order (loss, latency, jitter) is part of the deterministic
+    /// contract — do not reorder.
+    pub fn transit_us(&self, bytes: u64, rng: &mut Pcg64) -> Option<u64> {
+        if self.loss_prob > 0.0 && rng.uniform() < self.loss_prob {
+            return None;
+        }
+        let mut t = self.latency.sample_us(rng);
+        if self.jitter_us > 0.0 {
+            t += self.jitter_us * rng.uniform();
+        }
+        if self.bandwidth_bytes_per_us > 0.0 {
+            t += bytes as f64 / self.bandwidth_bytes_per_us;
+        }
+        Some(t.max(0.0).round() as u64)
+    }
+
+    /// Transit time for a tiny control message (rejoin announcements):
+    /// latency + jitter only, never lost (retried at the protocol layer
+    /// of a real cluster; modeling the retry adds nothing here).
+    pub fn control_us(&self, rng: &mut Pcg64) -> u64 {
+        let mut t = self.latency.sample_us(rng);
+        if self.jitter_us > 0.0 {
+            t += self.jitter_us * rng.uniform();
+        }
+        t.max(0.0).round() as u64
+    }
+}
+
+/// Virtual per-round compute cost of a worker.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct ComputeModel {
+    /// Base compute time per round (µs) for a nominal-speed machine.
+    pub base_round_us: f64,
+    /// Heterogeneity: each worker draws a fixed slowdown factor in
+    /// `[1, 1 + het_spread)` once at boot (persistent slow machines).
+    pub het_spread: f64,
+    /// Per-round multiplicative jitter in `[1, 1 + jitter)` (OS noise).
+    pub jitter: f64,
+}
+
+impl Default for ComputeModel {
+    fn default() -> Self {
+        ComputeModel { base_round_us: 100.0, het_spread: 0.0, jitter: 0.0 }
+    }
+}
+
+impl ComputeModel {
+    /// Draw a worker's persistent slowdown factor (call once per worker).
+    pub fn draw_rate(&self, rng: &mut Pcg64) -> f64 {
+        if self.het_spread > 0.0 {
+            1.0 + self.het_spread * rng.uniform()
+        } else {
+            1.0
+        }
+    }
+
+    /// One round's virtual compute time (µs) for a worker with the given
+    /// persistent `rate`.
+    pub fn sample_us(&self, rate: f64, rng: &mut Pcg64) -> u64 {
+        let mut t = self.base_round_us * rate;
+        if self.jitter > 0.0 {
+            t *= 1.0 + self.jitter * rng.uniform();
+        }
+        t.max(0.0).round() as u64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fixed_delay_is_fixed() {
+        let mut rng = Pcg64::new(1);
+        assert_eq!(Delay::Fixed(42.0).sample_us(&mut rng), 42.0);
+    }
+
+    #[test]
+    fn uniform_delay_in_range() {
+        let mut rng = Pcg64::new(2);
+        for _ in 0..100 {
+            let d = Delay::Uniform { lo_us: 10.0, hi_us: 20.0 }.sample_us(&mut rng);
+            assert!((10.0..20.0).contains(&d));
+        }
+    }
+
+    #[test]
+    fn lognormal_positive_and_spread() {
+        let mut rng = Pcg64::new(3);
+        let d = Delay::LogNormal { median_us: 100.0, sigma: 0.5 };
+        let samples: Vec<f64> = (0..500).map(|_| d.sample_us(&mut rng)).collect();
+        assert!(samples.iter().all(|&s| s > 0.0));
+        // roughly half below the median
+        let below = samples.iter().filter(|&&s| s < 100.0).count();
+        assert!((150..350).contains(&below), "median off: {below}/500 below");
+    }
+
+    #[test]
+    fn deterministic_for_same_seed() {
+        let d = Delay::LogNormal { median_us: 80.0, sigma: 1.0 };
+        let a: Vec<f64> = {
+            let mut rng = Pcg64::with_stream(9, 1);
+            (0..50).map(|_| d.sample_us(&mut rng)).collect()
+        };
+        let b: Vec<f64> = {
+            let mut rng = Pcg64::with_stream(9, 1);
+            (0..50).map(|_| d.sample_us(&mut rng)).collect()
+        };
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn link_adds_serialization_delay() {
+        let mut rng = Pcg64::new(4);
+        let link = LinkModel {
+            latency: Delay::Fixed(10.0),
+            jitter_us: 0.0,
+            bandwidth_bytes_per_us: 8.0,
+            loss_prob: 0.0,
+        };
+        // 800 bytes at 8 bytes/µs = 100 µs on the wire + 10 latency
+        assert_eq!(link.transit_us(800, &mut rng), Some(110));
+    }
+
+    #[test]
+    fn lossy_link_drops() {
+        let mut rng = Pcg64::new(5);
+        let link = LinkModel { loss_prob: 1.0, ..Default::default() };
+        assert_eq!(link.transit_us(100, &mut rng), None);
+    }
+
+    #[test]
+    fn compute_heterogeneity_bounds() {
+        let mut rng = Pcg64::new(6);
+        let c = ComputeModel { base_round_us: 100.0, het_spread: 0.5, jitter: 0.0 };
+        for _ in 0..50 {
+            let r = c.draw_rate(&mut rng);
+            assert!((1.0..1.5).contains(&r));
+            let t = c.sample_us(r, &mut rng);
+            assert!((100..=150).contains(&t));
+        }
+    }
+}

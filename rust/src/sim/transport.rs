@@ -1,0 +1,432 @@
+//! The simulated transport: real worker numerics, virtual cluster time.
+
+use super::event::EventQueue;
+use super::fault::FaultPlan;
+use super::net::{ComputeModel, LinkModel};
+use crate::coordinator::protocol::{FromWorker, Method, ToWorker};
+use crate::coordinator::transport::{Transport, TransportEvent};
+use crate::coordinator::worker::{self, LocalState};
+use crate::gen::rng::Pcg64;
+use crate::partition::{MachineBlock, PartitionedSystem};
+use anyhow::{anyhow, Result};
+use std::time::Instant;
+
+/// Full description of a simulated cluster.
+#[derive(Clone, Debug, Default)]
+pub struct SimConfig {
+    /// Link model, applied to both directions of every star edge.
+    pub net: LinkModel,
+    /// Per-worker compute cost model.
+    pub compute: ComputeModel,
+    /// What goes wrong.
+    pub faults: FaultPlan,
+    /// Master seed; every per-worker RNG is an independent stream of it,
+    /// so a (config, seed) pair reproduces the run exactly.
+    pub seed: u64,
+}
+
+/// One simulated machine: its real numeric state plus its virtual
+/// timing/fault state.
+struct SimWorker {
+    state: LocalState,
+    /// Persistent compute slowdown (heterogeneity), drawn once at boot.
+    rate: f64,
+    /// This worker's RNG stream: link draws, compute jitter, straggler
+    /// and crash rolls all come from here, in a fixed order.
+    rng: Pcg64,
+    /// Randomly crashed until this round (exclusive), if any.
+    down_until: Option<u64>,
+    /// At least one message was dropped during an outage — a rejoin
+    /// announcement is owed once the outage ends.
+    dropped_while_down: bool,
+    /// Rejoin announcement already scheduled/emitted.
+    rejoin_pending: bool,
+}
+
+/// In-flight cluster events.
+enum SimEvent {
+    /// Downlink delivery: the worker computes its round on arrival.
+    Deliver { worker: usize, msg: ToWorker },
+    /// Uplink delivery: the master receives the response.
+    Uplink { resp: FromWorker },
+    /// A recovered worker announces itself.
+    Rejoin { worker: usize },
+}
+
+/// Discrete-event [`Transport`]: hosts every worker's [`LocalState`]
+/// in-process and advances a virtual clock through an event queue. The
+/// arithmetic each round executes is byte-for-byte the channel
+/// transport's (`worker::native_round`), so a fault-free barrier run is
+/// bit-exact with real threads — only *time* is simulated.
+pub struct SimTransport {
+    method: Method,
+    n: usize,
+    blocks: Vec<MachineBlock>,
+    workers: Vec<SimWorker>,
+    cfg: SimConfig,
+    queue: EventQueue<SimEvent>,
+    clock_us: u64,
+    /// Highest round the master has broadcast — the cluster's notion of
+    /// "now" at round granularity, which drives scheduled recoveries.
+    cur_round: u64,
+}
+
+impl SimTransport {
+    /// Boot a simulated cluster over `sys` (native backend only — the
+    /// simulator's point is scale, not PJRT execution).
+    pub fn new(sys: &PartitionedSystem, method: Method, cfg: SimConfig) -> Result<Self> {
+        let n = sys.n;
+        let mut blocks = Vec::with_capacity(sys.m());
+        let mut workers = Vec::with_capacity(sys.m());
+        for blk in &sys.blocks {
+            let state = worker::build_native_state(blk, method)?;
+            let mut rng = Pcg64::with_stream(cfg.seed, blk.index as u64 + 1);
+            let rate = cfg.compute.draw_rate(&mut rng);
+            workers.push(SimWorker {
+                state,
+                rate,
+                rng,
+                down_until: None,
+                dropped_while_down: false,
+                rejoin_pending: false,
+            });
+            blocks.push(blk.clone());
+        }
+        Ok(SimTransport {
+            method,
+            n,
+            blocks,
+            workers,
+            cfg,
+            queue: EventQueue::new(),
+            clock_us: 0,
+            cur_round: 0,
+        })
+    }
+
+    /// Current virtual clock (µs) — exposed for benches that want the
+    /// simulated wall-clock without a full `RunMetrics`.
+    pub fn clock_us(&self) -> u64 {
+        self.clock_us
+    }
+
+    /// Is `w` down for round `seq`? Rolls the i.i.d. crash dice as a
+    /// side effect (at most once per send), which is why this is `&mut`.
+    fn down_for_round(&mut self, w: usize, seq: u64) -> bool {
+        if self
+            .cfg
+            .faults
+            .crashes
+            .iter()
+            .any(|c| c.worker == w && c.crash_round <= seq && seq < c.recover_round)
+        {
+            return true;
+        }
+        if let Some(du) = self.workers[w].down_until {
+            if seq < du {
+                return true;
+            }
+            self.workers[w].down_until = None;
+        }
+        if self.cfg.faults.crash_prob > 0.0
+            && self.workers[w].rng.uniform() < self.cfg.faults.crash_prob
+        {
+            self.workers[w].down_until = Some(seq + self.cfg.faults.down_rounds.max(1));
+            return true;
+        }
+        false
+    }
+
+    /// Pure check: is `w` down *now* (at `cur_round`)?
+    fn currently_down(&self, w: usize) -> bool {
+        let seq = self.cur_round;
+        self.cfg
+            .faults
+            .crashes
+            .iter()
+            .any(|c| c.worker == w && c.crash_round <= seq && seq < c.recover_round)
+            || self.workers[w].down_until.is_some_and(|du| seq < du)
+    }
+
+    /// Owe any recovered worker its rejoin announcement.
+    fn schedule_rejoins(&mut self) {
+        for w in 0..self.workers.len() {
+            if !self.workers[w].dropped_while_down
+                || self.workers[w].rejoin_pending
+                || self.currently_down(w)
+            {
+                continue;
+            }
+            self.workers[w].rejoin_pending = true;
+            let t = self.cfg.net.control_us(&mut self.workers[w].rng);
+            self.queue.push(self.clock_us + t, SimEvent::Rejoin { worker: w });
+        }
+    }
+
+    /// Execute a delivered round on the worker's real state and schedule
+    /// the uplink (unless the response is lost).
+    fn process_deliver(&mut self, w: usize, msg: ToWorker) -> Result<()> {
+        let (seq, input, restart) = match msg {
+            ToWorker::Round { seq, input } => (seq, input, false),
+            ToWorker::Restart { seq, input } => (seq, input, true),
+            ToWorker::Stop => return Ok(()),
+        };
+        if restart {
+            // checkpoint-resume: warm-start from the broadcast x̄
+            self.workers[w].state = worker::build_warm_state(&self.blocks[w], self.method, &input)?;
+        }
+        let t0 = Instant::now();
+        let output = worker::native_round(&self.blocks[w], &mut self.workers[w].state, &input);
+        let compute_ns = t0.elapsed().as_nanos() as u64;
+
+        let bytes = (self.n * 8) as u64;
+        let mut injected = 0u64;
+        let (virt, up) = {
+            let sw = &mut self.workers[w];
+            let mut virt = self.cfg.compute.sample_us(sw.rate, &mut sw.rng);
+            if let Some(s) = self.cfg.faults.straggler {
+                if sw.rng.uniform() < s.prob {
+                    // virtual-time straggler: no host sleep, ever
+                    injected = s.delay_us;
+                    virt += s.delay_us;
+                }
+            }
+            (virt, self.cfg.net.transit_us(bytes, &mut sw.rng))
+        };
+        if let Some(t_up) = up {
+            let resp =
+                FromWorker { worker: w, seq, output, compute_ns, injected_delay_us: injected };
+            self.queue.push(self.clock_us + virt + t_up, SimEvent::Uplink { resp });
+        }
+        // uplink loss: the response vanishes; the master sees a missed
+        // deadline, exactly like a real dropped packet
+        Ok(())
+    }
+}
+
+impl Transport for SimTransport {
+    fn m(&self) -> usize {
+        self.workers.len()
+    }
+
+    fn now_us(&mut self) -> u64 {
+        self.clock_us
+    }
+
+    fn send(&mut self, w: usize, msg: ToWorker) -> Result<()> {
+        let seq = match &msg {
+            ToWorker::Round { seq, .. } | ToWorker::Restart { seq, .. } => *seq,
+            ToWorker::Stop => return Ok(()), // simulated machines just stop existing
+        };
+        self.cur_round = self.cur_round.max(seq);
+        if self.down_for_round(w, seq) {
+            // crashed machine: the wire doesn't error, the message is gone
+            self.workers[w].dropped_while_down = true;
+            return Ok(());
+        }
+        let bytes = (self.n * 8) as u64;
+        let transit = self.cfg.net.transit_us(bytes, &mut self.workers[w].rng);
+        if let Some(t) = transit {
+            self.queue.push(self.clock_us + t, SimEvent::Deliver { worker: w, msg });
+        }
+        Ok(())
+    }
+
+    fn recv(&mut self, deadline_us: Option<u64>) -> Result<Option<TransportEvent>> {
+        loop {
+            self.schedule_rejoins();
+            let Some(next_t) = self.queue.peek_time() else {
+                return match deadline_us {
+                    Some(d) => {
+                        // idle until the deadline: nothing will arrive
+                        self.clock_us = self.clock_us.max(d);
+                        Ok(None)
+                    }
+                    None => Err(anyhow!(
+                        "simulated deadlock: no events in flight and no deadline — \
+                         every pending response was lost or dropped"
+                    )),
+                };
+            };
+            if let Some(d) = deadline_us {
+                if next_t > d {
+                    self.clock_us = self.clock_us.max(d);
+                    return Ok(None);
+                }
+            }
+            let (t, ev) = self.queue.pop().expect("peeked");
+            self.clock_us = self.clock_us.max(t);
+            match ev {
+                SimEvent::Deliver { worker, msg } => self.process_deliver(worker, msg)?,
+                SimEvent::Uplink { resp } => return Ok(Some(TransportEvent::Response(resp))),
+                SimEvent::Rejoin { worker } => {
+                    let sw = &mut self.workers[worker];
+                    sw.dropped_while_down = false;
+                    sw.rejoin_pending = false;
+                    return Ok(Some(TransportEvent::Rejoined { worker }));
+                }
+            }
+        }
+    }
+
+    fn shutdown(&mut self) -> Result<()> {
+        // nothing real to reclaim; drain the queue for idempotent reuse
+        while self.queue.pop().is_some() {}
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gen::problems::Problem;
+    use crate::sim::{CrashSpec, Delay};
+    use std::sync::Arc;
+
+    fn sys(n: usize, m: usize, seed: u64) -> PartitionedSystem {
+        let p = Problem::standard_gaussian(n, n, m).build(seed);
+        PartitionedSystem::split_even(&p.a, &p.b, m).unwrap()
+    }
+
+    fn broadcast(t: &mut SimTransport, seq: u64, n: usize) {
+        let input = Arc::new(vec![0.1; n]);
+        for w in 0..t.m() {
+            t.send(w, ToWorker::Round { seq, input: Arc::clone(&input) }).unwrap();
+        }
+    }
+
+    #[test]
+    fn roundtrip_advances_virtual_clock() {
+        let sys = sys(12, 3, 51);
+        let mut t = SimTransport::new(&sys, Method::Consensus, SimConfig::default()).unwrap();
+        assert_eq!(t.m(), 3);
+        broadcast(&mut t, 1, 12);
+        let mut got = 0;
+        while got < 3 {
+            match t.recv(None).unwrap() {
+                Some(TransportEvent::Response(r)) => {
+                    assert_eq!(r.seq, 1);
+                    assert_eq!(r.output.len(), 12);
+                    got += 1;
+                }
+                _ => panic!("unexpected event"),
+            }
+        }
+        // default link 50 µs each way + 100 µs compute
+        assert_eq!(t.now_us(), 200, "virtual clock should be exactly 2·50 + 100");
+    }
+
+    #[test]
+    fn heterogeneous_rates_spread_arrivals() {
+        let sys = sys(12, 4, 53);
+        let cfg = SimConfig {
+            compute: ComputeModel { base_round_us: 100.0, het_spread: 1.0, jitter: 0.0 },
+            seed: 9,
+            ..Default::default()
+        };
+        let mut t = SimTransport::new(&sys, Method::Consensus, cfg).unwrap();
+        broadcast(&mut t, 1, 12);
+        let mut arrivals = Vec::new();
+        for _ in 0..4 {
+            match t.recv(None).unwrap() {
+                Some(TransportEvent::Response(_)) => arrivals.push(t.now_us()),
+                _ => panic!("unexpected event"),
+            }
+        }
+        assert!(arrivals.windows(2).all(|w| w[0] <= w[1]), "arrivals out of order");
+        assert!(
+            arrivals.iter().any(|&a| a != arrivals[0]),
+            "heterogeneity produced identical arrivals"
+        );
+    }
+
+    #[test]
+    fn total_loss_fires_deadline_or_deadlocks() {
+        let sys = sys(12, 3, 55);
+        let cfg = SimConfig {
+            net: LinkModel { loss_prob: 1.0, ..Default::default() },
+            ..Default::default()
+        };
+        let mut t = SimTransport::new(&sys, Method::Consensus, cfg).unwrap();
+        broadcast(&mut t, 1, 12);
+        // with a deadline: quiet timeout, clock lands on the deadline
+        assert!(t.recv(Some(5_000)).unwrap().is_none());
+        assert_eq!(t.now_us(), 5_000);
+        // without one: a provable deadlock is an error, not a hang
+        assert!(t.recv(None).is_err());
+    }
+
+    #[test]
+    fn scheduled_crash_drops_then_rejoins() {
+        let sys = sys(12, 3, 57);
+        let cfg = SimConfig {
+            faults: FaultPlan {
+                crashes: vec![CrashSpec { worker: 1, crash_round: 1, recover_round: 2 }],
+                ..Default::default()
+            },
+            ..Default::default()
+        };
+        let n = 12;
+        let mut t = SimTransport::new(&sys, Method::Consensus, cfg).unwrap();
+        broadcast(&mut t, 1, n);
+        // round 1: only workers 0 and 2 answer
+        let mut answered = Vec::new();
+        for _ in 0..2 {
+            match t.recv(Some(1_000_000)).unwrap() {
+                Some(TransportEvent::Response(r)) => answered.push(r.worker),
+                other => panic!("unexpected: {:?}", other.is_some()),
+            }
+        }
+        answered.sort_unstable();
+        assert_eq!(answered, vec![0, 2]);
+        assert!(t.recv(Some(t.clock_us() + 1_000)).unwrap().is_none(), "worker 1 should be down");
+
+        // round 2: the cluster reaches the recovery round → rejoin first
+        broadcast(&mut t, 2, n);
+        let mut rejoined = false;
+        let mut responses = 0;
+        while responses < 3 {
+            match t.recv(Some(t.clock_us() + 10_000_000)).unwrap() {
+                Some(TransportEvent::Rejoined { worker }) => {
+                    assert_eq!(worker, 1);
+                    rejoined = true;
+                    // master's reaction: hand it the checkpoint
+                    t.send(1, ToWorker::Restart { seq: 2, input: Arc::new(vec![0.1; n]) })
+                        .unwrap();
+                }
+                Some(TransportEvent::Response(r)) => {
+                    assert_eq!(r.seq, 2);
+                    responses += 1;
+                }
+                None => panic!("deadline fired while responses were pending"),
+            }
+        }
+        assert!(rejoined, "no rejoin event for the recovered worker");
+    }
+
+    #[test]
+    fn lognormal_latency_is_deterministic_per_seed() {
+        let sys = sys(12, 3, 59);
+        let cfg = SimConfig {
+            net: LinkModel {
+                latency: Delay::LogNormal { median_us: 100.0, sigma: 1.0 },
+                ..Default::default()
+            },
+            seed: 23,
+            ..Default::default()
+        };
+        let run = |cfg: SimConfig| {
+            let mut t = SimTransport::new(&sys, Method::Consensus, cfg).unwrap();
+            broadcast(&mut t, 1, 12);
+            let mut clocks = Vec::new();
+            for _ in 0..3 {
+                match t.recv(None).unwrap() {
+                    Some(TransportEvent::Response(r)) => clocks.push((r.worker, t.now_us())),
+                    _ => panic!("unexpected event"),
+                }
+            }
+            clocks
+        };
+        assert_eq!(run(cfg.clone()), run(cfg), "same seed must replay identically");
+    }
+}

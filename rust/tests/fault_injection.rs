@@ -1,0 +1,331 @@
+//! Fault-injection suite: the coordinator under simulated cluster
+//! weather — quorum rounds, stragglers, message loss, crash/recovery,
+//! and protocol noise. Everything runs on the discrete-event simulator
+//! (virtual time — wall-clock milliseconds regardless of the injected
+//! delays), and every test is deterministic for a fixed seed.
+//!
+//! The seed can be swept from CI via `APC_SIM_SEED` (default 1).
+
+use apc::config::Backend;
+use apc::coordinator::protocol::{FromWorker, ToWorker};
+use apc::coordinator::{
+    Coordinator, Method, QuorumConfig, StragglerSpec, Transport, TransportEvent,
+};
+use apc::gen::problems::Problem;
+use apc::partition::PartitionedSystem;
+use apc::rates::SpectralInfo;
+use apc::sim::{CrashSpec, FaultPlan, LinkModel, SimConfig, SimTransport};
+use apc::solvers::{suite, Metric, SolverOptions};
+use anyhow::Result;
+
+fn sim_seed() -> u64 {
+    std::env::var("APC_SIM_SEED").ok().and_then(|s| s.parse().ok()).unwrap_or(1)
+}
+
+fn build(n: usize, m: usize, seed: u64) -> (PartitionedSystem, Vec<f64>) {
+    let p = Problem::standard_gaussian(n, n, m).build(seed);
+    let sys = PartitionedSystem::split_even(&p.a, &p.b, m).unwrap();
+    (sys, p.x_star)
+}
+
+/// Simulated transport, full barrier, zero faults: bit-exact parity with
+/// the single-process solvers on **all seven methods**. The simulator
+/// executes the identical worker kernels — only time is virtual — so any
+/// drift here is a real arithmetic regression.
+#[test]
+fn sim_barrier_bit_exact_all_methods() {
+    let (sys, xstar) = build(30, 5, 11);
+    let s = SpectralInfo::compute(&sys).unwrap();
+    let opts = SolverOptions {
+        tol: 0.0,
+        max_iter: 25,
+        metric: Metric::ErrorVsTruth(xstar),
+        ..Default::default()
+    };
+    // all seven coordinator methods: Table 2's six plus the consensus baseline
+    for name in suite::TABLE2_ORDER.into_iter().chain(["consensus"]) {
+        let method = suite::tuned_method(name, &sys, &s).unwrap();
+        let cfg = SimConfig { seed: sim_seed(), ..Default::default() };
+        assert!(cfg.faults.is_clean());
+        let transport = SimTransport::new(&sys, method, cfg).unwrap();
+        let dist =
+            Coordinator::with_transport(&sys, method, Box::new(transport), QuorumConfig::barrier())
+                .unwrap()
+                .run(&sys, &opts)
+                .unwrap();
+        let mut single = suite::tuned_solver(name, &sys, &s).unwrap();
+        let rep = single.solve(&sys, &opts).unwrap();
+        assert_eq!(
+            dist.report.solution, rep.solution,
+            "{name}: simulated barrier diverged from the single-process trajectory"
+        );
+        // and the channel transport agrees with the simulator too
+        let chan = Coordinator::new(&sys, method, Backend::Native, None, None, 1)
+            .unwrap()
+            .run(&sys, &opts)
+            .unwrap();
+        assert_eq!(
+            chan.report.solution, rep.solution,
+            "{name}: channel transport diverged from the single-process trajectory"
+        );
+    }
+}
+
+/// The acceptance scenario: q = ⌈0.75·m⌉ with a 20% straggler rate. APC
+/// must still reach 1e-8, and the semi-synchronous run's simulated
+/// wall-clock must be strictly below the barrier run's on the same
+/// faulty cluster (the whole point of quorum rounds: stop paying the
+/// straggler tail every round).
+#[test]
+fn quorum_beats_barrier_under_stragglers() {
+    let (sys, xstar) = build(24, 4, 75);
+    let s = SpectralInfo::compute(&sys).unwrap();
+    let method = suite::tuned_method("apc", &sys, &s).unwrap();
+    let opts = SolverOptions {
+        tol: 1e-8,
+        max_iter: 50_000,
+        metric: Metric::ErrorVsTruth(xstar),
+        ..Default::default()
+    };
+    // straggler delay 100× the compute time — a long tail worth cutting
+    let faults = FaultPlan {
+        straggler: Some(StragglerSpec { prob: 0.2, delay_us: 10_000 }),
+        ..Default::default()
+    };
+    let cfg = || SimConfig { faults: faults.clone(), seed: sim_seed(), ..Default::default() };
+
+    let barrier = Coordinator::with_transport(
+        &sys,
+        method,
+        Box::new(SimTransport::new(&sys, method, cfg()).unwrap()),
+        QuorumConfig::barrier(),
+    )
+    .unwrap()
+    .run(&sys, &opts)
+    .unwrap();
+    assert!(barrier.report.converged, "barrier err {:.2e}", barrier.report.final_error);
+
+    let q = 3; // ⌈0.75·m⌉ for m = 4
+    let quorum = Coordinator::with_transport(
+        &sys,
+        method,
+        Box::new(SimTransport::new(&sys, method, cfg()).unwrap()),
+        QuorumConfig::semi_sync(q, 50_000),
+    )
+    .unwrap()
+    .run(&sys, &opts)
+    .unwrap();
+    assert!(quorum.report.converged, "quorum err {:.2e}", quorum.report.final_error);
+    assert!(quorum.report.final_error <= 1e-8);
+
+    assert!(
+        quorum.metrics.quorum_short_rounds > 0,
+        "quorum never actually cut a round short"
+    );
+    assert!(
+        quorum.metrics.stale_folded > 0,
+        "left-out straggler responses should fold into the next round (APC averages)"
+    );
+    assert!(
+        quorum.metrics.clock_us < barrier.metrics.clock_us,
+        "semi-sync must beat the barrier on simulated wall-clock: quorum {} µs vs barrier {} µs",
+        quorum.metrics.clock_us,
+        barrier.metrics.clock_us
+    );
+}
+
+/// Crash at round 5, recover at round 12: the master detects the crash
+/// by missed rounds, re-weights the block out of the average, re-admits
+/// the worker with a checkpoint `Restart` (warm-start min-norm feasible
+/// point from the last broadcast x̄), and the solve completes.
+#[test]
+fn crash_and_recovery_completes_the_solve() {
+    let (sys, xstar) = build(24, 4, 77);
+    let s = SpectralInfo::compute(&sys).unwrap();
+    let method = suite::tuned_method("apc", &sys, &s).unwrap();
+    let opts = SolverOptions {
+        tol: 1e-8,
+        max_iter: 50_000,
+        metric: Metric::ErrorVsTruth(xstar),
+        ..Default::default()
+    };
+    let cfg = SimConfig {
+        faults: FaultPlan {
+            crashes: vec![CrashSpec { worker: 2, crash_round: 5, recover_round: 12 }],
+            ..Default::default()
+        },
+        seed: sim_seed(),
+        ..Default::default()
+    };
+    let quorum = QuorumConfig { quorum: 3, deadline_us: None, crash_after_missed: 3 };
+    let dist = Coordinator::with_transport(
+        &sys,
+        method,
+        Box::new(SimTransport::new(&sys, method, cfg).unwrap()),
+        quorum,
+    )
+    .unwrap()
+    .run(&sys, &opts)
+    .unwrap();
+    assert!(dist.report.converged, "err {:.2e}", dist.report.final_error);
+    assert!(dist.metrics.crashes_detected >= 1, "crash never detected");
+    assert!(dist.metrics.recoveries >= 1, "worker never re-admitted");
+    // the solve is still correct, not just "finished"
+    assert!(sys.relative_residual(&dist.report.solution) < 1e-6);
+}
+
+/// Message loss + per-round deadline: rounds proceed on whatever
+/// arrived, lost responses are re-weighted out, and APC still converges.
+#[test]
+fn lossy_network_with_deadline_still_converges() {
+    let (sys, xstar) = build(24, 4, 79);
+    let s = SpectralInfo::compute(&sys).unwrap();
+    let method = suite::tuned_method("apc", &sys, &s).unwrap();
+    let opts = SolverOptions {
+        tol: 1e-6,
+        max_iter: 50_000,
+        metric: Metric::ErrorVsTruth(xstar),
+        ..Default::default()
+    };
+    let cfg = SimConfig {
+        net: LinkModel { loss_prob: 0.05, ..Default::default() },
+        seed: sim_seed(),
+        ..Default::default()
+    };
+    let quorum = QuorumConfig { quorum: 0, deadline_us: Some(2_000), crash_after_missed: 5 };
+    let dist = Coordinator::with_transport(
+        &sys,
+        method,
+        Box::new(SimTransport::new(&sys, method, cfg).unwrap()),
+        quorum,
+    )
+    .unwrap()
+    .run(&sys, &opts)
+    .unwrap();
+    assert!(dist.report.converged, "err {:.2e}", dist.report.final_error);
+    assert!(dist.metrics.deadline_fires > 0, "no deadline ever fired despite 5% loss");
+}
+
+/// Identical (config, seed) pairs must replay bit-identically — virtual
+/// clock included. This is what makes fault sweeps debuggable.
+#[test]
+fn fault_runs_are_deterministic_per_seed() {
+    let (sys, xstar) = build(24, 4, 81);
+    let s = SpectralInfo::compute(&sys).unwrap();
+    let method = suite::tuned_method("apc", &sys, &s).unwrap();
+    let opts = SolverOptions {
+        tol: 1e-8,
+        max_iter: 50_000,
+        metric: Metric::ErrorVsTruth(xstar),
+        ..Default::default()
+    };
+    let run = || {
+        let cfg = SimConfig {
+            faults: FaultPlan {
+                straggler: Some(StragglerSpec { prob: 0.3, delay_us: 5_000 }),
+                crash_prob: 0.002,
+                down_rounds: 4,
+                ..Default::default()
+            },
+            seed: sim_seed(),
+            ..Default::default()
+        };
+        Coordinator::with_transport(
+            &sys,
+            method,
+            Box::new(SimTransport::new(&sys, method, cfg).unwrap()),
+            QuorumConfig::semi_sync(3, 30_000),
+        )
+        .unwrap()
+        .run(&sys, &opts)
+        .unwrap()
+    };
+    let a = run();
+    let b = run();
+    assert_eq!(a.report.solution, b.report.solution, "solution not reproducible");
+    assert_eq!(a.report.iterations, b.report.iterations);
+    assert_eq!(a.metrics.clock_us, b.metrics.clock_us, "virtual clock not reproducible");
+    assert_eq!(a.metrics.stale_folded, b.metrics.stale_folded);
+}
+
+/// A transport that injects protocol noise: duplicate answers and
+/// out-of-window sequence numbers. The master must count and drop them —
+/// never bail (the old coordinator hard-errored on both).
+struct NoisyTransport {
+    m: usize,
+    n: usize,
+    seq: u64,
+    pending: std::collections::VecDeque<FromWorker>,
+}
+
+impl NoisyTransport {
+    fn response(&self, worker: usize, seq: u64) -> FromWorker {
+        FromWorker {
+            worker,
+            seq,
+            output: vec![0.0; self.n],
+            compute_ns: 1,
+            injected_delay_us: 0,
+        }
+    }
+}
+
+impl Transport for NoisyTransport {
+    fn m(&self) -> usize {
+        self.m
+    }
+    fn now_us(&mut self) -> u64 {
+        0
+    }
+    fn send(&mut self, w: usize, msg: ToWorker) -> Result<()> {
+        let seq = match msg {
+            ToWorker::Round { seq, .. } | ToWorker::Restart { seq, .. } => seq,
+            ToWorker::Stop => return Ok(()),
+        };
+        if seq != self.seq && w == 0 {
+            self.seq = seq;
+            // script one round of noise: fresh w0, duplicate w0, a
+            // far-future seq from w1, then the real w1 answer
+            self.pending.push_back(self.response(0, seq));
+            self.pending.push_back(self.response(0, seq));
+            self.pending.push_back(self.response(1, seq + 50));
+            self.pending.push_back(self.response(1, seq));
+        }
+        Ok(())
+    }
+    fn recv(&mut self, _deadline_us: Option<u64>) -> Result<Option<TransportEvent>> {
+        Ok(self.pending.pop_front().map(TransportEvent::Response))
+    }
+    fn shutdown(&mut self) -> Result<()> {
+        Ok(())
+    }
+}
+
+#[test]
+fn duplicate_and_stale_messages_are_counted_not_fatal() {
+    let (sys, xstar) = build(16, 2, 83);
+    let opts = SolverOptions {
+        tol: 0.0,
+        max_iter: 4,
+        metric: Metric::ErrorVsTruth(xstar),
+        ..Default::default()
+    };
+    let transport = NoisyTransport {
+        m: 2,
+        n: 16,
+        seq: 0,
+        pending: std::collections::VecDeque::new(),
+    };
+    let dist = Coordinator::with_transport(
+        &sys,
+        Method::Consensus,
+        Box::new(transport),
+        QuorumConfig::barrier(),
+    )
+    .unwrap()
+    .run(&sys, &opts)
+    .unwrap();
+    assert_eq!(dist.report.iterations, 4);
+    assert_eq!(dist.metrics.duplicates, 4, "one duplicate per round should be counted");
+    assert_eq!(dist.metrics.stale_dropped, 4, "one out-of-window answer per round");
+}
