@@ -15,10 +15,14 @@
 //!  B. latency spread: log-normal link tails (σ = 0 / 0.5 / 1.5) plus
 //!     persistent compute heterogeneity, no injected stragglers — the
 //!     organic version of the same effect.
-//!  C. scale: machine count at fixed problem size, quorum rounds under
-//!     a 20% straggler rate; also reports real wall-clock per simulated
-//!     second (the simulator's whole point: fault sweeps at cluster
-//!     scale in milliseconds).
+//!  C. scale: machine count swept into the thousands (n grows as
+//!     max(256, 2m) so every block keeps full row rank), quorum rounds
+//!     under a 20% straggler rate; also reports real wall-clock per
+//!     simulated second (the simulator's whole point: fault sweeps at
+//!     cluster scale in milliseconds). Tuning switches to the Lanczos
+//!     spectral estimate past n = 400 ([`SpectralInfo::for_tuning`]) —
+//!     the exact eigensolve would reintroduce the O(n³) cost the sweep
+//!     exists to avoid.
 //!  D. crash churn: i.i.d. per-(worker, round) crash probability with
 //!     5-round outages — counts detections, checkpoint re-admissions,
 //!     and whether the solve still converges.
@@ -55,7 +59,10 @@ struct Bed {
 fn bed(n: usize, m: usize, seed: u64, tol: f64) -> anyhow::Result<Bed> {
     let p = Problem::standard_gaussian(n, n, m).build(seed);
     let sys = PartitionedSystem::split_even(&p.a, &p.b, m)?;
-    let s = SpectralInfo::compute(&sys)?;
+    // scale-aware tuning: exact eigensolves while n is small, Lanczos
+    // estimate beyond n = 400 — keeps sweep C's thousands-of-machines
+    // rows from paying an O(n^3) tuning step
+    let s = SpectralInfo::for_tuning(&sys)?;
     let method = suite::tuned_method("apc", &sys, &s)?;
     let opts = SolverOptions {
         tol,
@@ -197,13 +204,17 @@ fn main() -> anyhow::Result<()> {
     println!("{}\n", table.render());
 
     // ---- C. machine count -----------------------------------------------
-    let machines: &[usize] = if smoke { &[2, 4] } else { &[8, 32, 64] };
-    let n_scale = if smoke { 96 } else { 256 };
+    // grows n with m (n = max(256, 2m): ≥ 2 rows per machine) so the
+    // thousand-machine rows stay full row rank per block; tuning stays
+    // cheap because bed() switches to the Lanczos estimate past n = 400
+    let machines: &[usize] = if smoke { &[2, 4] } else { &[8, 64, 512, 2048] };
+    let n_for = |mm: usize| if smoke { 96 } else { (2 * mm).max(256) };
     println!(
-        "=== C. scale: quorum rounds at 20% stragglers (n={n_scale}, q=0.75m) ===\n"
+        "=== C. scale: quorum rounds at 20% stragglers (n=max(256,2m), q=0.75m) ===\n"
     );
     let mut table = Table::new(&[
         "m",
+        "n",
         "sim clock",
         "rounds",
         "clock/round",
@@ -212,13 +223,14 @@ fn main() -> anyhow::Result<()> {
     ]);
     let mut sweep_c = Vec::new();
     for &mm in machines {
-        let bs = bed(n_scale, mm, 37, tol)?;
+        let bs = bed(n_for(mm), mm, 37, tol)?;
         let cfg = SimConfig { faults: straggler_plan(0.2), seed: SEED, ..Default::default() };
         let (dist, wall_s) =
             run(&bs, cfg, QuorumConfig::semi_sync(quorum_of(mm, 0.75), DEADLINE_US))?;
         let sim_s = dist.metrics.clock_us as f64 / 1.0e6;
         table.row(&[
             mm.to_string(),
+            n_for(mm).to_string(),
             ms(dist.metrics.clock_us),
             dist.metrics.rounds.to_string(),
             format!("{} us", dist.metrics.clock_us / dist.metrics.rounds.max(1)),
@@ -227,6 +239,7 @@ fn main() -> anyhow::Result<()> {
         ]);
         sweep_c.push(jobj(vec![
             ("m", Json::Num(mm as f64)),
+            ("n", Json::Num(n_for(mm) as f64)),
             ("real_wall_secs", Json::Num(wall_s)),
             ("run", jobj(run_row(&dist))),
         ]));

@@ -1,0 +1,291 @@
+//! SIMD KERNEL FLOOR + MIXED PRECISION — the perf sweep behind
+//! EXPERIMENTS.md §Perf "SIMD + mixed precision".
+//!
+//! Three questions, answered on the same host in one run:
+//!
+//!  A. kernel floor: time the dispatched hot-path kernels (dense
+//!     matvec / fused transpose-matvec / GEMM / SYRK, CSR SpMV/SpMM,
+//!     dot/axpy, and their f32 twins) with the backend forced to the
+//!     blocked scalar path vs auto-detected SIMD — the microkernel
+//!     speedup, isolated from solver logic.
+//!  B. per-round solver cost: tuned APC and D-HBM per-round wall time,
+//!     scalar vs SIMD, dense n=2000 (m=8) and banded-sparse n=4000
+//!     (m=10) — how much of the kernel win survives the full round
+//!     (master fold, barriers, Gram solves).
+//!  C. mixed precision: the same rounds through the `+IR` engines
+//!     ([`apc::solvers::refine`]) — f32 machine phase, f64 master,
+//!     refresh every 50 — reported as time per inner round (refresh
+//!     cost amortized in).
+//!
+//! The backend override ([`apc::linalg::simd::set_forced_backend`]) is
+//! flipped only between timed sections, never while kernels run; it is
+//! restored to auto-detection before exit. On hosts without AVX2/NEON
+//! (or with `--no-default-features`) both columns run the scalar path
+//! and the speedups print ≈1.0× — the JSON records the detected backend
+//! so that is visible downstream.
+//!
+//! Machine-readable output: `BENCH_simd.json` at the repository root
+//! (provenance-stamped). CI's bench-smoke job runs this target with
+//! `APC_BENCH_SMOKE=1` and validates the JSON shape.
+//!
+//! ```bash
+//! cargo bench --bench simd_floor
+//! ```
+
+use apc::bench::{jobj, provenance, smoke_mode, Table};
+use apc::config::Json;
+use apc::gen::problems::{Problem, SparseProblem};
+use apc::linalg::kernels;
+use apc::linalg::simd::{self, Backend};
+use apc::partition::PartitionedSystem;
+use apc::rates::SpectralInfo;
+use apc::solvers::{suite, Precision, Solver};
+use std::time::Instant;
+
+/// Deterministic fill (xorshift64*), same generator the kernel tests use.
+fn filled(len: usize, seed: u64) -> Vec<f64> {
+    let mut s = seed.max(1);
+    (0..len)
+        .map(|_| {
+            s ^= s << 13;
+            s ^= s >> 7;
+            s ^= s << 17;
+            (s.wrapping_mul(0x2545F4914F6CDD1D) >> 11) as f64 / (1u64 << 53) as f64 - 0.5
+        })
+        .collect()
+}
+
+fn to_f32(v: &[f64]) -> Vec<f32> {
+    v.iter().map(|&x| x as f32).collect()
+}
+
+/// Seconds per call of `f`, amortized over `reps` calls.
+fn time_op(reps: usize, mut f: impl FnMut()) -> f64 {
+    f(); // warm (page in buffers, settle dispatch)
+    let t0 = Instant::now();
+    for _ in 0..reps {
+        f();
+    }
+    t0.elapsed().as_secs_f64() / reps as f64
+}
+
+/// Run `f` under a forced backend, then restore auto-detection.
+fn with_backend<T>(b: Backend, f: impl FnOnce() -> T) -> T {
+    assert!(simd::set_forced_backend(Some(b)), "backend {:?} unavailable", b);
+    let out = f();
+    simd::set_forced_backend(None);
+    out
+}
+
+struct KernelRow {
+    name: &'static str,
+    dims: String,
+    scalar_s: f64,
+    auto_s: f64,
+}
+
+fn kernel_sweep(smoke: bool) -> Vec<KernelRow> {
+    let (r, c, k, vlen) = if smoke { (120, 96, 8, 1 << 12) } else { (1000, 1000, 8, 1 << 16) };
+    let a = filled(r * c, 3);
+    let xc = filled(c, 5);
+    let xr = filled(r, 7);
+    let xk = filled(c * k, 9);
+    let v1 = filled(vlen, 11);
+    let v2 = filled(vlen, 13);
+    let a32 = to_f32(&a);
+    let xc32 = to_f32(&xc);
+    let csr = SparseProblem::banded(r, c, 8, 1).build(17).a;
+    let xck = filled(c * k, 19);
+
+    let mut rows: Vec<KernelRow> = Vec::new();
+    let mut push = |name: &'static str, dims: String, reps: usize, f: &mut dyn FnMut()| {
+        let scalar_s = with_backend(Backend::Scalar, || time_op(reps, &mut *f));
+        let auto_s = time_op(reps, f);
+        rows.push(KernelRow { name, dims, scalar_s, auto_s });
+    };
+    let reps = if smoke { 5 } else { 50 };
+
+    let mut y = vec![0.0; r];
+    push("dot", format!("len {vlen}"), reps * 20, &mut || {
+        std::hint::black_box(kernels::dot(&v1, &v2));
+    });
+    let mut vy = v2.clone();
+    push("axpy", format!("len {vlen}"), reps * 20, &mut || {
+        kernels::axpy(0.5, &v1, &mut vy);
+        std::hint::black_box(&vy);
+    });
+    push("matvec", format!("{r}x{c}"), reps, &mut || {
+        kernels::matvec(&a, r, c, &xc, &mut y);
+        std::hint::black_box(&y);
+    });
+    let mut yt = vec![0.0; c];
+    push("tr_matvec_axpy", format!("{r}x{c}"), reps, &mut || {
+        kernels::tr_matvec_axpy(&a, r, c, &xr, -0.5, &mut yt);
+        std::hint::black_box(&yt);
+    });
+    let mut yk = vec![0.0; r * k];
+    push("matmat", format!("{r}x{c}, k={k}"), reps, &mut || {
+        kernels::matmat(&a, r, c, &xk, k, &mut yk);
+        std::hint::black_box(&yk);
+    });
+    let gr = if smoke { 48 } else { 250 };
+    let ga = filled(gr * c, 21);
+    let mut g = vec![0.0; gr * gr];
+    push("syrk_rows", format!("{gr}x{c}"), reps, &mut || {
+        kernels::syrk_rows(&ga, gr, c, &mut g);
+        std::hint::black_box(&g);
+    });
+    let mut ys = vec![0.0; csr.rows];
+    push("csr_matvec", format!("{}x{} nnz {}", csr.rows, csr.cols, csr.values.len()), reps * 4, &mut || {
+        csr.matvec_into(&xc, &mut ys);
+        std::hint::black_box(&ys);
+    });
+    let mut ysk = vec![0.0; csr.rows * k];
+    push("csr_matmat", format!("{}x{}, k={k}", csr.rows, csr.cols), reps, &mut || {
+        csr.matmat_into(&xck, k, &mut ysk);
+        std::hint::black_box(&ysk);
+    });
+    let mut y32 = vec![0.0f32; r];
+    push("matvec_f32", format!("{r}x{c}"), reps, &mut || {
+        kernels::matvec_f32(&a32, r, c, &xc32, &mut y32);
+        std::hint::black_box(&y32);
+    });
+    rows
+}
+
+struct RoundBed {
+    label: String,
+    sys: PartitionedSystem,
+    s: SpectralInfo,
+}
+
+fn dense_bed(smoke: bool) -> anyhow::Result<RoundBed> {
+    let (n, m) = if smoke { (240, 4) } else { (2000, 8) };
+    let p = Problem::standard_gaussian(n, n, m).build(101);
+    let sys = PartitionedSystem::split_even(&p.a, &p.b, m)?;
+    let s = SpectralInfo::for_tuning(&sys)?;
+    Ok(RoundBed { label: format!("dense n={n} m={m}"), sys, s })
+}
+
+fn sparse_bed(smoke: bool) -> anyhow::Result<RoundBed> {
+    let (n, m, bw) = if smoke { (400, 4, 6) } else { (4000, 10, 16) };
+    let p = SparseProblem::banded(n, n, bw, m).build(103);
+    let sys = PartitionedSystem::split_csr(&p.a, &p.b, m)?;
+    let s = SpectralInfo::for_tuning(&sys)?;
+    Ok(RoundBed { label: format!("sparse n={n} m={m} bw={bw}"), sys, s })
+}
+
+/// Seconds per round, amortized (warmup excluded; for the `+IR` engines
+/// the periodic refresh is deliberately *included* — it is part of the
+/// amortized per-round cost a user pays).
+fn time_rounds(solver: &mut dyn Solver, sys: &PartitionedSystem, warm: usize, reps: usize) -> f64 {
+    solver.reset(sys);
+    for _ in 0..warm {
+        solver.iterate(sys);
+    }
+    let t0 = Instant::now();
+    for _ in 0..reps {
+        solver.iterate(sys);
+    }
+    t0.elapsed().as_secs_f64() / reps as f64
+}
+
+fn main() -> anyhow::Result<()> {
+    let smoke = smoke_mode();
+    if smoke {
+        println!("[APC_BENCH_SMOKE] reduced sizes; JSON is artifact-only\n");
+    }
+    println!(
+        "detected backend: {} (arch {})\n",
+        simd::backend_name(),
+        std::env::consts::ARCH
+    );
+
+    // ---- A. kernel floor -------------------------------------------------
+    println!("=== A. kernel floor: blocked scalar vs {} ===\n", simd::backend_name());
+    let rows = kernel_sweep(smoke);
+    let mut table = Table::new(&["kernel", "dims", "scalar", "simd", "speedup"]);
+    let mut json_kernels = Vec::new();
+    for rr in &rows {
+        table.row(&[
+            rr.name.to_string(),
+            rr.dims.clone(),
+            format!("{:.1} us", rr.scalar_s * 1e6),
+            format!("{:.1} us", rr.auto_s * 1e6),
+            format!("{:.2}x", rr.scalar_s / rr.auto_s.max(1e-12)),
+        ]);
+        json_kernels.push(jobj(vec![
+            ("kernel", Json::Str(rr.name.into())),
+            ("dims", Json::Str(rr.dims.clone())),
+            ("scalar_us", Json::Num(rr.scalar_s * 1e6)),
+            ("simd_us", Json::Num(rr.auto_s * 1e6)),
+            ("speedup", Json::Num(rr.scalar_s / rr.auto_s.max(1e-12))),
+        ]));
+    }
+    println!("{}\n", table.render());
+
+    // ---- B/C. per-round solver cost: scalar vs SIMD vs mixed --------------
+    let (warm, reps) = if smoke { (2, 4) } else { (10, 60) };
+    let beds = [dense_bed(smoke)?, sparse_bed(smoke)?];
+    let mut json_rounds = Vec::new();
+    for bedr in &beds {
+        println!("=== B. per-round cost: {} ===\n", bedr.label);
+        let mut table =
+            Table::new(&["solver", "scalar/round", "simd/round", "mixed(+IR)/round", "best speedup"]);
+        for name in ["apc", "hbm"] {
+            let mut f64_solver = suite::tuned_solver(name, &bedr.sys, &bedr.s)?;
+            let scalar_s = with_backend(Backend::Scalar, || {
+                time_rounds(f64_solver.as_mut(), &bedr.sys, warm, reps)
+            });
+            let simd_s = time_rounds(f64_solver.as_mut(), &bedr.sys, warm, reps);
+            let mut mixed =
+                suite::tuned_solver_prec(name, &bedr.sys, &bedr.s, Precision::default_mixed())?;
+            let mixed_s = time_rounds(mixed.as_mut(), &bedr.sys, warm, reps);
+            table.row(&[
+                f64_solver.name().to_string(),
+                format!("{:.1} us", scalar_s * 1e6),
+                format!("{:.1} us", simd_s * 1e6),
+                format!("{:.1} us", mixed_s * 1e6),
+                format!("{:.2}x", scalar_s / simd_s.min(mixed_s).max(1e-12)),
+            ]);
+            json_rounds.push(jobj(vec![
+                ("problem", Json::Str(bedr.label.clone())),
+                ("solver", Json::Str(f64_solver.name().into())),
+                ("scalar_us_per_round", Json::Num(scalar_s * 1e6)),
+                ("simd_us_per_round", Json::Num(simd_s * 1e6)),
+                ("mixed_us_per_round", Json::Num(mixed_s * 1e6)),
+                ("speedup_simd", Json::Num(scalar_s / simd_s.max(1e-12))),
+                ("speedup_mixed", Json::Num(scalar_s / mixed_s.max(1e-12))),
+            ]));
+        }
+        println!("{}\n", table.render());
+    }
+    println!(
+        "(mixed rounds run the machine phase in f32 with a true-residual refresh every 50\n\
+         rounds folded into the amortized cost; accuracy is pinned to f64 tolerances by\n\
+         tests/mixed_precision.rs, so the mixed column is a like-for-like per-round price.)\n"
+    );
+
+    let json = jobj(vec![
+        ("bench", Json::Str("simd_floor".into())),
+        (
+            "config",
+            jobj(vec![
+                ("arch", Json::Str(std::env::consts::ARCH.into())),
+                ("detected_backend", Json::Str(simd::backend_name().into())),
+                ("smoke", Json::Bool(smoke)),
+                ("round_reps", Json::Num(reps as f64)),
+            ]),
+        ),
+        ("provenance", Json::Str(provenance("cargo bench --bench simd_floor", 1))),
+        ("kernels", Json::Arr(json_kernels)),
+        ("solver_rounds", Json::Arr(json_rounds)),
+    ]);
+    let json_path = concat!(env!("CARGO_MANIFEST_DIR"), "/../BENCH_simd.json");
+    std::fs::write(json_path, json.to_string_pretty() + "\n")?;
+    println!("wrote {}", json_path);
+    // belt-and-braces: auto-detection restored even if with_backend was
+    // never entered (e.g. future refactors)
+    simd::set_forced_backend(None);
+    Ok(())
+}

@@ -1,0 +1,146 @@
+//! Element-type abstraction for precision-generic kernels.
+//!
+//! The mixed-precision machine phase (ISSUE 7) needs the blocked kernels
+//! of [`super::kernels`] in both f64 and f32 without duplicating their
+//! bodies. [`Elem`] is the minimal surface those bodies use: arithmetic,
+//! comparisons, the two constants, and f64 round-trips for the
+//! cast-at-the-boundary points (broadcasting the f64 master state down,
+//! folding the f32 machine outputs up).
+//!
+//! This is deliberately *not* a general numeric-trait tower: only `f32`
+//! and `f64` implement it, every method is `#[inline]`, and the generic
+//! kernels monomorphize to exactly the scalar code they replaced — the
+//! f64 instantiation is bit-identical to the pre-generic kernels (pinned
+//! by `tests/simd_parity.rs`).
+
+use std::fmt::Debug;
+use std::ops::{Add, AddAssign, Div, Mul, Neg, Sub, SubAssign};
+
+/// A real scalar the kernel layer can compute in: `f32` or `f64`.
+pub trait Elem:
+    Copy
+    + Debug
+    + PartialEq
+    + PartialOrd
+    + Add<Output = Self>
+    + Sub<Output = Self>
+    + Mul<Output = Self>
+    + Div<Output = Self>
+    + Neg<Output = Self>
+    + AddAssign
+    + SubAssign
+    + Send
+    + Sync
+    + 'static
+{
+    const ZERO: Self;
+    const ONE: Self;
+
+    /// Round-to-nearest conversion from f64 (the broadcast cast).
+    fn from_f64(v: f64) -> Self;
+
+    /// Exact widening (f32 → f64) or identity (the fold cast).
+    fn to_f64(self) -> f64;
+
+    fn abs(self) -> Self;
+    fn sqrt(self) -> Self;
+}
+
+impl Elem for f64 {
+    const ZERO: Self = 0.0;
+    const ONE: Self = 1.0;
+
+    #[inline]
+    fn from_f64(v: f64) -> Self {
+        v
+    }
+
+    #[inline]
+    fn to_f64(self) -> f64 {
+        self
+    }
+
+    #[inline]
+    fn abs(self) -> Self {
+        f64::abs(self)
+    }
+
+    #[inline]
+    fn sqrt(self) -> Self {
+        f64::sqrt(self)
+    }
+}
+
+impl Elem for f32 {
+    const ZERO: Self = 0.0;
+    const ONE: Self = 1.0;
+
+    #[inline]
+    fn from_f64(v: f64) -> Self {
+        v as f32
+    }
+
+    #[inline]
+    fn to_f64(self) -> f64 {
+        self as f64
+    }
+
+    #[inline]
+    fn abs(self) -> Self {
+        f32::abs(self)
+    }
+
+    #[inline]
+    fn sqrt(self) -> Self {
+        f32::sqrt(self)
+    }
+}
+
+/// Cast a slice elementwise (`f64 → T`), reusing `out`'s allocation.
+#[inline]
+pub fn cast_from_f64<T: Elem>(src: &[f64], out: &mut [T]) {
+    assert_eq!(src.len(), out.len(), "cast_from_f64: length mismatch");
+    for (o, &s) in out.iter_mut().zip(src) {
+        *o = T::from_f64(s);
+    }
+}
+
+/// Widen a slice elementwise (`T → f64`), reusing `out`'s allocation.
+#[inline]
+pub fn cast_to_f64<T: Elem>(src: &[T], out: &mut [f64]) {
+    assert_eq!(src.len(), out.len(), "cast_to_f64: length mismatch");
+    for (o, &s) in out.iter_mut().zip(src) {
+        *o = s.to_f64();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn f64_round_trips_exactly() {
+        for v in [0.0, -1.5, 1e300, f64::MIN_POSITIVE] {
+            assert_eq!(<f64 as Elem>::from_f64(v).to_f64(), v);
+        }
+    }
+
+    #[test]
+    fn f32_widening_is_exact() {
+        // every f32 is exactly representable in f64
+        for v in [0.0f32, -1.5, 3.4e38, f32::MIN_POSITIVE] {
+            assert_eq!(v.to_f64() as f32, v);
+        }
+    }
+
+    #[test]
+    fn slice_casts() {
+        let src = [1.0f64, -2.25, 0.5];
+        let mut lo = [0.0f32; 3];
+        cast_from_f64(&src, &mut lo);
+        assert_eq!(lo, [1.0f32, -2.25, 0.5]);
+        let mut hi = [0.0f64; 3];
+        cast_to_f64(&lo, &mut hi);
+        assert_eq!(hi, src);
+    }
+}

@@ -1,96 +1,454 @@
-//! Cache-blocked compute kernels for the iteration hot path.
+//! Cache-blocked compute kernels for the iteration hot path, with a
+//! runtime-dispatched SIMD floor.
 //!
 //! Every method in the paper pays `2pn` flops per machine per round
 //! (§3.3/§4), all of it spent in three primitives over the row-major
 //! block `A_i`: `y = A x`, `y = Aᵀ x`, and (at setup) the row Gram
-//! `A Aᵀ`. The naive loops stream `x` (or `y`) from memory once per
-//! matrix row; at `n = 2000` the vectors no longer sit in L1 and the
-//! kernels go bandwidth-bound. The kernels here block over **4 rows at a
-//! time** so one pass of the shared vector feeds four dot products /
-//! four accumulation rows, cutting vector traffic 4× and giving the
-//! compiler four independent f64 chains to schedule:
+//! `A Aᵀ`. Each public kernel here checks its shapes, then dispatches on
+//! [`simd::backend()`]:
 //!
-//! * [`matvec`] — `y = A x`, 4 rows share one `x` stream, two
-//!   accumulators per row (even/odd lanes) so adds don't serialize;
-//! * [`tr_matvec`] / [`tr_matvec_axpy`] — `y (+)= α Aᵀ x` with the four
-//!   per-row scales fused into a single pass over `y`;
-//! * [`syrk_rows`] — `G = A Aᵀ` computing only the upper triangle
-//!   (halving the Gram build flops vs. a general matmul) with the same
-//!   4-wide row blocking, then mirroring.
+//! * **AVX2+FMA / NEON** ([`super::simd`]) — hand-written `std::arch`
+//!   vector kernels, selected once per process by runtime feature
+//!   detection;
+//! * **scalar fallback** ([`generic`], re-exported as [`scalar`]) — the
+//!   original 4-row blocked kernels, now generic over the element type
+//!   ([`Elem`]: f64 or f32) so the mixed-precision machine phase reuses
+//!   the same bodies. This path is always compiled (it *is* the build
+//!   with `--no-default-features`) and is the parity reference for the
+//!   SIMD paths.
 //!
-//! [`Mat`](super::Mat) forwards `matvec_into` / `tr_matvec_into` /
-//! `gram_rows` here, and [`Cholesky`](super::Cholesky) runs its
-//! substitutions through [`dot`] — so the single-process solvers, the
-//! coordinator workers, and the benches all hit these kernels without
-//! holding a reference to this module.
+//! The blocked scalar kernels stream 4 rows per pass of the shared
+//! vector; the SIMD kernels add 2–8-wide FMA lanes on top. [`Mat`]
+//! (`super::Mat`) forwards `matvec_into` / `tr_matvec_into` /
+//! `gram_rows` here, [`Cholesky`](super::Cholesky) runs its
+//! substitutions through [`dot`], and the CSR multi-vector kernels in
+//! [`crate::sparse`] route per-row through [`spmm_row`]/[`spmm_tr_row`]
+//! — so the single-process solvers, the coordinator workers, the
+//! batched/streaming drivers, and the benches all inherit whichever
+//! backend the host supports without holding a reference to this module.
 //!
-//! Numerics: blocking changes floating-point summation *order* relative
-//! to the naive loops (parity tests pin the kernels against naive
-//! references to ~1e-13 relative), but every kernel is deterministic —
-//! same inputs, same bits — which is what lets the parallel machine
-//! phase in [`crate::parallel`] reproduce the serial loop bit-for-bit.
+//! Numerics: blocking (and SIMD widening) changes floating-point
+//! summation *order* relative to the naive loops — `tests/simd_parity.rs`
+//! pins every kernel against the scalar reference (~1e-12 relative,
+//! reassociation + FMA contraction only) and the scalar kernels against
+//! naive triple loops (~1e-13). Every backend is deterministic and the
+//! dispatch choice is stable per process — same inputs, same bits —
+//! which is what lets the parallel machine phase in [`crate::parallel`]
+//! reproduce the serial loop bit-for-bit.
 
 pub use super::vector::dot;
+
+use super::elem::Elem;
+// Only referenced from the cfg-gated dispatch arms; unused on scalar-only
+// builds (feature off, or arches without a SIMD path).
+#[allow(unused_imports)]
+use super::simd;
 
 /// Rows per micro-panel. Four f64 row streams + the shared vector stream
 /// stay within L1/L2 associativity for the block sizes the partition
 /// layer produces (`p = N/m`, `n` up to a few thousand).
 pub const MR: usize = 4;
 
-#[inline]
-fn row_of(a: &[f64], i: usize, cols: usize) -> &[f64] {
-    &a[i * cols..(i + 1) * cols]
+/// The blocked scalar kernels, generic over the element type. These are
+/// the pre-SIMD kernel bodies verbatim (the f64 instantiation is
+/// bit-identical to the original scalar kernels); the public wrappers
+/// fall back here when no SIMD backend is available, and the f32
+/// machine-phase path ([`crate::partition::lowp`]) instantiates them at
+/// f32.
+pub(crate) mod generic {
+    use super::Elem;
+    use super::MR;
+
+    #[inline]
+    fn row_of<T: Elem>(a: &[T], i: usize, cols: usize) -> &[T] {
+        &a[i * cols..(i + 1) * cols]
+    }
+
+    /// Dot product, 4-way unrolled accumulation — the same algorithm as
+    /// [`crate::linalg::vector::dot`], so the f64 scalar path computes
+    /// identical bits whether it enters through `vector::dot` or a kernel
+    /// remainder row.
+    pub fn dot<T: Elem>(x: &[T], y: &[T]) -> T {
+        assert_eq!(x.len(), y.len(), "dot: length mismatch");
+        let mut acc = [T::ZERO; 4];
+        let chunks = x.len() / 4;
+        for c in 0..chunks {
+            let i = c * 4;
+            acc[0] += x[i] * y[i];
+            acc[1] += x[i + 1] * y[i + 1];
+            acc[2] += x[i + 2] * y[i + 2];
+            acc[3] += x[i + 3] * y[i + 3];
+        }
+        let mut s = (acc[0] + acc[1]) + (acc[2] + acc[3]);
+        for i in chunks * 4..x.len() {
+            s += x[i] * y[i];
+        }
+        s
+    }
+
+    /// `y ← a·x + y`.
+    pub fn axpy<T: Elem>(a: T, x: &[T], y: &mut [T]) {
+        assert_eq!(x.len(), y.len(), "axpy: length mismatch");
+        for i in 0..x.len() {
+            y[i] += a * x[i];
+        }
+    }
+
+    /// `y = A x`: 4 rows at a time share one pass over `x`; each row
+    /// keeps two accumulators (even/odd positions) so the adds form
+    /// independent chains.
+    pub fn matvec<T: Elem>(a: &[T], rows: usize, cols: usize, x: &[T], y: &mut [T]) {
+        let mut i = 0;
+        while i + MR <= rows {
+            let r0 = row_of(a, i, cols);
+            let r1 = row_of(a, i + 1, cols);
+            let r2 = row_of(a, i + 2, cols);
+            let r3 = row_of(a, i + 3, cols);
+            let (mut s0a, mut s0b) = (T::ZERO, T::ZERO);
+            let (mut s1a, mut s1b) = (T::ZERO, T::ZERO);
+            let (mut s2a, mut s2b) = (T::ZERO, T::ZERO);
+            let (mut s3a, mut s3b) = (T::ZERO, T::ZERO);
+            let pairs = cols / 2;
+            for c in 0..pairs {
+                let k = 2 * c;
+                let (xa, xb) = (x[k], x[k + 1]);
+                s0a += r0[k] * xa;
+                s0b += r0[k + 1] * xb;
+                s1a += r1[k] * xa;
+                s1b += r1[k + 1] * xb;
+                s2a += r2[k] * xa;
+                s2b += r2[k + 1] * xb;
+                s3a += r3[k] * xa;
+                s3b += r3[k + 1] * xb;
+            }
+            if cols % 2 == 1 {
+                let k = cols - 1;
+                let xk = x[k];
+                s0a += r0[k] * xk;
+                s1a += r1[k] * xk;
+                s2a += r2[k] * xk;
+                s3a += r3[k] * xk;
+            }
+            y[i] = s0a + s0b;
+            y[i + 1] = s1a + s1b;
+            y[i + 2] = s2a + s2b;
+            y[i + 3] = s3a + s3b;
+            i += MR;
+        }
+        while i < rows {
+            y[i] = dot(row_of(a, i, cols), x);
+            i += 1;
+        }
+    }
+
+    /// `y += α · Aᵀ x` — fused accumulation, 4 rows folded per pass over
+    /// `y`.
+    pub fn tr_matvec_axpy<T: Elem>(
+        a: &[T],
+        rows: usize,
+        cols: usize,
+        x: &[T],
+        alpha: T,
+        y: &mut [T],
+    ) {
+        let mut i = 0;
+        while i + MR <= rows {
+            let x0 = alpha * x[i];
+            let x1 = alpha * x[i + 1];
+            let x2 = alpha * x[i + 2];
+            let x3 = alpha * x[i + 3];
+            if x0 != T::ZERO || x1 != T::ZERO || x2 != T::ZERO || x3 != T::ZERO {
+                let r0 = row_of(a, i, cols);
+                let r1 = row_of(a, i + 1, cols);
+                let r2 = row_of(a, i + 2, cols);
+                let r3 = row_of(a, i + 3, cols);
+                for j in 0..cols {
+                    y[j] += x0 * r0[j] + x1 * r1[j] + x2 * r2[j] + x3 * r3[j];
+                }
+            }
+            i += MR;
+        }
+        while i < rows {
+            let xi = alpha * x[i];
+            if xi != T::ZERO {
+                let row = row_of(a, i, cols);
+                for j in 0..cols {
+                    y[j] += xi * row[j];
+                }
+            }
+            i += 1;
+        }
+    }
+
+    /// `Y = A X` over `k` lanes; `y` pre-zeroed by the caller.
+    pub fn matmat<T: Elem>(a: &[T], rows: usize, cols: usize, x: &[T], k: usize, y: &mut [T]) {
+        let mut i = 0;
+        while i + MR <= rows {
+            let r0 = row_of(a, i, cols);
+            let r1 = row_of(a, i + 1, cols);
+            let r2 = row_of(a, i + 2, cols);
+            let r3 = row_of(a, i + 3, cols);
+            let block = &mut y[i * k..(i + MR) * k];
+            let (y0, rest) = block.split_at_mut(k);
+            let (y1, rest) = rest.split_at_mut(k);
+            let (y2, y3) = rest.split_at_mut(k);
+            for c in 0..cols {
+                let xr = &x[c * k..(c + 1) * k];
+                let (a0, a1, a2, a3) = (r0[c], r1[c], r2[c], r3[c]);
+                for t in 0..k {
+                    let xv = xr[t];
+                    y0[t] += a0 * xv;
+                    y1[t] += a1 * xv;
+                    y2[t] += a2 * xv;
+                    y3[t] += a3 * xv;
+                }
+            }
+            i += MR;
+        }
+        while i < rows {
+            let ri = row_of(a, i, cols);
+            let yr = &mut y[i * k..(i + 1) * k];
+            for c in 0..cols {
+                let xr = &x[c * k..(c + 1) * k];
+                let ac = ri[c];
+                for t in 0..k {
+                    yr[t] += ac * xr[t];
+                }
+            }
+            i += 1;
+        }
+    }
+
+    /// `Y += α · Aᵀ X` over `k` lanes — fused multi-RHS accumulation.
+    pub fn tr_matmat_axpy<T: Elem>(
+        a: &[T],
+        rows: usize,
+        cols: usize,
+        x: &[T],
+        k: usize,
+        alpha: T,
+        y: &mut [T],
+    ) {
+        let mut i = 0;
+        while i + MR <= rows {
+            let r0 = row_of(a, i, cols);
+            let r1 = row_of(a, i + 1, cols);
+            let r2 = row_of(a, i + 2, cols);
+            let r3 = row_of(a, i + 3, cols);
+            let x0 = &x[i * k..(i + 1) * k];
+            let x1 = &x[(i + 1) * k..(i + 2) * k];
+            let x2 = &x[(i + 2) * k..(i + 3) * k];
+            let x3 = &x[(i + 3) * k..(i + 4) * k];
+            for j in 0..cols {
+                let yr = &mut y[j * k..(j + 1) * k];
+                let (a0, a1, a2, a3) =
+                    (alpha * r0[j], alpha * r1[j], alpha * r2[j], alpha * r3[j]);
+                for t in 0..k {
+                    yr[t] += a0 * x0[t] + a1 * x1[t] + a2 * x2[t] + a3 * x3[t];
+                }
+            }
+            i += MR;
+        }
+        while i < rows {
+            let ri = row_of(a, i, cols);
+            let xi = &x[i * k..(i + 1) * k];
+            for j in 0..cols {
+                let yr = &mut y[j * k..(j + 1) * k];
+                let aij = alpha * ri[j];
+                for t in 0..k {
+                    yr[t] += aij * xi[t];
+                }
+            }
+            i += 1;
+        }
+    }
+
+    /// `G = A Aᵀ` (SYRK): upper triangle computed, 4 `j`-rows per pass,
+    /// then mirrored exactly.
+    pub fn syrk_rows<T: Elem>(a: &[T], rows: usize, cols: usize, g: &mut [T]) {
+        for i in 0..rows {
+            let ri = row_of(a, i, cols);
+            let mut j = i;
+            while j + MR <= rows {
+                let r0 = row_of(a, j, cols);
+                let r1 = row_of(a, j + 1, cols);
+                let r2 = row_of(a, j + 2, cols);
+                let r3 = row_of(a, j + 3, cols);
+                let (mut s0, mut s1, mut s2, mut s3) = (T::ZERO, T::ZERO, T::ZERO, T::ZERO);
+                for k in 0..cols {
+                    let v = ri[k];
+                    s0 += v * r0[k];
+                    s1 += v * r1[k];
+                    s2 += v * r2[k];
+                    s3 += v * r3[k];
+                }
+                g[i * rows + j] = s0;
+                g[i * rows + j + 1] = s1;
+                g[i * rows + j + 2] = s2;
+                g[i * rows + j + 3] = s3;
+                j += MR;
+            }
+            while j < rows {
+                g[i * rows + j] = dot(ri, row_of(a, j, cols));
+                j += 1;
+            }
+        }
+        for i in 1..rows {
+            for j in 0..i {
+                g[i * rows + j] = g[j * rows + i];
+            }
+        }
+    }
+
+    /// One CSR row of SpMM: `yr[t] += Σ_nz v_nz · x[col_nz·k + t]`.
+    pub fn spmm_row<T: Elem>(values: &[T], col_idx: &[usize], x: &[T], k: usize, yr: &mut [T]) {
+        for (nz, &c) in col_idx.iter().enumerate() {
+            let v = values[nz];
+            let xr = &x[c * k..(c + 1) * k];
+            for t in 0..k {
+                yr[t] += v * xr[t];
+            }
+        }
+    }
+
+    /// One CSR row of transposed SpMM: scatter
+    /// `y[col_nz·k + t] += (α v_nz) · xi[t]`.
+    pub fn spmm_tr_row<T: Elem>(
+        values: &[T],
+        col_idx: &[usize],
+        xi: &[T],
+        alpha: T,
+        k: usize,
+        y: &mut [T],
+    ) {
+        for (nz, &c) in col_idx.iter().enumerate() {
+            let av = alpha * values[nz];
+            if av == T::ZERO {
+                continue;
+            }
+            let yr = &mut y[c * k..(c + 1) * k];
+            for t in 0..k {
+                yr[t] += av * xi[t];
+            }
+        }
+    }
+}
+
+/// The scalar fallback kernels as a public, *never-dispatched* reference
+/// surface: `scalar::matvec` always runs the blocked scalar code, no
+/// matter which backend [`simd::backend()`] selects. The parity suite
+/// (`tests/simd_parity.rs`) and the `simd_floor` bench compare the
+/// dispatched public kernels against these — without mutating global
+/// dispatch state, so concurrent tests keep their determinism guarantee.
+pub mod scalar {
+    use super::generic;
+
+    pub fn dot(x: &[f64], y: &[f64]) -> f64 {
+        generic::dot(x, y)
+    }
+
+    pub fn axpy(a: f64, x: &[f64], y: &mut [f64]) {
+        generic::axpy(a, x, y)
+    }
+
+    pub fn matvec(a: &[f64], rows: usize, cols: usize, x: &[f64], y: &mut [f64]) {
+        generic::matvec(a, rows, cols, x, y)
+    }
+
+    pub fn tr_matvec(a: &[f64], rows: usize, cols: usize, x: &[f64], y: &mut [f64]) {
+        y.fill(0.0);
+        generic::tr_matvec_axpy(a, rows, cols, x, 1.0, y)
+    }
+
+    pub fn tr_matvec_axpy(
+        a: &[f64],
+        rows: usize,
+        cols: usize,
+        x: &[f64],
+        alpha: f64,
+        y: &mut [f64],
+    ) {
+        generic::tr_matvec_axpy(a, rows, cols, x, alpha, y)
+    }
+
+    pub fn matmat(a: &[f64], rows: usize, cols: usize, x: &[f64], k: usize, y: &mut [f64]) {
+        y.fill(0.0);
+        if k == 0 {
+            return;
+        }
+        generic::matmat(a, rows, cols, x, k, y)
+    }
+
+    pub fn tr_matmat(a: &[f64], rows: usize, cols: usize, x: &[f64], k: usize, y: &mut [f64]) {
+        y.fill(0.0);
+        if k == 0 {
+            return;
+        }
+        generic::tr_matmat_axpy(a, rows, cols, x, k, 1.0, y)
+    }
+
+    pub fn tr_matmat_axpy(
+        a: &[f64],
+        rows: usize,
+        cols: usize,
+        x: &[f64],
+        k: usize,
+        alpha: f64,
+        y: &mut [f64],
+    ) {
+        if alpha == 0.0 || k == 0 {
+            return;
+        }
+        generic::tr_matmat_axpy(a, rows, cols, x, k, alpha, y)
+    }
+
+    pub fn syrk_rows(a: &[f64], rows: usize, cols: usize, g: &mut [f64]) {
+        generic::syrk_rows(a, rows, cols, g)
+    }
+
+    pub fn dot_f32(x: &[f32], y: &[f32]) -> f32 {
+        generic::dot(x, y)
+    }
+
+    pub fn axpy_f32(a: f32, x: &[f32], y: &mut [f32]) {
+        generic::axpy(a, x, y)
+    }
+
+    pub fn matvec_f32(a: &[f32], rows: usize, cols: usize, x: &[f32], y: &mut [f32]) {
+        generic::matvec(a, rows, cols, x, y)
+    }
+
+    pub fn tr_matvec_f32(a: &[f32], rows: usize, cols: usize, x: &[f32], y: &mut [f32]) {
+        y.fill(0.0);
+        generic::tr_matvec_axpy(a, rows, cols, x, 1.0, y)
+    }
+
+    pub fn tr_matvec_axpy_f32(
+        a: &[f32],
+        rows: usize,
+        cols: usize,
+        x: &[f32],
+        alpha: f32,
+        y: &mut [f32],
+    ) {
+        generic::tr_matvec_axpy(a, rows, cols, x, alpha, y)
+    }
 }
 
 /// `y = A x` for row-major `a` of shape `rows × cols`.
-///
-/// Blocked: 4 rows at a time share one pass over `x`; each row keeps two
-/// accumulators (even/odd positions) so the adds form independent chains.
 pub fn matvec(a: &[f64], rows: usize, cols: usize, x: &[f64], y: &mut [f64]) {
     assert_eq!(a.len(), rows * cols, "kernels::matvec: matrix size mismatch");
     assert_eq!(x.len(), cols, "kernels::matvec: x length mismatch");
     assert_eq!(y.len(), rows, "kernels::matvec: y length mismatch");
-    let mut i = 0;
-    while i + MR <= rows {
-        let r0 = row_of(a, i, cols);
-        let r1 = row_of(a, i + 1, cols);
-        let r2 = row_of(a, i + 2, cols);
-        let r3 = row_of(a, i + 3, cols);
-        let (mut s0a, mut s0b) = (0.0f64, 0.0f64);
-        let (mut s1a, mut s1b) = (0.0f64, 0.0f64);
-        let (mut s2a, mut s2b) = (0.0f64, 0.0f64);
-        let (mut s3a, mut s3b) = (0.0f64, 0.0f64);
-        let pairs = cols / 2;
-        for c in 0..pairs {
-            let k = 2 * c;
-            let (xa, xb) = (x[k], x[k + 1]);
-            s0a += r0[k] * xa;
-            s0b += r0[k + 1] * xb;
-            s1a += r1[k] * xa;
-            s1b += r1[k + 1] * xb;
-            s2a += r2[k] * xa;
-            s2b += r2[k + 1] * xb;
-            s3a += r3[k] * xa;
-            s3b += r3[k + 1] * xb;
-        }
-        if cols % 2 == 1 {
-            let k = cols - 1;
-            let xk = x[k];
-            s0a += r0[k] * xk;
-            s1a += r1[k] * xk;
-            s2a += r2[k] * xk;
-            s3a += r3[k] * xk;
-        }
-        y[i] = s0a + s0b;
-        y[i + 1] = s1a + s1b;
-        y[i + 2] = s2a + s2b;
-        y[i + 3] = s3a + s3b;
-        i += MR;
+    #[cfg(all(feature = "simd", target_arch = "x86_64"))]
+    if simd::backend() == simd::Backend::Avx2 {
+        return unsafe { simd::avx2::matvec(a, rows, cols, x, y) };
     }
-    while i < rows {
-        y[i] = dot(row_of(a, i, cols), x);
-        i += 1;
+    #[cfg(all(feature = "simd", target_arch = "aarch64"))]
+    if simd::backend() == simd::Backend::Neon {
+        return unsafe { simd::neon::matvec(a, rows, cols, x, y) };
     }
+    generic::matvec(a, rows, cols, x, y)
 }
 
 /// `y = Aᵀ x` for row-major `a` of shape `rows × cols` (`x` has `rows`
@@ -101,7 +459,7 @@ pub fn tr_matvec(a: &[f64], rows: usize, cols: usize, x: &[f64], y: &mut [f64]) 
     tr_matvec_axpy(a, rows, cols, x, 1.0, y);
 }
 
-/// `y += α · Aᵀ x` — fused accumulation, 4 rows folded per pass over `y`.
+/// `y += α · Aᵀ x` — fused accumulation.
 ///
 /// This is the back-projection half of every worker kernel (`A_iᵀ t`),
 /// and with `α = −γ` it is the entire tail of the APC step
@@ -110,46 +468,21 @@ pub fn tr_matvec_axpy(a: &[f64], rows: usize, cols: usize, x: &[f64], alpha: f64
     assert_eq!(a.len(), rows * cols, "kernels::tr_matvec_axpy: matrix size mismatch");
     assert_eq!(x.len(), rows, "kernels::tr_matvec_axpy: x length mismatch");
     assert_eq!(y.len(), cols, "kernels::tr_matvec_axpy: y length mismatch");
-    let mut i = 0;
-    while i + MR <= rows {
-        let x0 = alpha * x[i];
-        let x1 = alpha * x[i + 1];
-        let x2 = alpha * x[i + 2];
-        let x3 = alpha * x[i + 3];
-        if x0 != 0.0 || x1 != 0.0 || x2 != 0.0 || x3 != 0.0 {
-            let r0 = row_of(a, i, cols);
-            let r1 = row_of(a, i + 1, cols);
-            let r2 = row_of(a, i + 2, cols);
-            let r3 = row_of(a, i + 3, cols);
-            for j in 0..cols {
-                y[j] += x0 * r0[j] + x1 * r1[j] + x2 * r2[j] + x3 * r3[j];
-            }
-        }
-        i += MR;
+    #[cfg(all(feature = "simd", target_arch = "x86_64"))]
+    if simd::backend() == simd::Backend::Avx2 {
+        return unsafe { simd::avx2::tr_matvec_axpy(a, rows, cols, x, alpha, y) };
     }
-    while i < rows {
-        let xi = alpha * x[i];
-        if xi != 0.0 {
-            let row = row_of(a, i, cols);
-            for j in 0..cols {
-                y[j] += xi * row[j];
-            }
-        }
-        i += 1;
+    #[cfg(all(feature = "simd", target_arch = "aarch64"))]
+    if simd::backend() == simd::Backend::Neon {
+        return unsafe { simd::neon::tr_matvec_axpy(a, rows, cols, x, alpha, y) };
     }
+    generic::tr_matvec_axpy(a, rows, cols, x, alpha, y)
 }
 
 /// `Y = A X` for row-major `a` of shape `rows × cols` and a row-major
 /// column block `x` of shape `cols × k` (`k` RHS lanes); `y` is
-/// `rows × k`, overwritten.
-///
-/// This is the batched (multi-RHS) counterpart of [`matvec`] — and, with
-/// `x` any row-major matrix, the general GEMM behind [`Mat::matmul`]
-/// (`Mat`: [`super::Mat`]). Same 4-row blocking: one pass over the
-/// shared `x` stream feeds four output rows, and each streamed row of
-/// `x` updates all `k` lanes through one contiguous `k`-wide slice — so
-/// serving `k` right-hand sides streams `A` and `X` once, not `k`
-/// times.
+/// `rows × k`, overwritten. The batched (multi-RHS) counterpart of
+/// [`matvec`] and the general GEMM behind `Mat::matmul`.
 pub fn matmat(a: &[f64], rows: usize, cols: usize, x: &[f64], k: usize, y: &mut [f64]) {
     assert_eq!(a.len(), rows * cols, "kernels::matmat: matrix size mismatch");
     assert_eq!(x.len(), cols * k, "kernels::matmat: x size mismatch");
@@ -158,41 +491,15 @@ pub fn matmat(a: &[f64], rows: usize, cols: usize, x: &[f64], k: usize, y: &mut 
     if k == 0 {
         return;
     }
-    let mut i = 0;
-    while i + MR <= rows {
-        let r0 = row_of(a, i, cols);
-        let r1 = row_of(a, i + 1, cols);
-        let r2 = row_of(a, i + 2, cols);
-        let r3 = row_of(a, i + 3, cols);
-        let block = &mut y[i * k..(i + MR) * k];
-        let (y0, rest) = block.split_at_mut(k);
-        let (y1, rest) = rest.split_at_mut(k);
-        let (y2, y3) = rest.split_at_mut(k);
-        for c in 0..cols {
-            let xr = &x[c * k..(c + 1) * k];
-            let (a0, a1, a2, a3) = (r0[c], r1[c], r2[c], r3[c]);
-            for t in 0..k {
-                let xv = xr[t];
-                y0[t] += a0 * xv;
-                y1[t] += a1 * xv;
-                y2[t] += a2 * xv;
-                y3[t] += a3 * xv;
-            }
-        }
-        i += MR;
+    #[cfg(all(feature = "simd", target_arch = "x86_64"))]
+    if simd::backend() == simd::Backend::Avx2 {
+        return unsafe { simd::avx2::matmat(a, rows, cols, x, k, y) };
     }
-    while i < rows {
-        let ri = row_of(a, i, cols);
-        let yr = &mut y[i * k..(i + 1) * k];
-        for c in 0..cols {
-            let xr = &x[c * k..(c + 1) * k];
-            let ac = ri[c];
-            for t in 0..k {
-                yr[t] += ac * xr[t];
-            }
-        }
-        i += 1;
+    #[cfg(all(feature = "simd", target_arch = "aarch64"))]
+    if simd::backend() == simd::Backend::Neon {
+        return unsafe { simd::neon::matmat(a, rows, cols, x, k, y) };
     }
+    generic::matmat(a, rows, cols, x, k, y)
 }
 
 /// `Y = Aᵀ X` for row-major `a` of shape `rows × cols`; `x` is
@@ -204,10 +511,9 @@ pub fn tr_matmat(a: &[f64], rows: usize, cols: usize, x: &[f64], k: usize, y: &m
     tr_matmat_axpy(a, rows, cols, x, k, 1.0, y);
 }
 
-/// `Y += α · Aᵀ X` — fused multi-RHS accumulation, 4 rows folded per
-/// pass over `y`. With `α = −γ` this is the entire tail of the batched
-/// APC step `X_i ← X_i − γ A_iᵀ T` without a temporary, mirroring
-/// [`tr_matvec_axpy`].
+/// `Y += α · Aᵀ X` — fused multi-RHS accumulation. With `α = −γ` this is
+/// the entire tail of the batched APC step `X_i ← X_i − γ A_iᵀ T`
+/// without a temporary, mirroring [`tr_matvec_axpy`].
 pub fn tr_matmat_axpy(
     a: &[f64],
     rows: usize,
@@ -223,82 +529,156 @@ pub fn tr_matmat_axpy(
     if alpha == 0.0 || k == 0 {
         return; // exact noop, same contract as the single-vector kernel
     }
-    let mut i = 0;
-    while i + MR <= rows {
-        let r0 = row_of(a, i, cols);
-        let r1 = row_of(a, i + 1, cols);
-        let r2 = row_of(a, i + 2, cols);
-        let r3 = row_of(a, i + 3, cols);
-        let x0 = &x[i * k..(i + 1) * k];
-        let x1 = &x[(i + 1) * k..(i + 2) * k];
-        let x2 = &x[(i + 2) * k..(i + 3) * k];
-        let x3 = &x[(i + 3) * k..(i + 4) * k];
-        for j in 0..cols {
-            let yr = &mut y[j * k..(j + 1) * k];
-            let (a0, a1, a2, a3) =
-                (alpha * r0[j], alpha * r1[j], alpha * r2[j], alpha * r3[j]);
-            for t in 0..k {
-                yr[t] += a0 * x0[t] + a1 * x1[t] + a2 * x2[t] + a3 * x3[t];
-            }
-        }
-        i += MR;
+    #[cfg(all(feature = "simd", target_arch = "x86_64"))]
+    if simd::backend() == simd::Backend::Avx2 {
+        return unsafe { simd::avx2::tr_matmat_axpy(a, rows, cols, x, k, alpha, y) };
     }
-    while i < rows {
-        let ri = row_of(a, i, cols);
-        let xi = &x[i * k..(i + 1) * k];
-        for j in 0..cols {
-            let yr = &mut y[j * k..(j + 1) * k];
-            let aij = alpha * ri[j];
-            for t in 0..k {
-                yr[t] += aij * xi[t];
-            }
-        }
-        i += 1;
+    #[cfg(all(feature = "simd", target_arch = "aarch64"))]
+    if simd::backend() == simd::Backend::Neon {
+        return unsafe { simd::neon::tr_matmat_axpy(a, rows, cols, x, k, alpha, y) };
     }
+    generic::tr_matmat_axpy(a, rows, cols, x, k, alpha, y)
 }
 
 /// `G = A Aᵀ` (SYRK) for row-major `a` of shape `rows × cols`; `g` is the
-/// `rows × rows` output, fully written (both triangles).
-///
-/// Only the upper triangle is *computed* — half the flops of a general
-/// `A · Aᵀ` matmul — and each loaded row `i` is dotted against 4 rows `j`
-/// per pass, so the `O(p²n)` Gram build streams `A` 4× less than the
-/// dot-per-entry loop it replaces.
+/// `rows × rows` output, fully written (both triangles). Only the upper
+/// triangle is *computed* — half the flops of a general `A · Aᵀ` matmul.
 pub fn syrk_rows(a: &[f64], rows: usize, cols: usize, g: &mut [f64]) {
     assert_eq!(a.len(), rows * cols, "kernels::syrk_rows: matrix size mismatch");
     assert_eq!(g.len(), rows * rows, "kernels::syrk_rows: output size mismatch");
-    for i in 0..rows {
-        let ri = row_of(a, i, cols);
-        let mut j = i;
-        while j + MR <= rows {
-            let r0 = row_of(a, j, cols);
-            let r1 = row_of(a, j + 1, cols);
-            let r2 = row_of(a, j + 2, cols);
-            let r3 = row_of(a, j + 3, cols);
-            let (mut s0, mut s1, mut s2, mut s3) = (0.0f64, 0.0f64, 0.0f64, 0.0f64);
-            for k in 0..cols {
-                let v = ri[k];
-                s0 += v * r0[k];
-                s1 += v * r1[k];
-                s2 += v * r2[k];
-                s3 += v * r3[k];
-            }
-            g[i * rows + j] = s0;
-            g[i * rows + j + 1] = s1;
-            g[i * rows + j + 2] = s2;
-            g[i * rows + j + 3] = s3;
-            j += MR;
-        }
-        while j < rows {
-            g[i * rows + j] = dot(ri, row_of(a, j, cols));
-            j += 1;
-        }
+    #[cfg(all(feature = "simd", target_arch = "x86_64"))]
+    if simd::backend() == simd::Backend::Avx2 {
+        return unsafe { simd::avx2::syrk_rows(a, rows, cols, g) };
     }
-    for i in 1..rows {
-        for j in 0..i {
-            g[i * rows + j] = g[j * rows + i];
-        }
+    #[cfg(all(feature = "simd", target_arch = "aarch64"))]
+    if simd::backend() == simd::Backend::Neon {
+        return unsafe { simd::neon::syrk_rows(a, rows, cols, g) };
     }
+    generic::syrk_rows(a, rows, cols, g)
+}
+
+/// One CSR row of SpMM — `yr[t] += Σ_nz v_nz · x[col_nz·k + t]` over the
+/// `k` lanes. `pub(crate)`: the SIMD path trusts `col_idx` to stay
+/// within `x.len()/k` (the `Csr` structural invariant its only caller,
+/// [`crate::sparse`], upholds).
+pub(crate) fn spmm_row(values: &[f64], col_idx: &[usize], x: &[f64], k: usize, yr: &mut [f64]) {
+    debug_assert_eq!(values.len(), col_idx.len(), "kernels::spmm_row: nnz mismatch");
+    debug_assert_eq!(yr.len(), k, "kernels::spmm_row: row slice must be k lanes");
+    if k == 0 {
+        return;
+    }
+    #[cfg(all(feature = "simd", target_arch = "x86_64"))]
+    if simd::backend() == simd::Backend::Avx2 {
+        return unsafe { simd::avx2::spmm_row(values, col_idx, x, k, yr) };
+    }
+    #[cfg(all(feature = "simd", target_arch = "aarch64"))]
+    if simd::backend() == simd::Backend::Neon {
+        return unsafe { simd::neon::spmm_row(values, col_idx, x, k, yr) };
+    }
+    generic::spmm_row(values, col_idx, x, k, yr)
+}
+
+/// One CSR row of transposed SpMM — scatter
+/// `y[col_nz·k + t] += (α v_nz) · xi[t]`. Same `pub(crate)` trust
+/// boundary as [`spmm_row`].
+pub(crate) fn spmm_tr_row(
+    values: &[f64],
+    col_idx: &[usize],
+    xi: &[f64],
+    alpha: f64,
+    k: usize,
+    y: &mut [f64],
+) {
+    debug_assert_eq!(values.len(), col_idx.len(), "kernels::spmm_tr_row: nnz mismatch");
+    debug_assert_eq!(xi.len(), k, "kernels::spmm_tr_row: x slice must be k lanes");
+    if k == 0 || alpha == 0.0 {
+        return;
+    }
+    #[cfg(all(feature = "simd", target_arch = "x86_64"))]
+    if simd::backend() == simd::Backend::Avx2 {
+        return unsafe { simd::avx2::spmm_tr_row(values, col_idx, xi, alpha, k, y) };
+    }
+    #[cfg(all(feature = "simd", target_arch = "aarch64"))]
+    if simd::backend() == simd::Backend::Neon {
+        return unsafe { simd::neon::spmm_tr_row(values, col_idx, xi, alpha, k, y) };
+    }
+    generic::spmm_tr_row(values, col_idx, xi, alpha, k, y)
+}
+
+// ---- f32 kernels (mixed-precision machine phase) -----------------------
+
+/// `xᵀy` in f32.
+pub fn dot_f32(x: &[f32], y: &[f32]) -> f32 {
+    assert_eq!(x.len(), y.len(), "kernels::dot_f32: length mismatch");
+    #[cfg(all(feature = "simd", target_arch = "x86_64"))]
+    if simd::backend() == simd::Backend::Avx2 {
+        return unsafe { simd::avx2::dot_f32(x, y) };
+    }
+    #[cfg(all(feature = "simd", target_arch = "aarch64"))]
+    if simd::backend() == simd::Backend::Neon {
+        return unsafe { simd::neon::dot_f32(x, y) };
+    }
+    generic::dot(x, y)
+}
+
+/// `y ← a·x + y` in f32.
+pub fn axpy_f32(a: f32, x: &[f32], y: &mut [f32]) {
+    assert_eq!(x.len(), y.len(), "kernels::axpy_f32: length mismatch");
+    #[cfg(all(feature = "simd", target_arch = "x86_64"))]
+    if simd::backend() == simd::Backend::Avx2 {
+        return unsafe { simd::avx2::axpy_f32(a, x, y) };
+    }
+    #[cfg(all(feature = "simd", target_arch = "aarch64"))]
+    if simd::backend() == simd::Backend::Neon {
+        return unsafe { simd::neon::axpy_f32(a, x, y) };
+    }
+    generic::axpy(a, x, y)
+}
+
+/// `y = A x` in f32.
+pub fn matvec_f32(a: &[f32], rows: usize, cols: usize, x: &[f32], y: &mut [f32]) {
+    assert_eq!(a.len(), rows * cols, "kernels::matvec_f32: matrix size mismatch");
+    assert_eq!(x.len(), cols, "kernels::matvec_f32: x length mismatch");
+    assert_eq!(y.len(), rows, "kernels::matvec_f32: y length mismatch");
+    #[cfg(all(feature = "simd", target_arch = "x86_64"))]
+    if simd::backend() == simd::Backend::Avx2 {
+        return unsafe { simd::avx2::matvec_f32(a, rows, cols, x, y) };
+    }
+    #[cfg(all(feature = "simd", target_arch = "aarch64"))]
+    if simd::backend() == simd::Backend::Neon {
+        return unsafe { simd::neon::matvec_f32(a, rows, cols, x, y) };
+    }
+    generic::matvec(a, rows, cols, x, y)
+}
+
+/// `y = Aᵀ x` in f32. Overwrites `y`.
+pub fn tr_matvec_f32(a: &[f32], rows: usize, cols: usize, x: &[f32], y: &mut [f32]) {
+    assert_eq!(y.len(), cols, "kernels::tr_matvec_f32: y length mismatch");
+    y.fill(0.0);
+    tr_matvec_axpy_f32(a, rows, cols, x, 1.0, y);
+}
+
+/// `y += α · Aᵀ x` in f32.
+pub fn tr_matvec_axpy_f32(
+    a: &[f32],
+    rows: usize,
+    cols: usize,
+    x: &[f32],
+    alpha: f32,
+    y: &mut [f32],
+) {
+    assert_eq!(a.len(), rows * cols, "kernels::tr_matvec_axpy_f32: matrix size mismatch");
+    assert_eq!(x.len(), rows, "kernels::tr_matvec_axpy_f32: x length mismatch");
+    assert_eq!(y.len(), cols, "kernels::tr_matvec_axpy_f32: y length mismatch");
+    #[cfg(all(feature = "simd", target_arch = "x86_64"))]
+    if simd::backend() == simd::Backend::Avx2 {
+        return unsafe { simd::avx2::tr_matvec_axpy_f32(a, rows, cols, x, alpha, y) };
+    }
+    #[cfg(all(feature = "simd", target_arch = "aarch64"))]
+    if simd::backend() == simd::Backend::Neon {
+        return unsafe { simd::neon::tr_matvec_axpy_f32(a, rows, cols, x, alpha, y) };
+    }
+    generic::tr_matvec_axpy(a, rows, cols, x, alpha, y)
 }
 
 #[cfg(test)]
@@ -544,5 +924,62 @@ mod tests {
         syrk_rows(&a, rows, cols, &mut g1);
         syrk_rows(&a, rows, cols, &mut g2);
         assert_eq!(g1, g2);
+    }
+
+    #[test]
+    fn spmm_row_kernels_match_dense_equivalent() {
+        // a tiny CSR row [0 → 0.5, 2 → -2.0] against a 3-col, k-lane x
+        for &k in &WIDTHS {
+            let values = [0.5, -2.0];
+            let col_idx = [0usize, 2];
+            let x = filled(3 * k, 29 + k as u64);
+            let mut yr = filled(k, 31);
+            let y0 = yr.clone();
+            spmm_row(&values, &col_idx, &x, k, &mut yr);
+            for t in 0..k {
+                let expect = y0[t] + 0.5 * x[t] - 2.0 * x[2 * k + t];
+                assert!((yr[t] - expect).abs() < 1e-13, "spmm_row lane {t}");
+            }
+            // transposed scatter
+            let xi = filled(k, 33);
+            let mut y = filled(3 * k, 35);
+            let y0 = y.clone();
+            spmm_tr_row(&values, &col_idx, &xi, -1.25, k, &mut y);
+            for t in 0..k {
+                let e0 = y0[t] + (-1.25 * 0.5) * xi[t];
+                let e2 = y0[2 * k + t] + (-1.25 * -2.0) * xi[t];
+                assert!((y[t] - e0).abs() < 1e-13);
+                assert_eq!(y[k + t], y0[k + t], "untouched column must stay bit-identical");
+                assert!((y[2 * k + t] - e2).abs() < 1e-13);
+            }
+        }
+    }
+
+    #[test]
+    fn f32_kernels_match_f64_downcast() {
+        let (rows, cols) = (7, 13);
+        let a = filled(rows * cols, 41);
+        let x = filled(cols, 42);
+        let xt = filled(rows, 43);
+        let a32: Vec<f32> = a.iter().map(|&v| v as f32).collect();
+        let x32: Vec<f32> = x.iter().map(|&v| v as f32).collect();
+        let xt32: Vec<f32> = xt.iter().map(|&v| v as f32).collect();
+        let mut y64 = vec![0.0f64; rows];
+        matvec(&a, rows, cols, &x, &mut y64);
+        let mut y32 = vec![0.0f32; rows];
+        matvec_f32(&a32, rows, cols, &x32, &mut y32);
+        for i in 0..rows {
+            assert!((y64[i] - y32[i] as f64).abs() < 1e-5, "matvec_f32 row {i}");
+        }
+        let mut t64 = vec![0.0f64; cols];
+        tr_matvec(&a, rows, cols, &xt, &mut t64);
+        let mut t32 = vec![0.0f32; cols];
+        tr_matvec_f32(&a32, rows, cols, &xt32, &mut t32);
+        for j in 0..cols {
+            assert!((t64[j] - t32[j] as f64).abs() < 1e-5, "tr_matvec_f32 col {j}");
+        }
+        let d64 = dot(&x, &x);
+        let d32 = dot_f32(&x32, &x32);
+        assert!((d64 - d32 as f64).abs() < 1e-5);
     }
 }

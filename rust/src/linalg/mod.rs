@@ -7,7 +7,15 @@
 //! * [`Mat`] — row-major dense matrix with matvec / matmul / transpose,
 //! * [`kernels`] — cache-blocked hot-path kernels (4-row matvec, fused
 //!   transpose-matvec accumulation, symmetric SYRK, and their multi-RHS
-//!   GEMM counterparts) that `Mat` and `Cholesky` forward to,
+//!   GEMM counterparts) that `Mat` and `Cholesky` forward to; generic
+//!   over [`elem::Elem`] (f64/f32) and runtime-dispatched through
+//!   [`simd`],
+//! * [`simd`] — explicit `std::arch` microkernels (x86_64 AVX2+FMA,
+//!   aarch64 NEON) behind once-per-process feature detection; the
+//!   scalar blocked kernels remain the always-compiled fallback and the
+//!   parity reference,
+//! * [`elem`] — the two-type (f32/f64) element trait the mixed-precision
+//!   machine phase instantiates the kernel bodies at,
 //! * [`multivec`] — the `n×k` column block ([`MultiVec`]) the batched
 //!   multi-RHS solve path streams through those GEMM kernels, with
 //!   in-place column deflation,
@@ -29,11 +37,13 @@
 pub mod cholesky;
 pub mod dense;
 pub mod eig;
+pub mod elem;
 pub mod kernels;
 pub mod lanczos;
 pub mod lu;
 pub mod multivec;
 pub mod qr;
+pub mod simd;
 pub mod vector;
 
 pub use cholesky::Cholesky;

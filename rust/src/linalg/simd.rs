@@ -1,0 +1,887 @@
+//! Explicit-SIMD microkernels with runtime dispatch — the hardware floor
+//! under [`super::kernels`].
+//!
+//! The blocked scalar kernels give LLVM independent accumulation chains,
+//! but autovectorization of f64 reductions is not guaranteed (strict FP
+//! semantics forbid reassociation), so on AVX2 hardware the dense hot
+//! path ran mostly scalar. This module writes the vector code by hand via
+//! `std::arch`:
+//!
+//! * **x86_64**: AVX2 + FMA (4-wide f64 / 8-wide f32), gated at runtime
+//!   by `std::is_x86_feature_detected!` — one relaxed atomic load per
+//!   kernel call, probed once per process;
+//! * **aarch64**: NEON (2-wide f64 / 4-wide f32), baseline on aarch64 so
+//!   no detection is needed;
+//! * **anywhere else / `--no-default-features`**: the scalar blocked
+//!   kernels in `kernels::generic` — the guaranteed-available fallback
+//!   and the parity reference.
+//!
+//! Dispatch contract: [`backend`] is stable for the lifetime of the
+//! process (detection result is cached; [`set_forced_backend`] exists for
+//! the single-threaded `simd_floor` bench only), so every kernel remains
+//! deterministic — same process, same inputs, same bits — and the
+//! parallel machine phase's bit-exactness guarantee survives.
+//!
+//! Numerics: the SIMD kernels change summation *order* vs the scalar
+//! blocks (wider accumulators, FMA contraction), exactly as the scalar
+//! blocks changed it vs naive loops. `tests/simd_parity.rs` pins every
+//! kernel against the scalar reference to ~1e-12 relative (f64) and the
+//! documented f32 analog; lane-parallel kernels (`matmat`, SpMM) keep
+//! per-lane accumulation order and differ only by FMA rounding.
+//!
+//! All `unsafe` here is (a) `std::arch` intrinsics behind the matching
+//! cpu-feature gate and (b) raw-pointer loads/stores within
+//! caller-asserted slice bounds (the public wrappers in
+//! [`super::kernels`] check every length before dispatching).
+
+use std::sync::atomic::{AtomicU8, Ordering};
+
+/// Which microkernel family [`super::kernels`] dispatches to.
+///
+/// All variants are always *defined* (so bench/report code is
+/// arch-portable); only the ones compiled for the current target are ever
+/// *returned* by [`backend`].
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Backend {
+    /// Blocked scalar kernels (`kernels::generic`) — always available.
+    Scalar,
+    /// x86_64 AVX2 + FMA, 4-wide f64 / 8-wide f32.
+    Avx2,
+    /// aarch64 NEON, 2-wide f64 / 4-wide f32.
+    Neon,
+}
+
+const CODE_UNSET: u8 = 0;
+const CODE_SCALAR: u8 = 1;
+const CODE_AVX2: u8 = 2;
+const CODE_NEON: u8 = 3;
+
+/// Bench-only override (0 = auto). See [`set_forced_backend`].
+static FORCED: AtomicU8 = AtomicU8::new(CODE_UNSET);
+/// Cached detection result (0 = not yet probed).
+static DETECTED: AtomicU8 = AtomicU8::new(CODE_UNSET);
+
+#[allow(unreachable_code)] // arch cfgs make the tail unreachable on some targets
+fn detect() -> u8 {
+    #[cfg(all(feature = "simd", target_arch = "x86_64"))]
+    {
+        if std::is_x86_feature_detected!("avx2") && std::is_x86_feature_detected!("fma") {
+            return CODE_AVX2;
+        }
+        return CODE_SCALAR;
+    }
+    #[cfg(all(feature = "simd", target_arch = "aarch64"))]
+    {
+        // NEON is baseline on aarch64 — no runtime probe needed.
+        return CODE_NEON;
+    }
+    CODE_SCALAR
+}
+
+fn detected_code() -> u8 {
+    let mut d = DETECTED.load(Ordering::Relaxed);
+    if d == CODE_UNSET {
+        d = detect();
+        DETECTED.store(d, Ordering::Relaxed);
+    }
+    d
+}
+
+fn code_to_backend(code: u8) -> Backend {
+    match code {
+        CODE_AVX2 => Backend::Avx2,
+        CODE_NEON => Backend::Neon,
+        _ => Backend::Scalar,
+    }
+}
+
+/// The backend every kernel call dispatches to right now.
+///
+/// Auto-detected once per process; stable thereafter (the relaxed atomic
+/// load costs ~1 ns per kernel call, irrelevant next to any matvec).
+#[inline]
+pub fn backend() -> Backend {
+    let forced = FORCED.load(Ordering::Relaxed);
+    if forced != CODE_UNSET {
+        return code_to_backend(forced);
+    }
+    code_to_backend(detected_code())
+}
+
+/// Human-readable backend label, for bench tables and provenance.
+pub fn backend_name() -> &'static str {
+    match backend() {
+        Backend::Scalar => "scalar",
+        Backend::Avx2 => "avx2+fma",
+        Backend::Neon => "neon",
+    }
+}
+
+/// Force a specific backend (`None` restores auto-detection). Returns
+/// `false` — leaving dispatch unchanged — if the requested backend is not
+/// available on this host.
+///
+/// **Bench-only.** Dispatch stability is part of the determinism
+/// contract; flipping it while other threads run kernels changes which
+/// bits they produce mid-run. The `simd_floor` bench uses this from its
+/// single thread to measure scalar-vs-SIMD on the same host; library and
+/// test code must not call it.
+pub fn set_forced_backend(b: Option<Backend>) -> bool {
+    let code = match b {
+        None => CODE_UNSET,
+        Some(Backend::Scalar) => CODE_SCALAR, // always available
+        Some(Backend::Avx2) => {
+            if detected_code() != CODE_AVX2 {
+                return false;
+            }
+            CODE_AVX2
+        }
+        Some(Backend::Neon) => {
+            if detected_code() != CODE_NEON {
+                return false;
+            }
+            CODE_NEON
+        }
+    };
+    FORCED.store(code, Ordering::Relaxed);
+    true
+}
+
+/// AVX2 + FMA microkernels (x86_64). Every fn is `unsafe` with the
+/// contract: the CPU supports avx2+fma (guaranteed by [`backend`]
+/// returning [`Backend::Avx2`]) and slice lengths satisfy the shapes the
+/// public wrappers assert.
+#[cfg(all(feature = "simd", target_arch = "x86_64"))]
+pub mod avx2 {
+    use std::arch::x86_64::*;
+
+    /// Fixed-order horizontal sum: store and add as `(b0+b1)+(b2+b3)` so
+    /// the reduction order is deterministic and documented.
+    #[target_feature(enable = "avx2", enable = "fma")]
+    unsafe fn hsum4(v: __m256d) -> f64 {
+        let mut buf = [0.0f64; 4];
+        _mm256_storeu_pd(buf.as_mut_ptr(), v);
+        (buf[0] + buf[1]) + (buf[2] + buf[3])
+    }
+
+    #[target_feature(enable = "avx2", enable = "fma")]
+    unsafe fn hsum8_f32(v: __m256) -> f32 {
+        let mut buf = [0.0f32; 8];
+        _mm256_storeu_ps(buf.as_mut_ptr(), v);
+        ((buf[0] + buf[1]) + (buf[2] + buf[3])) + ((buf[4] + buf[5]) + (buf[6] + buf[7]))
+    }
+
+    /// `xᵀy`, two 4-wide FMA accumulators (8 f64/iter).
+    #[target_feature(enable = "avx2", enable = "fma")]
+    pub unsafe fn dot(x: &[f64], y: &[f64]) -> f64 {
+        let n = x.len();
+        let (xp, yp) = (x.as_ptr(), y.as_ptr());
+        let mut acc0 = _mm256_setzero_pd();
+        let mut acc1 = _mm256_setzero_pd();
+        let mut i = 0;
+        while i + 8 <= n {
+            acc0 = _mm256_fmadd_pd(_mm256_loadu_pd(xp.add(i)), _mm256_loadu_pd(yp.add(i)), acc0);
+            acc1 = _mm256_fmadd_pd(
+                _mm256_loadu_pd(xp.add(i + 4)),
+                _mm256_loadu_pd(yp.add(i + 4)),
+                acc1,
+            );
+            i += 8;
+        }
+        if i + 4 <= n {
+            acc0 = _mm256_fmadd_pd(_mm256_loadu_pd(xp.add(i)), _mm256_loadu_pd(yp.add(i)), acc0);
+            i += 4;
+        }
+        let mut s = hsum4(_mm256_add_pd(acc0, acc1));
+        while i < n {
+            s += x[i] * y[i];
+            i += 1;
+        }
+        s
+    }
+
+    /// `y ← a·x + y`.
+    #[target_feature(enable = "avx2", enable = "fma")]
+    pub unsafe fn axpy(a: f64, x: &[f64], y: &mut [f64]) {
+        let n = x.len();
+        let av = _mm256_set1_pd(a);
+        let xp = x.as_ptr();
+        let yp = y.as_mut_ptr();
+        let mut i = 0;
+        while i + 4 <= n {
+            let yv = _mm256_fmadd_pd(av, _mm256_loadu_pd(xp.add(i)), _mm256_loadu_pd(yp.add(i)));
+            _mm256_storeu_pd(yp.add(i), yv);
+            i += 4;
+        }
+        while i < n {
+            y[i] += a * x[i];
+            i += 1;
+        }
+    }
+
+    /// `y = A x`, one dot per row (rows are contiguous in row-major `a`).
+    #[target_feature(enable = "avx2", enable = "fma")]
+    pub unsafe fn matvec(a: &[f64], rows: usize, cols: usize, x: &[f64], y: &mut [f64]) {
+        for i in 0..rows {
+            y[i] = dot(&a[i * cols..(i + 1) * cols], x);
+        }
+    }
+
+    /// `y += α Aᵀ x`, 4 rows folded per vectorized pass over `y`.
+    #[target_feature(enable = "avx2", enable = "fma")]
+    pub unsafe fn tr_matvec_axpy(
+        a: &[f64],
+        rows: usize,
+        cols: usize,
+        x: &[f64],
+        alpha: f64,
+        y: &mut [f64],
+    ) {
+        let yp = y.as_mut_ptr();
+        let mut i = 0;
+        while i + 4 <= rows {
+            let s0 = alpha * x[i];
+            let s1 = alpha * x[i + 1];
+            let s2 = alpha * x[i + 2];
+            let s3 = alpha * x[i + 3];
+            if s0 != 0.0 || s1 != 0.0 || s2 != 0.0 || s3 != 0.0 {
+                let r0 = a.as_ptr().add(i * cols);
+                let r1 = a.as_ptr().add((i + 1) * cols);
+                let r2 = a.as_ptr().add((i + 2) * cols);
+                let r3 = a.as_ptr().add((i + 3) * cols);
+                let (v0, v1, v2, v3) = (
+                    _mm256_set1_pd(s0),
+                    _mm256_set1_pd(s1),
+                    _mm256_set1_pd(s2),
+                    _mm256_set1_pd(s3),
+                );
+                let mut j = 0;
+                while j + 4 <= cols {
+                    let mut yv = _mm256_loadu_pd(yp.add(j));
+                    yv = _mm256_fmadd_pd(v0, _mm256_loadu_pd(r0.add(j)), yv);
+                    yv = _mm256_fmadd_pd(v1, _mm256_loadu_pd(r1.add(j)), yv);
+                    yv = _mm256_fmadd_pd(v2, _mm256_loadu_pd(r2.add(j)), yv);
+                    yv = _mm256_fmadd_pd(v3, _mm256_loadu_pd(r3.add(j)), yv);
+                    _mm256_storeu_pd(yp.add(j), yv);
+                    j += 4;
+                }
+                while j < cols {
+                    y[j] += s0 * *r0.add(j) + s1 * *r1.add(j) + s2 * *r2.add(j) + s3 * *r3.add(j);
+                    j += 1;
+                }
+            }
+            i += 4;
+        }
+        while i < rows {
+            let xi = alpha * x[i];
+            if xi != 0.0 {
+                axpy(xi, &a[i * cols..(i + 1) * cols], y);
+            }
+            i += 1;
+        }
+    }
+
+    /// `Y = A X` over `k` lanes; `y` pre-zeroed by the caller. Lanes are
+    /// the vector dimension, so per-lane accumulation order matches the
+    /// scalar kernel (only FMA rounding differs).
+    #[target_feature(enable = "avx2", enable = "fma")]
+    pub unsafe fn matmat(a: &[f64], rows: usize, cols: usize, x: &[f64], k: usize, y: &mut [f64]) {
+        let xp = x.as_ptr();
+        let yp = y.as_mut_ptr();
+        for i in 0..rows {
+            let ri = a.as_ptr().add(i * cols);
+            let yr = yp.add(i * k);
+            let mut t = 0;
+            while t + 4 <= k {
+                let mut acc = _mm256_setzero_pd();
+                for c in 0..cols {
+                    acc = _mm256_fmadd_pd(
+                        _mm256_set1_pd(*ri.add(c)),
+                        _mm256_loadu_pd(xp.add(c * k + t)),
+                        acc,
+                    );
+                }
+                _mm256_storeu_pd(yr.add(t), acc);
+                t += 4;
+            }
+            while t < k {
+                let mut s = 0.0;
+                for c in 0..cols {
+                    s += *ri.add(c) * *xp.add(c * k + t);
+                }
+                *yr.add(t) = s;
+                t += 1;
+            }
+        }
+    }
+
+    /// `Y += α Aᵀ X` over `k` lanes; 4 rows folded per vectorized pass
+    /// over each `y` row.
+    #[target_feature(enable = "avx2", enable = "fma")]
+    pub unsafe fn tr_matmat_axpy(
+        a: &[f64],
+        rows: usize,
+        cols: usize,
+        x: &[f64],
+        k: usize,
+        alpha: f64,
+        y: &mut [f64],
+    ) {
+        let xp = x.as_ptr();
+        let yp = y.as_mut_ptr();
+        let mut i = 0;
+        while i + 4 <= rows {
+            let r0 = a.as_ptr().add(i * cols);
+            let r1 = a.as_ptr().add((i + 1) * cols);
+            let r2 = a.as_ptr().add((i + 2) * cols);
+            let r3 = a.as_ptr().add((i + 3) * cols);
+            let x0 = xp.add(i * k);
+            let x1 = xp.add((i + 1) * k);
+            let x2 = xp.add((i + 2) * k);
+            let x3 = xp.add((i + 3) * k);
+            for j in 0..cols {
+                let (a0, a1, a2, a3) = (
+                    alpha * *r0.add(j),
+                    alpha * *r1.add(j),
+                    alpha * *r2.add(j),
+                    alpha * *r3.add(j),
+                );
+                let yr = yp.add(j * k);
+                let (b0, b1, b2, b3) = (
+                    _mm256_set1_pd(a0),
+                    _mm256_set1_pd(a1),
+                    _mm256_set1_pd(a2),
+                    _mm256_set1_pd(a3),
+                );
+                let mut t = 0;
+                while t + 4 <= k {
+                    let mut yv = _mm256_loadu_pd(yr.add(t));
+                    yv = _mm256_fmadd_pd(b0, _mm256_loadu_pd(x0.add(t)), yv);
+                    yv = _mm256_fmadd_pd(b1, _mm256_loadu_pd(x1.add(t)), yv);
+                    yv = _mm256_fmadd_pd(b2, _mm256_loadu_pd(x2.add(t)), yv);
+                    yv = _mm256_fmadd_pd(b3, _mm256_loadu_pd(x3.add(t)), yv);
+                    _mm256_storeu_pd(yr.add(t), yv);
+                    t += 4;
+                }
+                while t < k {
+                    *yr.add(t) +=
+                        a0 * *x0.add(t) + a1 * *x1.add(t) + a2 * *x2.add(t) + a3 * *x3.add(t);
+                    t += 1;
+                }
+            }
+            i += 4;
+        }
+        while i < rows {
+            let ri = a.as_ptr().add(i * cols);
+            let xi = xp.add(i * k);
+            for j in 0..cols {
+                let aij = alpha * *ri.add(j);
+                let yr = yp.add(j * k);
+                let bv = _mm256_set1_pd(aij);
+                let mut t = 0;
+                while t + 4 <= k {
+                    let yv =
+                        _mm256_fmadd_pd(bv, _mm256_loadu_pd(xi.add(t)), _mm256_loadu_pd(yr.add(t)));
+                    _mm256_storeu_pd(yr.add(t), yv);
+                    t += 4;
+                }
+                while t < k {
+                    *yr.add(t) += aij * *xi.add(t);
+                    t += 1;
+                }
+            }
+            i += 1;
+        }
+    }
+
+    /// `G = A Aᵀ`, upper triangle computed (one SIMD dot per entry), then
+    /// mirrored exactly.
+    #[target_feature(enable = "avx2", enable = "fma")]
+    pub unsafe fn syrk_rows(a: &[f64], rows: usize, cols: usize, g: &mut [f64]) {
+        for i in 0..rows {
+            let ri = &a[i * cols..(i + 1) * cols];
+            for j in i..rows {
+                g[i * rows + j] = dot(ri, &a[j * cols..(j + 1) * cols]);
+            }
+        }
+        for i in 1..rows {
+            for j in 0..i {
+                g[i * rows + j] = g[j * rows + i];
+            }
+        }
+    }
+
+    /// One CSR row of SpMM: `yr[t] += Σ_nz v_nz · x[col_nz·k + t]`,
+    /// vectorized over the `k` lanes.
+    #[target_feature(enable = "avx2", enable = "fma")]
+    pub unsafe fn spmm_row(values: &[f64], col_idx: &[usize], x: &[f64], k: usize, yr: &mut [f64]) {
+        let xp = x.as_ptr();
+        let yp = yr.as_mut_ptr();
+        let mut t = 0;
+        while t + 4 <= k {
+            let mut acc = _mm256_loadu_pd(yp.add(t));
+            for (nz, &c) in col_idx.iter().enumerate() {
+                acc = _mm256_fmadd_pd(
+                    _mm256_set1_pd(values[nz]),
+                    _mm256_loadu_pd(xp.add(c * k + t)),
+                    acc,
+                );
+            }
+            _mm256_storeu_pd(yp.add(t), acc);
+            t += 4;
+        }
+        while t < k {
+            let mut s = yr[t];
+            for (nz, &c) in col_idx.iter().enumerate() {
+                s += values[nz] * x[c * k + t];
+            }
+            yr[t] = s;
+            t += 1;
+        }
+    }
+
+    /// One CSR row of transposed SpMM: scatter
+    /// `y[col_nz·k + t] += (α v_nz) · xi[t]`, vectorized over lanes.
+    #[target_feature(enable = "avx2", enable = "fma")]
+    pub unsafe fn spmm_tr_row(
+        values: &[f64],
+        col_idx: &[usize],
+        xi: &[f64],
+        alpha: f64,
+        k: usize,
+        y: &mut [f64],
+    ) {
+        let xp = xi.as_ptr();
+        let yp = y.as_mut_ptr();
+        for (nz, &c) in col_idx.iter().enumerate() {
+            let av = alpha * values[nz];
+            if av == 0.0 {
+                continue;
+            }
+            let yr = yp.add(c * k);
+            let bv = _mm256_set1_pd(av);
+            let mut t = 0;
+            while t + 4 <= k {
+                let yv = _mm256_fmadd_pd(bv, _mm256_loadu_pd(xp.add(t)), _mm256_loadu_pd(yr.add(t)));
+                _mm256_storeu_pd(yr.add(t), yv);
+                t += 4;
+            }
+            while t < k {
+                *yr.add(t) += av * xi[t];
+                t += 1;
+            }
+        }
+    }
+
+    // ---- f32 lane kernels (the mixed-precision machine phase) ----------
+
+    /// `xᵀy` in f32, two 8-wide FMA accumulators (16 f32/iter).
+    #[target_feature(enable = "avx2", enable = "fma")]
+    pub unsafe fn dot_f32(x: &[f32], y: &[f32]) -> f32 {
+        let n = x.len();
+        let (xp, yp) = (x.as_ptr(), y.as_ptr());
+        let mut acc0 = _mm256_setzero_ps();
+        let mut acc1 = _mm256_setzero_ps();
+        let mut i = 0;
+        while i + 16 <= n {
+            acc0 = _mm256_fmadd_ps(_mm256_loadu_ps(xp.add(i)), _mm256_loadu_ps(yp.add(i)), acc0);
+            acc1 = _mm256_fmadd_ps(
+                _mm256_loadu_ps(xp.add(i + 8)),
+                _mm256_loadu_ps(yp.add(i + 8)),
+                acc1,
+            );
+            i += 16;
+        }
+        if i + 8 <= n {
+            acc0 = _mm256_fmadd_ps(_mm256_loadu_ps(xp.add(i)), _mm256_loadu_ps(yp.add(i)), acc0);
+            i += 8;
+        }
+        let mut s = hsum8_f32(_mm256_add_ps(acc0, acc1));
+        while i < n {
+            s += x[i] * y[i];
+            i += 1;
+        }
+        s
+    }
+
+    /// `y ← a·x + y` in f32.
+    #[target_feature(enable = "avx2", enable = "fma")]
+    pub unsafe fn axpy_f32(a: f32, x: &[f32], y: &mut [f32]) {
+        let n = x.len();
+        let av = _mm256_set1_ps(a);
+        let xp = x.as_ptr();
+        let yp = y.as_mut_ptr();
+        let mut i = 0;
+        while i + 8 <= n {
+            let yv = _mm256_fmadd_ps(av, _mm256_loadu_ps(xp.add(i)), _mm256_loadu_ps(yp.add(i)));
+            _mm256_storeu_ps(yp.add(i), yv);
+            i += 8;
+        }
+        while i < n {
+            y[i] += a * x[i];
+            i += 1;
+        }
+    }
+
+    /// `y = A x` in f32.
+    #[target_feature(enable = "avx2", enable = "fma")]
+    pub unsafe fn matvec_f32(a: &[f32], rows: usize, cols: usize, x: &[f32], y: &mut [f32]) {
+        for i in 0..rows {
+            y[i] = dot_f32(&a[i * cols..(i + 1) * cols], x);
+        }
+    }
+
+    /// `y += α Aᵀ x` in f32, row-at-a-time fused axpy.
+    #[target_feature(enable = "avx2", enable = "fma")]
+    pub unsafe fn tr_matvec_axpy_f32(
+        a: &[f32],
+        rows: usize,
+        cols: usize,
+        x: &[f32],
+        alpha: f32,
+        y: &mut [f32],
+    ) {
+        for i in 0..rows {
+            let xi = alpha * x[i];
+            if xi != 0.0 {
+                axpy_f32(xi, &a[i * cols..(i + 1) * cols], y);
+            }
+        }
+    }
+}
+
+/// NEON microkernels (aarch64 baseline — always present there, so no
+/// runtime probe). Same shape contracts as [`avx2`].
+#[cfg(all(feature = "simd", target_arch = "aarch64"))]
+pub mod neon {
+    use std::arch::aarch64::*;
+
+    /// `xᵀy`, two 2-wide FMA accumulators.
+    pub unsafe fn dot(x: &[f64], y: &[f64]) -> f64 {
+        let n = x.len();
+        let (xp, yp) = (x.as_ptr(), y.as_ptr());
+        let mut acc0 = vdupq_n_f64(0.0);
+        let mut acc1 = vdupq_n_f64(0.0);
+        let mut i = 0;
+        while i + 4 <= n {
+            acc0 = vfmaq_f64(acc0, vld1q_f64(xp.add(i)), vld1q_f64(yp.add(i)));
+            acc1 = vfmaq_f64(acc1, vld1q_f64(xp.add(i + 2)), vld1q_f64(yp.add(i + 2)));
+            i += 4;
+        }
+        if i + 2 <= n {
+            acc0 = vfmaq_f64(acc0, vld1q_f64(xp.add(i)), vld1q_f64(yp.add(i)));
+            i += 2;
+        }
+        let mut s = vaddvq_f64(vaddq_f64(acc0, acc1));
+        while i < n {
+            s += x[i] * y[i];
+            i += 1;
+        }
+        s
+    }
+
+    /// `y ← a·x + y`.
+    pub unsafe fn axpy(a: f64, x: &[f64], y: &mut [f64]) {
+        let n = x.len();
+        let av = vdupq_n_f64(a);
+        let xp = x.as_ptr();
+        let yp = y.as_mut_ptr();
+        let mut i = 0;
+        while i + 2 <= n {
+            vst1q_f64(yp.add(i), vfmaq_f64(vld1q_f64(yp.add(i)), av, vld1q_f64(xp.add(i))));
+            i += 2;
+        }
+        while i < n {
+            y[i] += a * x[i];
+            i += 1;
+        }
+    }
+
+    /// `y = A x`, one dot per row.
+    pub unsafe fn matvec(a: &[f64], rows: usize, cols: usize, x: &[f64], y: &mut [f64]) {
+        for i in 0..rows {
+            y[i] = dot(&a[i * cols..(i + 1) * cols], x);
+        }
+    }
+
+    /// `y += α Aᵀ x`, 4 rows folded per vectorized pass over `y`.
+    pub unsafe fn tr_matvec_axpy(
+        a: &[f64],
+        rows: usize,
+        cols: usize,
+        x: &[f64],
+        alpha: f64,
+        y: &mut [f64],
+    ) {
+        let yp = y.as_mut_ptr();
+        let mut i = 0;
+        while i + 4 <= rows {
+            let s0 = alpha * x[i];
+            let s1 = alpha * x[i + 1];
+            let s2 = alpha * x[i + 2];
+            let s3 = alpha * x[i + 3];
+            if s0 != 0.0 || s1 != 0.0 || s2 != 0.0 || s3 != 0.0 {
+                let r0 = a.as_ptr().add(i * cols);
+                let r1 = a.as_ptr().add((i + 1) * cols);
+                let r2 = a.as_ptr().add((i + 2) * cols);
+                let r3 = a.as_ptr().add((i + 3) * cols);
+                let (v0, v1, v2, v3) =
+                    (vdupq_n_f64(s0), vdupq_n_f64(s1), vdupq_n_f64(s2), vdupq_n_f64(s3));
+                let mut j = 0;
+                while j + 2 <= cols {
+                    let mut yv = vld1q_f64(yp.add(j));
+                    yv = vfmaq_f64(yv, v0, vld1q_f64(r0.add(j)));
+                    yv = vfmaq_f64(yv, v1, vld1q_f64(r1.add(j)));
+                    yv = vfmaq_f64(yv, v2, vld1q_f64(r2.add(j)));
+                    yv = vfmaq_f64(yv, v3, vld1q_f64(r3.add(j)));
+                    vst1q_f64(yp.add(j), yv);
+                    j += 2;
+                }
+                while j < cols {
+                    y[j] += s0 * *r0.add(j) + s1 * *r1.add(j) + s2 * *r2.add(j) + s3 * *r3.add(j);
+                    j += 1;
+                }
+            }
+            i += 4;
+        }
+        while i < rows {
+            let xi = alpha * x[i];
+            if xi != 0.0 {
+                axpy(xi, &a[i * cols..(i + 1) * cols], y);
+            }
+            i += 1;
+        }
+    }
+
+    /// `Y = A X` over `k` lanes; `y` pre-zeroed by the caller.
+    pub unsafe fn matmat(a: &[f64], rows: usize, cols: usize, x: &[f64], k: usize, y: &mut [f64]) {
+        let xp = x.as_ptr();
+        let yp = y.as_mut_ptr();
+        for i in 0..rows {
+            let ri = a.as_ptr().add(i * cols);
+            let yr = yp.add(i * k);
+            let mut t = 0;
+            while t + 2 <= k {
+                let mut acc = vdupq_n_f64(0.0);
+                for c in 0..cols {
+                    acc = vfmaq_f64(acc, vdupq_n_f64(*ri.add(c)), vld1q_f64(xp.add(c * k + t)));
+                }
+                vst1q_f64(yr.add(t), acc);
+                t += 2;
+            }
+            while t < k {
+                let mut s = 0.0;
+                for c in 0..cols {
+                    s += *ri.add(c) * *xp.add(c * k + t);
+                }
+                *yr.add(t) = s;
+                t += 1;
+            }
+        }
+    }
+
+    /// `Y += α Aᵀ X` over `k` lanes.
+    pub unsafe fn tr_matmat_axpy(
+        a: &[f64],
+        rows: usize,
+        cols: usize,
+        x: &[f64],
+        k: usize,
+        alpha: f64,
+        y: &mut [f64],
+    ) {
+        let xp = x.as_ptr();
+        let yp = y.as_mut_ptr();
+        for i in 0..rows {
+            let ri = a.as_ptr().add(i * cols);
+            let xi = xp.add(i * k);
+            for j in 0..cols {
+                let aij = alpha * *ri.add(j);
+                if aij == 0.0 {
+                    continue;
+                }
+                let yr = yp.add(j * k);
+                let bv = vdupq_n_f64(aij);
+                let mut t = 0;
+                while t + 2 <= k {
+                    vst1q_f64(yr.add(t), vfmaq_f64(vld1q_f64(yr.add(t)), bv, vld1q_f64(xi.add(t))));
+                    t += 2;
+                }
+                while t < k {
+                    *yr.add(t) += aij * *xi.add(t);
+                    t += 1;
+                }
+            }
+        }
+    }
+
+    /// `G = A Aᵀ`, upper triangle + exact mirror.
+    pub unsafe fn syrk_rows(a: &[f64], rows: usize, cols: usize, g: &mut [f64]) {
+        for i in 0..rows {
+            let ri = &a[i * cols..(i + 1) * cols];
+            for j in i..rows {
+                g[i * rows + j] = dot(ri, &a[j * cols..(j + 1) * cols]);
+            }
+        }
+        for i in 1..rows {
+            for j in 0..i {
+                g[i * rows + j] = g[j * rows + i];
+            }
+        }
+    }
+
+    /// One CSR row of SpMM, vectorized over lanes.
+    pub unsafe fn spmm_row(values: &[f64], col_idx: &[usize], x: &[f64], k: usize, yr: &mut [f64]) {
+        let xp = x.as_ptr();
+        let yp = yr.as_mut_ptr();
+        let mut t = 0;
+        while t + 2 <= k {
+            let mut acc = vld1q_f64(yp.add(t));
+            for (nz, &c) in col_idx.iter().enumerate() {
+                acc = vfmaq_f64(acc, vdupq_n_f64(values[nz]), vld1q_f64(xp.add(c * k + t)));
+            }
+            vst1q_f64(yp.add(t), acc);
+            t += 2;
+        }
+        while t < k {
+            let mut s = yr[t];
+            for (nz, &c) in col_idx.iter().enumerate() {
+                s += values[nz] * x[c * k + t];
+            }
+            yr[t] = s;
+            t += 1;
+        }
+    }
+
+    /// One CSR row of transposed SpMM, vectorized over lanes.
+    pub unsafe fn spmm_tr_row(
+        values: &[f64],
+        col_idx: &[usize],
+        xi: &[f64],
+        alpha: f64,
+        k: usize,
+        y: &mut [f64],
+    ) {
+        let xp = xi.as_ptr();
+        let yp = y.as_mut_ptr();
+        for (nz, &c) in col_idx.iter().enumerate() {
+            let av = alpha * values[nz];
+            if av == 0.0 {
+                continue;
+            }
+            let yr = yp.add(c * k);
+            let bv = vdupq_n_f64(av);
+            let mut t = 0;
+            while t + 2 <= k {
+                vst1q_f64(yr.add(t), vfmaq_f64(vld1q_f64(yr.add(t)), bv, vld1q_f64(xp.add(t))));
+                t += 2;
+            }
+            while t < k {
+                *yr.add(t) += av * xi[t];
+                t += 1;
+            }
+        }
+    }
+
+    // ---- f32 lane kernels ----------------------------------------------
+
+    /// `xᵀy` in f32, two 4-wide FMA accumulators.
+    pub unsafe fn dot_f32(x: &[f32], y: &[f32]) -> f32 {
+        let n = x.len();
+        let (xp, yp) = (x.as_ptr(), y.as_ptr());
+        let mut acc0 = vdupq_n_f32(0.0);
+        let mut acc1 = vdupq_n_f32(0.0);
+        let mut i = 0;
+        while i + 8 <= n {
+            acc0 = vfmaq_f32(acc0, vld1q_f32(xp.add(i)), vld1q_f32(yp.add(i)));
+            acc1 = vfmaq_f32(acc1, vld1q_f32(xp.add(i + 4)), vld1q_f32(yp.add(i + 4)));
+            i += 8;
+        }
+        if i + 4 <= n {
+            acc0 = vfmaq_f32(acc0, vld1q_f32(xp.add(i)), vld1q_f32(yp.add(i)));
+            i += 4;
+        }
+        let mut s = vaddvq_f32(vaddq_f32(acc0, acc1));
+        while i < n {
+            s += x[i] * y[i];
+            i += 1;
+        }
+        s
+    }
+
+    /// `y ← a·x + y` in f32.
+    pub unsafe fn axpy_f32(a: f32, x: &[f32], y: &mut [f32]) {
+        let n = x.len();
+        let av = vdupq_n_f32(a);
+        let xp = x.as_ptr();
+        let yp = y.as_mut_ptr();
+        let mut i = 0;
+        while i + 4 <= n {
+            vst1q_f32(yp.add(i), vfmaq_f32(vld1q_f32(yp.add(i)), av, vld1q_f32(xp.add(i))));
+            i += 4;
+        }
+        while i < n {
+            y[i] += a * x[i];
+            i += 1;
+        }
+    }
+
+    /// `y = A x` in f32.
+    pub unsafe fn matvec_f32(a: &[f32], rows: usize, cols: usize, x: &[f32], y: &mut [f32]) {
+        for i in 0..rows {
+            y[i] = dot_f32(&a[i * cols..(i + 1) * cols], x);
+        }
+    }
+
+    /// `y += α Aᵀ x` in f32.
+    pub unsafe fn tr_matvec_axpy_f32(
+        a: &[f32],
+        rows: usize,
+        cols: usize,
+        x: &[f32],
+        alpha: f32,
+        y: &mut [f32],
+    ) {
+        for i in 0..rows {
+            let xi = alpha * x[i];
+            if xi != 0.0 {
+                axpy_f32(xi, &a[i * cols..(i + 1) * cols], y);
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn backend_is_stable_and_named() {
+        let b = backend();
+        assert_eq!(backend(), b, "dispatch must be stable within a process");
+        assert!(["scalar", "avx2+fma", "neon"].contains(&backend_name()));
+    }
+
+    // NOTE: no test here mutates dispatch away from the detected backend —
+    // tests run concurrently and the parity suite reads `backend()` to
+    // decide its tolerance. Forcing the *current* backend is a no-op and
+    // safe to exercise.
+    #[test]
+    fn forcing_current_backend_is_accepted_noop() {
+        let cur = backend();
+        assert!(set_forced_backend(Some(cur)));
+        assert_eq!(backend(), cur);
+        assert!(set_forced_backend(None));
+        assert_eq!(backend(), cur);
+    }
+
+    #[test]
+    fn at_most_one_simd_backend_detected() {
+        // AVX2 and NEON live on different architectures; detection can
+        // never report both. (Scalar force-requests always succeed but we
+        // must not leave them active — see note above.)
+        let avx = matches!(backend(), Backend::Avx2);
+        let neon = matches!(backend(), Backend::Neon);
+        assert!(!(avx && neon));
+    }
+}

@@ -1,29 +1,38 @@
 //! Vector primitives shared across the solver stack.
 //!
-//! These are the innermost loops of every iterative method here; they are
-//! written as straight slices so LLVM auto-vectorizes them (checked with
-//! `--emit asm` during the perf pass — see EXPERIMENTS.md §Perf).
+//! These are the innermost loops of every iterative method here. The hot
+//! pair — [`dot`] and [`axpy`], which the `Cholesky` triangular sweeps
+//! spend their whole time in — dispatches through
+//! [`super::simd`] to explicit AVX2/NEON kernels when the host supports
+//! them; everything else is written as straight slices so LLVM
+//! auto-vectorizes it (checked with `--emit asm` during the perf pass —
+//! see EXPERIMENTS.md §Perf).
+
+// Only referenced from the cfg-gated dispatch arms; unused on
+// scalar-only builds (feature off, or arches without a SIMD path).
+#[allow(unused_imports)]
+use super::simd;
 
 /// Dot product `xᵀy`. Panics on length mismatch (programming error).
+///
+/// Scalar path: 4-way unrolled accumulation keeps the f64 adds in
+/// independent chains (`kernels::generic::dot` holds the body so the
+/// f32 instantiation shares it). SIMD paths widen the same idea to
+/// 2×4-wide (AVX2+FMA) or 2×2-wide (NEON) lanes — a different, equally
+/// deterministic summation order (~1e-12-class reassociation, pinned by
+/// `tests/simd_parity.rs`).
 #[inline]
 pub fn dot(x: &[f64], y: &[f64]) -> f64 {
     assert_eq!(x.len(), y.len(), "dot: length mismatch");
-    // 4-way unrolled accumulation: keeps f64 adds in independent chains so
-    // the compiler can use SIMD adds without -ffast-math reassociation.
-    let mut acc = [0.0f64; 4];
-    let chunks = x.len() / 4;
-    for c in 0..chunks {
-        let i = c * 4;
-        acc[0] += x[i] * y[i];
-        acc[1] += x[i + 1] * y[i + 1];
-        acc[2] += x[i + 2] * y[i + 2];
-        acc[3] += x[i + 3] * y[i + 3];
+    #[cfg(all(feature = "simd", target_arch = "x86_64"))]
+    if simd::backend() == simd::Backend::Avx2 {
+        return unsafe { simd::avx2::dot(x, y) };
     }
-    let mut s = (acc[0] + acc[1]) + (acc[2] + acc[3]);
-    for i in chunks * 4..x.len() {
-        s += x[i] * y[i];
+    #[cfg(all(feature = "simd", target_arch = "aarch64"))]
+    if simd::backend() == simd::Backend::Neon {
+        return unsafe { simd::neon::dot(x, y) };
     }
-    s
+    super::kernels::generic::dot(x, y)
 }
 
 /// Euclidean norm `‖x‖₂` with overflow-safe scaling for extreme inputs.
@@ -49,9 +58,15 @@ pub fn nrm2(x: &[f64]) -> f64 {
 #[inline]
 pub fn axpy(a: f64, x: &[f64], y: &mut [f64]) {
     assert_eq!(x.len(), y.len(), "axpy: length mismatch");
-    for i in 0..x.len() {
-        y[i] += a * x[i];
+    #[cfg(all(feature = "simd", target_arch = "x86_64"))]
+    if simd::backend() == simd::Backend::Avx2 {
+        return unsafe { simd::avx2::axpy(a, x, y) };
     }
+    #[cfg(all(feature = "simd", target_arch = "aarch64"))]
+    if simd::backend() == simd::Backend::Neon {
+        return unsafe { simd::neon::axpy(a, x, y) };
+    }
+    super::kernels::generic::axpy(a, x, y)
 }
 
 /// `x ← a·x`.

@@ -1,0 +1,521 @@
+//! Low-precision (f32) machine-phase mirrors of the per-block state —
+//! the worker side of the mixed-precision iterative-refinement solve
+//! ([`crate::solvers::refine`]).
+//!
+//! The refinement recipe: the master keeps the accumulated solution and
+//! the consensus average in f64, while every machine runs its projection
+//! / gradient / prox step on an f32 copy of its operator against an f32
+//! *residual* right-hand side. Halving the element width doubles
+//! effective memory bandwidth on the nnz-bound sparse path and doubles
+//! SIMD lane count on the flop-bound dense path; the f64 outer loop
+//! (periodic true-residual recompute + restart, [`crate::solvers::refine::Refined`])
+//! restores full f64 accuracy, the standard mixed-precision refinement
+//! argument applied per-machine.
+//!
+//! Precision policy, in one place:
+//!
+//! * operators and factors are cast **down once** at construction —
+//!   in particular the f32 triangular factors ([`CholF32`]) are the f64
+//!   Cholesky factors rounded to f32, *not* an f32 refactorization (a
+//!   fresh f32 Cholesky of a squared-condition Gram can lose positive
+//!   definiteness; rounding an existing factor cannot fail),
+//! * the inner rhs (the block residual) is cast down at every refresh,
+//! * block outputs are widened back to f64 by the master's fold — every
+//!   cross-machine *accumulation* happens in f64.
+
+use crate::linalg::elem::cast_from_f64;
+use crate::linalg::{kernels, Cholesky};
+use crate::partition::{BlockOp, MachineBlock};
+use anyhow::{Context, Result};
+
+/// f32 copy of a cached Cholesky factor, solving by the same two
+/// triangular sweeps as the f64 original (forward substitution with
+/// [`kernels::dot_f32`], column-oriented backward with
+/// [`kernels::axpy_f32`] — both SIMD-dispatched).
+#[derive(Clone, Debug)]
+pub struct CholF32 {
+    /// Row-major `n×n` buffer holding `L` (upper part unused), cast from
+    /// the f64 factor.
+    l: Vec<f32>,
+    n: usize,
+}
+
+impl CholF32 {
+    /// Round an existing f64 factor down to f32.
+    pub fn from_f64(c: &Cholesky) -> Self {
+        let n = c.order();
+        let src = c.l().as_slice();
+        let mut l = vec![0.0f32; src.len()];
+        cast_from_f64(src, &mut l);
+        CholF32 { l, n }
+    }
+
+    pub fn order(&self) -> usize {
+        self.n
+    }
+
+    /// In-place solve of `L Lᵀ x = b` — the f32 mirror of
+    /// [`Cholesky::solve_in_place`].
+    pub fn solve_in_place(&self, x: &mut [f32]) {
+        let n = self.n;
+        assert_eq!(x.len(), n, "cholf32 solve: dimension mismatch");
+        // forward: L y = b
+        for i in 0..n {
+            let row = &self.l[i * n..(i + 1) * n];
+            x[i] = (x[i] - kernels::dot_f32(&row[..i], &x[..i])) / row[i];
+        }
+        // backward: Lᵀ x = y, column-oriented
+        for i in (0..n).rev() {
+            let row = &self.l[i * n..(i + 1) * n];
+            let xi = x[i] / row[i];
+            x[i] = xi;
+            kernels::axpy_f32(-xi, &row[..i], &mut x[..i]);
+        }
+    }
+}
+
+/// f32 copy of a block operator, mirroring the three [`BlockOp`]
+/// backends. Whitened blocks keep the factored `W·(A·)` composition —
+/// the `O(nnz_i + p²)` no-densification guarantee carries over — staging
+/// through a caller-provided `p`-sized buffer instead of the f64 path's
+/// thread-local.
+#[derive(Clone, Debug)]
+pub enum OpF32 {
+    Dense {
+        data: Vec<f32>,
+        rows: usize,
+        cols: usize,
+    },
+    Csr {
+        rows: usize,
+        cols: usize,
+        row_ptr: Vec<usize>,
+        col_idx: Vec<usize>,
+        values: Vec<f32>,
+    },
+    Whitened {
+        rows: usize,
+        cols: usize,
+        row_ptr: Vec<usize>,
+        col_idx: Vec<usize>,
+        values: Vec<f32>,
+        /// `W = (A_iA_iᵀ)^{-1/2}`, dense `p×p` row-major, cast down.
+        w: Vec<f32>,
+    },
+}
+
+fn cast_vec(src: &[f64]) -> Vec<f32> {
+    let mut out = vec![0.0f32; src.len()];
+    cast_from_f64(src, &mut out);
+    out
+}
+
+/// f32 CSR matvec: 4 independent accumulator chains per row, same
+/// reassociation shape as the f64 SpMV.
+fn csr_matvec_f32(
+    row_ptr: &[usize],
+    col_idx: &[usize],
+    values: &[f32],
+    rows: usize,
+    x: &[f32],
+    y: &mut [f32],
+) {
+    for i in 0..rows {
+        let lo = row_ptr[i];
+        let hi = row_ptr[i + 1];
+        let vals = &values[lo..hi];
+        let cols = &col_idx[lo..hi];
+        let mut acc = [0.0f32; 4];
+        let chunks = vals.len() / 4;
+        for c in 0..chunks {
+            let k = c * 4;
+            acc[0] += vals[k] * x[cols[k]];
+            acc[1] += vals[k + 1] * x[cols[k + 1]];
+            acc[2] += vals[k + 2] * x[cols[k + 2]];
+            acc[3] += vals[k + 3] * x[cols[k + 3]];
+        }
+        let mut s = (acc[0] + acc[1]) + (acc[2] + acc[3]);
+        for k in chunks * 4..vals.len() {
+            s += vals[k] * x[cols[k]];
+        }
+        y[i] = s;
+    }
+}
+
+/// f32 CSR scatter `y += α · Aᵀ x`.
+fn csr_tr_axpy_f32(
+    row_ptr: &[usize],
+    col_idx: &[usize],
+    values: &[f32],
+    rows: usize,
+    x: &[f32],
+    alpha: f32,
+    y: &mut [f32],
+) {
+    for i in 0..rows {
+        let xi = alpha * x[i];
+        if xi == 0.0 {
+            continue;
+        }
+        for k in row_ptr[i]..row_ptr[i + 1] {
+            y[col_idx[k]] += values[k] * xi;
+        }
+    }
+}
+
+impl OpF32 {
+    /// Cast a block operator down once, at solver construction.
+    pub fn from_block(op: &BlockOp) -> Self {
+        match op {
+            BlockOp::Dense(a) => OpF32::Dense {
+                data: cast_vec(a.as_slice()),
+                rows: a.rows(),
+                cols: a.cols(),
+            },
+            BlockOp::Sparse(a) => OpF32::Csr {
+                rows: a.rows,
+                cols: a.cols,
+                row_ptr: a.row_ptr.clone(),
+                col_idx: a.col_idx.clone(),
+                values: cast_vec(&a.values),
+            },
+            BlockOp::Whitened(wc) => {
+                let a = wc.csr();
+                OpF32::Whitened {
+                    rows: a.rows,
+                    cols: a.cols,
+                    row_ptr: a.row_ptr.clone(),
+                    col_idx: a.col_idx.clone(),
+                    values: cast_vec(&a.values),
+                    w: cast_vec(wc.preconditioner().matrix().as_slice()),
+                }
+            }
+        }
+    }
+
+    /// Rows (`p`).
+    pub fn rows(&self) -> usize {
+        match self {
+            OpF32::Dense { rows, .. } | OpF32::Csr { rows, .. } | OpF32::Whitened { rows, .. } => {
+                *rows
+            }
+        }
+    }
+
+    /// Columns (`n`).
+    pub fn cols(&self) -> usize {
+        match self {
+            OpF32::Dense { cols, .. } | OpF32::Csr { cols, .. } | OpF32::Whitened { cols, .. } => {
+                *cols
+            }
+        }
+    }
+
+    /// `y = A x`. `stage` is a `p`-sized scratch only the whitened
+    /// backend touches.
+    pub fn matvec_into(&self, x: &[f32], y: &mut [f32], stage: &mut [f32]) {
+        match self {
+            OpF32::Dense { data, rows, cols } => kernels::matvec_f32(data, *rows, *cols, x, y),
+            OpF32::Csr { rows, row_ptr, col_idx, values, .. } => {
+                csr_matvec_f32(row_ptr, col_idx, values, *rows, x, y)
+            }
+            OpF32::Whitened { rows, row_ptr, col_idx, values, w, .. } => {
+                csr_matvec_f32(row_ptr, col_idx, values, *rows, x, stage);
+                kernels::matvec_f32(w, *rows, *rows, stage, y);
+            }
+        }
+    }
+
+    /// `y = Aᵀ x`, overwriting `y`.
+    pub fn tr_matvec_into(&self, x: &[f32], y: &mut [f32], stage: &mut [f32]) {
+        y.fill(0.0);
+        self.tr_matvec_axpy_into(x, 1.0, y, stage);
+    }
+
+    /// `y += α · Aᵀ x` — the fused APC-tail accumulation.
+    pub fn tr_matvec_axpy_into(&self, x: &[f32], alpha: f32, y: &mut [f32], stage: &mut [f32]) {
+        match self {
+            OpF32::Dense { data, rows, cols } => {
+                kernels::tr_matvec_axpy_f32(data, *rows, *cols, x, alpha, y)
+            }
+            OpF32::Csr { rows, row_ptr, col_idx, values, .. } => {
+                csr_tr_axpy_f32(row_ptr, col_idx, values, *rows, x, alpha, y)
+            }
+            OpF32::Whitened { rows, row_ptr, col_idx, values, w, .. } => {
+                // Cᵀ x = Aᵀ (W x), W symmetric
+                kernels::matvec_f32(w, *rows, *rows, x, stage);
+                csr_tr_axpy_f32(row_ptr, col_idx, values, *rows, stage, alpha, y);
+            }
+        }
+    }
+}
+
+/// One machine's f32 working set: operator + factor copies (cast once),
+/// the current residual rhs, and the per-method scratch. Plain data —
+/// `Send + Sync` — so the machine phase fans it out exactly like the f64
+/// locals.
+#[derive(Clone, Debug)]
+pub struct BlockF32 {
+    pub index: usize,
+    op: OpF32,
+    chol: CholF32,
+    /// `ξI + A_iA_iᵀ` factor for the ADMM prox step (lemma form), built
+    /// in f64 then cast.
+    shifted: Option<CholF32>,
+    xi: f32,
+    /// Current inner rhs: the f32 cast of this block's f64 residual rows.
+    rb: Vec<f32>,
+    /// `A_iᵀ rb` cache (ADMM only; refreshed with `rb`).
+    atb: Vec<f32>,
+    /// Local iterate (APC / consensus family).
+    pub x: Vec<f32>,
+    /// Per-round output (gradient / Cimmino / ADMM family).
+    out: Vec<f32>,
+    scratch_p: Vec<f32>,
+    scratch_n: Vec<f32>,
+    stage_p: Vec<f32>,
+}
+
+impl BlockF32 {
+    /// Cast a block's operator and Gram factor down (no ADMM state).
+    pub fn new(blk: &MachineBlock) -> Self {
+        let op = OpF32::from_block(&blk.a);
+        let (p, n) = (op.rows(), op.cols());
+        BlockF32 {
+            index: blk.index,
+            op,
+            chol: CholF32::from_f64(&blk.gram_chol),
+            shifted: None,
+            xi: 0.0,
+            rb: vec![0.0; p],
+            atb: Vec::new(),
+            x: vec![0.0; n],
+            out: vec![0.0; n],
+            scratch_p: vec![0.0; p],
+            scratch_n: vec![0.0; n],
+            stage_p: vec![0.0; p],
+        }
+    }
+
+    /// Like [`new`](BlockF32::new), plus the ADMM shifted-Gram factor:
+    /// `ξI + A_iA_iᵀ` is assembled and factored in f64 (same SPD
+    /// guarantees as the f64 solver), then rounded down.
+    pub fn with_admm(blk: &MachineBlock, xi: f64) -> Result<Self> {
+        let mut g = blk.a.gram_rows();
+        for i in 0..g.rows() {
+            g[(i, i)] += xi;
+        }
+        let shifted = Cholesky::new(&g)
+            .with_context(|| format!("machine {}: ξI + A_iA_iᵀ not SPD", blk.index))?;
+        let mut b = Self::new(blk);
+        b.shifted = Some(CholF32::from_f64(&shifted));
+        b.xi = xi as f32;
+        b.atb = vec![0.0; b.op.cols()];
+        Ok(b)
+    }
+
+    /// Rows (`p`).
+    pub fn p(&self) -> usize {
+        self.op.rows()
+    }
+
+    /// Unknowns (`n`).
+    pub fn n(&self) -> usize {
+        self.op.cols()
+    }
+
+    /// The last per-round output (gradient / Cimmino / ADMM family) —
+    /// what the master's f64 fold widens and accumulates.
+    pub fn out(&self) -> &[f32] {
+        &self.out
+    }
+
+    /// Point the block at a new residual rhs (cast down from the f64
+    /// refresh). Re-derives the ADMM `A_iᵀ rb` cache when present —
+    /// the same rebind hazard the f64 ADMM local documents.
+    pub fn set_rb(&mut self, rb64: &[f64]) {
+        cast_from_f64(rb64, &mut self.rb);
+        if self.shifted.is_some() {
+            self.op.tr_matvec_into(&self.rb, &mut self.atb, &mut self.stage_p);
+        }
+    }
+
+    /// Restart the local iterate at the minimum-norm solution of
+    /// `A_i d = rb_i` through the cast factor — Algorithm 1's feasible
+    /// start, applied to the residual system.
+    pub fn restart_min_norm(&mut self) {
+        self.scratch_p.copy_from_slice(&self.rb);
+        self.chol.solve_in_place(&mut self.scratch_p);
+        self.op.tr_matvec_into(&self.scratch_p, &mut self.x, &mut self.stage_p);
+    }
+
+    /// One APC worker step on the residual system:
+    /// `x ← x + γ P_i(d̄ − x)` (consensus is the `γ = 1` pin). Mirrors
+    /// `ApcLocal::step` operation-for-operation.
+    pub fn apc_step(&mut self, gamma: f32, dbar: &[f32]) {
+        for k in 0..self.scratch_n.len() {
+            self.scratch_n[k] = dbar[k] - self.x[k];
+        }
+        self.op.matvec_into(&self.scratch_n, &mut self.scratch_p, &mut self.stage_p);
+        self.chol.solve_in_place(&mut self.scratch_p);
+        kernels::axpy_f32(gamma, &self.scratch_n, &mut self.x);
+        self.op.tr_matvec_axpy_into(&self.scratch_p, -gamma, &mut self.x, &mut self.stage_p);
+    }
+
+    /// Partial gradient `A_iᵀ(A_i d̄ − rb_i)` (DGD / NAG / HBM machine
+    /// phase on the residual system).
+    pub fn partial_grad(&mut self, dbar: &[f32]) -> &[f32] {
+        self.op.matvec_into(dbar, &mut self.scratch_p, &mut self.stage_p);
+        for (r, b) in self.scratch_p.iter_mut().zip(&self.rb) {
+            *r -= b;
+        }
+        self.op.tr_matvec_into(&self.scratch_p, &mut self.out, &mut self.stage_p);
+        &self.out
+    }
+
+    /// Block Cimmino step `A_i⁺(rb_i − A_i d̄)`.
+    pub fn cimmino_step(&mut self, dbar: &[f32]) -> &[f32] {
+        self.op.matvec_into(dbar, &mut self.scratch_p, &mut self.stage_p);
+        for (r, b) in self.scratch_p.iter_mut().zip(&self.rb) {
+            *r = b - *r;
+        }
+        self.chol.solve_in_place(&mut self.scratch_p);
+        self.op.tr_matvec_into(&self.scratch_p, &mut self.out, &mut self.stage_p);
+        &self.out
+    }
+
+    /// Modified-ADMM prox step via the matrix-inversion lemma (mirrors
+    /// `AdmmLocal::step` on the residual system):
+    /// `out = (A_iᵀA_i + ξI)⁻¹(A_iᵀ rb_i + ξ d̄)`.
+    pub fn admm_step(&mut self, dbar: &[f32]) -> &[f32] {
+        let shifted = self.shifted.as_ref().expect("admm_step requires with_admm construction");
+        for k in 0..self.scratch_n.len() {
+            self.scratch_n[k] = self.atb[k] + self.xi * dbar[k];
+        }
+        self.op.matvec_into(&self.scratch_n, &mut self.scratch_p, &mut self.stage_p);
+        shifted.solve_in_place(&mut self.scratch_p);
+        self.op.tr_matvec_into(&self.scratch_p, &mut self.out, &mut self.stage_p);
+        for k in 0..self.out.len() {
+            self.out[k] = (self.scratch_n[k] - self.out[k]) / self.xi;
+        }
+        &self.out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gen::problems::{Problem, SparseProblem};
+    use crate::partition::PartitionedSystem;
+
+    fn widen(v: &[f32]) -> Vec<f64> {
+        v.iter().map(|&x| x as f64).collect()
+    }
+
+    fn max_rel(a: &[f64], b: &[f64]) -> f64 {
+        a.iter()
+            .zip(b)
+            .map(|(x, y)| (x - y).abs() / x.abs().max(y.abs()).max(1.0))
+            .fold(0.0, f64::max)
+    }
+
+    #[test]
+    fn f32_ops_track_f64_blocks_on_every_backend() {
+        let built = SparseProblem::random_sparse(24, 16, 0.3, 4).build(7);
+        let dense = built.a.to_dense();
+        let systems = [
+            PartitionedSystem::split_even(&dense, &built.b, 4).unwrap(),
+            PartitionedSystem::split_csr(&built.a, &built.b, 4).unwrap(),
+            PartitionedSystem::split_csr(&built.a, &built.b, 4).unwrap().preconditioned().unwrap(),
+        ];
+        let x64: Vec<f64> = (0..16).map(|i| (i as f64 * 0.37).sin()).collect();
+        let x32: Vec<f32> = x64.iter().map(|&v| v as f32).collect();
+        for sys in &systems {
+            for blk in &sys.blocks {
+                let op = OpF32::from_block(&blk.a);
+                let p = blk.p();
+                let mut y32 = vec![0.0f32; p];
+                let mut stage = vec![0.0f32; p];
+                op.matvec_into(&x32, &mut y32, &mut stage);
+                let y64 = blk.a.matvec(&x64);
+                assert!(
+                    max_rel(&widen(&y32), &y64) < 2e-5,
+                    "machine {}: f32 matvec drifted",
+                    blk.index
+                );
+                let r64: Vec<f64> = (0..p).map(|i| (i as f64 * 0.7).cos()).collect();
+                let r32: Vec<f32> = r64.iter().map(|&v| v as f32).collect();
+                let mut t32 = vec![0.0f32; 16];
+                op.tr_matvec_into(&r32, &mut t32, &mut stage);
+                let t64 = blk.a.tr_matvec(&r64);
+                assert!(
+                    max_rel(&widen(&t32), &t64) < 2e-5,
+                    "machine {}: f32 tr_matvec drifted",
+                    blk.index
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn cast_factor_solves_the_gram_system() {
+        let p = Problem::standard_gaussian(24, 12, 4).build(17);
+        let sys = PartitionedSystem::split_even(&p.a, &p.b, 4).unwrap();
+        for blk in &sys.blocks {
+            let c32 = CholF32::from_f64(&blk.gram_chol);
+            let rhs64: Vec<f64> = (0..blk.p()).map(|i| 1.0 + i as f64 * 0.3).collect();
+            let mut x32: Vec<f32> = rhs64.iter().map(|&v| v as f32).collect();
+            c32.solve_in_place(&mut x32);
+            let x64 = blk.gram_chol.solve(&rhs64);
+            assert!(max_rel(&widen(&x32), &x64) < 1e-3, "f32 gram solve drifted");
+        }
+    }
+
+    #[test]
+    fn restart_min_norm_is_feasible_in_f32() {
+        let p = Problem::standard_gaussian(24, 12, 4).build(29);
+        let sys = PartitionedSystem::split_even(&p.a, &p.b, 4).unwrap();
+        for blk in &sys.blocks {
+            let mut b32 = BlockF32::new(blk);
+            b32.set_rb(&blk.b);
+            b32.restart_min_norm();
+            // A_i x ≈ rb_i at f32 accuracy
+            let mut ax = vec![0.0f32; blk.p()];
+            let mut stage = vec![0.0f32; blk.p()];
+            let x = b32.x.clone();
+            b32.op.matvec_into(&x, &mut ax, &mut stage);
+            let scale: f32 = blk.b.iter().map(|v| v.abs() as f32).fold(1.0, f32::max);
+            for (a, b) in ax.iter().zip(&blk.b) {
+                assert!(
+                    (a - *b as f32).abs() <= 1e-4 * scale,
+                    "f32 feasible start violated: {} vs {}",
+                    a,
+                    b
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn admm_step_matches_f64_local_at_cast_accuracy() {
+        let p = Problem::standard_gaussian(18, 18, 3).build(41);
+        let sys = PartitionedSystem::split_even(&p.a, &p.b, 3).unwrap();
+        let xi = 0.7;
+        let dbar64: Vec<f64> = (0..18).map(|i| (i as f64 * 0.23).sin()).collect();
+        let dbar32: Vec<f32> = dbar64.iter().map(|&v| v as f32).collect();
+        for blk in &sys.blocks {
+            let mut b32 = BlockF32::with_admm(blk, xi).unwrap();
+            b32.set_rb(&blk.b);
+            let out32 = widen(b32.admm_step(&dbar32));
+            // f64 reference via the production local
+            let mut local = crate::solvers::local::AdmmLocal::new(blk, xi).unwrap();
+            let mut out64 = vec![0.0; 18];
+            local.step(blk, &dbar64, &mut out64);
+            assert!(
+                max_rel(&out32, &out64) < 5e-4,
+                "machine {}: f32 ADMM prox drifted",
+                blk.index
+            );
+        }
+    }
+}

@@ -24,6 +24,8 @@ use crate::precond::{Preconditioner, WhitenedCsr};
 use crate::sparse::{Csr, CsrBlock};
 use anyhow::{bail, Context, Result};
 
+pub mod lowp;
+
 /// The per-machine operator `A_i`: a dense row block, a CSR row block, or
 /// a §6-whitened CSR block `(A_iA_iᵀ)^{-1/2} A_i` kept in factored form.
 ///

@@ -175,6 +175,22 @@ impl SpectralInfo {
             EstimateStats { x_iterations: ex.iterations, ata_iterations: ea.iterations },
         ))
     }
+
+    /// Scale-aware tuning spectrum: the exact `O(n³)` eigensolves
+    /// ([`compute`](SpectralInfo::compute)) while `n` is small enough
+    /// that they are noise, the Lanczos estimate
+    /// ([`estimate`](SpectralInfo::estimate), safety-biased for APC
+    /// stability) beyond. This is what lets sweep harnesses (e.g.
+    /// `benches/cluster_faults.rs`) push the machine count — and with it
+    /// `n` — into the thousands without the tuning step reintroducing
+    /// the cubic cost the distributed methods exist to avoid.
+    pub fn for_tuning(sys: &PartitionedSystem) -> Result<Self> {
+        if sys.n <= 400 {
+            Self::compute(sys)
+        } else {
+            Self::estimate(sys, 600, 0.85)
+        }
+    }
 }
 
 /// Convergence time `T = 1/(−log ρ)`; `∞` for non-convergent `ρ ≥ 1`.

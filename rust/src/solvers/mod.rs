@@ -12,6 +12,7 @@
 //! | [`admm`] | modified consensus-ADMM (y≡0, §4.4) | 2pn (inversion lemma) | 2pnk, one shifted factor | monotone in ξ, see `rates` |
 //! | [`phbm`] | §6 preconditioned heavy-ball | 2pn | 2pnk over the whitened blocks | same as APC |
 //! | [`stream`] | streaming batch refill (any engine above) | 2pn·k_active | holds k at `max_width` under load | inherits the engine's ρ per lane |
+//! | [`refine`] | mixed-precision iterative refinement (f32 machine phase for any method above except P-HBM) | pn flops *in f32* — half the bytes, double the SIMD lanes | — | inner rounds inherit the engine's ρ; outer restarts pin f64 accuracy |
 //!
 //! The batched column costs every method `2pnk` flops per machine per
 //! round in **one** streamed pass of `A_i` (GEMM/SpMM over an `n×k`
@@ -49,12 +50,56 @@ pub mod hbm;
 pub mod local;
 pub mod nag;
 pub mod phbm;
+pub mod refine;
 pub mod stream;
 pub mod suite;
 
 use crate::linalg::vector::relative_error;
 use crate::partition::PartitionedSystem;
 use anyhow::Result;
+
+/// Arithmetic precision policy for a solve.
+///
+/// Orthogonal to [`SolverOptions`] (which governs stopping, not
+/// arithmetic): the suite plumbs it through
+/// [`suite::tuned_solver_prec`], picking between the plain f64 engines
+/// and their [`refine`]-wrapped mixed-precision counterparts. With
+/// `MixedRefined`, machines run their projection / gradient / prox
+/// steps on f32 casts of their operators and factors while the master
+/// accumulates in f64, and every `refresh_every` rounds the true f64
+/// residual is recomputed and the f32 inner solve restarted on the
+/// correction system — standard iterative refinement, so the final
+/// answer still meets f64 tolerances (`tests/mixed_precision.rs`).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Precision {
+    /// Full f64 everywhere (the default; bit-identical to the seed
+    /// solvers).
+    F64,
+    /// f32 machine phase + f64 master fold + outer refinement loop.
+    MixedRefined {
+        /// Inner f32 rounds between true-residual refreshes. Small
+        /// values waste f64 residual passes (and, for momentum methods,
+        /// restarts); large values let the inner solve stall at the f32
+        /// floor (~1e-7 relative) before the refresh can push below it.
+        refresh_every: usize,
+    },
+}
+
+impl Precision {
+    /// `MixedRefined` at the default refresh cadence (50 inner rounds —
+    /// long enough for the momentum methods to re-enter their asymptotic
+    /// rate after a restart, short enough to refresh well before the f32
+    /// floor dominates the budget).
+    pub fn default_mixed() -> Self {
+        Precision::MixedRefined { refresh_every: 50 }
+    }
+}
+
+impl Default for Precision {
+    fn default() -> Self {
+        Precision::F64
+    }
+}
 
 /// Stopping metric for a solve.
 #[derive(Clone, Debug)]

@@ -3,7 +3,7 @@
 //! optimally for this system" as one call.
 
 use super::{admm::Admm, apc::Apc, cimmino::Cimmino, consensus::Consensus, dgd::Dgd, hbm::Hbm,
-            nag::Nag, phbm::Phbm, Solver};
+            nag::Nag, phbm::Phbm, refine::Refined, Precision, Solver};
 use crate::coordinator::Method;
 use crate::partition::PartitionedSystem;
 use crate::rates::{self, SpectralInfo};
@@ -33,6 +33,37 @@ pub fn tuned_solver(
         "phbm" => Box::new(Phbm::auto_with_spectral(sys, s)?),
         other => bail!("unknown solver {:?} (expected one of {:?})", other, ALL),
     })
+}
+
+/// Like [`tuned_solver`], but honoring a [`Precision`] policy:
+/// `Precision::F64` returns the plain solver unchanged, while
+/// `Precision::MixedRefined` wraps the method's tuning in the
+/// mixed-precision refinement engine ([`Refined`]) — f32 machine phase,
+/// f64 master fold, true-residual restarts every `refresh_every`
+/// rounds.
+///
+/// `phbm` supports only `F64` here (§6 preconditioning transforms the
+/// system, not the master rule): refine `hbm` on
+/// [`PartitionedSystem::preconditioned`] output instead — the whitened
+/// backend has an f32 mirror, so that composition is fully supported.
+pub fn tuned_solver_prec(
+    name: &str,
+    sys: &PartitionedSystem,
+    s: &SpectralInfo,
+    precision: Precision,
+) -> Result<Box<dyn Solver>> {
+    match precision {
+        Precision::F64 => tuned_solver(name, sys, s),
+        Precision::MixedRefined { refresh_every } => {
+            if name == "phbm" {
+                bail!(
+                    "phbm has no mixed-precision wrapper: run \
+                     tuned_solver_prec(\"hbm\", …) on sys.preconditioned()"
+                );
+            }
+            Ok(Box::new(Refined::tuned(name, sys, s, refresh_every)?))
+        }
+    }
 }
 
 /// Construct the optimally tuned coordinator [`Method`] descriptor.
@@ -116,6 +147,31 @@ mod tests {
             let rep = solver.solve(&sys, &opts).unwrap();
             assert!(rep.converged, "{name}: err {:.2e} after {}", rep.final_error, rep.iterations);
         }
+    }
+
+    #[test]
+    fn tuned_solver_prec_selects_engines() {
+        let p = Problem::standard_gaussian(24, 24, 3).build(97);
+        let sys = PartitionedSystem::split_even(&p.a, &p.b, 3).unwrap();
+        let s = SpectralInfo::compute(&sys).unwrap();
+        // F64 policy: same engines as tuned_solver
+        let f64_solver = tuned_solver_prec("apc", &sys, &s, Precision::F64).unwrap();
+        assert_eq!(f64_solver.name(), "APC");
+        // Mixed policy: the +IR wrappers, for every method but phbm
+        for name in TABLE2_ORDER {
+            let solver = tuned_solver_prec(name, &sys, &s, Precision::default_mixed()).unwrap();
+            assert!(solver.name().ends_with("+IR"), "{name} → {}", solver.name());
+        }
+        assert!(tuned_solver_prec("phbm", &sys, &s, Precision::default_mixed()).is_err());
+        // …and the whitened composition it redirects to constructs fine
+        let sp = crate::gen::problems::SparseProblem::banded(30, 30, 2, 3).build(97);
+        let wsys = PartitionedSystem::split_csr(&sp.a, &sp.b, 3)
+            .unwrap()
+            .preconditioned()
+            .unwrap();
+        let ws = SpectralInfo::compute(&wsys).unwrap();
+        let solver = tuned_solver_prec("hbm", &wsys, &ws, Precision::default_mixed()).unwrap();
+        assert_eq!(solver.name(), "D-HBM+IR");
     }
 
     #[test]

@@ -5,6 +5,7 @@
 //! iterative solvers accept either dense or sparse operators through
 //! [`LinOp`].
 
+use crate::linalg::kernels;
 use crate::linalg::Mat;
 use anyhow::{bail, Result};
 
@@ -95,14 +96,31 @@ impl Csr {
         y
     }
 
-    /// `y = A x`, zero-alloc.
+    /// `y = A x`, zero-alloc. The gather `x[col_idx[k]]` defeats
+    /// contiguous SIMD loads, so the SpMV kernel stays portable scalar
+    /// code — but 4 independent accumulator chains per row keep the FMA
+    /// pipeline fed instead of serializing on one running sum (the same
+    /// ILP trick as `vector::dot`, reassociation-order fixed).
     pub fn matvec_into(&self, x: &[f64], y: &mut [f64]) {
         assert_eq!(x.len(), self.cols, "csr matvec: dimension mismatch");
         assert_eq!(y.len(), self.rows, "csr matvec: output mismatch");
         for i in 0..self.rows {
-            let mut s = 0.0;
-            for k in self.row_ptr[i]..self.row_ptr[i + 1] {
-                s += self.values[k] * x[self.col_idx[k]];
+            let lo = self.row_ptr[i];
+            let hi = self.row_ptr[i + 1];
+            let vals = &self.values[lo..hi];
+            let cols = &self.col_idx[lo..hi];
+            let mut acc = [0.0f64; 4];
+            let chunks = vals.len() / 4;
+            for c in 0..chunks {
+                let k = c * 4;
+                acc[0] += vals[k] * x[cols[k]];
+                acc[1] += vals[k + 1] * x[cols[k + 1]];
+                acc[2] += vals[k + 2] * x[cols[k + 2]];
+                acc[3] += vals[k + 3] * x[cols[k + 3]];
+            }
+            let mut s = (acc[0] + acc[1]) + (acc[2] + acc[3]);
+            for k in chunks * 4..vals.len() {
+                s += vals[k] * x[cols[k]];
             }
             y[i] = s;
         }
@@ -155,15 +173,19 @@ impl Csr {
         if k == 0 {
             return;
         }
+        // One SIMD dispatch per CSR row (not per nonzero): the lane loop
+        // over `k` is contiguous, so the whole row vectorizes even though
+        // the column gather is irregular.
         for i in 0..self.rows {
-            let yr = &mut y[i * k..(i + 1) * k];
-            for nz in self.row_ptr[i]..self.row_ptr[i + 1] {
-                let v = self.values[nz];
-                let xr = &x[self.col_idx[nz] * k..self.col_idx[nz] * k + k];
-                for t in 0..k {
-                    yr[t] += v * xr[t];
-                }
-            }
+            let lo = self.row_ptr[i];
+            let hi = self.row_ptr[i + 1];
+            kernels::spmm_row(
+                &self.values[lo..hi],
+                &self.col_idx[lo..hi],
+                x,
+                k,
+                &mut y[i * k..(i + 1) * k],
+            );
         }
     }
 
@@ -184,15 +206,19 @@ impl Csr {
         if alpha == 0.0 || k == 0 {
             return; // exact noop, same contract as the single-vector kernel
         }
+        // One SIMD dispatch per CSR row; the scatter targets are
+        // irregular but each `k`-lane update is contiguous.
         for i in 0..self.rows {
-            let xr = &x[i * k..(i + 1) * k];
-            for nz in self.row_ptr[i]..self.row_ptr[i + 1] {
-                let av = alpha * self.values[nz];
-                let yr = &mut y[self.col_idx[nz] * k..self.col_idx[nz] * k + k];
-                for t in 0..k {
-                    yr[t] += av * xr[t];
-                }
-            }
+            let lo = self.row_ptr[i];
+            let hi = self.row_ptr[i + 1];
+            kernels::spmm_tr_row(
+                &self.values[lo..hi],
+                &self.col_idx[lo..hi],
+                &x[i * k..(i + 1) * k],
+                alpha,
+                k,
+                y,
+            );
         }
     }
 

@@ -1,0 +1,141 @@
+//! Mixed-precision refinement accuracy: every `+IR` engine must land
+//! within 1e-10 of its pure-f64 counterpart — i.e. the f32 machine
+//! phase must cost *nothing* in final accuracy, because the f64 outer
+//! loop (true-residual refresh + restart) absorbs the single-precision
+//! floor. Both solvers are driven to a 1e-13 relative residual, an
+//! order below the claimed agreement and two above the f64 floor of the
+//! κ-bounded test problems.
+//!
+//! Coverage: all seven wrapped methods on a dense conditioned system,
+//! the projection/gradient/prox families on a CSR system, and D-HBM on
+//! the §6-whitened system (the f32 mirror of the factored `W·(A·)`
+//! operator).
+
+use apc::gen::problems::{Problem, SparseProblem};
+use apc::linalg::vector::relative_error;
+use apc::partition::PartitionedSystem;
+use apc::rates::SpectralInfo;
+use apc::solvers::{suite, Metric, Precision, SolverOptions};
+
+const RESIDUAL_TOL: f64 = 1e-13;
+const AGREEMENT: f64 = 1e-10;
+
+fn opts() -> SolverOptions {
+    SolverOptions {
+        tol: RESIDUAL_TOL,
+        max_iter: 500_000,
+        metric: Metric::Residual,
+        record_every: 0,
+    }
+}
+
+/// Solve with both precision policies and pin the agreement.
+fn compare(name: &str, sys: &PartitionedSystem, s: &SpectralInfo, label: &str) {
+    let mut pure = suite::tuned_solver_prec(name, sys, s, Precision::F64).unwrap();
+    let rep64 = pure.solve(sys, &opts()).unwrap();
+    assert!(
+        rep64.converged,
+        "{label}/{name} (f64): stalled at {:.2e} after {}",
+        rep64.final_error, rep64.iterations
+    );
+
+    let mut mixed = suite::tuned_solver_prec(name, sys, s, Precision::default_mixed()).unwrap();
+    let repmx = mixed.solve(sys, &opts()).unwrap();
+    assert!(
+        repmx.converged,
+        "{label}/{} (mixed): stalled at {:.2e} after {} — the refinement loop \
+         failed to push below the f32 floor",
+        repmx.solver, repmx.final_error, repmx.iterations
+    );
+
+    let diff = relative_error(&repmx.solution, &rep64.solution);
+    assert!(
+        diff <= AGREEMENT,
+        "{label}/{name}: mixed vs f64 disagree by {diff:.2e} (> {AGREEMENT:.0e}) \
+         [f64: {} iters, mixed: {} iters]",
+        rep64.iterations,
+        repmx.iterations
+    );
+}
+
+#[test]
+fn dense_all_seven_methods_agree_with_f64() {
+    // κ(AᵀA) ≈ 40 — hard enough that f32 alone stalls ~6 decades short
+    // of RESIDUAL_TOL, easy enough that every method converges briskly
+    let p = Problem::with_condition("mixed-dense", 48, 48, 4, 40.0).build(71);
+    let sys = PartitionedSystem::split_even(&p.a, &p.b, 4).unwrap();
+    let s = SpectralInfo::compute(&sys).unwrap();
+    for name in ["apc", "consensus", "dgd", "nag", "hbm", "cimmino", "admm"] {
+        compare(name, &sys, &s, "dense");
+    }
+}
+
+#[test]
+fn csr_backend_agrees_with_f64() {
+    // one method per family on the sparse backend: projection (apc),
+    // gradient (dgd), prox (admm)
+    let p = SparseProblem::banded(60, 60, 3, 4).build(73);
+    let sys = PartitionedSystem::split_csr(&p.a, &p.b, 4).unwrap();
+    let s = SpectralInfo::compute(&sys).unwrap();
+    for name in ["apc", "dgd", "admm"] {
+        compare(name, &sys, &s, "csr");
+    }
+}
+
+#[test]
+fn whitened_backend_agrees_with_f64() {
+    // §6 composition: precondition the sparse system, refine hbm on it —
+    // the exact route tuned_solver_prec points phbm users at
+    let p = SparseProblem::banded(48, 48, 2, 4).build(79);
+    let sys = PartitionedSystem::split_csr(&p.a, &p.b, 4)
+        .unwrap()
+        .preconditioned()
+        .unwrap();
+    let s = SpectralInfo::compute(&sys).unwrap();
+    compare("hbm", &sys, &s, "whitened");
+}
+
+#[test]
+fn mixed_solution_actually_solves_the_system() {
+    // belt-and-braces beyond agreement: the mixed answer must satisfy
+    // the *original* f64 system to its reported residual
+    let p = Problem::with_condition("mixed-check", 36, 36, 3, 25.0).build(83);
+    let sys = PartitionedSystem::split_even(&p.a, &p.b, 3).unwrap();
+    let s = SpectralInfo::compute(&sys).unwrap();
+    let mut mixed =
+        suite::tuned_solver_prec("apc", &sys, &s, Precision::default_mixed()).unwrap();
+    let rep = mixed.solve(&sys, &opts()).unwrap();
+    assert!(rep.converged);
+    assert!(sys.relative_residual(&rep.solution) <= RESIDUAL_TOL);
+    assert!(
+        relative_error(&rep.solution, &p.x_star) <= 1e-10,
+        "error vs planted truth: {:.2e}",
+        relative_error(&rep.solution, &p.x_star)
+    );
+}
+
+#[test]
+fn mixed_rebind_solves_a_new_rhs() {
+    // the default rebind (reset) must fully re-derive rhs-dependent f32
+    // state — including ADMM's Aᵀb cache — when the rhs changes
+    let p = Problem::with_condition("mixed-rebind", 30, 30, 3, 20.0).build(89);
+    let mut sys = PartitionedSystem::split_even(&p.a, &p.b, 3).unwrap();
+    let s = SpectralInfo::compute(&sys).unwrap();
+    let mut mixed =
+        suite::tuned_solver_prec("admm", &sys, &s, Precision::default_mixed()).unwrap();
+    let rep1 = mixed.solve(&sys, &opts()).unwrap();
+    assert!(rep1.converged);
+
+    // new rhs with a different planted solution
+    let p2 = Problem::with_condition("mixed-rebind", 30, 30, 3, 20.0).build(97);
+    let b2: Vec<f64> = p.a.matvec(&p2.x_star);
+    sys.set_rhs(&b2).unwrap();
+    mixed.rebind(&sys).unwrap();
+    let rep2 = mixed.solve(&sys, &opts()).unwrap();
+    assert!(rep2.converged, "rebind: stalled at {:.2e}", rep2.final_error);
+    assert!(
+        relative_error(&rep2.solution, &p2.x_star) <= 1e-10,
+        "rebind: error vs new truth {:.2e}",
+        relative_error(&rep2.solution, &p2.x_star)
+    );
+}

@@ -1,0 +1,314 @@
+//! SIMD ↔ scalar parity: the dispatched kernels must agree with the
+//! never-dispatched blocked scalar references (`kernels::scalar`) on
+//! every shape class — odd sizes, 4-row-block tails, empty edges.
+//!
+//! Contract (see `src/linalg/kernels.rs` module docs): when the runtime
+//! backend is `Scalar` (no SIMD host, or `--no-default-features`), the
+//! dispatched path IS the scalar path, so agreement must be bit-exact.
+//! When a SIMD backend is live, lane-parallel accumulation reassociates
+//! f64 sums — a *different but deterministic* summation order — so
+//! agreement is pinned at ~1e-12 relative (f32: ~2e-5).
+//!
+//! These tests never call `set_forced_backend` (dispatch stability is
+//! part of the crate's determinism contract, and tests run
+//! multi-threaded); they compare the dispatched public API against the
+//! scalar reference functions directly.
+
+use apc::linalg::kernels::{self, scalar};
+use apc::linalg::simd::{self, Backend};
+use apc::sparse::Coo;
+
+/// Deterministic xorshift64* fill, the kernel unit tests' generator.
+fn filled(len: usize, seed: u64) -> Vec<f64> {
+    let mut s = seed.max(1);
+    (0..len)
+        .map(|_| {
+            s ^= s << 13;
+            s ^= s >> 7;
+            s ^= s << 17;
+            (s.wrapping_mul(0x2545F4914F6CDD1D) >> 11) as f64 / (1u64 << 53) as f64 - 0.5
+        })
+        .collect()
+}
+
+fn filled32(len: usize, seed: u64) -> Vec<f32> {
+    filled(len, seed).iter().map(|&v| v as f32).collect()
+}
+
+/// Scalar backend ⇒ exact; SIMD backend ⇒ `tol`-relative.
+fn check(label: &str, got: &[f64], want: &[f64], tol: f64) {
+    assert_eq!(got.len(), want.len(), "{label}: length");
+    let exact = simd::backend() == Backend::Scalar;
+    for (i, (g, w)) in got.iter().zip(want).enumerate() {
+        if exact {
+            assert!(
+                g.to_bits() == w.to_bits(),
+                "{label}[{i}]: scalar backend must be bit-exact: {g:e} vs {w:e}"
+            );
+        } else {
+            let scale = w.abs().max(1.0);
+            assert!(
+                (g - w).abs() <= tol * scale,
+                "{label}[{i}]: {g:e} vs {w:e} (tol {tol:e})"
+            );
+        }
+    }
+}
+
+fn check32(label: &str, got: &[f32], want: &[f32], tol: f32) {
+    assert_eq!(got.len(), want.len(), "{label}: length");
+    let exact = simd::backend() == Backend::Scalar;
+    for (i, (g, w)) in got.iter().zip(want).enumerate() {
+        if exact {
+            assert!(
+                g.to_bits() == w.to_bits(),
+                "{label}[{i}]: scalar backend must be bit-exact: {g:e} vs {w:e}"
+            );
+        } else {
+            let scale = w.abs().max(1.0);
+            assert!((g - w).abs() <= tol * scale, "{label}[{i}]: {g:e} vs {w:e}");
+        }
+    }
+}
+
+/// Shape sweep: below / at / straddling / above every blocking and lane
+/// boundary (4-row blocks; 4-wide f64 / 8-wide f32 lanes; odd tails).
+const SHAPES: [(usize, usize); 12] = [
+    (0, 0),
+    (0, 5),
+    (1, 1),
+    (1, 7),
+    (3, 4),
+    (4, 4),
+    (4, 5),
+    (5, 3),
+    (7, 9),
+    (8, 8),
+    (13, 11),
+    (17, 23),
+];
+
+#[test]
+fn dot_axpy_parity_all_lengths() {
+    for len in [0usize, 1, 2, 3, 4, 5, 7, 8, 9, 15, 16, 17, 31, 33, 64, 100, 1023] {
+        let x = filled(len, 2 * len as u64 + 1);
+        let y = filled(len, 3 * len as u64 + 5);
+        let d = kernels::dot(&x, &y);
+        let dref = scalar::dot(&x, &y);
+        check(&format!("dot len {len}"), &[d], &[dref], 1e-12);
+
+        let mut ya = y.clone();
+        let mut yr = y.clone();
+        kernels::axpy(-0.77, &x, &mut ya);
+        scalar::axpy(-0.77, &x, &mut yr);
+        check(&format!("axpy len {len}"), &ya, &yr, 1e-12);
+    }
+}
+
+#[test]
+fn matvec_family_parity_all_shapes() {
+    for &(r, c) in &SHAPES {
+        let a = filled(r * c, (r * 31 + c) as u64 + 1);
+        let x = filled(c, (r + c * 7) as u64 + 2);
+        let xr = filled(r, (r * 13 + c) as u64 + 3);
+
+        let mut y = vec![0.0; r];
+        let mut yref = vec![0.0; r];
+        kernels::matvec(&a, r, c, &x, &mut y);
+        scalar::matvec(&a, r, c, &x, &mut yref);
+        check(&format!("matvec {r}x{c}"), &y, &yref, 1e-12);
+
+        let mut t = filled(c, 99);
+        let mut tref = t.clone();
+        kernels::tr_matvec_axpy(&a, r, c, &xr, -0.3, &mut t);
+        scalar::tr_matvec_axpy(&a, r, c, &xr, -0.3, &mut tref);
+        check(&format!("tr_matvec_axpy {r}x{c}"), &t, &tref, 1e-12);
+
+        let mut t2 = vec![0.0; c];
+        let mut t2ref = vec![0.0; c];
+        kernels::tr_matvec(&a, r, c, &xr, &mut t2);
+        scalar::tr_matvec(&a, r, c, &xr, &mut t2ref);
+        check(&format!("tr_matvec {r}x{c}"), &t2, &t2ref, 1e-12);
+    }
+}
+
+#[test]
+fn matmat_family_parity_all_shapes_and_widths() {
+    for &(r, c) in &SHAPES {
+        for k in [0usize, 1, 2, 3, 5, 8] {
+            let a = filled(r * c, (r * 37 + c * 5 + k) as u64 + 1);
+            let x = filled(c * k, (r + c + k * 11) as u64 + 2);
+            let xr = filled(r * k, (r * 3 + k) as u64 + 3);
+
+            let mut y = vec![0.0; r * k];
+            let mut yref = vec![0.0; r * k];
+            kernels::matmat(&a, r, c, &x, k, &mut y);
+            scalar::matmat(&a, r, c, &x, k, &mut yref);
+            check(&format!("matmat {r}x{c} k={k}"), &y, &yref, 1e-12);
+
+            let mut t = filled(c * k, 7);
+            let mut tref = t.clone();
+            kernels::tr_matmat_axpy(&a, r, c, &xr, k, 0.25, &mut t);
+            scalar::tr_matmat_axpy(&a, r, c, &xr, k, 0.25, &mut tref);
+            check(&format!("tr_matmat_axpy {r}x{c} k={k}"), &t, &tref, 1e-12);
+        }
+    }
+}
+
+#[test]
+fn syrk_parity_all_shapes() {
+    for &(r, c) in &SHAPES {
+        let a = filled(r * c, (r * 41 + c) as u64 + 1);
+        let mut g = vec![0.0; r * r];
+        let mut gref = vec![0.0; r * r];
+        kernels::syrk_rows(&a, r, c, &mut g);
+        scalar::syrk_rows(&a, r, c, &mut gref);
+        check(&format!("syrk {r}x{c}"), &g, &gref, 1e-12);
+        // symmetry is exact on every backend (the mirror is a copy)
+        for i in 0..r {
+            for j in 0..r {
+                assert_eq!(
+                    g[i * r + j].to_bits(),
+                    g[j * r + i].to_bits(),
+                    "syrk {r}x{c}: mirror must be a bit-exact copy"
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn csr_spmm_parity_vs_dense_kernels() {
+    // CSR SpMM / transpose-SpMM route through the dispatched per-row
+    // kernels; the dense GEMM on the densified matrix is the reference.
+    for &(r, c) in &SHAPES[2..] {
+        let mut coo = Coo::new(r, c);
+        let vals = filled(r * c, (r * 53 + c) as u64 + 9);
+        for i in 0..r {
+            for j in 0..c {
+                // ~40% structural fill, deterministic pattern
+                if (i * 7 + j * 3) % 5 < 2 {
+                    coo.push(i, j, vals[i * c + j]).unwrap();
+                }
+            }
+        }
+        let csr = coo.into_csr();
+        let dense = csr.to_dense();
+        for k in [1usize, 3, 8] {
+            let x = filled(c * k, (r + k) as u64 + 4);
+            let mut y = vec![0.0; r * k];
+            let mut yref = vec![0.0; r * k];
+            csr.matmat_into(&x, k, &mut y);
+            kernels::matmat(dense.as_slice(), r, c, &x, k, &mut yref);
+            check(&format!("csr matmat {r}x{c} k={k}"), &y, &yref, 1e-12);
+
+            let xr = filled(r * k, (c + k) as u64 + 5);
+            let mut t = filled(c * k, 6);
+            let mut tref = t.clone();
+            csr.tr_matmat_axpy_into(&xr, k, -0.6, &mut t);
+            kernels::tr_matmat_axpy(dense.as_slice(), r, c, &xr, k, -0.6, &mut tref);
+            check(&format!("csr tr_matmat_axpy {r}x{c} k={k}"), &t, &tref, 1e-12);
+        }
+    }
+}
+
+#[test]
+fn f32_kernel_parity() {
+    for &(r, c) in &SHAPES {
+        let a = filled32(r * c, (r * 61 + c) as u64 + 1);
+        let x = filled32(c, (r + c) as u64 + 2);
+        let xr = filled32(r, (r * 5 + c) as u64 + 3);
+
+        let mut y = vec![0.0f32; r];
+        let mut yref = vec![0.0f32; r];
+        kernels::matvec_f32(&a, r, c, &x, &mut y);
+        scalar::matvec_f32(&a, r, c, &x, &mut yref);
+        check32(&format!("matvec_f32 {r}x{c}"), &y, &yref, 2e-5);
+
+        let mut t = filled32(c, 8);
+        let mut tref = t.clone();
+        kernels::tr_matvec_axpy_f32(&a, r, c, &xr, 0.4, &mut t);
+        scalar::tr_matvec_axpy_f32(&a, r, c, &xr, 0.4, &mut tref);
+        check32(&format!("tr_matvec_axpy_f32 {r}x{c}"), &t, &tref, 2e-5);
+    }
+    for len in [0usize, 1, 7, 8, 9, 33, 257] {
+        let x = filled32(len, 11);
+        let y = filled32(len, 13);
+        check32(
+            &format!("dot_f32 len {len}"),
+            &[kernels::dot_f32(&x, &y)],
+            &[scalar::dot_f32(&x, &y)],
+            2e-5,
+        );
+        let mut ya = y.clone();
+        let mut yr = y.clone();
+        kernels::axpy_f32(1.5, &x, &mut ya);
+        scalar::axpy_f32(1.5, &x, &mut yr);
+        check32(&format!("axpy_f32 len {len}"), &ya, &yr, 2e-5);
+    }
+}
+
+#[test]
+fn random_shapes_match_naive_triple_loops() {
+    // Property-style sweep: random shapes in 1..64, dispatched kernels
+    // vs textbook triple loops (independent of both kernel code paths).
+    let mut s = 0xC0FFEEu64;
+    let mut rand = move |m: usize| {
+        s ^= s << 13;
+        s ^= s >> 7;
+        s ^= s << 17;
+        (s as usize) % m
+    };
+    for trial in 0..40 {
+        let r = 1 + rand(63);
+        let c = 1 + rand(63);
+        let k = 1 + rand(8);
+        let a = filled(r * c, trial as u64 * 7 + 1);
+        let x = filled(c * k, trial as u64 * 11 + 2);
+        let xr = filled(r, trial as u64 * 13 + 3);
+
+        let mut naive = vec![0.0; r * k];
+        for i in 0..r {
+            for j in 0..c {
+                let av = a[i * c + j];
+                for l in 0..k {
+                    naive[i * k + l] += av * x[j * k + l];
+                }
+            }
+        }
+        let mut y = vec![0.0; r * k];
+        kernels::matmat(&a, r, c, &x, k, &mut y);
+        check(&format!("trial {trial}: matmat {r}x{c} k={k} vs naive"), &y, &naive, 1e-11);
+
+        let mut naive_t = vec![0.0; c];
+        for i in 0..r {
+            for j in 0..c {
+                naive_t[j] += a[i * c + j] * xr[i];
+            }
+        }
+        let mut t = vec![0.0; c];
+        kernels::tr_matvec(&a, r, c, &xr, &mut t);
+        // naive accumulates in yet another order — tolerance on every
+        // backend, scalar included
+        for (j, (g, w)) in t.iter().zip(&naive_t).enumerate() {
+            assert!(
+                (g - w).abs() <= 1e-11 * w.abs().max(1.0),
+                "trial {trial}: tr_matvec[{j}] {g:e} vs naive {w:e}"
+            );
+        }
+    }
+}
+
+#[test]
+fn dispatch_is_stable_and_reports_a_backend() {
+    let b1 = simd::backend();
+    let b2 = simd::backend();
+    assert_eq!(b1, b2, "detection must be cached");
+    let name = simd::backend_name();
+    assert!(
+        ["scalar", "avx2+fma", "neon"].contains(&name),
+        "unexpected backend label {name:?}"
+    );
+    #[cfg(not(feature = "simd"))]
+    assert_eq!(b1, Backend::Scalar, "feature off must pin the scalar path");
+}
