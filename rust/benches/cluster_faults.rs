@@ -43,7 +43,7 @@ use apc::gen::problems::Problem;
 use apc::partition::PartitionedSystem;
 use apc::rates::SpectralInfo;
 use apc::sim::{ComputeModel, Delay, FaultPlan, LinkModel, SimConfig, SimTransport};
-use apc::solvers::{suite, Metric, SolverOptions};
+use apc::solvers::{suite, Metric, RunConfig, SolverOptions};
 use std::time::Instant;
 
 const SEED: u64 = 1;
@@ -65,10 +65,8 @@ fn bed(n: usize, m: usize, seed: u64, tol: f64) -> anyhow::Result<Bed> {
     let s = SpectralInfo::for_tuning(&sys)?;
     let method = suite::tuned_method("apc", &sys, &s)?;
     let opts = SolverOptions {
-        tol,
-        max_iter: 200_000,
+        run: RunConfig::new(tol, 200_000),
         metric: Metric::ErrorVsTruth(p.x_star),
-        ..Default::default()
     };
     Ok(Bed { sys, method, opts })
 }

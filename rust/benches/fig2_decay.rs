@@ -15,7 +15,8 @@ use apc::bench::sci;
 use apc::gen::problems::Problem;
 use apc::partition::PartitionedSystem;
 use apc::rates::SpectralInfo;
-use apc::solvers::{suite, Metric, SolverOptions};
+use apc::prelude::SolveBuilder;
+use apc::solvers::{suite, Metric, RunConfig, SolverOptions};
 
 fn main() -> anyhow::Result<()> {
     std::fs::create_dir_all("artifacts")?;
@@ -53,16 +54,14 @@ fn main() -> anyhow::Result<()> {
             let mut solver: Box<dyn apc::solvers::Solver> = if name == "admm" {
                 Box::new(apc::solvers::admm::Admm::with_params(&sys, s.lambda_max * 1e-6)?)
             } else {
-                suite::tuned_solver(name, &sys, &s)?
+                SolveBuilder::new(&sys).method(name.parse()?).spectral(s.clone()).solver()?
             };
             let t0 = std::time::Instant::now();
             let rep = solver.solve(
                 &sys,
                 &SolverOptions {
-                    tol: 1e-12,
-                    max_iter,
+                    run: RunConfig::new(1e-12, max_iter).recorded(50),
                     metric: Metric::ErrorVsTruth(built.x_star.clone()),
-                    record_every: 50,
                 },
             )?;
             println!(

@@ -43,6 +43,7 @@ use apc::partition::PartitionedSystem;
 use apc::rates::SpectralInfo;
 use apc::runtime::{Engine, Manifest, TensorArg};
 use apc::solvers::local::{AdmmLocal, ApcLocal, CimminoLocal, GradLocal};
+use apc::prelude::SolveBuilder;
 use apc::solvers::suite;
 use apc::solvers::{
     admm::Admm, apc::Apc, cimmino::Cimmino, consensus::Consensus, dgd::Dgd, hbm::Hbm, nag::Nag,
@@ -202,7 +203,7 @@ fn main() -> anyhow::Result<()> {
     let s = SpectralInfo::compute(&sys)?;
     let mut table = Table::new(&["method", "time/round", "per-machine share"]);
     for name in suite::TABLE2_ORDER {
-        let mut solver = suite::tuned_solver(name, &sys, &s)?;
+        let mut solver = SolveBuilder::new(&sys).method(name.parse()?).spectral(s.clone()).solver()?;
         let stats = bench(name, &opts, || solver.iterate(&sys));
         table.row(&[
             name.to_string(),

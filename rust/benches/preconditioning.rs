@@ -28,7 +28,8 @@ use apc::parallel;
 use apc::partition::PartitionedSystem;
 use apc::rates::{convergence_time, hbm_optimal, SpectralInfo};
 use apc::solvers::hbm::Hbm;
-use apc::solvers::{suite, Metric, Solver, SolverOptions};
+use apc::prelude::SolveBuilder;
+use apc::solvers::{suite, Metric, RunConfig, Solver, SolverOptions};
 use std::collections::BTreeMap;
 
 fn main() -> anyhow::Result<()> {
@@ -85,15 +86,10 @@ fn main() -> anyhow::Result<()> {
         let built = problem.build(3);
         let sys = PartitionedSystem::split_even(&built.a, &built.b, problem.machines)?;
         let s = SpectralInfo::compute(&sys)?;
-        let opts = SolverOptions {
-            tol: 1e-8,
-            max_iter: if smoke { 300_000 } else { 3_000_000 },
-            metric: Metric::ErrorVsTruth(built.x_star.clone()),
-            ..Default::default()
-        };
+        let opts = SolverOptions { run: RunConfig::new(1e-8, if smoke { 300_000 } else { 3_000_000 }), metric: Metric::ErrorVsTruth(built.x_star.clone()) };
         let mut iters = Vec::new();
         for name in ["hbm", "phbm", "apc"] {
-            let mut solver = suite::tuned_solver(name, &sys, &s)?;
+            let mut solver = SolveBuilder::new(&sys).method(name.parse()?).spectral(s.clone()).solver()?;
             let rep = solver.solve(&sys, &opts)?;
             iters.push(if rep.converged { rep.iterations } else { usize::MAX });
         }

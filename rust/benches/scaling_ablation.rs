@@ -25,7 +25,8 @@ use apc::gen::problems::Problem;
 use apc::partition::PartitionedSystem;
 use apc::rates::{apc_optimal, apc_rho, convergence_time, SpectralInfo};
 use apc::solvers::admm::{Admm, FullAdmm};
-use apc::solvers::{suite, Metric, Solver, SolverOptions};
+use apc::prelude::SolveBuilder;
+use apc::solvers::{suite, Metric, RunConfig, Solver, SolverOptions};
 
 fn main() -> anyhow::Result<()> {
     ablation_machine_sweep()?;
@@ -76,15 +77,10 @@ fn ablation_kappa_sweep() -> anyhow::Result<()> {
         let s = SpectralInfo::compute(&sys)?;
         let mut iters = std::collections::BTreeMap::new();
         for name in ["dgd", "cimmino", "hbm", "apc"] {
-            let mut solver = suite::tuned_solver(name, &sys, &s)?;
+            let mut solver = SolveBuilder::new(&sys).method(name.parse()?).spectral(s.clone()).solver()?;
             let rep = solver.solve(
                 &sys,
-                &SolverOptions {
-                    tol: 1e-8,
-                    max_iter: 2_000_000,
-                    metric: Metric::ErrorVsTruth(built.x_star.clone()),
-                    ..Default::default()
-                },
+                &SolverOptions { run: RunConfig::new(1e-8, 2_000_000), metric: Metric::ErrorVsTruth(built.x_star.clone()) },
             )?;
             iters.insert(
                 name,
@@ -151,12 +147,7 @@ fn ablation_momentum() -> anyhow::Result<()> {
         let mut solver = apc::solvers::apc::Apc::with_params(&sys, gamma, eta)?;
         let rep = solver.solve(
             &sys,
-            &SolverOptions {
-                tol: 1e-8,
-                max_iter: 3_000_000,
-                metric: Metric::ErrorVsTruth(built.x_star.clone()),
-                ..Default::default()
-            },
+            &SolverOptions { run: RunConfig::new(1e-8, 3_000_000), metric: Metric::ErrorVsTruth(built.x_star.clone()) },
         )?;
         table.row(&[
             label.to_string(),
@@ -209,12 +200,7 @@ fn ablation_straggler() -> anyhow::Result<()> {
         let coord = Coordinator::new(&sys, method, Backend::Native, None, straggler, 5)?;
         let dist = coord.run(
             &sys,
-            &SolverOptions {
-                tol: 0.0,
-                max_iter: 300,
-                metric: Metric::ErrorVsTruth(built.x_star.clone()),
-                ..Default::default()
-            },
+            &SolverOptions { run: RunConfig::new(0.0, 300), metric: Metric::ErrorVsTruth(built.x_star.clone()) },
         )?;
         let p50 = dist.metrics.round_time_percentile(0.5).unwrap();
         let p99 = dist.metrics.round_time_percentile(0.99).unwrap();
@@ -247,12 +233,7 @@ fn ablation_full_admm() -> anyhow::Result<()> {
     let built = Problem::with_condition("admm-abl", 64, 64, 4, 1.0e4).build(23);
     let sys = PartitionedSystem::split_even(&built.a, &built.b, 4)?;
     let s = SpectralInfo::compute(&sys)?;
-    let opts = SolverOptions {
-        tol: 1e-8,
-        max_iter: 2_000_000,
-        metric: Metric::ErrorVsTruth(built.x_star.clone()),
-        ..Default::default()
-    };
+    let opts = SolverOptions { run: RunConfig::new(1e-8, 2_000_000), metric: Metric::ErrorVsTruth(built.x_star.clone()) };
     let grid: Vec<f64> = (-6..=2).map(|e| s.lambda_max * 10f64.powi(e)).collect();
     let mut best_mod: Option<(f64, usize)> = None;
     let mut best_full: Option<(f64, usize)> = None;

@@ -1,0 +1,353 @@
+//! SERVE SLO — multi-tenant latency and throughput of the serving
+//! front-end ([`apc::serve`]) under deterministic bursty arrivals, and
+//! the arrival-window admission claim:
+//!
+//! > holding a freed lane for a short window batches near-simultaneous
+//! > arrivals into aligned cohorts — **no worse p50 service latency**
+//! > (each lane's trajectory is independent of its cohort, pinned by
+//! > `tests/stream_parity.rs`) and **strictly fewer active driver
+//! > rounds** for the same queries at burst arrivals (staggered cohorts
+//! > pay the stagger again at the tail; aligned ones don't).
+//!
+//! Protocol, two tenants sharing one prepared system:
+//!
+//!  * **poisson** schedule — exponential inter-arrival gaps from the
+//!    shared LCG stream, quantized to rounds (steady load, queue mostly
+//!    non-empty);
+//!  * **bursts** schedule — on/off traffic: every `period` rounds a
+//!    burst of `max_width` queries arrives spread over a few
+//!    consecutive rounds, then silence until the next burst (the shape
+//!    the window targets);
+//!  * each schedule runs **window-on** (`window_rounds = 4`) and
+//!    **window-off** (`window_rounds = 0`) through the identical
+//!    [`Server`] code path — only the config differs;
+//!  * reported per tenant: p50/p95/p99 latency in query-age rounds
+//!    (deterministic, gated) and wall ms (honest, machine-dependent,
+//!    never gated), queue-wait decomposition, RHS/sec;
+//!  * gated, on the bursty schedule: window-on p50 *service* rounds ≤
+//!    window-off per tenant, and window-on RHS-per-active-round
+//!    strictly greater.
+//!
+//! A final section churns a 3-system working set through a 2-system
+//! cache budget to put LRU eviction + re-preparation numbers in the
+//! same artifact. Emitted machine-readably as `BENCH_serve.json` at the
+//! repository root (provenance-stamped; see EXPERIMENTS.md §Serving).
+//!
+//! ```bash
+//! cargo bench --bench serve_slo
+//! ```
+//!
+//! Set `APC_BENCH_SMOKE=1` to shrink sizes so CI's bench-smoke job runs
+//! the target end-to-end; smoke JSON carries a `do not commit`
+//! provenance marker.
+
+use apc::bench::{jobj, provenance, smoke_mode, Table};
+use apc::config::Json;
+use apc::gen::problems::Problem;
+use apc::parallel;
+use apc::partition::PartitionedSystem;
+use apc::serve::{ServeConfig, Server, Verdict};
+use apc::solvers::RunConfig;
+use std::time::Instant;
+
+const TENANTS: [&str; 2] = ["tenant-a", "tenant-b"];
+
+/// Deterministic Poisson-ish arrival rounds (the `stream_throughput`
+/// LCG): exponential gaps with the given mean, accumulated, so every
+/// policy sees the identical schedule.
+fn poisson_schedule(q: usize, mean_gap: f64, seed: u64) -> Vec<usize> {
+    let mut s = seed;
+    let mut t = 0.0f64;
+    (0..q)
+        .map(|_| {
+            s = s.wrapping_mul(6364136223846793005).wrapping_add(1442695040888963407);
+            let u = (((s >> 11) as f64 / (1u64 << 53) as f64) + 1e-12).min(1.0);
+            t += -u.ln() * mean_gap;
+            t.floor() as usize
+        })
+        .collect()
+}
+
+/// On/off bursts: `bursts` bursts of `width` queries, each spread over
+/// `spread + 1` consecutive rounds, `period` rounds apart. The spread
+/// is the point: these are the near-simultaneous arrivals a greedy
+/// admission staggers and a window aligns.
+fn burst_schedule(bursts: usize, width: usize, spread: usize, period: usize) -> Vec<usize> {
+    let mut arrivals = Vec::with_capacity(bursts * width);
+    for b in 0..bursts {
+        for j in 0..width {
+            arrivals.push(b * period + (j * (spread + 1)) / width);
+        }
+    }
+    arrivals
+}
+
+/// Planted per-query right-hand sides.
+fn queries(a: &apc::linalg::Mat, q: usize) -> Vec<Vec<f64>> {
+    (0..q)
+        .map(|j| {
+            let x: Vec<f64> =
+                (0..a.cols()).map(|i| ((i * (j + 3)) as f64 * 0.037).sin()).collect();
+            a.matvec(&x)
+        })
+        .collect()
+}
+
+/// Burst right-hand sides: distinct across bursts, identical within a
+/// burst, so every cohort member needs the same service rounds and the
+/// active-round comparison isolates pure admission alignment (a
+/// staggered cohort's span is its stagger plus the shared service
+/// time; an aligned cohort's is the service time alone).
+fn burst_queries(a: &apc::linalg::Mat, bursts: usize, width: usize) -> Vec<Vec<f64>> {
+    let per_burst = queries(a, bursts);
+    (0..bursts * width).map(|j| per_burst[j / width].clone()).collect()
+}
+
+/// Replay one arrival schedule against a fresh server; tenants
+/// alternate per query. Returns the drained server and the replay's
+/// wall span.
+fn drive(
+    sys: &PartitionedSystem,
+    cfg: ServeConfig,
+    arrivals: &[usize],
+    rhs: &[Vec<f64>],
+) -> anyhow::Result<(Server, f64)> {
+    let mut server = Server::new(cfg);
+    let start = Instant::now();
+    let mut next = 0usize;
+    while next < arrivals.len() || !server.is_idle() {
+        while next < arrivals.len() && arrivals[next] <= server.round() {
+            let load_sys = sys.clone();
+            let verdict = server.submit(
+                "bench-sys",
+                TENANTS[next % TENANTS.len()],
+                rhs[next].clone(),
+                move || Ok(load_sys),
+            )?;
+            if !matches!(verdict, Verdict::Queued { .. }) {
+                anyhow::bail!("bench schedule overloaded the server: {verdict:?}");
+            }
+            next += 1;
+        }
+        server.tick()?;
+    }
+    Ok((server, start.elapsed().as_secs_f64()))
+}
+
+/// Whole-run figures: completions summed over tenants, and the
+/// round-denominated throughput the window gate compares.
+fn totals(server: &Server) -> (usize, f64) {
+    let completed: usize = TENANTS
+        .iter()
+        .filter_map(|t| server.metrics().summary(t))
+        .map(|s| s.completed)
+        .sum();
+    let rhs_per_active_round = if server.active_rounds() == 0 {
+        0.0
+    } else {
+        completed as f64 / server.active_rounds() as f64
+    };
+    (completed, rhs_per_active_round)
+}
+
+fn run_json(server: &Server, elapsed: f64) -> Json {
+    let (completed, rhs_per_active_round) = totals(server);
+    let cache = server.cache_stats();
+    jobj(vec![
+        ("tenants", server.metrics().to_json(elapsed)),
+        ("completed", Json::Num(completed as f64)),
+        ("total_rounds", Json::Num(server.round() as f64)),
+        ("active_rounds", Json::Num(server.active_rounds() as f64)),
+        ("rhs_per_active_round", Json::Num(rhs_per_active_round)),
+        ("elapsed_secs", Json::Num(elapsed)),
+        ("cache_prepares", Json::Num(cache.prepares as f64)),
+    ])
+}
+
+fn main() -> anyhow::Result<()> {
+    let smoke = smoke_mode();
+    if smoke {
+        println!("[APC_BENCH_SMOKE] reduced sizes; JSON is artifact-only\n");
+    }
+    let (rows, n, m) = if smoke { (120, 60, 4) } else { (600, 300, 8) };
+    let max_width = if smoke { 4 } else { 8 };
+    let n_bursts = if smoke { 2 } else { 4 };
+    let burst_spread = 3; // arrivals per burst land on spread+1 = 4 rounds
+    let burst_period = if smoke { 300 } else { 400 };
+    let poisson_q = if smoke { 8 } else { 24 };
+    let window_rounds = 4;
+    let tol = 1e-8;
+
+    println!(
+        "=== serve SLO: two tenants, one system (N={rows}, n={n}, m={m}, \
+         width={max_width}, {} threads) ===\n",
+        parallel::global().threads()
+    );
+    let p = Problem::standard_gaussian(rows, n, m).build(29);
+    let sys = PartitionedSystem::split_even(&p.a, &p.b, m)?;
+    let cfg = |window_rounds: usize| ServeConfig {
+        run: RunConfig::new(tol, 50_000),
+        max_width,
+        window_rounds,
+        queue_depth: 10_000, // the SLO runs measure latency, not overload
+        cache_bytes: 1 << 30,
+        ..ServeConfig::default()
+    };
+
+    let schedules: Vec<(&str, Vec<usize>, Vec<Vec<f64>>)> = vec![
+        ("poisson", poisson_schedule(poisson_q, 1.0, 0x5e12), queries(&p.a, poisson_q)),
+        (
+            "bursts",
+            burst_schedule(n_bursts, max_width, burst_spread, burst_period),
+            burst_queries(&p.a, n_bursts, max_width),
+        ),
+    ];
+
+    let mut table = Table::new(&[
+        "schedule",
+        "window",
+        "tenant",
+        "p50 svc",
+        "p50 lat",
+        "p99 lat",
+        "mean queue",
+        "RHS/s",
+        "RHS/active-round",
+    ]);
+    let mut schedules_json = Vec::new();
+    for (name, arrivals, rhs) in &schedules {
+        let (on, on_secs) = drive(&sys, cfg(window_rounds), arrivals, rhs)?;
+        let (off, off_secs) = drive(&sys, cfg(0), arrivals, rhs)?;
+        for (label, server, elapsed) in
+            [("on", &on, on_secs), ("off", &off, off_secs)]
+        {
+            let (_, rpar) = totals(server);
+            for tenant in TENANTS {
+                let s = server.metrics().summary(tenant).expect("tenant served");
+                assert_eq!(s.unconverged, 0, "{name}/{label}/{tenant}: unconverged queries");
+                assert_eq!(s.rejected, 0, "{name}/{label}/{tenant}: unexpected rejection");
+                table.row(&[
+                    name.to_string(),
+                    label.to_string(),
+                    tenant.to_string(),
+                    format!("{:.0}", s.service_rounds.p50),
+                    format!("{:.0}", s.latency_rounds.p50),
+                    format!("{:.0}", s.latency_rounds.p99),
+                    format!("{:.1}", s.mean_queue_rounds),
+                    format!("{:.0}", s.completed as f64 / elapsed),
+                    format!("{:.3}", rpar),
+                ]);
+            }
+        }
+        // The deterministic window gates, on the schedule they target:
+        // near-simultaneous burst arrivals.
+        if *name == "bursts" {
+            let (_, on_rpar) = totals(&on);
+            let (_, off_rpar) = totals(&off);
+            for tenant in TENANTS {
+                let s_on = on.metrics().summary(tenant).unwrap();
+                let s_off = off.metrics().summary(tenant).unwrap();
+                assert!(
+                    s_on.service_rounds.p50 <= s_off.service_rounds.p50,
+                    "{tenant}: window-on p50 service rounds regressed \
+                     ({} vs {})",
+                    s_on.service_rounds.p50,
+                    s_off.service_rounds.p50
+                );
+            }
+            assert!(
+                on_rpar > off_rpar,
+                "window-on must finish the same bursts in strictly fewer active \
+                 rounds ({on_rpar:.3} vs {off_rpar:.3} RHS/active-round)"
+            );
+        }
+        schedules_json.push((
+            name.to_string(),
+            jobj(vec![
+                ("arrivals", Json::Arr(arrivals.iter().map(|&r| Json::Num(r as f64)).collect())),
+                ("window_on", run_json(&on, on_secs)),
+                ("window_off", run_json(&off, off_secs)),
+            ]),
+        ));
+    }
+    println!("{}", table.render());
+    println!(
+        "service rounds (query-age) are window-invariant — each lane's trajectory is\n\
+         independent of its cohort — so the window's cost is queue-wait only, and its\n\
+         return is alignment: fewer active rounds for the same bursts.\n"
+    );
+
+    // -- cache churn: 3 systems through a 2-system budget -----------------
+    let churn_systems: Vec<(String, PartitionedSystem, Vec<f64>)> = (0..3)
+        .map(|i| {
+            let cp = Problem::standard_gaussian(40, 20, 2).build(100 + i as u64);
+            let csys = PartitionedSystem::split_even(&cp.a, &cp.b, 2).unwrap();
+            (format!("churn-{i}"), csys, cp.b.clone())
+        })
+        .collect();
+    let per_system_bytes = 8 * (40 * 20 + 40);
+    let mut churn_cfg = cfg(0);
+    churn_cfg.cache_bytes = 2 * per_system_bytes;
+    let mut churn = Server::new(churn_cfg);
+    let churn_cycles = 2;
+    for _ in 0..churn_cycles {
+        for (id, csys, rhs) in &churn_systems {
+            let load_sys = csys.clone();
+            match churn.submit(id, "tenant-a", rhs.clone(), move || Ok(load_sys))? {
+                Verdict::Queued { .. } => {}
+                v => anyhow::bail!("churn submission rejected: {v:?}"),
+            }
+            churn.run_until_idle()?;
+        }
+    }
+    let churn_stats = churn.cache_stats();
+    println!(
+        "cache churn: {} prepares / {} hits / {} evictions over {} queries on 3 \
+         systems, budget 2\n",
+        churn_stats.prepares,
+        churn_stats.hits,
+        churn_stats.evictions,
+        churn_cycles * churn_systems.len()
+    );
+    assert!(churn_stats.evictions > 0, "churn working set must exceed the budget");
+
+    let json = jobj(vec![
+        ("bench", Json::Str("serve_slo".into())),
+        (
+            "config",
+            jobj(vec![
+                ("rows", Json::Num(rows as f64)),
+                ("n", Json::Num(n as f64)),
+                ("m", Json::Num(m as f64)),
+                ("serve", cfg(window_rounds).to_json()),
+                ("burst_spread_rounds", Json::Num(burst_spread as f64 + 1.0)),
+                ("burst_period", Json::Num(burst_period as f64)),
+                ("n_bursts", Json::Num(n_bursts as f64)),
+                ("poisson_queries", Json::Num(poisson_q as f64)),
+                ("tenants", Json::Arr(TENANTS.iter().map(|&t| Json::Str(t.into())).collect())),
+                ("threads", Json::Num(parallel::global().threads() as f64)),
+                ("smoke", Json::Bool(smoke)),
+            ]),
+        ),
+        (
+            "provenance",
+            Json::Str(provenance("cargo bench --bench serve_slo", parallel::global().threads())),
+        ),
+        ("schedules", Json::Obj(schedules_json.into_iter().collect())),
+        (
+            "cache_churn",
+            jobj(vec![
+                ("systems", Json::Num(3.0)),
+                ("budget_systems", Json::Num(2.0)),
+                ("queries", Json::Num((churn_cycles * churn_systems.len()) as f64)),
+                ("prepares", Json::Num(churn_stats.prepares as f64)),
+                ("hits", Json::Num(churn_stats.hits as f64)),
+                ("evictions", Json::Num(churn_stats.evictions as f64)),
+            ]),
+        ),
+    ]);
+    let json_path = concat!(env!("CARGO_MANIFEST_DIR"), "/../BENCH_serve.json");
+    std::fs::write(json_path, json.to_string_pretty() + "\n")?;
+    println!("wrote {}", json_path);
+    Ok(())
+}

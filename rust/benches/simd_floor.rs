@@ -39,7 +39,8 @@ use apc::linalg::kernels;
 use apc::linalg::simd::{self, Backend};
 use apc::partition::PartitionedSystem;
 use apc::rates::SpectralInfo;
-use apc::solvers::{suite, Precision, Solver};
+use apc::prelude::SolveBuilder;
+use apc::solvers::{Precision, Solver};
 use std::time::Instant;
 
 /// Deterministic fill (xorshift64*), same generator the kernel tests use.
@@ -233,13 +234,19 @@ fn main() -> anyhow::Result<()> {
         let mut table =
             Table::new(&["solver", "scalar/round", "simd/round", "mixed(+IR)/round", "best speedup"]);
         for name in ["apc", "hbm"] {
-            let mut f64_solver = suite::tuned_solver(name, &bedr.sys, &bedr.s)?;
+            let mut f64_solver = SolveBuilder::new(&bedr.sys)
+                .method(name.parse()?)
+                .spectral(bedr.s.clone())
+                .solver()?;
             let scalar_s = with_backend(Backend::Scalar, || {
                 time_rounds(f64_solver.as_mut(), &bedr.sys, warm, reps)
             });
             let simd_s = time_rounds(f64_solver.as_mut(), &bedr.sys, warm, reps);
-            let mut mixed =
-                suite::tuned_solver_prec(name, &bedr.sys, &bedr.s, Precision::default_mixed())?;
+            let mut mixed = SolveBuilder::new(&bedr.sys)
+                .method(name.parse()?)
+                .spectral(bedr.s.clone())
+                .precision(Precision::default_mixed())
+                .solver()?;
             let mixed_s = time_rounds(mixed.as_mut(), &bedr.sys, warm, reps);
             table.row(&[
                 f64_solver.name().to_string(),

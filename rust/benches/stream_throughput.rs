@@ -41,6 +41,7 @@ use apc::partition::PartitionedSystem;
 use apc::rates::{apc_optimal, SpectralInfo};
 use apc::solvers::batch::ApcBatch;
 use apc::solvers::stream::{Admission, StreamOptions, StreamReport, StreamingBatch};
+use apc::solvers::RunConfig;
 
 /// Deterministic Poisson-ish arrival rounds: exponential inter-arrival
 /// gaps with the given mean, drawn from the shared LCG stream and
@@ -82,7 +83,7 @@ fn drive(
     admission: Admission,
 ) -> StreamReport {
     let engine = ApcBatch::new(sys, &[], gamma, eta).expect("empty engine");
-    let opts = StreamOptions { max_width, tol, admission, ..Default::default() };
+    let opts = StreamOptions { max_width, run: RunConfig { tol, ..RunConfig::default() }, admission };
     let mut stream = StreamingBatch::new(engine, sys, opts, "APC").expect("driver");
     let mut next = 0usize;
     while next < rhs.len() || !stream.is_drained() {

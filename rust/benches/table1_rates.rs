@@ -15,7 +15,8 @@ use apc::bench::{sci, Table};
 use apc::gen::problems::Problem;
 use apc::partition::PartitionedSystem;
 use apc::rates::{convergence_time, SpectralInfo};
-use apc::solvers::{fit_decay_rate, suite, Metric, SolverOptions};
+use apc::prelude::SolveBuilder;
+use apc::solvers::{fit_decay_rate, suite, Metric, RunConfig, SolverOptions};
 
 fn main() -> anyhow::Result<()> {
     // reference system: big enough to have a meaningful spectrum, small
@@ -46,16 +47,11 @@ fn main() -> anyhow::Result<()> {
     for (name, fml) in formula {
         let rho = suite::analytic_rho(name, &sys, &s)?;
         // measure the decay empirically at optimal tuning
-        let mut solver = suite::tuned_solver(name, &sys, &s)?;
+        let mut solver = SolveBuilder::new(&sys).method(name.parse()?).spectral(s.clone()).solver()?;
         let iters = (10.0 * convergence_time(rho)).clamp(400.0, 500_000.0) as usize;
         let rep = solver.solve(
             &sys,
-            &SolverOptions {
-                tol: 1e-13,
-                max_iter: iters,
-                metric: Metric::ErrorVsTruth(built.x_star.clone()),
-                record_every: (iters / 2000).max(1),
-            },
+            &SolverOptions { run: RunConfig::new(1e-13, iters).recorded((iters / 2000).max(1)), metric: Metric::ErrorVsTruth(built.x_star.clone()) },
         )?;
         let measured = fit_decay_rate(&rep.history).unwrap_or(f64::NAN);
         table.row(&[

@@ -10,4 +10,11 @@ pub mod json;
 pub mod run;
 
 pub use json::Json;
-pub use run::{Backend, RunConfig};
+pub use run::{Backend, RunSpec};
+
+/// Renamed: the CLI run *specification* (problem/solver/backend choice) is
+/// [`RunSpec`]; the shared convergence policy (tol / max rounds / history
+/// cadence) is [`crate::solvers::RunConfig`], embedded by every options
+/// type.
+#[deprecated(note = "renamed to RunSpec; the convergence policy is solvers::RunConfig")]
+pub type RunConfig = RunSpec;

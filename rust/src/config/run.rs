@@ -1,4 +1,4 @@
-//! Run configuration shared by the CLI, the coordinator, examples, and
+//! Run specification shared by the CLI, the coordinator, examples, and
 //! benches.
 
 use anyhow::{bail, Result};
@@ -27,7 +27,7 @@ impl std::str::FromStr for Backend {
 
 /// Everything a `solve` run needs.
 #[derive(Clone, Debug)]
-pub struct RunConfig {
+pub struct RunSpec {
     /// Problem name from the built-in suite, or a path to a `.mtx` file.
     pub problem: String,
     /// Number of machines/workers.
@@ -47,9 +47,9 @@ pub struct RunConfig {
     pub distributed: bool,
 }
 
-impl Default for RunConfig {
+impl Default for RunSpec {
     fn default() -> Self {
-        RunConfig {
+        RunSpec {
             problem: "standard-gaussian-500".into(),
             machines: 10,
             solver: "apc".into(),
@@ -66,7 +66,7 @@ impl Default for RunConfig {
 
 /// Parse `key=value` overrides (the config-file format: one pair per line,
 /// `#` comments). CLI flags map onto the same keys.
-impl RunConfig {
+impl RunSpec {
     pub fn apply_kv(&mut self, key: &str, value: &str) -> Result<()> {
         match key {
             "problem" => self.problem = value.to_string(),
@@ -93,7 +93,7 @@ impl RunConfig {
 
     /// Parse a config file of `key=value` lines.
     pub fn from_file(path: &str) -> Result<Self> {
-        let mut cfg = RunConfig::default();
+        let mut cfg = RunSpec::default();
         let text = std::fs::read_to_string(path)?;
         for (lineno, line) in text.lines().enumerate() {
             let line = line.trim();
@@ -122,7 +122,7 @@ mod tests {
 
     #[test]
     fn kv_overrides() {
-        let mut c = RunConfig::default();
+        let mut c = RunSpec::default();
         c.apply_kv("machines", "4").unwrap();
         c.apply_kv("tol", "1e-6").unwrap();
         c.apply_kv("backend", "hlo").unwrap();
@@ -140,7 +140,7 @@ mod tests {
         std::fs::create_dir_all(&dir).unwrap();
         let path = dir.join("run.conf");
         std::fs::write(&path, "# comment\nsolver = hbm\nmachines=7\n\ntol = 1e-9\n").unwrap();
-        let c = RunConfig::from_file(path.to_str().unwrap()).unwrap();
+        let c = RunSpec::from_file(path.to_str().unwrap()).unwrap();
         assert_eq!(c.solver, "hbm");
         assert_eq!(c.machines, 7);
         assert_eq!(c.tol, 1e-9);

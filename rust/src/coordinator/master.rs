@@ -19,7 +19,7 @@ use crate::linalg::vector::relative_error;
 use crate::partition::PartitionedSystem;
 use crate::runtime::Manifest;
 use crate::solvers::local::master_momentum_average;
-use crate::solvers::{Metric, SolveReport, SolverOptions};
+use crate::solvers::{Metric, RunConfig, SolveReport, SolverOptions};
 use anyhow::{bail, Context, Result};
 use std::sync::Arc;
 use std::time::Instant;
@@ -458,29 +458,30 @@ impl Coordinator {
                 Metric::ErrorVsTruth(xs) => relative_error(xbar, xs),
             }
         };
+        let run = opts.run;
         let mut metrics = RunMetrics { worker_compute_ns: vec![0; self.m], ..Default::default() };
         let wall0 = Instant::now();
         let clock0 = self.transport_mut().now_us();
         let mut history = Vec::new();
         let mut err = eval(self.estimate());
-        if opts.record_every > 0 {
+        if run.record_every > 0 {
             history.push((0usize, err));
         }
         let mut it = 0usize;
-        while it < opts.max_iter && !(err <= opts.tol) && err.is_finite() && err < 1e15 {
+        while it < run.max_iter && !(err <= run.tol) && err.is_finite() && err < 1e15 {
             let t_round = Instant::now();
             self.round(&mut metrics)?;
             metrics.round_times_us.push(t_round.elapsed().as_micros() as u64);
             it += 1;
             err = eval(self.estimate());
-            if opts.record_every > 0 && it % opts.record_every == 0 {
+            if run.record_every > 0 && it % run.record_every == 0 {
                 history.push((it, err));
             }
         }
         // terminal sample on a metric stop (sub-tol / diverged), even off
         // the record_every cadence — the Solver::solve recording contract
-        if opts.record_every > 0
-            && (err <= opts.tol || !err.is_finite() || err >= 1e15)
+        if run.record_every > 0
+            && (err <= run.tol || !err.is_finite() || err >= 1e15)
             && history.last().map(|&(i, _)| i) != Some(it)
         {
             history.push((it, err));
@@ -492,7 +493,7 @@ impl Coordinator {
         let report = SolveReport {
             solver: self.method.name(),
             iterations: it,
-            converged: err <= opts.tol,
+            converged: err <= run.tol,
             final_error: err,
             history,
             solution: self.estimate().to_vec(),
@@ -540,12 +541,7 @@ mod tests {
         let s = SpectralInfo::compute(&sys).unwrap();
         let params = apc_optimal(s.mu_min, s.mu_max).unwrap();
 
-        let opts = SolverOptions {
-            tol: 0.0,
-            max_iter: 40,
-            metric: Metric::ErrorVsTruth(xstar),
-            ..Default::default()
-        };
+        let opts = SolverOptions { run: RunConfig::new(0.0, 40), metric: Metric::ErrorVsTruth(xstar) };
         let coord = Coordinator::new(
             &sys,
             Method::Apc { gamma: params.gamma, eta: params.eta },
@@ -570,12 +566,7 @@ mod tests {
         let s = SpectralInfo::compute(&sys).unwrap();
         let (alpha, beta, _) = hbm_optimal(s.lambda_min, s.lambda_max);
 
-        let opts = SolverOptions {
-            tol: 0.0,
-            max_iter: 60,
-            metric: Metric::ErrorVsTruth(xstar),
-            ..Default::default()
-        };
+        let opts = SolverOptions { run: RunConfig::new(0.0, 60), metric: Metric::ErrorVsTruth(xstar) };
         let dist = Coordinator::new(
             &sys,
             Method::Hbm { alpha, beta },
@@ -601,12 +592,7 @@ mod tests {
         let s = SpectralInfo::compute(&sys).unwrap();
         let params = apc_optimal(s.mu_min, s.mu_max).unwrap();
         let method = Method::Apc { gamma: params.gamma, eta: params.eta };
-        let opts = SolverOptions {
-            tol: 1e-9,
-            max_iter: 5_000,
-            metric: Metric::ErrorVsTruth(xstar),
-            ..Default::default()
-        };
+        let opts = SolverOptions { run: RunConfig::new(1e-9, 5_000), metric: Metric::ErrorVsTruth(xstar) };
         let cfg = SimConfig {
             faults: FaultPlan {
                 straggler: Some(StragglerSpec { prob: 0.2, delay_us: 200 }),
@@ -646,12 +632,7 @@ mod tests {
             Method::Admm { xi: 0.5 },
         ];
         for method in methods {
-            let opts = SolverOptions {
-                tol: 1e-6,
-                max_iter: 2_000_000,
-                metric: Metric::ErrorVsTruth(xstar.clone()),
-                ..Default::default()
-            };
+            let opts = SolverOptions { run: RunConfig::new(1e-6, 2_000_000), metric: Metric::ErrorVsTruth(xstar.clone()) };
             let dist = Coordinator::new(&sys, method, Backend::Native, None, None, 3)
                 .unwrap()
                 .run(&sys, &opts)
@@ -669,12 +650,7 @@ mod tests {
     #[test]
     fn metrics_account_for_traffic() {
         let (sys, xstar) = build(20, 4, 79);
-        let opts = SolverOptions {
-            tol: 0.0,
-            max_iter: 10,
-            metric: Metric::ErrorVsTruth(xstar),
-            ..Default::default()
-        };
+        let opts = SolverOptions { run: RunConfig::new(0.0, 10), metric: Metric::ErrorVsTruth(xstar) };
         let dist = Coordinator::new(
             &sys,
             Method::Consensus,
@@ -763,12 +739,7 @@ mod tests {
             QuorumConfig::barrier(),
         )
         .unwrap();
-        let opts = SolverOptions {
-            tol: 1e-9,
-            max_iter: 10,
-            metric: Metric::ErrorVsTruth(xstar),
-            ..Default::default()
-        };
+        let opts = SolverOptions { run: RunConfig::new(1e-9, 10), metric: Metric::ErrorVsTruth(xstar) };
         let err = coord.run(&sys, &opts);
         assert!(err.is_err(), "transport failure must propagate");
         assert!(
@@ -792,12 +763,7 @@ mod tests {
         let s = SpectralInfo::compute(&sys).unwrap();
         let params = apc_optimal(s.mu_min, s.mu_max).unwrap();
         let method = Method::Apc { gamma: params.gamma, eta: params.eta };
-        let opts = SolverOptions {
-            tol: 0.0,
-            max_iter: 15,
-            metric: Metric::ErrorVsTruth(problem.x_star.clone()),
-            ..Default::default()
-        };
+        let opts = SolverOptions { run: RunConfig::new(0.0, 15), metric: Metric::ErrorVsTruth(problem.x_star.clone()) };
         let hlo = Coordinator::new(&sys, method, Backend::Hlo, Some(&manifest), None, 1)
             .unwrap()
             .run(&sys, &opts)

@@ -35,7 +35,12 @@
 //! * the system: [`coordinator`] (L3, transport-agnostic quorum rounds),
 //!   [`sim`] (discrete-event cluster simulator: virtual-time faults,
 //!   stragglers, crash/recovery at thousands of machines), [`runtime`]
-//!   (PJRT bridge to the L2/L1 artifacts built by `python/compile/`)
+//!   (PJRT bridge to the L2/L1 artifacts built by `python/compile/`),
+//!   [`serve`] (the multi-tenant serving front-end: prepared-system LRU
+//!   cache, arrival-window admission, per-tenant SLO accounting)
+//! * the API: [`prelude`] re-exports the single construction entry
+//!   point, [`solvers::builder::SolveBuilder`] — method × precision ×
+//!   batch × streaming in one place
 
 pub mod bench;
 pub mod cli;
@@ -47,9 +52,11 @@ pub mod mm;
 pub mod parallel;
 pub mod partition;
 pub mod precond;
+pub mod prelude;
 pub mod proptest;
 pub mod rates;
 pub mod runtime;
+pub mod serve;
 pub mod sim;
 pub mod solvers;
 pub mod sparse;

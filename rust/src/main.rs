@@ -4,6 +4,7 @@
 //! apc solve   --problem orsirr1 --solver apc --machines 10 [--backend hlo]
 //! apc rates   --problem qc324 --machines 12           # Table-1 style report
 //! apc decay   --problem qc324 --machines 12 --out fig2.csv
+//! apc serve   --problem gauss500 --queries 64 [--config serve.json]
 //! apc info    [--artifacts-dir artifacts]             # artifact inventory
 //! ```
 //!
@@ -14,13 +15,15 @@
 use anyhow::{bail, Context, Result};
 use apc::bench::{sci, Table};
 use apc::cli::{Args, Command, OptSpec};
-use apc::config::{Backend, RunConfig};
+use apc::config::{Backend, RunSpec};
 use apc::coordinator::{Coordinator, StragglerSpec};
 use apc::gen::problems::Problem;
 use apc::partition::PartitionedSystem;
 use apc::rates::{convergence_time, SpectralInfo};
 use apc::runtime::Manifest;
-use apc::solvers::{suite, Metric, SolverOptions};
+use apc::prelude::SolveBuilder;
+use apc::serve::{ServeConfig, Server, Verdict};
+use apc::solvers::{suite, Metric, RunConfig, SolverOptions};
 
 fn main() {
     let argv: Vec<String> = std::env::args().skip(1).collect();
@@ -43,6 +46,7 @@ fn run(argv: &[String]) -> Result<()> {
         "solve" => cmd_solve(rest),
         "rates" => cmd_rates(rest),
         "decay" => cmd_decay(rest),
+        "serve" => cmd_serve(rest),
         "info" => cmd_info(rest),
         "--version" | "version" => {
             println!("apc {}", apc::VERSION);
@@ -63,6 +67,7 @@ fn print_global_usage() {
          solve   run one solver on one problem (distributed by default)\n  \
          rates   analytical convergence report (Table-1/Table-2 numbers)\n  \
          decay   error-decay series for all methods (Figure-2 data)\n  \
+         serve   replay a multi-tenant query schedule through the serving front-end\n  \
          info    artifact inventory\n\n\
          `apc <subcommand> --help`-style usage is printed on any bad flag.",
         apc::VERSION
@@ -105,9 +110,9 @@ fn cmd_solve(argv: &[String]) -> Result<()> {
     let args = cmd.parse(argv)?;
 
     // config file is a base layer under the CLI
-    let mut cfg = RunConfig::default();
+    let mut cfg = RunSpec::default();
     if let Some(path) = args.get("config").filter(|s| !s.is_empty()) {
-        cfg = RunConfig::from_file(path)?;
+        cfg = RunSpec::from_file(path)?;
     }
     let _ = &cfg; // CLI values below take precedence; cfg kept for defaults
 
@@ -134,10 +139,13 @@ fn cmd_solve(argv: &[String]) -> Result<()> {
         sci(spectral.kappa_x())
     );
 
-    let solve_opts = SolverOptions { tol, max_iter, metric: Metric::Residual, record_every: 0 };
+    let solve_opts = SolverOptions { run: RunConfig::new(tol, max_iter), metric: Metric::Residual };
 
     if args.flag("single-process") {
-        let mut solver = suite::tuned_solver(solver_name, &sys, &spectral)?;
+        let mut solver = SolveBuilder::new(&sys)
+            .method(solver_name.parse()?)
+            .spectral(spectral.clone())
+            .solver()?;
         let t0 = std::time::Instant::now();
         let rep = solver.solve(&sys, &solve_opts)?;
         report_single(&rep, t0.elapsed(), &built.x_star);
@@ -245,15 +253,13 @@ fn cmd_decay(argv: &[String]) -> Result<()> {
 
     let mut series: Vec<(String, Vec<(usize, f64)>)> = Vec::new();
     for name in suite::TABLE2_ORDER {
-        let mut solver = suite::tuned_solver(name, &sys, &spectral)?;
+        let mut solver = SolveBuilder::new(&sys)
+            .method(name.parse()?)
+            .spectral(spectral.clone())
+            .solver()?;
         let rep = solver.solve(
             &sys,
-            &SolverOptions {
-                tol: 1e-14,
-                max_iter: iters,
-                metric: Metric::ErrorVsTruth(built.x_star.clone()),
-                record_every: 1,
-            },
+            &SolverOptions { run: RunConfig::new(1e-14, iters).recorded(1), metric: Metric::ErrorVsTruth(built.x_star.clone()) },
         )?;
         println!("{:<12} final {:.2e} after {}", rep.solver, rep.final_error, rep.iterations);
         series.push((rep.solver.to_string(), rep.history));
@@ -283,6 +289,128 @@ fn cmd_decay(argv: &[String]) -> Result<()> {
     }
     std::fs::write(out, csv).with_context(|| format!("writing {:?}", out))?;
     println!("wrote {}", out);
+    Ok(())
+}
+
+fn cmd_serve(argv: &[String]) -> Result<()> {
+    let mut opts = common_opts();
+    opts.extend([
+        OptSpec {
+            key: "config",
+            help: "serve config JSON: method/tol/max_iter/max_width/window_rounds/queue_depth/cache_bytes",
+            default: Some(""),
+        },
+        OptSpec { key: "queries", help: "queries in the demo schedule", default: Some("32") },
+        OptSpec { key: "tenants", help: "tenants sharing the system", default: Some("2") },
+    ]);
+    let cmd = Command {
+        name: "serve",
+        about: "replay a deterministic multi-tenant query schedule through apc::serve",
+        opts,
+    };
+    let args = cmd.parse(argv)?;
+    let cfg = match args.get("config").filter(|s| !s.is_empty()) {
+        Some(path) => ServeConfig::from_file(path)?,
+        None => ServeConfig::default(),
+    };
+    let (problem, built, sys) = build_problem(&args)?;
+    let queries: usize = args.get_parse("queries")?;
+    let tenants: usize = args.get_parse("tenants")?;
+    if tenants == 0 {
+        bail!("serve: need at least one tenant");
+    }
+    println!(
+        "serving {} ({}x{}, m={}) with {}: width {}, window {} rounds, \
+         queue depth {}/tenant, cache {}",
+        problem.name,
+        problem.n_rows,
+        problem.n_cols,
+        sys.m(),
+        cfg.method,
+        cfg.max_width,
+        cfg.window_rounds,
+        cfg.queue_depth,
+        human_bytes(cfg.cache_bytes as u64),
+    );
+
+    // deterministic Poisson-ish arrivals (the serve_slo bench LCG),
+    // planted solutions so convergence is checked against ground truth
+    let seed: u64 = args.get_parse("seed")?;
+    let mut lcg = seed | 1;
+    let mut t = 0.0f64;
+    let arrivals: Vec<usize> = (0..queries)
+        .map(|_| {
+            lcg = lcg.wrapping_mul(6364136223846793005).wrapping_add(1442695040888963407);
+            let u = (((lcg >> 11) as f64 / (1u64 << 53) as f64) + 1e-12).min(1.0);
+            t += -u.ln();
+            t.floor() as usize
+        })
+        .collect();
+    let rhs: Vec<Vec<f64>> = (0..queries)
+        .map(|j| {
+            let x: Vec<f64> = (0..problem.n_cols)
+                .map(|i| ((i * (j + 3)) as f64 * 0.037).sin())
+                .collect();
+            built.a.matvec(&x)
+        })
+        .collect();
+
+    let mut server = Server::new(cfg);
+    let t0 = std::time::Instant::now();
+    let mut next = 0usize;
+    let mut rejected = 0usize;
+    while next < arrivals.len() || !server.is_idle() {
+        while next < arrivals.len() && arrivals[next] <= server.round() {
+            let tenant = format!("tenant-{}", next % tenants);
+            let load_sys = sys.clone();
+            match server.submit(&problem.name, &tenant, rhs[next].clone(), move || Ok(load_sys))? {
+                Verdict::Queued { .. } => {}
+                Verdict::Rejected { .. } => rejected += 1,
+            }
+            next += 1;
+        }
+        server.tick()?;
+    }
+    let elapsed = t0.elapsed();
+
+    let mut table = Table::new(&[
+        "tenant",
+        "completed",
+        "rejected",
+        "p50 lat",
+        "p95 lat",
+        "p99 lat",
+        "mean queue",
+        "p50 wall ms",
+    ]);
+    for tenant in server.metrics().tenants().map(str::to_string).collect::<Vec<_>>() {
+        let s = server.metrics().summary(&tenant).expect("listed tenant");
+        table.row(&[
+            tenant,
+            s.completed.to_string(),
+            s.rejected.to_string(),
+            format!("{:.0}", s.latency_rounds.p50),
+            format!("{:.0}", s.latency_rounds.p95),
+            format!("{:.0}", s.latency_rounds.p99),
+            format!("{:.1}", s.mean_queue_rounds),
+            format!("{:.2}", s.wall_ms.p50),
+        ]);
+    }
+    println!("{}", table.render());
+    let stats = server.cache_stats();
+    println!(
+        "{} queries in {} ({} rejected at admission): {} rounds ({} active), \
+         cache {} prepares / {} hits / {} evictions",
+        queries,
+        apc::bench::fmt_duration(elapsed),
+        rejected,
+        server.round(),
+        server.active_rounds(),
+        stats.prepares,
+        stats.hits,
+        stats.evictions,
+    );
+    println!("latencies are in server rounds (query-age); wall ms ride along for scale.");
     Ok(())
 }
 

@@ -1,0 +1,27 @@
+//! The one-stop import for typical callers:
+//! `use apc::prelude::*;` brings in the [`SolveBuilder`] entry point
+//! and everything needed to configure and read back a solve.
+//!
+//! ```ignore
+//! use apc::prelude::*;
+//!
+//! let sys = PartitionedSystem::split_even(&a, &b, 4)?;
+//! let mut session = SolveBuilder::new(&sys)
+//!     .method(Method::Apc)
+//!     .run(RunConfig::new(1e-10, 100_000))
+//!     .session()?;
+//! let report = session.solve(&b)?;
+//! ```
+//!
+//! Construction goes through [`SolveBuilder`] (see
+//! [`crate::solvers::builder`] for the full surface); the long-running
+//! multi-tenant layer on top of it lives in [`crate::serve`].
+
+pub use crate::config::Backend;
+pub use crate::partition::PartitionedSystem;
+pub use crate::rates::SpectralInfo;
+pub use crate::solvers::builder::{Method, Session, SolveBuilder};
+pub use crate::solvers::stream::Admission;
+pub use crate::solvers::{
+    Metric, Precision, RunConfig, SolveReport, Solver, SolverOptions,
+};

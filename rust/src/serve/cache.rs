@@ -1,0 +1,241 @@
+//! The prepared-system cache: LRU by approximate resident bytes.
+//!
+//! Preparing a system for serving is the expensive, query-independent
+//! half of the pipeline — partitioning, and the tuning spectrum
+//! ([`SpectralInfo::for_tuning`]) every optimal step size derives from;
+//! the per-block Gram/Cholesky factors are built once per
+//! [`super::driver::SystemDriver`] from this shared state. A serving
+//! front-end answering many tenants over a working set of systems wants
+//! that work paid once per system and reused across queries, but the
+//! working set can exceed memory — hence an LRU keyed by system id and
+//! bounded in bytes, with transparent re-preparation after eviction
+//! (the next query for an evicted id just pays the prepare cost again).
+//!
+//! Entries are `Arc`-shared with the drivers that serve them, so
+//! eviction never invalidates an in-flight solve: the cache drops its
+//! reference; the driver's keeps the partition alive until it drains.
+//! The server additionally **pins** busy systems so the cache's byte
+//! accounting stays honest — an evicted-but-still-referenced system
+//! would free no memory.
+
+use crate::partition::PartitionedSystem;
+use crate::rates::SpectralInfo;
+use anyhow::{bail, Result};
+use std::sync::Arc;
+
+/// A system readied for serving: the partition plus the tuning
+/// spectrum, with an approximate resident-byte figure for the cache.
+#[derive(Clone, Debug)]
+pub struct PreparedSystem {
+    pub id: String,
+    pub sys: PartitionedSystem,
+    pub spectral: SpectralInfo,
+    /// Approximate bytes the partition keeps resident: stored floats
+    /// across every block (dense `p·n`, CSR nnz, whitened factors) plus
+    /// the row dimension's worth of per-query vectors.
+    pub bytes: usize,
+}
+
+impl PreparedSystem {
+    /// Run the query-independent preparation pipeline on `sys`.
+    pub fn prepare(id: impl Into<String>, sys: PartitionedSystem) -> Result<Self> {
+        let spectral = SpectralInfo::for_tuning(&sys)?;
+        let bytes = approx_resident_bytes(&sys);
+        Ok(PreparedSystem { id: id.into(), sys, spectral, bytes })
+    }
+}
+
+/// Stored floats × 8, summed over blocks, plus one rhs-sized vector —
+/// an estimate (engines add lane storage proportional to `max_width`),
+/// but proportional to the real footprint, which is all LRU ordering
+/// needs.
+fn approx_resident_bytes(sys: &PartitionedSystem) -> usize {
+    8 * (sys.n_rows + sys.blocks.iter().map(|b| b.a.nnz()).sum::<usize>())
+}
+
+/// Counters the serve bench and the eviction tests read back.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct CacheStats {
+    /// Preparation pipeline runs (misses, including re-preparation
+    /// after eviction).
+    pub prepares: usize,
+    /// Lookups answered from a resident entry.
+    pub hits: usize,
+    /// Entries dropped to fit the byte budget.
+    pub evictions: usize,
+}
+
+/// The LRU itself. Linear scans throughout: the cache holds at most a
+/// few dozen *systems* (each megabytes of matrix), so `Vec` in
+/// recency order beats a linked-map's bookkeeping at every size this
+/// layer sees.
+#[derive(Debug)]
+pub struct PreparedCache {
+    /// Recency order: front = least recently used, back = most.
+    entries: Vec<(String, Arc<PreparedSystem>)>,
+    capacity_bytes: usize,
+    stats: CacheStats,
+}
+
+impl PreparedCache {
+    pub fn new(capacity_bytes: usize) -> Self {
+        PreparedCache { entries: Vec::new(), capacity_bytes, stats: CacheStats::default() }
+    }
+
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+
+    pub fn contains(&self, id: &str) -> bool {
+        self.entries.iter().any(|(k, _)| k == id)
+    }
+
+    pub fn resident_bytes(&self) -> usize {
+        self.entries.iter().map(|(_, e)| e.bytes).sum()
+    }
+
+    pub fn stats(&self) -> CacheStats {
+        self.stats
+    }
+
+    /// Look up `id`, preparing (and inserting) it via `load` on a miss.
+    /// Returns the entry plus the ids evicted to make room. `pinned`
+    /// ids (systems with in-flight work) are never evicted, and neither
+    /// is the entry being returned — so a single oversized system still
+    /// serves, it just evicts everything else and overshoots the
+    /// budget until it drains.
+    pub fn get_or_prepare<F>(
+        &mut self,
+        id: &str,
+        pinned: &[String],
+        load: F,
+    ) -> Result<(Arc<PreparedSystem>, Vec<String>)>
+    where
+        F: FnOnce() -> Result<PreparedSystem>,
+    {
+        if let Some(pos) = self.entries.iter().position(|(k, _)| k == id) {
+            let entry = self.entries.remove(pos);
+            let arc = entry.1.clone();
+            self.entries.push(entry);
+            self.stats.hits += 1;
+            return Ok((arc, Vec::new()));
+        }
+        let prepared = load()?;
+        if prepared.id != id {
+            bail!(
+                "prepared-system id mismatch: cache key {:?}, loader produced {:?}",
+                id,
+                prepared.id
+            );
+        }
+        self.stats.prepares += 1;
+        let arc = Arc::new(prepared);
+        self.entries.push((id.to_string(), arc.clone()));
+        let evicted = self.evict_to_fit(id, pinned);
+        Ok((arc, evicted))
+    }
+
+    /// Drop least-recently-used evictable entries until the budget
+    /// holds (or nothing evictable remains).
+    fn evict_to_fit(&mut self, keep: &str, pinned: &[String]) -> Vec<String> {
+        let mut evicted = Vec::new();
+        while self.resident_bytes() > self.capacity_bytes {
+            let victim = self
+                .entries
+                .iter()
+                .position(|(k, _)| k != keep && !pinned.contains(k));
+            match victim {
+                Some(pos) => {
+                    let (k, _) = self.entries.remove(pos);
+                    self.stats.evictions += 1;
+                    evicted.push(k);
+                }
+                None => break,
+            }
+        }
+        evicted
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gen::problems::Problem;
+
+    fn system(n: usize, seed: u64) -> PartitionedSystem {
+        let p = Problem::standard_gaussian(n, n, 2).build(seed);
+        PartitionedSystem::split_even(&p.a, &p.b, 2).unwrap()
+    }
+
+    #[test]
+    fn bytes_estimate_tracks_stored_floats() {
+        let sys = system(16, 41);
+        let prep = PreparedSystem::prepare("s", sys).unwrap();
+        // dense blocks: 16×16 stored floats + 16 rhs rows, 8 bytes each
+        assert_eq!(prep.bytes, 8 * (16 * 16 + 16));
+    }
+
+    #[test]
+    fn hit_miss_and_lru_eviction() {
+        let a = PreparedSystem::prepare("a", system(16, 41)).unwrap();
+        let per = a.bytes;
+        // room for exactly two systems of this size
+        let mut cache = PreparedCache::new(2 * per);
+        let mk = |id: &str, seed| {
+            let id = id.to_string();
+            move || PreparedSystem::prepare(id, system(16, seed))
+        };
+        let (_, ev) = cache.get_or_prepare("a", &[], mk("a", 41)).unwrap();
+        assert!(ev.is_empty());
+        let (_, ev) = cache.get_or_prepare("b", &[], mk("b", 43)).unwrap();
+        assert!(ev.is_empty());
+        // touch "a" so "b" becomes the LRU victim
+        let (hit, ev) = cache.get_or_prepare("a", &[], || unreachable!("resident")).unwrap();
+        assert_eq!(hit.id, "a");
+        assert!(ev.is_empty());
+        let (_, ev) = cache.get_or_prepare("c", &[], mk("c", 47)).unwrap();
+        assert_eq!(ev, vec!["b".to_string()]);
+        assert!(cache.contains("a") && cache.contains("c") && !cache.contains("b"));
+        // re-preparing "b" is transparent — and evicts the new LRU, "a"
+        let (_, ev) = cache.get_or_prepare("b", &[], mk("b", 43)).unwrap();
+        assert_eq!(ev, vec!["a".to_string()]);
+        let stats = cache.stats();
+        assert_eq!((stats.prepares, stats.hits, stats.evictions), (4, 1, 2));
+    }
+
+    #[test]
+    fn pinned_and_fresh_entries_survive_eviction() {
+        let a = PreparedSystem::prepare("a", system(16, 41)).unwrap();
+        let per = a.bytes;
+        let mut cache = PreparedCache::new(per);
+        cache.get_or_prepare("a", &[], || PreparedSystem::prepare("a", system(16, 41))).unwrap();
+        // "a" pinned: inserting "b" overshoots the budget but evicts nothing
+        let pinned = vec!["a".to_string()];
+        let (_, ev) = cache
+            .get_or_prepare("b", &pinned, || PreparedSystem::prepare("b", system(16, 43)))
+            .unwrap();
+        assert!(ev.is_empty());
+        assert_eq!(cache.len(), 2);
+        assert!(cache.resident_bytes() > per);
+        // unpinned, the next insert sheds both older entries; the fresh
+        // entry itself is never its own victim
+        let (_, ev) = cache
+            .get_or_prepare("c", &[], || PreparedSystem::prepare("c", system(16, 47)))
+            .unwrap();
+        assert_eq!(ev.len(), 2);
+        assert!(cache.contains("c") && cache.len() == 1);
+    }
+
+    #[test]
+    fn loader_id_mismatch_is_an_error() {
+        let mut cache = PreparedCache::new(usize::MAX);
+        let err = cache
+            .get_or_prepare("a", &[], || PreparedSystem::prepare("zzz", system(16, 41)))
+            .unwrap_err();
+        assert!(err.to_string().contains("mismatch"), "{err}");
+    }
+}

@@ -1,0 +1,155 @@
+//! Serve-layer configuration: one struct covering the solver policy
+//! (method + [`RunConfig`]), the per-system lane budget, the admission
+//! window, the per-tenant queue bound, and the prepared-system cache
+//! capacity — read from a JSON file by the CLI `serve` subcommand and
+//! constructed literally by tests and benches.
+
+use crate::config::Json;
+use crate::solvers::builder::Method;
+use crate::solvers::RunConfig;
+use anyhow::{bail, Context, Result};
+
+/// Everything a [`super::Server`] needs to know up front.
+#[derive(Clone, Debug)]
+pub struct ServeConfig {
+    /// Iterative method every prepared system is served with.
+    /// `phbm` is rejected at driver construction (its streaming engine
+    /// needs the solver-held whitening factor): serve a preconditioned
+    /// system with `hbm` instead.
+    pub method: Method,
+    /// Convergence policy per query (tolerance, round cap, history
+    /// cadence), shared with the standalone and batched drivers.
+    pub run: RunConfig,
+    /// Lane budget per prepared system: the widest its streaming batch
+    /// may grow.
+    pub max_width: usize,
+    /// Admission window, in server rounds: a freed lane is held open up
+    /// to this long waiting for near-simultaneous arrivals to fill the
+    /// free lanes as one aligned cohort. `0` disables holding (admit
+    /// greedily — the window-off baseline).
+    pub window_rounds: usize,
+    /// Per-tenant bound on queued + in-flight queries across all
+    /// systems; submissions beyond it get
+    /// [`super::Verdict::Rejected`].
+    pub queue_depth: usize,
+    /// Prepared-system cache capacity, in approximate resident bytes.
+    pub cache_bytes: usize,
+}
+
+impl Default for ServeConfig {
+    fn default() -> Self {
+        ServeConfig {
+            method: Method::Apc,
+            run: RunConfig::default(),
+            max_width: 16,
+            window_rounds: 4,
+            queue_depth: 64,
+            cache_bytes: 64 << 20,
+        }
+    }
+}
+
+impl ServeConfig {
+    /// Read a config from a JSON object; every key is optional and
+    /// falls back to [`ServeConfig::default`]. Keys: `method` (string),
+    /// `tol`, `max_iter`, `record_every`, `max_width`, `window_rounds`,
+    /// `queue_depth`, `cache_bytes`.
+    pub fn from_json(v: &Json) -> Result<Self> {
+        let mut cfg = ServeConfig::default();
+        let usize_key = |key: &str, default: usize| -> Result<usize> {
+            match v.get(key) {
+                None => Ok(default),
+                Some(n) => n
+                    .as_usize()
+                    .with_context(|| format!("serve config: {key:?} must be a non-negative integer")),
+            }
+        };
+        if let Some(m) = v.get("method") {
+            let name = m
+                .as_str()
+                .context("serve config: \"method\" must be a string")?;
+            cfg.method = Method::parse(name)?;
+        }
+        if let Some(t) = v.get("tol") {
+            cfg.run.tol = t.as_f64().context("serve config: \"tol\" must be a number")?;
+        }
+        cfg.run.max_iter = usize_key("max_iter", cfg.run.max_iter)?;
+        cfg.run.record_every = usize_key("record_every", cfg.run.record_every)?;
+        cfg.max_width = usize_key("max_width", cfg.max_width)?;
+        cfg.window_rounds = usize_key("window_rounds", cfg.window_rounds)?;
+        cfg.queue_depth = usize_key("queue_depth", cfg.queue_depth)?;
+        cfg.cache_bytes = usize_key("cache_bytes", cfg.cache_bytes)?;
+        if cfg.max_width == 0 {
+            bail!("serve config: max_width must be at least 1");
+        }
+        if cfg.queue_depth == 0 {
+            bail!("serve config: queue_depth must be at least 1");
+        }
+        Ok(cfg)
+    }
+
+    /// Read a config from a JSON file on disk.
+    pub fn from_file(path: &str) -> Result<Self> {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading serve config {path:?}"))?;
+        let v = Json::parse(&text).with_context(|| format!("parsing serve config {path:?}"))?;
+        Self::from_json(&v)
+    }
+
+    /// The config as JSON (round-trips through [`Self::from_json`]) —
+    /// embedded in `BENCH_serve.json` so every run records its policy.
+    pub fn to_json(&self) -> Json {
+        crate::json_obj![
+            ("method", self.method.key()),
+            ("tol", self.run.tol),
+            ("max_iter", self.run.max_iter),
+            ("record_every", self.run.record_every),
+            ("max_width", self.max_width),
+            ("window_rounds", self.window_rounds),
+            ("queue_depth", self.queue_depth),
+            ("cache_bytes", self.cache_bytes),
+        ]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn defaults_and_roundtrip() {
+        let cfg = ServeConfig::default();
+        let back = ServeConfig::from_json(&cfg.to_json()).unwrap();
+        assert_eq!(back.method, cfg.method);
+        assert_eq!(back.run.tol, cfg.run.tol);
+        assert_eq!(back.run.max_iter, cfg.run.max_iter);
+        assert_eq!(back.max_width, cfg.max_width);
+        assert_eq!(back.window_rounds, cfg.window_rounds);
+        assert_eq!(back.queue_depth, cfg.queue_depth);
+        assert_eq!(back.cache_bytes, cfg.cache_bytes);
+    }
+
+    #[test]
+    fn partial_json_fills_defaults() {
+        let v = Json::parse(r#"{"method": "cimmino", "window_rounds": 0, "tol": 1e-6}"#).unwrap();
+        let cfg = ServeConfig::from_json(&v).unwrap();
+        assert_eq!(cfg.method, Method::Cimmino);
+        assert_eq!(cfg.window_rounds, 0);
+        assert_eq!(cfg.run.tol, 1e-6);
+        assert_eq!(cfg.max_width, ServeConfig::default().max_width);
+    }
+
+    #[test]
+    fn rejects_bad_configs() {
+        for src in [
+            r#"{"method": "bogus"}"#,
+            r#"{"max_width": 0}"#,
+            r#"{"queue_depth": 0}"#,
+            r#"{"max_iter": -3}"#,
+            r#"{"method": 7}"#,
+        ] {
+            let v = Json::parse(src).unwrap();
+            assert!(ServeConfig::from_json(&v).is_err(), "{src} should be rejected");
+        }
+    }
+}

@@ -1,0 +1,105 @@
+//! One prepared system's serving driver: a [`StreamingBatch`] bound to
+//! the cache's `Arc`-shared partition.
+//!
+//! [`StreamingBatch`] borrows the system it iterates
+//! (`StreamingBatch<'a, _>` holds `&'a PartitionedSystem`), which is
+//! the right shape for benches that own both — but the serve layer's
+//! systems live in an [`super::cache::PreparedCache`] and may be
+//! evicted (dropped from the cache) while this driver still runs. The
+//! driver therefore co-owns its system via [`Arc`] and holds the
+//! stream's borrow *into its own `Arc`* — a self-referential pair kept
+//! sound by three invariants documented at the `unsafe` site.
+
+use super::cache::PreparedSystem;
+use crate::solvers::batch::BatchEngine;
+use crate::solvers::builder::{empty_engine, Method};
+use crate::solvers::stream::{Admission, StreamOptions, StreamingBatch};
+use crate::solvers::RunConfig;
+use anyhow::Result;
+use std::sync::Arc;
+
+/// A running streaming driver plus the prepared system it serves.
+///
+/// Field order is load-bearing: `stream` is declared first so it drops
+/// before `prepared`, guaranteeing the `'static`-laundered borrow never
+/// outlives the `Arc` that backs it.
+pub struct SystemDriver {
+    stream: StreamingBatch<'static, Box<dyn BatchEngine + 'static>>,
+    prepared: Arc<PreparedSystem>,
+}
+
+impl SystemDriver {
+    /// Build the tuned, empty engine for `method` on the prepared
+    /// system and wrap it in a streaming driver with `width` lanes.
+    /// The driver admission is [`Admission::Refill`]: *when* queries
+    /// reach the driver is the server's decision (the arrival-window
+    /// policy), so once released they enter a lane immediately.
+    pub fn new(prepared: Arc<PreparedSystem>, method: Method, width: usize, run: RunConfig) -> Result<Self> {
+        // SAFETY: `sys` points into the `Arc`'s heap allocation, which
+        // (1) never moves for the life of the `Arc`, (2) is kept alive
+        // by the `prepared` field of the very struct that holds the
+        // borrow — with `stream` declared first, the borrow drops
+        // before the owner — and (3) is never mutated: nothing hands
+        // out `&mut PreparedSystem`, so the shared borrow is exclusive
+        // of writers by construction.
+        let sys: &'static crate::partition::PartitionedSystem =
+            unsafe { &*(&prepared.sys as *const crate::partition::PartitionedSystem) };
+        let engine = empty_engine(method, sys, &prepared.spectral)?;
+        let opts = StreamOptions { max_width: width, run, admission: Admission::Refill };
+        let stream = StreamingBatch::new(engine, sys, opts, method.key())?;
+        Ok(SystemDriver { stream, prepared })
+    }
+
+    /// The streaming driver (submit released queries, tick, poll
+    /// reports).
+    pub fn stream(&mut self) -> &mut StreamingBatch<'static, Box<dyn BatchEngine + 'static>> {
+        &mut self.stream
+    }
+
+    /// Read-only driver state, for admission decisions.
+    pub fn active_width(&self) -> usize {
+        self.stream.active_width()
+    }
+
+    /// The prepared system this driver serves.
+    pub fn prepared(&self) -> &Arc<PreparedSystem> {
+        &self.prepared
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gen::problems::Problem;
+    use crate::linalg::vector::max_abs_diff;
+    use crate::partition::PartitionedSystem;
+
+    #[test]
+    fn driver_outlives_cache_eviction() {
+        let p = Problem::standard_gaussian(20, 10, 2).build(311);
+        let sys = PartitionedSystem::split_even(&p.a, &p.b, 2).unwrap();
+        let truth: Vec<f64> = (0..10).map(|i| (i as f64 * 0.7).cos()).collect();
+        let rhs = p.a.matvec(&truth);
+        let prepared = Arc::new(PreparedSystem::prepare("sys", sys).unwrap());
+        let mut driver =
+            SystemDriver::new(prepared.clone(), Method::Apc, 4, RunConfig::new(1e-11, 50_000))
+                .unwrap();
+        // simulate eviction: the cache's Arc is gone mid-flight
+        driver.stream().submit(rhs).unwrap();
+        drop(prepared);
+        driver.stream().run_to_drain().unwrap();
+        let rep = driver.stream().report(0).unwrap();
+        assert!(rep.converged);
+        assert!(max_abs_diff(&rep.solution, &truth) < 1e-8);
+        assert_eq!(driver.prepared().id, "sys");
+    }
+
+    #[test]
+    fn phbm_is_rejected_with_a_pointer() {
+        let p = Problem::standard_gaussian(20, 10, 2).build(313);
+        let sys = PartitionedSystem::split_even(&p.a, &p.b, 2).unwrap();
+        let prepared = Arc::new(PreparedSystem::prepare("sys", sys).unwrap());
+        let err = SystemDriver::new(prepared, Method::Phbm, 4, RunConfig::default()).unwrap_err();
+        assert!(err.to_string().contains("streaming_engine"), "{err}");
+    }
+}

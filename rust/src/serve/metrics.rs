@@ -1,0 +1,233 @@
+//! Per-tenant SLO accounting: latency percentiles on both clocks.
+//!
+//! Every completed query contributes one [`QuerySample`] with its
+//! latency decomposed on the **round clock** (queue wait + service, in
+//! server rounds — deterministic, what the bench gates on) and measured
+//! on the **wall clock** (submit→completion nanoseconds — honest but
+//! machine-dependent, reported and never gated). Rejections are counted
+//! per tenant so overload behaviour shows up in the same report as
+//! latency.
+
+use crate::config::Json;
+use crate::json_obj;
+use std::collections::BTreeMap;
+
+/// One completed query's timing record.
+#[derive(Clone, Copy, Debug)]
+pub struct QuerySample {
+    /// Server rounds spent waiting for admission (submit → lane).
+    pub queue_rounds: usize,
+    /// Query-age rounds iterated once admitted (the driver's
+    /// `ColumnReport::iterations` — directly comparable to a standalone
+    /// solve of the same rhs).
+    pub service_rounds: usize,
+    /// End-to-end rounds: `queue_rounds + service_rounds`.
+    pub latency_rounds: usize,
+    /// End-to-end wall clock, submit → completion.
+    pub wall_ns: u128,
+    /// Whether the query converged (vs froze at the round cap).
+    pub converged: bool,
+}
+
+/// p50/p95/p99 of one latency series.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct Percentiles {
+    pub p50: f64,
+    pub p95: f64,
+    pub p99: f64,
+}
+
+impl Percentiles {
+    fn of(mut values: Vec<f64>) -> Percentiles {
+        values.sort_by(|a, b| a.total_cmp(b));
+        Percentiles {
+            p50: percentile(&values, 0.50),
+            p95: percentile(&values, 0.95),
+            p99: percentile(&values, 0.99),
+        }
+    }
+
+    fn to_json(self) -> Json {
+        json_obj![("p50", self.p50), ("p95", self.p95), ("p99", self.p99)]
+    }
+}
+
+/// Nearest-rank percentile of an ascending-sorted series (0.0 when
+/// empty) — deterministic, no interpolation, so bench gates compare
+/// exact round counts.
+pub fn percentile(sorted: &[f64], q: f64) -> f64 {
+    if sorted.is_empty() {
+        return 0.0;
+    }
+    let rank = (q * sorted.len() as f64).ceil() as usize;
+    sorted[rank.clamp(1, sorted.len()) - 1]
+}
+
+/// One tenant's aggregated view.
+#[derive(Clone, Debug)]
+pub struct SloSummary {
+    pub completed: usize,
+    pub rejected: usize,
+    /// Completed queries that froze at the round cap without reaching
+    /// tolerance.
+    pub unconverged: usize,
+    pub latency_rounds: Percentiles,
+    pub service_rounds: Percentiles,
+    pub queue_rounds: Percentiles,
+    pub wall_ms: Percentiles,
+    /// Mean queue wait in rounds — the direct cost of admission
+    /// windows, surfaced alongside the throughput they buy.
+    pub mean_queue_rounds: f64,
+}
+
+impl SloSummary {
+    /// The summary as JSON; `elapsed_secs` (the serving run's wall
+    /// span) turns the completion count into RHS/sec.
+    pub fn to_json(&self, elapsed_secs: f64) -> Json {
+        let rhs_per_sec =
+            if elapsed_secs > 0.0 { self.completed as f64 / elapsed_secs } else { 0.0 };
+        json_obj![
+            ("completed", self.completed),
+            ("rejected", self.rejected),
+            ("unconverged", self.unconverged),
+            ("latency_rounds", self.latency_rounds.to_json()),
+            ("service_rounds", self.service_rounds.to_json()),
+            ("queue_rounds", self.queue_rounds.to_json()),
+            ("wall_ms", self.wall_ms.to_json()),
+            ("mean_queue_rounds", self.mean_queue_rounds),
+            ("rhs_per_sec", rhs_per_sec),
+        ]
+    }
+}
+
+#[derive(Clone, Debug, Default)]
+struct TenantStats {
+    samples: Vec<QuerySample>,
+    rejected: usize,
+}
+
+/// The per-tenant recorder a [`super::Server`] feeds.
+#[derive(Clone, Debug, Default)]
+pub struct SloRegistry {
+    tenants: BTreeMap<String, TenantStats>,
+}
+
+impl SloRegistry {
+    pub fn new() -> Self {
+        SloRegistry::default()
+    }
+
+    pub fn record(&mut self, tenant: &str, sample: QuerySample) {
+        self.tenants.entry(tenant.to_string()).or_default().samples.push(sample);
+    }
+
+    pub fn record_rejection(&mut self, tenant: &str) {
+        self.tenants.entry(tenant.to_string()).or_default().rejected += 1;
+    }
+
+    /// Tenants seen so far, in name order.
+    pub fn tenants(&self) -> impl Iterator<Item = &str> {
+        self.tenants.keys().map(String::as_str)
+    }
+
+    /// Aggregate one tenant (`None` if never seen).
+    pub fn summary(&self, tenant: &str) -> Option<SloSummary> {
+        let t = self.tenants.get(tenant)?;
+        let series = |f: fn(&QuerySample) -> f64| -> Vec<f64> {
+            t.samples.iter().map(f).collect()
+        };
+        let queue: Vec<f64> = series(|s| s.queue_rounds as f64);
+        let mean_queue_rounds = if queue.is_empty() {
+            0.0
+        } else {
+            queue.iter().sum::<f64>() / queue.len() as f64
+        };
+        Some(SloSummary {
+            completed: t.samples.len(),
+            rejected: t.rejected,
+            unconverged: t.samples.iter().filter(|s| !s.converged).count(),
+            latency_rounds: Percentiles::of(series(|s| s.latency_rounds as f64)),
+            service_rounds: Percentiles::of(series(|s| s.service_rounds as f64)),
+            queue_rounds: Percentiles::of(queue),
+            wall_ms: Percentiles::of(series(|s| s.wall_ns as f64 / 1e6)),
+            mean_queue_rounds,
+        })
+    }
+
+    /// Every tenant's summary as one JSON object (tenant name → summary).
+    pub fn to_json(&self, elapsed_secs: f64) -> Json {
+        Json::Obj(
+            self.tenants
+                .keys()
+                .map(|name| {
+                    let s = self.summary(name).expect("keyed tenant has a summary");
+                    (name.clone(), s.to_json(elapsed_secs))
+                })
+                .collect(),
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample(queue: usize, service: usize) -> QuerySample {
+        QuerySample {
+            queue_rounds: queue,
+            service_rounds: service,
+            latency_rounds: queue + service,
+            wall_ns: (queue + service) as u128 * 1_000_000,
+            converged: true,
+        }
+    }
+
+    #[test]
+    fn nearest_rank_percentiles() {
+        let v: Vec<f64> = (1..=100).map(|i| i as f64).collect();
+        assert_eq!(percentile(&v, 0.50), 50.0);
+        assert_eq!(percentile(&v, 0.95), 95.0);
+        assert_eq!(percentile(&v, 0.99), 99.0);
+        assert_eq!(percentile(&[7.0], 0.99), 7.0);
+        assert_eq!(percentile(&[], 0.5), 0.0);
+    }
+
+    #[test]
+    fn per_tenant_isolation_and_aggregation() {
+        let mut reg = SloRegistry::new();
+        for i in 0..10 {
+            reg.record("alice", sample(0, 10 + i));
+        }
+        reg.record("bob", sample(5, 100));
+        reg.record_rejection("bob");
+        reg.record_rejection("bob");
+        let alice = reg.summary("alice").unwrap();
+        assert_eq!(alice.completed, 10);
+        assert_eq!(alice.rejected, 0);
+        assert_eq!(alice.latency_rounds.p50, 14.0);
+        assert_eq!(alice.latency_rounds.p99, 19.0);
+        assert_eq!(alice.mean_queue_rounds, 0.0);
+        let bob = reg.summary("bob").unwrap();
+        assert_eq!((bob.completed, bob.rejected), (1, 2));
+        assert_eq!(bob.latency_rounds.p50, 105.0);
+        assert_eq!(bob.mean_queue_rounds, 5.0);
+        assert!(reg.summary("carol").is_none());
+        assert_eq!(reg.tenants().collect::<Vec<_>>(), vec!["alice", "bob"]);
+    }
+
+    #[test]
+    fn json_summary_has_the_gated_fields() {
+        let mut reg = SloRegistry::new();
+        reg.record("t0", sample(2, 8));
+        let j = reg.to_json(2.0);
+        let t0 = j.get("t0").unwrap();
+        assert_eq!(t0.get("completed").unwrap().as_usize(), Some(1));
+        assert_eq!(t0.get("rhs_per_sec").unwrap().as_f64(), Some(0.5));
+        for series in ["latency_rounds", "service_rounds", "queue_rounds", "wall_ms"] {
+            let p = t0.get(series).unwrap();
+            for q in ["p50", "p95", "p99"] {
+                assert!(p.get(q).unwrap().as_f64().is_some(), "{series}.{q}");
+            }
+        }
+    }
+}

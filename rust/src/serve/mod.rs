@@ -1,0 +1,44 @@
+//! Multi-tenant serving front-end — the long-running layer the
+//! ROADMAP's "answer queries for millions of users" north star needs on
+//! top of [`crate::solvers::stream`].
+//!
+//! A [`Server`] owns:
+//!
+//! * a [`cache::PreparedCache`]: an LRU (by approximate resident bytes)
+//!   of **prepared systems** — partition, cached per-block factors,
+//!   tuning spectrum — keyed by system id, so a query for a recently
+//!   served system skips the whole preparation pipeline, and an evicted
+//!   system transparently re-prepares on its next query;
+//! * one [`driver::SystemDriver`] per resident system with work: the
+//!   [`crate::solvers::stream::StreamingBatch`] driver whose lanes hold
+//!   the system's in-flight queries;
+//! * an arrival-aware [`admission::WindowPolicy`]: a freed lane is held
+//!   open for up to `window_rounds` server rounds so near-simultaneous
+//!   arrivals are admitted *together* (one aligned batch instead of a
+//!   ragged one — fewer active driver rounds for the same queries, the
+//!   follow-up named when streaming admission landed);
+//! * bounded per-tenant queues with an explicit overload verdict:
+//!   [`Verdict::Rejected`] carries `retry_after_rounds` instead of
+//!   letting queues grow without bound;
+//! * per-tenant SLO accounting ([`metrics::SloRegistry`]): latency in
+//!   query-age rounds and wall/virtual clock, p50/p95/p99, RHS/sec.
+//!
+//! Time is round-based: the embedding process calls [`Server::tick`]
+//! in its event loop; each tick advances every driver with work by one
+//! synchronous round. Determinism end to end — identical submissions
+//! against identical configs produce identical admission rounds,
+//! latencies and verdicts — which is what lets `benches/serve_slo.rs`
+//! gate window-on vs window-off claims on exact round counts.
+
+pub mod admission;
+pub mod cache;
+pub mod config;
+pub mod driver;
+pub mod metrics;
+pub mod server;
+
+pub use admission::WindowPolicy;
+pub use cache::{CacheStats, PreparedCache, PreparedSystem};
+pub use config::ServeConfig;
+pub use metrics::{SloRegistry, SloSummary};
+pub use server::{QueryResult, Server, Ticket, Verdict};

@@ -1,0 +1,520 @@
+//! The serving loop: tenant-facing submission, per-system routing,
+//! window admission, and completion harvesting.
+//!
+//! Call shape (see `benches/serve_slo.rs` for the full idiom):
+//!
+//! ```ignore
+//! let mut server = Server::new(ServeConfig::default());
+//! match server.submit("ridge-v3", "alice", rhs, || build_system())? {
+//!     Verdict::Queued { ticket } => tickets.push(ticket),
+//!     Verdict::Rejected { retry_after_rounds } => back_off(retry_after_rounds),
+//! }
+//! server.tick()?;                       // once per event-loop round
+//! if let Some(r) = server.take_result(ticket) { /* r.report.solution */ }
+//! ```
+//!
+//! Determinism: the round clock, admission decisions, and every
+//! rounds-denominated latency are pure functions of the submission
+//! schedule and config — wall-clock timestamps ride along for
+//! reporting but never influence behaviour.
+
+use super::admission::WindowPolicy;
+use super::cache::{CacheStats, PreparedCache, PreparedSystem};
+use super::config::ServeConfig;
+use super::driver::SystemDriver;
+use super::metrics::{QuerySample, SloRegistry};
+use crate::partition::PartitionedSystem;
+use crate::solvers::batch::ColumnReport;
+use anyhow::{bail, Result};
+use std::collections::{BTreeMap, VecDeque};
+use std::time::Instant;
+
+/// Handle returned at submission; redeem with [`Server::take_result`].
+pub type Ticket = u64;
+
+/// Admission outcome of one submission.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum Verdict {
+    /// Accepted: the query is queued (or already in a lane after the
+    /// next tick).
+    Queued { ticket: Ticket },
+    /// The tenant is at its queue bound. `retry_after_rounds` is a
+    /// deterministic backoff hint — half the running mean service
+    /// rounds, i.e. roughly when a lane's worth of work drains.
+    Rejected { retry_after_rounds: usize },
+}
+
+/// A completed query, with its latency decomposition.
+#[derive(Clone, Debug)]
+pub struct QueryResult {
+    pub ticket: Ticket,
+    pub tenant: String,
+    pub system_id: String,
+    /// Server rounds between submission and lane admission.
+    pub queue_rounds: usize,
+    /// Query-age rounds iterated (the driver report's `iterations`).
+    pub service_rounds: usize,
+    /// `queue_rounds + service_rounds`.
+    pub latency_rounds: usize,
+    /// Submission → completion wall clock.
+    pub wall_ns: u128,
+    /// The solve outcome: solution, convergence, history.
+    pub report: ColumnReport,
+}
+
+/// A query the window policy has not yet released into a lane.
+struct Waiting {
+    ticket: Ticket,
+    tenant: String,
+    rhs: Vec<f64>,
+    truth: Option<Vec<f64>>,
+    submit_round: usize,
+    submit_wall: Instant,
+}
+
+/// A query in a lane; keyed by its driver stream id.
+struct InFlight {
+    ticket: Ticket,
+    tenant: String,
+    submit_round: usize,
+    admit_round: usize,
+    submit_wall: Instant,
+}
+
+struct SystemState {
+    driver: SystemDriver,
+    waiting: VecDeque<Waiting>,
+    inflight: BTreeMap<usize, InFlight>,
+}
+
+impl SystemState {
+    fn is_idle(&self) -> bool {
+        self.waiting.is_empty() && self.inflight.is_empty() && self.driver.active_width() == 0
+    }
+}
+
+/// The multi-tenant serving front-end. See the [module docs](self).
+pub struct Server {
+    cfg: ServeConfig,
+    cache: PreparedCache,
+    systems: BTreeMap<String, SystemState>,
+    round: usize,
+    /// Rounds in which at least one driver iterated — the
+    /// denominator of the bench's RHS-per-active-round throughput.
+    active_rounds: usize,
+    next_ticket: Ticket,
+    metrics: SloRegistry,
+    results: BTreeMap<Ticket, QueryResult>,
+    /// Queued + in-flight queries per tenant, across systems.
+    tenant_load: BTreeMap<String, usize>,
+    service_rounds_sum: usize,
+    service_rounds_count: usize,
+    started: Instant,
+}
+
+impl Server {
+    pub fn new(cfg: ServeConfig) -> Self {
+        let cache = PreparedCache::new(cfg.cache_bytes);
+        Server {
+            cache,
+            systems: BTreeMap::new(),
+            round: 0,
+            active_rounds: 0,
+            next_ticket: 0,
+            metrics: SloRegistry::new(),
+            results: BTreeMap::new(),
+            tenant_load: BTreeMap::new(),
+            service_rounds_sum: 0,
+            service_rounds_count: 0,
+            started: Instant::now(),
+            cfg,
+        }
+    }
+
+    /// Submit a residual-metric query for `system_id` on behalf of
+    /// `tenant`. `load` builds the partitioned system on a cache miss
+    /// (first sight of the id, or re-preparation after eviction); it is
+    /// not called when the system is resident.
+    pub fn submit<F>(&mut self, system_id: &str, tenant: &str, rhs: Vec<f64>, load: F) -> Result<Verdict>
+    where
+        F: FnOnce() -> Result<PartitionedSystem>,
+    {
+        self.submit_inner(system_id, tenant, rhs, None, load)
+    }
+
+    /// Like [`Self::submit`], tracking convergence against a known
+    /// solution (parity tests, planted benchmarks).
+    pub fn submit_with_truth<F>(
+        &mut self,
+        system_id: &str,
+        tenant: &str,
+        rhs: Vec<f64>,
+        truth: Vec<f64>,
+        load: F,
+    ) -> Result<Verdict>
+    where
+        F: FnOnce() -> Result<PartitionedSystem>,
+    {
+        self.submit_inner(system_id, tenant, rhs, Some(truth), load)
+    }
+
+    fn submit_inner<F>(
+        &mut self,
+        system_id: &str,
+        tenant: &str,
+        rhs: Vec<f64>,
+        truth: Option<Vec<f64>>,
+        load: F,
+    ) -> Result<Verdict>
+    where
+        F: FnOnce() -> Result<PartitionedSystem>,
+    {
+        // backpressure before any expensive work: an overloaded tenant
+        // must not trigger preparation
+        if self.tenant_load.get(tenant).copied().unwrap_or(0) >= self.cfg.queue_depth {
+            self.metrics.record_rejection(tenant);
+            return Ok(Verdict::Rejected { retry_after_rounds: self.retry_hint() });
+        }
+        // systems with in-flight work are pinned: evicting them would
+        // free nothing (their driver co-owns the partition)
+        let pinned: Vec<String> = self
+            .systems
+            .iter()
+            .filter(|(_, s)| !s.is_idle())
+            .map(|(id, _)| id.clone())
+            .collect();
+        let (prepared, evicted) = self.cache.get_or_prepare(system_id, &pinned, || {
+            PreparedSystem::prepare(system_id, load()?)
+        })?;
+        for id in &evicted {
+            // drop evicted systems' (idle, by the pin) drivers so the
+            // engine-side lane storage goes with the cache entry
+            if self.systems.get(id).is_some_and(|s| s.is_idle()) {
+                self.systems.remove(id);
+            }
+        }
+        // serve-boundary shape validation: a malformed query must be
+        // refused here, not poison a shared driver lane later
+        if rhs.len() != prepared.sys.n_rows {
+            bail!(
+                "serve submit: rhs has {} rows, system {:?} has {}",
+                rhs.len(),
+                system_id,
+                prepared.sys.n_rows
+            );
+        }
+        if let Some(t) = &truth {
+            if t.len() != prepared.sys.n {
+                bail!(
+                    "serve submit: truth has {} entries, system {:?} has n = {}",
+                    t.len(),
+                    system_id,
+                    prepared.sys.n
+                );
+            }
+        }
+        if !self.systems.contains_key(system_id) {
+            let driver =
+                SystemDriver::new(prepared, self.cfg.method, self.cfg.max_width, self.cfg.run)?;
+            self.systems.insert(
+                system_id.to_string(),
+                SystemState { driver, waiting: VecDeque::new(), inflight: BTreeMap::new() },
+            );
+        }
+        let ticket = self.next_ticket;
+        self.next_ticket += 1;
+        let state = self.systems.get_mut(system_id).expect("inserted above");
+        state.waiting.push_back(Waiting {
+            ticket,
+            tenant: tenant.to_string(),
+            rhs,
+            truth,
+            submit_round: self.round,
+            submit_wall: Instant::now(),
+        });
+        *self.tenant_load.entry(tenant.to_string()).or_insert(0) += 1;
+        Ok(Verdict::Queued { ticket })
+    }
+
+    /// One server round: per system, release waiting queries the window
+    /// policy admits, advance the driver if it has work, and harvest
+    /// completed lanes into results + metrics. Advances the round clock
+    /// even when fully idle, so arrival schedules stay meaningful.
+    pub fn tick(&mut self) -> Result<()> {
+        let policy = WindowPolicy { window_rounds: self.cfg.window_rounds };
+        let mut any_active = false;
+        for (id, state) in self.systems.iter_mut() {
+            let stream = state.driver.stream();
+            let free = self
+                .cfg
+                .max_width
+                .saturating_sub(stream.active_width() + stream.pending_len());
+            let oldest_wait =
+                state.waiting.front().map_or(0, |w| self.round - w.submit_round);
+            let admit = policy.admit_count(free, state.waiting.len(), oldest_wait);
+            for _ in 0..admit {
+                let w = state.waiting.pop_front().expect("admit_count <= waiting");
+                let qid = match w.truth {
+                    Some(t) => stream.submit_with_truth(w.rhs, t)?,
+                    None => stream.submit(w.rhs)?,
+                };
+                state.inflight.insert(
+                    qid,
+                    InFlight {
+                        ticket: w.ticket,
+                        tenant: w.tenant,
+                        submit_round: w.submit_round,
+                        admit_round: self.round,
+                        submit_wall: w.submit_wall,
+                    },
+                );
+            }
+            if stream.active_width() == 0 && stream.pending_len() == 0 {
+                continue; // held or idle: no driver round this tick
+            }
+            any_active = true;
+            stream.tick()?;
+            let done: Vec<usize> = state
+                .inflight
+                .keys()
+                .copied()
+                .filter(|&qid| stream.report(qid).is_some())
+                .collect();
+            for qid in done {
+                let info = state.inflight.remove(&qid).expect("key came from inflight");
+                let report = stream.report(qid).expect("filtered on Some").clone();
+                let queue_rounds = info.admit_round - info.submit_round;
+                let service_rounds = report.iterations;
+                let sample = QuerySample {
+                    queue_rounds,
+                    service_rounds,
+                    latency_rounds: queue_rounds + service_rounds,
+                    wall_ns: info.submit_wall.elapsed().as_nanos(),
+                    converged: report.converged,
+                };
+                self.metrics.record(&info.tenant, sample);
+                self.service_rounds_sum += service_rounds;
+                self.service_rounds_count += 1;
+                if let Some(load) = self.tenant_load.get_mut(&info.tenant) {
+                    *load = load.saturating_sub(1);
+                }
+                self.results.insert(
+                    info.ticket,
+                    QueryResult {
+                        ticket: info.ticket,
+                        tenant: info.tenant,
+                        system_id: id.clone(),
+                        queue_rounds,
+                        service_rounds,
+                        latency_rounds: sample.latency_rounds,
+                        wall_ns: sample.wall_ns,
+                        report,
+                    },
+                );
+            }
+        }
+        if any_active {
+            self.active_rounds += 1;
+        }
+        self.round += 1;
+        Ok(())
+    }
+
+    /// Tick until no system has waiting, queued, or iterating work.
+    /// Bounded: every lane freezes at `run.max_iter` and every held
+    /// queue releases once its window expires.
+    pub fn run_until_idle(&mut self) -> Result<()> {
+        while !self.is_idle() {
+            self.tick()?;
+        }
+        Ok(())
+    }
+
+    pub fn is_idle(&self) -> bool {
+        self.systems.values().all(|s| s.is_idle())
+    }
+
+    /// Remove and return a finished query (`None` while queued or in
+    /// flight).
+    pub fn take_result(&mut self, ticket: Ticket) -> Option<QueryResult> {
+        self.results.remove(&ticket)
+    }
+
+    /// Server rounds elapsed.
+    pub fn round(&self) -> usize {
+        self.round
+    }
+
+    /// Rounds in which at least one driver iterated.
+    pub fn active_rounds(&self) -> usize {
+        self.active_rounds
+    }
+
+    /// Wall time since construction, for RHS/sec reporting.
+    pub fn elapsed_secs(&self) -> f64 {
+        self.started.elapsed().as_secs_f64()
+    }
+
+    pub fn cache_stats(&self) -> CacheStats {
+        self.cache.stats()
+    }
+
+    /// Prepared systems currently resident.
+    pub fn resident_systems(&self) -> usize {
+        self.cache.len()
+    }
+
+    pub fn metrics(&self) -> &SloRegistry {
+        &self.metrics
+    }
+
+    pub fn config(&self) -> &ServeConfig {
+        &self.cfg
+    }
+
+    /// Deterministic backoff hint for rejections: half the running mean
+    /// service rounds (≥ 1), or 8 before any query has completed.
+    fn retry_hint(&self) -> usize {
+        if self.service_rounds_count == 0 {
+            8
+        } else {
+            (self.service_rounds_sum / self.service_rounds_count / 2).max(1)
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gen::problems::Problem;
+    use crate::linalg::vector::max_abs_diff;
+    use crate::solvers::RunConfig;
+
+    fn planted(n_rows: usize, n: usize, seed: u64) -> (PartitionedSystem, Vec<f64>, Vec<f64>) {
+        let p = Problem::standard_gaussian(n_rows, n, 2).build(seed);
+        let sys = PartitionedSystem::split_even(&p.a, &p.b, 2).unwrap();
+        let truth: Vec<f64> = (0..n).map(|i| (i as f64 * 0.53).sin()).collect();
+        let rhs = p.a.matvec(&truth);
+        (sys, rhs, truth)
+    }
+
+    fn test_config(window_rounds: usize) -> ServeConfig {
+        ServeConfig {
+            run: RunConfig::new(1e-11, 50_000),
+            max_width: 4,
+            window_rounds,
+            queue_depth: 8,
+            cache_bytes: 1 << 20,
+            ..ServeConfig::default()
+        }
+    }
+
+    #[test]
+    fn single_query_round_trip() {
+        let (sys, rhs, truth) = planted(20, 10, 401);
+        let mut server = Server::new(test_config(0));
+        let verdict = server
+            .submit_with_truth("s0", "alice", rhs, truth.clone(), || Ok(sys))
+            .unwrap();
+        let ticket = match verdict {
+            Verdict::Queued { ticket } => ticket,
+            v => panic!("unexpected verdict {v:?}"),
+        };
+        assert!(server.take_result(ticket).is_none(), "not done before any tick");
+        server.run_until_idle().unwrap();
+        let r = server.take_result(ticket).expect("drained query has a result");
+        assert!(r.report.converged);
+        assert!(max_abs_diff(&r.report.solution, &truth) < 1e-8);
+        // window off: admitted on the very next tick
+        assert_eq!(r.queue_rounds, 0);
+        assert_eq!(r.latency_rounds, r.service_rounds);
+        assert_eq!(r.tenant, "alice");
+        assert_eq!(r.system_id, "s0");
+        assert_eq!(server.cache_stats().prepares, 1);
+        let summary = server.metrics().summary("alice").unwrap();
+        assert_eq!(summary.completed, 1);
+        assert_eq!(summary.latency_rounds.p50, r.latency_rounds as f64);
+    }
+
+    #[test]
+    fn lone_arrival_waits_exactly_the_window() {
+        let (sys, rhs, truth) = planted(20, 10, 403);
+        let mut server = Server::new(test_config(3));
+        server.submit_with_truth("s0", "alice", rhs, truth, || Ok(sys)).unwrap();
+        server.run_until_idle().unwrap();
+        let r = server.take_result(0).unwrap();
+        // nothing else arrived: the hold costs the full window, no more
+        assert_eq!(r.queue_rounds, 3);
+        assert_eq!(r.latency_rounds, r.service_rounds + 3);
+    }
+
+    #[test]
+    fn window_releases_early_when_lanes_fill() {
+        let (sys, rhs, truth) = planted(20, 10, 405);
+        let mut server = Server::new(test_config(1_000));
+        // max_width queries waiting covers every free lane: the window
+        // must release immediately, huge window or not
+        for _ in 0..4 {
+            server
+                .submit_with_truth("s0", "alice", rhs.clone(), truth.clone(), || {
+                    Ok(sys.clone())
+                })
+                .unwrap();
+        }
+        server.run_until_idle().unwrap();
+        for ticket in 0..4 {
+            assert_eq!(server.take_result(ticket).unwrap().queue_rounds, 0);
+        }
+    }
+
+    #[test]
+    fn per_tenant_backpressure_rejects_with_hint() {
+        let (sys, rhs, truth) = planted(20, 10, 407);
+        let mut cfg = test_config(0);
+        cfg.queue_depth = 2;
+        let mut server = Server::new(cfg);
+        let mk_sys = sys.clone();
+        server.submit("s0", "alice", rhs.clone(), move || Ok(mk_sys)).unwrap();
+        server.submit("s0", "alice", rhs.clone(), || unreachable!("resident")).unwrap();
+        // third concurrent query for alice: over the bound
+        match server.submit("s0", "alice", rhs.clone(), || unreachable!("resident")).unwrap() {
+            Verdict::Rejected { retry_after_rounds } => assert_eq!(retry_after_rounds, 8),
+            v => panic!("expected rejection, got {v:?}"),
+        }
+        // other tenants are unaffected
+        match server.submit("s0", "bob", rhs.clone(), || unreachable!("resident")).unwrap() {
+            Verdict::Queued { .. } => {}
+            v => panic!("bob should be admitted, got {v:?}"),
+        }
+        server.run_until_idle().unwrap();
+        // the load drained: alice may submit again, and the hint now
+        // derives from observed service rounds
+        match server
+            .submit_with_truth("s0", "alice", rhs, truth, || unreachable!("resident"))
+            .unwrap()
+        {
+            Verdict::Queued { .. } => {}
+            v => panic!("drained tenant should be admitted, got {v:?}"),
+        }
+        let alice = server.metrics().summary("alice").unwrap();
+        assert_eq!(alice.rejected, 1);
+        assert_eq!(alice.completed, 2);
+    }
+
+    #[test]
+    fn malformed_queries_are_refused_at_the_boundary() {
+        let (sys, rhs, truth) = planted(20, 10, 409);
+        let mut server = Server::new(test_config(0));
+        let mk = sys.clone();
+        assert!(server.submit("s0", "alice", vec![0.0; 7], move || Ok(mk)).is_err());
+        let mk = sys.clone();
+        assert!(server
+            .submit_with_truth("s0", "alice", rhs.clone(), vec![0.0; 3], move || Ok(mk))
+            .is_err());
+        // the failed submissions queued nothing and poisoned nothing
+        assert!(server.is_idle());
+        server.submit_with_truth("s0", "alice", rhs, truth, || Ok(sys)).unwrap();
+        server.run_until_idle().unwrap();
+        assert_eq!(server.metrics().summary("alice").unwrap().completed, 1);
+    }
+}

@@ -222,19 +222,14 @@ impl Solver for FullAdmm {
 mod tests {
     use super::*;
     use crate::gen::problems::Problem;
-    use crate::solvers::{Metric, SolverOptions};
+    use crate::solvers::{Metric, RunConfig, SolverOptions};
 
     #[test]
     fn modified_admm_converges() {
         let p = Problem::standard_gaussian(24, 24, 3).build(51);
         let sys = PartitionedSystem::split_even(&p.a, &p.b, 3).unwrap();
         let mut solver = Admm::with_params(&sys, 0.5).unwrap();
-        let opts = SolverOptions {
-            tol: 1e-7,
-            max_iter: 2_000_000,
-            metric: Metric::ErrorVsTruth(p.x_star.clone()),
-            ..Default::default()
-        };
+        let opts = SolverOptions { run: RunConfig::new(1e-7, 2_000_000), metric: Metric::ErrorVsTruth(p.x_star.clone()) };
         let rep = solver.solve(&sys, &opts).unwrap();
         assert!(rep.converged, "M-ADMM err {:.2e} after {}", rep.final_error, rep.iterations);
     }
@@ -250,12 +245,7 @@ mod tests {
         // where both are tuned.
         let p = Problem::standard_gaussian(20, 20, 2).build(53);
         let sys = PartitionedSystem::split_even(&p.a, &p.b, 2).unwrap();
-        let opts = SolverOptions {
-            tol: 1e-6,
-            max_iter: 3_000_000,
-            metric: Metric::ErrorVsTruth(p.x_star.clone()),
-            ..Default::default()
-        };
+        let opts = SolverOptions { run: RunConfig::new(1e-6, 3_000_000), metric: Metric::ErrorVsTruth(p.x_star.clone()) };
         let rep_mod = Admm::with_params(&sys, 1.0).unwrap().solve(&sys, &opts).unwrap();
         let rep_full = FullAdmm::with_params(&sys, 1.0).unwrap().solve(&sys, &opts).unwrap();
         assert!(rep_mod.converged, "modified failed: {:.2e}", rep_mod.final_error);

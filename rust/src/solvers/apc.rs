@@ -138,7 +138,7 @@ mod tests {
     use super::*;
     use crate::gen::problems::Problem;
     use crate::linalg::vector::relative_error;
-    use crate::solvers::{fit_decay_rate, Metric, SolverOptions};
+    use crate::solvers::{fit_decay_rate, Metric, RunConfig, SolverOptions};
 
     fn build(n: usize, m: usize, seed: u64) -> (PartitionedSystem, Vec<f64>) {
         let p = Problem::standard_gaussian(n, n, m).build(seed);
@@ -150,11 +150,7 @@ mod tests {
     fn apc_converges_to_planted_solution() {
         let (sys, xstar) = build(40, 5, 31);
         let mut solver = Apc::auto(&sys).unwrap();
-        let opts = SolverOptions {
-            tol: 1e-10,
-            metric: Metric::ErrorVsTruth(xstar.clone()),
-            ..Default::default()
-        };
+        let opts = SolverOptions { run: RunConfig { tol: 1e-10, ..RunConfig::default() }, metric: Metric::ErrorVsTruth(xstar.clone()) };
         let rep = solver.solve(&sys, &opts).unwrap();
         assert!(rep.converged, "APC failed: {:?} iters, err {:.2e}", rep.iterations, rep.final_error);
         assert!(relative_error(&rep.solution, &xstar) < 1e-9);
@@ -166,13 +162,7 @@ mod tests {
         let spectral = SpectralInfo::compute(&sys).unwrap();
         let params = apc_optimal(spectral.mu_min, spectral.mu_max).unwrap();
         let mut solver = Apc::auto_with_spectral(&sys, &spectral).unwrap();
-        let opts = SolverOptions {
-            tol: 1e-12,
-            max_iter: 600,
-            metric: Metric::ErrorVsTruth(xstar),
-            record_every: 1,
-            ..Default::default()
-        };
+        let opts = SolverOptions { run: RunConfig::new(1e-12, 600).recorded(1), metric: Metric::ErrorVsTruth(xstar) };
         let rep = solver.solve(&sys, &opts).unwrap();
         let measured = fit_decay_rate(&rep.history).expect("history");
         // measured per-iteration contraction should match ρ* closely;
@@ -189,7 +179,7 @@ mod tests {
     fn apc_reset_reproduces_run() {
         let (sys, _) = build(24, 4, 3);
         let mut solver = Apc::auto(&sys).unwrap();
-        let opts = SolverOptions { max_iter: 50, tol: 0.0, ..Default::default() };
+        let opts = SolverOptions::with_run(RunConfig::new(0.0, 50));
         let rep1 = solver.solve(&sys, &opts).unwrap();
         solver.reset(&sys);
         let rep2 = solver.solve(&sys, &opts).unwrap();
@@ -201,12 +191,7 @@ mod tests {
         // (γ, η) far outside S must grow the error (Theorem 1 "only if")
         let (sys, xstar) = build(24, 4, 5);
         let mut solver = Apc::with_params(&sys, 1.99, 8.0).unwrap();
-        let opts = SolverOptions {
-            tol: 0.0,
-            max_iter: 200,
-            metric: Metric::ErrorVsTruth(xstar),
-            ..Default::default()
-        };
+        let opts = SolverOptions { run: RunConfig::new(0.0, 200), metric: Metric::ErrorVsTruth(xstar) };
         let rep = solver.solve(&sys, &opts).unwrap();
         assert!(
             rep.final_error > 1e2 || !rep.final_error.is_finite(),
@@ -222,12 +207,7 @@ mod tests {
         // is acceptable, divergence is not
         let (sys, xstar) = build(40, 5, 33);
         let mut solver = Apc::auto_estimated(&sys, 3000, 0.9).unwrap();
-        let opts = SolverOptions {
-            tol: 1e-9,
-            max_iter: 500_000,
-            metric: Metric::ErrorVsTruth(xstar),
-            ..Default::default()
-        };
+        let opts = SolverOptions { run: RunConfig::new(1e-9, 500_000), metric: Metric::ErrorVsTruth(xstar) };
         let rep = solver.solve(&sys, &opts).unwrap();
         assert!(rep.converged, "estimated tuning failed: {:.2e}", rep.final_error);
     }
@@ -237,11 +217,7 @@ mod tests {
         let p = Problem::standard_gaussian(60, 30, 6).build(13);
         let sys = PartitionedSystem::split_even(&p.a, &p.b, 6).unwrap();
         let mut solver = Apc::auto(&sys).unwrap();
-        let opts = SolverOptions {
-            tol: 1e-9,
-            metric: Metric::ErrorVsTruth(p.x_star.clone()),
-            ..Default::default()
-        };
+        let opts = SolverOptions { run: RunConfig { tol: 1e-9, ..RunConfig::default() }, metric: Metric::ErrorVsTruth(p.x_star.clone()) };
         let rep = solver.solve(&sys, &opts).unwrap();
         assert!(rep.converged, "tall APC err {:.2e}", rep.final_error);
     }

@@ -46,38 +46,36 @@ use crate::linalg::MultiVec;
 use crate::parallel::{self, SliceCells};
 use crate::partition::{MachineBlock, PartitionedSystem};
 use crate::precond::Preconditioner;
-use crate::solvers::{Metric, SolverOptions};
+use crate::solvers::{Metric, RunConfig, SolverOptions};
 use anyhow::{bail, Context, Result};
 
 /// Stopping metric for a batched solve, evaluated per column.
-#[derive(Clone, Debug)]
+#[derive(Clone, Debug, Default)]
 pub enum BatchMetric {
     /// Per-column relative residual `‖A x_j − b_j‖/‖b_j‖` against the
     /// **original** system (practical stopping rule; what a serving
     /// deployment uses).
+    #[default]
     Residual,
     /// Per-column relative error against known solutions, one truth per
     /// RHS column (parity tests and benches with planted solutions).
     ErrorVsTruth(Vec<Vec<f64>>),
 }
 
-/// Options controlling a [`Solver::solve_batch`] run. `max_iter`, `tol`
-/// and `record_every` mean exactly what they mean on [`SolverOptions`],
-/// applied to each column independently.
-#[derive(Clone, Debug)]
+/// Options controlling a [`Solver::solve_batch`] run: the shared
+/// [`RunConfig`] convergence policy (applied to each column
+/// independently — a column deflates when its metric first drops below
+/// `run.tol`) plus the per-column stopping metric.
+#[derive(Clone, Debug, Default)]
 pub struct BatchOptions {
-    pub max_iter: usize,
-    /// A column deflates when its metric first drops below `tol`.
-    pub tol: f64,
+    pub run: RunConfig,
     pub metric: BatchMetric,
-    /// Record the per-column metric every `record_every` rounds into
-    /// that column's history (0 = no history).
-    pub record_every: usize,
 }
 
-impl Default for BatchOptions {
-    fn default() -> Self {
-        BatchOptions { max_iter: 50_000, tol: 1e-8, metric: BatchMetric::Residual, record_every: 0 }
+impl BatchOptions {
+    /// Options from a convergence policy with the residual metric.
+    pub fn with_run(run: RunConfig) -> Self {
+        BatchOptions { run, metric: BatchMetric::Residual }
     }
 }
 
@@ -281,31 +279,32 @@ pub fn run<E: BatchEngine>(
     let mut col_buf = vec![0.0; n];
     let mut errs = vec![0.0; k];
     let mut round = 0usize;
+    let run_cfg = opts.run;
     loop {
         evaluate(engine.xbar(), metric_sys, rhs, &active, opts, &dens, &mut scratches, &mut col_buf, &mut errs);
         for (lane, &col) in active.iter().enumerate() {
             let e = errs[lane];
             columns[col].final_error = e;
-            if opts.record_every > 0 && (round == 0 || round % opts.record_every == 0) {
+            if run_cfg.record_every > 0 && (round == 0 || round % run_cfg.record_every == 0) {
                 columns[col].history.push((round, e));
             }
         }
         // a lane keeps iterating while its error is finite and above tol
         // (the Solver::solve loop condition, per column)
-        let keeps = |e: f64| e.is_finite() && e > opts.tol;
+        let keeps = |e: f64| e.is_finite() && e > run_cfg.tol;
         let keep: Vec<usize> = (0..active.len()).filter(|&l| keeps(errs[l])).collect();
         // freeze the lanes stopping here, while their columns still exist
         for (lane, &col) in active.iter().enumerate() {
             if !keeps(errs[lane]) {
                 columns[col].iterations = round;
-                columns[col].converged = errs[lane] <= opts.tol;
+                columns[col].converged = errs[lane] <= run_cfg.tol;
                 engine.xbar().col_into(lane, &mut columns[col].solution);
                 // the freeze is this column's terminal state: always
                 // record it, even off the record_every cadence (same
                 // contract as the single-RHS Solver::solve) — without
                 // this a column deflating at `round % record_every != 0`
                 // never shows its sub-tol sample in the history
-                if opts.record_every > 0
+                if run_cfg.record_every > 0
                     && columns[col].history.last().map(|&(r, _)| r) != Some(round)
                 {
                     columns[col].history.push((round, errs[lane]));
@@ -315,7 +314,7 @@ pub fn run<E: BatchEngine>(
         if keep.is_empty() {
             break;
         }
-        if round >= opts.max_iter {
+        if round >= run_cfg.max_iter {
             for &lane in &keep {
                 let col = active[lane];
                 columns[col].iterations = round;
@@ -400,13 +399,11 @@ pub fn solve_columns_serially<S: Solver + ?Sized>(
         work.set_rhs(col)?;
         solver.rebind(&work).with_context(|| format!("column {} rebind", j))?;
         let single = SolverOptions {
-            max_iter: opts.max_iter,
-            tol: opts.tol,
+            run: opts.run,
             metric: match &opts.metric {
                 BatchMetric::Residual => Metric::Residual,
                 BatchMetric::ErrorVsTruth(ts) => Metric::ErrorVsTruth(ts[j].clone()),
             },
-            record_every: opts.record_every,
         };
         let rep = solver.solve(&work, &single)?;
         rounds += rep.iterations;
@@ -961,7 +958,7 @@ mod tests {
     fn batched_apc_solves_every_column() {
         let (sys, rhs, truths) = sys_and_rhs(3);
         let mut solver = Apc::auto(&sys).unwrap();
-        let opts = BatchOptions { tol: 1e-10, max_iter: 100_000, ..Default::default() };
+        let opts = BatchOptions::with_run(RunConfig::new(1e-10, 100_000));
         let rep = solver.solve_batch(&sys, &rhs, &opts).unwrap();
         assert_eq!(rep.columns.len(), 3);
         for (j, col) in rep.columns.iter().enumerate() {
@@ -980,10 +977,8 @@ mod tests {
         let (sys, rhs, truths) = sys_and_rhs(3);
         let mut solver = Apc::auto(&sys).unwrap();
         let opts = BatchOptions {
-            tol: 1e-9,
-            max_iter: 100_000,
+            run: RunConfig::new(1e-9, 100_000).recorded(1),
             metric: BatchMetric::ErrorVsTruth(truths.clone()),
-            record_every: 1,
         };
         let rep = solver.solve_batch(&sys, &rhs, &opts).unwrap();
         let its: Vec<usize> = rep.columns.iter().map(|c| c.iterations).collect();
@@ -1000,7 +995,7 @@ mod tests {
     #[test]
     fn column_loop_baseline_matches_batched_solutions() {
         let (sys, rhs, _) = sys_and_rhs(2);
-        let opts = BatchOptions { tol: 1e-10, max_iter: 100_000, ..Default::default() };
+        let opts = BatchOptions::with_run(RunConfig::new(1e-10, 100_000));
         let rep_batch = Apc::auto(&sys).unwrap().solve_batch(&sys, &rhs, &opts).unwrap();
         let mut solver = Apc::auto(&sys).unwrap();
         let rep_loop = solve_columns_serially(&mut solver, &sys, &rhs, &opts).unwrap();
@@ -1059,7 +1054,7 @@ mod tests {
         // paid) — the throughput benches divide by this number, so both
         // semantics are pinned here explicitly.
         let (sys, rhs, _) = sys_and_rhs(3);
-        let opts = BatchOptions { tol: 1e-9, max_iter: 100_000, ..Default::default() };
+        let opts = BatchOptions::with_run(RunConfig::new(1e-9, 100_000));
         let rep_batch = Apc::auto(&sys).unwrap().solve_batch(&sys, &rhs, &opts).unwrap();
         let its: Vec<usize> = rep_batch.columns.iter().map(|c| c.iterations).collect();
         assert!(rep_batch.columns.iter().all(|c| c.converged), "iterations {its:?}");

@@ -1,0 +1,553 @@
+//! One construction entry point for the whole solver surface.
+//!
+//! Before this module, callers had to know three ad-hoc construction
+//! paths: [`super::suite::tuned_solver`] for a single-RHS solver,
+//! [`super::suite::tuned_solver_prec`] for the mixed-precision variant,
+//! and the per-engine [`super::batch`] constructors
+//! (`ApcBatch::new(sys, &[], γ, η)`, …) for a streaming driver. The
+//! [`SolveBuilder`] collapses them: pick a [`Method`], optionally a
+//! [`Precision`], a [`RunConfig`], a lane budget (`.batch(k)`) and an
+//! [`Admission`] policy (`.streaming(..)`), and get back one
+//! [`Session`] that can answer single-RHS, batched, and streaming
+//! queries through the same tuned configuration:
+//!
+//! ```ignore
+//! use apc::prelude::*;
+//! let mut session = SolveBuilder::new(&sys)
+//!     .method(Method::Apc)
+//!     .precision(Precision::F64)
+//!     .run(RunConfig::new(1e-10, 100_000))
+//!     .session()?;
+//! let report = session.solve(&rhs)?;
+//! ```
+//!
+//! The old `suite` free functions remain as thin deprecated shims so
+//! downstream callers migrate incrementally; everything in-tree goes
+//! through the builder (or [`super::suite::tuned_method`], which stays:
+//! the *distributed* coordinator takes a method descriptor, not a
+//! constructed solver).
+
+use super::batch::{ApcBatch, BatchEngine, BatchOptions, BatchReport, CimminoBatch, GradBatch, GradRule};
+use super::refine::Refined;
+use super::stream::{Admission, StreamOptions, StreamingBatch};
+use super::{Metric, Precision, RunConfig, SolveReport, Solver, SolverOptions};
+use crate::config::Backend;
+use crate::partition::PartitionedSystem;
+use crate::rates::{self, SpectralInfo};
+use anyhow::{bail, Context, Result};
+
+/// The iterative methods the repo implements, as a closed enum (the
+/// string names of [`super::suite::ALL`] parse into it, so CLI surfaces
+/// keep working unchanged).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Default)]
+pub enum Method {
+    /// Accelerated projection-based consensus (Algorithm 1).
+    #[default]
+    Apc,
+    /// Plain projection-based consensus (APC with `γ = η = 1`).
+    Consensus,
+    /// Distributed gradient descent.
+    Dgd,
+    /// Distributed Nesterov accelerated gradient.
+    Nag,
+    /// Distributed heavy-ball momentum.
+    Hbm,
+    /// Block Cimmino.
+    Cimmino,
+    /// Modified distributed ADMM (§5).
+    Admm,
+    /// §6 preconditioned HBM (whitened system, APC's rate).
+    Phbm,
+}
+
+impl Method {
+    /// Every method, in [`super::suite::ALL`] order.
+    pub const ALL: [Method; 8] = [
+        Method::Dgd,
+        Method::Nag,
+        Method::Hbm,
+        Method::Admm,
+        Method::Cimmino,
+        Method::Apc,
+        Method::Consensus,
+        Method::Phbm,
+    ];
+
+    /// The lowercase string key used by the CLI, benches, and the old
+    /// `suite` functions.
+    pub fn key(self) -> &'static str {
+        match self {
+            Method::Apc => "apc",
+            Method::Consensus => "consensus",
+            Method::Dgd => "dgd",
+            Method::Nag => "nag",
+            Method::Hbm => "hbm",
+            Method::Cimmino => "cimmino",
+            Method::Admm => "admm",
+            Method::Phbm => "phbm",
+        }
+    }
+
+    /// Parse a CLI/config name ("apc", "hbm", …).
+    pub fn parse(name: &str) -> Result<Method> {
+        Ok(match name {
+            "apc" => Method::Apc,
+            "consensus" => Method::Consensus,
+            "dgd" => Method::Dgd,
+            "nag" => Method::Nag,
+            "hbm" => Method::Hbm,
+            "cimmino" => Method::Cimmino,
+            "admm" => Method::Admm,
+            "phbm" => Method::Phbm,
+            other => bail!(
+                "unknown solver {:?} (expected one of {:?})",
+                other,
+                super::suite::ALL
+            ),
+        })
+    }
+}
+
+impl std::str::FromStr for Method {
+    type Err = anyhow::Error;
+    fn from_str(s: &str) -> Result<Method> {
+        Method::parse(s)
+    }
+}
+
+impl std::fmt::Display for Method {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.key())
+    }
+}
+
+/// Construct an optimally tuned, *empty* (zero-lane) streaming engine
+/// for `method` — the engine a [`StreamingBatch`] or the serve layer
+/// grows lanes into. `phbm` must stream through
+/// [`super::phbm::Phbm::streaming_engine`] (the engine needs the cached
+/// whitening factor, which lives on the solver), so it is rejected
+/// here.
+pub(crate) fn empty_engine<'a>(
+    method: Method,
+    sys: &'a PartitionedSystem,
+    s: &SpectralInfo,
+) -> Result<Box<dyn BatchEngine + 'a>> {
+    Ok(match method {
+        Method::Apc => {
+            let p = rates::apc_optimal(s.mu_min, s.mu_max)?;
+            Box::new(ApcBatch::new(sys, &[], p.gamma, p.eta)?)
+        }
+        Method::Consensus => Box::new(ApcBatch::new(sys, &[], 1.0, 1.0)?),
+        Method::Dgd => {
+            let (alpha, _) = rates::dgd_optimal(s.lambda_min, s.lambda_max);
+            Box::new(GradBatch::new(sys, &[], GradRule::Dgd { alpha })?)
+        }
+        Method::Nag => {
+            let (alpha, beta, _) = rates::nag_optimal(s.lambda_min, s.lambda_max);
+            Box::new(GradBatch::new(sys, &[], GradRule::Nag { alpha, beta })?)
+        }
+        Method::Hbm => {
+            let (alpha, beta, _) = rates::hbm_optimal(s.lambda_min, s.lambda_max);
+            Box::new(GradBatch::new(sys, &[], GradRule::Hbm { alpha, beta })?)
+        }
+        Method::Cimmino => {
+            let (nu, _) = rates::cimmino_optimal(s.mu_min, s.mu_max, sys.m());
+            Box::new(CimminoBatch::new(sys, &[], nu)?)
+        }
+        Method::Admm => {
+            let (xi, _) = rates::admm_optimal(sys, s)?;
+            Box::new(crate::solvers::batch::AdmmBatch::new(sys, &[], xi)?)
+        }
+        Method::Phbm => bail!(
+            "phbm streams through Phbm::streaming_engine (the whitened \
+             engine needs the solver's cached preconditioner factor)"
+        ),
+    })
+}
+
+/// Construct the optimally tuned single-process solver — the logic the
+/// deprecated `suite::tuned_solver{,_prec}` shims now delegate to.
+pub(crate) fn tuned_boxed(
+    method: Method,
+    sys: &PartitionedSystem,
+    s: &SpectralInfo,
+    precision: Precision,
+) -> Result<Box<dyn Solver>> {
+    use super::{admm::Admm, apc::Apc, cimmino::Cimmino, consensus::Consensus, dgd::Dgd,
+                hbm::Hbm, nag::Nag, phbm::Phbm};
+    match precision {
+        Precision::F64 => Ok(match method {
+            Method::Apc => Box::new(Apc::auto_with_spectral(sys, s)?),
+            Method::Consensus => Box::new(Consensus::new(sys)?),
+            Method::Dgd => Box::new(Dgd::auto_with_spectral(sys, s)),
+            Method::Nag => Box::new(Nag::auto_with_spectral(sys, s)),
+            Method::Hbm => Box::new(Hbm::auto_with_spectral(sys, s)),
+            Method::Cimmino => Box::new(Cimmino::auto_with_spectral(sys, s)),
+            Method::Admm => Box::new(Admm::auto_with_spectral(sys, s)?),
+            Method::Phbm => Box::new(Phbm::auto_with_spectral(sys, s)?),
+        }),
+        Precision::MixedRefined { refresh_every } => {
+            if method == Method::Phbm {
+                bail!(
+                    "phbm has no mixed-precision wrapper: build \
+                     Method::Hbm with Precision::MixedRefined on \
+                     sys.preconditioned() instead"
+                );
+            }
+            Ok(Box::new(Refined::tuned(method.key(), sys, s, refresh_every)?))
+        }
+    }
+}
+
+/// Builder for a [`Session`]: the single documented way to construct a
+/// tuned solver in any mode. See the module docs for the idiom.
+#[derive(Clone, Debug)]
+pub struct SolveBuilder<'a> {
+    sys: &'a PartitionedSystem,
+    method: Method,
+    precision: Precision,
+    backend: Backend,
+    run: RunConfig,
+    spectral: Option<SpectralInfo>,
+    width: usize,
+    admission: Option<Admission>,
+}
+
+impl<'a> SolveBuilder<'a> {
+    /// Start building against `sys` with defaults: [`Method::Apc`],
+    /// full f64, native backend, default [`RunConfig`], lane budget 16.
+    pub fn new(sys: &'a PartitionedSystem) -> Self {
+        SolveBuilder {
+            sys,
+            method: Method::Apc,
+            precision: Precision::F64,
+            backend: Backend::Native,
+            run: RunConfig::default(),
+            spectral: None,
+            width: 16,
+            admission: None,
+        }
+    }
+
+    /// Select the iterative method (default [`Method::Apc`]).
+    pub fn method(mut self, method: Method) -> Self {
+        self.method = method;
+        self
+    }
+
+    /// Select the precision policy (default [`Precision::F64`]).
+    /// `MixedRefined` applies to single-RHS and batched solves; the
+    /// streaming engines are f64-only, so `.streaming(..)` rejects it.
+    pub fn precision(mut self, precision: Precision) -> Self {
+        self.precision = precision;
+        self
+    }
+
+    /// Select the compute backend. [`Backend::Native`] is the only
+    /// in-process backend; [`Backend::Hlo`] runs require the
+    /// distributed [`crate::coordinator::Coordinator`] (it owns the
+    /// runtime manifest), so [`Self::session`] rejects it with a
+    /// pointer there.
+    pub fn backend(mut self, backend: Backend) -> Self {
+        self.backend = backend;
+        self
+    }
+
+    /// Set the shared convergence policy (tolerance, round cap, history
+    /// cadence) for every solve issued through the session.
+    pub fn run(mut self, run: RunConfig) -> Self {
+        self.run = run;
+        self
+    }
+
+    /// Supply a precomputed spectrum instead of paying
+    /// [`SpectralInfo::for_tuning`] inside [`Self::session`] — the
+    /// serve layer tunes once per prepared system and reuses it.
+    pub fn spectral(mut self, s: SpectralInfo) -> Self {
+        self.spectral = Some(s);
+        self
+    }
+
+    /// Set the lane budget: batch width for [`Session::solve_batch`],
+    /// `max_width` for a streaming session (default 16).
+    pub fn batch(mut self, k: usize) -> Self {
+        self.width = k;
+        self
+    }
+
+    /// Make [`Self::session`] produce a *streaming* session: an
+    /// admission-controlled [`StreamingBatch`] over the tuned engine,
+    /// instead of a request/response solver.
+    pub fn streaming(mut self, admission: Admission) -> Self {
+        self.admission = Some(admission);
+        self
+    }
+
+    /// Build just the tuned [`Solver`] trait object, for callers that
+    /// drive the low-level `solve(sys, opts)` surface themselves (the
+    /// paper-table benches pass `Metric::ErrorVsTruth`, which a
+    /// [`Session`] — residual-metric by design — does not expose).
+    /// Ignores `.batch(..)`/`.streaming(..)`.
+    pub fn solver(self) -> Result<Box<dyn Solver>> {
+        if self.backend == Backend::Hlo {
+            bail!(
+                "SolveBuilder drives in-process sessions (Backend::Native); \
+                 HLO execution goes through coordinator::Coordinator, which \
+                 owns the runtime manifest"
+            );
+        }
+        let spectral = match self.spectral {
+            Some(s) => s,
+            None => SpectralInfo::for_tuning(self.sys).context("tuning spectrum")?,
+        };
+        tuned_boxed(self.method, self.sys, &spectral, self.precision)
+    }
+
+    /// Build the [`Session`]. Tunes from the supplied or computed
+    /// spectrum, constructs the solver or streaming engine, and
+    /// validates the mode combination (see [`Self::backend`],
+    /// [`Self::precision`]).
+    pub fn session(self) -> Result<Session<'a>> {
+        if self.backend == Backend::Hlo {
+            bail!(
+                "SolveBuilder drives in-process sessions (Backend::Native); \
+                 HLO execution goes through coordinator::Coordinator, which \
+                 owns the runtime manifest"
+            );
+        }
+        let spectral = match self.spectral {
+            Some(s) => s,
+            None => SpectralInfo::for_tuning(self.sys).context("tuning spectrum")?,
+        };
+        let mode = match self.admission {
+            None => Mode::Direct { solver: tuned_boxed(self.method, self.sys, &spectral, self.precision)? },
+            Some(admission) => {
+                if self.precision != Precision::F64 {
+                    bail!(
+                        "streaming engines are f64-only: Precision::MixedRefined \
+                         applies to single-RHS and batched sessions"
+                    );
+                }
+                let engine = empty_engine(self.method, self.sys, &spectral)?;
+                let opts = StreamOptions { max_width: self.width, run: self.run, admission };
+                Mode::Streaming {
+                    stream: StreamingBatch::new(engine, self.sys, opts, self.method.key())?,
+                }
+            }
+        };
+        Ok(Session { sys: self.sys, method: self.method, run: self.run, spectral, mode })
+    }
+}
+
+enum Mode<'a> {
+    Direct { solver: Box<dyn Solver> },
+    Streaming { stream: StreamingBatch<'a, Box<dyn BatchEngine + 'a>> },
+}
+
+/// A configured solve session: one tuned method bound to one system,
+/// answering single-RHS ([`Session::solve`]), batched
+/// ([`Session::solve_batch`]) and — when built with
+/// [`SolveBuilder::streaming`] — streaming queries
+/// ([`Session::stream`]).
+pub struct Session<'a> {
+    sys: &'a PartitionedSystem,
+    method: Method,
+    run: RunConfig,
+    spectral: SpectralInfo,
+    mode: Mode<'a>,
+}
+
+impl<'a> Session<'a> {
+    /// The method this session was tuned for.
+    pub fn method(&self) -> Method {
+        self.method
+    }
+
+    /// The convergence policy every solve in this session runs under.
+    pub fn run_config(&self) -> RunConfig {
+        self.run
+    }
+
+    /// The spectrum the session tuned from (computed once at build).
+    pub fn spectral(&self) -> &SpectralInfo {
+        &self.spectral
+    }
+
+    /// Solve `A x = rhs` and report the trajectory. Rebinds the
+    /// session's solver to the new right-hand side (the cached
+    /// factorizations carry over), so repeated calls pay only the
+    /// iteration cost.
+    pub fn solve(&mut self, rhs: &[f64]) -> Result<SolveReport> {
+        let solver = match &mut self.mode {
+            Mode::Direct { solver } => solver,
+            Mode::Streaming { .. } => bail!(
+                "streaming session: submit through Session::stream \
+                 (or build without .streaming(..) for request/response)"
+            ),
+        };
+        let mut work = self.sys.clone();
+        work.set_rhs(rhs)?;
+        solver.rebind(&work)?;
+        solver.solve(&work, &SolverOptions { run: self.run, metric: Metric::Residual })
+    }
+
+    /// Solve one synchronous batch of right-hand sides (one machine
+    /// phase per round covers every lane; converged lanes deflate).
+    pub fn solve_batch(&mut self, rhs: &[Vec<f64>]) -> Result<BatchReport> {
+        let solver = match &mut self.mode {
+            Mode::Direct { solver } => solver,
+            Mode::Streaming { .. } => bail!(
+                "streaming session: submit through Session::stream \
+                 (or build without .streaming(..) for batched solves)"
+            ),
+        };
+        let opts = BatchOptions::with_run(self.run);
+        solver.solve_batch(self.sys, rhs, &opts)
+    }
+
+    /// The streaming driver, for sessions built with
+    /// [`SolveBuilder::streaming`]: submit queries, tick rounds, and
+    /// collect per-query reports through it.
+    pub fn stream(&mut self) -> Result<&mut StreamingBatch<'a, Box<dyn BatchEngine + 'a>>> {
+        match &mut self.mode {
+            Mode::Streaming { stream } => Ok(stream),
+            Mode::Direct { .. } => bail!(
+                "request/response session: call .streaming(admission) on the \
+                 builder for a streaming driver"
+            ),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gen::problems::Problem;
+    use crate::linalg::vector::relative_error;
+
+    fn build(n: usize, m: usize, seed: u64) -> (PartitionedSystem, Vec<f64>, Vec<f64>) {
+        let p = Problem::standard_gaussian(n, n, m).build(seed);
+        let sys = PartitionedSystem::split_even(&p.a, &p.b, m).unwrap();
+        (sys, p.b, p.x_star)
+    }
+
+    #[test]
+    fn method_parses_every_suite_name() {
+        for name in crate::solvers::suite::ALL {
+            let m = Method::parse(name).unwrap();
+            assert_eq!(m.key(), name);
+            assert_eq!(name.parse::<Method>().unwrap(), m);
+        }
+        assert!(Method::parse("bogus").is_err());
+        assert_eq!(Method::ALL.len(), crate::solvers::suite::ALL.len());
+    }
+
+    #[test]
+    fn builder_single_rhs_matches_truth() {
+        let (sys, b, xstar) = build(24, 3, 11);
+        let mut session = SolveBuilder::new(&sys)
+            .method(Method::Apc)
+            .run(RunConfig::new(1e-10, 200_000))
+            .session()
+            .unwrap();
+        let rep = session.solve(&b).unwrap();
+        assert!(rep.converged, "err {:.2e}", rep.final_error);
+        assert!(relative_error(&rep.solution, &xstar) < 1e-8);
+        // second solve through the same session: rebind, same answer
+        let rep2 = session.solve(&b).unwrap();
+        assert!(relative_error(&rep2.solution, &xstar) < 1e-8);
+    }
+
+    #[test]
+    fn builder_covers_every_method_and_precision() {
+        let (sys, b, xstar) = build(24, 3, 13);
+        for method in Method::ALL {
+            let mut session = SolveBuilder::new(&sys)
+                .method(method)
+                .run(RunConfig::new(1e-6, 2_000_000))
+                .session()
+                .unwrap();
+            let rep = session.solve(&b).unwrap();
+            assert!(rep.converged, "{method}: err {:.2e}", rep.final_error);
+            assert!(relative_error(&rep.solution, &xstar) < 1e-4, "{method}");
+        }
+        // mixed precision wraps in the +IR engine
+        let mut mixed = SolveBuilder::new(&sys)
+            .method(Method::Apc)
+            .precision(Precision::default_mixed())
+            .run(RunConfig::new(1e-10, 200_000))
+            .session()
+            .unwrap();
+        let rep = mixed.solve(&b).unwrap();
+        assert!(rep.converged && rep.solver == "APC+IR", "{}", rep.solver);
+        // phbm has no mixed wrapper
+        assert!(SolveBuilder::new(&sys)
+            .method(Method::Phbm)
+            .precision(Precision::default_mixed())
+            .session()
+            .is_err());
+    }
+
+    #[test]
+    fn builder_batch_solves_every_column() {
+        let (sys, b, xstar) = build(24, 3, 17);
+        let rhs = vec![b.clone(), b.iter().map(|v| 2.0 * v).collect::<Vec<f64>>()];
+        let mut session = SolveBuilder::new(&sys)
+            .method(Method::Cimmino)
+            .run(RunConfig::new(1e-9, 500_000))
+            .batch(2)
+            .session()
+            .unwrap();
+        let rep = session.solve_batch(&rhs).unwrap();
+        assert!(rep.columns.iter().all(|c| c.converged));
+        assert!(relative_error(&rep.columns[0].solution, &xstar) < 1e-7);
+        let doubled: Vec<f64> = xstar.iter().map(|v| 2.0 * v).collect();
+        assert!(relative_error(&rep.columns[1].solution, &doubled) < 1e-7);
+    }
+
+    #[test]
+    fn builder_streaming_session_drains() {
+        let (sys, b, xstar) = build(24, 3, 19);
+        let mut session = SolveBuilder::new(&sys)
+            .method(Method::Apc)
+            .run(RunConfig::new(1e-10, 100_000))
+            .batch(2)
+            .streaming(Admission::Refill)
+            .session()
+            .unwrap();
+        // mode guards
+        assert!(session.solve(&b).is_err());
+        assert!(session.solve_batch(&[b.clone()]).is_err());
+        let stream = session.stream().unwrap();
+        for _ in 0..3 {
+            stream.submit(b.clone()).unwrap();
+        }
+        stream.run_to_drain().unwrap();
+        for id in 0..3 {
+            let rep = stream.report(id).unwrap();
+            assert!(rep.converged);
+            assert!(relative_error(&rep.solution, &xstar) < 1e-8, "query {id}");
+        }
+        // streaming modes that cannot work are rejected at build
+        assert!(SolveBuilder::new(&sys)
+            .method(Method::Phbm)
+            .streaming(Admission::Refill)
+            .session()
+            .is_err());
+        assert!(SolveBuilder::new(&sys)
+            .precision(Precision::default_mixed())
+            .streaming(Admission::Refill)
+            .session()
+            .is_err());
+    }
+
+    #[test]
+    fn builder_rejects_hlo_backend() {
+        let (sys, _, _) = build(20, 2, 23);
+        let err = SolveBuilder::new(&sys)
+            .backend(Backend::Hlo)
+            .session()
+            .unwrap_err();
+        assert!(err.to_string().contains("Coordinator"), "{err}");
+    }
+}

@@ -107,19 +107,14 @@ impl Solver for Cimmino {
 mod tests {
     use super::*;
     use crate::gen::problems::Problem;
-    use crate::solvers::{Metric, SolverOptions};
+    use crate::solvers::{Metric, RunConfig, SolverOptions};
 
     #[test]
     fn cimmino_converges() {
         let p = Problem::standard_gaussian(30, 30, 3).build(21);
         let sys = PartitionedSystem::split_even(&p.a, &p.b, 3).unwrap();
         let mut solver = Cimmino::auto(&sys).unwrap();
-        let opts = SolverOptions {
-            tol: 1e-8,
-            max_iter: 500_000,
-            metric: Metric::ErrorVsTruth(p.x_star.clone()),
-            ..Default::default()
-        };
+        let opts = SolverOptions { run: RunConfig::new(1e-8, 500_000), metric: Metric::ErrorVsTruth(p.x_star.clone()) };
         let rep = solver.solve(&sys, &opts).unwrap();
         assert!(rep.converged, "Cimmino err {:.2e} after {}", rep.final_error, rep.iterations);
     }

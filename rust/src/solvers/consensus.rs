@@ -58,18 +58,13 @@ mod tests {
     use crate::gen::problems::Problem;
     use crate::rates::{consensus_rho, SpectralInfo};
     use crate::solvers::apc::Apc;
-    use crate::solvers::{fit_decay_rate, Metric, SolverOptions};
+    use crate::solvers::{fit_decay_rate, Metric, RunConfig, SolverOptions};
 
     #[test]
     fn consensus_converges_but_slower_than_apc() {
         let p = Problem::standard_gaussian(30, 30, 3).build(41);
         let sys = PartitionedSystem::split_even(&p.a, &p.b, 3).unwrap();
-        let opts = SolverOptions {
-            tol: 1e-6,
-            max_iter: 2_000_000,
-            metric: Metric::ErrorVsTruth(p.x_star.clone()),
-            ..Default::default()
-        };
+        let opts = SolverOptions { run: RunConfig::new(1e-6, 2_000_000), metric: Metric::ErrorVsTruth(p.x_star.clone()) };
         let rep_con = Consensus::new(&sys).unwrap().solve(&sys, &opts).unwrap();
         let rep_apc = Apc::auto(&sys).unwrap().solve(&sys, &opts).unwrap();
         assert!(rep_con.converged, "consensus err {:.2e}", rep_con.final_error);
@@ -89,13 +84,7 @@ mod tests {
         let s = SpectralInfo::compute(&sys).unwrap();
         let rho = consensus_rho(s.mu_min);
         let mut solver = Consensus::new(&sys).unwrap();
-        let opts = SolverOptions {
-            tol: 0.0,
-            max_iter: 3_000,
-            metric: Metric::ErrorVsTruth(p.x_star.clone()),
-            record_every: 1,
-            ..Default::default()
-        };
+        let opts = SolverOptions { run: RunConfig::new(0.0, 3_000).recorded(1), metric: Metric::ErrorVsTruth(p.x_star.clone()) };
         let rep = solver.solve(&sys, &opts).unwrap();
         let measured = fit_decay_rate(&rep.history).unwrap();
         assert!(

@@ -98,18 +98,14 @@ impl Solver for Dgd {
 mod tests {
     use super::*;
     use crate::gen::problems::Problem;
-    use crate::solvers::{fit_decay_rate, Metric, SolverOptions};
+    use crate::solvers::{fit_decay_rate, Metric, RunConfig, SolverOptions};
 
     #[test]
     fn dgd_converges_on_well_conditioned() {
         let p = Problem::with_condition("dgd-easy", 30, 30, 3, 25.0).build(3);
         let sys = PartitionedSystem::split_even(&p.a, &p.b, 3).unwrap();
         let mut solver = Dgd::auto(&sys).unwrap();
-        let opts = SolverOptions {
-            tol: 1e-9,
-            metric: Metric::ErrorVsTruth(p.x_star.clone()),
-            ..Default::default()
-        };
+        let opts = SolverOptions { run: RunConfig { tol: 1e-9, ..RunConfig::default() }, metric: Metric::ErrorVsTruth(p.x_star.clone()) };
         let rep = solver.solve(&sys, &opts).unwrap();
         assert!(rep.converged, "DGD err {:.2e} after {}", rep.final_error, rep.iterations);
     }
@@ -121,13 +117,7 @@ mod tests {
         let s = SpectralInfo::compute(&sys).unwrap();
         let (_, rho) = dgd_optimal(s.lambda_min, s.lambda_max);
         let mut solver = Dgd::auto_with_spectral(&sys, &s);
-        let opts = SolverOptions {
-            tol: 1e-13,
-            max_iter: 400,
-            metric: Metric::ErrorVsTruth(p.x_star.clone()),
-            record_every: 1,
-            ..Default::default()
-        };
+        let opts = SolverOptions { run: RunConfig::new(1e-13, 400).recorded(1), metric: Metric::ErrorVsTruth(p.x_star.clone()) };
         let rep = solver.solve(&sys, &opts).unwrap();
         let measured = fit_decay_rate(&rep.history).unwrap();
         assert!(
@@ -144,12 +134,7 @@ mod tests {
         let sys = PartitionedSystem::split_even(&p.a, &p.b, 2).unwrap();
         let s = SpectralInfo::compute(&sys).unwrap();
         let mut solver = Dgd::with_params(&sys, 2.5 / s.lambda_max * 2.0);
-        let opts = SolverOptions {
-            tol: 0.0,
-            max_iter: 100,
-            metric: Metric::ErrorVsTruth(p.x_star.clone()),
-            ..Default::default()
-        };
+        let opts = SolverOptions { run: RunConfig::new(0.0, 100), metric: Metric::ErrorVsTruth(p.x_star.clone()) };
         let rep = solver.solve(&sys, &opts).unwrap();
         assert!(rep.final_error > 1.0 || !rep.final_error.is_finite());
     }

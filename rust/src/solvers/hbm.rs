@@ -110,18 +110,14 @@ mod tests {
     use super::*;
     use crate::gen::problems::Problem;
     use crate::solvers::nag::Nag;
-    use crate::solvers::{fit_decay_rate, Metric, SolverOptions};
+    use crate::solvers::{fit_decay_rate, Metric, RunConfig, SolverOptions};
 
     #[test]
     fn hbm_converges() {
         let p = Problem::with_condition("hbm-mid", 30, 30, 3, 1000.0).build(4);
         let sys = PartitionedSystem::split_even(&p.a, &p.b, 3).unwrap();
         let mut solver = Hbm::auto(&sys).unwrap();
-        let opts = SolverOptions {
-            tol: 1e-9,
-            metric: Metric::ErrorVsTruth(p.x_star.clone()),
-            ..Default::default()
-        };
+        let opts = SolverOptions { run: RunConfig { tol: 1e-9, ..RunConfig::default() }, metric: Metric::ErrorVsTruth(p.x_star.clone()) };
         let rep = solver.solve(&sys, &opts).unwrap();
         assert!(rep.converged, "D-HBM err {:.2e}", rep.final_error);
     }
@@ -133,13 +129,7 @@ mod tests {
         let s = SpectralInfo::compute(&sys).unwrap();
         let (_, _, rho) = hbm_optimal(s.lambda_min, s.lambda_max);
         let mut solver = Hbm::auto_with_spectral(&sys, &s);
-        let opts = SolverOptions {
-            tol: 1e-12,
-            max_iter: 2_000,
-            metric: Metric::ErrorVsTruth(p.x_star.clone()),
-            record_every: 1,
-            ..Default::default()
-        };
+        let opts = SolverOptions { run: RunConfig::new(1e-12, 2_000).recorded(1), metric: Metric::ErrorVsTruth(p.x_star.clone()) };
         let rep = solver.solve(&sys, &opts).unwrap();
         let measured = fit_decay_rate(&rep.history).unwrap();
         // heavy-ball's non-normal iteration matrix makes the transient
@@ -157,12 +147,7 @@ mod tests {
         let p = Problem::with_condition("hbm-vs-nag", 32, 32, 4, 5000.0).build(8);
         let sys = PartitionedSystem::split_even(&p.a, &p.b, 4).unwrap();
         let s = SpectralInfo::compute(&sys).unwrap();
-        let opts = SolverOptions {
-            tol: 1e-8,
-            max_iter: 200_000,
-            metric: Metric::ErrorVsTruth(p.x_star.clone()),
-            ..Default::default()
-        };
+        let opts = SolverOptions { run: RunConfig::new(1e-8, 200_000), metric: Metric::ErrorVsTruth(p.x_star.clone()) };
         let rep_hbm = Hbm::auto_with_spectral(&sys, &s).solve(&sys, &opts).unwrap();
         let rep_nag = Nag::auto_with_spectral(&sys, &s).solve(&sys, &opts).unwrap();
         assert!(rep_hbm.converged && rep_nag.converged);

@@ -13,6 +13,8 @@
 //! | [`phbm`] | §6 preconditioned heavy-ball | 2pn | 2pnk over the whitened blocks | same as APC |
 //! | [`stream`] | streaming batch refill (any engine above) | 2pn·k_active | holds k at `max_width` under load | inherits the engine's ρ per lane |
 //! | [`refine`] | mixed-precision iterative refinement (f32 machine phase for any method above except P-HBM) | pn flops *in f32* — half the bytes, double the SIMD lanes | — | inner rounds inherit the engine's ρ; outer restarts pin f64 accuracy |
+//! | [`builder`] | [`builder::SolveBuilder`] → [`builder::Session`]: the one construction entry point (method × precision × batch × streaming) | — | — | — |
+//! | [`crate::serve`] | multi-tenant serving front-end over [`stream`]: prepared-system LRU cache, arrival-window admission, per-tenant SLO metrics | one driver tick per resident system per server round | per-system `max_width` | inherits the engine's ρ per lane |
 //!
 //! The batched column costs every method `2pnk` flops per machine per
 //! round in **one** streamed pass of `A_i` (GEMM/SpMM over an `n×k`
@@ -43,6 +45,7 @@
 pub mod admm;
 pub mod apc;
 pub mod batch;
+pub mod builder;
 pub mod cimmino;
 pub mod consensus;
 pub mod dgd;
@@ -61,8 +64,8 @@ use anyhow::Result;
 /// Arithmetic precision policy for a solve.
 ///
 /// Orthogonal to [`SolverOptions`] (which governs stopping, not
-/// arithmetic): the suite plumbs it through
-/// [`suite::tuned_solver_prec`], picking between the plain f64 engines
+/// arithmetic): [`builder::SolveBuilder::precision`] plumbs it through
+/// construction, picking between the plain f64 engines
 /// and their [`refine`]-wrapped mixed-precision counterparts. With
 /// `MixedRefined`, machines run their projection / gradient / prox
 /// steps on f32 casts of their operators and factors while the master
@@ -102,30 +105,67 @@ impl Default for Precision {
 }
 
 /// Stopping metric for a solve.
-#[derive(Clone, Debug)]
+#[derive(Clone, Debug, Default)]
 pub enum Metric {
     /// Relative residual `‖Ax̄ − b‖/‖b‖` (practical stopping rule).
+    #[default]
     Residual,
     /// Relative error `‖x̄ − x*‖/‖x*‖` against a known solution — the
     /// paper's Figure-2 y-axis; used by all reproduction benches.
     ErrorVsTruth(Vec<f64>),
 }
 
-/// Options controlling a [`Solver::solve`] run.
-#[derive(Clone, Debug)]
-pub struct SolverOptions {
+/// The convergence policy every driver shares: when to stop iterating and
+/// how often to sample the metric. Embedded by [`SolverOptions`]
+/// (single-RHS), [`batch::BatchOptions`] (batched), [`stream::StreamOptions`]
+/// (streaming, applied per query-age clock) and
+/// [`crate::serve::ServeConfig`] (the serving front-end), so tolerance /
+/// round-budget / history cadence are specified once and cannot drift
+/// between paths.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct RunConfig {
+    /// Round cap. On the batched/streaming paths this bounds each
+    /// column/query independently (its own round clock).
     pub max_iter: usize,
-    /// Stop when the metric first drops below `tol`.
+    /// Stop (deflate, on the multi-RHS paths) when the metric first drops
+    /// below `tol`.
     pub tol: f64,
-    pub metric: Metric,
-    /// Record the metric every `record_every` iterations into the report
-    /// history (0 = no history).
+    /// Record the metric every `record_every` rounds into the history
+    /// (0 = no history).
     pub record_every: usize,
 }
 
-impl Default for SolverOptions {
+impl Default for RunConfig {
     fn default() -> Self {
-        SolverOptions { max_iter: 50_000, tol: 1e-8, metric: Metric::Residual, record_every: 0 }
+        RunConfig { max_iter: 50_000, tol: 1e-8, record_every: 0 }
+    }
+}
+
+impl RunConfig {
+    /// Policy with the given tolerance and round cap, no history.
+    pub fn new(tol: f64, max_iter: usize) -> Self {
+        RunConfig { max_iter, tol, record_every: 0 }
+    }
+
+    /// Same policy, recording every `every` rounds.
+    pub fn recorded(mut self, every: usize) -> Self {
+        self.record_every = every;
+        self
+    }
+}
+
+/// Options controlling a [`Solver::solve`] run: the shared convergence
+/// policy plus the single-RHS stopping metric.
+#[derive(Clone, Debug, Default)]
+pub struct SolverOptions {
+    pub run: RunConfig,
+    pub metric: Metric,
+}
+
+impl SolverOptions {
+    /// Options from a convergence policy with the residual metric.
+    pub fn with_run(run: RunConfig) -> Self {
+        SolverOptions { run, metric: Metric::Residual }
     }
 }
 
@@ -175,8 +215,9 @@ pub trait Solver {
         Ok(())
     }
 
-    /// Run until `opts.tol` or `opts.max_iter`.
+    /// Run until `opts.run.tol` or `opts.run.max_iter`.
     fn solve(&mut self, sys: &PartitionedSystem, opts: &SolverOptions) -> Result<SolveReport> {
+        let run = opts.run;
         let eval = |xbar: &[f64]| -> f64 {
             match &opts.metric {
                 Metric::Residual => sys.relative_residual(xbar),
@@ -185,15 +226,15 @@ pub trait Solver {
         };
         let mut history = Vec::new();
         let mut err = eval(self.xbar());
-        if opts.record_every > 0 {
+        if run.record_every > 0 {
             history.push((0, err));
         }
         let mut it = 0usize;
-        while it < opts.max_iter && !(err <= opts.tol) && err.is_finite() {
+        while it < run.max_iter && !(err <= run.tol) && err.is_finite() {
             self.iterate(sys);
             it += 1;
             err = eval(self.xbar());
-            if opts.record_every > 0 && it % opts.record_every == 0 {
+            if run.record_every > 0 && it % run.record_every == 0 {
                 history.push((it, err));
             }
         }
@@ -202,8 +243,8 @@ pub trait Solver {
         // record_every cadence — the batched driver mirrors this on
         // deflation freeze. A max_iter exit records nothing extra (the
         // horizon is the caller's cut, not the trajectory's).
-        if opts.record_every > 0
-            && (err <= opts.tol || !err.is_finite())
+        if run.record_every > 0
+            && (err <= run.tol || !err.is_finite())
             && history.last().map(|&(i, _)| i) != Some(it)
         {
             history.push((it, err));
@@ -211,7 +252,7 @@ pub trait Solver {
         Ok(SolveReport {
             solver: self.name(),
             iterations: it,
-            converged: err <= opts.tol,
+            converged: err <= run.tol,
             final_error: err,
             history,
             solution: self.xbar().to_vec(),
@@ -307,8 +348,7 @@ mod tests {
     fn residual_early_stop_contract(mut solver: impl Solver) {
         let sys = plumbing_sys(71);
         let tol = 1e-6;
-        let opts =
-            SolverOptions { tol, metric: Metric::Residual, max_iter: 500_000, record_every: 0 };
+        let opts = SolverOptions::with_run(RunConfig::new(tol, 500_000));
         let rep = solver.solve(&sys, &opts).unwrap();
         assert!(rep.converged, "{}: residual stop never fired", rep.solver);
         // stopped exactly when the metric crossed tol…
@@ -318,7 +358,10 @@ mod tests {
         // still sit above tol (early-stop fired at the first crossing)
         assert!(rep.iterations > 0);
         solver.reset(&sys);
-        let capped = SolverOptions { max_iter: rep.iterations - 1, ..opts.clone() };
+        let capped = SolverOptions {
+            run: RunConfig { max_iter: rep.iterations - 1, ..opts.run },
+            ..opts.clone()
+        };
         let rep_short = solver.solve(&sys, &capped).unwrap();
         assert!(!rep_short.converged, "{}: stopped late", rep_short.solver);
         assert!(rep_short.final_error > tol);
@@ -330,12 +373,8 @@ mod tests {
     fn record_every_contract(mut solver: impl Solver) {
         let sys = plumbing_sys(73);
         let (cap, every) = (25usize, 4usize);
-        let opts = SolverOptions {
-            tol: 0.0, // run the full horizon
-            metric: Metric::Residual,
-            max_iter: cap,
-            record_every: every,
-        };
+        // tol 0.0 runs the full horizon
+        let opts = SolverOptions::with_run(RunConfig::new(0.0, cap).recorded(every));
         let init_err = sys.relative_residual(solver.xbar());
         let rep = solver.solve(&sys, &opts).unwrap();
         assert!(!rep.converged);

@@ -109,18 +109,14 @@ mod tests {
     use super::*;
     use crate::gen::problems::Problem;
     use crate::solvers::dgd::Dgd;
-    use crate::solvers::{Metric, SolverOptions};
+    use crate::solvers::{Metric, RunConfig, SolverOptions};
 
     #[test]
     fn nag_converges() {
         let p = Problem::with_condition("nag-mid", 30, 30, 3, 400.0).build(11);
         let sys = PartitionedSystem::split_even(&p.a, &p.b, 3).unwrap();
         let mut solver = Nag::auto(&sys).unwrap();
-        let opts = SolverOptions {
-            tol: 1e-9,
-            metric: Metric::ErrorVsTruth(p.x_star.clone()),
-            ..Default::default()
-        };
+        let opts = SolverOptions { run: RunConfig { tol: 1e-9, ..RunConfig::default() }, metric: Metric::ErrorVsTruth(p.x_star.clone()) };
         let rep = solver.solve(&sys, &opts).unwrap();
         assert!(rep.converged, "D-NAG err {:.2e}", rep.final_error);
     }
@@ -130,12 +126,7 @@ mod tests {
         let p = Problem::with_condition("nag-vs-dgd", 32, 32, 4, 2000.0).build(2);
         let sys = PartitionedSystem::split_even(&p.a, &p.b, 4).unwrap();
         let s = SpectralInfo::compute(&sys).unwrap();
-        let opts = SolverOptions {
-            tol: 1e-8,
-            max_iter: 100_000,
-            metric: Metric::ErrorVsTruth(p.x_star.clone()),
-            ..Default::default()
-        };
+        let opts = SolverOptions { run: RunConfig::new(1e-8, 100_000), metric: Metric::ErrorVsTruth(p.x_star.clone()) };
         let rep_nag = Nag::auto_with_spectral(&sys, &s).solve(&sys, &opts).unwrap();
         let rep_dgd = Dgd::auto_with_spectral(&sys, &s).solve(&sys, &opts).unwrap();
         assert!(rep_nag.converged && rep_dgd.converged);

@@ -193,7 +193,7 @@ mod tests {
     use super::*;
     use crate::gen::problems::Problem;
     use crate::linalg::sym_eigen;
-    use crate::solvers::{Metric, SolverOptions};
+    use crate::solvers::{Metric, RunConfig, SolverOptions};
 
     #[test]
     fn kappa_ctc_equals_kappa_x() {
@@ -215,12 +215,7 @@ mod tests {
         let p = Problem::nonzero_mean_gaussian(30, 30, 3).build(63);
         let sys = PartitionedSystem::split_even(&p.a, &p.b, 3).unwrap();
         let mut solver = Phbm::auto(&sys).unwrap();
-        let opts = SolverOptions {
-            tol: 1e-9,
-            max_iter: 200_000,
-            metric: Metric::ErrorVsTruth(p.x_star.clone()),
-            ..Default::default()
-        };
+        let opts = SolverOptions { run: RunConfig::new(1e-9, 200_000), metric: Metric::ErrorVsTruth(p.x_star.clone()) };
         let rep = solver.solve(&sys, &opts).unwrap();
         assert!(rep.converged, "P-HBM err {:.2e}", rep.final_error);
         // solution satisfies the ORIGINAL system
@@ -240,12 +235,7 @@ mod tests {
             solver.preconditioned_system().blocks.iter().all(|b| b.a.csr().is_some()),
             "sparse P-HBM densified a block"
         );
-        let opts = SolverOptions {
-            tol: 1e-8,
-            max_iter: 500_000,
-            metric: Metric::ErrorVsTruth(built.x_star.clone()),
-            ..Default::default()
-        };
+        let opts = SolverOptions { run: RunConfig::new(1e-8, 500_000), metric: Metric::ErrorVsTruth(built.x_star.clone()) };
         let rep = solver.solve(&sys, &opts).unwrap();
         assert!(rep.converged, "sparse P-HBM err {:.2e}", rep.final_error);
         assert!(sys.relative_residual(&rep.solution) < 1e-6);
@@ -258,12 +248,7 @@ mod tests {
         use crate::solvers::hbm::Hbm;
         let p = Problem::nonzero_mean_gaussian(32, 32, 4).build(65);
         let sys = PartitionedSystem::split_even(&p.a, &p.b, 4).unwrap();
-        let opts = SolverOptions {
-            tol: 1e-8,
-            max_iter: 500_000,
-            metric: Metric::ErrorVsTruth(p.x_star.clone()),
-            ..Default::default()
-        };
+        let opts = SolverOptions { run: RunConfig::new(1e-8, 500_000), metric: Metric::ErrorVsTruth(p.x_star.clone()) };
         let rep_pre = Phbm::auto(&sys).unwrap().solve(&sys, &opts).unwrap();
         let rep_hbm = Hbm::auto(&sys).unwrap().solve(&sys, &opts).unwrap();
         assert!(rep_pre.converged && rep_hbm.converged);

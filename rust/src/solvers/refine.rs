@@ -292,7 +292,7 @@ impl Solver for Refined {
 mod tests {
     use super::*;
     use crate::gen::problems::Problem;
-    use crate::solvers::{Metric, SolverOptions};
+    use crate::solvers::{Metric, RunConfig, SolverOptions};
 
     fn build(seed: u64) -> (PartitionedSystem, Vec<f64>) {
         let p = Problem::with_condition("refine-unit", 36, 36, 4, 40.0).build(seed);
@@ -305,12 +305,7 @@ mod tests {
         let (sys, xstar) = build(11);
         let s = SpectralInfo::compute(&sys).unwrap();
         let mut solver = Refined::tuned("apc", &sys, &s, 50).unwrap();
-        let opts = SolverOptions {
-            tol: 1e-12,
-            max_iter: 200_000,
-            metric: Metric::ErrorVsTruth(xstar),
-            ..Default::default()
-        };
+        let opts = SolverOptions { run: RunConfig::new(1e-12, 200_000), metric: Metric::ErrorVsTruth(xstar) };
         let rep = solver.solve(&sys, &opts).unwrap();
         assert!(
             rep.converged,
@@ -325,12 +320,7 @@ mod tests {
         let (sys, xstar) = build(13);
         let s = SpectralInfo::compute(&sys).unwrap();
         let mut solver = Refined::tuned("hbm", &sys, &s, 50).unwrap();
-        let opts = SolverOptions {
-            tol: 1e-12,
-            max_iter: 200_000,
-            metric: Metric::ErrorVsTruth(xstar),
-            ..Default::default()
-        };
+        let opts = SolverOptions { run: RunConfig::new(1e-12, 200_000), metric: Metric::ErrorVsTruth(xstar) };
         let rep = solver.solve(&sys, &opts).unwrap();
         assert!(rep.converged, "D-HBM+IR err {:.2e}", rep.final_error);
     }
@@ -341,7 +331,7 @@ mod tests {
         let s = SpectralInfo::compute(&sys).unwrap();
         // span a refresh boundary so the restart path is covered too
         let mut solver = Refined::tuned("cimmino", &sys, &s, 20).unwrap();
-        let opts = SolverOptions { max_iter: 45, tol: 0.0, ..Default::default() };
+        let opts = SolverOptions::with_run(RunConfig::new(0.0, 45));
         let rep1 = solver.solve(&sys, &opts).unwrap();
         solver.reset(&sys);
         let rep2 = solver.solve(&sys, &opts).unwrap();

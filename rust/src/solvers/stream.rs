@@ -41,6 +41,7 @@
 //! `benches/stream_throughput.rs` measures the refill policy against.
 
 use super::batch::{BatchEngine, ColumnReport};
+use super::RunConfig;
 use crate::linalg::vector::relative_error;
 use crate::linalg::MultiVec;
 use crate::partition::PartitionedSystem;
@@ -61,32 +62,30 @@ pub enum Admission {
     Drain,
 }
 
-/// Options controlling a [`StreamingBatch`]. `max_iter`, `tol` and
-/// `record_every` mean exactly what they mean on
-/// [`super::SolverOptions`], applied to each query's own round clock.
+/// Options controlling a [`StreamingBatch`]. The embedded
+/// [`RunConfig`] means exactly what it means on
+/// [`super::SolverOptions`], applied to each query's own round clock
+/// (query-age rounds, not driver rounds).
 #[derive(Clone, Debug)]
 pub struct StreamOptions {
     /// Lane capacity: the widest the running batch may grow.
     pub max_width: usize,
-    /// Per-query round cap (in query-age rounds, not driver rounds).
-    pub max_iter: usize,
-    /// A lane deflates when its metric first drops below `tol`.
-    pub tol: f64,
-    /// Record a query's metric every `record_every` of its own rounds
-    /// (0 = no history).
-    pub record_every: usize,
+    /// Convergence policy per query: round cap, deflation tolerance,
+    /// and history cadence, each on the query's own round clock.
+    pub run: RunConfig,
     pub admission: Admission,
 }
 
 impl Default for StreamOptions {
     fn default() -> Self {
-        StreamOptions {
-            max_width: 16,
-            max_iter: 50_000,
-            tol: 1e-8,
-            record_every: 0,
-            admission: Admission::Refill,
-        }
+        StreamOptions { max_width: 16, run: RunConfig::default(), admission: Admission::Refill }
+    }
+}
+
+impl StreamOptions {
+    /// Options with the given convergence policy and defaults elsewhere.
+    pub fn with_run(run: RunConfig) -> Self {
+        StreamOptions { run, ..StreamOptions::default() }
     }
 }
 
@@ -413,23 +412,23 @@ impl<'a, E: BatchEngine> StreamingBatch<'a, E> {
     /// [`super::batch::run`]: `record_every` cadence plus the always-
     /// recorded terminal sample on a metric freeze.
     fn record_and_freeze(&mut self) {
-        let opts = &self.opts;
+        let run = self.opts.run;
         let mut keep: Vec<usize> = Vec::with_capacity(self.active.len());
         for (lane, &qid) in self.active.iter().enumerate() {
             let err = self.errs[lane];
             let q = &mut self.queries[qid];
             let age = self.round - q.admitted.expect("active lane was admitted");
-            if opts.record_every > 0 && (age == 0 || age % opts.record_every == 0) {
+            if run.record_every > 0 && (age == 0 || age % run.record_every == 0) {
                 q.history.push((age, err));
             }
-            let metric_freeze = !(err.is_finite() && err > opts.tol);
-            let capped = age >= opts.max_iter;
+            let metric_freeze = !(err.is_finite() && err > run.tol);
+            let capped = age >= run.max_iter;
             if !(metric_freeze || capped) {
                 keep.push(lane);
                 continue;
             }
             if metric_freeze
-                && opts.record_every > 0
+                && run.record_every > 0
                 && q.history.last().map(|&(r, _)| r) != Some(age)
             {
                 q.history.push((age, err));
@@ -438,7 +437,7 @@ impl<'a, E: BatchEngine> StreamingBatch<'a, E> {
             self.engine.xbar().col_into(lane, &mut solution);
             q.report = Some(ColumnReport {
                 iterations: age,
-                converged: err <= opts.tol,
+                converged: err <= run.tol,
                 final_error: err,
                 history: std::mem::take(&mut q.history),
                 solution,
@@ -481,7 +480,7 @@ mod tests {
     fn streaming_drains_every_query() {
         let (sys, gamma, eta, truths, rhs) = serving_setup(5);
         let engine = ApcBatch::new(&sys, &[], gamma, eta).unwrap();
-        let opts = StreamOptions { max_width: 2, tol: 1e-10, ..Default::default() };
+        let opts = StreamOptions { max_width: 2, run: RunConfig::new(1e-10, 50_000), ..Default::default() };
         let mut stream = StreamingBatch::new(engine, &sys, opts, "APC").unwrap();
         let ids: Vec<usize> =
             rhs.iter().map(|b| stream.submit(b.clone()).unwrap()).collect();
@@ -514,9 +513,8 @@ mod tests {
             let engine = ApcBatch::new(&sys, &[], gamma, eta).unwrap();
             let opts = StreamOptions {
                 max_width: 2,
-                tol: 1e-9,
+                run: RunConfig::new(1e-9, 50_000),
                 admission,
-                ..Default::default()
             };
             let mut stream = StreamingBatch::new(engine, &sys, opts, "APC").unwrap();
             for b in &rhs {
@@ -570,7 +568,7 @@ mod tests {
     fn finish_snapshots_in_flight_queries() {
         let (sys, gamma, eta, truths, rhs) = serving_setup(2);
         let engine = ApcBatch::new(&sys, &[], gamma, eta).unwrap();
-        let opts = StreamOptions { max_width: 1, tol: 1e-12, ..Default::default() };
+        let opts = StreamOptions { max_width: 1, run: RunConfig::new(1e-12, 50_000), ..Default::default() };
         let mut stream = StreamingBatch::new(engine, &sys, opts, "APC").unwrap();
         stream.submit_with_truth(rhs[0].clone(), truths[0].clone()).unwrap();
         stream.submit(rhs[1].clone()).unwrap();

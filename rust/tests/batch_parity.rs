@@ -18,7 +18,7 @@ use apc::solvers::batch::{
 };
 use apc::solvers::{
     admm::Admm, apc::Apc, cimmino::Cimmino, consensus::Consensus, dgd::Dgd, hbm::Hbm, nag::Nag,
-    phbm::Phbm, Solver,
+    phbm::Phbm, RunConfig, Solver,
 };
 
 const SEVEN: [&str; 7] = ["apc", "consensus", "dgd", "nag", "hbm", "cimmino", "admm"];
@@ -141,12 +141,7 @@ fn pin_deflation(sys: &PartitionedSystem, label: &str) {
     let k = 4;
     let mut rhs = rhs_columns(sys.n_rows, k, 9);
     rhs[0] = vec![0.0; sys.n_rows]; // deflates at round 0 for every method
-    let opts = BatchOptions {
-        tol: 1e-8,
-        max_iter: 400,
-        metric: BatchMetric::Residual,
-        record_every: 1,
-    };
+    let opts = BatchOptions { run: RunConfig::new(1e-8, 400).recorded(1), metric: BatchMetric::Residual };
     for name in ["apc", "cimmino", "hbm"] {
         let mut solver = fixed_solver(name, sys);
         let rep = solver.solve_batch(sys, &rhs, &opts).unwrap();
@@ -165,12 +160,7 @@ fn pin_deflation(sys: &PartitionedSystem, label: &str) {
             let srep = single
                 .solve(
                     &wsys,
-                    &apc::solvers::SolverOptions {
-                        tol: opts.tol,
-                        max_iter: opts.max_iter,
-                        metric: apc::solvers::Metric::Residual,
-                        record_every: 1,
-                    },
+                    &apc::solvers::SolverOptions { run: opts.run, metric: apc::solvers::Metric::Residual },
                 )
                 .unwrap();
             assert_eq!(
@@ -230,10 +220,9 @@ fn deflation_records_terminal_sample_off_cadence() {
     let sys = PartitionedSystem::split_even(&built.a.to_dense(), &built.b, 4).unwrap();
     let rhs = rhs_columns(sys.n_rows, 3, 29);
     let opts = BatchOptions {
-        tol: 1e-8,
-        max_iter: 5_000,
+        // record_every far above max_iter: only round 0 is on-cadence
+        run: RunConfig::new(1e-8, 5_000).recorded(100_000),
         metric: BatchMetric::Residual,
-        record_every: 100_000, // only round 0 is on-cadence
     };
     let mut solver = Apc::auto(&sys).unwrap();
     let rep = solver.solve_batch(&sys, &rhs, &opts).unwrap();
@@ -247,7 +236,7 @@ fn deflation_records_terminal_sample_off_cadence() {
             (col.iterations, col.final_error),
             "column {j} terminal sample missing or wrong"
         );
-        assert!(col.history[1].1 <= opts.tol, "column {j} terminal sample not sub-tol");
+        assert!(col.history[1].1 <= opts.run.tol, "column {j} terminal sample not sub-tol");
         // and it matches the single-RHS recording sample for sample
         let mut wsys = sys.clone();
         wsys.set_rhs(&rhs[j]).unwrap();
@@ -255,12 +244,7 @@ fn deflation_records_terminal_sample_off_cadence() {
             .unwrap()
             .solve(
                 &wsys,
-                &apc::solvers::SolverOptions {
-                    tol: opts.tol,
-                    max_iter: opts.max_iter,
-                    metric: apc::solvers::Metric::Residual,
-                    record_every: opts.record_every,
-                },
+                &apc::solvers::SolverOptions { run: opts.run, metric: apc::solvers::Metric::Residual },
             )
             .unwrap();
         assert_eq!(col.history.len(), srep.history.len(), "column {j} vs single-RHS");
@@ -282,7 +266,7 @@ fn batch_is_invariant_to_column_order() {
     rhs[1] = vec![0.0; sys.n_rows]; // deflates first in one order, mid in the other
     let perm = [2usize, 0, 1];
     let rhs_perm: Vec<Vec<f64>> = perm.iter().map(|&j| rhs[j].clone()).collect();
-    let opts = BatchOptions { tol: 1e-8, max_iter: 400, ..Default::default() };
+    let opts = BatchOptions::with_run(RunConfig::new(1e-8, 400));
     let rep_a = fixed_solver("apc", &sys).solve_batch(&sys, &rhs, &opts).unwrap();
     let rep_b = fixed_solver("apc", &sys).solve_batch(&sys, &rhs_perm, &opts).unwrap();
     for (pos, &j) in perm.iter().enumerate() {
@@ -306,7 +290,7 @@ fn phbm_batched_solve_matches_column_loop() {
         .map(|j| (0..40).map(|i| ((i * (j + 2)) as f64 * 0.31).cos()).collect())
         .collect();
     let rhs: Vec<Vec<f64>> = truths.iter().map(|x| built.a.matvec(x)).collect();
-    let opts = BatchOptions { tol: 1e-8, max_iter: 500_000, ..Default::default() };
+    let opts = BatchOptions::with_run(RunConfig::new(1e-8, 500_000));
     let rep_batch =
         Phbm::auto_estimated(&sys, 48, 0.9).unwrap().solve_batch(&sys, &rhs, &opts).unwrap();
     let mut loop_solver = Phbm::auto_estimated(&sys, 48, 0.9).unwrap();

@@ -15,7 +15,8 @@ use apc::gen::problems::Problem;
 use apc::partition::PartitionedSystem;
 use apc::rates::SpectralInfo;
 use apc::sim::{CrashSpec, FaultPlan, LinkModel, SimConfig, SimTransport};
-use apc::solvers::{suite, Metric, SolverOptions};
+use apc::prelude::SolveBuilder;
+use apc::solvers::{suite, Metric, RunConfig, SolverOptions};
 use anyhow::Result;
 
 fn sim_seed() -> u64 {
@@ -36,12 +37,7 @@ fn build(n: usize, m: usize, seed: u64) -> (PartitionedSystem, Vec<f64>) {
 fn sim_barrier_bit_exact_all_methods() {
     let (sys, xstar) = build(30, 5, 11);
     let s = SpectralInfo::compute(&sys).unwrap();
-    let opts = SolverOptions {
-        tol: 0.0,
-        max_iter: 25,
-        metric: Metric::ErrorVsTruth(xstar),
-        ..Default::default()
-    };
+    let opts = SolverOptions { run: RunConfig::new(0.0, 25), metric: Metric::ErrorVsTruth(xstar) };
     // all seven coordinator methods: Table 2's six plus the consensus baseline
     for name in suite::TABLE2_ORDER.into_iter().chain(["consensus"]) {
         let method = suite::tuned_method(name, &sys, &s).unwrap();
@@ -53,7 +49,7 @@ fn sim_barrier_bit_exact_all_methods() {
                 .unwrap()
                 .run(&sys, &opts)
                 .unwrap();
-        let mut single = suite::tuned_solver(name, &sys, &s).unwrap();
+        let mut single = SolveBuilder::new(&sys).method(name.parse().unwrap()).spectral(s.clone()).solver().unwrap();
         let rep = single.solve(&sys, &opts).unwrap();
         assert_eq!(
             dist.report.solution, rep.solution,
@@ -81,12 +77,7 @@ fn quorum_beats_barrier_under_stragglers() {
     let (sys, xstar) = build(24, 4, 75);
     let s = SpectralInfo::compute(&sys).unwrap();
     let method = suite::tuned_method("apc", &sys, &s).unwrap();
-    let opts = SolverOptions {
-        tol: 1e-8,
-        max_iter: 50_000,
-        metric: Metric::ErrorVsTruth(xstar),
-        ..Default::default()
-    };
+    let opts = SolverOptions { run: RunConfig::new(1e-8, 50_000), metric: Metric::ErrorVsTruth(xstar) };
     // straggler delay 100× the compute time — a long tail worth cutting
     let faults = FaultPlan {
         straggler: Some(StragglerSpec { prob: 0.2, delay_us: 10_000 }),
@@ -143,12 +134,7 @@ fn crash_and_recovery_completes_the_solve() {
     let (sys, xstar) = build(24, 4, 77);
     let s = SpectralInfo::compute(&sys).unwrap();
     let method = suite::tuned_method("apc", &sys, &s).unwrap();
-    let opts = SolverOptions {
-        tol: 1e-8,
-        max_iter: 50_000,
-        metric: Metric::ErrorVsTruth(xstar),
-        ..Default::default()
-    };
+    let opts = SolverOptions { run: RunConfig::new(1e-8, 50_000), metric: Metric::ErrorVsTruth(xstar) };
     let cfg = SimConfig {
         faults: FaultPlan {
             crashes: vec![CrashSpec { worker: 2, crash_round: 5, recover_round: 12 }],
@@ -181,12 +167,7 @@ fn lossy_network_with_deadline_still_converges() {
     let (sys, xstar) = build(24, 4, 79);
     let s = SpectralInfo::compute(&sys).unwrap();
     let method = suite::tuned_method("apc", &sys, &s).unwrap();
-    let opts = SolverOptions {
-        tol: 1e-6,
-        max_iter: 50_000,
-        metric: Metric::ErrorVsTruth(xstar),
-        ..Default::default()
-    };
+    let opts = SolverOptions { run: RunConfig::new(1e-6, 50_000), metric: Metric::ErrorVsTruth(xstar) };
     let cfg = SimConfig {
         net: LinkModel { loss_prob: 0.05, ..Default::default() },
         seed: sim_seed(),
@@ -213,12 +194,7 @@ fn fault_runs_are_deterministic_per_seed() {
     let (sys, xstar) = build(24, 4, 81);
     let s = SpectralInfo::compute(&sys).unwrap();
     let method = suite::tuned_method("apc", &sys, &s).unwrap();
-    let opts = SolverOptions {
-        tol: 1e-8,
-        max_iter: 50_000,
-        metric: Metric::ErrorVsTruth(xstar),
-        ..Default::default()
-    };
+    let opts = SolverOptions { run: RunConfig::new(1e-8, 50_000), metric: Metric::ErrorVsTruth(xstar) };
     let run = || {
         let cfg = SimConfig {
             faults: FaultPlan {
@@ -304,12 +280,7 @@ impl Transport for NoisyTransport {
 #[test]
 fn duplicate_and_stale_messages_are_counted_not_fatal() {
     let (sys, xstar) = build(16, 2, 83);
-    let opts = SolverOptions {
-        tol: 0.0,
-        max_iter: 4,
-        metric: Metric::ErrorVsTruth(xstar),
-        ..Default::default()
-    };
+    let opts = SolverOptions { run: RunConfig::new(0.0, 4), metric: Metric::ErrorVsTruth(xstar) };
     let transport = NoisyTransport {
         m: 2,
         n: 16,

@@ -2,13 +2,14 @@
 //! partition → tuning → solver → direct-solve verification, plus
 //! coordinator failure handling and config plumbing.
 
-use apc::config::{Backend, RunConfig};
+use apc::config::{Backend, RunSpec};
 use apc::coordinator::{Coordinator, Method, StragglerSpec};
 use apc::gen::problems::Problem;
 use apc::linalg::{vector::relative_error, Lu};
 use apc::partition::PartitionedSystem;
 use apc::rates::SpectralInfo;
-use apc::solvers::{suite, Metric, SolverOptions};
+use apc::prelude::{Method, SolveBuilder};
+use apc::solvers::{suite, Metric, RunConfig, SolverOptions};
 
 /// The full offline pipeline: build → write .mtx → read .mtx → partition
 /// → tune → solve → compare against an LU direct solve (not the planted
@@ -29,16 +30,11 @@ fn pipeline_mtx_roundtrip_solve_matches_direct() {
     let sys = PartitionedSystem::split_even(&a, &built.b, 5).unwrap();
     let s = SpectralInfo::compute(&sys).unwrap();
     for name in ["apc", "hbm"] {
-        let mut solver = suite::tuned_solver(name, &sys, &s).unwrap();
+        let mut solver = SolveBuilder::new(&sys).method(name.parse().unwrap()).spectral(s.clone()).solver().unwrap();
         let rep = solver
             .solve(
                 &sys,
-                &SolverOptions {
-                    tol: 1e-11,
-                    max_iter: 300_000,
-                    metric: Metric::Residual,
-                    ..Default::default()
-                },
+                &SolverOptions { run: RunConfig::new(1e-11, 300_000), metric: Metric::Residual },
             )
             .unwrap();
         assert!(rep.converged, "{name} did not converge");
@@ -55,19 +51,14 @@ fn distributed_parity_all_methods() {
     let built = Problem::standard_gaussian(30, 30, 5).build(11);
     let sys = PartitionedSystem::split_even(&built.a, &built.b, 5).unwrap();
     let s = SpectralInfo::compute(&sys).unwrap();
-    let opts = SolverOptions {
-        tol: 0.0,
-        max_iter: 25,
-        metric: Metric::ErrorVsTruth(built.x_star.clone()),
-        ..Default::default()
-    };
+    let opts = SolverOptions { run: RunConfig::new(0.0, 25), metric: Metric::ErrorVsTruth(built.x_star.clone()) };
     for name in suite::TABLE2_ORDER {
         let method = suite::tuned_method(name, &sys, &s).unwrap();
         let dist = Coordinator::new(&sys, method, Backend::Native, None, None, 1)
             .unwrap()
             .run(&sys, &opts)
             .unwrap();
-        let mut single = suite::tuned_solver(name, &sys, &s).unwrap();
+        let mut single = SolveBuilder::new(&sys).method(name.parse().unwrap()).spectral(s.clone()).solver().unwrap();
         let rep = single.solve(&sys, &opts).unwrap();
         assert_eq!(
             dist.report.solution, rep.solution,
@@ -83,12 +74,7 @@ fn stragglers_do_not_change_results() {
     let sys = PartitionedSystem::split_even(&built.a, &built.b, 4).unwrap();
     let s = SpectralInfo::compute(&sys).unwrap();
     let method = suite::tuned_method("apc", &sys, &s).unwrap();
-    let opts = SolverOptions {
-        tol: 0.0,
-        max_iter: 30,
-        metric: Metric::ErrorVsTruth(built.x_star.clone()),
-        ..Default::default()
-    };
+    let opts = SolverOptions { run: RunConfig::new(0.0, 30), metric: Metric::ErrorVsTruth(built.x_star.clone()) };
     let clean = Coordinator::new(&sys, method, Backend::Native, None, None, 1)
         .unwrap()
         .run(&sys, &opts)
@@ -116,12 +102,7 @@ fn divergence_guard_stops_early() {
     let sys = PartitionedSystem::split_even(&built.a, &built.b, 4).unwrap();
     // deliberately unstable parameters
     let method = Method::Apc { gamma: 1.99, eta: 9.0 };
-    let opts = SolverOptions {
-        tol: 1e-8,
-        max_iter: 1_000_000,
-        metric: Metric::ErrorVsTruth(built.x_star.clone()),
-        ..Default::default()
-    };
+    let opts = SolverOptions { run: RunConfig::new(1e-8, 1_000_000), metric: Metric::ErrorVsTruth(built.x_star.clone()) };
     let dist = Coordinator::new(&sys, method, Backend::Native, None, None, 1)
         .unwrap()
         .run(&sys, &opts)
@@ -145,18 +126,13 @@ fn uneven_partition_distributed_solve() {
         .unwrap()
         .run(
             &sys,
-            &SolverOptions {
-                tol: 1e-9,
-                max_iter: 200_000,
-                metric: Metric::ErrorVsTruth(built.x_star.clone()),
-                ..Default::default()
-            },
+            &SolverOptions { run: RunConfig::new(1e-9, 200_000), metric: Metric::ErrorVsTruth(built.x_star.clone()) },
         )
         .unwrap();
     assert!(dist.report.converged, "err {:.2e}", dist.report.final_error);
 }
 
-/// RunConfig file → coordinator plumbing (what `apc solve --config` does).
+/// RunSpec file → coordinator plumbing (what `apc solve --config` does).
 #[test]
 fn config_file_drives_a_run() {
     let dir = std::env::temp_dir().join("apc_integration");
@@ -167,7 +143,7 @@ fn config_file_drives_a_run() {
         "problem = gaussian:40x40\nmachines = 4\nsolver = hbm\ntol = 1e-7\nseed = 9\n",
     )
     .unwrap();
-    let cfg = RunConfig::from_file(path.to_str().unwrap()).unwrap();
+    let cfg = RunSpec::from_file(path.to_str().unwrap()).unwrap();
     assert_eq!(cfg.solver, "hbm");
 
     let problem = Problem::by_name(&cfg.problem, cfg.machines).unwrap();
@@ -179,12 +155,7 @@ fn config_file_drives_a_run() {
         .unwrap()
         .run(
             &sys,
-            &SolverOptions {
-                tol: cfg.tol,
-                max_iter: cfg.max_iter,
-                metric: Metric::Residual,
-                ..Default::default()
-            },
+            &SolverOptions { run: RunConfig::new(cfg.tol, cfg.max_iter), metric: Metric::Residual },
         )
         .unwrap();
     assert!(dist.report.converged);
@@ -216,16 +187,11 @@ fn sparse_system_csr_blocks_solve() {
     let sys = PartitionedSystem::split_csr(&csr, &b, 4).unwrap();
     assert!(sys.blocks.iter().all(|blk| blk.a.is_sparse()));
     let s = SpectralInfo::compute(&sys).unwrap();
-    let mut solver = suite::tuned_solver("apc", &sys, &s).unwrap();
+    let mut solver = SolveBuilder::new(&sys).method(Method::Apc).spectral(s.clone()).solver().unwrap();
     let rep = solver
         .solve(
             &sys,
-            &SolverOptions {
-                tol: 1e-10,
-                max_iter: 50_000,
-                metric: Metric::ErrorVsTruth(x_star),
-                ..Default::default()
-            },
+            &SolverOptions { run: RunConfig::new(1e-10, 50_000), metric: Metric::ErrorVsTruth(x_star) },
         )
         .unwrap();
     assert!(rep.converged, "sparse-backed APC err {:.2e}", rep.final_error);
@@ -252,16 +218,11 @@ fn sparse_mtx_nnz_balanced_pipeline() {
     assert_eq!(sys.blocks.iter().map(|blk| blk.p()).sum::<usize>(), 64);
     let s = SpectralInfo::compute(&sys).unwrap();
     for name in ["apc", "cimmino"] {
-        let mut solver = suite::tuned_solver(name, &sys, &s).unwrap();
+        let mut solver = SolveBuilder::new(&sys).method(name.parse().unwrap()).spectral(s.clone()).solver().unwrap();
         let rep = solver
             .solve(
                 &sys,
-                &SolverOptions {
-                    tol: 1e-9,
-                    max_iter: 200_000,
-                    metric: Metric::ErrorVsTruth(built.x_star.clone()),
-                    ..Default::default()
-                },
+                &SolverOptions { run: RunConfig::new(1e-9, 200_000), metric: Metric::ErrorVsTruth(built.x_star.clone()) },
             )
             .unwrap();
         assert!(rep.converged, "{name} on sparse mtx pipeline: {:.2e}", rep.final_error);

@@ -15,23 +15,23 @@ use apc::gen::problems::{Problem, SparseProblem};
 use apc::linalg::vector::relative_error;
 use apc::partition::PartitionedSystem;
 use apc::rates::SpectralInfo;
-use apc::solvers::{suite, Metric, Precision, SolverOptions};
+use apc::prelude::{Method, SolveBuilder};
+use apc::solvers::{Metric, Precision, RunConfig, SolverOptions};
 
 const RESIDUAL_TOL: f64 = 1e-13;
 const AGREEMENT: f64 = 1e-10;
 
 fn opts() -> SolverOptions {
-    SolverOptions {
-        tol: RESIDUAL_TOL,
-        max_iter: 500_000,
-        metric: Metric::Residual,
-        record_every: 0,
-    }
+    SolverOptions { run: RunConfig::new(RESIDUAL_TOL, 500_000), metric: Metric::Residual }
 }
 
 /// Solve with both precision policies and pin the agreement.
 fn compare(name: &str, sys: &PartitionedSystem, s: &SpectralInfo, label: &str) {
-    let mut pure = suite::tuned_solver_prec(name, sys, s, Precision::F64).unwrap();
+    let mut pure = SolveBuilder::new(sys)
+        .method(name.parse().unwrap())
+        .spectral(s.clone())
+        .solver()
+        .unwrap();
     let rep64 = pure.solve(sys, &opts()).unwrap();
     assert!(
         rep64.converged,
@@ -39,7 +39,12 @@ fn compare(name: &str, sys: &PartitionedSystem, s: &SpectralInfo, label: &str) {
         rep64.final_error, rep64.iterations
     );
 
-    let mut mixed = suite::tuned_solver_prec(name, sys, s, Precision::default_mixed()).unwrap();
+    let mut mixed = SolveBuilder::new(sys)
+        .method(name.parse().unwrap())
+        .spectral(s.clone())
+        .precision(Precision::default_mixed())
+        .solver()
+        .unwrap();
     let repmx = mixed.solve(sys, &opts()).unwrap();
     assert!(
         repmx.converged,
@@ -102,8 +107,12 @@ fn mixed_solution_actually_solves_the_system() {
     let p = Problem::with_condition("mixed-check", 36, 36, 3, 25.0).build(83);
     let sys = PartitionedSystem::split_even(&p.a, &p.b, 3).unwrap();
     let s = SpectralInfo::compute(&sys).unwrap();
-    let mut mixed =
-        suite::tuned_solver_prec("apc", &sys, &s, Precision::default_mixed()).unwrap();
+    let mut mixed = SolveBuilder::new(&sys)
+        .method(Method::Apc)
+        .spectral(s.clone())
+        .precision(Precision::default_mixed())
+        .solver()
+        .unwrap();
     let rep = mixed.solve(&sys, &opts()).unwrap();
     assert!(rep.converged);
     assert!(sys.relative_residual(&rep.solution) <= RESIDUAL_TOL);
@@ -121,8 +130,12 @@ fn mixed_rebind_solves_a_new_rhs() {
     let p = Problem::with_condition("mixed-rebind", 30, 30, 3, 20.0).build(89);
     let mut sys = PartitionedSystem::split_even(&p.a, &p.b, 3).unwrap();
     let s = SpectralInfo::compute(&sys).unwrap();
-    let mut mixed =
-        suite::tuned_solver_prec("admm", &sys, &s, Precision::default_mixed()).unwrap();
+    let mut mixed = SolveBuilder::new(&sys)
+        .method(Method::Admm)
+        .spectral(s.clone())
+        .precision(Precision::default_mixed())
+        .solver()
+        .unwrap();
     let rep1 = mixed.solve(&sys, &opts()).unwrap();
     assert!(rep1.converged);
 

@@ -13,9 +13,10 @@ use apc::parallel;
 use apc::partition::PartitionedSystem;
 use apc::proptest::{forall, Gen, Outcome, Pair, UsizeRange};
 use apc::rates::SpectralInfo;
+use apc::prelude::SolveBuilder;
 use apc::solvers::{
     admm::Admm, apc::Apc, cimmino::Cimmino, consensus::Consensus, dgd::Dgd, hbm::Hbm, nag::Nag,
-    suite, Solver,
+    Solver,
 };
 
 const SEVEN: [&str; 7] = ["apc", "consensus", "dgd", "nag", "hbm", "cimmino", "admm"];
@@ -41,8 +42,8 @@ fn tuned_solvers_parallel_matches_serial_bit_for_bit() {
     let sys = PartitionedSystem::split_even(&p.a, &p.b, 6).unwrap();
     let s = SpectralInfo::compute(&sys).unwrap();
     for name in SEVEN {
-        let mut par = suite::tuned_solver(name, &sys, &s).unwrap();
-        let mut ser = suite::tuned_solver(name, &sys, &s).unwrap();
+        let mut par = SolveBuilder::new(&sys).method(name.parse().unwrap()).spectral(s.clone()).solver().unwrap();
+        let mut ser = SolveBuilder::new(&sys).method(name.parse().unwrap()).spectral(s.clone()).solver().unwrap();
         assert_eq!(par.xbar(), ser.xbar(), "{name}: construction not deterministic");
         for round in 0..30 {
             par.iterate(&sys);

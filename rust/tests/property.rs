@@ -265,19 +265,14 @@ fn prop_solver_solution_satisfies_every_block() {
     // Whatever APC returns at convergence satisfies each machine's own
     // equations — the consensus invariant.
     forall("consensus-feasibility", 20, 15, &UsizeRange(2, 5), |m| {
-        use apc::solvers::{apc::Apc, Metric, Solver, SolverOptions};
+        use apc::solvers::{apc::Apc, Metric, RunConfig, Solver, SolverOptions};
         let built = Problem::standard_gaussian(8 * *m, 4 * *m, *m).build(21);
         let sys = PartitionedSystem::split_even(&built.a, &built.b, *m).expect("p<=n");
         let mut solver = Apc::auto(&sys).expect("tunable");
         let rep = solver
             .solve(
                 &sys,
-                &SolverOptions {
-                    tol: 1e-10,
-                    max_iter: 500_000,
-                    metric: Metric::ErrorVsTruth(built.x_star.clone()),
-                    ..Default::default()
-                },
+                &SolverOptions { run: RunConfig::new(1e-10, 500_000), metric: Metric::ErrorVsTruth(built.x_star.clone()) },
             )
             .expect("solve");
         if !rep.converged {

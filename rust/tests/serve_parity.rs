@@ -1,0 +1,226 @@
+//! Serve-layer end-to-end guarantees:
+//!
+//! 1. **Parity** — a query answered through the full serving stack
+//!    (admission queue → window release → streaming lane) returns the
+//!    same solution (≤ 1e-12) in the same number of iteration rounds as
+//!    a standalone [`SolveBuilder`] session on the same system, for
+//!    every query of a multi-tenant, multi-system schedule.
+//! 2. **LRU eviction + re-preparation** — a cache sized for one system
+//!    evicts the least recently used id, transparently re-prepares on
+//!    its next query, never evicts a system with in-flight work, and
+//!    keeps answering correctly throughout.
+//! 3. **Backpressure** — a scripted burst over the per-tenant bound is
+//!    rejected with a retry hint, the rejection count is exact, other
+//!    tenants are unaffected, and drained tenants are admitted again.
+
+use apc::gen::problems::Problem;
+use apc::linalg::vector::max_abs_diff;
+use apc::prelude::{Method, PartitionedSystem, SolveBuilder};
+use apc::serve::{ServeConfig, Server, Verdict};
+use apc::solvers::RunConfig;
+
+const TOL: f64 = 1e-12;
+
+/// A planted system: truth is known, rhs = A·truth.
+fn planted(n_rows: usize, n: usize, m: usize, seed: u64) -> (PartitionedSystem, Vec<f64>, Vec<f64>) {
+    let p = Problem::standard_gaussian(n_rows, n, m).build(seed);
+    let sys = PartitionedSystem::split_even(&p.a, &p.b, m).unwrap();
+    let truth: Vec<f64> = (0..n).map(|i| ((i as f64 + seed as f64) * 0.37).sin()).collect();
+    let rhs = p.a.matvec(&truth);
+    (sys, rhs, truth)
+}
+
+fn serve_run() -> RunConfig {
+    RunConfig::new(1e-10, 50_000)
+}
+
+#[test]
+fn served_queries_match_standalone_sessions() {
+    let (sys_a, _, _) = planted(24, 12, 3, 21);
+    let (sys_b, _, _) = planted(20, 10, 2, 23);
+    // distinct rhs per query so parity is per-query, not per-system
+    let queries: Vec<(&str, &str, Vec<f64>)> = vec![
+        ("sys-a", "alice", (0..24).map(|i| (i as f64 * 0.61).cos()).collect()),
+        ("sys-a", "bob", (0..24).map(|i| (i as f64 * 0.17).sin()).collect()),
+        ("sys-b", "alice", (0..20).map(|i| (i as f64 * 0.29).sin()).collect()),
+        ("sys-b", "bob", (0..20).map(|i| (i as f64 * 0.83).cos()).collect()),
+    ];
+    let cfg = ServeConfig {
+        run: serve_run(),
+        max_width: 4,
+        window_rounds: 0,
+        queue_depth: 16,
+        cache_bytes: 1 << 20,
+        ..ServeConfig::default()
+    };
+    let mut server = Server::new(cfg);
+    let mut tickets = Vec::new();
+    for (id, tenant, rhs) in &queries {
+        let src = if *id == "sys-a" { &sys_a } else { &sys_b };
+        let load_sys = src.clone();
+        let v = server.submit(id, tenant, rhs.clone(), move || Ok(load_sys)).unwrap();
+        match v {
+            Verdict::Queued { ticket } => tickets.push(ticket),
+            other => panic!("unexpected verdict {other:?}"),
+        }
+    }
+    server.run_until_idle().unwrap();
+    assert_eq!(server.cache_stats().prepares, 2, "one preparation per system");
+    assert_eq!(server.cache_stats().hits, 2, "repeat ids hit the cache");
+    for (ticket, (id, tenant, rhs)) in tickets.into_iter().zip(&queries) {
+        let served = server.take_result(ticket).expect("drained query has a result");
+        assert_eq!(served.tenant, *tenant);
+        assert!(served.report.converged, "{id}/{tenant} did not converge");
+        // the standalone reference: same method, same run policy, own
+        // tuning pass over the same system
+        let src = if *id == "sys-a" { &sys_a } else { &sys_b };
+        let mut session = SolveBuilder::new(src)
+            .method(Method::Apc)
+            .run(serve_run())
+            .session()
+            .unwrap();
+        let standalone = session.solve(rhs).unwrap();
+        assert_eq!(
+            served.service_rounds, standalone.iterations,
+            "{id}/{tenant}: served {} rounds, standalone {}",
+            served.service_rounds, standalone.iterations
+        );
+        assert!(
+            max_abs_diff(&served.report.solution, &standalone.solution) <= TOL,
+            "{id}/{tenant}: served solution diverged from standalone"
+        );
+    }
+    // per-tenant accounting saw every query
+    for tenant in ["alice", "bob"] {
+        let s = server.metrics().summary(tenant).unwrap();
+        assert_eq!(s.completed, 2, "{tenant}");
+        assert_eq!(s.rejected, 0, "{tenant}");
+    }
+}
+
+#[test]
+fn lru_eviction_reprepares_transparently_and_pins_busy_systems() {
+    let (sys_a, rhs_a, truth_a) = planted(20, 10, 2, 31);
+    let (sys_b, rhs_b, truth_b) = planted(20, 10, 2, 33);
+    // both systems are 20×10 dense: 8·(200 + 20) = 1760 bytes each, so
+    // this budget holds exactly one
+    let cfg = ServeConfig {
+        run: serve_run(),
+        max_width: 2,
+        window_rounds: 0,
+        queue_depth: 16,
+        cache_bytes: 2_000,
+        ..ServeConfig::default()
+    };
+    let mut server = Server::new(cfg);
+    let solve_one = |server: &mut Server, id: &str, sys: &PartitionedSystem, rhs: &[f64], truth: &[f64]| {
+        let load_sys = sys.clone();
+        let v = server
+            .submit_with_truth(id, "t0", rhs.to_vec(), truth.to_vec(), move || Ok(load_sys))
+            .unwrap();
+        let ticket = match v {
+            Verdict::Queued { ticket } => ticket,
+            other => panic!("unexpected verdict {other:?}"),
+        };
+        server.run_until_idle().unwrap();
+        let r = server.take_result(ticket).unwrap();
+        assert!(r.report.converged, "{id}");
+        assert!(max_abs_diff(&r.report.solution, truth) < 1e-8, "{id}");
+    };
+    // a → b evicts a → a again must re-prepare, and still be correct
+    solve_one(&mut server, "a", &sys_a, &rhs_a, &truth_a);
+    assert_eq!(server.resident_systems(), 1);
+    solve_one(&mut server, "b", &sys_b, &rhs_b, &truth_b);
+    assert_eq!(server.resident_systems(), 1, "budget holds one system");
+    solve_one(&mut server, "a", &sys_a, &rhs_a, &truth_a);
+    let stats = server.cache_stats();
+    assert_eq!(stats.prepares, 3, "a, b, then a re-prepared after eviction");
+    assert_eq!(stats.evictions, 2);
+    assert_eq!(stats.hits, 0);
+
+    // pinning: while "a" has in-flight work, a query for "b" must NOT
+    // evict it — the cache overshoots instead
+    let load_sys = sys_a.clone();
+    let ta = match server
+        .submit_with_truth("a", "t0", rhs_a.clone(), truth_a.clone(), move || Ok(load_sys))
+        .unwrap()
+    {
+        Verdict::Queued { ticket } => ticket,
+        other => panic!("{other:?}"),
+    };
+    server.tick().unwrap(); // "a" now has an active lane
+    let evictions_before = server.cache_stats().evictions;
+    let load_sys = sys_b.clone();
+    let tb = match server
+        .submit_with_truth("b", "t0", rhs_b.clone(), truth_b.clone(), move || Ok(load_sys))
+        .unwrap()
+    {
+        Verdict::Queued { ticket } => ticket,
+        other => panic!("{other:?}"),
+    };
+    assert_eq!(server.resident_systems(), 2, "busy system must stay resident");
+    assert_eq!(server.cache_stats().evictions, evictions_before);
+    server.run_until_idle().unwrap();
+    for (ticket, truth) in [(ta, &truth_a), (tb, &truth_b)] {
+        let r = server.take_result(ticket).unwrap();
+        assert!(r.report.converged);
+        assert!(max_abs_diff(&r.report.solution, truth) < 1e-8);
+    }
+}
+
+#[test]
+fn scripted_burst_hits_the_tenant_bound_and_recovers() {
+    let (sys, rhs, truth) = planted(20, 10, 2, 41);
+    let cfg = ServeConfig {
+        run: serve_run(),
+        max_width: 2,
+        window_rounds: 0,
+        queue_depth: 3,
+        cache_bytes: 1 << 20,
+        ..ServeConfig::default()
+    };
+    let mut server = Server::new(cfg);
+    // burst of 8 from one tenant, all before the first tick: exactly
+    // queue_depth are admitted, the rest rejected with a retry hint
+    let mut queued = Vec::new();
+    let mut rejections = Vec::new();
+    for _ in 0..8 {
+        let load_sys = sys.clone();
+        match server
+            .submit_with_truth("s", "hammer", rhs.clone(), truth.clone(), move || Ok(load_sys))
+            .unwrap()
+        {
+            Verdict::Queued { ticket } => queued.push(ticket),
+            Verdict::Rejected { retry_after_rounds } => rejections.push(retry_after_rounds),
+        }
+    }
+    assert_eq!(queued.len(), 3);
+    assert_eq!(rejections.len(), 5);
+    assert!(rejections.iter().all(|&r| r >= 1), "retry hints must be actionable");
+    // a polite tenant is unaffected by the hammer's overload
+    let load_sys = sys.clone();
+    match server
+        .submit_with_truth("s", "polite", rhs.clone(), truth.clone(), move || Ok(load_sys))
+        .unwrap()
+    {
+        Verdict::Queued { .. } => {}
+        other => panic!("polite tenant rejected: {other:?}"),
+    }
+    server.run_until_idle().unwrap();
+    for ticket in queued {
+        assert!(server.take_result(ticket).unwrap().report.converged);
+    }
+    // drained: the tenant is admitted again, and the retry hint now
+    // reflects observed service rounds
+    let load_sys = sys.clone();
+    match server
+        .submit_with_truth("s", "hammer", rhs.clone(), truth, move || Ok(load_sys))
+        .unwrap()
+    {
+        Verdict::Queued { .. } => {}
+        other => panic!("drained tenant still rejected: {other:?}"),
+    }
+    let s = server.metrics().summary("hammer").unwrap();
+    assert_eq!(s.rejected, 5);
+    assert_eq!(s.completed, 3);
+}

@@ -96,19 +96,14 @@ fn sparse_backend_converges_with_spectral_tuning() {
     // Not just parity: the sparse backend carries a full auto-tuned solve
     // to the planted solution (SpectralInfo accumulates X and AᵀA through
     // the CSR projections and gram kernels).
-    use apc::solvers::{Metric, SolverOptions};
+    use apc::solvers::{Metric, RunConfig, SolverOptions};
     let built = SparseProblem::random_sparse(60, 60, 0.15, 5).build(47);
     let sys = PartitionedSystem::split_csr_nnz_balanced(&built.a, &built.b, 5).unwrap();
     let mut solver = Apc::auto(&sys).unwrap();
     let rep = solver
         .solve(
             &sys,
-            &SolverOptions {
-                tol: 1e-9,
-                max_iter: 200_000,
-                metric: Metric::ErrorVsTruth(built.x_star.clone()),
-                ..Default::default()
-            },
+            &SolverOptions { run: RunConfig::new(1e-9, 200_000), metric: Metric::ErrorVsTruth(built.x_star.clone()) },
         )
         .unwrap();
     assert!(rep.converged, "sparse auto-tuned APC err {:.2e}", rep.final_error);

@@ -20,8 +20,8 @@ use apc::solvers::batch::{
 };
 use apc::solvers::stream::{StreamOptions, StreamingBatch};
 use apc::solvers::{
-    admm::Admm, admm::FullAdmm, apc::Apc, cimmino::Cimmino, hbm::Hbm, phbm::Phbm, Metric, Solver,
-    SolverOptions,
+    admm::Admm, admm::FullAdmm, apc::Apc, cimmino::Cimmino, hbm::Hbm, phbm::Phbm, Metric,
+    RunConfig, Solver, SolverOptions,
 };
 
 const FOUR: [&str; 4] = ["apc", "cimmino", "hbm", "admm"];
@@ -70,13 +70,7 @@ fn pin_streaming(sys: &PartitionedSystem, label: &str) {
     let rhs = rhs_columns(sys.n_rows, 6, 5);
     let arrivals = [0usize, 0, 0, 1, 3, 7];
     for name in FOUR {
-        let opts = StreamOptions {
-            max_width: 3,
-            tol: 1e-8,
-            max_iter: 400,
-            record_every: 1,
-            ..Default::default()
-        };
+        let opts = StreamOptions { run: RunConfig::new(1e-8, 400).recorded(1), max_width: 3, ..Default::default() };
         let mut stream = StreamingBatch::new(empty_engine(name, sys), sys, opts, "pin").unwrap();
         let mut next = 0usize;
         while next < rhs.len() || !stream.is_drained() {
@@ -106,12 +100,7 @@ fn pin_streaming(sys: &PartitionedSystem, label: &str) {
             let srep = single
                 .solve(
                     &wsys,
-                    &SolverOptions {
-                        tol: 1e-8,
-                        max_iter: 400,
-                        metric: Metric::Residual,
-                        record_every: 1,
-                    },
+                    &SolverOptions { run: RunConfig::new(1e-8, 400).recorded(1), metric: Metric::Residual },
                 )
                 .unwrap();
             assert_eq!(
@@ -179,13 +168,7 @@ fn phbm_streaming_admission_whitens_through_cached_factor() {
     let built = apc::gen::problems::SparseProblem::random_sparse(64, 32, 0.25, 4).build(79);
     let sys = PartitionedSystem::split_csr_nnz_balanced(&built.a, &built.b, 4).unwrap();
     let solver = Phbm::with_params(&sys, 0.2, 0.5).unwrap();
-    let opts = StreamOptions {
-        max_width: 2,
-        tol: 1e-8,
-        max_iter: 1_000,
-        record_every: 1,
-        ..Default::default()
-    };
+    let opts = StreamOptions { run: RunConfig::new(1e-8, 1_000).recorded(1), max_width: 2, ..Default::default() };
     let mut stream =
         StreamingBatch::new(solver.streaming_engine().unwrap(), &sys, opts, "P-HBM").unwrap();
     let rhs = rhs_columns(sys.n_rows, 4, 11);
@@ -209,12 +192,7 @@ fn phbm_streaming_admission_whitens_through_cached_factor() {
         let srep = single
             .solve(
                 &wsys,
-                &SolverOptions {
-                    tol: 1e-8,
-                    max_iter: 1_000,
-                    metric: Metric::Residual,
-                    record_every: 1,
-                },
+                &SolverOptions { run: RunConfig::new(1e-8, 1_000).recorded(1), metric: Metric::Residual },
             )
             .unwrap();
         assert_eq!(col.iterations, srep.iterations, "P-HBM query {j}");
@@ -246,7 +224,7 @@ fn rebind_system() -> (PartitionedSystem, Vec<Vec<f64>>) {
 }
 
 fn solve_opts() -> SolverOptions {
-    SolverOptions { tol: 1e-8, max_iter: 5_000, metric: Metric::Residual, record_every: 0 }
+    SolverOptions { run: RunConfig::new(1e-8, 5_000), metric: Metric::Residual }
 }
 
 /// N successive `set_rhs` calls then ONE rebind: the solver must serve
