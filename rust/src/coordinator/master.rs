@@ -11,7 +11,7 @@
 //! averaging family and re-weighting silent workers out of the average.
 
 use super::metrics::RunMetrics;
-use super::protocol::{FromWorker, Method, QuorumConfig, StragglerSpec, ToWorker};
+use super::protocol::{AdaptiveQuorum, FromWorker, Method, QuorumConfig, StragglerSpec, ToWorker};
 use super::transport::{ChannelTransport, Transport, TransportEvent};
 use super::worker::WorkerSpec;
 use crate::config::Backend;
@@ -79,6 +79,10 @@ pub struct Coordinator {
     needs_restart: Vec<bool>,
     /// Responses parked for the current round (worker-indexed).
     inbox: Vec<Option<InboxEntry>>,
+    /// Per-worker EWMA of fresh-response latency (transport µs) for
+    /// adaptive quorum sizing; `0.0` = no sample yet (observed
+    /// latencies are clamped to ≥ 1 µs, so zero is unambiguous).
+    lat_ewma: Vec<f64>,
 }
 
 impl Coordinator {
@@ -189,6 +193,7 @@ impl Coordinator {
             missed: vec![0; m],
             needs_restart: vec![false; m],
             inbox: (0..m).map(|_| None).collect(),
+            lat_ewma: vec![0.0; m],
         })
     }
 
@@ -242,12 +247,22 @@ impl Coordinator {
         if live_at_start == 0 {
             bail!("all {} workers presumed crashed — cannot make progress", self.m);
         }
-        // quorum 0 = "all live" (the barrier); clamp to the live set
-        let q = if self.quorum.quorum == 0 { self.m } else { self.quorum.quorum };
-        let target = q.min(live_at_start).max(1);
-        let deadline = self.quorum.deadline_us.map(|d| self.transport_mut().now_us() + d);
+        let round_start = self.transport_mut().now_us();
+        let target = if let Some(ad) = self.quorum.adaptive {
+            let t = self.adaptive_target(ad, live_at_start);
+            if t < live_at_start {
+                metrics.adaptive_quorum_rounds += 1;
+            }
+            t
+        } else {
+            // quorum 0 = "all live" (the barrier); clamp to the live set
+            let q = if self.quorum.quorum == 0 { self.m } else { self.quorum.quorum };
+            q.min(live_at_start).max(1)
+        };
+        let deadline = self.quorum.deadline_us.map(|d| round_start + d);
 
         // collect until the quorum is met or the deadline fires
+        let mut lat_sampled = vec![false; self.m];
         while self.contributions() < target {
             match self.transport_mut().recv(deadline)? {
                 None => {
@@ -265,7 +280,16 @@ impl Coordinator {
                         .send(worker, ToWorker::Restart { seq: self.seq, input: Arc::clone(&input) })?;
                     metrics.bytes_down += (self.n * 8) as u64;
                 }
-                Some(TransportEvent::Response(msg)) => self.admit_response(msg, metrics)?,
+                Some(TransportEvent::Response(msg)) => {
+                    let (w, fresh) = (msg.worker, msg.seq == self.seq);
+                    self.admit_response(msg, metrics)?;
+                    if fresh && w < self.m {
+                        if let Some(ad) = self.quorum.adaptive {
+                            self.observe_latency(w, round_start, ad);
+                            lat_sampled[w] = true;
+                        }
+                    }
+                }
             }
         }
 
@@ -293,6 +317,12 @@ impl Coordinator {
             if !self.live[w] {
                 continue;
             }
+            // adaptive quorum: a live worker with no fresh latency sample
+            // this round decays toward inclusion, so a machine excluded
+            // by its history gets re-probed instead of exiled
+            if !lat_sampled[w] {
+                self.lat_ewma[w] *= 0.9;
+            }
             if contributed {
                 self.missed[w] = 0;
             } else {
@@ -304,6 +334,46 @@ impl Coordinator {
             }
         }
         Ok(())
+    }
+
+    /// Fold one fresh-response latency observation into worker `w`'s
+    /// EWMA. Latency is measured on the transport clock from the round's
+    /// broadcast to this arrival and clamped to ≥ 1 µs so `0.0` can keep
+    /// meaning "never sampled".
+    fn observe_latency(&mut self, w: usize, round_start: u64, ad: AdaptiveQuorum) {
+        let lat = self.transport_mut().now_us().saturating_sub(round_start).max(1) as f64;
+        let a = ad.alpha.clamp(0.0, 1.0);
+        let e = &mut self.lat_ewma[w];
+        *e = if *e == 0.0 { lat } else { (1.0 - a) * *e + a * lat };
+    }
+
+    /// Size the round target from the pooled per-worker latency EWMAs:
+    /// count the live workers at or below the `quantile` cutoff of the
+    /// distribution. Runs as a full barrier until every live worker has
+    /// a sample (the seed phase — also what re-seeds after mass
+    /// recoveries), and never targets fewer than one response.
+    fn adaptive_target(&self, ad: AdaptiveQuorum, live: usize) -> usize {
+        let mut sampled: Vec<f64> = self
+            .lat_ewma
+            .iter()
+            .zip(&self.live)
+            .filter(|&(&l, &alive)| alive && l > 0.0)
+            .map(|(&l, _)| l)
+            .collect();
+        if sampled.len() < live {
+            return live.max(1);
+        }
+        sampled.sort_by(|a, b| a.partial_cmp(b).expect("latencies are finite"));
+        let k = ((ad.quantile.clamp(0.0, 1.0) * sampled.len() as f64).ceil() as usize)
+            .clamp(1, sampled.len());
+        let cutoff = sampled[k - 1];
+        let target = self
+            .lat_ewma
+            .iter()
+            .zip(&self.live)
+            .filter(|&(&l, &alive)| alive && l > 0.0 && l <= cutoff)
+            .count();
+        target.clamp(1, live)
     }
 
     /// Park a response according to the round/staleness rules. Never

@@ -35,6 +35,9 @@ pub struct RunMetrics {
     pub quorum_short_rounds: u64,
     /// Rounds whose deadline fired before the quorum was met.
     pub deadline_fires: u64,
+    /// Rounds where the adaptive quorum targeted fewer responses than
+    /// the live worker count (the latency distribution cut the tail).
+    pub adaptive_quorum_rounds: u64,
     /// Rounds folded with zero contributions (state left untouched).
     pub skipped_folds: u64,
     /// One-round-stale responses folded into the next round's average
@@ -99,6 +102,7 @@ impl RunMetrics {
             ("imbalance", self.imbalance()),
             ("quorum_short_rounds", self.quorum_short_rounds as usize),
             ("deadline_fires", self.deadline_fires as usize),
+            ("adaptive_quorum_rounds", self.adaptive_quorum_rounds as usize),
             ("skipped_folds", self.skipped_folds as usize),
             ("stale_folded", self.stale_folded as usize),
             ("stale_dropped", self.stale_dropped as usize),
@@ -142,5 +146,6 @@ mod tests {
         assert!(j.get("clock_us").is_some());
         assert!(j.get("stale_folded").is_some());
         assert!(j.get("crashes_detected").is_some());
+        assert!(j.get("adaptive_quorum_rounds").is_some());
     }
 }

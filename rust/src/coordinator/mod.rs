@@ -23,6 +23,11 @@
 //!   re-weighted out of the average (the averaging family divides by
 //!   the contributor count `k`, the gradient family steps on the
 //!   partial sum).
+//! * **Adaptive** (`adaptive(quantile, deadline)`): the target is sized
+//!   per round from the observed response-time distribution — an EWMA
+//!   of each worker's fresh-response latency, pooled, cut at `quantile`
+//!   ([`protocol::AdaptiveQuorum`]). A persistently slow machine stops
+//!   gating rounds without any hand-picked fixed `q`.
 //!
 //! ## Fault model
 //!
@@ -68,5 +73,5 @@ pub mod worker;
 
 pub use master::{Coordinator, DistributedReport};
 pub use metrics::RunMetrics;
-pub use protocol::{Method, QuorumConfig, StragglerSpec};
+pub use protocol::{AdaptiveQuorum, Method, QuorumConfig, StragglerSpec};
 pub use transport::{ChannelTransport, Transport, TransportEvent};

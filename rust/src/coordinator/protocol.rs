@@ -63,6 +63,14 @@ impl Method {
     ///   the momentum state and keeps propagating, which breaks the
     ///   heavy-ball/Nesterov convergence arguments. Stale gradients are
     ///   dropped and the round proceeds on the fresh partial sum.
+    ///
+    /// The masterless gossip phase applies the same policy per node, but
+    /// at *reduced weight*: a one-round-stale neighbor value folds at
+    /// [`crate::gossip::STALE_WEIGHT`] of its nominal mixing weight with
+    /// the withheld mass renormalized onto the node itself (see
+    /// [`crate::gossip::NeighborInbox`]) — the star master can fold
+    /// stale members at full weight only because its `1/k` re-weighting
+    /// already renormalizes the average.
     pub fn folds_stale(&self) -> bool {
         !self.is_gradient_family()
     }
@@ -80,6 +88,35 @@ impl Method {
 pub struct StragglerSpec {
     pub prob: f64,
     pub delay_us: u64,
+}
+
+/// Adaptive quorum sizing: pick each round's response target from the
+/// *observed* response-time distribution instead of a fixed count.
+///
+/// The master keeps a per-worker EWMA of fresh-response latency
+/// (transport clock µs from broadcast to arrival). Each round it pools
+/// the live workers' EWMAs, takes the `quantile` cutoff, and waits only
+/// for the workers at or below it — the persistent tail is left to the
+/// stale-fold path instead of stalling the round. Workers excluded from
+/// the target decay toward inclusion (×0.9 per silent round), so a
+/// machine that recovers its speed is re-probed rather than exiled
+/// forever. Until every live worker has at least one sample the round
+/// runs as a full barrier, which is what seeds the EWMAs.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct AdaptiveQuorum {
+    /// Latency quantile in `(0, 1]`: workers whose EWMA sits at or below
+    /// this quantile of the pooled distribution count toward the round
+    /// target. `0.75` waits for the fastest three quarters.
+    pub quantile: f64,
+    /// EWMA weight on the newest latency sample (the rest stays on the
+    /// history). `0.2` tracks drifting machines without chasing jitter.
+    pub alpha: f64,
+}
+
+impl Default for AdaptiveQuorum {
+    fn default() -> Self {
+        AdaptiveQuorum { quantile: 0.75, alpha: 0.2 }
+    }
 }
 
 /// Semi-synchronous round policy: when the master stops waiting, and how
@@ -104,11 +141,15 @@ pub struct QuorumConfig {
     /// A presumed-dead worker that speaks again (or a simulated worker
     /// that recovers) is re-admitted with a checkpoint [`ToWorker::Restart`].
     pub crash_after_missed: u32,
+    /// When set, the fixed `quorum` count is replaced by a per-round
+    /// target sized from the observed response-time distribution (see
+    /// [`AdaptiveQuorum`]). The `deadline_us` backstop still applies.
+    pub adaptive: Option<AdaptiveQuorum>,
 }
 
 impl Default for QuorumConfig {
     fn default() -> Self {
-        QuorumConfig { quorum: 0, deadline_us: None, crash_after_missed: 3 }
+        QuorumConfig { quorum: 0, deadline_us: None, crash_after_missed: 3, adaptive: None }
     }
 }
 
@@ -121,6 +162,16 @@ impl QuorumConfig {
     /// Proceed at `q` responses with a per-round deadline.
     pub fn semi_sync(q: usize, deadline_us: u64) -> Self {
         QuorumConfig { quorum: q, deadline_us: Some(deadline_us), ..Self::default() }
+    }
+
+    /// Latency-adaptive rounds: wait for the observed-fastest `quantile`
+    /// of live workers, with a per-round deadline backstop.
+    pub fn adaptive(quantile: f64, deadline_us: u64) -> Self {
+        QuorumConfig {
+            deadline_us: Some(deadline_us),
+            adaptive: Some(AdaptiveQuorum { quantile, ..AdaptiveQuorum::default() }),
+            ..Self::default()
+        }
     }
 }
 
@@ -187,9 +238,17 @@ mod tests {
         let q = QuorumConfig::default();
         assert_eq!(q.quorum, 0);
         assert_eq!(q.deadline_us, None);
+        assert_eq!(q.adaptive, None);
         assert_eq!(QuorumConfig::barrier(), q);
         let s = QuorumConfig::semi_sync(6, 2_000);
         assert_eq!(s.quorum, 6);
         assert_eq!(s.deadline_us, Some(2_000));
+        assert_eq!(s.adaptive, None);
+        let a = QuorumConfig::adaptive(0.8, 3_000);
+        assert_eq!(a.quorum, 0);
+        assert_eq!(a.deadline_us, Some(3_000));
+        let ad = a.adaptive.unwrap();
+        assert!((ad.quantile - 0.8).abs() < 1e-15);
+        assert!((ad.alpha - 0.2).abs() < 1e-15);
     }
 }

@@ -1,0 +1,170 @@
+//! Link-level fault plans for the gossip consensus phase.
+//!
+//! Faults act on **undirected edges**: a failed link silences both
+//! directions for the round, so the realized mixing matrix (nominal
+//! weights with each failed edge folded onto both endpoints' diagonals —
+//! [`super::topology::drop_edges`]) stays symmetric and doubly
+//! stochastic. Three fault sources compose, all deterministic per
+//! `(plan, round)`:
+//!
+//! - i.i.d. per-(edge, round) drops with probability [`LinkFaultPlan::drop_prob`],
+//! - scripted per-edge outages over a round window ([`LinkOutage`]),
+//! - correlated partitions cutting the node set in two ([`PartitionSpec`]) —
+//!   the "switch failure" case where every cross-group link dies at once.
+
+use crate::gen::rng::Pcg64;
+
+/// One scripted link outage: the edge `{a, b}` is down for every round
+/// in `[from_round, until_round)`.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct LinkOutage {
+    pub a: usize,
+    pub b: usize,
+    pub from_round: u64,
+    pub until_round: u64,
+}
+
+/// A correlated partition: every edge between `{0, …, cut−1}` and
+/// `{cut, …, m−1}` is down for rounds in `[from_round, until_round)`.
+/// While active the graph has (at least) two components; the iteration
+/// keeps contracting within each island and re-couples on heal.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct PartitionSpec {
+    pub cut: usize,
+    pub from_round: u64,
+    pub until_round: u64,
+}
+
+/// Per-round link-failure schedule. `Default` is the clean network.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct LinkFaultPlan {
+    /// Independent per-(edge, round) drop probability.
+    pub drop_prob: f64,
+    /// Scripted single-link outages.
+    pub outages: Vec<LinkOutage>,
+    /// Scripted correlated partitions.
+    pub partitions: Vec<PartitionSpec>,
+    /// Seed for the i.i.d. drop rolls (one substream per round).
+    pub seed: u64,
+}
+
+impl LinkFaultPlan {
+    /// The clean network: no drops, no outages, no partitions.
+    pub fn none() -> Self {
+        Self::default()
+    }
+
+    /// Purely i.i.d. link failures at rate `drop_prob`.
+    pub fn iid(drop_prob: f64, seed: u64) -> Self {
+        LinkFaultPlan { drop_prob, seed, ..Self::default() }
+    }
+
+    /// True when this plan never drops anything.
+    pub fn is_clean(&self) -> bool {
+        self.drop_prob == 0.0 && self.outages.is_empty() && self.partitions.is_empty()
+    }
+
+    /// The subset of `edges` down at `round`, each edge listed at most
+    /// once (a link hit by several fault sources still folds its weight
+    /// onto the diagonals exactly once). Deterministic: the i.i.d. rolls
+    /// come from `Pcg64::with_stream(seed, round)` and consume one draw
+    /// per candidate edge in canonical order, so the same `(plan, round,
+    /// edges)` always drops the same links.
+    pub fn dropped(&self, round: u64, edges: &[(usize, usize)]) -> Vec<(usize, usize)> {
+        if self.is_clean() {
+            return Vec::new();
+        }
+        let mut rng = Pcg64::with_stream(self.seed, round);
+        let mut out = Vec::new();
+        for &(i, j) in edges {
+            // always consume the roll to keep the stream aligned across
+            // plans that differ only in scripted faults
+            let roll = rng.uniform();
+            let iid = self.drop_prob > 0.0 && roll < self.drop_prob;
+            let scripted = self.outages.iter().any(|o| {
+                let (a, b) = (o.a.min(o.b), o.a.max(o.b));
+                (a, b) == (i.min(j), i.max(j)) && round >= o.from_round && round < o.until_round
+            });
+            let cut = self.partitions.iter().any(|p| {
+                (i < p.cut) != (j < p.cut) && round >= p.from_round && round < p.until_round
+            });
+            if iid || scripted || cut {
+                out.push((i, j));
+            }
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gossip::topology::Topology;
+
+    #[test]
+    fn clean_plan_drops_nothing() {
+        let plan = LinkFaultPlan::none();
+        assert!(plan.is_clean());
+        let edges = Topology::Complete.edges_at(6, 1);
+        assert!(plan.dropped(1, &edges).is_empty());
+    }
+
+    #[test]
+    fn iid_drops_are_deterministic_and_rate_plausible() {
+        let plan = LinkFaultPlan::iid(0.2, 42);
+        let edges = Topology::Complete.edges_at(16, 1);
+        let a = plan.dropped(5, &edges);
+        let b = plan.dropped(5, &edges);
+        assert_eq!(a, b, "same round must replay identically");
+        // 120 edges at 20%: the count should land well inside (0, 60)
+        let mut total = 0usize;
+        for round in 1..=20 {
+            total += plan.dropped(round, &edges).len();
+        }
+        let rate = total as f64 / (20.0 * edges.len() as f64);
+        assert!(rate > 0.1 && rate < 0.3, "realized drop rate {rate}");
+    }
+
+    #[test]
+    fn scripted_outage_covers_exactly_its_window() {
+        let plan = LinkFaultPlan {
+            outages: vec![LinkOutage { a: 2, b: 1, from_round: 3, until_round: 6 }],
+            ..LinkFaultPlan::none()
+        };
+        let edges = Topology::Ring.edges_at(8, 1);
+        assert!(plan.dropped(2, &edges).is_empty());
+        assert_eq!(plan.dropped(3, &edges), vec![(1, 2)]);
+        assert_eq!(plan.dropped(5, &edges), vec![(1, 2)]);
+        assert!(plan.dropped(6, &edges).is_empty());
+    }
+
+    #[test]
+    fn partition_cuts_exactly_the_crossing_edges() {
+        let plan = LinkFaultPlan {
+            partitions: vec![PartitionSpec { cut: 3, from_round: 1, until_round: 2 }],
+            ..LinkFaultPlan::none()
+        };
+        let m = 6;
+        let edges = Topology::Complete.edges_at(m, 1);
+        let dropped = plan.dropped(1, &edges);
+        for &(i, j) in &dropped {
+            assert!((i < 3) != (j < 3), "edge ({i},{j}) does not cross the cut");
+        }
+        assert_eq!(dropped.len(), 3 * 3, "all cross-group links must be down");
+        assert!(plan.dropped(2, &edges).is_empty(), "heal after the window");
+    }
+
+    #[test]
+    fn overlapping_fault_sources_drop_each_edge_once() {
+        let plan = LinkFaultPlan {
+            drop_prob: 1.0,
+            outages: vec![LinkOutage { a: 0, b: 1, from_round: 1, until_round: 9 }],
+            partitions: vec![PartitionSpec { cut: 1, from_round: 1, until_round: 9 }],
+            seed: 1,
+            ..LinkFaultPlan::default()
+        };
+        let edges = Topology::Ring.edges_at(4, 1);
+        let dropped = plan.dropped(1, &edges);
+        assert_eq!(dropped, edges, "every edge down, none listed twice");
+    }
+}

@@ -1,0 +1,60 @@
+//! Decentralized (masterless) consensus phase: APC over unreliable,
+//! time-varying communication graphs.
+//!
+//! The paper's taskmaster is a single point of failure and — at large
+//! `m` — the throughput ceiling (every round serializes a fold and a
+//! fan-out through one node). This module replaces the master fold with
+//! **neighbor averaging**: each node keeps its own consensus estimate
+//! `x̄_i`, runs the unchanged local projection step against it, and
+//! mixes with its neighbors through a per-round doubly-stochastic
+//! matrix. No node is load-bearing; links may drop every round; the
+//! topology itself may change every round.
+//!
+//! ## Symbol map to the cited papers
+//!
+//! From **"Distributed Linear Equations over Random Networks"**
+//! (arXiv 2008.09795 — random, time-varying mixing):
+//!
+//! | paper | here |
+//! |---|---|
+//! | random graph process `G(t)` | [`Topology::edges_at`]`(m, round)` minus [`LinkFaultPlan::dropped`] |
+//! | random mixing matrix `W(t)` (symmetric, doubly stochastic) | [`metropolis_weights`] on the round's graph, failures folded by [`drop_edges`] |
+//! | convergence rate via `λ₂(E[W])` | [`spectral_gap`] (exact, static graphs) / [`GossipApc::estimated_gap`] (online EWMA power estimate, time-varying) |
+//! | i.i.d. link availability | [`LinkFaultPlan::drop_prob`] |
+//!
+//! From **"Network Flows that Solve Linear Equations"**
+//! (arXiv 1510.05176 — the projection-consensus flow):
+//!
+//! | paper | here |
+//! |---|---|
+//! | affine subspace `{x : A_i x = b_i}` per node | one [`crate::partition::MachineBlock`] per node |
+//! | projection `P_i` onto the local solution set | [`crate::solvers::local::ApcLocal::step`] (the paper's `P_i = I − A_iᵀ(A_iA_iᵀ)⁻¹A_i`, cached Cholesky) |
+//! | consensus flow `ẋ_i = P_i Σ_j a_ij (x_j − x_i)` | the discrete fold in [`GossipApc::iterate`]: `x̄_i ← η Σ_j W_ij x_j + (1−η) x̄_i` |
+//! | "all graphs connected ⇒ exponential convergence" | the `γ = η = 1` endpoint of [`gossip_params`]'s interpolation |
+//!
+//! The momentum `(γ, η)` comes from [`gossip_params`]: at spectral gap
+//! 1 (complete graph — `W = (1/m)11ᵀ` makes every node's fold the
+//! centralized master update) it is **exactly** the paper's Theorem-1
+//! optimum, so `GossipApc` on a clean complete graph reproduces
+//! [`crate::solvers::apc::Apc`] to floating-point noise
+//! (`tests/gossip_parity.rs` pins ≤ 1e-12); as the gap shrinks it
+//! interpolates toward the provably-safe plain projection consensus.
+//!
+//! Timing rides on PR 6's discrete-event machinery: [`GossipNet`]
+//! re-uses [`crate::sim`]'s `EventQueue`/`LinkModel`/`ComputeModel`, so
+//! a gossip run and a star [`crate::sim::SimTransport`] run report
+//! virtual clocks on the same scale (`benches/gossip_faults.rs`
+//! compares them head-to-head, including the star's master-side fold +
+//! fan-out serialization costs at large `m`).
+
+pub mod faults;
+pub mod net;
+pub mod solver;
+pub mod topology;
+
+pub use faults::{LinkFaultPlan, LinkOutage, PartitionSpec};
+pub use net::{GossipNet, GossipNetConfig};
+pub use solver::{
+    fold_row, gossip_params, GossipApc, GossipMetrics, NeighborInbox, STALE_WEIGHT,
+};
+pub use topology::{drop_edges, is_connected, metropolis_weights, spectral_gap, Topology};

@@ -1,0 +1,158 @@
+//! Virtual-clock network model for gossip rounds, reusing the PR 6
+//! discrete-event machinery ([`crate::sim`]: [`EventQueue`],
+//! [`LinkModel`], [`ComputeModel`]) so a decentralized run and a star
+//! ([`crate::sim::SimTransport`]) run are comparable on the **same**
+//! virtual microsecond clock. Under the shared defaults a star round
+//! costs 200 µs (50 µs down + 100 µs compute + 50 µs up through the
+//! master) while a gossip round costs 150 µs (100 µs compute + one
+//! 50 µs neighbor hop) — and, unlike the star, the gossip round time
+//! does not grow with a master-side fold or fan-out at large m.
+//!
+//! Message loss drawn from [`LinkModel::loss_prob`] is **symmetrized**:
+//! losing either direction of an exchange downs the whole edge for the
+//! round, which is what keeps the realized mixing matrix doubly
+//! stochastic (see [`super::topology::drop_edges`]).
+
+use crate::gen::rng::Pcg64;
+use crate::sim::{ComputeModel, EventQueue, LinkModel};
+
+/// Timing model for a gossip deployment. `Default` matches
+/// [`crate::sim::SimConfig`]'s defaults (fixed 50 µs links, 100 µs
+/// homogeneous compute, no loss), so side-by-side star/gossip clocks
+/// differ only by the topology they pay for.
+#[derive(Clone, Debug)]
+pub struct GossipNetConfig {
+    /// Per-link latency / bandwidth / loss model (both directions).
+    pub link: LinkModel,
+    /// Per-node compute model for the local projection step.
+    pub compute: ComputeModel,
+    /// Seed for the per-node random streams.
+    pub seed: u64,
+}
+
+impl Default for GossipNetConfig {
+    fn default() -> Self {
+        GossipNetConfig { link: LinkModel::default(), compute: ComputeModel::default(), seed: 1 }
+    }
+}
+
+/// Event-driven clock for synchronous gossip rounds: every node draws
+/// its compute time, then exchanges one message per incident edge
+/// direction; the round closes when the last delivery lands. Fully
+/// deterministic per `(config, m, n)` — node `i` owns stream `i + 1` of
+/// the seed, mirroring [`crate::sim::SimTransport`]'s worker streams.
+#[derive(Clone, Debug)]
+pub struct GossipNet {
+    cfg: GossipNetConfig,
+    rngs: Vec<Pcg64>,
+    rates: Vec<f64>,
+    clock_us: u64,
+    bytes: u64,
+    m: usize,
+}
+
+impl GossipNet {
+    /// Build for `m` nodes exchanging `n`-long f64 state vectors.
+    pub fn new(m: usize, n: usize, cfg: GossipNetConfig) -> Self {
+        let mut rngs: Vec<Pcg64> =
+            (0..m).map(|i| Pcg64::with_stream(cfg.seed, i as u64 + 1)).collect();
+        let rates: Vec<f64> =
+            rngs.iter_mut().map(|rng| cfg.compute.draw_rate(rng)).collect();
+        GossipNet { cfg, rngs, rates, clock_us: 0, bytes: (n * 8) as u64, m }
+    }
+
+    /// Current virtual time in microseconds.
+    pub fn clock_us(&self) -> u64 {
+        self.clock_us
+    }
+
+    /// Rewind to time zero and re-derive every node's stream — the same
+    /// net replays the same rounds.
+    pub fn reset(&mut self) {
+        self.rngs = (0..self.m).map(|i| Pcg64::with_stream(self.cfg.seed, i as u64 + 1)).collect();
+        self.rates = self.rngs.iter_mut().map(|rng| self.cfg.compute.draw_rate(rng)).collect();
+        self.clock_us = 0;
+    }
+
+    /// Run one synchronous round over the active `edges`: advances the
+    /// clock to the last delivery and returns the edges knocked out by
+    /// message loss this round (normalized `i < j`, deduplicated,
+    /// symmetrized — a loss in either direction downs the edge).
+    pub fn round(&mut self, edges: &[(usize, usize)]) -> Vec<(usize, usize)> {
+        let t0 = self.clock_us;
+        let compute: Vec<u64> = (0..self.m)
+            .map(|i| self.cfg.compute.sample_us(self.rates[i], &mut self.rngs[i]))
+            .collect();
+        let mut queue = EventQueue::new();
+        let mut lost = Vec::new();
+        for &(i, j) in edges {
+            // each direction is drawn from the *sender*'s stream
+            match self.cfg.link.transit_us(self.bytes, &mut self.rngs[i]) {
+                Some(t) => queue.push(t0 + compute[i] + t, (i, j)),
+                None => lost.push((i.min(j), i.max(j))),
+            }
+            match self.cfg.link.transit_us(self.bytes, &mut self.rngs[j]) {
+                Some(t) => queue.push(t0 + compute[j] + t, (j, i)),
+                None => lost.push((i.min(j), i.max(j))),
+            }
+        }
+        // even an isolated node pays its local projection step
+        let mut end = t0 + compute.iter().copied().max().unwrap_or(0);
+        while let Some((t, _delivery)) = queue.pop() {
+            end = end.max(t);
+        }
+        self.clock_us = end;
+        lost.sort_unstable();
+        lost.dedup();
+        lost
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gossip::topology::Topology;
+
+    #[test]
+    fn default_gossip_round_costs_150us() {
+        // 100 µs compute + one 50 µs hop — vs the star's 200 µs
+        // (down + compute + up): same models, one less traversal
+        let mut net = GossipNet::new(3, 16, GossipNetConfig::default());
+        let lost = net.round(&Topology::Complete.edges_at(3, 1));
+        assert!(lost.is_empty());
+        assert_eq!(net.clock_us(), 150);
+        net.round(&Topology::Complete.edges_at(3, 2));
+        assert_eq!(net.clock_us(), 300);
+    }
+
+    #[test]
+    fn total_loss_downs_every_edge_once() {
+        let cfg = GossipNetConfig {
+            link: LinkModel { loss_prob: 1.0, ..LinkModel::default() },
+            ..GossipNetConfig::default()
+        };
+        let mut net = GossipNet::new(4, 8, cfg);
+        let edges = Topology::Ring.edges_at(4, 1);
+        let lost = net.round(&edges);
+        assert_eq!(lost, edges, "every edge lost, listed exactly once");
+        // nobody delivered, but everyone computed
+        assert_eq!(net.clock_us(), 100);
+    }
+
+    #[test]
+    fn rounds_replay_after_reset() {
+        let cfg = GossipNetConfig {
+            link: LinkModel { loss_prob: 0.3, ..LinkModel::default() },
+            ..GossipNetConfig::default()
+        };
+        let edges = Topology::Complete.edges_at(5, 1);
+        let mut net = GossipNet::new(5, 8, cfg);
+        let a: Vec<_> = (0..4).map(|_| net.round(&edges)).collect();
+        let clock = net.clock_us();
+        net.reset();
+        assert_eq!(net.clock_us(), 0);
+        let b: Vec<_> = (0..4).map(|_| net.round(&edges)).collect();
+        assert_eq!(a, b, "same seed must replay the same losses");
+        assert_eq!(net.clock_us(), clock);
+    }
+}

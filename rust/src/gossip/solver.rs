@@ -1,0 +1,614 @@
+//! `GossipApc` — the paper's Algorithm 1 with the master fold replaced
+//! by neighbor averaging: every node runs the same local projection
+//! step ([`ApcLocal`], unchanged) against its **own** consensus estimate
+//! `x̄_i`, then folds its neighborhood through the round's realized
+//! doubly-stochastic mixing matrix with the master's momentum form:
+//!
+//! ```text
+//! x_i(t+1)  = x_i(t) + γ P_i (x̄_i(t) − x_i(t))          (unchanged)
+//! x̄_i(t+1) = η · Σ_j W_ij(t) x_j(t+1) + (1 − η) x̄_i(t)  (masterless fold)
+//! ```
+//!
+//! On the complete graph `W = (1/m)·11ᵀ`, so the fold is the
+//! centralized master update at every node and the trajectory matches
+//! `Apc` to floating-point noise. On sparser or failing graphs the
+//! momentum is retuned from the realized spectral gap
+//! ([`gossip_params`]) — interpolating toward the plain projection
+//! consensus `γ = η = 1` that arXiv 1510.05176 proves convergent for
+//! any connected graph, while arXiv 2008.09795's random-network result
+//! covers the i.i.d. per-round mixing matrices our link faults induce.
+
+use super::faults::LinkFaultPlan;
+use super::net::{GossipNet, GossipNetConfig};
+use super::topology::{drop_edges, metropolis_weights, spectral_gap, Topology};
+use crate::linalg::{vector::nrm2, Mat};
+use crate::parallel::{self, SliceCells};
+use crate::partition::PartitionedSystem;
+use crate::rates::{apc_optimal, ApcParams, SpectralInfo};
+use crate::solvers::local::ApcLocal;
+use crate::solvers::Solver;
+use anyhow::Result;
+use std::collections::HashSet;
+
+/// Gossip tuning: the Theorem-1 optimum `(γ*, η*)` assumes the fold is
+/// an exact average. With mixing gap `g = 1 − σ₂(W) < 1` we interpolate
+/// between the provably-safe projection consensus (`γ = η = 1`,
+/// convergent for any connected mixing matrix) and the centralized
+/// optimum, reaching it exactly at `g = 1` — which is what lets the
+/// complete-graph run reproduce the master bit-for-bit-close.
+pub fn gossip_params(mu_min: f64, mu_max: f64, gap: f64) -> Result<ApcParams> {
+    let p = apc_optimal(mu_min, mu_max)?;
+    if gap >= 1.0 {
+        return Ok(p);
+    }
+    let g = gap.clamp(0.0, 1.0);
+    Ok(ApcParams {
+        gamma: 1.0 + (p.gamma - 1.0) * g,
+        eta: 1.0 + (p.eta - 1.0) * g,
+        rho: 1.0 - (1.0 - p.rho) * g,
+    })
+}
+
+/// One node's momentum fold over its (index-ordered, weight-tagged)
+/// neighborhood values: `x̄ ← η·Σ w_j x_j + (1−η)·x̄`. The entries must
+/// carry a weight mass summing to 1 — the caller (either the realized
+/// mixing row or [`NeighborInbox::entries`]) is responsible for
+/// renormalizing missing or stale neighbors' mass onto the node itself.
+pub fn fold_row(xbar: &mut [f64], entries: &[(f64, &[f64])], eta: f64) {
+    for (k, xb) in xbar.iter_mut().enumerate() {
+        let mut mix = 0.0;
+        for &(wgt, x) in entries {
+            mix += wgt * x[k];
+        }
+        *xb = eta * mix + (1.0 - eta) * *xb;
+    }
+}
+
+/// Weight multiplier for a one-round-stale neighbor value; the withheld
+/// `1 − STALE_WEIGHT` share of its mass joins the node's own diagonal
+/// weight instead. Folding stale data at **full** weight — the bug this
+/// audit of the `Method::folds_stale` discipline exists to prevent —
+/// over-trusts a value from a point the trajectory has already left.
+pub const STALE_WEIGHT: f64 = 0.5;
+
+/// Per-node message inbox for asynchronous gossip transports, mirroring
+/// the star coordinator's staleness discipline
+/// ([`crate::coordinator::Method::folds_stale`]) for the averaging
+/// family: a fresh value always supersedes a parked one, an exact
+/// duplicate is counted and dropped, a one-round-stale value may be
+/// parked into an empty slot (folded later at [`STALE_WEIGHT`] of its
+/// nominal mass, the rest renormalized onto the node), and anything
+/// older — or claiming a future round — is counted and dropped.
+///
+/// The synchronous [`GossipApc::iterate`] path never folds stale values
+/// (loss is symmetrized into link failure instead); this inbox is the
+/// seam for the async per-message transport follow-up, where exact
+/// double stochasticity holds only in expectation.
+#[derive(Clone, Debug)]
+pub struct NeighborInbox {
+    round: u64,
+    slots: Vec<Option<(u64, Vec<f64>)>>,
+    /// Same-round second copies, dropped.
+    pub duplicates: u64,
+    /// One-round-stale values folded at renormalized weight.
+    pub stale_folded: u64,
+    /// Values too old (or from the future) to fold, dropped.
+    pub stale_dropped: u64,
+}
+
+impl NeighborInbox {
+    /// Empty inbox for a node in an `m`-node cluster.
+    pub fn new(m: usize) -> Self {
+        NeighborInbox {
+            round: 0,
+            slots: vec![None; m],
+            duplicates: 0,
+            stale_folded: 0,
+            stale_dropped: 0,
+        }
+    }
+
+    /// Open round `round`: clear the slots, keep the counters.
+    pub fn begin_round(&mut self, round: u64) {
+        self.round = round;
+        for s in &mut self.slots {
+            *s = None;
+        }
+    }
+
+    /// Admit a message `(from, round, value)` under the staleness
+    /// discipline described on the type.
+    pub fn admit(&mut self, from: usize, round: u64, x: Vec<f64>) {
+        if from >= self.slots.len() {
+            return;
+        }
+        if round == self.round {
+            match &self.slots[from] {
+                Some((r, _)) if *r == self.round => self.duplicates += 1,
+                _ => self.slots[from] = Some((round, x)),
+            }
+        } else if round + 1 == self.round && self.slots[from].is_none() {
+            self.slots[from] = Some((round, x));
+        } else {
+            self.stale_dropped += 1;
+        }
+    }
+
+    /// Build node `me`'s index-ordered fold entries from its nominal
+    /// mixing row: fresh neighbors at full weight, one-round-stale
+    /// neighbors at [`STALE_WEIGHT`] of theirs, and every gram of
+    /// missing or withheld mass renormalized onto `me`'s own value so
+    /// the entry weights still sum to the row's mass (1 for a
+    /// doubly-stochastic row).
+    pub fn entries<'a>(
+        &'a mut self,
+        me: usize,
+        x_self: &'a [f64],
+        row: &[f64],
+    ) -> Vec<(f64, &'a [f64])> {
+        debug_assert_eq!(row.len(), self.slots.len());
+        let mut self_weight = row[me];
+        let mut stale_seen = 0u64;
+        for (j, slot) in self.slots.iter().enumerate() {
+            if j == me || row[j] == 0.0 {
+                continue;
+            }
+            match slot {
+                Some((r, _)) if *r == self.round => {}
+                Some(_) => {
+                    stale_seen += 1;
+                    self_weight += (1.0 - STALE_WEIGHT) * row[j];
+                }
+                None => self_weight += row[j],
+            }
+        }
+        self.stale_folded += stale_seen;
+        let mut entries: Vec<(f64, &[f64])> = Vec::with_capacity(self.slots.len());
+        for (j, slot) in self.slots.iter().enumerate() {
+            if j == me {
+                entries.push((self_weight, x_self));
+                continue;
+            }
+            if row[j] == 0.0 {
+                continue;
+            }
+            match slot {
+                Some((r, x)) if *r == self.round => entries.push((row[j], x.as_slice())),
+                Some((_, x)) => entries.push((STALE_WEIGHT * row[j], x.as_slice())),
+                None => {}
+            }
+        }
+        entries
+    }
+}
+
+/// Per-run gossip counters (the decentralized analogue of
+/// [`crate::coordinator::RunMetrics`]).
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct GossipMetrics {
+    /// Consensus rounds executed.
+    pub rounds: u64,
+    /// Virtual clock at the last round's close (0 without a net model).
+    pub clock_us: u64,
+    /// Edges removed by the fault plan or symmetrized message loss.
+    pub links_dropped: u64,
+    /// Individual messages lost in the net model.
+    pub messages_lost: u64,
+    /// Times the online gap estimate moved `(γ, η)`.
+    pub retunes: u64,
+}
+
+/// The masterless APC solver. Construct with
+/// [`GossipApc::auto_with_spectral`] (complete graph — the drop-in
+/// replacement for the centralized master) or
+/// [`GossipApc::with_topology`] for degraded deployments; attach a
+/// virtual-clock model with [`GossipApc::with_net`].
+#[derive(Clone, Debug)]
+pub struct GossipApc {
+    /// Local projection step size γ (live value — may be retuned).
+    pub gamma: f64,
+    /// Consensus momentum η (live value — may be retuned).
+    pub eta: f64,
+    topology: Topology,
+    faults: LinkFaultPlan,
+    locals: Vec<ApcLocal>,
+    xbars: Vec<Vec<f64>>,
+    mean: Vec<f64>,
+    /// Nominal (round-1) edge set, cached for static topologies.
+    edges: Vec<(usize, usize)>,
+    nominal_w: Mat,
+    nominal_gap: f64,
+    mu: (f64, f64),
+    adaptive: bool,
+    gap_ewma: f64,
+    power_vec: Vec<f64>,
+    round: u64,
+    net: Option<GossipNet>,
+    /// Run counters; reset with the solver.
+    pub metrics: GossipMetrics,
+}
+
+/// EWMA factor for the online spectral-gap estimate (weight on the
+/// newest per-round power-iteration sample).
+const GAP_EWMA: f64 = 0.2;
+
+impl GossipApc {
+    /// Build over `topology` with link faults `faults`, tuning `(γ, η)`
+    /// from the nominal graph's spectral gap and the block spectrum in
+    /// `s`. Time-varying or faulty deployments switch to an online gap
+    /// estimate that retunes as the realized graphs come in.
+    pub fn with_topology(
+        sys: &PartitionedSystem,
+        s: &SpectralInfo,
+        topology: Topology,
+        faults: LinkFaultPlan,
+    ) -> Result<Self> {
+        let m = sys.m();
+        topology.validate(m)?;
+        let edges = topology.edges_at(m, 1);
+        let nominal_w = metropolis_weights(m, &edges);
+        let nominal_gap = spectral_gap(&nominal_w)?;
+        let adaptive = topology.is_time_varying() || !faults.is_clean();
+        let p = gossip_params(s.mu_min, s.mu_max, nominal_gap)?;
+        let locals = sys
+            .blocks
+            .iter()
+            .map(|blk| ApcLocal::new(blk, p.gamma))
+            .collect::<Result<Vec<_>>>()?;
+        let mut solver = GossipApc {
+            gamma: p.gamma,
+            eta: p.eta,
+            topology,
+            faults,
+            locals,
+            xbars: Vec::new(),
+            mean: vec![0.0; sys.n],
+            edges,
+            nominal_w,
+            nominal_gap,
+            mu: (s.mu_min, s.mu_max),
+            adaptive,
+            gap_ewma: nominal_gap,
+            power_vec: seed_disagreement(m),
+            round: 0,
+            net: None,
+            metrics: GossipMetrics::default(),
+        };
+        solver.init_states(sys);
+        Ok(solver)
+    }
+
+    /// Complete graph, clean links: the masterless drop-in whose
+    /// trajectory reproduces the centralized [`crate::solvers::apc::Apc`].
+    pub fn auto_with_spectral(sys: &PartitionedSystem, s: &SpectralInfo) -> Result<Self> {
+        Self::with_topology(sys, s, Topology::Complete, LinkFaultPlan::none())
+    }
+
+    /// Like [`GossipApc::auto_with_spectral`] with the spectrum computed
+    /// here (an `O(n³)` analysis performed once).
+    pub fn auto(sys: &PartitionedSystem) -> Result<Self> {
+        let s = SpectralInfo::compute(sys)?;
+        Self::auto_with_spectral(sys, &s)
+    }
+
+    /// Attach a virtual-clock network model; message loss it draws is
+    /// symmetrized into per-round link failure.
+    pub fn with_net(mut self, cfg: GossipNetConfig) -> Self {
+        self.net = Some(GossipNet::new(self.nominal_w.rows(), self.mean.len(), cfg));
+        self
+    }
+
+    /// Spectral gap of the nominal (fault-free) mixing matrix.
+    pub fn nominal_gap(&self) -> f64 {
+        self.nominal_gap
+    }
+
+    /// Current (EWMA) estimate of the realized spectral gap — equals
+    /// the nominal gap until the online estimator has seen a round.
+    pub fn estimated_gap(&self) -> f64 {
+        self.gap_ewma
+    }
+
+    /// Virtual clock in µs (0 unless a net model is attached).
+    pub fn clock_us(&self) -> u64 {
+        self.metrics.clock_us
+    }
+
+    /// Same initial point as the centralized master: the mean of the
+    /// blocks' min-norm feasible starts, replicated to every node.
+    fn init_states(&mut self, sys: &PartitionedSystem) {
+        let mut init = vec![0.0; sys.n];
+        for l in &self.locals {
+            for (s, v) in init.iter_mut().zip(&l.x) {
+                *s += v;
+            }
+        }
+        let m = sys.m() as f64;
+        for v in init.iter_mut() {
+            *v /= m;
+        }
+        self.xbars = vec![init.clone(); sys.m()];
+        self.mean = init;
+    }
+
+    /// One power-iteration step of the disagreement operator of this
+    /// round's realized `W`, folded into the EWMA gap estimate; retunes
+    /// `(γ, η)` when the estimate has moved them materially.
+    fn update_gap_and_retune(&mut self, w: &Mat) {
+        let m = w.rows();
+        if m <= 1 {
+            return;
+        }
+        let mut next = vec![0.0; m];
+        for (i, slot) in next.iter_mut().enumerate() {
+            let mut s = 0.0;
+            for (j, vj) in self.power_vec.iter().enumerate() {
+                s += w[(i, j)] * vj;
+            }
+            *slot = s;
+        }
+        let mean = next.iter().sum::<f64>() / m as f64;
+        for v in next.iter_mut() {
+            *v -= mean;
+        }
+        // power_vec is unit-norm and mean-free, so the step's growth is
+        // a (downward-biased) sample of σ₂(W)
+        let sigma = nrm2(&next).min(1.0);
+        if sigma > 1e-14 {
+            let inv = 1.0 / nrm2(&next);
+            for v in next.iter_mut() {
+                *v *= inv;
+            }
+            self.power_vec = next;
+        } else {
+            // disagreement annihilated in one hop (complete graph):
+            // reseed so later degraded rounds are still observable
+            self.power_vec = seed_disagreement(m);
+        }
+        let gap = (1.0 - sigma).clamp(0.0, 1.0);
+        self.gap_ewma = GAP_EWMA * gap + (1.0 - GAP_EWMA) * self.gap_ewma;
+        if let Ok(p) = gossip_params(self.mu.0, self.mu.1, self.gap_ewma) {
+            let moved = (p.gamma - self.gamma).abs() > 1e-3 * self.gamma.abs().max(1e-9)
+                || (p.eta - self.eta).abs() > 1e-3 * self.eta.abs().max(1e-9);
+            if moved {
+                self.gamma = p.gamma;
+                self.eta = p.eta;
+                for local in &mut self.locals {
+                    local.gamma = p.gamma;
+                }
+                self.metrics.retunes += 1;
+            }
+        }
+    }
+}
+
+fn seed_disagreement(m: usize) -> Vec<f64> {
+    let mut v: Vec<f64> = (0..m).map(|i| ((i as f64) + 1.0).sin()).collect();
+    let mean = v.iter().sum::<f64>() / m.max(1) as f64;
+    for x in v.iter_mut() {
+        *x -= mean;
+    }
+    let norm = nrm2(&v);
+    if norm > 0.0 {
+        for x in v.iter_mut() {
+            *x /= norm;
+        }
+    }
+    v
+}
+
+impl Solver for GossipApc {
+    fn name(&self) -> &'static str {
+        "G-APC"
+    }
+
+    fn xbar(&self) -> &[f64] {
+        &self.mean
+    }
+
+    fn iterate(&mut self, sys: &PartitionedSystem) {
+        let m = sys.m();
+        self.round += 1;
+        self.metrics.rounds += 1;
+
+        // 1. this round's graph and nominal mixing matrix
+        let (base_w, edges) = if self.topology.is_time_varying() {
+            let e = self.topology.edges_at(m, self.round);
+            (metropolis_weights(m, &e), e)
+        } else {
+            (self.nominal_w.clone(), self.edges.clone())
+        };
+
+        // 2. symmetric link failures: fault plan first, then message
+        //    loss from the net model on whatever survived
+        let mut dropped = self.faults.dropped(self.round, &edges);
+        if let Some(net) = &mut self.net {
+            let down: HashSet<(usize, usize)> = dropped.iter().copied().collect();
+            let alive: Vec<(usize, usize)> =
+                edges.iter().copied().filter(|e| !down.contains(e)).collect();
+            let lost = net.round(&alive);
+            self.metrics.messages_lost += lost.len() as u64;
+            dropped.extend(lost);
+            self.metrics.clock_us = net.clock_us();
+        }
+        self.metrics.links_dropped += dropped.len() as u64;
+        let w = if dropped.is_empty() { base_w } else { drop_edges(&base_w, &dropped) };
+
+        // 3. online gap estimate + retune (time-varying or faulty only —
+        //    static clean graphs keep their exact one-shot tuning)
+        if self.adaptive {
+            self.update_gap_and_retune(&w);
+        }
+
+        // 4. machine phase: the paper's projection step, unchanged,
+        //    against each node's own consensus estimate
+        let blocks = &sys.blocks;
+        let xbars = &self.xbars;
+        let locals = SliceCells::new(&mut self.locals);
+        parallel::machine_phase(blocks.len(), |i| {
+            // SAFETY: each index is visited by exactly one task
+            let local = unsafe { locals.index_mut(i) };
+            local.step(&blocks[i], &xbars[i]);
+        });
+
+        // 5. masterless fold: each node mixes its neighborhood through
+        //    the realized doubly-stochastic row, with momentum. Entries
+        //    stay in node-index order so the complete-graph fold is the
+        //    centralized sum in the centralized order.
+        let eta = self.eta;
+        for i in 0..m {
+            let mut entries: Vec<(f64, &[f64])> = Vec::with_capacity(m);
+            for (j, local) in self.locals.iter().enumerate() {
+                let wij = w[(i, j)];
+                if wij != 0.0 {
+                    entries.push((wij, local.x.as_slice()));
+                }
+            }
+            fold_row(&mut self.xbars[i], &entries, eta);
+        }
+
+        // 6. the reported estimate: the node average
+        let inv_m = 1.0 / m as f64;
+        for (k, mk) in self.mean.iter_mut().enumerate() {
+            let mut s = 0.0;
+            for xb in &self.xbars {
+                s += xb[k];
+            }
+            *mk = s * inv_m;
+        }
+    }
+
+    fn reset(&mut self, sys: &PartitionedSystem) {
+        if let Ok(p) = gossip_params(self.mu.0, self.mu.1, self.nominal_gap) {
+            self.gamma = p.gamma;
+            self.eta = p.eta;
+        }
+        self.locals = sys
+            .blocks
+            .iter()
+            .map(|blk| {
+                ApcLocal::new(blk, self.gamma).expect("blocks were valid at construction")
+            })
+            .collect();
+        self.round = 0;
+        self.gap_ewma = self.nominal_gap;
+        self.power_vec = seed_disagreement(sys.m());
+        self.metrics = GossipMetrics::default();
+        if let Some(net) = &mut self.net {
+            net.reset();
+        }
+        self.init_states(sys);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gen::problems::Problem;
+    use crate::solvers::apc::Apc;
+    use crate::solvers::{Metric, RunConfig, SolverOptions};
+
+    fn bed(n: usize, m: usize, seed: u64) -> (PartitionedSystem, Vec<f64>, SpectralInfo) {
+        let p = Problem::standard_gaussian(n, n, m).build(seed);
+        let sys = PartitionedSystem::split_even(&p.a, &p.b, m).unwrap();
+        let s = SpectralInfo::compute(&sys).unwrap();
+        (sys, p.x_star, s)
+    }
+
+    #[test]
+    fn gap_one_tuning_is_exactly_theorem_1() {
+        let p = apc_optimal(0.3, 2.1).unwrap();
+        let g = gossip_params(0.3, 2.1, 1.0).unwrap();
+        assert_eq!(p.gamma, g.gamma);
+        assert_eq!(p.eta, g.eta);
+        assert_eq!(p.rho, g.rho);
+        // degraded mixing interpolates toward plain projection consensus
+        let h = gossip_params(0.3, 2.1, 0.25).unwrap();
+        assert!((h.gamma - 1.0).abs() < (p.gamma - 1.0).abs());
+        assert!((h.eta - 1.0).abs() < (p.eta - 1.0).abs());
+        assert!(h.rho > p.rho);
+    }
+
+    #[test]
+    fn complete_graph_tracks_the_centralized_master() {
+        let (sys, _xstar, s) = bed(16, 4, 3);
+        let mut central = Apc::auto_with_spectral(&sys, &s).unwrap();
+        let mut gossip = GossipApc::auto_with_spectral(&sys, &s).unwrap();
+        assert_eq!(gossip.nominal_gap(), 1.0);
+        assert_eq!(gossip.gamma, central.gamma);
+        assert_eq!(gossip.eta, central.eta);
+        for round in 0..60 {
+            let drift = crate::linalg::relative_error(gossip.xbar(), central.xbar());
+            assert!(drift <= 1e-12, "round {round}: drift {drift}");
+            central.iterate(&sys);
+            gossip.iterate(&sys);
+        }
+    }
+
+    #[test]
+    fn ring_with_iid_link_failures_still_converges() {
+        let (sys, xstar, s) = bed(16, 4, 5);
+        let mut solver =
+            GossipApc::with_topology(&sys, &s, Topology::Ring, LinkFaultPlan::iid(0.15, 9))
+                .unwrap();
+        let opts = SolverOptions {
+            run: RunConfig::new(1e-6, 20_000),
+            metric: Metric::ErrorVsTruth(xstar),
+        };
+        let report = solver.solve(&sys, &opts).unwrap();
+        assert!(report.converged, "ring/15% failures stalled at {}", report.final_error);
+        assert!(solver.metrics.links_dropped > 0, "the plan must actually drop links");
+    }
+
+    #[test]
+    fn inbox_renormalizes_stale_and_missing_mass() {
+        let x_self = [3.0, 0.0];
+        let fresh = vec![6.0, 0.0];
+        let stale = vec![9.0, 0.0];
+        let row = [0.25, 0.25, 0.25, 0.25];
+        let mut inbox = NeighborInbox::new(4);
+        inbox.begin_round(7);
+        inbox.admit(1, 7, fresh.clone());
+        inbox.admit(1, 7, fresh.clone()); // duplicate: counted, dropped
+        inbox.admit(2, 6, stale.clone()); // one-round stale: parked
+        inbox.admit(2, 5, stale.clone()); // two rounds old: dropped
+        inbox.admit(3, 8, vec![1.0, 0.0]); // future round: dropped
+        let entries = inbox.entries(0, &x_self, &row);
+        // index order: self (0), fresh (1), stale (2); node 3 missing
+        assert_eq!(entries.len(), 3);
+        // stale node 2 folds at half its mass, the withheld half plus
+        // all of missing node 3's mass lands on self
+        let w_self = 0.25 + (1.0 - STALE_WEIGHT) * 0.25 + 0.25;
+        assert!((entries[0].0 - w_self).abs() < 1e-15);
+        assert!((entries[1].0 - 0.25).abs() < 1e-15);
+        assert!((entries[2].0 - STALE_WEIGHT * 0.25).abs() < 1e-15);
+        let total: f64 = entries.iter().map(|e| e.0).sum();
+        assert!((total - 1.0).abs() < 1e-15, "mass must renormalize to 1");
+        let mut xbar = vec![0.0, 0.0];
+        fold_row(&mut xbar, &entries, 1.0);
+        let expect = w_self * 3.0 + 0.25 * 6.0 + STALE_WEIGHT * 0.25 * 9.0;
+        assert!((xbar[0] - expect).abs() < 1e-12);
+        // the audited bug: full-weight stale folding gives a different,
+        // over-trusting answer
+        let naive = 0.5 * 3.0 + 0.25 * 6.0 + 0.25 * 9.0;
+        assert!((xbar[0] - naive).abs() > 1e-3);
+        assert_eq!(inbox.duplicates, 1);
+        assert_eq!(inbox.stale_dropped, 2);
+        assert_eq!(inbox.stale_folded, 1);
+    }
+
+    #[test]
+    fn fresh_message_supersedes_a_parked_stale_value() {
+        let mut inbox = NeighborInbox::new(2);
+        inbox.begin_round(4);
+        inbox.admit(1, 3, vec![1.0]); // parked stale
+        inbox.admit(1, 4, vec![2.0]); // fresh supersedes
+        let x_self = [0.0];
+        let entries = inbox.entries(0, &x_self, &[0.5, 0.5]);
+        assert_eq!(entries.len(), 2);
+        assert!((entries[1].0 - 0.5).abs() < 1e-15, "fresh folds at full weight");
+        assert_eq!(entries[1].1, &[2.0][..]);
+        drop(entries);
+        assert_eq!(inbox.stale_folded, 0, "superseded stale must not count");
+    }
+}

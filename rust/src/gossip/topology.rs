@@ -1,0 +1,369 @@
+//! Communication topologies for the masterless consensus phase, and the
+//! doubly-stochastic mixing matrices they induce.
+//!
+//! Every topology yields an undirected edge set per round;
+//! [`metropolis_weights`] turns an edge set into a symmetric,
+//! doubly-stochastic mixing matrix `W` via Metropolis–Hastings weights
+//! `w_ij = 1/(1 + max(deg_i, deg_j))` with the residual mass on the
+//! diagonal. Convergence of gossip averaging is governed by the spectral
+//! gap `1 − σ₂(W)` where `σ₂` is the second-largest eigenvalue modulus
+//! ([`spectral_gap`]); the complete graph attains gap 1 (its Metropolis
+//! matrix is exactly `(1/m)·11ᵀ`, the centralized average).
+
+use crate::gen::rng::Pcg64;
+use crate::linalg::{sym_eigen, Mat};
+use anyhow::{bail, Result};
+
+/// A communication graph over `m` nodes. Static topologies produce the
+/// same edge set every round; [`Topology::TimeVarying`] redraws a random
+/// subgraph of the complete graph each round (randomized gossip — the
+/// `W(t)` i.i.d. mixing-matrix sequence of arXiv 2008.09795).
+#[derive(Clone, Debug, PartialEq)]
+pub enum Topology {
+    /// Every pair of nodes is connected; Metropolis weights make one
+    /// mixing step an exact global average (gap = 1).
+    Complete,
+    /// Cycle `0 − 1 − ⋯ − (m−1) − 0`; gap shrinks as `Θ(1/m²)`.
+    Ring,
+    /// `rows × cols` wrap-around grid (`rows·cols` must equal `m`);
+    /// gap `Θ(1/max(rows, cols)²)`.
+    Torus { rows: usize, cols: usize },
+    /// Erdős–Rényi `G(m, p)`: each pair connected independently with
+    /// probability `edge_prob`, drawn once (deterministically from
+    /// `seed`) and redrawn with a shifted stream until connected, so a
+    /// constructed topology is always usable.
+    ErdosRenyi { edge_prob: f64, seed: u64 },
+    /// Randomized gossip: each round, every pair is independently active
+    /// with probability `degree/(m−1)` (expected degree `degree`),
+    /// redrawn per round from `seed`. Single rounds may be disconnected;
+    /// only the union graph over a window needs to connect.
+    TimeVarying { degree: usize, seed: u64 },
+}
+
+impl Topology {
+    /// Human-readable label for benches and reports.
+    pub fn name(&self) -> &'static str {
+        match self {
+            Topology::Complete => "complete",
+            Topology::Ring => "ring",
+            Topology::Torus { .. } => "torus",
+            Topology::ErdosRenyi { .. } => "erdos-renyi",
+            Topology::TimeVarying { .. } => "time-varying",
+        }
+    }
+
+    /// True when the edge set is redrawn every round (so the spectral
+    /// gap must be estimated online rather than computed once).
+    pub fn is_time_varying(&self) -> bool {
+        matches!(self, Topology::TimeVarying { .. })
+    }
+
+    /// Check the topology is well-formed for `m` nodes.
+    pub fn validate(&self, m: usize) -> Result<()> {
+        if m == 0 {
+            bail!("topology needs at least one node");
+        }
+        match *self {
+            Topology::Torus { rows, cols } => {
+                if rows == 0 || cols == 0 || rows * cols != m {
+                    bail!("torus {rows}x{cols} does not tile m = {m} nodes");
+                }
+            }
+            Topology::ErdosRenyi { edge_prob, .. } => {
+                if !(0.0..=1.0).contains(&edge_prob) || (m > 1 && edge_prob == 0.0) {
+                    bail!("Erdos-Renyi edge probability {edge_prob} out of range");
+                }
+            }
+            Topology::TimeVarying { degree, .. } => {
+                if degree == 0 && m > 1 {
+                    bail!("time-varying gossip needs expected degree >= 1");
+                }
+            }
+            _ => {}
+        }
+        Ok(())
+    }
+
+    /// The undirected edge set active at `round` (1-based), each edge
+    /// normalized to `i < j`, listed in canonical (row-major) order.
+    /// Static topologies ignore `round`.
+    pub fn edges_at(&self, m: usize, round: u64) -> Vec<(usize, usize)> {
+        match *self {
+            Topology::Complete => {
+                let mut e = Vec::with_capacity(m * (m.saturating_sub(1)) / 2);
+                for i in 0..m {
+                    for j in (i + 1)..m {
+                        e.push((i, j));
+                    }
+                }
+                e
+            }
+            Topology::Ring => {
+                let mut adj = vec![false; m * m];
+                for i in 0..m {
+                    let j = (i + 1) % m;
+                    if i != j {
+                        adj[i.min(j) * m + i.max(j)] = true;
+                    }
+                }
+                collect_edges(m, &adj)
+            }
+            Topology::Torus { rows, cols } => {
+                // wrap-around grid; a Vec<bool> adjacency dedupes the
+                // double edges a 2-wide dimension would otherwise produce
+                let mut adj = vec![false; m * m];
+                for r in 0..rows {
+                    for c in 0..cols {
+                        let u = r * cols + c;
+                        let right = r * cols + (c + 1) % cols;
+                        let down = ((r + 1) % rows) * cols + c;
+                        for v in [right, down] {
+                            if u != v {
+                                adj[u.min(v) * m + u.max(v)] = true;
+                            }
+                        }
+                    }
+                }
+                collect_edges(m, &adj)
+            }
+            Topology::ErdosRenyi { edge_prob, seed } => {
+                // deterministic retry until connected: attempt k draws
+                // from stream k, so the same seed always yields the same
+                // usable graph
+                for attempt in 0..64 {
+                    let mut rng = Pcg64::with_stream(seed, attempt);
+                    let mut e = Vec::new();
+                    for i in 0..m {
+                        for j in (i + 1)..m {
+                            if rng.uniform() < edge_prob {
+                                e.push((i, j));
+                            }
+                        }
+                    }
+                    if is_connected(m, &e) {
+                        return e;
+                    }
+                }
+                // pathological (tiny p): fall back to a ring so the
+                // solver degrades instead of silently never converging
+                Topology::Ring.edges_at(m, round)
+            }
+            Topology::TimeVarying { degree, seed } => {
+                if m <= 1 {
+                    return Vec::new();
+                }
+                let p = (degree as f64 / (m - 1) as f64).min(1.0);
+                let mut rng = Pcg64::with_stream(seed, round);
+                let mut e = Vec::new();
+                for i in 0..m {
+                    for j in (i + 1)..m {
+                        if rng.uniform() < p {
+                            e.push((i, j));
+                        }
+                    }
+                }
+                e
+            }
+        }
+    }
+}
+
+fn collect_edges(m: usize, adj: &[bool]) -> Vec<(usize, usize)> {
+    let mut e = Vec::new();
+    for i in 0..m {
+        for j in (i + 1)..m {
+            if adj[i * m + j] {
+                e.push((i, j));
+            }
+        }
+    }
+    e
+}
+
+/// Breadth-first connectivity check over an undirected edge list.
+pub fn is_connected(m: usize, edges: &[(usize, usize)]) -> bool {
+    if m <= 1 {
+        return true;
+    }
+    let mut nbrs = vec![Vec::new(); m];
+    for &(i, j) in edges {
+        nbrs[i].push(j);
+        nbrs[j].push(i);
+    }
+    let mut seen = vec![false; m];
+    let mut stack = vec![0usize];
+    seen[0] = true;
+    let mut count = 1;
+    while let Some(u) = stack.pop() {
+        for &v in &nbrs[u] {
+            if !seen[v] {
+                seen[v] = true;
+                count += 1;
+                stack.push(v);
+            }
+        }
+    }
+    count == m
+}
+
+/// Metropolis–Hastings mixing matrix for an undirected graph:
+/// `w_ij = 1/(1 + max(deg_i, deg_j))` on each edge, and each diagonal
+/// absorbs its row's residual mass. The result is symmetric and doubly
+/// stochastic for **any** edge set — including one with failed links
+/// removed — which is what keeps the gossip iteration average-preserving
+/// under degradation.
+pub fn metropolis_weights(m: usize, edges: &[(usize, usize)]) -> Mat {
+    let mut deg = vec![0usize; m];
+    for &(i, j) in edges {
+        deg[i] += 1;
+        deg[j] += 1;
+    }
+    let mut w = Mat::zeros(m, m);
+    for &(i, j) in edges {
+        let wij = 1.0 / (1.0 + deg[i].max(deg[j]) as f64);
+        w[(i, j)] = wij;
+        w[(j, i)] = wij;
+    }
+    for i in 0..m {
+        let mut off = 0.0;
+        for j in 0..m {
+            if j != i {
+                off += w[(i, j)];
+            }
+        }
+        w[(i, i)] = 1.0 - off;
+    }
+    w
+}
+
+/// Symmetric link failure: remove each dropped edge from `W` and move its
+/// weight onto **both** endpoints' diagonals. Row and column sums are
+/// preserved exactly, so the realized matrix stays doubly stochastic —
+/// the requirement for the faulty iteration to keep the consensus
+/// average fixed. Each edge must appear at most once in `dropped`.
+pub fn drop_edges(w: &Mat, dropped: &[(usize, usize)]) -> Mat {
+    let mut out = w.clone();
+    for &(i, j) in dropped {
+        if i == j {
+            continue;
+        }
+        let wij = out[(i, j)];
+        out[(i, j)] = 0.0;
+        out[(j, i)] = 0.0;
+        out[(i, i)] += wij;
+        out[(j, j)] += wij;
+    }
+    out
+}
+
+/// Spectral gap `1 − σ₂(W)` of a symmetric doubly-stochastic mixing
+/// matrix, where `σ₂ = max(|λ₂|, |λ_min|)` is the second-largest
+/// eigenvalue modulus. Eigenvalue noise below `1e-12` is snapped to
+/// zero so the complete graph reports **exactly** 1.0 — the gossip
+/// tuning reduces to the paper's Theorem-1 parameters on that branch,
+/// which is what makes complete-graph runs reproduce the centralized
+/// master.
+pub fn spectral_gap(w: &Mat) -> Result<f64> {
+    let m = w.rows();
+    if m <= 1 {
+        return Ok(1.0);
+    }
+    let eig = sym_eigen(w)?;
+    let mut slem = eig.values[m - 2].abs().max(eig.values[0].abs());
+    if slem < 1e-12 {
+        slem = 0.0;
+    }
+    Ok((1.0 - slem).clamp(0.0, 1.0))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn assert_doubly_stochastic(w: &Mat) {
+        let m = w.rows();
+        for i in 0..m {
+            let mut row = 0.0;
+            let mut col = 0.0;
+            for j in 0..m {
+                row += w[(i, j)];
+                col += w[(j, i)];
+                assert!((w[(i, j)] - w[(j, i)]).abs() < 1e-15, "not symmetric");
+                assert!(w[(i, j)] >= -1e-15, "negative weight");
+            }
+            assert!((row - 1.0).abs() < 1e-12, "row {i} sums to {row}");
+            assert!((col - 1.0).abs() < 1e-12, "col {i} sums to {col}");
+        }
+    }
+
+    #[test]
+    fn complete_graph_metropolis_is_the_uniform_average() {
+        let m = 6;
+        let w = metropolis_weights(m, &Topology::Complete.edges_at(m, 1));
+        for i in 0..m {
+            for j in 0..m {
+                assert!((w[(i, j)] - 1.0 / m as f64).abs() < 1e-15);
+            }
+        }
+        assert_eq!(spectral_gap(&w).unwrap(), 1.0);
+    }
+
+    #[test]
+    fn ring_weights_and_gap_match_the_circulant_formula() {
+        let m = 8;
+        let w = metropolis_weights(m, &Topology::Ring.edges_at(m, 1));
+        assert_doubly_stochastic(&w);
+        assert!((w[(0, 1)] - 1.0 / 3.0).abs() < 1e-15);
+        // circulant eigenvalues 1/3 + (2/3)cos(2πk/8): SLEM at k = 1
+        let expect = 1.0 - (1.0 / 3.0 + (2.0 / 3.0) * (std::f64::consts::PI / 4.0).cos());
+        let gap = spectral_gap(&w).unwrap();
+        assert!((gap - expect).abs() < 1e-9, "gap {gap} vs {expect}");
+    }
+
+    #[test]
+    fn torus_tiles_and_mixes_better_than_the_ring() {
+        let m = 8;
+        let t = Topology::Torus { rows: 2, cols: 4 };
+        t.validate(m).unwrap();
+        let w = metropolis_weights(m, &t.edges_at(m, 1));
+        assert_doubly_stochastic(&w);
+        let ring = metropolis_weights(m, &Topology::Ring.edges_at(m, 1));
+        assert!(spectral_gap(&w).unwrap() > spectral_gap(&ring).unwrap());
+        assert!(Topology::Torus { rows: 3, cols: 3 }.validate(8).is_err());
+    }
+
+    #[test]
+    fn erdos_renyi_is_deterministic_and_connected() {
+        let t = Topology::ErdosRenyi { edge_prob: 0.4, seed: 7 };
+        let m = 12;
+        let e1 = t.edges_at(m, 1);
+        let e2 = t.edges_at(m, 99); // static: round is ignored
+        assert_eq!(e1, e2);
+        assert!(is_connected(m, &e1));
+        assert_doubly_stochastic(&metropolis_weights(m, &e1));
+    }
+
+    #[test]
+    fn time_varying_redraws_per_round_deterministically() {
+        let t = Topology::TimeVarying { degree: 2, seed: 3 };
+        let m = 10;
+        let a = t.edges_at(m, 1);
+        let b = t.edges_at(m, 2);
+        assert_eq!(a, t.edges_at(m, 1), "same round must replay");
+        assert_ne!(a, b, "different rounds should differ");
+        assert!(t.is_time_varying());
+    }
+
+    #[test]
+    fn dropping_edges_preserves_double_stochasticity() {
+        let m = 8;
+        let edges = Topology::Ring.edges_at(m, 1);
+        let w = metropolis_weights(m, &edges);
+        let realized = drop_edges(&w, &[(0, 1), (3, 4)]);
+        assert_doubly_stochastic(&realized);
+        assert_eq!(realized[(0, 1)], 0.0);
+        assert!(realized[(0, 0)] > w[(0, 0)]);
+        // mixing degrades but the matrix stays usable
+        assert!(spectral_gap(&realized).unwrap() <= spectral_gap(&w).unwrap() + 1e-12);
+    }
+}

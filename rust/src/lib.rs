@@ -34,7 +34,10 @@
 //!   batch, the serving workload's steady state), [`rates`]
 //! * the system: [`coordinator`] (L3, transport-agnostic quorum rounds),
 //!   [`sim`] (discrete-event cluster simulator: virtual-time faults,
-//!   stragglers, crash/recovery at thousands of machines), [`runtime`]
+//!   stragglers, crash/recovery at thousands of machines), [`gossip`]
+//!   (masterless consensus over unreliable, time-varying topologies —
+//!   per-round doubly-stochastic mixing, link-fault plans, spectral-gap
+//!   tuned momentum), [`runtime`]
 //!   (PJRT bridge to the L2/L1 artifacts built by `python/compile/`),
 //!   [`serve`] (the multi-tenant serving front-end: prepared-system LRU
 //!   cache, arrival-window admission, per-tenant SLO accounting)
@@ -47,6 +50,7 @@ pub mod cli;
 pub mod config;
 pub mod coordinator;
 pub mod gen;
+pub mod gossip;
 pub mod linalg;
 pub mod mm;
 pub mod parallel;

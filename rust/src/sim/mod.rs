@@ -17,6 +17,10 @@
 //! * [`ComputeModel`] — per-round base compute time, a per-worker
 //!   heterogeneity spread (each machine draws a fixed slowdown once, at
 //!   boot), and per-round multiplicative jitter.
+//! * [`MasterCostModel`] — master-side serialization: per-response
+//!   fold/ingest cost and per-send downlink fan-out stagger, the terms
+//!   that cap star throughput at large `m` (defaults to free so
+//!   historical timings are unchanged).
 //! * [`FaultPlan`] — virtual-time stragglers (same
 //!   [`crate::coordinator::StragglerSpec`] the channel transport
 //!   sleeps on), scheduled crash/recover windows ([`CrashSpec`], round
@@ -38,5 +42,5 @@ mod transport;
 
 pub use event::EventQueue;
 pub use fault::{CrashSpec, FaultPlan};
-pub use net::{ComputeModel, Delay, LinkModel};
+pub use net::{ComputeModel, Delay, LinkModel, MasterCostModel};
 pub use transport::{SimConfig, SimTransport};

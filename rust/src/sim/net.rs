@@ -123,6 +123,39 @@ impl ComputeModel {
     }
 }
 
+/// Master-side costs of the star — the terms that make a single
+/// coordinator the throughput ceiling at large `m`. Both default to
+/// zero (a free, infinitely parallel master), which preserves the
+/// historical `2·link + compute` fault-free round exactly; benches that
+/// compare the star against the masterless gossip phase set them to
+/// honest values so the comparison charges the star for its fold and
+/// its fan-out.
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct MasterCostModel {
+    /// Per-response ingest cost (µs): deserializing one uplink and
+    /// folding it into the running `x̄` accumulator. Paid serially, in
+    /// arrival order — `m` responses cost `m · ingest_us` of master
+    /// time even when the network would deliver them simultaneously.
+    pub ingest_us: f64,
+    /// Downlink serialization (µs per queued send): the master owns one
+    /// NIC, so the i-th broadcast message of a round departs `i ·
+    /// fanout_us` after the first. Zero models a broadcast-capable
+    /// fabric.
+    pub fanout_us: f64,
+}
+
+impl MasterCostModel {
+    /// Departure offset (µs) for the `idx`-th send of a round's fan-out.
+    pub fn fanout_offset_us(&self, idx: u64) -> u64 {
+        (self.fanout_us * idx as f64).max(0.0).round() as u64
+    }
+
+    /// Master time (µs) consumed ingesting one uplink response.
+    pub fn ingest_cost_us(&self) -> u64 {
+        self.ingest_us.max(0.0).round() as u64
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -185,6 +218,17 @@ mod tests {
         let mut rng = Pcg64::new(5);
         let link = LinkModel { loss_prob: 1.0, ..Default::default() };
         assert_eq!(link.transit_us(100, &mut rng), None);
+    }
+
+    #[test]
+    fn master_costs_default_free_and_round() {
+        let free = MasterCostModel::default();
+        assert_eq!(free.fanout_offset_us(7), 0);
+        assert_eq!(free.ingest_cost_us(), 0);
+        let busy = MasterCostModel { ingest_us: 5.4, fanout_us: 10.0 };
+        assert_eq!(busy.fanout_offset_us(0), 0);
+        assert_eq!(busy.fanout_offset_us(3), 30);
+        assert_eq!(busy.ingest_cost_us(), 5);
     }
 
     #[test]

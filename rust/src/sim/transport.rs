@@ -2,7 +2,7 @@
 
 use super::event::EventQueue;
 use super::fault::FaultPlan;
-use super::net::{ComputeModel, LinkModel};
+use super::net::{ComputeModel, LinkModel, MasterCostModel};
 use crate::coordinator::protocol::{FromWorker, Method, ToWorker};
 use crate::coordinator::transport::{Transport, TransportEvent};
 use crate::coordinator::worker::{self, LocalState};
@@ -20,6 +20,9 @@ pub struct SimConfig {
     pub compute: ComputeModel,
     /// What goes wrong.
     pub faults: FaultPlan,
+    /// Master-side serialization costs (fold ingest, fan-out). Defaults
+    /// to free — set for honest star-vs-gossip clock comparisons.
+    pub master: MasterCostModel,
     /// Master seed; every per-worker RNG is an independent stream of it,
     /// so a (config, seed) pair reproduces the run exactly.
     pub seed: u64,
@@ -69,6 +72,9 @@ pub struct SimTransport {
     /// Highest round the master has broadcast — the cluster's notion of
     /// "now" at round granularity, which drives scheduled recoveries.
     cur_round: u64,
+    /// Sends issued in the current fan-out burst (resets when a send's
+    /// `seq` advances `cur_round`) — drives [`MasterCostModel::fanout_offset_us`].
+    fanout_idx: u64,
 }
 
 impl SimTransport {
@@ -101,6 +107,7 @@ impl SimTransport {
             queue: EventQueue::new(),
             clock_us: 0,
             cur_round: 0,
+            fanout_idx: 0,
         })
     }
 
@@ -218,7 +225,15 @@ impl Transport for SimTransport {
             ToWorker::Round { seq, .. } | ToWorker::Restart { seq, .. } => *seq,
             ToWorker::Stop => return Ok(()), // simulated machines just stop existing
         };
-        self.cur_round = self.cur_round.max(seq);
+        if seq > self.cur_round {
+            self.cur_round = seq;
+            self.fanout_idx = 0; // a new round starts a new fan-out burst
+        }
+        // The master's NIC serializes the burst: this message departs
+        // after every earlier send of the round, dead recipient or not
+        // (the master doesn't know it's dead until the deadline).
+        let depart = self.clock_us + self.cfg.master.fanout_offset_us(self.fanout_idx);
+        self.fanout_idx += 1;
         if self.down_for_round(w, seq) {
             // crashed machine: the wire doesn't error, the message is gone
             self.workers[w].dropped_while_down = true;
@@ -227,7 +242,7 @@ impl Transport for SimTransport {
         let bytes = (self.n * 8) as u64;
         let transit = self.cfg.net.transit_us(bytes, &mut self.workers[w].rng);
         if let Some(t) = transit {
-            self.queue.push(self.clock_us + t, SimEvent::Deliver { worker: w, msg });
+            self.queue.push(depart + t, SimEvent::Deliver { worker: w, msg });
         }
         Ok(())
     }
@@ -258,7 +273,12 @@ impl Transport for SimTransport {
             self.clock_us = self.clock_us.max(t);
             match ev {
                 SimEvent::Deliver { worker, msg } => self.process_deliver(worker, msg)?,
-                SimEvent::Uplink { resp } => return Ok(Some(TransportEvent::Response(resp))),
+                SimEvent::Uplink { resp } => {
+                    // the master spends ingest time deserializing and
+                    // folding this response before it can act on it
+                    self.clock_us += self.cfg.master.ingest_cost_us();
+                    return Ok(Some(TransportEvent::Response(resp)));
+                }
                 SimEvent::Rejoin { worker } => {
                     let sw = &mut self.workers[worker];
                     sw.dropped_while_down = false;
@@ -314,6 +334,31 @@ mod tests {
         }
         // default link 50 µs each way + 100 µs compute
         assert_eq!(t.now_us(), 200, "virtual clock should be exactly 2·50 + 100");
+    }
+
+    #[test]
+    fn master_costs_serialize_the_star_round() {
+        let sys = sys(12, 3, 51);
+        let cfg = SimConfig {
+            master: MasterCostModel { ingest_us: 5.0, fanout_us: 10.0 },
+            ..Default::default()
+        };
+        let mut t = SimTransport::new(&sys, Method::Consensus, cfg).unwrap();
+        broadcast(&mut t, 1, 12);
+        // fan-out: sends depart at 0/10/20, deliver at 50/60/70 (fixed
+        // 50 µs link); uplinks land at +100 compute +50 link = 200/210/
+        // 220; each pop pays 5 µs master ingest → 205/215/225.
+        let mut arrivals = Vec::new();
+        for _ in 0..3 {
+            match t.recv(None).unwrap() {
+                Some(TransportEvent::Response(r)) => {
+                    assert_eq!(r.seq, 1);
+                    arrivals.push(t.now_us());
+                }
+                _ => panic!("unexpected event"),
+            }
+        }
+        assert_eq!(arrivals, vec![205, 215, 225], "fan-out + ingest must serialize the round");
     }
 
     #[test]

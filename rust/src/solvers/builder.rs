@@ -58,11 +58,17 @@ pub enum Method {
     Admm,
     /// §6 preconditioned HBM (whitened system, APC's rate).
     Phbm,
+    /// Masterless gossip APC ([`crate::gossip::GossipApc`]): neighbor
+    /// averaging over a doubly-stochastic mixing matrix instead of a
+    /// master fold. Built here on the complete graph (where it matches
+    /// APC); degraded topologies and link faults go through
+    /// [`crate::gossip::GossipApc::with_topology`] directly.
+    Gossip,
 }
 
 impl Method {
     /// Every method, in [`super::suite::ALL`] order.
-    pub const ALL: [Method; 8] = [
+    pub const ALL: [Method; 9] = [
         Method::Dgd,
         Method::Nag,
         Method::Hbm,
@@ -71,6 +77,7 @@ impl Method {
         Method::Apc,
         Method::Consensus,
         Method::Phbm,
+        Method::Gossip,
     ];
 
     /// The lowercase string key used by the CLI, benches, and the old
@@ -85,6 +92,7 @@ impl Method {
             Method::Cimmino => "cimmino",
             Method::Admm => "admm",
             Method::Phbm => "phbm",
+            Method::Gossip => "gossip",
         }
     }
 
@@ -99,6 +107,7 @@ impl Method {
             "cimmino" => Method::Cimmino,
             "admm" => Method::Admm,
             "phbm" => Method::Phbm,
+            "gossip" => Method::Gossip,
             other => bail!(
                 "unknown solver {:?} (expected one of {:?})",
                 other,
@@ -162,6 +171,11 @@ pub(crate) fn empty_engine<'a>(
             "phbm streams through Phbm::streaming_engine (the whitened \
              engine needs the solver's cached preconditioner factor)"
         ),
+        Method::Gossip => bail!(
+            "gossip has no streaming engine: the masterless fold keeps \
+             per-node consensus estimates, not a shared batch state — \
+             stream Method::Apc, or drive crate::gossip::GossipApc directly"
+        ),
     })
 }
 
@@ -185,6 +199,7 @@ pub(crate) fn tuned_boxed(
             Method::Cimmino => Box::new(Cimmino::auto_with_spectral(sys, s)),
             Method::Admm => Box::new(Admm::auto_with_spectral(sys, s)?),
             Method::Phbm => Box::new(Phbm::auto_with_spectral(sys, s)?),
+            Method::Gossip => Box::new(crate::gossip::GossipApc::auto_with_spectral(sys, s)?),
         }),
         Precision::MixedRefined { refresh_every } => {
             if method == Method::Phbm {
@@ -192,6 +207,13 @@ pub(crate) fn tuned_boxed(
                     "phbm has no mixed-precision wrapper: build \
                      Method::Hbm with Precision::MixedRefined on \
                      sys.preconditioned() instead"
+                );
+            }
+            if method == Method::Gossip {
+                bail!(
+                    "gossip has no mixed-precision wrapper yet: its fold \
+                     renormalizes per-node weights, which the +IR engine's \
+                     shared f32 machine phase does not model"
                 );
             }
             Ok(Box::new(Refined::tuned(method.key(), sys, s, refresh_every)?))

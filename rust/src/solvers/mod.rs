@@ -11,6 +11,7 @@
 //! | [`hbm`] | distributed heavy-ball | 2pn | 2pnk, one GEMM pass | `≈ 1 − 2/√κ(AᵀA)` |
 //! | [`admm`] | modified consensus-ADMM (y≡0, §4.4) | 2pn (inversion lemma) | 2pnk, one shifted factor | monotone in ξ, see `rates` |
 //! | [`phbm`] | §6 preconditioned heavy-ball | 2pn | 2pnk over the whitened blocks | same as APC |
+//! | [`crate::gossip`] | masterless gossip APC (neighbor averaging over doubly-stochastic `W`) | 2pn + deg_i·n fold/node | — (single-RHS; no master to batch at) | same as APC at spectral gap 1 (complete graph); degrades with the gap |
 //! | [`stream`] | streaming batch refill (any engine above) | 2pn·k_active | holds k at `max_width` under load | inherits the engine's ρ per lane |
 //! | [`refine`] | mixed-precision iterative refinement (f32 machine phase for any method above except P-HBM) | pn flops *in f32* — half the bytes, double the SIMD lanes | — | inner rounds inherit the engine's ρ; outer restarts pin f64 accuracy |
 //! | [`builder`] | [`builder::SolveBuilder`] → [`builder::Session`]: the one construction entry point (method × precision × batch × streaming) | — | — | — |

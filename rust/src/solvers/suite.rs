@@ -13,8 +13,9 @@ use anyhow::{bail, Result};
 pub const TABLE2_ORDER: [&str; 6] = ["dgd", "nag", "hbm", "admm", "cimmino", "apc"];
 
 /// All methods, including the ones outside Table 2 (consensus baseline,
-/// §6 preconditioned HBM).
-pub const ALL: [&str; 8] = ["dgd", "nag", "hbm", "admm", "cimmino", "apc", "consensus", "phbm"];
+/// §6 preconditioned HBM, masterless gossip APC).
+pub const ALL: [&str; 9] =
+    ["dgd", "nag", "hbm", "admm", "cimmino", "apc", "consensus", "phbm", "gossip"];
 
 /// Construct the optimally tuned single-process solver `name`.
 #[deprecated(note = "use apc::prelude::SolveBuilder (\
@@ -81,7 +82,8 @@ pub fn tuned_method(name: &str, sys: &PartitionedSystem, s: &SpectralInfo) -> Re
             Method::Admm { xi }
         }
         other => bail!(
-            "unknown coordinator method {:?} (phbm runs as hbm on sys.preconditioned())",
+            "unknown coordinator method {:?} (phbm runs as hbm on sys.preconditioned(); \
+             gossip is masterless — drive crate::gossip::GossipApc directly)",
             other
         ),
     })
@@ -101,6 +103,12 @@ pub fn analytic_rho(name: &str, sys: &PartitionedSystem, s: &SpectralInfo) -> Re
         "admm" => rates::admm_optimal(sys, s)?.1,
         "phbm" => {
             // §6: same rate as APC by construction
+            rates::apc_optimal(s.mu_min, s.mu_max)?.rho
+        }
+        "gossip" => {
+            // complete-graph default: the fold is the exact average, so
+            // the Theorem-1 rate applies unchanged (gap 1 in
+            // crate::gossip::gossip_params); sparser graphs degrade it
             rates::apc_optimal(s.mu_min, s.mu_max)?.rho
         }
         other => bail!("unknown method {:?}", other),

@@ -14,7 +14,7 @@ use apc::coordinator::{
 use apc::gen::problems::Problem;
 use apc::partition::PartitionedSystem;
 use apc::rates::SpectralInfo;
-use apc::sim::{CrashSpec, FaultPlan, LinkModel, SimConfig, SimTransport};
+use apc::sim::{ComputeModel, CrashSpec, FaultPlan, LinkModel, SimConfig, SimTransport};
 use apc::prelude::SolveBuilder;
 use apc::solvers::{suite, Metric, RunConfig, SolverOptions};
 use anyhow::Result;
@@ -125,6 +125,73 @@ fn quorum_beats_barrier_under_stragglers() {
     );
 }
 
+/// Adaptive quorum sizing: no hand-picked `q` — the master tracks each
+/// worker's EWMA response latency and waits only for the observed-fastest
+/// 75% quantile. On a cluster with one persistently slow machine
+/// (heterogeneity draw, not random stragglers) the adaptive run must cut
+/// the tail out of the round target, still converge (the slow worker's
+/// answers keep folding one round stale), and beat the full barrier on
+/// simulated wall-clock — deterministically for a fixed seed.
+#[test]
+fn adaptive_quorum_sizes_rounds_from_observed_latency() {
+    let (sys, xstar) = build(24, 4, 85);
+    let s = SpectralInfo::compute(&sys).unwrap();
+    let method = suite::tuned_method("apc", &sys, &s).unwrap();
+    let opts = SolverOptions { run: RunConfig::new(1e-8, 50_000), metric: Metric::ErrorVsTruth(xstar) };
+    // persistent heterogeneity: each worker draws a fixed slowdown in
+    // [1, 11) at boot — the slow machine is slow *every* round, which is
+    // exactly the distribution an EWMA can learn
+    let cfg = || SimConfig {
+        compute: ComputeModel { base_round_us: 100.0, het_spread: 10.0, jitter: 0.0 },
+        seed: sim_seed(),
+        ..Default::default()
+    };
+
+    let barrier = Coordinator::with_transport(
+        &sys,
+        method,
+        Box::new(SimTransport::new(&sys, method, cfg()).unwrap()),
+        QuorumConfig::barrier(),
+    )
+    .unwrap()
+    .run(&sys, &opts)
+    .unwrap();
+    assert!(barrier.report.converged, "barrier err {:.2e}", barrier.report.final_error);
+
+    let adaptive = || {
+        Coordinator::with_transport(
+            &sys,
+            method,
+            Box::new(SimTransport::new(&sys, method, cfg()).unwrap()),
+            QuorumConfig::adaptive(0.75, 100_000),
+        )
+        .unwrap()
+        .run(&sys, &opts)
+        .unwrap()
+    };
+    let dist = adaptive();
+    assert!(dist.report.converged, "adaptive err {:.2e}", dist.report.final_error);
+    assert!(
+        dist.metrics.adaptive_quorum_rounds > 0,
+        "the latency distribution never shrank the round target"
+    );
+    assert!(
+        dist.metrics.stale_folded > 0,
+        "the excluded slow worker's answers should fold one round stale"
+    );
+    assert!(
+        dist.metrics.clock_us < barrier.metrics.clock_us,
+        "adaptive rounds must beat the barrier on simulated wall-clock: {} µs vs {} µs",
+        dist.metrics.clock_us,
+        barrier.metrics.clock_us
+    );
+
+    // same (config, seed) → same EWMAs, same targets, same clock
+    let replay = adaptive();
+    assert_eq!(dist.metrics.clock_us, replay.metrics.clock_us, "adaptive run not reproducible");
+    assert_eq!(dist.report.solution, replay.report.solution);
+}
+
 /// Crash at round 5, recover at round 12: the master detects the crash
 /// by missed rounds, re-weights the block out of the average, re-admits
 /// the worker with a checkpoint `Restart` (warm-start min-norm feasible
@@ -143,7 +210,7 @@ fn crash_and_recovery_completes_the_solve() {
         seed: sim_seed(),
         ..Default::default()
     };
-    let quorum = QuorumConfig { quorum: 3, deadline_us: None, crash_after_missed: 3 };
+    let quorum = QuorumConfig { quorum: 3, deadline_us: None, ..QuorumConfig::default() };
     let dist = Coordinator::with_transport(
         &sys,
         method,
@@ -173,7 +240,8 @@ fn lossy_network_with_deadline_still_converges() {
         seed: sim_seed(),
         ..Default::default()
     };
-    let quorum = QuorumConfig { quorum: 0, deadline_us: Some(2_000), crash_after_missed: 5 };
+    let quorum =
+        QuorumConfig { deadline_us: Some(2_000), crash_after_missed: 5, ..QuorumConfig::default() };
     let dist = Coordinator::with_transport(
         &sys,
         method,

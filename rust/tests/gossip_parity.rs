@@ -1,0 +1,150 @@
+//! Gossip integration suite: the masterless consensus phase against the
+//! centralized taskmaster it replaces.
+//!
+//! Three pins: (1) on a clean complete graph the decentralized
+//! trajectory reproduces the centralized APC master to ≤ 1e-12 —
+//! masterlessness costs nothing when the fold is exact; (2) on sparse
+//! topologies (ring / torus / Erdős–Rényi) the solve survives 10–20%
+//! per-round i.i.d. link failure across a seed matrix; (3) a scripted
+//! network partition heals and the solve still reaches 1e-6.
+
+use apc::gen::problems::Problem;
+use apc::gossip::{GossipApc, GossipNetConfig, LinkFaultPlan, PartitionSpec, Topology};
+use apc::linalg::relative_error;
+use apc::partition::PartitionedSystem;
+use apc::rates::SpectralInfo;
+use apc::solvers::apc::Apc;
+use apc::solvers::{Metric, RunConfig, Solver, SolverOptions};
+
+fn bed(n: usize, m: usize, seed: u64) -> (PartitionedSystem, Vec<f64>, SpectralInfo) {
+    let p = Problem::standard_gaussian(n, n, m).build(seed);
+    let sys = PartitionedSystem::split_even(&p.a, &p.b, m).unwrap();
+    let s = SpectralInfo::compute(&sys).unwrap();
+    (sys, p.x_star, s)
+}
+
+/// Complete graph, zero faults: every node's fold *is* the centralized
+/// master update, the tuning is bit-identical to Theorem 1's, and the
+/// reported estimate tracks the centralized solver within floating-point
+/// noise for the whole trajectory. This is the acceptance headline: the
+/// master is a deployment choice, not a numerical one.
+#[test]
+fn complete_graph_reproduces_the_centralized_master() {
+    let (sys, xstar, s) = bed(20, 5, 41);
+    let mut central = Apc::auto_with_spectral(&sys, &s).unwrap();
+    let mut gossip = GossipApc::auto_with_spectral(&sys, &s).unwrap();
+    assert_eq!(gossip.nominal_gap(), 1.0, "K_m must report spectral gap exactly 1");
+    assert_eq!(gossip.gamma, central.gamma, "gap-1 tuning must be Theorem 1 verbatim");
+    assert_eq!(gossip.eta, central.eta);
+    for round in 0..=80 {
+        let drift = relative_error(gossip.xbar(), central.xbar());
+        assert!(drift <= 1e-12, "round {round}: drift {drift:.3e} exceeds 1e-12");
+        central.iterate(&sys);
+        gossip.iterate(&sys);
+    }
+    // and both trajectories actually went somewhere good
+    let err = relative_error(gossip.xbar(), &xstar);
+    assert!(err < 1e-8, "80 rounds should be deep into convergence, got {err:.3e}");
+}
+
+/// Sparse topologies under i.i.d. link failure, swept over a seed
+/// matrix: ring, 2×4 torus, and a connected Erdős–Rényi draw must all
+/// reach 1e-6 at 10% and 20% per-round edge loss. Each case must also
+/// actually drop links (a vacuous fault plan would pass trivially).
+#[test]
+fn degraded_topologies_survive_link_failures() {
+    let (sys, xstar, s) = bed(24, 8, 43);
+    let topologies = [
+        Topology::Ring,
+        Topology::Torus { rows: 2, cols: 4 },
+        Topology::ErdosRenyi { edge_prob: 0.5, seed: 11 },
+    ];
+    for topology in topologies {
+        for drop_prob in [0.1, 0.2] {
+            for fault_seed in [1u64, 7, 23] {
+                let mut solver = GossipApc::with_topology(
+                    &sys,
+                    &s,
+                    topology.clone(),
+                    LinkFaultPlan::iid(drop_prob, fault_seed),
+                )
+                .unwrap();
+                let opts = SolverOptions {
+                    run: RunConfig::new(1e-6, 50_000),
+                    metric: Metric::ErrorVsTruth(xstar.clone()),
+                };
+                let report = solver.solve(&sys, &opts).unwrap();
+                assert!(
+                    report.converged,
+                    "{}/drop {drop_prob}/seed {fault_seed}: stalled at {:.3e} after {}",
+                    topology.name(),
+                    report.final_error,
+                    report.iterations
+                );
+                assert!(
+                    solver.metrics.links_dropped > 0,
+                    "{}/drop {drop_prob}/seed {fault_seed}: plan never dropped a link",
+                    topology.name()
+                );
+            }
+        }
+    }
+}
+
+/// A scripted partition (the torus cut in half for 50 rounds) splits the
+/// cluster into two components that drift toward their own consensus;
+/// when the partition heals, the halves re-merge and the solve reaches
+/// 1e-6. Masterless means *no* node was load-bearing across the cut.
+#[test]
+fn partition_heals_and_the_solve_completes() {
+    let (sys, xstar, s) = bed(24, 8, 47);
+    let faults = LinkFaultPlan {
+        partitions: vec![PartitionSpec { cut: 4, from_round: 10, until_round: 60 }],
+        ..LinkFaultPlan::none()
+    };
+    let mut solver =
+        GossipApc::with_topology(&sys, &s, Topology::Torus { rows: 2, cols: 4 }, faults).unwrap();
+    let opts = SolverOptions {
+        run: RunConfig::new(1e-6, 50_000),
+        metric: Metric::ErrorVsTruth(xstar),
+    };
+    let report = solver.solve(&sys, &opts).unwrap();
+    assert!(
+        report.converged,
+        "partition-then-heal stalled at {:.3e} after {}",
+        report.final_error,
+        report.iterations
+    );
+    assert!(solver.metrics.links_dropped > 0, "the partition never cut an edge");
+    assert!(report.iterations as u64 > 60, "must have outlived the partition window");
+}
+
+/// The gossip net model advances a deterministic virtual clock on the
+/// same µs scale as the star simulator: with default link (50 µs) and
+/// compute (100 µs) models a round costs exactly 150 µs — one worker
+/// hop + one neighbor exchange, vs the star's 200 µs two-hop round.
+#[test]
+fn net_model_clock_is_deterministic() {
+    let (sys, xstar, s) = bed(16, 4, 53);
+    let run = || {
+        let mut solver = GossipApc::auto_with_spectral(&sys, &s)
+            .unwrap()
+            .with_net(GossipNetConfig::default());
+        let opts = SolverOptions {
+            run: RunConfig::new(1e-8, 10_000),
+            metric: Metric::ErrorVsTruth(xstar.clone()),
+        };
+        let report = solver.solve(&sys, &opts).unwrap();
+        (report, solver.metrics.clone())
+    };
+    let (report, metrics) = run();
+    assert!(report.converged);
+    assert_eq!(
+        metrics.clock_us,
+        metrics.rounds * 150,
+        "default models must cost exactly 150 µs per round"
+    );
+    let (report2, metrics2) = run();
+    assert_eq!(metrics.clock_us, metrics2.clock_us, "virtual clock not reproducible");
+    assert_eq!(report.solution, report2.solution);
+}
