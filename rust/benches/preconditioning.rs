@@ -10,7 +10,11 @@
 //! `PartitionedSystem::preconditioned()` (whitened blocks, memory
 //! `O(nnz_i + p²)`) vs `preconditioned_dense()` (explicit `(A_iA_iᵀ)^{-1/2}A_i`
 //! products, memory `O(p·n)`), with stored floats and per-round P-HBM
-//! time side by side. Emits `BENCH_precond.json` at the repo root.
+//! time side by side. The whitening table then sweeps the rank-`r`
+//! Nyström sketch against the exact factor — build flops, resident
+//! floats, per-round time, rounds to tolerance — at `r ∈ {25, 50, 100}`
+//! (ranks ≥ the block height collapse to the exact factor and are
+//! skipped). Emits `BENCH_precond.json` at the repo root.
 //!
 //! ```bash
 //! cargo bench --bench preconditioning
@@ -26,6 +30,7 @@ use apc::gen::problems::{Problem, SparseProblem};
 use apc::linalg::sym_eigen;
 use apc::parallel;
 use apc::partition::PartitionedSystem;
+use apc::precond::Whitener;
 use apc::rates::{convergence_time, hbm_optimal, SpectralInfo};
 use apc::solvers::hbm::Hbm;
 use apc::prelude::SolveBuilder;
@@ -203,6 +208,95 @@ fn main() -> anyhow::Result<()> {
          product — the §6 transform no longer erases the sparse backend's win.\n"
     );
 
+    // === exact vs rank-r Nyström whitening ==============================
+    //
+    // The ISSUE-10 table: the exact factor pays O(p³) build and O(p²)
+    // stored floats + apply per block; the randomized sketch pays
+    // O(p²·r) build and O(p·r) thereafter, trading a bounded amount of
+    // conditioning. Columns: build flops (summed whitener build_cost),
+    // resident floats (BlockOp::stored_floats, whitener included),
+    // measured per-round P-HBM time, and measured rounds to 1e-8 with
+    // each variant's own estimated-spectrum tuning.
+    println!("=== §6 whitening: exact factor vs rank-r Nyström sketch ===\n");
+    let mut table = Table::new(&[
+        "problem",
+        "whitener",
+        "build flops",
+        "stored floats",
+        "per round",
+        "rounds to 1e-8",
+    ]);
+    let ranks: Vec<usize> = vec![25, 50, 100];
+    let mut nystrom_json = Vec::new();
+    for (prob, seed) in &sparse_cases {
+        let built = prob.build(*seed);
+        let sys = PartitionedSystem::split_csr_nnz_balanced(&built.a, &built.b, prob.machines)?;
+        let m = sys.m() as f64;
+        let p_min = sys.blocks.iter().map(|b| b.p()).min().unwrap_or(0);
+        let solve_opts = SolverOptions {
+            run: RunConfig::new(1e-8, if smoke { 300_000 } else { 3_000_000 }),
+            metric: Metric::ErrorVsTruth(built.x_star.clone()),
+        };
+        let mut variants: Vec<(String, PartitionedSystem, f64)> = Vec::new();
+        let (pre_exact, w_exact) = sys.preconditioned_with_whiteners()?;
+        let exact_build: f64 = w_exact.iter().flatten().map(|w| w.build_cost() as f64).sum();
+        variants.push(("exact".into(), pre_exact, exact_build));
+        for &r in ranks.iter().filter(|&&r| r < p_min) {
+            let (pre_r, w_r) = sys.preconditioned_rank(r, *seed)?;
+            let build: f64 = w_r.iter().flatten().map(|w| w.build_cost() as f64).sum();
+            variants.push((format!("nystrom r={r}"), pre_r, build));
+        }
+        let mut rows = Vec::new();
+        let mut exact_floats = 0usize;
+        for (label, pre, build) in &variants {
+            let floats: usize = pre.blocks.iter().map(|b| b.a.stored_floats()).sum();
+            if label == "exact" {
+                exact_floats = floats;
+            } else {
+                assert!(
+                    floats < exact_floats,
+                    "{}: {label} stores {floats} floats, not below exact's {exact_floats}",
+                    prob.name
+                );
+            }
+            let sr = SpectralInfo::estimate(pre, 80, 0.9)?;
+            let (alpha, beta, _) = hbm_optimal(m * sr.mu_min, m * sr.mu_max);
+            let mut hbm = Hbm::with_params(pre, alpha, beta);
+            let stat = bench(&format!("{} {label}", prob.name), &bench_opts, || {
+                hbm.iterate(pre)
+            });
+            let mut solver = Hbm::with_params(pre, alpha, beta);
+            let rep = solver.solve(pre, &solve_opts)?;
+            let rounds = if rep.converged { rep.iterations } else { usize::MAX };
+            table.row(&[
+                prob.name.clone(),
+                label.clone(),
+                sci(*build),
+                floats.to_string(),
+                fmt_duration(stat.median),
+                rounds.to_string(),
+            ]);
+            rows.push((
+                label.replace(' ', "_").replace('=', ""),
+                jobj(vec![
+                    ("build_flops", Json::Num(*build)),
+                    ("stored_floats", Json::Num(floats as f64)),
+                    ("round_ns", Json::Num(stat.median.as_nanos() as f64)),
+                    ("rounds_to_tol", Json::Num(rounds as f64)),
+                ]),
+            ));
+        }
+        nystrom_json.push((
+            prob.name.clone(),
+            Json::Obj(rows.into_iter().collect::<BTreeMap<_, _>>()),
+        ));
+    }
+    println!("{}", table.render());
+    println!(
+        "rank-r whitening keeps O(nnz + p·r) resident and trades rounds for an\n\
+         O(p²·r) build — the exact O(p³) factor is the r = p endpoint.\n"
+    );
+
     let report = jobj(vec![
         ("bench", Json::Str("preconditioning/sparse".into())),
         (
@@ -220,6 +314,10 @@ fn main() -> anyhow::Result<()> {
         (
             "cases",
             Json::Obj(sparse_json.into_iter().collect::<BTreeMap<_, _>>()),
+        ),
+        (
+            "whitening",
+            Json::Obj(nystrom_json.into_iter().collect::<BTreeMap<_, _>>()),
         ),
     ]);
     let json_path = concat!(env!("CARGO_MANIFEST_DIR"), "/../BENCH_precond.json");

@@ -18,7 +18,7 @@
 //! | paper | here |
 //! |---|---|
 //! | random graph process `G(t)` | [`Topology::edges_at`]`(m, round)` minus [`LinkFaultPlan::dropped`] |
-//! | random mixing matrix `W(t)` (symmetric, doubly stochastic) | [`metropolis_weights`] on the round's graph, failures folded by [`drop_edges`] |
+//! | random mixing matrix `W(t)` (symmetric, doubly stochastic) | [`MixingRows::metropolis`] on the round's graph (sparse neighbor lists; [`metropolis_weights`] is the dense analysis twin), failures folded by [`MixingRows::drop_edges`] |
 //! | convergence rate via `λ₂(E[W])` | [`spectral_gap`] (exact, static graphs) / [`GossipApc::estimated_gap`] (online EWMA power estimate, time-varying) |
 //! | i.i.d. link availability | [`LinkFaultPlan::drop_prob`] |
 //!
@@ -57,4 +57,6 @@ pub use net::{GossipNet, GossipNetConfig};
 pub use solver::{
     fold_row, gossip_params, GossipApc, GossipMetrics, NeighborInbox, STALE_WEIGHT,
 };
-pub use topology::{drop_edges, is_connected, metropolis_weights, spectral_gap, Topology};
+pub use topology::{
+    drop_edges, is_connected, metropolis_weights, spectral_gap, MixingRows, Topology,
+};

@@ -20,8 +20,8 @@
 
 use super::faults::LinkFaultPlan;
 use super::net::{GossipNet, GossipNetConfig};
-use super::topology::{drop_edges, metropolis_weights, spectral_gap, Topology};
-use crate::linalg::{vector::nrm2, Mat};
+use super::topology::{spectral_gap, MixingRows, Topology};
+use crate::linalg::vector::nrm2;
 use crate::parallel::{self, SliceCells};
 use crate::partition::PartitionedSystem;
 use crate::rates::{apc_optimal, ApcParams, SpectralInfo};
@@ -216,7 +216,9 @@ pub struct GossipApc {
     mean: Vec<f64>,
     /// Nominal (round-1) edge set, cached for static topologies.
     edges: Vec<(usize, usize)>,
-    nominal_w: Mat,
+    /// Nominal mixing matrix in sparse row form — the fault-free static
+    /// path iterates against this directly, no per-round clone.
+    nominal_rows: MixingRows,
     nominal_gap: f64,
     mu: (f64, f64),
     adaptive: bool,
@@ -246,8 +248,8 @@ impl GossipApc {
         let m = sys.m();
         topology.validate(m)?;
         let edges = topology.edges_at(m, 1);
-        let nominal_w = metropolis_weights(m, &edges);
-        let nominal_gap = spectral_gap(&nominal_w)?;
+        let nominal_rows = MixingRows::metropolis(m, &edges);
+        let nominal_gap = spectral_gap(&nominal_rows.to_dense())?;
         let adaptive = topology.is_time_varying() || !faults.is_clean();
         let p = gossip_params(s.mu_min, s.mu_max, nominal_gap)?;
         let locals = sys
@@ -264,7 +266,7 @@ impl GossipApc {
             xbars: Vec::new(),
             mean: vec![0.0; sys.n],
             edges,
-            nominal_w,
+            nominal_rows,
             nominal_gap,
             mu: (s.mu_min, s.mu_max),
             adaptive,
@@ -294,7 +296,7 @@ impl GossipApc {
     /// Attach a virtual-clock network model; message loss it draws is
     /// symmetrized into per-round link failure.
     pub fn with_net(mut self, cfg: GossipNetConfig) -> Self {
-        self.net = Some(GossipNet::new(self.nominal_w.rows(), self.mean.len(), cfg));
+        self.net = Some(GossipNet::new(self.nominal_rows.m(), self.mean.len(), cfg));
         self
     }
 
@@ -331,29 +333,16 @@ impl GossipApc {
         self.mean = init;
     }
 
-    /// One power-iteration step of the disagreement operator of this
-    /// round's realized `W`, folded into the EWMA gap estimate; retunes
-    /// `(γ, η)` when the estimate has moved them materially.
-    fn update_gap_and_retune(&mut self, w: &Mat) {
-        let m = w.rows();
+    /// Fold one power-iteration sample of the disagreement operator —
+    /// `(next, σ)` from [`power_step`] on this round's realized rows —
+    /// into the EWMA gap estimate; retunes `(γ, η)` when the estimate
+    /// has moved them materially.
+    fn update_gap_and_retune(&mut self, step: (Vec<f64>, f64)) {
+        let (mut next, sigma) = step;
+        let m = next.len();
         if m <= 1 {
             return;
         }
-        let mut next = vec![0.0; m];
-        for (i, slot) in next.iter_mut().enumerate() {
-            let mut s = 0.0;
-            for (j, vj) in self.power_vec.iter().enumerate() {
-                s += w[(i, j)] * vj;
-            }
-            *slot = s;
-        }
-        let mean = next.iter().sum::<f64>() / m as f64;
-        for v in next.iter_mut() {
-            *v -= mean;
-        }
-        // power_vec is unit-norm and mean-free, so the step's growth is
-        // a (downward-biased) sample of σ₂(W)
-        let sigma = nrm2(&next).min(1.0);
         if sigma > 1e-14 {
             let inv = 1.0 / nrm2(&next);
             for v in next.iter_mut() {
@@ -380,6 +369,22 @@ impl GossipApc {
             }
         }
     }
+}
+
+/// One power-iteration step of the disagreement operator of the
+/// realized mixing rows: `next = W v` with the mean removed. `v` is
+/// unit-norm and mean-free, so the step's growth `‖next‖` is a
+/// (downward-biased) sample of `σ₂(W)`, returned capped at 1.
+fn power_step(w: &MixingRows, v: &[f64]) -> (Vec<f64>, f64) {
+    let m = w.m();
+    let mut next = vec![0.0; m];
+    w.matvec_into(v, &mut next);
+    let mean = next.iter().sum::<f64>() / m.max(1) as f64;
+    for x in next.iter_mut() {
+        *x -= mean;
+    }
+    let sigma = nrm2(&next).min(1.0);
+    (next, sigma)
 }
 
 fn seed_disagreement(m: usize) -> Vec<f64> {
@@ -411,17 +416,26 @@ impl Solver for GossipApc {
         self.round += 1;
         self.metrics.rounds += 1;
 
-        // 1. this round's graph and nominal mixing matrix
-        let (base_w, edges) = if self.topology.is_time_varying() {
-            let e = self.topology.edges_at(m, self.round);
-            (metropolis_weights(m, &e), e)
+        // 1. this round's graph and nominal mixing rows. The fault-free
+        //    static path borrows the cached sparse rows directly — no
+        //    per-round m×m clone; only a time-varying redraw or an
+        //    actual fault this round materializes scratch rows.
+        let tv_edges;
+        let edges: &[(usize, usize)] = if self.topology.is_time_varying() {
+            tv_edges = self.topology.edges_at(m, self.round);
+            &tv_edges
         } else {
-            (self.nominal_w.clone(), self.edges.clone())
+            &self.edges
+        };
+        let mut scratch: Option<MixingRows> = if self.topology.is_time_varying() {
+            Some(MixingRows::metropolis(m, edges))
+        } else {
+            None
         };
 
         // 2. symmetric link failures: fault plan first, then message
         //    loss from the net model on whatever survived
-        let mut dropped = self.faults.dropped(self.round, &edges);
+        let mut dropped = self.faults.dropped(self.round, edges);
         if let Some(net) = &mut self.net {
             let down: HashSet<(usize, usize)> = dropped.iter().copied().collect();
             let alive: Vec<(usize, usize)> =
@@ -432,12 +446,16 @@ impl Solver for GossipApc {
             self.metrics.clock_us = net.clock_us();
         }
         self.metrics.links_dropped += dropped.len() as u64;
-        let w = if dropped.is_empty() { base_w } else { drop_edges(&base_w, &dropped) };
+        if !dropped.is_empty() {
+            scratch.get_or_insert_with(|| self.nominal_rows.clone()).drop_edges(&dropped);
+        }
 
         // 3. online gap estimate + retune (time-varying or faulty only —
         //    static clean graphs keep their exact one-shot tuning)
         if self.adaptive {
-            self.update_gap_and_retune(&w);
+            let w = scratch.as_ref().unwrap_or(&self.nominal_rows);
+            let step = power_step(w, &self.power_vec);
+            self.update_gap_and_retune(step);
         }
 
         // 4. machine phase: the paper's projection step, unchanged,
@@ -452,17 +470,17 @@ impl Solver for GossipApc {
         });
 
         // 5. masterless fold: each node mixes its neighborhood through
-        //    the realized doubly-stochastic row, with momentum. Entries
-        //    stay in node-index order so the complete-graph fold is the
-        //    centralized sum in the centralized order.
+        //    the realized doubly-stochastic row, with momentum. Sparse
+        //    row entries come out in ascending node-index order — the
+        //    dense scan's order — so the complete-graph fold is still
+        //    the centralized sum in the centralized order.
+        let w = scratch.as_ref().unwrap_or(&self.nominal_rows);
         let eta = self.eta;
+        let locals = &self.locals;
         for i in 0..m {
             let mut entries: Vec<(f64, &[f64])> = Vec::with_capacity(m);
-            for (j, local) in self.locals.iter().enumerate() {
-                let wij = w[(i, j)];
-                if wij != 0.0 {
-                    entries.push((wij, local.x.as_slice()));
-                }
+            for (j, wij) in w.row_entries(i) {
+                entries.push((wij, locals[j].x.as_slice()));
             }
             fold_row(&mut self.xbars[i], &entries, eta);
         }
@@ -558,6 +576,28 @@ mod tests {
         let report = solver.solve(&sys, &opts).unwrap();
         assert!(report.converged, "ring/15% failures stalled at {}", report.final_error);
         assert!(solver.metrics.links_dropped > 0, "the plan must actually drop links");
+    }
+
+    #[test]
+    fn time_varying_rounds_rebuild_sparse_rows_and_converge() {
+        // exercises the scratch-rows branch: every round redraws the
+        // graph, builds MixingRows directly (never a dense matrix), and
+        // feeds the online gap estimator through the sparse matvec
+        let (sys, xstar, s) = bed(16, 4, 7);
+        let mut solver = GossipApc::with_topology(
+            &sys,
+            &s,
+            Topology::TimeVarying { degree: 2, seed: 13 },
+            LinkFaultPlan::none(),
+        )
+        .unwrap();
+        let opts = SolverOptions {
+            run: RunConfig::new(1e-6, 20_000),
+            metric: Metric::ErrorVsTruth(xstar),
+        };
+        let report = solver.solve(&sys, &opts).unwrap();
+        assert!(report.converged, "time-varying run stalled at {}", report.final_error);
+        assert!(solver.estimated_gap() < 1.0, "sparse rounds must register a degraded gap");
     }
 
     #[test]

@@ -5,7 +5,11 @@
 //! [`metropolis_weights`] turns an edge set into a symmetric,
 //! doubly-stochastic mixing matrix `W` via Metropolis–Hastings weights
 //! `w_ij = 1/(1 + max(deg_i, deg_j))` with the residual mass on the
-//! diagonal. Convergence of gossip averaging is governed by the spectral
+//! diagonal; [`MixingRows`] is the same matrix in per-node neighbor-list
+//! form (`O(|E|)` storage and per-round work, bit-compatible folds) —
+//! what the solver actually iterates with, the dense form remaining the
+//! spectral-analysis and parity-test representation.
+//! Convergence of gossip averaging is governed by the spectral
 //! gap `1 − σ₂(W)` where `σ₂` is the second-largest eigenvalue modulus
 //! ([`spectral_gap`]); the complete graph attains gap 1 (its Metropolis
 //! matrix is exactly `(1/m)·11ᵀ`, the centralized average).
@@ -256,6 +260,135 @@ pub fn drop_edges(w: &Mat, dropped: &[(usize, usize)]) -> Mat {
     out
 }
 
+/// The Metropolis mixing matrix in per-node neighbor-list form: row `i`
+/// is `deg_i` weighted neighbors plus a diagonal — `O(|E|)` storage and
+/// `O(|E|)` per application instead of the dense `m × m` clone-and-scan
+/// the fold otherwise pays every round. Built by the same weight rule as
+/// [`metropolis_weights`], and **bit-compatible** with it: weights are
+/// identical `1/(1 + max(deg_i, deg_j))` values, each diagonal is
+/// accumulated over neighbors in the same ascending-`j` order the dense
+/// row sum visits (adding the dense scan's zero terms is exact, so
+/// skipping them changes nothing), and [`MixingRows::row_entries`]
+/// yields exactly the `(j, w_ij ≠ 0)` sequence of the dense
+/// `for j in 0..m` scan — so a fold driven by either representation
+/// produces the same floating-point trajectory.
+#[derive(Clone, Debug, PartialEq)]
+pub struct MixingRows {
+    m: usize,
+    /// Off-diagonal neighbors of each node, `(j, w_ij)` ascending in
+    /// `j`. Dropped links are kept in place with weight `0.0` (and
+    /// skipped on iteration) so a clone-per-fault-round never
+    /// reallocates the lists.
+    neighbors: Vec<Vec<(usize, f64)>>,
+    diag: Vec<f64>,
+}
+
+impl MixingRows {
+    /// Metropolis–Hastings weights for an undirected edge list, in
+    /// sparse row form. Same rule as [`metropolis_weights`].
+    pub fn metropolis(m: usize, edges: &[(usize, usize)]) -> Self {
+        let mut deg = vec![0usize; m];
+        for &(i, j) in edges {
+            deg[i] += 1;
+            deg[j] += 1;
+        }
+        let mut neighbors: Vec<Vec<(usize, f64)>> =
+            deg.iter().map(|&d| Vec::with_capacity(d)).collect();
+        for &(i, j) in edges {
+            let wij = 1.0 / (1.0 + deg[i].max(deg[j]) as f64);
+            neighbors[i].push((j, wij));
+            neighbors[j].push((i, wij));
+        }
+        for row in neighbors.iter_mut() {
+            row.sort_unstable_by_key(|&(j, _)| j);
+        }
+        // residual mass on the diagonal, accumulated in ascending-j
+        // order — the dense row sum's order, for bit-identical values
+        let diag = neighbors
+            .iter()
+            .map(|row| 1.0 - row.iter().map(|&(_, w)| w).sum::<f64>())
+            .collect();
+        MixingRows { m, neighbors, diag }
+    }
+
+    /// Node count.
+    pub fn m(&self) -> usize {
+        self.m
+    }
+
+    /// Stored off-diagonal entries (2·|E| for an undirected graph).
+    pub fn nnz(&self) -> usize {
+        self.neighbors.iter().map(Vec::len).sum()
+    }
+
+    /// Symmetric link failure, in place: each dropped edge's weight is
+    /// zeroed and moved onto **both** endpoints' diagonals — the sparse
+    /// twin of [`drop_edges`], same order of operations, so the realized
+    /// rows match the dense path bit-for-bit. Edges absent from the
+    /// graph (or already dropped) are no-ops, mirroring the dense
+    /// `+= 0.0`.
+    pub fn drop_edges(&mut self, dropped: &[(usize, usize)]) {
+        for &(i, j) in dropped {
+            if i == j || i >= self.m || j >= self.m {
+                continue;
+            }
+            let Ok(pi) = self.neighbors[i].binary_search_by_key(&j, |&(k, _)| k) else {
+                continue;
+            };
+            let wij = self.neighbors[i][pi].1;
+            self.neighbors[i][pi].1 = 0.0;
+            if let Ok(pj) = self.neighbors[j].binary_search_by_key(&i, |&(k, _)| k) {
+                self.neighbors[j][pj].1 = 0.0;
+            }
+            self.diag[i] += wij;
+            self.diag[j] += wij;
+        }
+    }
+
+    /// Row `i`'s nonzero entries `(j, w_ij)` in ascending `j`, diagonal
+    /// included at its natural position — exactly the sequence the dense
+    /// `for j in 0..m { if w[(i, j)] != 0.0 }` scan produces, which is
+    /// what keeps a sparse-driven fold on the centralized trajectory.
+    /// (A live Metropolis diagonal is always positive — each row keeps
+    /// `1/(1 + deg_i)` of its own mass — and dropping links only grows
+    /// it, so the diagonal is never filtered out.)
+    pub fn row_entries(&self, i: usize) -> impl Iterator<Item = (usize, f64)> + '_ {
+        let row = &self.neighbors[i];
+        let split = row.partition_point(|&(j, _)| j < i);
+        row[..split]
+            .iter()
+            .copied()
+            .chain(std::iter::once((i, self.diag[i])))
+            .chain(row[split..].iter().copied())
+            .filter(|&(_, w)| w != 0.0)
+    }
+
+    /// `out = W v` in `O(|E|)`, each row folded in ascending-`j` order
+    /// (bit-identical to the dense row scan over finite `v`).
+    pub fn matvec_into(&self, v: &[f64], out: &mut [f64]) {
+        assert_eq!(v.len(), self.m);
+        assert_eq!(out.len(), self.m);
+        for (i, slot) in out.iter_mut().enumerate() {
+            let mut s = 0.0;
+            for (j, wij) in self.row_entries(i) {
+                s += wij * v[j];
+            }
+            *slot = s;
+        }
+    }
+
+    /// Materialize the dense matrix (spectral analysis, parity tests).
+    pub fn to_dense(&self) -> Mat {
+        let mut w = Mat::zeros(self.m, self.m);
+        for i in 0..self.m {
+            for (j, wij) in self.row_entries(i) {
+                w[(i, j)] = wij;
+            }
+        }
+        w
+    }
+}
+
 /// Spectral gap `1 − σ₂(W)` of a symmetric doubly-stochastic mixing
 /// matrix, where `σ₂ = max(|λ₂|, |λ_min|)` is the second-largest
 /// eigenvalue modulus. Eigenvalue noise below `1e-12` is snapped to
@@ -352,6 +485,74 @@ mod tests {
         assert_eq!(a, t.edges_at(m, 1), "same round must replay");
         assert_ne!(a, b, "different rounds should differ");
         assert!(t.is_time_varying());
+    }
+
+    #[test]
+    fn sparse_rows_reproduce_the_dense_matrix_bitwise() {
+        let m = 12;
+        for topo in [
+            Topology::Complete,
+            Topology::Ring,
+            Topology::Torus { rows: 3, cols: 4 },
+            Topology::ErdosRenyi { edge_prob: 0.4, seed: 7 },
+            Topology::TimeVarying { degree: 3, seed: 11 },
+        ] {
+            let edges = topo.edges_at(m, 2);
+            let dense = metropolis_weights(m, &edges);
+            let rows = MixingRows::metropolis(m, &edges);
+            assert_eq!(rows.m(), m);
+            assert_eq!(rows.nnz(), 2 * edges.len());
+            let mat = rows.to_dense();
+            for i in 0..m {
+                for j in 0..m {
+                    assert!(
+                        mat[(i, j)] == dense[(i, j)],
+                        "{}: entry ({i},{j}) {} vs dense {}",
+                        topo.name(),
+                        mat[(i, j)],
+                        dense[(i, j)]
+                    );
+                }
+                // row_entries is exactly the dense nonzero scan, in order
+                let scan: Vec<(usize, f64)> =
+                    (0..m).filter(|&j| dense[(i, j)] != 0.0).map(|j| (j, dense[(i, j)])).collect();
+                let sparse: Vec<(usize, f64)> = rows.row_entries(i).collect();
+                assert_eq!(sparse, scan, "{}: row {i}", topo.name());
+            }
+            assert_doubly_stochastic(&mat);
+        }
+    }
+
+    #[test]
+    fn sparse_drop_edges_matches_the_dense_path_bitwise() {
+        let m = 8;
+        let edges = Topology::Ring.edges_at(m, 1);
+        let dense = drop_edges(&metropolis_weights(m, &edges), &[(0, 1), (3, 4), (2, 5)]);
+        let mut rows = MixingRows::metropolis(m, &edges);
+        // (2,5) is not a ring edge: must be a no-op, like the dense += 0
+        rows.drop_edges(&[(0, 1), (3, 4), (2, 5)]);
+        let mat = rows.to_dense();
+        for i in 0..m {
+            for j in 0..m {
+                assert!(mat[(i, j)] == dense[(i, j)], "entry ({i},{j})");
+            }
+            // the zeroed link is skipped on iteration, not re-listed
+            assert!(rows.row_entries(i).all(|(_, w)| w != 0.0));
+        }
+        assert_doubly_stochastic(&mat);
+        // matvec agrees with the dense row scan bit-for-bit
+        let v: Vec<f64> = (0..m).map(|k| ((k as f64) + 0.5).sin()).collect();
+        let mut out = vec![0.0; m];
+        rows.matvec_into(&v, &mut out);
+        for i in 0..m {
+            let mut s = 0.0;
+            for j in 0..m {
+                if dense[(i, j)] != 0.0 {
+                    s += dense[(i, j)] * v[j];
+                }
+            }
+            assert!(out[i] == s, "row {i}: {} vs {}", out[i], s);
+        }
     }
 
     #[test]

@@ -27,7 +27,10 @@
 //! * [`lanczos`] — matrix-free Lanczos edge estimation (reorthogonalized
 //!   3-term recurrence + values-only QL on the tridiagonal) resolving
 //!   both spectral edges in tens of matvecs, clusters included — the
-//!   engine behind sparse-scale auto-tuning.
+//!   engine behind sparse-scale auto-tuning,
+//! * [`sketch`] — seeded Gaussian sketching + rank-r randomized Nyström
+//!   eigendecomposition, the `O(nnz·r + p·r²)` build behind the low-rank
+//!   whitener in [`crate::precond`].
 //!
 //! Numerical conventions: all algorithms are deterministic, tolerance
 //! constants live next to their use sites, and failures (non-SPD input,
@@ -44,6 +47,7 @@ pub mod lu;
 pub mod multivec;
 pub mod qr;
 pub mod simd;
+pub mod sketch;
 pub mod vector;
 
 pub use cholesky::Cholesky;

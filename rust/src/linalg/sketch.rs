@@ -1,0 +1,255 @@
+//! Randomized range sketching — the rank-r Nyström eigendecomposition
+//! behind [`crate::precond::NystromWhitener`].
+//!
+//! The §6 preconditioner needs `(A_iA_iᵀ)^{-1/2}`; the exact path pays an
+//! `O(p³)` dense eigensolve and stores `p²` floats. When the row Gram's
+//! spectrum decays (the regime where whitening matters most), a rank-r
+//! randomized Nyström approximation captures the dominant eigenpairs
+//! from `r` operator applies:
+//!
+//! 1. draw a seeded Gaussian test matrix `Ω ∈ ℝ^{p×r}` ([`gaussian_test_matrix`]);
+//! 2. sketch `Y = G Ω` — the *caller* computes this, so a CSR block pays
+//!    `O(nnz_i·r)` as `A(AᵀΩ)` and never forms `G`;
+//! 3. shift-stabilize: `ν = ε‖Y‖_F`, `Y_ν = Y + νΩ` (the standard fix for
+//!    the sketch's loss of positive definiteness in floating point);
+//! 4. factor the small core `M = Ωᵀ Y_ν = L Lᵀ` (retrying with `ν × 10` if
+//!    roundoff still breaks positivity), solve `B Lᵀ = Y_ν` by forward
+//!    substitution, and eigendecompose the `r×r` Gram `BᵀB = V S Vᵀ` —
+//!    `O(p·r²)` total;
+//! 5. return `U = B V S^{-1/2}` and `λ̂ = S − ν`: the Nyström
+//!    approximation `G ≈ U diag(λ̂) Uᵀ` (exact at `r = p`).
+//!
+//! Everything is deterministic in `(p, r, seed)`: the Gaussian draws come
+//! from [`crate::gen::rng::Pcg64`] in a fixed order, so the same seed
+//! reproduces the sketch bit-for-bit (pinned by `tests/precond_parity.rs`).
+
+use super::{sym_eigen, Cholesky, Mat};
+use crate::gen::rng::Pcg64;
+use anyhow::{bail, Context, Result};
+
+/// Seeded `p×r` Gaussian test matrix, filled row-major in draw order —
+/// the deterministic sketch input (same `(p, r, seed)` → bit-equal `Ω`).
+pub fn gaussian_test_matrix(p: usize, r: usize, seed: u64) -> Mat {
+    let mut rng = Pcg64::new(seed);
+    let mut omega = Mat::zeros(p, r);
+    for v in omega.as_mut_slice().iter_mut() {
+        *v = rng.gaussian();
+    }
+    omega
+}
+
+/// Rank-r Nyström eigendecomposition `G ≈ U diag(λ) Uᵀ` of an SPD
+/// operator, from its sketch pair `(Ω, Y = GΩ)`.
+#[derive(Clone, Debug)]
+pub struct NystromEig {
+    /// `p × r'` orthonormal approximate eigenvectors (`r' ≤ r`: numerically
+    /// null sketch directions are truncated).
+    pub u: Mat,
+    /// Approximate eigenvalues, ascending, shift-corrected and floored at
+    /// the final stabilization shift (so downstream inverse square roots
+    /// never divide by a roundoff-scale value).
+    pub lambda: Vec<f64>,
+    /// The stabilization shift `ν` the factorization succeeded at.
+    pub shift: f64,
+}
+
+/// Solve `B Lᵀ = Y` for `B` (row `i` of `B` solves `L z = row i of Y` by
+/// forward substitution) — the `O(p·r²)` triangular stage of the Nyström
+/// core factorization.
+fn forward_solve_rows(l: &Mat, y: &Mat) -> Mat {
+    let r = l.rows();
+    let mut b = y.clone();
+    for i in 0..b.rows() {
+        let row = b.row_mut(i);
+        for j in 0..r {
+            let mut s = row[j];
+            for (k, lr) in l.row(j)[..j].iter().enumerate() {
+                s -= lr * row[k];
+            }
+            row[j] = s / l.row(j)[j];
+        }
+    }
+    b
+}
+
+/// Build the Nyström eigendecomposition from a sketch pair. `omega` must
+/// be the test matrix the caller sketched with (`y = G·omega`); both are
+/// `p×r`. Fails only if the core stays indefinite after the shift
+/// escalation — i.e. the sketch carries no usable signal at all.
+pub fn nystrom_eig(omega: &Mat, y: &Mat) -> Result<NystromEig> {
+    let (p, r) = (omega.rows(), omega.cols());
+    assert_eq!(y.rows(), p, "nystrom: sketch row mismatch");
+    assert_eq!(y.cols(), r, "nystrom: sketch width mismatch");
+    if r == 0 || p == 0 {
+        bail!("nystrom: empty sketch ({}×{})", p, r);
+    }
+    // ν = ε‖Y‖_F — the standard shift scale; escalate ×10 while the
+    // shifted core still fails to factor (roundoff-indefinite sketch).
+    let base_shift = f64::EPSILON * y.fro_norm().max(f64::MIN_POSITIVE);
+    let mut shift = base_shift;
+    let mut factored = None;
+    for _ in 0..8 {
+        let mut y_nu = y.clone();
+        y_nu.axpy_mat(shift, omega);
+        // M = Ωᵀ Y_ν, symmetrized (it is GΩ-symmetric up to roundoff)
+        let m_raw = omega.transpose().matmul(&y_nu);
+        let mt = m_raw.transpose();
+        let mut core = m_raw;
+        core.axpy_mat(1.0, &mt);
+        let core = core.scaled(0.5);
+        match Cholesky::new(&core) {
+            Ok(chol) => {
+                factored = Some((y_nu, chol));
+                break;
+            }
+            Err(_) => shift *= 10.0,
+        }
+    }
+    let (y_nu, chol) =
+        factored.context("nystrom: core stayed indefinite through shift escalation")?;
+    // B = Y_ν L⁻ᵀ, then BᵀB = V S Vᵀ gives the approximate spectrum.
+    let b = forward_solve_rows(chol.l(), &y_nu);
+    let eig = sym_eigen(&b.gram_cols()).context("nystrom: core eigensolve")?;
+    // Truncate numerically null directions (S below roundoff of the top
+    // singular value) and form U = B V S^{-1/2}.
+    let s_max = eig.values.last().copied().unwrap_or(0.0).max(f64::MIN_POSITIVE);
+    let keep: Vec<usize> =
+        (0..r).filter(|&j| eig.values[j] > s_max * (r as f64) * f64::EPSILON).collect();
+    if keep.is_empty() {
+        bail!("nystrom: sketch numerically rank-zero");
+    }
+    let rk = keep.len();
+    let mut u = Mat::zeros(p, rk);
+    // scaled eigenvector block V S^{-1/2}, applied column-by-column
+    for (jj, &j) in keep.iter().enumerate() {
+        let inv_sqrt_s = 1.0 / eig.values[j].sqrt();
+        for i in 0..p {
+            let mut acc = 0.0;
+            for k in 0..r {
+                acc += b.row(i)[k] * eig.vectors[(k, j)];
+            }
+            u[(i, jj)] = acc * inv_sqrt_s;
+        }
+    }
+    // shift-corrected eigenvalues, floored at ν so inverse square roots
+    // stay finite on directions the sketch barely resolved
+    let lambda: Vec<f64> = keep.iter().map(|&j| (eig.values[j] - shift).max(shift)).collect();
+    Ok(NystromEig { u, lambda, shift })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// SPD test matrix with a planted geometric spectrum, built from a
+    /// seeded random orthogonal-ish basis (symmetrized Gram keeps it SPD).
+    fn decaying_spd(p: usize, ratio: f64, seed: u64) -> Mat {
+        let mut rng = Pcg64::new(seed);
+        let mut basis = Mat::zeros(p, p);
+        for v in basis.as_mut_slice().iter_mut() {
+            *v = rng.gaussian();
+        }
+        // Gram-Schmidt for an exactly orthogonal basis
+        for j in 0..p {
+            for k in 0..j {
+                let mut dot = 0.0;
+                for i in 0..p {
+                    dot += basis[(i, j)] * basis[(i, k)];
+                }
+                for i in 0..p {
+                    basis[(i, j)] -= dot * basis[(i, k)];
+                }
+            }
+            let norm = (0..p).map(|i| basis[(i, j)] * basis[(i, j)]).sum::<f64>().sqrt();
+            for i in 0..p {
+                basis[(i, j)] /= norm;
+            }
+        }
+        let lambdas: Vec<f64> = (0..p).map(|j| ratio.powi(j as i32)).collect();
+        let mut scaled = basis.clone();
+        for i in 0..p {
+            for j in 0..p {
+                scaled[(i, j)] *= lambdas[j];
+            }
+        }
+        scaled.matmul(&basis.transpose())
+    }
+
+    #[test]
+    fn test_matrix_is_seed_deterministic() {
+        let a = gaussian_test_matrix(12, 5, 42);
+        let b = gaussian_test_matrix(12, 5, 42);
+        assert_eq!(a.as_slice(), b.as_slice(), "same seed must be bit-equal");
+        let c = gaussian_test_matrix(12, 5, 43);
+        assert_ne!(a.as_slice(), c.as_slice(), "different seeds must differ");
+    }
+
+    #[test]
+    fn full_rank_sketch_recovers_the_spectrum() {
+        let p = 10;
+        let g = decaying_spd(p, 0.5, 7);
+        let omega = gaussian_test_matrix(p, p, 11);
+        let y = g.matmul(&omega);
+        let nys = nystrom_eig(&omega, &y).unwrap();
+        // U diag(λ) Uᵀ reconstructs G at full rank
+        let mut scaled = nys.u.clone();
+        for i in 0..p {
+            for (j, &l) in nys.lambda.iter().enumerate() {
+                scaled[(i, j)] *= l;
+            }
+        }
+        let recon = scaled.matmul(&nys.u.transpose());
+        assert!(
+            recon.sub(&g).max_abs() < 1e-8,
+            "full-rank Nyström drifted: {:.2e}",
+            recon.sub(&g).max_abs()
+        );
+        // eigenvalues ascend and match the planted geometric spectrum
+        for w in nys.lambda.windows(2) {
+            assert!(w[0] <= w[1], "eigenvalues must ascend");
+        }
+        let top = nys.lambda.last().unwrap();
+        assert!((top - 1.0).abs() < 1e-8, "top eigenvalue {top}");
+    }
+
+    #[test]
+    fn low_rank_sketch_captures_the_head() {
+        let p = 16;
+        let g = decaying_spd(p, 0.4, 13);
+        let r = 6;
+        let omega = gaussian_test_matrix(p, r, 17);
+        let y = g.matmul(&omega);
+        let nys = nystrom_eig(&omega, &y).unwrap();
+        assert!(nys.u.cols() <= r);
+        // the top approximate eigenvalue sits near the true top (0.4-decay
+        // leaves the head well separated; Nyström is exact on the range of
+        // the sketch, which contains the dominant directions w.h.p.)
+        let top = nys.lambda.last().unwrap();
+        assert!((top - 1.0).abs() < 1e-3, "top eigenvalue {top}");
+        // U has orthonormal columns
+        let utu = nys.u.transpose().matmul(&nys.u);
+        assert!(utu.sub(&Mat::eye(nys.u.cols())).max_abs() < 1e-8, "UᵀU ≠ I");
+    }
+
+    #[test]
+    fn sketch_is_deterministic_end_to_end() {
+        let p = 12;
+        let g = decaying_spd(p, 0.6, 19);
+        let omega = gaussian_test_matrix(p, 5, 23);
+        let y = g.matmul(&omega);
+        let a = nystrom_eig(&omega, &y).unwrap();
+        let b = nystrom_eig(&omega, &y).unwrap();
+        assert_eq!(a.u.as_slice(), b.u.as_slice());
+        assert_eq!(a.lambda, b.lambda);
+        assert_eq!(a.shift, b.shift);
+    }
+
+    #[test]
+    fn degenerate_sketches_fail_cleanly() {
+        let omega = gaussian_test_matrix(6, 3, 29);
+        let y = Mat::zeros(6, 3); // zero operator: no signal
+        assert!(nystrom_eig(&omega, &y).is_err());
+        let empty = Mat::zeros(0, 0);
+        assert!(nystrom_eig(&empty, &empty).is_err());
+    }
+}

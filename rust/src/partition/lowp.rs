@@ -26,6 +26,7 @@
 use crate::linalg::elem::cast_from_f64;
 use crate::linalg::{kernels, Cholesky};
 use crate::partition::{BlockOp, MachineBlock};
+use crate::precond::WhitenerF32;
 use anyhow::{Context, Result};
 
 /// f32 copy of a cached Cholesky factor, solving by the same two
@@ -99,8 +100,9 @@ pub enum OpF32 {
         row_ptr: Vec<usize>,
         col_idx: Vec<usize>,
         values: Vec<f32>,
-        /// `W = (A_iA_iᵀ)^{-1/2}`, dense `p×p` row-major, cast down.
-        w: Vec<f32>,
+        /// `W ≈ (A_iA_iᵀ)^{-1/2}` cast down — dense `p×p` for the exact
+        /// whitener, `τI + U diag(c) Uᵀ` for the rank-r Nyström one.
+        w: WhitenerF32,
     },
 }
 
@@ -187,7 +189,7 @@ impl OpF32 {
                     row_ptr: a.row_ptr.clone(),
                     col_idx: a.col_idx.clone(),
                     values: cast_vec(&a.values),
-                    w: cast_vec(wc.preconditioner().matrix().as_slice()),
+                    w: wc.whitener().to_f32(),
                 }
             }
         }
@@ -221,7 +223,7 @@ impl OpF32 {
             }
             OpF32::Whitened { rows, row_ptr, col_idx, values, w, .. } => {
                 csr_matvec_f32(row_ptr, col_idx, values, *rows, x, stage);
-                kernels::matvec_f32(w, *rows, *rows, stage, y);
+                w.apply_into(stage, y);
             }
         }
     }
@@ -243,7 +245,7 @@ impl OpF32 {
             }
             OpF32::Whitened { rows, row_ptr, col_idx, values, w, .. } => {
                 // Cᵀ x = Aᵀ (W x), W symmetric
-                kernels::matvec_f32(w, *rows, *rows, x, stage);
+                w.apply_into(x, stage);
                 csr_tr_axpy_f32(row_ptr, col_idx, values, *rows, stage, alpha, y);
             }
         }
@@ -427,6 +429,12 @@ mod tests {
             PartitionedSystem::split_even(&dense, &built.b, 4).unwrap(),
             PartitionedSystem::split_csr(&built.a, &built.b, 4).unwrap(),
             PartitionedSystem::split_csr(&built.a, &built.b, 4).unwrap().preconditioned().unwrap(),
+            // rank-r Nyström whitening: the f32 twin is the low-rank form
+            PartitionedSystem::split_csr(&built.a, &built.b, 4)
+                .unwrap()
+                .preconditioned_rank(4, 5)
+                .unwrap()
+                .0,
         ];
         let x64: Vec<f64> = (0..16).map(|i| (i as f64 * 0.37).sin()).collect();
         let x32: Vec<f32> = x64.iter().map(|&v| v as f32).collect();

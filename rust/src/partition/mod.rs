@@ -20,9 +20,12 @@
 //! balance) is what balances wall-clock.
 
 use crate::linalg::{sym_eigen, Cholesky, Mat, MultiVec};
-use crate::precond::{Preconditioner, WhitenedCsr};
+use crate::precond::{
+    NystromWhitener, Preconditioner, SharedWhitener, WhitenPolicy, WhitenedCsr, Whitener,
+};
 use crate::sparse::{Csr, CsrBlock};
 use anyhow::{bail, Context, Result};
+use std::sync::Arc;
 
 pub mod lowp;
 
@@ -64,8 +67,22 @@ impl BlockOp {
     }
 
     /// Stored entries (dense blocks store everything; whitened blocks
-    /// store their CSR values plus the `p×p` cached preconditioner).
+    /// store their CSR values plus the cached whitener representation).
     pub fn nnz(&self) -> usize {
+        match self {
+            BlockOp::Dense(a) => a.rows() * a.cols(),
+            BlockOp::Sparse(a) => a.nnz(),
+            BlockOp::Whitened(a) => a.stored_floats(),
+        }
+    }
+
+    /// Floats this operator actually keeps resident — what a
+    /// prepared-system cache should budget. Identical to [`nnz`](BlockOp::nnz)
+    /// today, but named for intent: whitened blocks report their CSR
+    /// payload plus the whitener's own `stored_floats` (`p²` exact,
+    /// `p·r′ + r′` Nyström), so a rank-r system budgets `O(p·r)`, not
+    /// `O(p²)`.
+    pub fn stored_floats(&self) -> usize {
         match self {
             BlockOp::Dense(a) => a.rows() * a.cols(),
             BlockOp::Sparse(a) => a.nnz(),
@@ -404,18 +421,17 @@ impl MachineBlock {
     }
 
     /// [`preconditioned_factored`](MachineBlock::preconditioned_factored)
-    /// that also hands back the rhs whitener `W_i = (A_iA_iᵀ)^{-1/2}`
-    /// the transform computed — **one** eigensolve per block serves both
-    /// the operator transform and every later rhs whitening (P-HBM's
-    /// rebind, batched `solve_batch`, and streaming admission all go
-    /// through this cached factor; re-deriving it per query would repeat
-    /// the `O(p³)` eigensolve). `None` marks a block whose §6 transform
-    /// is the identity (the input was already whitened).
-    pub fn preconditioned_with_whitener(
+    /// under an explicit [`WhitenPolicy`] — `Exact` reproduces the
+    /// default path bit-for-bit; `Nystrom { rank, seed }` builds the
+    /// rank-r transform instead (`O(nnz_i·r + p·r²)` build, `O(p·r)`
+    /// stored).
+    pub fn preconditioned_factored_with(
         &self,
-    ) -> Result<(BlockOp, Vec<f64>, Option<Preconditioner>)> {
-        match &self.a {
-            BlockOp::Dense(a) => {
+        policy: WhitenPolicy,
+    ) -> Result<(BlockOp, Vec<f64>, Option<SharedWhitener>)> {
+        match (&self.a, policy) {
+            // exact dense: the pre-trait code path, unchanged operations
+            (BlockOp::Dense(a), WhitenPolicy::Exact) => {
                 let gram = self.a.gram_rows();
                 let eig = sym_eigen(&gram)
                     .with_context(|| format!("machine {}: §6 gram eigensolve", self.index))?;
@@ -424,16 +440,45 @@ impl MachineBlock {
                     .with_context(|| format!("machine {}: §6 gram not SPD", self.index))?;
                 let c = inv_sqrt.matmul(a);
                 let d = inv_sqrt.matvec(&self.b);
-                Ok((BlockOp::Dense(c), d, Some(Preconditioner::from_inv_sqrt(inv_sqrt))))
+                let w: SharedWhitener = Arc::new(Preconditioner::from_inv_sqrt(inv_sqrt));
+                Ok((BlockOp::Dense(c), d, Some(w)))
             }
-            BlockOp::Sparse(a) => {
-                let pre = Preconditioner::from_gram(&a.gram_rows())
+            // rank-r dense: the block stays a materialized dense product
+            // (it costs what the block already costs) but the *cached*
+            // whitener — what rebind / batched / streaming admission and
+            // the serve cache hold on to — is the O(p·r) form
+            (BlockOp::Dense(a), WhitenPolicy::Nystrom { rank, seed }) => {
+                let gram = self.a.gram_rows();
+                let w = NystromWhitener::from_gram(&gram, rank, seed)
+                    .with_context(|| format!("machine {}: §6 nystrom sketch", self.index))?;
+                let mut c = Mat::zeros(a.rows(), a.cols());
+                w.apply_multi_into(a.as_slice(), a.cols(), c.as_mut_slice());
+                let d = w.apply(&self.b);
+                Ok((BlockOp::Dense(c), d, Some(Arc::new(w) as SharedWhitener)))
+            }
+            (BlockOp::Sparse(a), policy) => {
+                let pre = policy
+                    .build_for_csr(a)
                     .with_context(|| format!("machine {}: §6 whitening", self.index))?;
                 let d = pre.apply(&self.b);
                 Ok((BlockOp::Whitened(WhitenedCsr::new(a.clone(), pre.clone())), d, Some(pre)))
             }
-            BlockOp::Whitened(w) => Ok((BlockOp::Whitened(w.clone()), self.b.clone(), None)),
+            (BlockOp::Whitened(w), _) => Ok((BlockOp::Whitened(w.clone()), self.b.clone(), None)),
         }
+    }
+
+    /// [`preconditioned_factored`](MachineBlock::preconditioned_factored)
+    /// that also hands back the rhs whitener `W_i = (A_iA_iᵀ)^{-1/2}`
+    /// the transform computed — **one** build per block serves both
+    /// the operator transform and every later rhs whitening (P-HBM's
+    /// rebind, batched `solve_batch`, and streaming admission all go
+    /// through this cached handle; re-deriving it per query would repeat
+    /// the `O(p³)` eigensolve). `None` marks a block whose §6 transform
+    /// is the identity (the input was already whitened).
+    pub fn preconditioned_with_whitener(
+        &self,
+    ) -> Result<(BlockOp, Vec<f64>, Option<SharedWhitener>)> {
+        self.preconditioned_factored_with(WhitenPolicy::Exact)
     }
 }
 
@@ -695,19 +740,39 @@ impl PartitionedSystem {
     /// returns the per-machine rhs whiteners the transform computed
     /// (`None` = identity, the block was already whitened) — the cached
     /// `W_i` consumers (P-HBM rebind / batched rhs transform / streaming
-    /// admission) take them from here so no second per-block eigensolve
+    /// admission) take them from here so no second per-block build
     /// ever runs.
     pub fn preconditioned_with_whiteners(
         &self,
-    ) -> Result<(PartitionedSystem, Vec<Option<Preconditioner>>)> {
+    ) -> Result<(PartitionedSystem, Vec<Option<SharedWhitener>>)> {
+        self.preconditioned_with(WhitenPolicy::Exact)
+    }
+
+    /// The §6 transform under an explicit [`WhitenPolicy`]. Nyström
+    /// seeds are perturbed per block index, so machines draw independent
+    /// sketches from one user-facing seed.
+    pub fn preconditioned_with(
+        &self,
+        policy: WhitenPolicy,
+    ) -> Result<(PartitionedSystem, Vec<Option<SharedWhitener>>)> {
         let mut blocks = Vec::with_capacity(self.m());
         let mut whiteners = Vec::with_capacity(self.m());
         for blk in &self.blocks {
-            let (c, d, w) = blk.preconditioned_with_whitener()?;
+            let (c, d, w) = blk.preconditioned_factored_with(policy.for_block(blk.index))?;
             blocks.push(MachineBlock::from_op(blk.index, blk.row0, c, d)?);
             whiteners.push(w);
         }
         Ok((PartitionedSystem { blocks, n: self.n, n_rows: self.n_rows }, whiteners))
+    }
+
+    /// Convenience: rank-r Nyström preconditioning
+    /// (`preconditioned_with(WhitenPolicy::Nystrom { rank, seed })`).
+    pub fn preconditioned_rank(
+        &self,
+        rank: usize,
+        seed: u64,
+    ) -> Result<(PartitionedSystem, Vec<Option<SharedWhitener>>)> {
+        self.preconditioned_with(WhitenPolicy::Nystrom { rank, seed })
     }
 
     /// The §6-preconditioned system with every block forced to the
@@ -1098,8 +1163,9 @@ mod tests {
             assert_eq!(whiteners.len(), sys.m());
             for (blk, w) in sys.blocks.iter().zip(&whiteners) {
                 let w = w.as_ref().expect("unwhitened block must yield its W_i");
+                let wm = w.dense_matrix().expect("exact policy caches the dense W");
                 let gram = blk.a.gram_rows();
-                let wgw = w.matrix().matmul(&gram).matmul(w.matrix());
+                let wgw = wm.matmul(&gram).matmul(wm);
                 assert!(wgw.sub(&Mat::eye(blk.p())).max_abs() < 1e-9, "W G W ≠ I");
                 // the cached factor whitens the rhs exactly as the
                 // transform did
@@ -1109,6 +1175,52 @@ mod tests {
             }
             let (_, again) = pre.preconditioned_with_whiteners().unwrap();
             assert!(again.iter().all(|w| w.is_none()), "idempotent pass must yield identity");
+        }
+    }
+
+    #[test]
+    fn rank_policy_preconditioning_preserves_the_solution() {
+        // a truncated Nyström whitener changes the rate, never the
+        // answer: W is SPD, so W A x = W b iff A x = b
+        let built = SparseProblem::random_sparse(32, 24, 0.2, 4).build(41);
+        let sys = PartitionedSystem::split_csr_nnz_balanced(&built.a, &built.b, 4).unwrap();
+        let (pre, whiteners) = sys.preconditioned_rank(3, 2024).unwrap();
+        assert!(pre.relative_residual(&built.x_star) < 1e-9);
+        for (blk, w) in pre.blocks.iter().zip(&whiteners) {
+            let w = w.as_ref().expect("rank policy must cache a whitener");
+            assert!(w.dense_matrix().is_none(), "nystrom whitener is not dense");
+            assert!(
+                w.stored_floats() < blk.p() * blk.p(),
+                "rank-3 whitener must store below p²"
+            );
+            // still CSR-backed, payload untouched
+            assert!(blk.a.is_sparse());
+        }
+        // dense blocks under the rank policy: block stays dense, cached
+        // whitener is low-rank
+        let dense = built.a.to_dense();
+        let dsys = PartitionedSystem::split_even(&dense, &built.b, 4).unwrap();
+        let (dpre, dws) = dsys.preconditioned_rank(3, 2024).unwrap();
+        assert!(dpre.relative_residual(&built.x_star) < 1e-9);
+        for (blk, w) in dpre.blocks.iter().zip(&dws) {
+            assert!(!blk.a.is_sparse());
+            assert!(w.as_ref().unwrap().stored_floats() < blk.p() * blk.p());
+        }
+    }
+
+    #[test]
+    fn full_rank_nystrom_policy_matches_exact_transform() {
+        let built = SparseProblem::random_sparse(24, 16, 0.3, 4).build(43);
+        let sys = PartitionedSystem::split_csr(&built.a, &built.b, 4).unwrap();
+        let exact = sys.preconditioned().unwrap();
+        let max_p = sys.max_p();
+        let (nys, _) = sys.preconditioned_rank(max_p, 7).unwrap();
+        for (e, n) in exact.blocks.iter().zip(&nys.blocks) {
+            assert!(
+                e.a.to_dense().sub(&n.a.to_dense()).max_abs() < 1e-8,
+                "full-rank Nyström block diverges from exact"
+            );
+            assert!(max_abs_diff(&e.b, &n.b) < 1e-8);
         }
     }
 

@@ -1,4 +1,5 @@
-//! §6 preconditioning in factored form — sparse blocks stay sparse.
+//! §6 preconditioning in factored form — sparse blocks stay sparse, and
+//! the whitening transform itself is now an abstraction.
 //!
 //! The paper's distributed preconditioner has each machine left-multiply
 //! its block by `W_i = (A_i A_iᵀ)^{-1/2}`, turning `Ax = b` into `Cx = d`
@@ -9,19 +10,36 @@
 //! shapes (ORSIRR 1, ASH608; a few nonzeros per row) that is a ~100×
 //! memory and flop regression, erasing the sparse backend's entire win.
 //!
-//! This module keeps the preconditioner **factored** instead:
+//! This module keeps the preconditioner **factored**, behind a trait:
 //!
-//! * [`Preconditioner`] caches `W_i` itself — a dense symmetric `p×p`
-//!   matrix built once from the eigendecomposition of the row Gram
-//!   `G_i = A_i A_iᵀ` (which the sparse backend already assembles by
-//!   sorted row-merge dot products, [`crate::sparse::Csr::gram_rows`]).
-//!   `O(p³)` one-time, `O(p²)` stored — the same order as the Gram
-//!   Cholesky every block caches anyway.
+//! * [`Whitener`] is the abstraction every layer programs against:
+//!   `apply`/`apply_multi` (f64), an f32 cast for the mixed-precision
+//!   machine phase, plus `stored_floats`/`build_cost` so caches and
+//!   benches can account for it honestly.
+//! * [`ExactWhitener`] (the old concrete `Preconditioner` — the alias
+//!   still exists) caches `W_i` itself: a dense symmetric `p×p` matrix
+//!   built once from the eigendecomposition of the row Gram
+//!   `G_i = A_i A_iᵀ`. `O(p³)` one-time, `O(p²)` stored and per apply.
+//! * [`NystromWhitener`] is the scale path: a rank-r randomized Nyström
+//!   approximation `G ≈ U Λ̂ Uᵀ` ([`crate::linalg::sketch`]) turned into
+//!   `W ≈ τ·I + U diag(Λ̂^{-1/2} − τ) Uᵀ` with `τ = λ̂_min^{-1/2}` — the
+//!   inverse square root on the captured subspace, with the orthogonal
+//!   complement scaled as if its spectrum sat at the smallest captured
+//!   eigenvalue. `O(nnz_i·r + p·r²)` to build, `O(p·r)` stored and per
+//!   apply — whitening stays viable when `p` is thousands. Exact at
+//!   `r = p` (then `UUᵀ = I` and `W = U Λ̂^{-1/2} Uᵀ = G^{-1/2}`).
 //! * [`WhitenedCsr`] is the operator `C_i = W_i A_i` *as a composition*:
-//!   `C_i x` is a CSR matvec followed by the `p×p` whitening apply, and
+//!   `C_i x` is a CSR matvec followed by the whitening apply, and
 //!   `C_iᵀ y = A_iᵀ (W_i y)` is the whitening apply followed by a CSR
-//!   transpose-matvec. Per-round cost `O(nnz_i + p²)` and memory
-//!   `O(nnz_i + p²)` — no `p×n` dense block ever exists.
+//!   transpose-matvec. Per-round cost `O(nnz_i + p²)` exact or
+//!   `O(nnz_i + p·r)` Nyström — no `p×n` dense block ever exists.
+//! * [`WhitenPolicy`] is what callers pick: `Exact`, or
+//!   `Nystrom { rank, seed }` (deterministic in the seed).
+//!
+//! Any SPD `W` preserves the solution of `W A x = W b`, so a truncated
+//! Nyström whitener changes the *rate* (κ of the whitened system decays
+//! toward 1 as r grows — pinned monotone in `tests/precond_parity.rs`),
+//! never the answer.
 //!
 //! [`crate::partition::BlockOp::Whitened`] carries this operator through
 //! the same solver locals as the plain dense/CSR backends, so P-HBM on a
@@ -29,19 +47,30 @@
 //! (`tests/precond_parity.rs` pins it against the explicit dense
 //! `(A_iA_iᵀ)^{-1/2} A_i` reference to ≤ 1e-10).
 
+use crate::linalg::sketch::{gaussian_test_matrix, nystrom_eig};
 use crate::linalg::{kernels, sym_eigen, Mat};
 use crate::sparse::CsrBlock;
 use anyhow::{Context, Result};
 use std::cell::RefCell;
+use std::fmt::Debug;
+use std::sync::Arc;
 
 thread_local! {
     /// Per-thread staging buffer between a whitened block's CSR kernel
-    /// and its `p×p` whitening apply. Sized once per thread (machine-
-    /// phase workers each own one), so the whitened kernels are
-    /// allocation-free on the iteration hot path — the same contract the
-    /// dense and CSR backends keep. The kernels never nest, so the
-    /// `RefCell` borrow is always uncontended.
+    /// and its whitening apply. Sized once per thread (machine-phase
+    /// workers each own one), so the whitened kernels are allocation-free
+    /// on the iteration hot path — the same contract the dense and CSR
+    /// backends keep. The kernels never nest, so the `RefCell` borrow is
+    /// always uncontended.
     static STAGE: RefCell<Vec<f64>> = RefCell::new(Vec::new());
+    /// Separate r-sized scratch for the low-rank whitener's `Uᵀx`
+    /// coefficients. Distinct from `STAGE` because the whitener apply
+    /// runs *inside* a `with_stage` closure (the CSR kernels stage the
+    /// intermediate there) — sharing one cell would be a re-entrant
+    /// `RefCell` borrow.
+    static STAGE_R: RefCell<Vec<f64>> = RefCell::new(Vec::new());
+    /// f32 twin of `STAGE_R` for the mixed-precision machine phase.
+    static STAGE_F32: RefCell<Vec<f32>> = RefCell::new(Vec::new());
 }
 
 /// Run `f` with a `len`-sized slice of this thread's staging buffer
@@ -56,7 +85,123 @@ fn with_stage<R>(len: usize, f: impl FnOnce(&mut [f64]) -> R) -> R {
     })
 }
 
-/// The cached per-machine preconditioner `W = (A_i A_iᵀ)^{-1/2}`.
+/// Like `with_stage`, on the low-rank coefficient cell (`r` or `r·k`).
+fn with_stage_r<R>(len: usize, f: impl FnOnce(&mut [f64]) -> R) -> R {
+    STAGE_R.with(|s| {
+        let mut buf = s.borrow_mut();
+        if buf.len() < len {
+            buf.resize(len, 0.0);
+        }
+        f(&mut buf[..len])
+    })
+}
+
+fn with_stage_f32<R>(len: usize, f: impl FnOnce(&mut [f32]) -> R) -> R {
+    STAGE_F32.with(|s| {
+        let mut buf = s.borrow_mut();
+        if buf.len() < len {
+            buf.resize(len, 0.0);
+        }
+        f(&mut buf[..len])
+    })
+}
+
+/// The per-machine whitening transform `W ≈ (A_i A_iᵀ)^{-1/2}`, abstract
+/// over representation (explicit dense vs low-rank + scaled identity).
+///
+/// Everything downstream of block setup — the whitened CSR kernels, the
+/// batched rhs transform, streaming admission, mixed-precision casts,
+/// serve-cache byte budgets — programs against this trait, so swapping
+/// the `O(p²)` exact transform for the `O(p·r)` Nyström one is a
+/// per-block policy choice, not a code path.
+pub trait Whitener: Debug + Send + Sync {
+    /// Transform order `p` (the block's row count).
+    fn p(&self) -> usize;
+
+    /// `out = W v` — the whitening apply.
+    fn apply_into(&self, v: &[f64], out: &mut [f64]);
+
+    /// `OUT = W V` over a row-major `p × k` column block — the batched
+    /// whitening apply.
+    fn apply_multi_into(&self, v: &[f64], k: usize, out: &mut [f64]);
+
+    /// `W v` (allocating convenience; the rhs transform `d_i = W b_i`).
+    fn apply(&self, v: &[f64]) -> Vec<f64> {
+        let mut out = vec![0.0; self.p()];
+        self.apply_into(v, &mut out);
+        out
+    }
+
+    /// Floats this representation stores — what a prepared-system cache
+    /// should budget for. `p²` exact, `p·r′ + r′` Nyström.
+    fn stored_floats(&self) -> usize;
+
+    /// Approximate flop count of the one-time build (order-of-magnitude;
+    /// the preconditioning bench reports it next to measured build time).
+    fn build_cost(&self) -> usize;
+
+    /// The explicit dense `W`, if this representation holds one.
+    /// `Some` for [`ExactWhitener`] — the whitened-block gram/to_dense
+    /// fast paths use it to stay bit-identical to the pre-trait code —
+    /// `None` for the low-rank form.
+    fn dense_matrix(&self) -> Option<&Mat>;
+
+    /// Cast-once f32 twin for the mixed-precision machine phase.
+    fn to_f32(&self) -> WhitenerF32;
+}
+
+/// Shared handle the partition layer caches per block: one build ever,
+/// reused by the operator transform, rebind re-whitening, the batched
+/// rhs transform, and streaming admission.
+pub type SharedWhitener = Arc<dyn Whitener>;
+
+/// How a block's whitener gets built — the per-system policy knob.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum WhitenPolicy {
+    /// Dense eigensolve, exact `W = G^{-1/2}` (the pre-trait behavior).
+    Exact,
+    /// Rank-r randomized Nyström approximation, deterministic in `seed`
+    /// (each block perturbs the seed by its index so blocks draw
+    /// independent sketches).
+    Nystrom { rank: usize, seed: u64 },
+}
+
+impl WhitenPolicy {
+    /// Build a whitener from an assembled row Gram `G = A_i A_iᵀ`.
+    pub fn build_from_gram(&self, gram: &Mat) -> Result<SharedWhitener> {
+        match *self {
+            WhitenPolicy::Exact => Ok(Arc::new(ExactWhitener::from_gram(gram)?)),
+            WhitenPolicy::Nystrom { rank, seed } => {
+                Ok(Arc::new(NystromWhitener::from_gram(gram, rank, seed)?))
+            }
+        }
+    }
+
+    /// Build a whitener for a CSR block. The Nyström arm sketches
+    /// matrix-free (`Y = A(AᵀΩ)`, `O(nnz·r)`) and never assembles `G`.
+    pub fn build_for_csr(&self, a: &CsrBlock) -> Result<SharedWhitener> {
+        match *self {
+            WhitenPolicy::Exact => Ok(Arc::new(ExactWhitener::from_gram(&a.gram_rows())?)),
+            WhitenPolicy::Nystrom { rank, seed } => {
+                Ok(Arc::new(NystromWhitener::from_csr_block(a, rank, seed)?))
+            }
+        }
+    }
+
+    /// Derive the per-block policy: Nyström seeds are perturbed by the
+    /// block index so machines draw independent test matrices.
+    pub fn for_block(&self, block_index: usize) -> WhitenPolicy {
+        match *self {
+            WhitenPolicy::Exact => WhitenPolicy::Exact,
+            WhitenPolicy::Nystrom { rank, seed } => WhitenPolicy::Nystrom {
+                rank,
+                seed: seed ^ (0x9e37_79b9_7f4a_7c15_u64.wrapping_mul(block_index as u64 + 1)),
+            },
+        }
+    }
+}
+
+/// The exact cached preconditioner `W = (A_i A_iᵀ)^{-1/2}`.
 ///
 /// Built from the symmetric eigendecomposition `G = V Λ Vᵀ` as
 /// `W = V Λ^{-1/2} Vᵀ` — the *symmetric* inverse square root, matching
@@ -66,33 +211,35 @@ fn with_stage<R>(len: usize, f: impl FnOnce(&mut [f64]) -> R) -> R {
 /// into one explicit symmetric `p×p` matrix so an apply is a single dense
 /// matvec.
 #[derive(Clone, Debug)]
-pub struct Preconditioner {
+pub struct ExactWhitener {
     /// `W = G^{-1/2}`, dense symmetric `p×p`.
     w: Mat,
 }
 
-impl Preconditioner {
+/// The pre-trait name; every call site that builds the exact transform
+/// directly still compiles unchanged.
+pub type Preconditioner = ExactWhitener;
+
+impl ExactWhitener {
     /// Build from the row Gram `G = A_i A_iᵀ` (`O(p³)` eigensolve, done
     /// once per machine at setup — the same scale as the Gram Cholesky).
     /// Fails if `G` is not SPD (rank-deficient block).
     pub fn from_gram(gram: &Mat) -> Result<Self> {
         let eig = sym_eigen(gram).context("preconditioner: gram eigensolve")?;
         let w = eig.inv_sqrt().context("preconditioner: gram not SPD")?;
-        Ok(Preconditioner { w })
+        Ok(ExactWhitener { w })
     }
 
     /// Wrap an already-computed `W = G^{-1/2}` (square symmetric).
     /// Callers that materialize the §6 transform anyway (the dense
     /// block path of [`crate::partition::MachineBlock`]) cache their
-    /// eigensolve's output here instead of re-running it — one
-    /// eigensolve per block then serves the operator transform, rebind
-    /// re-whitening, the batched rhs transform, and streaming admission.
+    /// eigensolve's output here instead of re-running it.
     pub fn from_inv_sqrt(w: Mat) -> Self {
         assert_eq!(w.rows(), w.cols(), "preconditioner: W must be square");
-        Preconditioner { w }
+        ExactWhitener { w }
     }
 
-    /// Block row count `p`.
+    /// Block row count `p` (inherent mirror of the trait method).
     pub fn p(&self) -> usize {
         self.w.rows()
     }
@@ -121,30 +268,284 @@ impl Preconditioner {
     }
 }
 
+impl Whitener for ExactWhitener {
+    fn p(&self) -> usize {
+        ExactWhitener::p(self)
+    }
+
+    fn apply_into(&self, v: &[f64], out: &mut [f64]) {
+        ExactWhitener::apply_into(self, v, out)
+    }
+
+    fn apply_multi_into(&self, v: &[f64], k: usize, out: &mut [f64]) {
+        ExactWhitener::apply_multi_into(self, v, k, out)
+    }
+
+    fn stored_floats(&self) -> usize {
+        self.p() * self.p()
+    }
+
+    fn build_cost(&self) -> usize {
+        // tridiagonalization + implicit QL + V Λ^{-1/2} Vᵀ ≈ 10·p³
+        10 * self.p() * self.p() * self.p()
+    }
+
+    fn dense_matrix(&self) -> Option<&Mat> {
+        Some(&self.w)
+    }
+
+    fn to_f32(&self) -> WhitenerF32 {
+        WhitenerF32::Dense {
+            w: self.w.as_slice().iter().map(|&v| v as f32).collect(),
+            p: self.p(),
+        }
+    }
+}
+
+/// Rank-r randomized Nyström whitener `W ≈ G^{-1/2}`:
+/// `W = τ·I + U diag(c) Uᵀ` with `U ∈ ℝ^{p×r′}` orthonormal,
+/// `c_j = λ̂_j^{-1/2} − τ`, `τ = λ̂_min^{-1/2}`.
+///
+/// On the captured subspace this is the exact inverse square root of the
+/// Nyström approximation; the orthogonal complement is scaled by `τ`,
+/// i.e. treated as if its spectrum sat at the smallest captured
+/// eigenvalue — the conservative choice (it can only under-whiten the
+/// tail, never amplify it). `κ(W G W) ≈ λ_r / λ_min` decays toward 1 as
+/// r grows, reaching the exact transform at `r = p`.
+///
+/// Stored: `p·r′ + r′` floats. Apply: one `p×r′` GEMV pair + an axpy,
+/// `O(p·r′)`. Deterministic in `(p, rank, seed)`.
+#[derive(Clone, Debug)]
+pub struct NystromWhitener {
+    /// Orthonormal `p × r′` approximate eigenbasis of `G`.
+    u: Mat,
+    /// `λ̂_j^{-1/2} − τ` per kept direction (ascending λ̂ order).
+    c: Vec<f64>,
+    /// Complement scale `τ = λ̂_min^{-1/2}`.
+    tau: f64,
+    /// Requested sketch rank (actual `r′ = u.cols() ≤ rank`).
+    rank: usize,
+    /// Sketch seed (determinism pin).
+    seed: u64,
+    /// Approximate build flops, recorded at construction (depends on
+    /// whether the sketch was dense or matrix-free).
+    build_flops: usize,
+}
+
+impl NystromWhitener {
+    fn from_sketch(
+        omega: &Mat,
+        y: &Mat,
+        rank: usize,
+        seed: u64,
+        build_flops: usize,
+    ) -> Result<Self> {
+        let nys = nystrom_eig(omega, y).context("nystrom whitener: sketch factorization")?;
+        let lam_min = nys.lambda[0];
+        if !(lam_min > 0.0) {
+            anyhow::bail!("nystrom whitener: nonpositive sketched eigenvalue {lam_min}");
+        }
+        let tau = 1.0 / lam_min.sqrt();
+        let c: Vec<f64> = nys.lambda.iter().map(|&l| 1.0 / l.sqrt() - tau).collect();
+        Ok(NystromWhitener { u: nys.u, c, tau, rank, seed, build_flops })
+    }
+
+    /// Build from an assembled row Gram (`O(p²·r)` dense sketch).
+    pub fn from_gram(gram: &Mat, rank: usize, seed: u64) -> Result<Self> {
+        let p = gram.rows();
+        assert_eq!(gram.cols(), p, "nystrom whitener: gram must be square");
+        let r = rank.clamp(1, p);
+        let omega = gaussian_test_matrix(p, r, seed);
+        let y = gram.matmul(&omega);
+        let flops = 2 * p * p * r + 4 * p * r * r + r * r * r;
+        NystromWhitener::from_sketch(&omega, &y, rank, seed, flops)
+    }
+
+    /// Build matrix-free from a CSR block: `Y = A (Aᵀ Ω)` costs
+    /// `O(nnz·r)` and never assembles the `p×p` Gram.
+    pub fn from_csr_block(a: &CsrBlock, rank: usize, seed: u64) -> Result<Self> {
+        let (p, n) = (a.rows, a.cols);
+        let r = rank.clamp(1, p);
+        let omega = gaussian_test_matrix(p, r, seed);
+        let mut t = vec![0.0; n * r];
+        a.tr_matmat_into(omega.as_slice(), r, &mut t);
+        let mut y = Mat::zeros(p, r);
+        a.matmat_into(&t, r, y.as_mut_slice());
+        let flops = 4 * a.nnz() * r + 4 * p * r * r + r * r * r;
+        NystromWhitener::from_sketch(&omega, &y, rank, seed, flops)
+    }
+
+    /// Actual retained rank `r′` (≤ requested; truncated if the sketch
+    /// was numerically rank-deficient).
+    pub fn rank(&self) -> usize {
+        self.u.cols()
+    }
+
+    /// Requested sketch rank.
+    pub fn requested_rank(&self) -> usize {
+        self.rank
+    }
+
+    /// Sketch seed.
+    pub fn seed(&self) -> u64 {
+        self.seed
+    }
+
+    /// Materialize the explicit `W = τI + U diag(c) Uᵀ` (tests/analysis
+    /// only — `O(p²·r)`, exactly what the low-rank form exists to avoid).
+    pub fn dense_approximation(&self) -> Mat {
+        let p = Whitener::p(self);
+        let mut scaled = self.u.clone();
+        for i in 0..p {
+            for (j, &cj) in self.c.iter().enumerate() {
+                scaled[(i, j)] *= cj;
+            }
+        }
+        let mut w = scaled.matmul(&self.u.transpose());
+        for i in 0..p {
+            w[(i, i)] += self.tau;
+        }
+        w
+    }
+}
+
+impl Whitener for NystromWhitener {
+    fn p(&self) -> usize {
+        self.u.rows()
+    }
+
+    fn apply_into(&self, v: &[f64], out: &mut [f64]) {
+        let (p, r) = (self.u.rows(), self.u.cols());
+        with_stage_r(r, |t| {
+            // t = Uᵀ v, scaled by c, then out = U t + τ v
+            kernels::tr_matvec(self.u.as_slice(), p, r, v, t);
+            for (tj, &cj) in t.iter_mut().zip(&self.c) {
+                *tj *= cj;
+            }
+            kernels::matvec(self.u.as_slice(), p, r, t, out);
+        });
+        for (o, &vi) in out.iter_mut().zip(v) {
+            *o += self.tau * vi;
+        }
+    }
+
+    fn apply_multi_into(&self, v: &[f64], k: usize, out: &mut [f64]) {
+        let (p, r) = (self.u.rows(), self.u.cols());
+        with_stage_r(r * k, |t| {
+            // T = Uᵀ V (r×k), row j scaled by c_j, OUT = U T + τ V
+            kernels::tr_matmat(self.u.as_slice(), p, r, v, k, t);
+            for j in 0..r {
+                let cj = self.c[j];
+                for tv in &mut t[j * k..(j + 1) * k] {
+                    *tv *= cj;
+                }
+            }
+            kernels::matmat(self.u.as_slice(), p, r, t, k, out);
+        });
+        for (o, &vi) in out.iter_mut().zip(v) {
+            *o += self.tau * vi;
+        }
+    }
+
+    fn stored_floats(&self) -> usize {
+        self.u.rows() * self.u.cols() + self.c.len()
+    }
+
+    fn build_cost(&self) -> usize {
+        self.build_flops
+    }
+
+    fn dense_matrix(&self) -> Option<&Mat> {
+        None
+    }
+
+    fn to_f32(&self) -> WhitenerF32 {
+        WhitenerF32::LowRank {
+            u: self.u.as_slice().iter().map(|&v| v as f32).collect(),
+            c: self.c.iter().map(|&v| v as f32).collect(),
+            tau: self.tau as f32,
+            p: self.u.rows(),
+            r: self.u.cols(),
+        }
+    }
+}
+
+/// Cast-once f32 whitening twin for the mixed-precision machine phase
+/// ([`crate::partition::lowp`]). Plain data — `Clone + Send + Sync` —
+/// with the low-rank scratch in a dedicated thread-local, mirroring the
+/// f64 path's staging contract.
+#[derive(Clone, Debug)]
+pub enum WhitenerF32 {
+    /// Explicit dense `p×p` transform (cast of [`ExactWhitener`]).
+    Dense { w: Vec<f32>, p: usize },
+    /// Low-rank `τI + U diag(c) Uᵀ` (cast of [`NystromWhitener`]).
+    LowRank { u: Vec<f32>, c: Vec<f32>, tau: f32, p: usize, r: usize },
+}
+
+impl WhitenerF32 {
+    /// Transform order `p`.
+    pub fn p(&self) -> usize {
+        match self {
+            WhitenerF32::Dense { p, .. } | WhitenerF32::LowRank { p, .. } => *p,
+        }
+    }
+
+    /// `y = W x` in f32.
+    pub fn apply_into(&self, x: &[f32], y: &mut [f32]) {
+        match self {
+            WhitenerF32::Dense { w, p } => kernels::matvec_f32(w, *p, *p, x, y),
+            WhitenerF32::LowRank { u, c, tau, p, r } => {
+                with_stage_f32(*r, |t| {
+                    kernels::tr_matvec_f32(u, *p, *r, x, t);
+                    for (tj, &cj) in t.iter_mut().zip(c) {
+                        *tj *= cj;
+                    }
+                    kernels::matvec_f32(u, *p, *r, t, y);
+                });
+                for (yi, &xi) in y.iter_mut().zip(x) {
+                    *yi += tau * xi;
+                }
+            }
+        }
+    }
+}
+
 /// The factored preconditioned operator `C_i = W_i A_i` over a CSR block.
 ///
-/// Memory is `O(nnz_i + p²)`; applies are `O(nnz_i + p²)`. The `p`-sized
-/// staging buffer between the CSR kernel and the whitening apply is
-/// thread-local (see `with_stage`), keeping the operator plain data —
-/// `Sync`-shareable across the machine-phase threads — while the apply
-/// path stays allocation-free after each thread's first call.
+/// Memory is `O(nnz_i + stored(W))`; applies are `O(nnz_i + apply(W))`.
+/// The `p`-sized staging buffer between the CSR kernel and the whitening
+/// apply is thread-local (see `with_stage`), keeping the operator plain
+/// data — `Sync`-shareable across the machine-phase threads — while the
+/// apply path stays allocation-free after each thread's first call.
 #[derive(Clone, Debug)]
 pub struct WhitenedCsr {
     a: CsrBlock,
-    pre: Preconditioner,
+    pre: SharedWhitener,
 }
 
 impl WhitenedCsr {
-    /// Compose a CSR block with its whitening preconditioner.
-    pub fn new(a: CsrBlock, pre: Preconditioner) -> Self {
+    /// Compose a CSR block with its whitening transform.
+    pub fn new(a: CsrBlock, pre: SharedWhitener) -> Self {
         assert_eq!(a.rows, pre.p(), "whitened block: preconditioner order mismatch");
         WhitenedCsr { a, pre }
     }
 
-    /// Build from a CSR block alone: assemble its sparse row Gram and
-    /// factor it.
+    /// Build from a CSR block alone with the exact transform: assemble
+    /// its sparse row Gram and factor it (the pre-trait behavior).
     pub fn from_csr(a: CsrBlock) -> Result<Self> {
-        let pre = Preconditioner::from_gram(&a.gram_rows())?;
+        let pre: SharedWhitener = Arc::new(ExactWhitener::from_gram(&a.gram_rows())?);
+        Ok(WhitenedCsr::new(a, pre))
+    }
+
+    /// Build with a rank-r Nyström transform, sketched matrix-free.
+    pub fn from_csr_rank(a: CsrBlock, rank: usize, seed: u64) -> Result<Self> {
+        let pre: SharedWhitener = Arc::new(NystromWhitener::from_csr_block(&a, rank, seed)?);
+        Ok(WhitenedCsr::new(a, pre))
+    }
+
+    /// Build under a policy.
+    pub fn from_csr_with(a: CsrBlock, policy: WhitenPolicy) -> Result<Self> {
+        let pre = policy.build_for_csr(&a)?;
         Ok(WhitenedCsr::new(a, pre))
     }
 
@@ -163,11 +564,12 @@ impl WhitenedCsr {
         self.a.nnz()
     }
 
-    /// Total stored floats: `nnz_i` (CSR values) + `p²` (the cached `W`) —
-    /// the factored form's memory footprint, vs `p·n` for the explicit
-    /// dense product (the figure the preconditioning bench reports).
+    /// Total stored floats: `nnz_i` (CSR values) + whatever the whitener
+    /// representation holds (`p²` exact, `p·r′ + r′` Nyström) — the
+    /// factored form's memory footprint, vs `p·n` for the explicit dense
+    /// product (the figure the preconditioning bench reports).
     pub fn stored_floats(&self) -> usize {
-        self.a.nnz() + self.pre.p() * self.pre.p()
+        self.a.nnz() + self.pre.stored_floats()
     }
 
     /// The underlying CSR block.
@@ -175,8 +577,8 @@ impl WhitenedCsr {
         &self.a
     }
 
-    /// The whitening preconditioner.
-    pub fn preconditioner(&self) -> &Preconditioner {
+    /// The whitening transform.
+    pub fn whitener(&self) -> &SharedWhitener {
         &self.pre
     }
 
@@ -212,8 +614,8 @@ impl WhitenedCsr {
 
     /// `Y = C X = W (A X)` over a `n × k` column block — the batched
     /// whitened apply: CSR SpMM into the thread-local `p×k` stage, then
-    /// one `p×p` GEMM. Allocation-free after each thread's first call at
-    /// a given width, same contract as the single-vector kernels.
+    /// one whitening GEMM. Allocation-free after each thread's first call
+    /// at a given width, same contract as the single-vector kernels.
     pub fn matmat_into(&self, x: &[f64], k: usize, y: &mut [f64]) {
         with_stage(self.rows() * k, |t| {
             self.a.matmat_into(x, k, t);
@@ -238,12 +640,26 @@ impl WhitenedCsr {
     }
 
     /// Row Gram `C Cᵀ = W G W` as a dense `p×p` — identity up to the
-    /// eigensolve's rounding. Computed numerically (two `p×p` matmuls,
-    /// setup path) rather than returned as an exact `I` so a badly
-    /// conditioned whitening surfaces in the downstream SPD check instead
-    /// of being papered over.
+    /// whitening's approximation error (exact eigensolve rounding, or
+    /// the Nyström tail). Computed numerically (setup path) rather than
+    /// returned as an exact `I` so a badly conditioned whitening surfaces
+    /// in the downstream SPD check instead of being papered over.
     pub fn gram_rows(&self) -> Mat {
-        let g = self.pre.w.matmul(&self.a.gram_rows()).matmul(&self.pre.w);
+        let p = self.rows();
+        let g = if let Some(w) = self.pre.dense_matrix() {
+            // exact path: two p×p matmuls, bit-identical to pre-trait code
+            w.matmul(&self.a.gram_rows()).matmul(w)
+        } else {
+            // generic path: H = W G, then W G W = (W Hᵀ)ᵀ via the trait's
+            // batched apply (row-major p×p blocks are k = p column blocks)
+            let gram = self.a.gram_rows();
+            let mut h = Mat::zeros(p, p);
+            self.pre.apply_multi_into(gram.as_slice(), p, h.as_mut_slice());
+            let ht = h.transpose();
+            let mut wht = Mat::zeros(p, p);
+            self.pre.apply_multi_into(ht.as_slice(), p, wht.as_mut_slice());
+            wht.transpose()
+        };
         // symmetrize the matmul rounding residue (same contract as the
         // SYRK / sparse-merge gram kernels: exact mirror)
         let gt = g.transpose();
@@ -252,7 +668,7 @@ impl WhitenedCsr {
         s.scaled(0.5)
     }
 
-    /// Column Gram `CᵀC = Aᵀ G⁻¹ A` as dense `n×n` (analysis paths only).
+    /// Column Gram `CᵀC = Aᵀ W² A` as dense `n×n` (analysis paths only).
     pub fn gram_cols(&self) -> Mat {
         self.to_dense().gram_cols()
     }
@@ -261,7 +677,15 @@ impl WhitenedCsr {
     /// precisely the `O(p·n)` densification the factored form avoids on
     /// the iteration path).
     pub fn to_dense(&self) -> Mat {
-        self.pre.w.matmul(&self.a.to_dense())
+        let dense = self.a.to_dense();
+        if let Some(w) = self.pre.dense_matrix() {
+            w.matmul(&dense)
+        } else {
+            let (p, n) = (self.rows(), self.cols());
+            let mut out = Mat::zeros(p, n);
+            self.pre.apply_multi_into(dense.as_slice(), n, out.as_mut_slice());
+            out
+        }
     }
 }
 
@@ -293,7 +717,7 @@ mod tests {
         let a = sample_block();
         let dense = a.to_dense();
         let w = WhitenedCsr::from_csr(a).unwrap();
-        let explicit = w.preconditioner().matrix().matmul(&dense);
+        let explicit = w.whitener().dense_matrix().unwrap().matmul(&dense);
         assert!(w.to_dense().sub(&explicit).max_abs() < 1e-12);
 
         let x: Vec<f64> = (0..16).map(|i| (i as f64 * 0.31).sin()).collect();
@@ -375,7 +799,121 @@ mod tests {
         let w = WhitenedCsr::from_csr(a).unwrap();
         let b: Vec<f64> = (0..6).map(|i| 1.0 + i as f64).collect();
         let d = w.whiten_rhs(&b);
-        let expect = w.preconditioner().matrix().matvec(&b);
+        let expect = w.whitener().dense_matrix().unwrap().matvec(&b);
         assert!(max_abs_diff(&d, &expect) < 1e-14);
+    }
+
+    #[test]
+    fn full_rank_nystrom_matches_exact() {
+        let a = sample_block();
+        let g = a.gram_rows();
+        let exact = ExactWhitener::from_gram(&g).unwrap();
+        let nys = NystromWhitener::from_gram(&g, 6, 99).unwrap();
+        assert_eq!(nys.rank(), 6, "full-rank sketch must retain all directions");
+        let diff = nys.dense_approximation().sub(exact.matrix()).max_abs();
+        assert!(diff < 1e-8, "full-rank Nyström vs exact: {diff:.2e}");
+        // and the applies agree
+        let v: Vec<f64> = (0..6).map(|i| (i as f64 * 0.9).sin()).collect();
+        let mut ye = vec![0.0; 6];
+        let mut yn = vec![0.0; 6];
+        Whitener::apply_into(&exact, &v, &mut ye);
+        Whitener::apply_into(&nys, &v, &mut yn);
+        assert!(max_abs_diff(&ye, &yn) < 1e-8);
+    }
+
+    #[test]
+    fn nystrom_applies_match_dense_approximation() {
+        let a = sample_block();
+        let nys = NystromWhitener::from_csr_block(&a, 4, 7).unwrap();
+        let w = nys.dense_approximation();
+        let v: Vec<f64> = (0..6).map(|i| (i as f64 * 0.53).cos()).collect();
+        let mut y = vec![0.0; 6];
+        Whitener::apply_into(&nys, &v, &mut y);
+        assert!(max_abs_diff(&y, &w.matvec(&v)) < 1e-12, "single apply");
+
+        let k = 3;
+        let vm: Vec<f64> = (0..6 * k).map(|i| (i as f64 * 0.29).sin()).collect();
+        let mut ym = vec![0.0; 6 * k];
+        Whitener::apply_multi_into(&nys, &vm, k, &mut ym);
+        for lane in 0..k {
+            let col: Vec<f64> = (0..6).map(|r| vm[r * k + lane]).collect();
+            let expect = w.matvec(&col);
+            let got: Vec<f64> = (0..6).map(|r| ym[r * k + lane]).collect();
+            assert!(max_abs_diff(&got, &expect) < 1e-12, "multi lane {lane}");
+        }
+    }
+
+    #[test]
+    fn nystrom_whitened_block_is_consistent() {
+        let a = sample_block();
+        let reference = a.to_dense();
+        let w = WhitenedCsr::from_csr_rank(a, 4, 31).unwrap();
+        // stored floats drop below the exact p² transform
+        assert!(w.whitener().stored_floats() < 36, "rank-4 must store < p²");
+        // kernels match the explicit product W_nys · A
+        let nys_dense = {
+            let mut out = Mat::zeros(6, 16);
+            w.whitener().apply_multi_into(reference.as_slice(), 16, out.as_mut_slice());
+            out
+        };
+        assert!(w.to_dense().sub(&nys_dense).max_abs() < 1e-12);
+        let x: Vec<f64> = (0..16).map(|i| (i as f64 * 0.17).sin()).collect();
+        let mut y = vec![0.0; 6];
+        w.matvec_into(&x, &mut y);
+        assert!(max_abs_diff(&y, &nys_dense.matvec(&x)) < 1e-12);
+        let r: Vec<f64> = (0..6).map(|i| (i as f64 * 0.61).cos()).collect();
+        let mut z = vec![0.0; 16];
+        w.tr_matvec_into(&r, &mut z);
+        assert!(max_abs_diff(&z, &nys_dense.tr_matvec(&r)) < 1e-12);
+        // generic gram path stays an exact mirror
+        let g = w.gram_rows();
+        for i in 0..6 {
+            for j in 0..6 {
+                assert_eq!(g[(i, j)], g[(j, i)]);
+            }
+        }
+    }
+
+    #[test]
+    fn f32_twins_match_f64_applies() {
+        let a = sample_block();
+        let g = a.gram_rows();
+        let v: Vec<f64> = (0..6).map(|i| (i as f64 * 0.43).sin()).collect();
+        let vf: Vec<f32> = v.iter().map(|&x| x as f32).collect();
+        for w in [
+            Arc::new(ExactWhitener::from_gram(&g).unwrap()) as SharedWhitener,
+            Arc::new(NystromWhitener::from_gram(&g, 4, 11).unwrap()) as SharedWhitener,
+        ] {
+            let mut y64 = vec![0.0; 6];
+            w.apply_into(&v, &mut y64);
+            let tw = w.to_f32();
+            assert_eq!(tw.p(), 6);
+            let mut y32 = vec![0.0f32; 6];
+            tw.apply_into(&vf, &mut y32);
+            for (a64, a32) in y64.iter().zip(&y32) {
+                assert!((a64 - *a32 as f64).abs() < 1e-4, "f32 twin drift: {a64} vs {a32}");
+            }
+        }
+    }
+
+    #[test]
+    fn nystrom_is_seed_deterministic() {
+        let a = sample_block();
+        let w1 = NystromWhitener::from_csr_block(&a, 4, 77).unwrap();
+        let w2 = NystromWhitener::from_csr_block(&a, 4, 77).unwrap();
+        assert_eq!(w1.u.as_slice(), w2.u.as_slice(), "same seed must be bit-equal");
+        assert_eq!(w1.c, w2.c);
+        assert_eq!(w1.tau, w2.tau);
+        let w3 = NystromWhitener::from_csr_block(&a, 4, 78).unwrap();
+        assert_ne!(w1.u.as_slice(), w3.u.as_slice(), "different seeds must differ");
+    }
+
+    #[test]
+    fn whiten_policy_perturbs_seeds_per_block() {
+        let base = WhitenPolicy::Nystrom { rank: 4, seed: 5 };
+        let b0 = base.for_block(0);
+        let b1 = base.for_block(1);
+        assert_ne!(b0, b1, "blocks must draw independent sketches");
+        assert_eq!(WhitenPolicy::Exact.for_block(3), WhitenPolicy::Exact);
     }
 }

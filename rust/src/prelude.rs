@@ -19,6 +19,7 @@
 
 pub use crate::config::Backend;
 pub use crate::partition::PartitionedSystem;
+pub use crate::precond::{SharedWhitener, WhitenPolicy, Whitener};
 pub use crate::rates::SpectralInfo;
 pub use crate::solvers::builder::{Method, Session, SolveBuilder};
 pub use crate::solvers::stream::Admission;

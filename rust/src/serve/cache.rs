@@ -48,9 +48,13 @@ impl PreparedSystem {
 /// Stored floats × 8, summed over blocks, plus one rhs-sized vector —
 /// an estimate (engines add lane storage proportional to `max_width`),
 /// but proportional to the real footprint, which is all LRU ordering
-/// needs.
+/// needs. Derived from [`crate::partition::BlockOp::stored_floats`], so
+/// a whitened block is charged for what its whitener actually keeps:
+/// `nnz + p²` for the exact factor, `nnz + p·r + r` for rank-`r`
+/// Nyström — a rank-`r` system must not pay (and be evicted at) the
+/// dense `O(p²)` rate its low-rank factors were built to avoid.
 fn approx_resident_bytes(sys: &PartitionedSystem) -> usize {
-    8 * (sys.n_rows + sys.blocks.iter().map(|b| b.a.nnz()).sum::<usize>())
+    8 * (sys.n_rows + sys.blocks.iter().map(|b| b.a.stored_floats()).sum::<usize>())
 }
 
 /// Counters the serve bench and the eviction tests read back.
@@ -177,6 +181,42 @@ mod tests {
         let prep = PreparedSystem::prepare("s", sys).unwrap();
         // dense blocks: 16×16 stored floats + 16 rhs rows, 8 bytes each
         assert_eq!(prep.bytes, 8 * (16 * 16 + 16));
+    }
+
+    #[test]
+    fn rank_r_whitening_shrinks_the_resident_bytes() {
+        // the byte figure must charge a whitened block for what its
+        // whitener actually stores: a rank-r Nyström system is a cheaper
+        // resident than the exact-factor system, so a budget that holds
+        // two rank-r systems doesn't evict one prematurely at the dense
+        // O(p²) rate
+        let sp = crate::gen::problems::SparseProblem::banded(48, 48, 3, 4).build(53);
+        let base = PartitionedSystem::split_csr(&sp.a, &sp.b, 4).unwrap();
+        let raw = PreparedSystem::prepare("raw", base.clone()).unwrap();
+        let exact =
+            PreparedSystem::prepare("exact", base.clone().preconditioned().unwrap()).unwrap();
+        let nys = PreparedSystem::prepare("nys", base.clone().preconditioned_rank(4, 9).unwrap().0)
+            .unwrap();
+        assert!(raw.bytes < nys.bytes, "whitener floats must be charged");
+        assert!(
+            nys.bytes < exact.bytes,
+            "rank-r resident {} must undercut the exact factor's {}",
+            nys.bytes,
+            exact.bytes
+        );
+        // two rank-r systems fit a 2×rank-r budget without eviction
+        // (same seed → identical stored-float figures)
+        let mut cache = PreparedCache::new(2 * nys.bytes);
+        let mk = |id: &str| {
+            let id = id.to_string();
+            let base = base.clone();
+            move || PreparedSystem::prepare(id, base.preconditioned_rank(4, 9).unwrap().0)
+        };
+        let (_, ev) = cache.get_or_prepare("n1", &[], mk("n1")).unwrap();
+        assert!(ev.is_empty());
+        let (_, ev) = cache.get_or_prepare("n2", &[], mk("n2")).unwrap();
+        assert!(ev.is_empty(), "rank-r system evicted at the exact-factor rate");
+        assert_eq!(cache.len(), 2);
     }
 
     #[test]

@@ -39,13 +39,14 @@
 
 use super::local::{
     master_momentum_average, AdmmBatchLocal, ApcBatchLocal, CimminoBatchLocal, GradBatchLocal,
+    PcgBatchLocal,
 };
 use super::Solver;
-use crate::linalg::vector::relative_error;
+use crate::linalg::vector::{dot, relative_error};
 use crate::linalg::MultiVec;
 use crate::parallel::{self, SliceCells};
 use crate::partition::{MachineBlock, PartitionedSystem};
-use crate::precond::Preconditioner;
+use crate::precond::{SharedWhitener, Whitener};
 use crate::solvers::{Metric, RunConfig, SolverOptions};
 use anyhow::{bail, Context, Result};
 
@@ -672,7 +673,7 @@ pub struct GradBatch<'a> {
     /// Borrowed from the owner of the cache (P-HBM) — never cloned: the
     /// whole point of the cache is that the `p×p` factors are built
     /// once and shared.
-    whiteners: &'a [Option<Preconditioner>],
+    whiteners: &'a [Option<SharedWhitener>],
 }
 
 impl<'a> GradBatch<'a> {
@@ -703,7 +704,7 @@ impl<'a> GradBatch<'a> {
         sys: &'a PartitionedSystem,
         rhs_blocks: Vec<MultiVec>,
         rule: GradRule,
-        whiteners: &'a [Option<Preconditioner>],
+        whiteners: &'a [Option<SharedWhitener>],
     ) -> Result<Self> {
         if rhs_blocks.len() != sys.m() {
             bail!("grad batch: {} rhs blocks for {} machines", rhs_blocks.len(), sys.m());
@@ -933,6 +934,305 @@ impl BatchEngine for AdmmBatch<'_> {
         }
         self.xbar.reserve_columns(k_max);
         self.sum.reserve_columns(k_max);
+    }
+}
+
+/// Drop every per-lane scalar not named in `keep` (strictly increasing),
+/// in place — the lane-vector counterpart of
+/// [`MultiVec::compact_columns`].
+fn compact_lane_scalars<T: Copy>(v: &mut Vec<T>, keep: &[usize]) {
+    for (t, &c) in keep.iter().enumerate() {
+        v[t] = v[c];
+    }
+    v.truncate(keep.len());
+}
+
+/// Insert `fill` at the (strictly increasing, widened-index) positions
+/// `at` — the lane-vector counterpart of [`MultiVec::inject_columns`].
+fn inject_lane_scalars<T: Copy>(v: &mut Vec<T>, at: &[usize], fill: T) {
+    let k_new = v.len() + at.len();
+    let mut out = Vec::with_capacity(k_new);
+    let mut src = v.iter().copied();
+    let mut ai = 0usize;
+    for dst in 0..k_new {
+        if ai < at.len() && at[ai] == dst {
+            out.push(fill);
+            ai += 1;
+        } else {
+            out.push(src.next().expect("inject_lane_scalars: source exhausted"));
+        }
+    }
+    *v = out;
+}
+
+/// Batched distributed PCG (D-PCG): conjugate gradient on the normal
+/// equations `AᵀA x = Aᵀb`, one lane of CG recurrences per RHS column.
+/// The machine phase is the shared normal-operator pass
+/// `Q_i = A_iᵀ(A_i P)` ([`PcgBatchLocal`]); everything Krylov — `α`,
+/// `β`, the residual and direction lanes — lives on the master, which is
+/// why the coordinator has no `pcg` descriptor
+/// ([`super::suite::tuned_method`]). Run over a §6-whitened system the
+/// normal operator becomes `AᵀW²A` — CG preconditioned by the same
+/// rank-`r` or exact whitener every other engine shares.
+///
+/// A lane whose curvature `pᵀq` stops being positive (numerical
+/// breakdown: `x` already at the normal-equations solution, or a
+/// non-finite fold) freezes — it holds its iterate and is ignored by the
+/// recurrences until the driver deflates it.
+pub struct PcgBatch<'a> {
+    sys: &'a PartitionedSystem,
+    locals: Vec<PcgBatchLocal>,
+    /// Iterate lanes `X` (the engine's master estimate).
+    x: MultiVec,
+    /// Normal-equations residual lanes `R = Aᵀb − AᵀA X`.
+    r: MultiVec,
+    /// Search-direction lanes `P`.
+    pdir: MultiVec,
+    /// Normal-operator image `Q = AᵀA P`.
+    q: MultiVec,
+    partials: Vec<MultiVec>,
+    /// Per-lane `rᵀr`.
+    rz: Vec<f64>,
+    /// Per-lane breakdown flags (frozen lanes skip their recurrences).
+    frozen: Vec<bool>,
+    /// Per-lane `pᵀq` scratch.
+    pq: Vec<f64>,
+    /// Per-lane step scratch (`α`, then reused for `β`).
+    step: Vec<f64>,
+    /// Per-machine §6 rhs whiteners for admission on a transformed
+    /// system, same contract as [`GradBatch`]'s slice: `None` entry =
+    /// identity, empty slice = untransformed system.
+    whiteners: &'a [Option<SharedWhitener>],
+}
+
+impl<'a> PcgBatch<'a> {
+    /// RHS columns sliced from the global `rhs` by each block's row range.
+    pub fn new(sys: &'a PartitionedSystem, rhs: &[Vec<f64>]) -> Result<Self> {
+        check_rhs(sys, rhs)?;
+        let blocks = sys.blocks.iter().map(|blk| block_rhs(blk, rhs)).collect();
+        Self::with_rhs_blocks_whitened(sys, blocks, &[])
+    }
+
+    /// Explicit per-machine RHS blocks (a caller iterating a transformed
+    /// system hands the transformed `D_i = W_i B_i` here).
+    pub fn with_rhs_blocks(sys: &'a PartitionedSystem, rhs_blocks: Vec<MultiVec>) -> Result<Self> {
+        Self::with_rhs_blocks_whitened(sys, rhs_blocks, &[])
+    }
+
+    /// [`with_rhs_blocks`](PcgBatch::with_rhs_blocks) plus the cached
+    /// per-machine rhs whiteners, so later [`BatchEngine::admit`] calls
+    /// whiten each incoming `p×1` slice through the cached factor —
+    /// `O(p·r)` for a rank-`r` Nyström whitener, no eigensolve either
+    /// way.
+    pub fn with_rhs_blocks_whitened(
+        sys: &'a PartitionedSystem,
+        rhs_blocks: Vec<MultiVec>,
+        whiteners: &'a [Option<SharedWhitener>],
+    ) -> Result<Self> {
+        if rhs_blocks.len() != sys.m() {
+            bail!("pcg batch: {} rhs blocks for {} machines", rhs_blocks.len(), sys.m());
+        }
+        if !whiteners.is_empty() && whiteners.len() != sys.m() {
+            bail!("pcg batch: {} whiteners for {} machines", whiteners.len(), sys.m());
+        }
+        let k = rhs_blocks.first().map_or(0, |b| b.width());
+        if rhs_blocks.iter().any(|b| b.width() != k) {
+            bail!("pcg batch: rhs blocks disagree on batch width");
+        }
+        for (blk, b) in sys.blocks.iter().zip(&rhs_blocks) {
+            if b.len() != blk.p() {
+                bail!("pcg batch: rhs block has {} rows, machine has {}", b.len(), blk.p());
+            }
+        }
+        // R = Aᵀ B = Σ_i A_iᵀ B_i, fused per block; X starts at zero so
+        // this is the initial normal-equations residual
+        let mut r = MultiVec::zeros(sys.n, k);
+        for (blk, b) in sys.blocks.iter().zip(&rhs_blocks) {
+            blk.a.tr_matmat_axpy_into(b, 1.0, &mut r);
+        }
+        let mut rz = vec![0.0; k];
+        for row in 0..sys.n {
+            for (z, v) in rz.iter_mut().zip(r.row(row)) {
+                *z += v * v;
+            }
+        }
+        let pdir = r.clone();
+        Ok(PcgBatch {
+            sys,
+            locals: sys.blocks.iter().map(|blk| PcgBatchLocal::new(blk, k)).collect(),
+            x: MultiVec::zeros(sys.n, k),
+            r,
+            pdir,
+            q: MultiVec::zeros(sys.n, k),
+            partials: vec![MultiVec::zeros(sys.n, k); sys.m()],
+            rz,
+            frozen: vec![false; k],
+            pq: vec![0.0; k],
+            step: vec![0.0; k],
+            whiteners,
+        })
+    }
+}
+
+impl BatchEngine for PcgBatch<'_> {
+    fn xbar(&self) -> &MultiVec {
+        &self.x
+    }
+
+    fn round(&mut self) {
+        let k = self.x.width();
+        if k == 0 {
+            return;
+        }
+        // machine phase: Q_i = A_iᵀ(A_i P) into partials[i]
+        let blocks = &self.sys.blocks;
+        let pdir = &self.pdir;
+        let locals = SliceCells::new(&mut self.locals);
+        let partials = SliceCells::new(&mut self.partials);
+        parallel::machine_phase(blocks.len(), |i| {
+            // SAFETY: task i is the phase's only accessor of index i
+            let local = unsafe { locals.index_mut(i) };
+            let out = unsafe { partials.index_mut(i) };
+            local.normal_apply(&blocks[i], pdir, out);
+        });
+        // master phase: Q = Σ Q_i, machine-index order
+        self.q.fill(0.0);
+        for partial in &self.partials {
+            for (q, p) in self.q.as_mut_slice().iter_mut().zip(partial.as_slice()) {
+                *q += p;
+            }
+        }
+        let n = self.x.len();
+        // per-lane curvature pᵀq
+        self.pq.fill(0.0);
+        for row in 0..n {
+            let pr = self.pdir.row(row);
+            let qr = self.q.row(row);
+            for (z, (p, q)) in self.pq.iter_mut().zip(pr.iter().zip(qr)) {
+                *z += p * q;
+            }
+        }
+        // α per lane; non-positive or non-finite curvature freezes the lane
+        for j in 0..k {
+            if self.frozen[j] || !(self.pq[j] > 0.0 && self.pq[j].is_finite()) {
+                self.frozen[j] = true;
+                self.step[j] = 0.0;
+            } else {
+                self.step[j] = self.rz[j] / self.pq[j];
+            }
+        }
+        // X += αP, R −= αQ (frozen lanes hold at α = 0)
+        for row in 0..n {
+            let pr = self.pdir.row(row);
+            let xr = self.x.row_mut(row);
+            for j in 0..k {
+                xr[j] += self.step[j] * pr[j];
+            }
+        }
+        for row in 0..n {
+            let qr = self.q.row(row);
+            let rr = self.r.row_mut(row);
+            for j in 0..k {
+                rr[j] -= self.step[j] * qr[j];
+            }
+        }
+        // β per lane from the new rᵀr, then P ← R + βP
+        self.pq.fill(0.0); // reuse as rz_next
+        for row in 0..n {
+            for (z, v) in self.pq.iter_mut().zip(self.r.row(row)) {
+                *z += v * v;
+            }
+        }
+        for j in 0..k {
+            self.step[j] = if self.frozen[j] || self.rz[j] <= 0.0 {
+                0.0
+            } else {
+                self.pq[j] / self.rz[j]
+            };
+            self.rz[j] = self.pq[j];
+        }
+        for row in 0..n {
+            let rr = self.r.row(row);
+            let pr = self.pdir.row_mut(row);
+            for j in 0..k {
+                pr[j] = rr[j] + self.step[j] * pr[j];
+            }
+        }
+    }
+
+    fn deflate(&mut self, keep: &[usize]) {
+        for l in &mut self.locals {
+            l.deflate(keep);
+        }
+        for p in &mut self.partials {
+            p.compact_columns(keep);
+        }
+        self.x.compact_columns(keep);
+        self.r.compact_columns(keep);
+        self.pdir.compact_columns(keep);
+        self.q.compact_columns(keep);
+        compact_lane_scalars(&mut self.rz, keep);
+        compact_lane_scalars(&mut self.frozen, keep);
+        compact_lane_scalars(&mut self.pq, keep);
+        compact_lane_scalars(&mut self.step, keep);
+    }
+
+    /// Admitted lanes start the standalone CG iteration: `x = 0`,
+    /// `r = p = Aᵀb` (per-block fused transpose-apply, whitened through
+    /// the cached per-machine `W_i` where the iterated system is
+    /// §6-transformed).
+    fn admit(&mut self, cols: &[(usize, &[f64])]) -> Result<()> {
+        check_admission(self.sys, self.x.width(), cols)?;
+        let at: Vec<usize> = cols.iter().map(|&(l, _)| l).collect();
+        for l in &mut self.locals {
+            l.inject(&at);
+        }
+        for p in &mut self.partials {
+            p.inject_columns(&at);
+        }
+        self.x.inject_columns(&at);
+        self.r.inject_columns(&at);
+        self.pdir.inject_columns(&at);
+        self.q.inject_columns(&at);
+        inject_lane_scalars(&mut self.rz, &at, 0.0);
+        inject_lane_scalars(&mut self.frozen, &at, false);
+        inject_lane_scalars(&mut self.pq, &at, 0.0);
+        inject_lane_scalars(&mut self.step, &at, 0.0);
+        let mut rcol = vec![0.0; self.sys.n];
+        for &(lane, b) in cols {
+            rcol.fill(0.0);
+            for (i, blk) in self.sys.blocks.iter().enumerate() {
+                let slice = &b[blk.row0..blk.row1];
+                match self.whiteners.get(i).and_then(|w| w.as_ref()) {
+                    Some(w) => {
+                        let d = w.apply(slice);
+                        blk.a.tr_matvec_axpy_into(&d, 1.0, &mut rcol);
+                    }
+                    None => blk.a.tr_matvec_axpy_into(slice, 1.0, &mut rcol),
+                }
+            }
+            self.r.set_col(lane, &rcol);
+            self.pdir.set_col(lane, &rcol);
+            self.rz[lane] = dot(&rcol, &rcol);
+        }
+        Ok(())
+    }
+
+    fn reserve_lanes(&mut self, k_max: usize) {
+        for l in &mut self.locals {
+            l.reserve_lanes(k_max);
+        }
+        for p in &mut self.partials {
+            p.reserve_columns(k_max);
+        }
+        self.x.reserve_columns(k_max);
+        self.r.reserve_columns(k_max);
+        self.pdir.reserve_columns(k_max);
+        self.q.reserve_columns(k_max);
+        self.rz.reserve(k_max.saturating_sub(self.rz.len()));
+        self.frozen.reserve(k_max.saturating_sub(self.frozen.len()));
+        self.pq.reserve(k_max.saturating_sub(self.pq.len()));
+        self.step.reserve(k_max.saturating_sub(self.step.len()));
     }
 }
 

@@ -64,11 +64,15 @@ pub enum Method {
     /// APC); degraded topologies and link faults go through
     /// [`crate::gossip::GossipApc::with_topology`] directly.
     Gossip,
+    /// Distributed CG on the normal equations ([`super::pcg::Pcg`]):
+    /// the tuning-free Krylov baseline. Preconditioned by running over
+    /// a §6-whitened system (exact or rank-r Nyström).
+    Pcg,
 }
 
 impl Method {
     /// Every method, in [`super::suite::ALL`] order.
-    pub const ALL: [Method; 9] = [
+    pub const ALL: [Method; 10] = [
         Method::Dgd,
         Method::Nag,
         Method::Hbm,
@@ -78,6 +82,7 @@ impl Method {
         Method::Consensus,
         Method::Phbm,
         Method::Gossip,
+        Method::Pcg,
     ];
 
     /// The lowercase string key used by the CLI, benches, and the old
@@ -93,6 +98,7 @@ impl Method {
             Method::Admm => "admm",
             Method::Phbm => "phbm",
             Method::Gossip => "gossip",
+            Method::Pcg => "pcg",
         }
     }
 
@@ -108,6 +114,7 @@ impl Method {
             "admm" => Method::Admm,
             "phbm" => Method::Phbm,
             "gossip" => Method::Gossip,
+            "pcg" => Method::Pcg,
             other => bail!(
                 "unknown solver {:?} (expected one of {:?})",
                 other,
@@ -176,6 +183,8 @@ pub(crate) fn empty_engine<'a>(
              per-node consensus estimates, not a shared batch state — \
              stream Method::Apc, or drive crate::gossip::GossipApc directly"
         ),
+        // tuning-free: the spectrum is unused, CG adapts on its own
+        Method::Pcg => Box::new(crate::solvers::batch::PcgBatch::new(sys, &[])?),
     })
 }
 
@@ -188,7 +197,7 @@ pub(crate) fn tuned_boxed(
     precision: Precision,
 ) -> Result<Box<dyn Solver>> {
     use super::{admm::Admm, apc::Apc, cimmino::Cimmino, consensus::Consensus, dgd::Dgd,
-                hbm::Hbm, nag::Nag, phbm::Phbm};
+                hbm::Hbm, nag::Nag, pcg::Pcg, phbm::Phbm};
     match precision {
         Precision::F64 => Ok(match method {
             Method::Apc => Box::new(Apc::auto_with_spectral(sys, s)?),
@@ -200,6 +209,7 @@ pub(crate) fn tuned_boxed(
             Method::Admm => Box::new(Admm::auto_with_spectral(sys, s)?),
             Method::Phbm => Box::new(Phbm::auto_with_spectral(sys, s)?),
             Method::Gossip => Box::new(crate::gossip::GossipApc::auto_with_spectral(sys, s)?),
+            Method::Pcg => Box::new(Pcg::new(sys)),
         }),
         Precision::MixedRefined { refresh_every } => {
             if method == Method::Phbm {
@@ -214,6 +224,15 @@ pub(crate) fn tuned_boxed(
                     "gossip has no mixed-precision wrapper yet: its fold \
                      renormalizes per-node weights, which the +IR engine's \
                      shared f32 machine phase does not model"
+                );
+            }
+            if method == Method::Pcg {
+                bail!(
+                    "pcg has no mixed-precision wrapper: CG's conjugacy \
+                     recurrences degrade under f32 machine-phase rounding \
+                     faster than refinement restarts can repair — run \
+                     Method::Pcg at Precision::F64 (optionally over a \
+                     whitened system for the preconditioned rate)"
                 );
             }
             Ok(Box::new(Refined::tuned(method.key(), sys, s, refresh_every)?))
@@ -502,9 +521,14 @@ mod tests {
             .unwrap();
         let rep = mixed.solve(&b).unwrap();
         assert!(rep.converged && rep.solver == "APC+IR", "{}", rep.solver);
-        // phbm has no mixed wrapper
+        // phbm and pcg have no mixed wrapper
         assert!(SolveBuilder::new(&sys)
             .method(Method::Phbm)
+            .precision(Precision::default_mixed())
+            .session()
+            .is_err());
+        assert!(SolveBuilder::new(&sys)
+            .method(Method::Pcg)
             .precision(Precision::default_mixed())
             .session()
             .is_err());
@@ -550,6 +574,19 @@ mod tests {
             assert!(rep.converged);
             assert!(relative_error(&rep.solution, &xstar) < 1e-8, "query {id}");
         }
+        // the tuning-free pcg engine streams too
+        let mut pcg_session = SolveBuilder::new(&sys)
+            .method(Method::Pcg)
+            .run(RunConfig::new(1e-10, 100_000))
+            .batch(2)
+            .streaming(Admission::Refill)
+            .session()
+            .unwrap();
+        let pcg_stream = pcg_session.stream().unwrap();
+        pcg_stream.submit(b.clone()).unwrap();
+        pcg_stream.run_to_drain().unwrap();
+        let rep = pcg_stream.report(0).unwrap();
+        assert!(rep.converged && relative_error(&rep.solution, &xstar) < 1e-8);
         // streaming modes that cannot work are rejected at build
         assert!(SolveBuilder::new(&sys)
             .method(Method::Phbm)

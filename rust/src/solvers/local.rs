@@ -246,6 +246,63 @@ impl GradBatchLocal {
     }
 }
 
+/// CG worker (D-PCG): applies the machine's term of the normal operator,
+/// `A_iᵀ A_i d`, to the master's broadcast search direction. The worker
+/// is stateless beyond its `p`-sized scratch — all CG recurrences (and
+/// the rhs-derived residual) live on the master.
+#[derive(Clone, Debug)]
+pub struct PcgLocal {
+    scratch_p: Vec<f64>,
+}
+
+impl PcgLocal {
+    pub fn new(blk: &MachineBlock) -> Self {
+        PcgLocal { scratch_p: vec![0.0; blk.p()] }
+    }
+
+    /// `out = A_iᵀ (A_i d)`. Zero allocations.
+    pub fn normal_apply(&mut self, blk: &MachineBlock, dir: &[f64], out: &mut [f64]) {
+        blk.a.matvec_into(dir, &mut self.scratch_p);
+        blk.a.tr_matvec_into(&self.scratch_p, out);
+    }
+}
+
+/// Batched CG worker: `OUT = A_iᵀ (A_i D)` over all `k` direction lanes
+/// in one block pass. Stateless beyond the `p×k` scratch, so admission
+/// only widens the scratch (the master re-derives each admitted lane's
+/// residual itself).
+#[derive(Clone, Debug)]
+pub struct PcgBatchLocal {
+    scratch_pk: MultiVec,
+}
+
+impl PcgBatchLocal {
+    pub fn new(blk: &MachineBlock, k: usize) -> Self {
+        PcgBatchLocal { scratch_pk: MultiVec::zeros(blk.p(), k) }
+    }
+
+    /// `OUT = A_iᵀ (A_i D)`. Zero allocations.
+    pub fn normal_apply(&mut self, blk: &MachineBlock, dirs: &MultiVec, out: &mut MultiVec) {
+        blk.a.matmat_into(dirs, &mut self.scratch_pk);
+        blk.a.tr_matmat_into(&self.scratch_pk, out);
+    }
+
+    /// Drop every lane not in `keep` (strictly increasing); in place.
+    pub fn deflate(&mut self, keep: &[usize]) {
+        self.scratch_pk.compact_columns(keep);
+    }
+
+    /// Pre-reserve the scratch for up to `k_max` lanes.
+    pub fn reserve_lanes(&mut self, k_max: usize) {
+        self.scratch_pk.reserve_columns(k_max);
+    }
+
+    /// Widen the scratch for lanes admitted at positions `at`.
+    pub fn inject(&mut self, at: &[usize]) {
+        self.scratch_pk.inject_columns(at);
+    }
+}
+
 /// Block-Cimmino worker: `r_i = A_i⁺ (b_i − A_i x̄)`.
 #[derive(Clone, Debug)]
 pub struct CimminoLocal {
@@ -583,6 +640,37 @@ mod tests {
         let r: Vec<f64> = blk.a.matvec(&x).iter().zip(&blk.b).map(|(a, b)| a - b).collect();
         let expect = blk.a.tr_matvec(&r);
         assert!(max_abs_diff(&out, &expect) < 1e-12);
+    }
+
+    #[test]
+    fn pcg_local_is_the_normal_operator() {
+        let sys = sys();
+        let blk = &sys.blocks[1];
+        let mut g = PcgLocal::new(blk);
+        let d: Vec<f64> = (0..9).map(|i| ((i as f64) * 0.4).sin()).collect();
+        let mut out = vec![0.0; 9];
+        g.normal_apply(blk, &d, &mut out);
+        let expect = blk.a.tr_matvec(&blk.a.matvec(&d));
+        assert!(max_abs_diff(&out, &expect) < 1e-12);
+    }
+
+    #[test]
+    fn pcg_batch_local_matches_single_lane_by_lane() {
+        let sys = sys();
+        let blk = &sys.blocks[0];
+        let k = 3;
+        let d_cols: Vec<Vec<f64>> =
+            (0..k).map(|j| (0..9).map(|i| ((i * (j + 1)) as f64 * 0.3).cos()).collect()).collect();
+        let dirs = MultiVec::from_columns(&d_cols);
+        let mut batch = PcgBatchLocal::new(blk, k);
+        let mut out = MultiVec::zeros(9, k);
+        batch.normal_apply(blk, &dirs, &mut out);
+        let mut single = PcgLocal::new(blk);
+        for j in 0..k {
+            let mut o1 = vec![0.0; 9];
+            single.normal_apply(blk, &d_cols[j], &mut o1);
+            assert!(max_abs_diff(&out.col(j), &o1) < 1e-12, "pcg batch lane {j}");
+        }
     }
 
     #[test]

@@ -10,6 +10,7 @@
 //! | [`nag`] | distributed Nesterov | 2pn | 2pnk, one GEMM pass | `1 − 2/√(3κ(AᵀA)+1)` |
 //! | [`hbm`] | distributed heavy-ball | 2pn | 2pnk, one GEMM pass | `≈ 1 − 2/√κ(AᵀA)` |
 //! | [`admm`] | modified consensus-ADMM (y≡0, §4.4) | 2pn (inversion lemma) | 2pnk, one shifted factor | monotone in ξ, see `rates` |
+//! | [`pcg`] | distributed CG on the normal equations (tuning-free Krylov baseline; preconditioned by any [`crate::precond::Whitener`] via the whitened blocks) | 2pn | 2pnk, per-lane CG recurrences | `≤ (√κ(AᵀA)−1)/(√κ(AᵀA)+1)` |
 //! | [`phbm`] | §6 preconditioned heavy-ball | 2pn | 2pnk over the whitened blocks | same as APC |
 //! | [`crate::gossip`] | masterless gossip APC (neighbor averaging over doubly-stochastic `W`) | 2pn + deg_i·n fold/node | — (single-RHS; no master to batch at) | same as APC at spectral gap 1 (complete graph); degrades with the gap |
 //! | [`stream`] | streaming batch refill (any engine above) | 2pn·k_active | holds k at `max_width` under load | inherits the engine's ρ per lane |
@@ -53,6 +54,7 @@ pub mod dgd;
 pub mod hbm;
 pub mod local;
 pub mod nag;
+pub mod pcg;
 pub mod phbm;
 pub mod refine;
 pub mod stream;

@@ -1,0 +1,319 @@
+//! Distributed preconditioned conjugate gradient (D-PCG) — the Krylov
+//! baseline the paper's first-order methods are measured against.
+//!
+//! CG on the normal equations `AᵀA x = Aᵀb` (CGNR), distributed the same
+//! way as the gradient family: each machine applies its term of the
+//! normal operator, `q_i = A_iᵀ(A_i p)`, in the parallel machine phase,
+//! and the master folds `q = Σ q_i` and runs the scalar CG recurrences.
+//! One round costs the same two block passes (`2pn` dense, `2·nnz_i`
+//! sparse) as DGD/D-HBM — but the master state is *Krylov* state (`r`,
+//! `p`, `rᵀr`), not a momentum pair, which is why the distributed
+//! coordinator exposes no `pcg` descriptor
+//! ([`super::suite::tuned_method`]): the recurrences live on the master
+//! and are not expressible as a stateless per-round worker rule.
+//!
+//! Tuning-free: CG needs no spectral edges — its Chebyshev-optimal
+//! polynomial is implicit — yet its worst-case rate matches optimally
+//! tuned heavy-ball, `ρ = (√κ−1)/(√κ+1)` with `κ = κ(AᵀA)`
+//! ([`super::suite::analytic_rho`]), and finite termination plus
+//! spectrum adaptivity usually put it ahead. Run over a §6-whitened
+//! system ([`crate::partition::PartitionedSystem::preconditioned`] or
+//! the rank-`r` [`crate::precond::WhitenPolicy::Nystrom`] variant) the
+//! normal operator becomes `AᵀW²A`: *preconditioned* CG through the
+//! exact same whitener objects every other engine shares — no
+//! CG-specific preconditioner plumbing.
+//!
+//! Breakdown handling: on a consistent system the curvature `pᵀq` stays
+//! positive until `r = 0`; if it ever fails to be (finite termination
+//! reached, or a non-finite fold), the solver freezes — it holds `x̄`
+//! and further [`Solver::iterate`] calls are no-ops until a
+//! [`Solver::reset`]/[`Solver::rebind`] restarts the recurrences.
+
+use super::batch::{self, PcgBatch};
+use super::local::PcgLocal;
+use super::Solver;
+use crate::linalg::vector::dot;
+use crate::parallel::{self, SliceCells};
+use crate::partition::PartitionedSystem;
+use anyhow::Result;
+
+/// D-PCG solver (per-machine normal-operator workers; machine phase runs
+/// on the [`crate::parallel`] pool, CG recurrences on the master).
+#[derive(Clone, Debug)]
+pub struct Pcg {
+    locals: Vec<PcgLocal>,
+    x: Vec<f64>,
+    /// Normal-equations residual `r = Aᵀb − AᵀA x`.
+    r: Vec<f64>,
+    /// Search direction `p`.
+    pdir: Vec<f64>,
+    /// Normal-operator image `q = AᵀA p`.
+    q: Vec<f64>,
+    partials: Vec<Vec<f64>>,
+    /// `rᵀr` of the current residual.
+    rz: f64,
+    /// Breakdown flag: set when the curvature `pᵀq` stops being positive
+    /// (the Krylov space is exhausted — `x` already solves `AᵀAx = Aᵀb`).
+    frozen: bool,
+}
+
+impl Pcg {
+    /// Parameter-free construction — CG needs no spectral tuning.
+    pub fn new(sys: &PartitionedSystem) -> Self {
+        let mut solver = Pcg {
+            locals: sys.blocks.iter().map(PcgLocal::new).collect(),
+            x: vec![0.0; sys.n],
+            r: vec![0.0; sys.n],
+            pdir: vec![0.0; sys.n],
+            q: vec![0.0; sys.n],
+            partials: vec![vec![0.0; sys.n]; sys.m()],
+            rz: 0.0,
+            frozen: false,
+        };
+        solver.restart(sys);
+        solver
+    }
+
+    /// `x = 0`, `r = p = Aᵀb` (per-block fused transpose-apply, serial —
+    /// a one-time `O(Σ nnz_i)` setup, not a round).
+    fn restart(&mut self, sys: &PartitionedSystem) {
+        self.x.fill(0.0);
+        self.r.fill(0.0);
+        for blk in &sys.blocks {
+            blk.a.tr_matvec_axpy_into(&blk.b, 1.0, &mut self.r);
+        }
+        self.pdir.copy_from_slice(&self.r);
+        self.rz = dot(&self.r, &self.r);
+        self.frozen = false;
+    }
+}
+
+impl Solver for Pcg {
+    fn name(&self) -> &'static str {
+        "D-PCG"
+    }
+
+    fn xbar(&self) -> &[f64] {
+        &self.x
+    }
+
+    fn iterate(&mut self, sys: &PartitionedSystem) {
+        if self.frozen {
+            return;
+        }
+        // machine phase: q_i = A_iᵀ(A_i p) into partials[i]
+        let blocks = &sys.blocks;
+        let pdir = &self.pdir;
+        let locals = SliceCells::new(&mut self.locals);
+        let partials = SliceCells::new(&mut self.partials);
+        parallel::machine_phase(blocks.len(), |i| {
+            // SAFETY: task i is the phase's only accessor of index i
+            let local = unsafe { locals.index_mut(i) };
+            let out = unsafe { partials.index_mut(i) };
+            local.normal_apply(&blocks[i], pdir, out);
+        });
+        // master phase: q = Σ q_i in machine-index order, then the CG step
+        self.q.fill(0.0);
+        for partial in &self.partials {
+            for (q, p) in self.q.iter_mut().zip(partial) {
+                *q += p;
+            }
+        }
+        let pq = dot(&self.pdir, &self.q);
+        if !(pq > 0.0 && pq.is_finite()) {
+            self.frozen = true;
+            return;
+        }
+        let alpha = self.rz / pq;
+        for k in 0..self.x.len() {
+            self.x[k] += alpha * self.pdir[k];
+            self.r[k] -= alpha * self.q[k];
+        }
+        let rz_next = dot(&self.r, &self.r);
+        let beta = rz_next / self.rz;
+        self.rz = rz_next;
+        for k in 0..self.pdir.len() {
+            self.pdir[k] = self.r[k] + beta * self.pdir[k];
+        }
+    }
+
+    fn reset(&mut self, sys: &PartitionedSystem) {
+        // the initial residual is rhs-derived state, so reset and rebind
+        // coincide: both re-derive r = Aᵀb from the blocks' current b
+        self.restart(sys);
+    }
+
+    /// Batched D-PCG: `k` independent CG recurrences over one shared
+    /// normal-operator GEMM pass per round ([`PcgBatch`]).
+    fn solve_batch(
+        &mut self,
+        sys: &PartitionedSystem,
+        rhs: &[Vec<f64>],
+        opts: &batch::BatchOptions,
+    ) -> Result<batch::BatchReport> {
+        let mut engine = PcgBatch::new(sys, rhs)?;
+        batch::run(&mut engine, sys, rhs, opts, self.name())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gen::problems::{Problem, SparseProblem};
+    use crate::linalg::vector::relative_error;
+    use crate::precond::WhitenPolicy;
+    use crate::solvers::batch::{BatchEngine, BatchOptions};
+    use crate::solvers::{Metric, RunConfig, SolverOptions};
+
+    fn opts(tol: f64, truth: &[f64]) -> SolverOptions {
+        SolverOptions {
+            run: RunConfig::new(tol, 500_000),
+            metric: Metric::ErrorVsTruth(truth.to_vec()),
+        }
+    }
+
+    #[test]
+    fn pcg_converges_on_dense_bed() {
+        let p = Problem::with_condition("pcg-dense", 30, 30, 3, 1000.0).build(4);
+        let sys = PartitionedSystem::split_even(&p.a, &p.b, 3).unwrap();
+        let mut solver = Pcg::new(&sys);
+        let rep = solver.solve(&sys, &opts(1e-10, &p.x_star)).unwrap();
+        assert!(rep.converged, "D-PCG err {:.2e}", rep.final_error);
+        // finite termination: CG needs ≤ n normal-operator applies in
+        // exact arithmetic; allow generous slack for rounding
+        assert!(rep.iterations <= 4 * 30, "{} rounds", rep.iterations);
+    }
+
+    #[test]
+    fn pcg_converges_on_csr_bed() {
+        let sp = SparseProblem::random_sparse(48, 48, 0.15, 4).build(29);
+        let sys = PartitionedSystem::split_csr(&sp.a, &sp.b, 4).unwrap();
+        let mut solver = Pcg::new(&sys);
+        let rep = solver.solve(&sys, &opts(1e-10, &sp.x_star)).unwrap();
+        assert!(rep.converged, "D-PCG sparse err {:.2e}", rep.final_error);
+    }
+
+    #[test]
+    fn pcg_converges_on_whitened_beds() {
+        // exact whitening and the rank-r Nyström policy both precondition
+        // the CG normal operator through the shared whitener objects
+        let sp = SparseProblem::banded(40, 40, 3, 4).build(31);
+        let base = PartitionedSystem::split_csr(&sp.a, &sp.b, 4).unwrap();
+        for (label, wsys) in [
+            ("exact", base.preconditioned().unwrap()),
+            ("nystrom", base.preconditioned_rank(6, 17).unwrap().0),
+        ] {
+            let mut solver = Pcg::new(&wsys);
+            let rep = solver.solve(&wsys, &opts(1e-10, &sp.x_star)).unwrap();
+            assert!(rep.converged, "D-PCG {label} err {:.2e}", rep.final_error);
+        }
+    }
+
+    #[test]
+    fn pcg_freezes_instead_of_diverging_after_termination() {
+        let p = Problem::standard_gaussian(16, 16, 2).build(37);
+        let sys = PartitionedSystem::split_even(&p.a, &p.b, 2).unwrap();
+        let mut solver = Pcg::new(&sys);
+        // run far past finite termination; the frozen guard must hold the
+        // converged iterate instead of dividing by vanishing curvature
+        let rep = solver
+            .solve(&sys, &SolverOptions { run: RunConfig::new(0.0, 500), metric: Metric::ErrorVsTruth(p.x_star.clone()) })
+            .unwrap();
+        assert!(rep.final_error < 1e-8, "post-termination err {:.2e}", rep.final_error);
+        assert!(rep.final_error.is_finite());
+    }
+
+    #[test]
+    fn pcg_rebind_solves_a_new_rhs() {
+        let p = Problem::standard_gaussian(24, 24, 3).build(41);
+        let sys = PartitionedSystem::split_even(&p.a, &p.b, 3).unwrap();
+        let mut solver = Pcg::new(&sys);
+        solver.solve(&sys, &opts(1e-10, &p.x_star)).unwrap();
+        // new rhs = A·(2x*) through the same solver
+        let doubled: Vec<f64> = p.x_star.iter().map(|v| 2.0 * v).collect();
+        let b2 = p.a.matvec(&doubled);
+        let mut work = sys.clone();
+        work.set_rhs(&b2).unwrap();
+        solver.rebind(&work).unwrap();
+        let rep = solver.solve(&work, &opts(1e-10, &doubled)).unwrap();
+        assert!(rep.converged, "rebound D-PCG err {:.2e}", rep.final_error);
+    }
+
+    #[test]
+    fn pcg_batch_matches_single_rhs_lane_by_lane() {
+        let p = Problem::standard_gaussian(24, 24, 3).build(43);
+        let sys = PartitionedSystem::split_even(&p.a, &p.b, 3).unwrap();
+        let truths: Vec<Vec<f64>> = (0..3)
+            .map(|j| (0..24).map(|i| ((i * (j + 1)) as f64 * 0.37).sin()).collect())
+            .collect();
+        let rhs: Vec<Vec<f64>> = truths.iter().map(|x| p.a.matvec(x)).collect();
+        let mut solver = Pcg::new(&sys);
+        let bopts = BatchOptions::with_run(RunConfig::new(1e-10, 100_000));
+        let rep = solver.solve_batch(&sys, &rhs, &bopts).unwrap();
+        assert_eq!(rep.solver, "D-PCG");
+        for (j, col) in rep.columns.iter().enumerate() {
+            assert!(col.converged, "lane {j} err {:.2e}", col.final_error);
+            assert!(relative_error(&col.solution, &truths[j]) < 1e-8, "lane {j}");
+        }
+        // lane 0 of the batch reproduces the standalone trajectory length
+        // to within the shared stopping rule
+        let mut single = Pcg::new(&sys);
+        let mut work = sys.clone();
+        work.set_rhs(&rhs[0]).unwrap();
+        single.rebind(&work).unwrap();
+        let srep = single
+            .solve(&work, &SolverOptions { run: bopts.run, metric: Metric::Residual })
+            .unwrap();
+        assert_eq!(rep.columns[0].iterations, srep.iterations);
+    }
+
+    #[test]
+    fn pcg_batch_admits_whitened_lanes() {
+        // streaming-style admission over a §6-transformed system: the
+        // engine whitens each admitted slice through the cached per-block
+        // W_i, so the lane converges to the *original* solution
+        let sp = SparseProblem::banded(36, 36, 3, 3).build(47);
+        let base = PartitionedSystem::split_csr(&sp.a, &sp.b, 3).unwrap();
+        let (pre_sys, whiteners) =
+            base.preconditioned_with(WhitenPolicy::Nystrom { rank: 8, seed: 5 }).unwrap();
+        let mut engine = PcgBatch::with_rhs_blocks_whitened(
+            &pre_sys,
+            pre_sys.blocks.iter().map(|b| crate::linalg::MultiVec::zeros(b.p(), 0)).collect(),
+            &whiteners,
+        )
+        .unwrap();
+        engine.reserve_lanes(1);
+        engine.admit(&[(0, &sp.b)]).unwrap();
+        for _ in 0..100_000 {
+            engine.round();
+            let x = engine.xbar().col(0);
+            if base.relative_residual(&x) < 1e-10 {
+                break;
+            }
+        }
+        let x = engine.xbar().col(0);
+        assert!(
+            relative_error(&x, &sp.x_star) < 1e-7,
+            "admitted whitened lane err {:.2e}",
+            relative_error(&x, &sp.x_star)
+        );
+    }
+
+    #[test]
+    fn pcg_not_slower_than_hbm() {
+        // CG's Chebyshev-optimal polynomial dominates the fixed heavy-ball
+        // momentum on the same normal operator (Table-1 ordering)
+        let p = Problem::with_condition("pcg-vs-hbm", 32, 32, 4, 5000.0).build(8);
+        let sys = PartitionedSystem::split_even(&p.a, &p.b, 4).unwrap();
+        let run = SolverOptions { run: RunConfig::new(1e-8, 200_000), metric: Metric::ErrorVsTruth(p.x_star.clone()) };
+        let rep_pcg = Pcg::new(&sys).solve(&sys, &run).unwrap();
+        let rep_hbm = crate::solvers::hbm::Hbm::auto(&sys).unwrap().solve(&sys, &run).unwrap();
+        assert!(rep_pcg.converged && rep_hbm.converged);
+        assert!(
+            rep_pcg.iterations <= rep_hbm.iterations,
+            "D-PCG {} vs D-HBM {}",
+            rep_pcg.iterations,
+            rep_hbm.iterations
+        );
+    }
+}

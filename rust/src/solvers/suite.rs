@@ -13,9 +13,10 @@ use anyhow::{bail, Result};
 pub const TABLE2_ORDER: [&str; 6] = ["dgd", "nag", "hbm", "admm", "cimmino", "apc"];
 
 /// All methods, including the ones outside Table 2 (consensus baseline,
-/// §6 preconditioned HBM, masterless gossip APC).
-pub const ALL: [&str; 9] =
-    ["dgd", "nag", "hbm", "admm", "cimmino", "apc", "consensus", "phbm", "gossip"];
+/// §6 preconditioned HBM, masterless gossip APC, the distributed-CG
+/// Krylov baseline).
+pub const ALL: [&str; 10] =
+    ["dgd", "nag", "hbm", "admm", "cimmino", "apc", "consensus", "phbm", "gossip", "pcg"];
 
 /// Construct the optimally tuned single-process solver `name`.
 #[deprecated(note = "use apc::prelude::SolveBuilder (\
@@ -83,7 +84,9 @@ pub fn tuned_method(name: &str, sys: &PartitionedSystem, s: &SpectralInfo) -> Re
         }
         other => bail!(
             "unknown coordinator method {:?} (phbm runs as hbm on sys.preconditioned(); \
-             gossip is masterless — drive crate::gossip::GossipApc directly)",
+             gossip is masterless — drive crate::gossip::GossipApc directly; \
+             pcg keeps its CG recurrences on the master — drive \
+             crate::solvers::pcg::Pcg in-process)",
             other
         ),
     })
@@ -110,6 +113,12 @@ pub fn analytic_rho(name: &str, sys: &PartitionedSystem, s: &SpectralInfo) -> Re
             // the Theorem-1 rate applies unchanged (gap 1 in
             // crate::gossip::gossip_params); sparser graphs degrade it
             rates::apc_optimal(s.mu_min, s.mu_max)?.rho
+        }
+        "pcg" => {
+            // CG's Chebyshev worst-case bound on κ(AᵀA) — the same
+            // (√κ−1)/(√κ+1) optimally tuned heavy-ball attains, reached
+            // with no tuning; spectrum adaptivity usually beats it
+            rates::hbm_optimal(s.lambda_min, s.lambda_max).2
         }
         other => bail!("unknown method {:?}", other),
     })
@@ -171,6 +180,7 @@ mod tests {
             tuned_method(name, &sys, &s).unwrap();
         }
         assert!(tuned_method("phbm", &sys, &s).is_err());
+        assert!(tuned_method("pcg", &sys, &s).is_err());
         assert!(tuned_solver("bogus", &sys, &s).is_err());
     }
 
@@ -185,5 +195,7 @@ mod tests {
         assert!(rho("hbm") <= rho("nag"));
         assert!(rho("nag") <= rho("dgd"));
         assert!((rho("phbm") - rho("apc")).abs() < 1e-15);
+        // the CG bound coincides with optimally tuned heavy-ball
+        assert!((rho("pcg") - rho("hbm")).abs() < 1e-15);
     }
 }
